@@ -1,0 +1,30 @@
+//! Design-choice ablation: hybrid cache block granularity (DESIGN.md §4.4).
+//! vLLM's default is 16 tokens/block; coarser blocks amortize per-block
+//! bookkeeping but quantize the KV:ACT ratio and waste partial blocks.
+//! Sweeps block_tokens on the full-scale simulator.
+
+use hybridserve::config::{ModelConfig, SystemConfig};
+use hybridserve::harness::FigureTable;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+
+fn main() {
+    let m = ModelConfig::opt_30b();
+    let wl = Workload { batch: 128, prompt: 1920, gen: 64 };
+    let mut t = FigureTable::new(
+        "ablation_block_size",
+        &["block_tokens", "hybrid_throughput", "act_share", "minibatch"],
+    );
+    for bt in [8usize, 16, 32, 64, 128] {
+        let mut sys = SystemConfig::paper_testbed();
+        sys.block_tokens = bt;
+        let r = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+        t.row(vec![
+            bt.to_string(),
+            format!("{:.2}", r.throughput),
+            format!("{:.3}", r.act_block_share),
+            r.minibatch.to_string(),
+        ]);
+    }
+    t.emit();
+}

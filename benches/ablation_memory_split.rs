@@ -1,0 +1,41 @@
+//! Design-choice ablation: GPU memory partition between resident weights,
+//! staging buffers and the GPU-resident ACT cache (DESIGN.md §4.4). The
+//! paper fixes a FlexGen-style "as many weights as fit" split; this sweep
+//! shows the sensitivity of HybridServe's throughput to that choice.
+
+use hybridserve::config::{ModelConfig, SystemConfig};
+use hybridserve::harness::FigureTable;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+
+fn main() {
+    let m = ModelConfig::opt_30b();
+    let wl = Workload { batch: 128, prompt: 1024, gen: 64 };
+    let mut t = FigureTable::new(
+        "ablation_memory_split",
+        &["weight_frac", "buffer_frac", "hybrid", "flexgen", "speedup"],
+    );
+    for (wf, bf) in [
+        (0.25, 0.25),
+        (0.375, 0.25),
+        (0.5, 0.125),
+        (0.5, 0.25),
+        (0.5, 0.375),
+        (0.625, 0.25),
+        (0.75, 0.125),
+    ] {
+        let mut sys = SystemConfig::paper_testbed();
+        sys.gpu_weight_fraction = wf;
+        sys.gpu_buffer_fraction = bf;
+        let hy = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+        let fg = simulate(&m, &sys, System::FlexGen, wl);
+        t.row(vec![
+            format!("{wf}"),
+            format!("{bf}"),
+            format!("{:.2}", hy.throughput),
+            format!("{:.2}", fg.throughput),
+            format!("{:.2}", hy.throughput / fg.throughput),
+        ]);
+    }
+    t.emit();
+}

@@ -1,0 +1,72 @@
+//! End-to-end engine benchmark on the REAL PJRT path (opt-tiny):
+//! per-entry execution latency profile + serve-loop throughput across
+//! policies. This is the L3 §Perf measurement harness — EXPERIMENTS.md
+//! §Perf records its before/after numbers.
+
+use hybridserve::engine::{Engine, EngineConfig, Request};
+use hybridserve::harness::{fmt_secs, FigureTable};
+use hybridserve::policy::{BlockRatio, PolicyConfig};
+use hybridserve::runtime::default_artifact_dir;
+use hybridserve::workload::WorkloadGen;
+
+fn serve_once(policy: PolicyConfig, ratio: Option<BlockRatio>, reqs: &[Request]) -> (f64, f64, f64) {
+    let cfg = EngineConfig {
+        policy,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(&default_artifact_dir(), cfg).expect("engine");
+    if let Some(r) = ratio {
+        engine.set_ratio(r);
+    }
+    let (_, report) = engine.serve(reqs).expect("serve");
+    (report.throughput, report.wall_secs, report.gpu_utilization)
+}
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // ---- serve-loop throughput across cache configurations ------------
+    let mut wg = WorkloadGen::new(42, 2048);
+    let reqs = wg.uniform(16, 48, 16);
+    let mut t = FigureTable::new(
+        "e2e_engine_throughput",
+        &["config", "virt_throughput_tok_s", "wall_secs", "gpu_util"],
+    );
+    for (name, policy, ratio) in [
+        ("hybrid(full)", PolicyConfig::full(), None),
+        ("act-only", PolicyConfig::act_only(), None),
+        ("kv-only", PolicyConfig::full(), Some(BlockRatio::kv_only())),
+        ("hybrid-1:1-fcfs", PolicyConfig::hybrid_no_policies(), None),
+    ] {
+        let (thr, wall, util) = serve_once(policy, ratio, &reqs);
+        t.row(vec![
+            name.into(),
+            format!("{thr:.1}"),
+            format!("{wall:.2}"),
+            format!("{util:.3}"),
+        ]);
+    }
+    t.emit();
+
+    // ---- per-entry execution profile (hot-path breakdown) --------------
+    let mut engine = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    let reqs = wg.uniform(8, 32, 8);
+    let _ = engine.serve(&reqs).unwrap();
+    let mut p = FigureTable::new(
+        "e2e_entry_profile",
+        &["entry", "calls", "total", "mean"],
+    );
+    for (name, st) in engine.runtime_stats() {
+        p.row(vec![
+            name,
+            st.calls.to_string(),
+            fmt_secs(st.total_secs),
+            fmt_secs(st.total_secs / st.calls.max(1) as f64),
+        ]);
+    }
+    p.emit();
+}

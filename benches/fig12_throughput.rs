@@ -1,0 +1,5 @@
+//! Fig. 12 — end-to-end throughput across the OPT family for DeepSpeed,
+//! FlexGen, HybridServe-Act-Cache and HybridServe-Hybrid-Cache.
+fn main() {
+    hybridserve::figures::fig12().emit();
+}

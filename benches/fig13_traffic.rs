@@ -1,0 +1,5 @@
+//! Fig. 13 — host->GPU cache traffic breakdown (KV vs ACT), FlexGen vs
+//! HybridServe, OPT-30B at batch 32/64.
+fn main() {
+    hybridserve::figures::fig13().emit();
+}

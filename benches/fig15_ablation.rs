@@ -1,0 +1,5 @@
+//! Fig. 15 — ablation at prompt 1920: Act-cache-only -> +hybrid caching
+//! (1:1 split, FCFS) -> +cache management policies (Alg. 1 + packing).
+fn main() {
+    hybridserve::figures::fig15().emit();
+}

@@ -1,0 +1,6 @@
+//! Fig. 3 — FlexGen throughput saturation (a) and KV traffic growth (b)
+//! with batch size (OPT-30B). Regenerates both panels as CSV + tables.
+fn main() {
+    hybridserve::figures::fig3a().emit();
+    hybridserve::figures::fig3b().emit();
+}

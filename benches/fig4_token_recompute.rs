@@ -1,0 +1,5 @@
+//! Fig. 4 — token-generation latency vs token-recomputation ratio,
+//! normalized to no recomputation (OPT-30B ctx 1024, OPT-66B ctx 512).
+fn main() {
+    hybridserve::figures::fig4().emit();
+}

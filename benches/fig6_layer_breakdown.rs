@@ -1,0 +1,5 @@
+//! Fig. 6 — single-layer execution breakdown: token recomputation (Tok)
+//! vs activation recomputation (Act), OPT-30B. Paper: Act cuts ~78%.
+fn main() {
+    hybridserve::figures::fig6().emit();
+}

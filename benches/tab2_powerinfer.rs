@@ -1,0 +1,5 @@
+//! Table 2 — PowerInfer-like LLaMA2-70B generation throughput across
+//! prompt lengths and batch sizes (saturation with growing KV traffic).
+fn main() {
+    hybridserve::figures::tab2().emit();
+}

@@ -1,0 +1,12 @@
+//! Regenerate EVERY table and figure of the paper's evaluation in one run
+//! (tables to stdout, CSVs under target/figures/). EXPERIMENTS.md records
+//! the paper-vs-measured comparison for each.
+//!
+//!   cargo run --release --example paper_figures
+
+fn main() {
+    for fig in hybridserve::figures::all_figures() {
+        fig.emit();
+    }
+    println!("all figures written to target/figures/");
+}

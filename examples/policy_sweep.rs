@@ -1,0 +1,75 @@
+//! Policy validation on the REAL engine: sweep the ACT:KV designation
+//! ratio on the PJRT path and compare the throughput curve against the
+//! ratio Algorithm 1 picked, then print the full-scale simulator's sweep
+//! for OPT-30B. Demonstrates the paper's core claim: the balanced hybrid
+//! ratio sits at (or near) the throughput optimum.
+//!
+//!   make artifacts && cargo run --release --example policy_sweep
+
+use hybridserve::config::{ModelConfig, SystemConfig};
+use hybridserve::engine::{Engine, EngineConfig};
+use hybridserve::harness::FigureTable;
+use hybridserve::policy::{BlockRatio, PolicyConfig};
+use hybridserve::runtime::default_artifact_dir;
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::workload::WorkloadGen;
+
+fn main() -> anyhow::Result<()> {
+    // ---- real engine sweep (opt-tiny on the PJRT CPU path) -------------
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let mut t = FigureTable::new(
+            "policy_sweep_real",
+            &["act_share", "virt_throughput_tok_s", "gpu_util", "pcie_util"],
+        );
+        for (share, ratio) in [
+            (0.0, BlockRatio::kv_only()),
+            (0.25, BlockRatio::new(1, 3)),
+            (0.5, BlockRatio::new(1, 1)),
+            (0.75, BlockRatio::new(3, 1)),
+            (1.0, BlockRatio::act_only()),
+        ] {
+            let mut engine = Engine::new(&dir, EngineConfig::default())?;
+            engine.set_ratio(ratio);
+            let mut wg = WorkloadGen::new(1, engine.model().vocab);
+            let reqs = wg.uniform(8, 48, 12);
+            let (_, report) = engine.serve(&reqs)?;
+            t.row(vec![
+                format!("{share:.2}"),
+                format!("{:.1}", report.throughput),
+                format!("{:.3}", report.gpu_utilization),
+                format!("{:.3}", report.pcie_utilization),
+            ]);
+        }
+        let engine = Engine::new(&dir, EngineConfig::default())?;
+        println!("Algorithm 1 chose ACT:KV = {:?}", engine.ratio());
+        t.emit();
+    } else {
+        eprintln!("skipping real sweep: run `make artifacts`");
+    }
+
+    // ---- full-scale simulated sweep (OPT-30B, paper testbed) -----------
+    let m = ModelConfig::opt_30b();
+    let sys = SystemConfig::paper_testbed();
+    let wl = Workload { batch: 128, prompt: 1920, gen: 64 };
+    let mut t = FigureTable::new(
+        "policy_sweep_sim_opt30b",
+        &["system", "throughput", "gpu_util", "act_share"],
+    );
+    for (name, system) in [
+        ("kv-only(flexgen)", System::FlexGen),
+        ("act-only", System::ActOnly),
+        ("hybrid(alg1)", System::HybridServe(PolicyConfig::full())),
+        ("hybrid(1:1)", System::HybridServe(PolicyConfig::hybrid_no_policies())),
+    ] {
+        let r = simulate(&m, &sys, system, wl);
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", r.throughput),
+            format!("{:.3}", r.gpu_utilization),
+            format!("{:.2}", r.act_block_share),
+        ]);
+    }
+    t.emit();
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Quickstart: build the engine over the AOT artifacts and serve a small
+//! batch of generation requests through the full three-layer stack
+//! (rust coordinator -> PJRT -> HLO lowered from JAX+Pallas).
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use hybridserve::engine::{Engine, EngineConfig, Request};
+use hybridserve::runtime::default_artifact_dir;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let mut engine = Engine::new(&dir, EngineConfig::default())?;
+    println!(
+        "model {} | ACT:KV ratio {:?}",
+        engine.model().name,
+        engine.ratio()
+    );
+
+    // Two requests with different prompts; greedy generation of 12 tokens.
+    let reqs = vec![
+        Request::new(0, vec![11, 42, 7, 100, 5, 9, 310, 77], 12),
+        Request::new(1, vec![3, 14, 15, 92, 65, 35], 12),
+    ];
+    let (completions, report) = engine.serve(&reqs)?;
+    for c in &completions {
+        println!("request {}: prompt {} tokens -> {:?}", c.id, c.prompt_len, c.generated());
+    }
+    println!("{}", report.summary());
+    Ok(())
+}

@@ -1,0 +1,282 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once by `make artifacts` (never at serving time):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces, per shape bucket, `<entry>_<bucket>.hlo.txt` plus:
+  - manifest.json  — model config, weight layout, entry signatures
+  - golden/        — seeded weights + reference outputs the rust tests
+                     compare against (params.bin, kv_gen vectors, a short
+                     greedy generation transcript)
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCH_BUCKETS = [1, 4, 8]
+SEQ_BUCKETS = [16, 32, 64, 128]
+KVGEN_BUCKETS = [16, 64, 128, 256]
+CTX_BUCKETS = [64, 128, 256]
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(args):
+    """[(name, dtype, shape)] JSON-ready signature."""
+    return [[n, d, list(s)] for n, d, s in args]
+
+
+def _weight_args(cfg):
+    """(specs, signature) for the 16 per-layer weight tensors."""
+    shapes = M.layer_weight_shapes(cfg)
+    specs = [_spec(s) for _, s in shapes]
+    sig = [[n, F32, list(s)] for n, s in shapes]
+    return specs, sig
+
+
+def build_entries(cfg):
+    """Yield (name, kind, params, lowered, input_sig, output_sig)."""
+    h, v, c = cfg.hidden, cfg.vocab, cfg.max_context
+    wspecs, wsig = _weight_args(cfg)
+
+    for b in BATCH_BUCKETS:
+        for s in SEQ_BUCKETS + [1]:
+            name = f"embed_b{b}_s{s}"
+            lowered = jax.jit(M.embed).lower(
+                _spec((b, s), jnp.int32), _spec((b,), jnp.int32),
+                _spec((v, h)), _spec((c, h)),
+            )
+            yield (
+                name, "embed", {"batch": b, "seq": s}, lowered,
+                _sig([("ids", I32, (b, s)), ("pos_start", I32, (b,)),
+                      ("emb", F32, (v, h)), ("pos", F32, (c, h))]),
+                _sig([("a0", F32, (b, s, h))]),
+            )
+
+    for b in BATCH_BUCKETS:
+        for s in SEQ_BUCKETS:
+            name = f"layer_prefill_b{b}_s{s}"
+            lowered = jax.jit(M.layer_prefill).lower(_spec((b, s, h)), *wspecs)
+            yield (
+                name, "layer_prefill", {"batch": b, "seq": s}, lowered,
+                _sig([("a", F32, (b, s, h))]) + wsig,
+                _sig([("a_next", F32, (b, s, h)), ("k", F32, (b, s, h)),
+                      ("v", F32, (b, s, h))]),
+            )
+
+    for b in BATCH_BUCKETS:
+        for cb in CTX_BUCKETS:
+            name = f"layer_decode_b{b}_c{cb}"
+            lowered = jax.jit(M.layer_decode).lower(
+                _spec((b, 1, h)), _spec((b, cb, h)), _spec((b, cb, h)),
+                _spec((b,), jnp.int32), *wspecs,
+            )
+            yield (
+                name, "layer_decode", {"batch": b, "ctx": cb}, lowered,
+                _sig([("a", F32, (b, 1, h)), ("k_cache", F32, (b, cb, h)),
+                      ("v_cache", F32, (b, cb, h)), ("kv_len", I32, (b,))]) + wsig,
+                _sig([("a_next", F32, (b, 1, h)), ("k_new", F32, (b, 1, h)),
+                      ("v_new", F32, (b, 1, h))]),
+            )
+
+    kv_w = ["ln1_g", "ln1_b", "wk", "bk", "wv", "bv"]
+    kv_sig = [w for w in wsig if w[0] in kv_w]
+    kv_specs = [_spec(tuple(w[2])) for w in kv_sig]
+    for t in KVGEN_BUCKETS:
+        name = f"kv_gen_t{t}"
+        lowered = jax.jit(M.kv_gen_entry).lower(_spec((t, h)), *kv_specs)
+        yield (
+            name, "kv_gen", {"tokens": t}, lowered,
+            _sig([("a_c", F32, (t, h))]) + kv_sig,
+            _sig([("k", F32, (t, h)), ("v", F32, (t, h))]),
+        )
+
+    for b in BATCH_BUCKETS:
+        name = f"logits_b{b}"
+        lowered = jax.jit(M.logits).lower(
+            _spec((b, h)), _spec((h,)), _spec((h,)), _spec((v, h))
+        )
+        yield (
+            name, "logits", {"batch": b}, lowered,
+            _sig([("a", F32, (b, h)), ("lnf_g", F32, (h,)),
+                  ("lnf_b", F32, (h,)), ("emb", F32, (v, h))]),
+            _sig([("logits", F32, (b, v))]),
+        )
+
+
+# --------------------------------------------------------------------------
+# Golden data for the rust cross-layer tests
+# --------------------------------------------------------------------------
+
+
+def make_params(cfg, seed=0):
+    """Seeded tiny-model weights. Order matters: this is the layout of
+    golden/params.bin that rust/src/runtime/weights.rs reads."""
+    rng = np.random.default_rng(seed)
+
+    def mat(*shape, scale=0.02):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    params = {
+        "emb": mat(cfg.vocab, cfg.hidden, scale=0.05),
+        "pos": mat(cfg.max_context, cfg.hidden, scale=0.05),
+        "lnf_g": np.ones(cfg.hidden, np.float32),
+        "lnf_b": np.zeros(cfg.hidden, np.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.num_layers):
+        layer = []
+        for name, shape_fn in M.LAYER_WEIGHTS:
+            shape = shape_fn(cfg.hidden, cfg.ffn)
+            if name.endswith("_g"):
+                layer.append(np.ones(shape, np.float32))
+            elif name.endswith("_b") or name.startswith("b"):
+                layer.append(np.zeros(shape, np.float32))
+            else:
+                layer.append(mat(*shape))
+        params["layers"].append(tuple(jnp.asarray(x) for x in layer))
+    params["emb"] = jnp.asarray(params["emb"])
+    params["pos"] = jnp.asarray(params["pos"])
+    params["lnf_g"] = jnp.asarray(params["lnf_g"])
+    params["lnf_b"] = jnp.asarray(params["lnf_b"])
+    return params
+
+
+def params_flat(params):
+    """Flatten params in params.bin order."""
+    out = [params["emb"], params["pos"], params["lnf_g"], params["lnf_b"]]
+    for layer in params["layers"]:
+        out.extend(layer)
+    return [np.asarray(x) for x in out]
+
+
+def write_golden(cfg, out_dir):
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    params = make_params(cfg)
+
+    flat = params_flat(params)
+    with open(os.path.join(gdir, "params.bin"), "wb") as f:
+        for arr in flat:
+            f.write(arr.astype("<f4").tobytes())
+
+    rng = np.random.default_rng(7)
+    # kv_gen vector: T=16 checkpoint tile through layer 0's weights.
+    a_c = (rng.standard_normal((16, cfg.hidden)) * 0.5).astype(np.float32)
+    lw = params["layers"][0]
+    names = [n for n, _ in M.LAYER_WEIGHTS]
+    ln1_g, ln1_b = lw[names.index("ln1_g")], lw[names.index("ln1_b")]
+    wk, bk = lw[names.index("wk")], lw[names.index("bk")]
+    wv, bv = lw[names.index("wv")], lw[names.index("bv")]
+    k, v = M.kv_gen_entry(jnp.asarray(a_c), ln1_g, ln1_b, wk, bk, wv, bv)
+    for fname, arr in [("kv_gen_in.bin", a_c), ("kv_gen_k.bin", k), ("kv_gen_v.bin", v)]:
+        with open(os.path.join(gdir, fname), "wb") as f:
+            f.write(np.asarray(arr).astype("<f4").tobytes())
+
+    # Short greedy generation transcript (B=2, prompt 16, 8 new tokens).
+    ids = rng.integers(0, cfg.vocab, size=(2, 16)).astype(np.int32)
+    gen = M.reference_generate(params, jnp.asarray(ids), steps=8)
+    golden = {
+        "param_seed": 0,
+        "kv_gen": {"tokens": 16, "layer": 0},
+        "generate": {
+            "prompt": ids.tolist(),
+            "expected": np.asarray(gen).tolist(),
+            "steps": 8,
+        },
+    }
+    with open(os.path.join(gdir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    return golden
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    cfg = M.TinyConfig()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for name, kind, bparams, lowered, in_sig, out_sig in build_entries(cfg):
+        fname = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "kind": kind,
+            "params": bparams,
+            "file": fname,
+            "inputs": in_sig,
+            "outputs": out_sig,
+        })
+        print(f"  lowered {name} ({len(text)} chars)")
+
+    manifest = {
+        "model": {
+            "name": "opt-tiny",
+            "num_layers": cfg.num_layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "ffn": cfg.ffn,
+            "vocab": cfg.vocab,
+            "max_context": cfg.max_context,
+        },
+        "buckets": {
+            "batch": BATCH_BUCKETS,
+            "seq": SEQ_BUCKETS,
+            "kv_gen_tokens": KVGEN_BUCKETS,
+            "ctx": CTX_BUCKETS,
+        },
+        "layer_weights": [
+            {"name": n, "shape": list(s)} for n, s in M.layer_weight_shapes(cfg)
+        ],
+        "globals": [
+            {"name": "emb", "shape": [cfg.vocab, cfg.hidden]},
+            {"name": "pos", "shape": [cfg.max_context, cfg.hidden]},
+            {"name": "lnf_g", "shape": [cfg.hidden]},
+            {"name": "lnf_b", "shape": [cfg.hidden]},
+        ],
+        "entries": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} entries")
+
+    if not args.skip_golden:
+        write_golden(cfg, args.out_dir)
+        print("wrote golden/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: fused activation-to-KV recomputation (paper Eq. 7).
+
+This is HybridServe's compute hot-spot: turning a tile of activation
+checkpoints ``A_c`` back into key/value tensors while the next layer's
+weights stream over PCIe.  The kernel fuses the layer's pre-LayerNorm with
+the two projections so each ``A_c`` tile is read from HBM into VMEM exactly
+once and produces both the K and the V tile in the same pass:
+
+    K_c, V_c = LN1(A_c) @ [W_K  W_V] + [b_K  b_V]
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks token tiles;
+each grid step holds one (tile × H) activation panel plus the two (H × H)
+weight panels in VMEM and drives the MXU with two f32-accumulate matmuls.
+``interpret=True`` is mandatory on this testbed — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-5
+
+
+def _pick_tile(t, token_tile):
+    """Largest divisor of `t` that is <= token_tile (>= 1 always exists).
+
+    HybridServe blocks are 16 tokens, so token counts are multiples of 16
+    in practice and this returns `token_tile` itself for the common case.
+    """
+    tile = min(token_tile, t)
+    while t % tile != 0:
+        tile -= 1
+    return tile
+
+
+def _kv_gen_kernel(a_ref, g_ref, b_ref, wk_ref, bk_ref, wv_ref, bv_ref, k_ref, v_ref):
+    """One grid step: LN + dual projection for one token tile."""
+    a = a_ref[...]
+    mean = jnp.mean(a, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(a - mean), axis=-1, keepdims=True)
+    h = (a - mean) * jax.lax.rsqrt(var + _EPS) * g_ref[...] + b_ref[...]
+    # Two MXU matmuls over the same normalized tile; f32 accumulate.
+    k_ref[...] = jnp.dot(h, wk_ref[...], preferred_element_type=jnp.float32) + bk_ref[...]
+    v_ref[...] = jnp.dot(h, wv_ref[...], preferred_element_type=jnp.float32) + bv_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile",))
+def kv_gen(a_c, ln_g, ln_b, w_k, b_k, w_v, b_v, *, token_tile=64):
+    """Recompute K/V for ``a_c`` [T, H] tokens; returns (k, v), each [T, H].
+
+    ``T`` must be a multiple of the token tile (the caller pads to block
+    granularity — HybridServe blocks are 16 tokens, so any multiple of 16
+    works with the default tile clamped to T).
+    """
+    t, h = a_c.shape
+    tile = _pick_tile(t, token_tile)
+    grid = (t // tile,)
+
+    tok_spec = pl.BlockSpec((tile, h), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((h,), lambda i: (0,))
+    mat_spec = pl.BlockSpec((h, h), lambda i: (0, 0))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((t, h), jnp.float32),
+        jax.ShapeDtypeStruct((t, h), jnp.float32),
+    ]
+    k, v = pl.pallas_call(
+        _kv_gen_kernel,
+        grid=grid,
+        in_specs=[tok_spec, vec_spec, vec_spec, mat_spec, vec_spec, mat_spec, vec_spec],
+        out_specs=[tok_spec, tok_spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(a_c, ln_g, ln_b, w_k, b_k, w_v, b_v)
+    return k, v

@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything here is the "obviously correct" formulation; pytest compares the
+Pallas kernels (and the full L2 model built from them) against these with
+`assert_allclose`. Nothing in this file is ever lowered into artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def layer_norm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def kv_gen_ref(a_c, ln_g, ln_b, w_k, b_k, w_v, b_v):
+    """Equation 7 of the paper with the pre-LN folded in.
+
+    The activation checkpoint ``A_c`` is the decoder-layer *input*, so
+    recomputing the layer's K/V must first apply the layer's first
+    LayerNorm, then the two projections:
+
+        K_c, V_c = LN1(A_c) @ [W_K  W_V] + [b_K  b_V]
+
+    a_c: [T, H] (tokens flattened across the mini-batch)
+    returns (k [T, H], v [T, H])
+    """
+    h = layer_norm_ref(a_c, ln_g, ln_b)
+    return h @ w_k + b_k, h @ w_v + b_v
+
+
+def decode_attention_ref(q, k_cache, v_cache, k_new, v_new, kv_len, heads):
+    """Masked multi-head decode attention over a padded KV buffer.
+
+    One new token per request attends to `kv_len[b]` valid cached tokens
+    plus itself (the paper's "concat recomputed KV with new KV" step,
+    Fig. 7 right).
+
+    q:       [B, H]      query for the current token
+    k_cache: [B, C, H]   padded cache (garbage beyond kv_len[b])
+    v_cache: [B, C, H]
+    k_new:   [B, H]      current token's key
+    v_new:   [B, H]      current token's value
+    kv_len:  [B] int32   number of valid cached tokens per request
+    returns: [B, H]
+    """
+    b, c, hidden = k_cache.shape
+    d = hidden // heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    qh = q.reshape(b, heads, d)
+    kh = k_cache.reshape(b, c, heads, d).transpose(0, 2, 1, 3)  # [B,h,C,d]
+    vh = v_cache.reshape(b, c, heads, d).transpose(0, 2, 1, 3)
+    knh = k_new.reshape(b, heads, d)
+    vnh = v_new.reshape(b, heads, d)
+
+    # cached scores [B,h,C] + self score [B,h,1]
+    sc = jnp.einsum("bhd,bhcd->bhc", qh, kh) * scale
+    ss = jnp.sum(qh * knh, axis=-1, keepdims=True) * scale
+
+    pos = jnp.arange(c)[None, None, :]
+    valid = pos < kv_len[:, None, None]
+    sc = jnp.where(valid, sc, -jnp.inf)
+
+    scores = jnp.concatenate([sc, ss], axis=-1)  # [B,h,C+1]
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    out = jnp.einsum("bhc,bhcd->bhd", p[..., :c], vh) + p[..., c:] * vnh
+    return out.reshape(b, hidden)
+
+
+def causal_attention_ref(q, k, v, heads):
+    """Causal multi-head self-attention for the prefill phase.
+
+    q, k, v: [B, S, H]; returns [B, S, H].
+    """
+    b, s, hidden = q.shape
+    d = hidden // heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    qh = q.reshape(b, s, heads, d).transpose(0, 2, 1, 3)  # [B,h,S,d]
+    kh = k.reshape(b, s, heads, d).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, s, heads, d).transpose(0, 2, 1, 3)
+
+    scores = jnp.einsum("bhsd,bhtd->bhst", qh, kh) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, hidden)

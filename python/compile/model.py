@@ -1,0 +1,233 @@
+"""L2: OPT-style transformer decoder in JAX, built on the L1 Pallas kernels.
+
+Five AOT entry points, each lowered per shape bucket by `aot.py`:
+
+  embed          token ids -> A^0 (embedding lookup + learned positions)
+  layer_prefill  full-prompt decoder layer: A^i -> (A^{i+1}, K, V)
+  layer_decode   one-token decoder layer over a padded KV buffer
+  kv_gen         activation checkpoint -> (K, V)   [the paper's Eq. 7]
+  logits         final LayerNorm + tied LM head
+
+Weight-passing convention (shared with rust/src/runtime/): every layer
+entry point takes the 16 per-layer weight tensors of LAYER_WEIGHTS as
+trailing positional arguments, in order. Weights are HLO *parameters* —
+the rust coordinator owns "host memory" and decides what is resident,
+streamed or prefetched.
+
+OPT specifics: pre-LayerNorm, ReLU FFN, learned positional embeddings,
+attention scale 1/sqrt(head_dim), LM head tied to the embedding table.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention_batched
+from .kernels.kv_gen import kv_gen
+from .kernels.ref import causal_attention_ref, layer_norm_ref
+
+# Kernel tile sizes for the AOT artifacts (perf pass, EXPERIMENTS.md §Perf):
+# interpret-mode Pallas pays per grid step / loop iteration, so at tiny-C
+# scale we use one context chunk and wide token tiles. On a real TPU these
+# map to VMEM budgets instead — see DESIGN.md §Hardware-Adaptation.
+CTX_TILE = 64
+TOKEN_TILE = 128
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """Mirror of rust `ModelConfig::opt_tiny()` — keep in sync."""
+
+    num_layers: int = 4
+    hidden: int = 256
+    heads: int = 8
+    ffn: int = 1024
+    vocab: int = 2048
+    max_context: int = 256
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+
+#: (name, shape-lambda) for the 16 per-layer weight tensors, in the order
+#: every layer entry point receives them. `h` = hidden, `f` = ffn.
+LAYER_WEIGHTS = [
+    ("ln1_g", lambda h, f: (h,)),
+    ("ln1_b", lambda h, f: (h,)),
+    ("wq", lambda h, f: (h, h)),
+    ("bq", lambda h, f: (h,)),
+    ("wk", lambda h, f: (h, h)),
+    ("bk", lambda h, f: (h,)),
+    ("wv", lambda h, f: (h, h)),
+    ("bv", lambda h, f: (h,)),
+    ("wproj", lambda h, f: (h, h)),
+    ("bproj", lambda h, f: (h,)),
+    ("ln2_g", lambda h, f: (h,)),
+    ("ln2_b", lambda h, f: (h,)),
+    ("wffn1", lambda h, f: (h, f)),
+    ("bffn1", lambda h, f: (f,)),
+    ("wffn2", lambda h, f: (f, h)),
+    ("bffn2", lambda h, f: (h,)),
+]
+
+
+def layer_weight_shapes(cfg):
+    """[(name, shape)] for one decoder layer of `cfg`."""
+    return [(n, fn(cfg.hidden, cfg.ffn)) for n, fn in LAYER_WEIGHTS]
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+
+def embed(ids, pos_start, emb_table, pos_table):
+    """A^0 for a window of tokens.
+
+    ids:       [B, S] int32 token ids
+    pos_start: [B]    int32 absolute position of ids[:, 0]
+    emb_table: [V, H]
+    pos_table: [Cmax, H]
+    returns    [B, S, H]
+    """
+    s = ids.shape[1]
+    positions = pos_start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    return emb_table[ids] + pos_table[positions]
+
+
+def _ffn_block(x, ln2_g, ln2_b, wffn1, bffn1, wffn2, bffn2):
+    h = layer_norm_ref(x, ln2_g, ln2_b)
+    return x + jnp.maximum(h @ wffn1 + bffn1, 0.0) @ wffn2 + bffn2
+
+
+def layer_prefill(a, *w):
+    """Decoder layer over a full prompt window with causal attention.
+
+    a: [B, S, H]; w: the 16 LAYER_WEIGHTS tensors.
+    Returns (a_next [B,S,H], k [B,S,H], v [B,S,H]) — K/V become the KV
+    cache for this layer; `a` itself is what an ACT block checkpoints.
+    """
+    (ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wproj, bproj,
+     ln2_g, ln2_b, wffn1, bffn1, wffn2, bffn2) = w
+    b, s, hidden = a.shape
+
+    h = layer_norm_ref(a, ln1_g, ln1_b)
+    q = h @ wq + bq
+    # K/V via the L1 kv_gen kernel over the flattened token axis: the
+    # prefill projection is the same computation as Eq. 7 recomputation.
+    k_flat, v_flat = kv_gen(
+        a.reshape(b * s, hidden), ln1_g, ln1_b, wk, bk, wv, bv,
+        token_tile=TOKEN_TILE,
+    )
+    k = k_flat.reshape(b, s, hidden)
+    v = v_flat.reshape(b, s, hidden)
+
+    heads = _heads_for(hidden)
+    att = causal_attention_ref(q, k, v, heads)
+    x = a + att @ wproj + bproj
+    a_next = _ffn_block(x, ln2_g, ln2_b, wffn1, bffn1, wffn2, bffn2)
+    return a_next, k, v
+
+
+def layer_decode(a, k_cache, v_cache, kv_len, *w):
+    """Decoder layer for one new token over a padded KV buffer.
+
+    a:        [B, 1, H] current-token activation (this layer's ACT checkpoint)
+    k_cache:  [B, C, H] assembled KV buffer (transferred KV blocks + KV
+              recomputed from ACT blocks, already concatenated by rust)
+    v_cache:  [B, C, H]
+    kv_len:   [B] int32 valid cached tokens per request
+    w:        the 16 LAYER_WEIGHTS tensors
+    Returns (a_next [B,1,H], k_new [B,1,H], v_new [B,1,H]).
+    """
+    (ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wproj, bproj,
+     ln2_g, ln2_b, wffn1, bffn1, wffn2, bffn2) = w
+    b, _, hidden = a.shape
+    x = a[:, 0]
+
+    h = layer_norm_ref(x, ln1_g, ln1_b)
+    q = h @ wq + bq
+    k_new, v_new = kv_gen(x, ln1_g, ln1_b, wk, bk, wv, bv)
+
+    heads = _heads_for(hidden)
+    att = decode_attention_batched(
+        q, k_cache, v_cache, k_new, v_new, kv_len, heads=heads, ctx_tile=CTX_TILE
+    )
+    x = x + att @ wproj + bproj
+    a_next = _ffn_block(x, ln2_g, ln2_b, wffn1, bffn1, wffn2, bffn2)
+    return a_next[:, None], k_new[:, None], v_new[:, None]
+
+
+def kv_gen_entry(a_c, ln1_g, ln1_b, wk, bk, wv, bv):
+    """Standalone Eq. 7 entry point (the KV-Gen box of Fig. 7/8).
+
+    a_c: [T, H] activation checkpoints, tokens flattened across requests.
+    Returns (k [T,H], v [T,H]).
+    """
+    return kv_gen(a_c, ln1_g, ln1_b, wk, bk, wv, bv, token_tile=TOKEN_TILE)
+
+
+def logits(a, lnf_g, lnf_b, emb_table):
+    """Final LayerNorm + tied LM head. a: [B, H] -> [B, V]."""
+    h = layer_norm_ref(a, lnf_g, lnf_b)
+    return h @ emb_table.T
+
+
+def _heads_for(hidden):
+    """Heads for the (single) config we AOT — kept explicit to fail loudly
+    if a new config forgets to thread `heads` through."""
+    cfg = TinyConfig()
+    assert hidden == cfg.hidden, f"unexpected hidden {hidden}"
+    return cfg.heads
+
+
+# --------------------------------------------------------------------------
+# Pure-python reference generation loop (used by tests to validate the
+# decode path against prefill, mirroring what the rust engine does).
+# --------------------------------------------------------------------------
+
+
+def reference_generate(params, ids, steps):
+    """Greedy generation entirely in python; the oracle for integration
+    tests of the rust engine's orchestration.
+
+    params: dict with 'emb', 'pos', 'lnf_g', 'lnf_b', 'layers' (list of
+            16-tuples in LAYER_WEIGHTS order).
+    ids:    [B, S0] int32 prompt.
+    Returns [B, S0 + steps] int32.
+    """
+    cfg = TinyConfig()
+    b, s0 = ids.shape
+    a = embed(ids, jnp.zeros((b,), jnp.int32), params["emb"], params["pos"])
+    k_caches, v_caches, acts = [], [], []
+    for lw in params["layers"]:
+        acts.append(a)
+        a, k, v = layer_prefill(a, *lw)
+        k_caches.append(k)
+        v_caches.append(v)
+
+    out = [ids]
+    cur_len = s0
+    last = jnp.argmax(logits(a[:, -1], params["lnf_g"], params["lnf_b"], params["emb"]), -1)
+    out.append(last[:, None].astype(jnp.int32))
+    c = cfg.max_context
+
+    def pad(x):
+        return jnp.pad(x, ((0, 0), (0, c - x.shape[1]), (0, 0)))
+
+    k_caches = [pad(k) for k in k_caches]
+    v_caches = [pad(v) for v in v_caches]
+
+    for _ in range(steps - 1):
+        tok = out[-1]
+        a = embed(tok, jnp.full((b,), cur_len, jnp.int32), params["emb"], params["pos"])
+        kv_len = jnp.full((b,), cur_len, jnp.int32)
+        for i, lw in enumerate(params["layers"]):
+            a, k_new, v_new = layer_decode(a, k_caches[i], v_caches[i], kv_len, *lw)
+            k_caches[i] = k_caches[i].at[:, cur_len].set(k_new[:, 0])
+            v_caches[i] = v_caches[i].at[:, cur_len].set(v_new[:, 0])
+        cur_len += 1
+        nxt = jnp.argmax(logits(a[:, 0], params["lnf_g"], params["lnf_b"], params["emb"]), -1)
+        out.append(nxt[:, None].astype(jnp.int32))
+    return jnp.concatenate(out, axis=1)

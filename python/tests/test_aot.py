@@ -1,0 +1,112 @@
+"""AOT path sanity: every entry lowers to parseable HLO text, the manifest
+is complete and internally consistent, and golden data matches the model.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+CFG = M.TinyConfig()
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    import jax
+
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_build_entries_cover_all_kinds():
+    kinds = {}
+    for name, kind, params, lowered, in_sig, out_sig in aot.build_entries(CFG):
+        kinds.setdefault(kind, []).append(name)
+        # signatures must be JSON-serializable and non-empty
+        json.dumps([in_sig, out_sig])
+        assert in_sig and out_sig
+    assert set(kinds) == {"embed", "layer_prefill", "layer_decode", "kv_gen", "logits"}
+    assert len(kinds["layer_decode"]) == len(aot.BATCH_BUCKETS) * len(aot.CTX_BUCKETS)
+    assert len(kinds["kv_gen"]) == len(aot.KVGEN_BUCKETS)
+
+
+def test_params_flat_layout_matches_weight_spec():
+    params = aot.make_params(CFG, seed=0)
+    flat = aot.params_flat(params)
+    expect = 4 + CFG.num_layers * len(M.LAYER_WEIGHTS)
+    assert len(flat) == expect
+    assert flat[0].shape == (CFG.vocab, CFG.hidden)  # emb
+    assert flat[1].shape == (CFG.max_context, CFG.hidden)  # pos
+    # first layer's ln1_g is all-ones by construction
+    np.testing.assert_array_equal(flat[4], np.ones(CFG.hidden, np.float32))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+class TestArtifactsOnDisk:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_model_matches_config(self, manifest):
+        m = manifest["model"]
+        assert m["hidden"] == CFG.hidden
+        assert m["num_layers"] == CFG.num_layers
+        assert m["vocab"] == CFG.vocab
+        assert m["max_context"] == CFG.max_context
+
+    def test_every_entry_file_exists_and_is_hlo(self, manifest):
+        for e in manifest["entries"]:
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), e["name"]
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, e["name"]
+
+    def test_weight_signature_ordering(self, manifest):
+        names = [w["name"] for w in manifest["layer_weights"]]
+        assert names == [n for n, _ in M.LAYER_WEIGHTS]
+        # decode entries carry the 16 weights after the 4 data inputs
+        entry = next(e for e in manifest["entries"] if e["kind"] == "layer_decode")
+        assert [i[0] for i in entry["inputs"][4:]] == names
+
+    def test_golden_kv_gen_consistency(self, manifest):
+        gdir = os.path.join(ART, "golden")
+        with open(os.path.join(gdir, "golden.json")) as f:
+            golden = json.load(f)
+        t = golden["kv_gen"]["tokens"]
+        h = CFG.hidden
+        a_c = np.fromfile(os.path.join(gdir, "kv_gen_in.bin"), "<f4").reshape(t, h)
+        k_exp = np.fromfile(os.path.join(gdir, "kv_gen_k.bin"), "<f4").reshape(t, h)
+        params = aot.make_params(CFG, seed=golden["param_seed"])
+        lw = params["layers"][0]
+        names = [n for n, _ in M.LAYER_WEIGHTS]
+        k, _ = M.kv_gen_entry(
+            jnp.asarray(a_c),
+            lw[names.index("ln1_g")], lw[names.index("ln1_b")],
+            lw[names.index("wk")], lw[names.index("bk")],
+            lw[names.index("wv")], lw[names.index("bv")],
+        )
+        np.testing.assert_allclose(np.asarray(k), k_exp, rtol=1e-5, atol=1e-5)
+
+    def test_golden_generate_reproduces(self, manifest):
+        gdir = os.path.join(ART, "golden")
+        with open(os.path.join(gdir, "golden.json")) as f:
+            golden = json.load(f)
+        params = aot.make_params(CFG, seed=golden["param_seed"])
+        ids = jnp.asarray(golden["generate"]["prompt"], jnp.int32)
+        gen = M.reference_generate(params, ids, steps=golden["generate"]["steps"])
+        np.testing.assert_array_equal(
+            np.asarray(gen), np.asarray(golden["generate"]["expected"])
+        )

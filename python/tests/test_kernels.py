@@ -1,0 +1,184 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; every case asserts allclose. This is
+the core correctness signal for the compute hot-spot that the rust engine
+serves from the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention
+from compile.kernels.kv_gen import kv_gen
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def _rng_arrays(seed, *shapes, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.standard_normal(s) * scale, jnp.float32) for s in shapes
+    ]
+
+
+# --------------------------------------------------------------------------
+# kv_gen (paper Eq. 7)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.sampled_from([16, 32, 64, 128, 256]),
+    h=st.sampled_from([64, 128, 256]),
+)
+def test_kv_gen_matches_ref(seed, t, h):
+    a, g, b, wk, bk, wv, bv = _rng_arrays(
+        seed, (t, h), (h,), (h,), (h, h), (h,), (h, h), (h,), scale=0.5
+    )
+    k, v = kv_gen(a, g, b, wk, bk, wv, bv)
+    kr, vr = ref.kv_gen_ref(a, g, b, wk, bk, wv, bv)
+    np.testing.assert_allclose(k, kr, **TOL)
+    np.testing.assert_allclose(v, vr, **TOL)
+
+
+@pytest.mark.parametrize("tile", [16, 32, 64, 128])
+def test_kv_gen_tile_invariance(tile):
+    """Output must not depend on the VMEM token tile."""
+    a, g, b, wk, bk, wv, bv = _rng_arrays(
+        3, (128, 64), (64,), (64,), (64, 64), (64,), (64, 64), (64,)
+    )
+    k0, v0 = kv_gen(a, g, b, wk, bk, wv, bv, token_tile=128)
+    k1, v1 = kv_gen(a, g, b, wk, bk, wv, bv, token_tile=tile)
+    np.testing.assert_allclose(k0, k1, **TOL)
+    np.testing.assert_allclose(v0, v1, **TOL)
+
+
+def test_kv_gen_ragged_tile_falls_back_to_divisor():
+    """T=48 with a 32-token tile request must still be exact (the kernel
+    clamps to the largest divisor, here 24)."""
+    a, g, b, wk, bk, wv, bv = _rng_arrays(
+        0, (48, 64), (64,), (64,), (64, 64), (64,), (64, 64), (64,)
+    )
+    k, v = kv_gen(a, g, b, wk, bk, wv, bv, token_tile=32)
+    kr, vr = ref.kv_gen_ref(a, g, b, wk, bk, wv, bv)
+    np.testing.assert_allclose(k, kr, **TOL)
+    np.testing.assert_allclose(v, vr, **TOL)
+
+
+def test_kv_gen_constant_rows():
+    """LN of a constant row is all-beta; K must equal beta @ Wk + bk."""
+    h = 64
+    a = jnp.ones((16, h), jnp.float32) * 3.0
+    g, b, wk, bk, wv, bv = _rng_arrays(5, (h,), (h,), (h, h), (h,), (h, h), (h,))
+    k, v = kv_gen(a, g, b, wk, bk, wv, bv)
+    # (x - mean)/std == 0 for constant rows -> LN output is exactly beta
+    np.testing.assert_allclose(k, jnp.tile(b @ wk + bk, (16, 1)), **TOL)
+    np.testing.assert_allclose(v, jnp.tile(b @ wv + bv, (16, 1)), **TOL)
+
+
+# --------------------------------------------------------------------------
+# decode attention (hybrid KV buffer of Fig. 7)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 2, 4, 8]),
+    c=st.sampled_from([64, 128, 256]),
+    heads=st.sampled_from([2, 4, 8]),
+)
+def test_decode_attention_matches_ref(seed, b, c, heads):
+    h = heads * 16
+    q, kc, vc, kn, vn = _rng_arrays(
+        seed, (b, h), (b, c, h), (b, c, h), (b, h), (b, h)
+    )
+    rng = np.random.default_rng(seed + 1)
+    kv_len = jnp.asarray(rng.integers(0, c + 1, size=b), jnp.int32)
+    out = decode_attention(q, kc, vc, kn, vn, kv_len, heads=heads)
+    expect = ref.decode_attention_ref(q, kc, vc, kn, vn, kv_len, heads)
+    np.testing.assert_allclose(out, expect, **TOL)
+
+
+def test_decode_attention_zero_context_is_self_attention():
+    """kv_len == 0 -> output is exactly v_new (softmax over one score)."""
+    b, c, heads, h = 2, 64, 4, 64
+    q, kc, vc, kn, vn = _rng_arrays(9, (b, h), (b, c, h), (b, c, h), (b, h), (b, h))
+    kv_len = jnp.zeros((b,), jnp.int32)
+    out = decode_attention(q, kc, vc, kn, vn, kv_len, heads=heads)
+    np.testing.assert_allclose(out, vn, **TOL)
+
+
+def test_decode_attention_ignores_padding_garbage():
+    """Values beyond kv_len must not leak into the output."""
+    b, c, heads, h = 1, 128, 4, 64
+    q, kc, vc, kn, vn = _rng_arrays(11, (b, h), (b, c, h), (b, c, h), (b, h), (b, h))
+    kv_len = jnp.asarray([40], jnp.int32)
+    out1 = decode_attention(q, kc, vc, kn, vn, kv_len, heads=heads)
+    kc2 = kc.at[:, 40:].set(1e9)
+    vc2 = vc.at[:, 40:].set(-1e9)
+    out2 = decode_attention(q, kc2, vc2, kn, vn, kv_len, heads=heads)
+    np.testing.assert_allclose(out1, out2, **TOL)
+
+
+@pytest.mark.parametrize("ctx_tile", [16, 32, 64, 128, 256])
+def test_decode_attention_ctx_tile_invariance(ctx_tile):
+    """Online-softmax chunking must not change the result."""
+    b, c, heads, h = 2, 256, 4, 64
+    q, kc, vc, kn, vn = _rng_arrays(13, (b, h), (b, c, h), (b, c, h), (b, h), (b, h))
+    kv_len = jnp.asarray([100, 256], jnp.int32)
+    base = ref.decode_attention_ref(q, kc, vc, kn, vn, kv_len, heads)
+    out = decode_attention(q, kc, vc, kn, vn, kv_len, heads=heads, ctx_tile=ctx_tile)
+    np.testing.assert_allclose(out, base, **TOL)
+
+
+def test_decode_attention_full_context_matches_causal_last_row():
+    """Decode over a cache built causally == last row of causal prefill."""
+    b, s, heads, h = 2, 64, 4, 64
+    q_all, k_all, v_all = _rng_arrays(17, (b, s, h), (b, s, h), (b, s, h))
+    full = ref.causal_attention_ref(q_all, k_all, v_all, heads)
+    kv_len = jnp.full((b,), s - 1, jnp.int32)
+    out = decode_attention(
+        q_all[:, -1], k_all[:, : s - 1], v_all[:, : s - 1],
+        k_all[:, -1], v_all[:, -1], kv_len, heads=heads, ctx_tile=21,
+    )
+    np.testing.assert_allclose(out, full[:, -1], **TOL)
+
+
+# --------------------------------------------------------------------------
+# batched decode attention (the production kernel in layer_decode)
+# --------------------------------------------------------------------------
+
+from compile.kernels.attention import decode_attention_batched
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 4, 8]),
+    c=st.sampled_from([64, 256]),
+    heads=st.sampled_from([4, 8]),
+)
+def test_decode_attention_batched_matches_ref(seed, b, c, heads):
+    h = heads * 16
+    q, kc, vc, kn, vn = _rng_arrays(
+        seed, (b, h), (b, c, h), (b, c, h), (b, h), (b, h)
+    )
+    rng = np.random.default_rng(seed + 1)
+    kv_len = jnp.asarray(rng.integers(0, c + 1, size=b), jnp.int32)
+    out = decode_attention_batched(q, kc, vc, kn, vn, kv_len, heads=heads)
+    expect = ref.decode_attention_ref(q, kc, vc, kn, vn, kv_len, heads)
+    np.testing.assert_allclose(out, expect, **TOL)
+
+
+def test_batched_equals_grid_variant():
+    b, c, heads, h = 4, 256, 8, 128
+    q, kc, vc, kn, vn = _rng_arrays(21, (b, h), (b, c, h), (b, c, h), (b, h), (b, h))
+    kv_len = jnp.asarray([0, 13, 200, 256], jnp.int32)
+    a = decode_attention(q, kc, vc, kn, vn, kv_len, heads=heads)
+    g = decode_attention_batched(q, kc, vc, kn, vn, kv_len, heads=heads)
+    np.testing.assert_allclose(a, g, **TOL)

@@ -1,0 +1,113 @@
+//! Block primitives: kind, location, physical ids, byte sizing.
+
+use crate::config::ModelConfig;
+
+/// What a cache block stores for its tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockKind {
+    /// Key + value tensors for all layers (conventional KV cache block).
+    Kv,
+    /// Per-layer input activations (activation checkpoint) — the paper's
+    /// ACT block, exactly half the bytes of a KV block.
+    Act,
+}
+
+impl BlockKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BlockKind::Kv => "kv",
+            BlockKind::Act => "act",
+        }
+    }
+}
+
+/// Memory tier a physical block lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Location {
+    Gpu,
+    Host,
+}
+
+impl Location {
+    pub fn name(self) -> &'static str {
+        match self {
+            Location::Gpu => "gpu",
+            Location::Host => "host",
+        }
+    }
+}
+
+/// Opaque physical block number (PBN in the paper's block-table entry).
+/// Ids are unique per (location); the manager guarantees no live aliasing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PhysBlockId(pub u64);
+
+/// Byte sizes of the two block kinds for a given model + block size.
+///
+/// A block covers `block_tokens` tokens across **all** decoder layers
+/// (the policy counts blocks globally, so this is the natural unit: one
+/// logical context block pins its tokens' state for the whole model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockSizes {
+    pub block_tokens: usize,
+    pub kv_bytes: usize,
+    pub act_bytes: usize,
+}
+
+impl BlockSizes {
+    pub fn new(model: &ModelConfig, block_tokens: usize) -> Self {
+        let kv_bytes = model.num_layers * model.kv_bytes_per_layer(block_tokens);
+        let act_bytes = model.num_layers * model.act_bytes_per_layer(block_tokens);
+        debug_assert_eq!(kv_bytes, 2 * act_bytes, "S_ACT must be half of S_KV");
+        Self {
+            block_tokens,
+            kv_bytes,
+            act_bytes,
+        }
+    }
+
+    pub fn bytes(&self, kind: BlockKind) -> usize {
+        match kind {
+            BlockKind::Kv => self.kv_bytes,
+            BlockKind::Act => self.act_bytes,
+        }
+    }
+
+    /// Bytes of one layer's share of a block (the unit actually moved per
+    /// layer step in the pipeline).
+    pub fn per_layer_bytes(&self, kind: BlockKind, model: &ModelConfig) -> usize {
+        self.bytes(kind) / model.num_layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_block_is_half_kv_block() {
+        let m = ModelConfig::opt_30b();
+        let s = BlockSizes::new(&m, 16);
+        assert_eq!(s.kv_bytes, 2 * s.act_bytes);
+        assert_eq!(s.bytes(BlockKind::Kv), s.kv_bytes);
+        assert_eq!(s.bytes(BlockKind::Act), s.act_bytes);
+    }
+
+    #[test]
+    fn per_layer_share() {
+        let m = ModelConfig::opt_tiny();
+        let s = BlockSizes::new(&m, 16);
+        assert_eq!(
+            s.per_layer_bytes(BlockKind::Kv, &m) * m.num_layers,
+            s.kv_bytes
+        );
+    }
+
+    #[test]
+    fn block_size_scales_with_tokens() {
+        let m = ModelConfig::opt_13b();
+        let s16 = BlockSizes::new(&m, 16);
+        let s32 = BlockSizes::new(&m, 32);
+        assert_eq!(2 * s16.kv_bytes, s32.kv_bytes);
+    }
+}

@@ -1,0 +1,358 @@
+//! The hybrid block manager: physical block arenas per tier, per-request
+//! block tables, allocation, migration and byte-exact accounting.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use super::block::{BlockKind, BlockSizes, Location, PhysBlockId};
+use super::table::{BlockTable, LogicalBlock};
+use crate::memsim::{MemError, MemPool};
+
+/// Request identifier (assigned by the batcher).
+pub type RequestId = u64;
+
+#[derive(Debug, Error)]
+pub enum CacheError {
+    #[error(transparent)]
+    Mem(#[from] MemError),
+    #[error("unknown request {0}")]
+    UnknownRequest(RequestId),
+    #[error("request {req}: logical block {idx} out of range")]
+    BadLogicalIndex { req: RequestId, idx: usize },
+    #[error("request {0} already registered")]
+    DuplicateRequest(RequestId),
+}
+
+/// Aggregate occupancy snapshot (drives policy decisions + Fig. 13/15).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub kv_blocks_host: usize,
+    pub kv_blocks_gpu: usize,
+    pub act_blocks_host: usize,
+    pub act_blocks_gpu: usize,
+    pub gpu_bytes: usize,
+    pub host_bytes: usize,
+}
+
+impl CacheStats {
+    pub fn total_blocks(&self) -> usize {
+        self.kv_blocks_host + self.kv_blocks_gpu + self.act_blocks_host + self.act_blocks_gpu
+    }
+}
+
+/// Physical block arenas + per-request tables.
+///
+/// Invariants (protected by property tests):
+///  * a live physical id is referenced by exactly one logical block;
+///  * pool `used` bytes equal the sum of live block sizes per tier;
+///  * freeing a request returns its exact byte footprint.
+#[derive(Debug)]
+pub struct BlockManager {
+    sizes: BlockSizes,
+    gpu: MemPool,
+    host: MemPool,
+    tables: HashMap<RequestId, BlockTable>,
+    next_id: u64,
+    stats: CacheStats,
+}
+
+impl BlockManager {
+    /// `gpu_budget` is the cache slice of device memory (after weights and
+    /// staging buffers); `host_budget` is what Algorithm 1 grants the
+    /// hybrid cache out of `M_Host - S_weight`.
+    pub fn new(sizes: BlockSizes, gpu_budget: usize, host_budget: usize) -> Self {
+        Self {
+            sizes,
+            gpu: MemPool::new("gpu-cache", gpu_budget),
+            host: MemPool::new("host-cache", host_budget),
+            tables: HashMap::new(),
+            next_id: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn sizes(&self) -> BlockSizes {
+        self.sizes
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn gpu_free(&self) -> usize {
+        self.gpu.free()
+    }
+
+    pub fn host_free(&self) -> usize {
+        self.host.free()
+    }
+
+    /// How many more blocks of `kind` fit at `location` right now.
+    pub fn capacity_blocks(&self, kind: BlockKind, location: Location) -> usize {
+        let pool = match location {
+            Location::Gpu => &self.gpu,
+            Location::Host => &self.host,
+        };
+        pool.free() / self.sizes.bytes(kind)
+    }
+
+    /// Register a new (empty) request.
+    pub fn register(&mut self, req: RequestId) -> Result<(), CacheError> {
+        if self.tables.contains_key(&req) {
+            return Err(CacheError::DuplicateRequest(req));
+        }
+        self.tables.insert(req, BlockTable::new());
+        Ok(())
+    }
+
+    pub fn table(&self, req: RequestId) -> Result<&BlockTable, CacheError> {
+        self.tables.get(&req).ok_or(CacheError::UnknownRequest(req))
+    }
+
+    pub fn live_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Append a block of `kind` at `location` to `req`'s table, `filled`
+    /// tokens used. Fails atomically on capacity exhaustion.
+    pub fn append_block(
+        &mut self,
+        req: RequestId,
+        kind: BlockKind,
+        location: Location,
+        filled: usize,
+    ) -> Result<PhysBlockId, CacheError> {
+        assert!(
+            filled <= self.sizes.block_tokens,
+            "filled {} exceeds block size {}",
+            filled,
+            self.sizes.block_tokens
+        );
+        if !self.tables.contains_key(&req) {
+            return Err(CacheError::UnknownRequest(req));
+        }
+        let bytes = self.sizes.bytes(kind);
+        self.pool_mut(location).alloc(bytes)?;
+        let phys = PhysBlockId(self.next_id);
+        self.next_id += 1;
+        self.tables.get_mut(&req).unwrap().push(LogicalBlock {
+            kind,
+            location,
+            phys,
+            filled,
+        });
+        self.bump_stats(kind, location, 1, bytes as isize);
+        Ok(phys)
+    }
+
+    /// Add tokens to the request's last block; returns how many fit (the
+    /// remainder needs a fresh block).
+    pub fn fill_last(&mut self, req: RequestId, tokens: usize) -> Result<usize, CacheError> {
+        let block_tokens = self.sizes.block_tokens;
+        let table = self
+            .tables
+            .get_mut(&req)
+            .ok_or(CacheError::UnknownRequest(req))?;
+        match table.last_mut() {
+            Some(last) => {
+                let space = block_tokens - last.filled;
+                let take = space.min(tokens);
+                last.filled += take;
+                Ok(take)
+            }
+            None => Ok(0),
+        }
+    }
+
+    /// Move logical block `idx` of `req` to `location` (the transfer
+    /// engine does the actual data movement; this updates the mapping and
+    /// the capacity accounting).
+    pub fn migrate(
+        &mut self,
+        req: RequestId,
+        idx: usize,
+        location: Location,
+    ) -> Result<(), CacheError> {
+        let (kind, old_loc) = {
+            let table = self.tables.get(&req).ok_or(CacheError::UnknownRequest(req))?;
+            let b = table
+                .get(idx)
+                .ok_or(CacheError::BadLogicalIndex { req, idx })?;
+            (b.kind, b.location)
+        };
+        if old_loc == location {
+            return Ok(());
+        }
+        let bytes = self.sizes.bytes(kind);
+        self.pool_mut(location).alloc(bytes)?;
+        self.pool_mut(old_loc).release(bytes).expect("accounting");
+        self.tables.get_mut(&req).unwrap().get_mut(idx).unwrap().location = location;
+        self.bump_stats(kind, old_loc, -1, -(bytes as isize));
+        self.bump_stats(kind, location, 1, bytes as isize);
+        Ok(())
+    }
+
+    /// Release every block of `req` and forget it.
+    pub fn free_request(&mut self, req: RequestId) -> Result<(), CacheError> {
+        let mut table = self
+            .tables
+            .remove(&req)
+            .ok_or(CacheError::UnknownRequest(req))?;
+        for b in table.drain() {
+            let bytes = self.sizes.bytes(b.kind);
+            self.pool_mut(b.location).release(bytes).expect("accounting");
+            self.bump_stats(b.kind, b.location, -1, -(bytes as isize));
+        }
+        Ok(())
+    }
+
+    fn pool_mut(&mut self, location: Location) -> &mut MemPool {
+        match location {
+            Location::Gpu => &mut self.gpu,
+            Location::Host => &mut self.host,
+        }
+    }
+
+    fn bump_stats(&mut self, kind: BlockKind, loc: Location, dcount: isize, dbytes: isize) {
+        let c = match (kind, loc) {
+            (BlockKind::Kv, Location::Host) => &mut self.stats.kv_blocks_host,
+            (BlockKind::Kv, Location::Gpu) => &mut self.stats.kv_blocks_gpu,
+            (BlockKind::Act, Location::Host) => &mut self.stats.act_blocks_host,
+            (BlockKind::Act, Location::Gpu) => &mut self.stats.act_blocks_gpu,
+        };
+        *c = (*c as isize + dcount) as usize;
+        let b = match loc {
+            Location::Gpu => &mut self.stats.gpu_bytes,
+            Location::Host => &mut self.stats.host_bytes,
+        };
+        *b = (*b as isize + dbytes) as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn mgr() -> BlockManager {
+        let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+        BlockManager::new(sizes, 1 << 20, 8 << 20)
+    }
+
+    #[test]
+    fn append_and_free_balance() {
+        let mut m = mgr();
+        m.register(1).unwrap();
+        m.append_block(1, BlockKind::Kv, Location::Host, 16).unwrap();
+        m.append_block(1, BlockKind::Act, Location::Gpu, 16).unwrap();
+        let s = m.stats();
+        assert_eq!(s.kv_blocks_host, 1);
+        assert_eq!(s.act_blocks_gpu, 1);
+        assert_eq!(s.gpu_bytes, m.sizes().act_bytes);
+        m.free_request(1).unwrap();
+        assert_eq!(m.stats(), CacheStats::default());
+        assert_eq!(m.gpu_free(), 1 << 20);
+    }
+
+    #[test]
+    fn phys_ids_unique() {
+        let mut m = mgr();
+        m.register(1).unwrap();
+        m.register(2).unwrap();
+        let a = m.append_block(1, BlockKind::Kv, Location::Host, 16).unwrap();
+        let b = m.append_block(2, BlockKind::Kv, Location::Host, 16).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn oom_fails_atomically() {
+        let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+        let gpu_budget = sizes.act_bytes; // exactly one ACT block
+        let mut m = BlockManager::new(sizes, gpu_budget, 1 << 20);
+        m.register(1).unwrap();
+        m.append_block(1, BlockKind::Act, Location::Gpu, 16).unwrap();
+        assert!(m.append_block(1, BlockKind::Act, Location::Gpu, 16).is_err());
+        assert_eq!(m.stats().act_blocks_gpu, 1);
+    }
+
+    #[test]
+    fn migrate_moves_accounting() {
+        let mut m = mgr();
+        m.register(1).unwrap();
+        m.append_block(1, BlockKind::Act, Location::Gpu, 16).unwrap();
+        m.migrate(1, 0, Location::Host).unwrap();
+        let s = m.stats();
+        assert_eq!(s.act_blocks_gpu, 0);
+        assert_eq!(s.act_blocks_host, 1);
+        assert_eq!(s.gpu_bytes, 0);
+        assert_eq!(m.table(1).unwrap().get(0).unwrap().location, Location::Host);
+        // idempotent
+        m.migrate(1, 0, Location::Host).unwrap();
+        assert_eq!(m.stats().act_blocks_host, 1);
+    }
+
+    #[test]
+    fn fill_last_splits_at_block_boundary() {
+        let mut m = mgr();
+        m.register(1).unwrap();
+        m.append_block(1, BlockKind::Kv, Location::Host, 10).unwrap();
+        let took = m.fill_last(1, 20).unwrap();
+        assert_eq!(took, 6); // 16 - 10
+        assert_eq!(m.table(1).unwrap().tokens(), 16);
+    }
+
+    #[test]
+    fn unknown_request_errors() {
+        let mut m = mgr();
+        assert!(matches!(
+            m.append_block(9, BlockKind::Kv, Location::Host, 1),
+            Err(CacheError::UnknownRequest(9))
+        ));
+        assert!(m.free_request(9).is_err());
+        m.register(9).unwrap();
+        assert!(matches!(m.register(9), Err(CacheError::DuplicateRequest(9))));
+    }
+
+    #[test]
+    fn property_bytes_match_block_census() {
+        crate::util::prop::check("cache-accounting", 60, |rng| {
+            let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+            let mut m = BlockManager::new(sizes, 4 << 20, 16 << 20);
+            let nreq = rng.range(1, 6) as u64;
+            for r in 0..nreq {
+                m.register(r).unwrap();
+            }
+            let mut live: Vec<u64> = (0..nreq).collect();
+            for _ in 0..300 {
+                let roll = rng.f64();
+                if roll < 0.55 && !live.is_empty() {
+                    let r = *rng.choose(&live);
+                    let kind = if rng.f64() < 0.5 { BlockKind::Kv } else { BlockKind::Act };
+                    let loc = if rng.f64() < 0.3 { Location::Gpu } else { Location::Host };
+                    let _ = m.append_block(r, kind, loc, rng.range(1, 17));
+                } else if roll < 0.8 && !live.is_empty() {
+                    let r = *rng.choose(&live);
+                    let len = m.table(r).unwrap().len();
+                    if len > 0 {
+                        let idx = rng.range(0, len);
+                        let loc = if rng.f64() < 0.5 { Location::Gpu } else { Location::Host };
+                        let _ = m.migrate(r, idx, loc);
+                    }
+                } else if live.len() > 1 {
+                    let i = rng.range(0, live.len());
+                    let r = live.swap_remove(i);
+                    m.free_request(r).unwrap();
+                }
+                // census must match byte accounting exactly
+                let s = m.stats();
+                let gpu_expect = s.kv_blocks_gpu * sizes.kv_bytes + s.act_blocks_gpu * sizes.act_bytes;
+                let host_expect = s.kv_blocks_host * sizes.kv_bytes + s.act_blocks_host * sizes.act_bytes;
+                assert_eq!(s.gpu_bytes, gpu_expect);
+                assert_eq!(s.host_bytes, host_expect);
+                assert!(s.gpu_bytes <= 4 << 20);
+                assert!(s.host_bytes <= 16 << 20);
+            }
+        });
+    }
+}

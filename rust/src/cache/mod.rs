@@ -1,0 +1,21 @@
+//! Hybrid cache block management (paper §4.1–§4.2).
+//!
+//! HybridServe extends PagedAttention-style block tables with a second
+//! block *kind*: in addition to KV blocks (key+value tensors for
+//! `block_tokens` tokens across all layers), an ACT block stores the
+//! per-layer input activations for the same tokens at **half** the bytes
+//! (`S_ACT = ½ S_KV`). Every request owns a block table mapping its
+//! logical context blocks (in sequence order) to physical blocks tagged
+//! with kind (KV/ACT) and location (GPU/host).
+//!
+//! ACT blocks are preferentially placed in GPU memory (they are smaller
+//! and feed recomputation directly); KV blocks normally live in host
+//! memory and stream over PCIe (§4.2.1).
+
+mod block;
+mod manager;
+mod table;
+
+pub use block::{BlockKind, BlockSizes, Location, PhysBlockId};
+pub use manager::{BlockManager, CacheError, CacheStats};
+pub use table::{BlockTable, LogicalBlock};

@@ -1,0 +1,125 @@
+//! Per-request block tables: the logical→physical mapping of Fig. 7.
+
+use super::block::{BlockKind, Location, PhysBlockId};
+
+/// One block-table entry: type, location and physical block number —
+/// exactly the fields the paper's block table stores (§4.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LogicalBlock {
+    pub kind: BlockKind,
+    pub location: Location,
+    pub phys: PhysBlockId,
+    /// Number of context tokens actually stored (the final block of a
+    /// request may be partially filled).
+    pub filled: usize,
+}
+
+/// A request's block table. Logical blocks are contiguous in context
+/// order; physical blocks can be anywhere.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    blocks: Vec<LogicalBlock>,
+}
+
+impl BlockTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, block: LogicalBlock) {
+        self.blocks.push(block);
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&LogicalBlock> {
+        self.blocks.get(idx)
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> Option<&mut LogicalBlock> {
+        self.blocks.get_mut(idx)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &LogicalBlock> {
+        self.blocks.iter()
+    }
+
+    pub fn last_mut(&mut self) -> Option<&mut LogicalBlock> {
+        self.blocks.last_mut()
+    }
+
+    /// Total context tokens covered (sum of fills).
+    pub fn tokens(&self) -> usize {
+        self.blocks.iter().map(|b| b.filled).sum()
+    }
+
+    /// Count blocks of `kind`.
+    pub fn count_kind(&self, kind: BlockKind) -> usize {
+        self.blocks.iter().filter(|b| b.kind == kind).count()
+    }
+
+    /// Count blocks of `kind` at `location`.
+    pub fn count_at(&self, kind: BlockKind, location: Location) -> usize {
+        self.blocks
+            .iter()
+            .filter(|b| b.kind == kind && b.location == location)
+            .count()
+    }
+
+    /// Tokens held in blocks of `kind`.
+    pub fn tokens_kind(&self, kind: BlockKind) -> usize {
+        self.blocks
+            .iter()
+            .filter(|b| b.kind == kind)
+            .map(|b| b.filled)
+            .sum()
+    }
+
+    /// Drain all blocks (request completion); caller frees them.
+    pub fn drain(&mut self) -> Vec<LogicalBlock> {
+        std::mem::take(&mut self.blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lb(kind: BlockKind, loc: Location, id: u64, filled: usize) -> LogicalBlock {
+        LogicalBlock {
+            kind,
+            location: loc,
+            phys: PhysBlockId(id),
+            filled,
+        }
+    }
+
+    #[test]
+    fn counts_and_tokens() {
+        let mut t = BlockTable::new();
+        t.push(lb(BlockKind::Kv, Location::Host, 0, 16));
+        t.push(lb(BlockKind::Act, Location::Gpu, 1, 16));
+        t.push(lb(BlockKind::Act, Location::Host, 2, 5));
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.tokens(), 37);
+        assert_eq!(t.count_kind(BlockKind::Act), 2);
+        assert_eq!(t.count_at(BlockKind::Act, Location::Gpu), 1);
+        assert_eq!(t.tokens_kind(BlockKind::Kv), 16);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut t = BlockTable::new();
+        t.push(lb(BlockKind::Kv, Location::Host, 3, 16));
+        let drained = t.drain();
+        assert_eq!(drained.len(), 1);
+        assert!(t.is_empty());
+        assert_eq!(t.tokens(), 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Model and system configuration.
+//!
+//! [`ModelConfig`] describes a transformer decoder (the OPT family used in
+//! the paper plus a tiny variant that runs for real through the PJRT
+//! runtime).  [`SystemConfig`] describes the hardware envelope that the
+//! paper's testbed provides (RTX 4090 + PCIe 4.0 x16 + host DDR4) and that
+//! our discrete-event pipeline / analytic simulator reproduce.
+
+mod model;
+mod system;
+
+pub use model::{ModelConfig, Dtype};
+pub use system::{SystemConfig, GpuSpec, InterconnectSpec, HostSpec};

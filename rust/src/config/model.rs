@@ -1,0 +1,289 @@
+//! Transformer decoder model configurations (OPT family).
+
+
+
+/// Element type of weights / cache tensors.
+///
+/// The paper evaluates OPT checkpoints in float16.  The real PJRT-CPU path
+/// in this reproduction computes in f32 (the CPU client has no native f16
+/// GEMM), while the analytic simulator uses the dtype's true byte width so
+/// capacity and traffic numbers match the paper's fp16 setting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F16,
+    F32,
+}
+
+impl Dtype {
+    /// Size of one element in bytes.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F16 => 2,
+            Dtype::F32 => 4,
+        }
+    }
+}
+
+/// Architecture hyper-parameters of a decoder-only transformer.
+///
+/// All OPT models use learned positional embeddings, pre-LayerNorm and a
+/// 4x FFN expansion; we keep those fixed and parameterize the rest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Human-readable name, e.g. `"opt-30b"`.
+    pub name: String,
+    /// Number of decoder layers.
+    pub num_layers: usize,
+    /// Hidden (embedding) dimension.
+    pub hidden: usize,
+    /// Number of attention heads. `hidden % heads == 0`.
+    pub heads: usize,
+    /// FFN inner dimension (4 * hidden for OPT).
+    pub ffn: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Maximum supported context (prompt + generated) in tokens.
+    pub max_context: usize,
+    /// Weight / cache element type.
+    pub dtype: Dtype,
+}
+
+impl ModelConfig {
+    /// Head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Bytes of the weights of a single decoder layer.
+    ///
+    /// QKV (3 h^2) + projection (h^2) + FFN (2 h*ffn) matrices plus biases
+    /// and the two LayerNorm parameter vectors.
+    pub fn layer_weight_bytes(&self) -> usize {
+        let h = self.hidden;
+        let f = self.ffn;
+        let mats = 4 * h * h + 2 * h * f;
+        let biases = 4 * h + f + h; // q,k,v,proj biases + ffn1 + ffn2 biases
+        let norms = 4 * h; // 2x LayerNorm (gamma, beta)
+        (mats + biases + norms) * self.dtype.bytes()
+    }
+
+    /// Bytes of the embedding table (+ tied LM head), positional table and
+    /// final LayerNorm.
+    pub fn embedding_bytes(&self) -> usize {
+        (self.vocab * self.hidden + self.max_context * self.hidden + 2 * self.hidden)
+            * self.dtype.bytes()
+    }
+
+    /// Total weight bytes for the full model.
+    pub fn total_weight_bytes(&self) -> usize {
+        self.num_layers * self.layer_weight_bytes() + self.embedding_bytes()
+    }
+
+    /// Bytes of KV cache for `tokens` tokens in ONE layer (key + value).
+    pub fn kv_bytes_per_layer(&self, tokens: usize) -> usize {
+        2 * tokens * self.hidden * self.dtype.bytes()
+    }
+
+    /// Bytes of an activation checkpoint for `tokens` tokens in ONE layer.
+    ///
+    /// The activation cache stores only the decoder-layer input `A^i`
+    /// (Equation 7 of the paper): exactly half the KV footprint.
+    pub fn act_bytes_per_layer(&self, tokens: usize) -> usize {
+        tokens * self.hidden * self.dtype.bytes()
+    }
+
+    /// FLOPs of one decoder layer forward for `new` tokens attending over a
+    /// total context of `ctx` tokens (per request; multiply by batch).
+    pub fn layer_flops(&self, new: usize, ctx: usize) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let n = new as u64;
+        let c = ctx as u64;
+        // QKV + proj GEMMs: 2*n*h*(3h) + 2*n*h*h
+        let qkv = 2 * n * h * 3 * h + 2 * n * h * h;
+        // attention: QK^T + AV: 2 * n * c * h each
+        let attn = 4 * n * c * h;
+        // FFN: 2*n*h*f * 2
+        let ffn = 4 * n * h * f;
+        qkv + attn + ffn
+    }
+
+    /// FLOPs of recomputing K,V for `tokens` cached tokens from their
+    /// activation checkpoints in one layer (Equation 7: A_c x [W_K W_V]).
+    pub fn kv_gen_flops(&self, tokens: usize) -> u64 {
+        let h = self.hidden as u64;
+        2 * tokens as u64 * h * 2 * h
+    }
+
+    // ---- the OPT family evaluated in the paper -------------------------
+
+    /// OPT-6.7B (fits a 24 GB GPU without offloading; used as the
+    /// offloading-efficiency probe in §5.1).
+    pub fn opt_6_7b() -> Self {
+        Self {
+            name: "opt-6.7b".into(),
+            num_layers: 32,
+            hidden: 4096,
+            heads: 32,
+            ffn: 16384,
+            vocab: 50272,
+            max_context: 2048,
+            dtype: Dtype::F16,
+        }
+    }
+
+    /// OPT-13B.
+    pub fn opt_13b() -> Self {
+        Self {
+            name: "opt-13b".into(),
+            num_layers: 40,
+            hidden: 5120,
+            heads: 40,
+            ffn: 20480,
+            vocab: 50272,
+            max_context: 2048,
+            dtype: Dtype::F16,
+        }
+    }
+
+    /// OPT-30B.
+    pub fn opt_30b() -> Self {
+        Self {
+            name: "opt-30b".into(),
+            num_layers: 48,
+            hidden: 7168,
+            heads: 56,
+            ffn: 28672,
+            vocab: 50272,
+            max_context: 2048,
+            dtype: Dtype::F16,
+        }
+    }
+
+    /// OPT-66B.
+    pub fn opt_66b() -> Self {
+        Self {
+            name: "opt-66b".into(),
+            num_layers: 64,
+            hidden: 9216,
+            heads: 72,
+            ffn: 36864,
+            vocab: 50272,
+            max_context: 2048,
+            dtype: Dtype::F16,
+        }
+    }
+
+    /// LLaMA2-70B-shaped config (Table 2 / PowerInfer comparison).
+    pub fn llama2_70b() -> Self {
+        Self {
+            name: "llama2-70b".into(),
+            num_layers: 80,
+            hidden: 8192,
+            heads: 64,
+            ffn: 28672,
+            vocab: 32000,
+            max_context: 4096,
+            dtype: Dtype::F16,
+        }
+    }
+
+    /// Tiny OPT-shaped model that runs for real through the PJRT CPU
+    /// runtime (the end-to-end examples and integration tests).  Matches
+    /// the shapes baked into `artifacts/manifest.json` by `make artifacts`.
+    pub fn opt_tiny() -> Self {
+        Self {
+            name: "opt-tiny".into(),
+            num_layers: 4,
+            hidden: 256,
+            heads: 8,
+            ffn: 1024,
+            vocab: 2048,
+            max_context: 256,
+            dtype: Dtype::F32,
+        }
+    }
+
+    /// Look up a named config.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "opt-6.7b" => Some(Self::opt_6_7b()),
+            "opt-13b" => Some(Self::opt_13b()),
+            "opt-30b" => Some(Self::opt_30b()),
+            "opt-66b" => Some(Self::opt_66b()),
+            "llama2-70b" => Some(Self::llama2_70b()),
+            "opt-tiny" => Some(Self::opt_tiny()),
+            _ => None,
+        }
+    }
+
+    /// The four OPT sizes evaluated in the paper's §5.
+    pub fn paper_family() -> Vec<Self> {
+        vec![
+            Self::opt_6_7b(),
+            Self::opt_13b(),
+            Self::opt_30b(),
+            Self::opt_66b(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_divides() {
+        for m in ModelConfig::paper_family() {
+            assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn act_is_half_of_kv() {
+        let m = ModelConfig::opt_30b();
+        assert_eq!(m.kv_bytes_per_layer(128), 2 * m.act_bytes_per_layer(128));
+    }
+
+    #[test]
+    fn opt30b_weights_about_60gb() {
+        // 30B params * 2 bytes ~ 60 GB.
+        let gb = ModelConfig::opt_30b().total_weight_bytes() as f64 / 1e9;
+        assert!((55.0..70.0).contains(&gb), "got {gb} GB");
+    }
+
+    #[test]
+    fn opt66b_weights_about_132gb() {
+        let gb = ModelConfig::opt_66b().total_weight_bytes() as f64 / 1e9;
+        assert!((120.0..145.0).contains(&gb), "got {gb} GB");
+    }
+
+    #[test]
+    fn kv_traffic_matches_paper_fig3b() {
+        // Paper §3.1: OPT-30B, 1024-token contexts, batch 16 -> ~21 GB of
+        // KV traffic per generated token (all layers); batch 128 -> 168 GB.
+        let m = ModelConfig::opt_30b();
+        let per_req = m.num_layers * m.kv_bytes_per_layer(1024 + 128);
+        let b16 = 16 * per_req;
+        let b128 = 128 * per_req;
+        let gb16 = b16 as f64 / 1e9;
+        let gb128 = b128 as f64 / 1e9;
+        assert!((18.0..26.0).contains(&gb16), "batch16 {gb16} GB");
+        assert!((150.0..210.0).contains(&gb128), "batch128 {gb128} GB");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in ModelConfig::paper_family() {
+            assert_eq!(ModelConfig::by_name(&m.name).unwrap(), m);
+        }
+        assert!(ModelConfig::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn flops_scale_with_context() {
+        let m = ModelConfig::opt_tiny();
+        assert!(m.layer_flops(1, 512) > m.layer_flops(1, 128));
+        assert_eq!(m.kv_gen_flops(0), 0);
+    }
+}

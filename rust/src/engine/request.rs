@@ -1,0 +1,129 @@
+//! Requests and their per-layer model state.
+
+/// A generation request as submitted to the engine.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new,
+        }
+    }
+}
+
+/// Completed request output + its latency profile on the virtual
+/// timeline (the paper's §2.3 latency metrics).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// Prompt + generated tokens.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Time-To-First-Token: virtual seconds from serve start until this
+    /// request's first generated token was emitted.
+    pub ttft: f64,
+    /// Per-token emission times (virtual seconds), first token included.
+    pub token_times: Vec<f64>,
+}
+
+impl Completion {
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Mean Time-Between-Tokens over the generation (0 for single-token
+    /// completions).
+    pub fn tbt_mean(&self) -> f64 {
+        if self.token_times.len() < 2 {
+            return 0.0;
+        }
+        let span = self.token_times.last().unwrap() - self.token_times[0];
+        span / (self.token_times.len() - 1) as f64
+    }
+
+    /// End-to-end virtual latency (last token emission time).
+    pub fn latency(&self) -> f64 {
+        self.token_times.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Host-side ("host memory") model state of an in-flight request.
+///
+/// `acts[l]` is the input activation of decoder layer `l` for every
+/// cached context token (the raw material of ACT blocks); `k[l]`/`v[l]`
+/// are the per-layer key/value rows (the raw material of KV blocks). All
+/// are row-major `[cached, hidden]`, growing one row per decoded token.
+/// Which ranges are *designated* ACT vs KV (and therefore what actually
+/// moves over PCIe vs recomputes on the GPU) is the block table's call,
+/// not this struct's.
+#[derive(Debug)]
+pub struct ReqState {
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// Context tokens whose per-layer state is cached. Equal to
+    /// `tokens.len() - 1` mid-decode (the newest token's state lands when
+    /// its step completes) and `tokens.len()` right after a step.
+    pub cached: usize,
+    pub acts: Vec<Vec<f32>>,
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub done: bool,
+    /// Virtual-timeline emission time of each generated token.
+    pub token_times: Vec<f64>,
+}
+
+impl ReqState {
+    pub fn new(req: &Request, num_layers: usize) -> Self {
+        Self {
+            tokens: req.prompt.clone(),
+            prompt_len: req.prompt.len(),
+            max_new: req.max_new,
+            cached: 0,
+            acts: vec![Vec::new(); num_layers],
+            k: vec![Vec::new(); num_layers],
+            v: vec![Vec::new(); num_layers],
+            done: false,
+            token_times: Vec::new(),
+        }
+    }
+
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    pub fn completion(&self, id: u64) -> Completion {
+        Completion {
+            id,
+            tokens: self.tokens.clone(),
+            prompt_len: self.prompt_len,
+            ttft: self.token_times.first().copied().unwrap_or(0.0),
+            token_times: self.token_times.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_tracks_generation() {
+        let r = Request::new(1, vec![5, 6, 7], 4);
+        let mut s = ReqState::new(&r, 2);
+        assert_eq!(s.generated(), 0);
+        s.tokens.push(9);
+        assert_eq!(s.generated(), 1);
+        let c = s.completion(1);
+        assert_eq!(c.generated(), &[9]);
+        assert_eq!(c.prompt_len, 3);
+    }
+}

@@ -1,0 +1,312 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§3 motivation + §5 evaluation). Each function returns a
+//! [`FigureTable`]; `benches/figN_*.rs` and `examples/paper_figures.rs`
+//! emit them to stdout + `target/figures/*.csv`.
+//!
+//! Full-scale results come from the analytic simulator ([`crate::sim`]);
+//! Fig. 11 additionally has a real-measurement variant fed by the PJRT
+//! engine's sampler. EXPERIMENTS.md records paper-vs-measured per figure.
+
+use crate::config::{ModelConfig, SystemConfig};
+use crate::harness::FigureTable;
+use crate::pcie::TrafficClass;
+use crate::policy::{CostModel, PolicyConfig, SAMPLE_POINTS};
+use crate::sim::{layer_breakdown, simulate, token_recompute_latency_curve, System, Workload};
+
+fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Fig. 3a — FlexGen OPT-30B generation throughput vs batch size for
+/// several prompt lengths (saturation at large batch).
+pub fn fig3a() -> FigureTable {
+    let m = ModelConfig::opt_30b();
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "fig3a_flexgen_throughput_vs_batch",
+        &["batch", "prompt128", "prompt256", "prompt512"],
+    );
+    for batch in [16, 32, 64, 128, 256, 512, 1024] {
+        let row: Vec<String> = [128usize, 256, 512]
+            .iter()
+            .map(|&p| {
+                let r = simulate(&m, &sys, System::FlexGen, Workload { batch, prompt: p, gen: 128 });
+                f2(r.gen_throughput)
+            })
+            .collect();
+        t.row(vec![batch.to_string(), row[0].clone(), row[1].clone(), row[2].clone()]);
+    }
+    t
+}
+
+/// Fig. 3b — KV cache traffic per generated token vs batch (OPT-30B,
+/// 1024-token prompts). Paper: ~21 GB at B=16, ~168 GB at B=128.
+pub fn fig3b() -> FigureTable {
+    let m = ModelConfig::opt_30b();
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "fig3b_kv_traffic_vs_batch",
+        &["batch", "kv_gb_per_token"],
+    );
+    for batch in [16, 32, 64, 128] {
+        let wl = Workload { batch, prompt: 1024, gen: 128 };
+        let r = simulate(&m, &sys, System::FlexGen, wl);
+        let per_token = r.traffic.bytes(TrafficClass::KvLoad) as f64 / 1e9 / wl.gen as f64;
+        t.row(vec![batch.to_string(), f2(per_token)]);
+    }
+    t
+}
+
+/// Table 2 — PowerInfer-like LLaMA2-70B throughput over (prompt, batch).
+pub fn tab2() -> FigureTable {
+    let m = ModelConfig::llama2_70b();
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "tab2_powerinfer_llama70b",
+        &["prompt", "B1", "B8", "B16", "B64", "B256", "B1024"],
+    );
+    for prompt in [128usize, 256, 512] {
+        let mut row = vec![prompt.to_string()];
+        for batch in [1usize, 8, 16, 64, 256, 1024] {
+            let r = simulate(&m, &sys, System::PowerInfer, Workload { batch, prompt, gen: 128 });
+            row.push(f2(r.gen_throughput));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 4 — normalized token-generation latency vs token-recomputation
+/// ratio for OPT-30B (ctx 1024) and OPT-66B (ctx 512), B=64.
+pub fn fig4() -> FigureTable {
+    let sys = SystemConfig::paper_testbed();
+    let ratios = [0.0, 0.125, 0.25, 0.375, 0.5];
+    let c30 = token_recompute_latency_curve(&ModelConfig::opt_30b(), &sys, 64, 1024, &ratios);
+    let c66 = token_recompute_latency_curve(&ModelConfig::opt_66b(), &sys, 64, 512, &ratios);
+    let mut t = FigureTable::new(
+        "fig4_token_recompute_latency",
+        &["ratio", "opt30b_norm_latency", "opt66b_norm_latency"],
+    );
+    for (i, r) in ratios.iter().enumerate() {
+        t.row(vec![f3(*r), f3(c30[i]), f3(c66[i])]);
+    }
+    t
+}
+
+/// Fig. 6 — single-layer decode latency breakdown, token recomputation
+/// (Tok) vs activation recomputation (Act), OPT-30B.
+pub fn fig6() -> FigureTable {
+    let m = ModelConfig::opt_30b();
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "fig6_layer_breakdown",
+        &["batch", "ctx", "tok_recompute_ms", "act_recompute_ms", "forward_ms", "act_saving"],
+    );
+    for batch in [32usize, 64, 128] {
+        for ctx in [512usize, 1024] {
+            let ((tok_r, fwd), (act_r, _)) = layer_breakdown(&m, &sys, batch, ctx);
+            let saving = 1.0 - (act_r + fwd) / (tok_r + fwd);
+            t.row(vec![
+                batch.to_string(),
+                ctx.to_string(),
+                f3(tok_r * 1e3),
+                f3(act_r * 1e3),
+                f3(fwd * 1e3),
+                f3(saving),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 11 — sampling points of T_kv_gen / T_load_kv + the linear fit
+/// (analytic variant at OPT-30B scale; the real PJRT variant lives in
+/// benches/fig11_regression.rs).
+pub fn fig11() -> FigureTable {
+    let m = ModelConfig::opt_30b();
+    let sys = SystemConfig::paper_testbed();
+    let cm = CostModel::analytic(&m, &sys);
+    let mut t = FigureTable::new(
+        "fig11_cost_regression",
+        &["blocks", "tokens", "t_kv_gen_us", "t_load_kv_us"],
+    );
+    for &n in &SAMPLE_POINTS {
+        t.row(vec![
+            n.to_string(),
+            (n * sys.block_tokens).to_string(),
+            f2(cm.kv_gen.eval(n as f64) * 1e6),
+            f2(cm.load_kv.eval(n as f64) * 1e6),
+        ]);
+    }
+    t.row(vec![
+        "R^2".into(),
+        "-".into(),
+        f3(cm.kv_gen.r_squared),
+        f3(cm.load_kv.r_squared),
+    ]);
+    t
+}
+
+/// Fig. 12 — end-to-end throughput of all four systems across the OPT
+/// family and prompt lengths (B=128, 128 new tokens).
+pub fn fig12() -> FigureTable {
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "fig12_throughput",
+        &["model", "prompt", "deepspeed", "flexgen", "act_cache", "hybrid", "hybrid_vs_flexgen"],
+    );
+    for m in ModelConfig::paper_family() {
+        for prompt in [128usize, 640, 1152, 1920] {
+            let wl = Workload { batch: 128, prompt, gen: 128 };
+            let ds = simulate(&m, &sys, System::DeepSpeedInference, wl);
+            let fg = simulate(&m, &sys, System::FlexGen, wl);
+            let ac = simulate(&m, &sys, System::ActOnly, wl);
+            let hy = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+            t.row(vec![
+                m.name.clone(),
+                prompt.to_string(),
+                f2(ds.throughput),
+                f2(fg.throughput),
+                f2(ac.throughput),
+                f2(hy.throughput),
+                f2(hy.throughput / fg.throughput),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 13 — PCIe cache-traffic breakdown (KV + ACT), FlexGen vs
+/// HybridServe, OPT-30B, batch 32 and 64.
+pub fn fig13() -> FigureTable {
+    let m = ModelConfig::opt_30b();
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "fig13_traffic_breakdown",
+        &["batch", "prompt", "flexgen_kv_gb", "hybrid_kv_gb", "hybrid_act_gb", "reduction"],
+    );
+    for batch in [32usize, 64] {
+        for prompt in [256usize, 512, 1024] {
+            let wl = Workload { batch, prompt, gen: 128 };
+            let fg = simulate(&m, &sys, System::FlexGen, wl);
+            let hy = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+            let fg_kv = fg.traffic.bytes(TrafficClass::KvLoad) as f64 / 1e9;
+            let hy_kv = hy.traffic.bytes(TrafficClass::KvLoad) as f64 / 1e9;
+            let hy_act = hy.traffic.bytes(TrafficClass::ActLoad) as f64 / 1e9;
+            t.row(vec![
+                batch.to_string(),
+                prompt.to_string(),
+                f2(fg_kv),
+                f2(hy_kv),
+                f2(hy_act),
+                f2(fg_kv / (hy_kv + hy_act).max(1e-9)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 14 — generation-phase GPU temporal utilization vs batch size,
+/// FlexGen vs HybridServe, OPT-30B.
+pub fn fig14() -> FigureTable {
+    let m = ModelConfig::opt_30b();
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "fig14_gpu_utilization",
+        &["batch", "prompt", "flexgen_util", "hybrid_util", "ratio"],
+    );
+    for batch in [32usize, 64, 128] {
+        for prompt in [512usize, 1024] {
+            let wl = Workload { batch, prompt, gen: 64 };
+            let fg = simulate(&m, &sys, System::FlexGen, wl);
+            let hy = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+            t.row(vec![
+                batch.to_string(),
+                prompt.to_string(),
+                f3(fg.gpu_utilization),
+                f3(hy.gpu_utilization),
+                f2(hy.gpu_utilization / fg.gpu_utilization.max(1e-9)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 15 — ablation: Act-cache-only → +hybrid caching (1:1 split, FCFS)
+/// → +cache policies (Algorithm 1 + packing), prompt 1920.
+pub fn fig15() -> FigureTable {
+    let sys = SystemConfig::paper_testbed();
+    let mut t = FigureTable::new(
+        "fig15_ablation",
+        &["model", "act_only", "hybrid_1to1", "hybrid_policies", "act_share_chosen"],
+    );
+    for m in ModelConfig::paper_family() {
+        let wl = Workload { batch: 128, prompt: 1920, gen: 128 };
+        let act = simulate(&m, &sys, System::ActOnly, wl);
+        let even = simulate(&m, &sys, System::HybridServe(PolicyConfig::hybrid_no_policies()), wl);
+        let full = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+        t.row(vec![
+            m.name.clone(),
+            f2(act.throughput),
+            f2(even.throughput),
+            f2(full.throughput),
+            f3(full.act_block_share),
+        ]);
+    }
+    t
+}
+
+/// All figures in paper order (what `examples/paper_figures.rs` emits).
+pub fn all_figures() -> Vec<FigureTable> {
+    vec![
+        fig3a(),
+        fig3b(),
+        tab2(),
+        fig4(),
+        fig6(),
+        fig11(),
+        fig12(),
+        fig13(),
+        fig14(),
+        fig15(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_figure_generates_rows() {
+        for fig in all_figures() {
+            assert!(!fig.rows.is_empty(), "{} empty", fig.name);
+            assert!(!fig.columns.is_empty());
+        }
+    }
+
+    #[test]
+    fn fig12_hybrid_always_beats_flexgen() {
+        let t = fig12();
+        let fg_col = t.columns.iter().position(|c| c == "flexgen").unwrap();
+        let hy_col = t.columns.iter().position(|c| c == "hybrid").unwrap();
+        for row in &t.rows {
+            let fg: f64 = row[fg_col].parse().unwrap();
+            let hy: f64 = row[hy_col].parse().unwrap();
+            assert!(hy > fg, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig15_policies_never_hurt() {
+        let t = fig15();
+        for row in &t.rows {
+            let act: f64 = row[1].parse().unwrap();
+            let full: f64 = row[3].parse().unwrap();
+            assert!(full >= act * 0.95, "{row:?}");
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Benchmark harness (the offline vendor set has no criterion).
+//!
+//! Provides wall-clock measurement with warmup + repetitions, summary
+//! statistics, and table/CSV emission under `target/figures/` — each
+//! `benches/figN_*.rs` regenerates one of the paper's tables or figures
+//! through this.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::util::stats::{mean, percentile, std_dev};
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples_secs)
+    }
+
+    pub fn std(&self) -> f64 {
+        std_dev(&self.samples_secs)
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples_secs, 50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_secs
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `reps` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        samples_secs: samples,
+    }
+}
+
+/// A table being accumulated for one figure: header + rows.
+#[derive(Debug, Clone)]
+pub struct FigureTable {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl FigureTable {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table (what the bench prints).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.name));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `target/figures/<name>.csv`; returns the path.
+    pub fn write_csv(&self) -> std::io::Result<PathBuf> {
+        let dir = figures_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Print and persist (the standard bench epilogue).
+    pub fn emit(&self) {
+        print!("{}", self.render());
+        match self.write_csv() {
+            Ok(p) => println!("-> wrote {}\n", p.display()),
+            Err(e) => println!("-> csv write failed: {e}\n"),
+        }
+    }
+}
+
+/// `target/figures` under the crate root.
+pub fn figures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("figures")
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_collects_samples() {
+        let m = time("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.samples_secs.len(), 5);
+        assert!(m.mean() >= 0.0);
+        assert!(m.min() <= m.p50());
+    }
+
+    #[test]
+    fn table_renders_and_writes() {
+        let mut t = FigureTable::new("test_table", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("test_table"));
+        assert!(s.contains('1'));
+        let path = t.write_csv().unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert_eq!(content, "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = FigureTable::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-5), "25.0us");
+    }
+}

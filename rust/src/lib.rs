@@ -1,0 +1,36 @@
+//! HybridServe — efficient LLM inference with activation checkpointing and
+//! KV-Activation hybrid caching (reproduction of Lee et al., ICCD 2025).
+//!
+//! Three-layer architecture:
+//! - L3 (this crate): rust coordinator — request router, hybrid block
+//!   manager, cache allocation policy, dynamic mini-batch formation and the
+//!   double-buffered layer pipeline.
+//! - L2: JAX model graph (python/compile/model.py), AOT-lowered to HLO text.
+//! - L1: Pallas kernels (python/compile/kernels/), lowered inside L2.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` via the PJRT CPU client and serves from there.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`config`] — model (OPT family) + system (testbed) configuration
+//! - [`util`] — offline-build substrates: JSON, PRNG, stats, prop-testing
+//! - [`memsim`] — GPU/host capacity accounting
+//! - [`pcie`] — interconnect model, traffic classes, two-lane timeline
+//! - [`cache`] — hybrid KV/ACT block manager (PagedAttention-style)
+
+pub mod cache;
+pub mod config;
+pub mod engine;
+pub mod figures;
+pub mod harness;
+pub mod memsim;
+pub mod metrics;
+pub mod pcie;
+pub mod policy;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use config::{ModelConfig, SystemConfig};

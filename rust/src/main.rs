@@ -1,0 +1,281 @@
+//! HybridServe CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; the offline vendor set has no clap):
+//!   serve     — start the TCP serving front-end over the AOT artifacts
+//!   run       — serve a synthetic batch once and print the metrics report
+//!   simulate  — full-scale analytic simulation of one (system, workload)
+//!   sample    — print the fitted cost model (Fig. 11's regression)
+//!   info      — show manifest / artifact summary
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use hybridserve::config::{ModelConfig, SystemConfig};
+use hybridserve::engine::{Engine, EngineConfig};
+use hybridserve::policy::PolicyConfig;
+use hybridserve::runtime::{default_artifact_dir, Manifest};
+use hybridserve::server::Server;
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::workload::WorkloadGen;
+
+fn main() {
+    env_logger_init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_logger_init() {
+    // minimal logger: RUST_LOG=info enables info+ to stderr
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    fn max_level() -> log::Level {
+        match std::env::var("RUST_LOG").as_deref() {
+            Ok("debug") => log::Level::Debug,
+            Ok("trace") => log::Level::Trace,
+            Ok("warn") => log::Level::Warn,
+            Ok("error") => log::Level::Error,
+            _ => log::Level::Info,
+        }
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(log::LevelFilter::Trace);
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = &argv[i];
+            if !k.starts_with("--") {
+                bail!("unexpected argument {k:?} (flags are --key value)");
+            }
+            let v = argv.get(i + 1).with_context(|| format!("missing value for {k}"))?;
+            flags.insert(k[2..].to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifact_dir)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    let args = Args::parse(rest)?;
+
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "run" => cmd_run(&args),
+        "simulate" => cmd_simulate(&args),
+        "sample" => cmd_sample(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `hybridserve help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "hybridserve — KV-Activation hybrid caching LLM inference (ICCD'25 reproduction)
+
+USAGE: hybridserve <subcommand> [--key value ...]
+
+  serve     --addr 127.0.0.1:7071 [--artifacts DIR]
+  run       [--batch 8] [--prompt 24] [--gen 8] [--artifacts DIR] [--policy full|act|hybrid-1to1]
+  simulate  [--model opt-30b] [--system hybrid|flexgen|deepspeed|act] [--batch 128] [--prompt 512] [--gen 128]
+  sample    [--artifacts DIR]     print the fitted T_kv_gen / T_load_kv regression
+  info      [--artifacts DIR]     manifest summary"
+    );
+}
+
+fn policy_from(args: &Args) -> Result<PolicyConfig> {
+    Ok(match args.get("policy").unwrap_or("full") {
+        "full" => PolicyConfig::full(),
+        "act" => PolicyConfig::act_only(),
+        "hybrid-1to1" => PolicyConfig::hybrid_no_policies(),
+        other => bail!("unknown policy {other:?}"),
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7071").to_string();
+    let cfg = EngineConfig {
+        policy: policy_from(args)?,
+        ..EngineConfig::default()
+    };
+    let server = Server::spawn(&addr, artifact_dir(args), cfg)?;
+    println!("hybridserve listening on {}", server.addr);
+    println!("protocol: one JSON per line: {{\"id\":1,\"prompt\":[1,2,3],\"max_new\":8}}");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let batch = args.usize("batch", 8)?;
+    let prompt = args.usize("prompt", 24)?;
+    let gen = args.usize("gen", 8)?;
+    let cfg = EngineConfig {
+        policy: policy_from(args)?,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(&artifact_dir(args), cfg)?;
+    let mut wg = WorkloadGen::new(0, engine.model().vocab);
+    let reqs = wg.uniform(batch, prompt, gen);
+    let (comps, report) = engine.serve(&reqs)?;
+    println!("{}", report.summary());
+    let lat = hybridserve::metrics::latency_summary(&comps);
+    println!(
+        "latency (virtual): TTFT p50 {:.3}s p99 {:.3}s | TBT mean {:.1}ms | e2e p50 {:.3}s",
+        lat.ttft_p50,
+        lat.ttft_p99,
+        lat.tbt_mean * 1e3,
+        lat.latency_p50
+    );
+    println!("ratio ACT:KV = {:?}", engine.ratio());
+    println!(
+        "first completion: {:?} -> {:?}",
+        &comps[0].tokens[..prompt.min(8)],
+        comps[0].generated()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model_name = args.get("model").unwrap_or("opt-30b");
+    let model = ModelConfig::by_name(model_name)
+        .with_context(|| format!("unknown model {model_name:?}"))?;
+    let sys = SystemConfig::paper_testbed();
+    let system = match args.get("system").unwrap_or("hybrid") {
+        "hybrid" => System::HybridServe(PolicyConfig::full()),
+        "flexgen" => System::FlexGen,
+        "deepspeed" => System::DeepSpeedInference,
+        "act" => System::ActOnly,
+        other => bail!("unknown system {other:?}"),
+    };
+    let wl = Workload {
+        batch: args.usize("batch", 128)?,
+        prompt: args.usize("prompt", 512)?,
+        gen: args.usize("gen", 128)?,
+    };
+    let r = simulate(&model, &sys, system, wl);
+    println!(
+        "{model_name} {system:?} B={} P={} G={}",
+        wl.batch, wl.prompt, wl.gen
+    );
+    println!(
+        "  throughput      {:.2} tok/s (generation-only {:.2})",
+        r.throughput, r.gen_throughput
+    );
+    println!("  makespan        {:.2}s (prefill {:.2}s)", r.makespan, r.prefill_secs);
+    println!(
+        "  utilization     GPU {:.1}%  PCIe {:.1}%",
+        r.gpu_utilization * 100.0,
+        r.pcie_utilization * 100.0
+    );
+    println!(
+        "  h2d traffic     weights {:.1} GB, KV {:.1} GB, ACT {:.1} GB",
+        r.traffic.bytes(hybridserve::pcie::TrafficClass::WeightLoad) as f64 / 1e9,
+        r.traffic.bytes(hybridserve::pcie::TrafficClass::KvLoad) as f64 / 1e9,
+        r.traffic.bytes(hybridserve::pcie::TrafficClass::ActLoad) as f64 / 1e9,
+    );
+    println!("  ACT block share {:.2}, mini-batch {}", r.act_block_share, r.minibatch);
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let cfg = EngineConfig::default();
+    let engine = Engine::new(&artifact_dir(args), cfg)?;
+    let cm = engine.cost_model();
+    println!("fitted cost model (per hybrid cache block, one layer share):");
+    println!(
+        "  T_kv_gen (n)  = {:.3}us * n + {:.3}us  R² = {:.4}",
+        cm.kv_gen.slope * 1e6,
+        cm.kv_gen.intercept * 1e6,
+        cm.kv_gen.r_squared
+    );
+    println!(
+        "  T_load_kv(n)  = {:.3}us * n + {:.3}us  R² = {:.4}",
+        cm.load_kv.slope * 1e6,
+        cm.load_kv.intercept * 1e6,
+        cm.load_kv.r_squared
+    );
+    println!(
+        "  T_load_act(n) = {:.3}us * n + {:.3}us  R² = {:.4}",
+        cm.load_act.slope * 1e6,
+        cm.load_act.intercept * 1e6,
+        cm.load_act.r_squared
+    );
+    println!("  T_load_w = {:.3}us", cm.load_w * 1e6);
+    println!("chosen ACT:KV ratio: {:?}", engine.ratio());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = Manifest::load(&artifact_dir(args))?;
+    println!(
+        "model: {} ({} layers, hidden {}, vocab {})",
+        m.model.name, m.model.num_layers, m.model.hidden, m.model.vocab
+    );
+    println!(
+        "buckets: batch {:?}, seq {:?}, kv_gen {:?}",
+        m.batch_buckets, m.seq_buckets, m.kv_gen_buckets
+    );
+    println!("{} entries:", m.entries.len());
+    for e in &m.entries {
+        println!(
+            "  {:24} {:14} inputs={} outputs={}",
+            e.name,
+            e.kind,
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Memory capacity accounting for the two tiers the paper's policy
+//! reasons about: GPU device memory and host DRAM.
+//!
+//! This is deliberately *accounting*, not allocation: the real tensor
+//! bytes live either in PJRT buffers (tiny real runs) or nowhere (analytic
+//! simulation); what the policy needs is exact capacity arithmetic with
+//! failure on oversubscription — the same arithmetic Algorithm 1 does over
+//! `M_Host - S_weight`.
+
+use thiserror::Error;
+
+/// Out-of-memory style failures surfaced to the allocator/policy.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MemError {
+    #[error("{pool}: out of memory (requested {requested} B, free {free} B)")]
+    OutOfMemory {
+        pool: &'static str,
+        requested: usize,
+        free: usize,
+    },
+    #[error("{pool}: freeing {requested} B but only {used} B in use")]
+    Underflow {
+        pool: &'static str,
+        requested: usize,
+        used: usize,
+    },
+}
+
+/// A named, fixed-capacity memory pool with byte-exact accounting.
+#[derive(Debug, Clone)]
+pub struct MemPool {
+    name: &'static str,
+    capacity: usize,
+    used: usize,
+    /// High-water mark, for reporting.
+    peak: usize,
+}
+
+impl MemPool {
+    pub fn new(name: &'static str, capacity: usize) -> Self {
+        Self {
+            name,
+            capacity,
+            used: 0,
+            peak: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Reserve `bytes`; fails without mutating on oversubscription.
+    pub fn alloc(&mut self, bytes: usize) -> Result<(), MemError> {
+        if bytes > self.free() {
+            return Err(MemError::OutOfMemory {
+                pool: self.name,
+                requested: bytes,
+                free: self.free(),
+            });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release `bytes`.
+    pub fn release(&mut self, bytes: usize) -> Result<(), MemError> {
+        if bytes > self.used {
+            return Err(MemError::Underflow {
+                pool: self.name,
+                requested: bytes,
+                used: self.used,
+            });
+        }
+        self.used -= bytes;
+        Ok(())
+    }
+
+    /// Can `bytes` be allocated right now?
+    pub fn fits(&self, bytes: usize) -> bool {
+        bytes <= self.free()
+    }
+}
+
+/// The host + GPU pair every component sees.
+#[derive(Debug, Clone)]
+pub struct MemorySystem {
+    pub gpu: MemPool,
+    pub host: MemPool,
+}
+
+impl MemorySystem {
+    /// Build from a [`crate::config::SystemConfig`]: the GPU pool covers
+    /// only the cache region (weights + staging buffers are budgeted
+    /// separately by the engine), the host pool covers DRAM minus nothing
+    /// (Algorithm 1 itself subtracts `S_weight`).
+    pub fn from_config(sys: &crate::config::SystemConfig) -> Self {
+        Self {
+            gpu: MemPool::new("gpu-cache", sys.gpu_cache_budget()),
+            host: MemPool::new("host", sys.host.memory_bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut p = MemPool::new("t", 100);
+        p.alloc(60).unwrap();
+        assert_eq!(p.used(), 60);
+        assert_eq!(p.free(), 40);
+        p.release(60).unwrap();
+        assert_eq!(p.used(), 0);
+        assert_eq!(p.peak(), 60);
+    }
+
+    #[test]
+    fn oom_does_not_mutate() {
+        let mut p = MemPool::new("t", 100);
+        p.alloc(90).unwrap();
+        let err = p.alloc(20).unwrap_err();
+        assert!(matches!(err, MemError::OutOfMemory { free: 10, .. }));
+        assert_eq!(p.used(), 90);
+    }
+
+    #[test]
+    fn underflow_detected() {
+        let mut p = MemPool::new("t", 100);
+        p.alloc(10).unwrap();
+        assert!(p.release(20).is_err());
+    }
+
+    #[test]
+    fn fits_matches_alloc() {
+        let mut p = MemPool::new("t", 64);
+        assert!(p.fits(64));
+        assert!(!p.fits(65));
+        p.alloc(64).unwrap();
+        assert!(!p.fits(1));
+        assert!(p.fits(0));
+    }
+
+    #[test]
+    fn property_accounting_never_exceeds_capacity() {
+        crate::util::prop::check("mem-accounting", 100, |rng| {
+            let cap = rng.range(1, 1 << 20);
+            let mut p = MemPool::new("prop", cap);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..200 {
+                if rng.f64() < 0.6 {
+                    let sz = rng.range(0, cap / 2 + 1);
+                    if p.alloc(sz).is_ok() {
+                        live.push(sz);
+                    }
+                } else if let Some(sz) = live.pop() {
+                    p.release(sz).unwrap();
+                }
+                assert!(p.used() <= p.capacity());
+                assert_eq!(p.used(), live.iter().sum::<usize>());
+            }
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! Serving metrics: throughput, utilization, traffic — the quantities the
+//! paper's evaluation section reports (§5.1 "Evaluation metrics").
+
+use crate::engine::Completion;
+use crate::pcie::{Lane, Timeline, TrafficCounter};
+use crate::util::stats::percentile;
+
+/// Outcome of a serve run, read off the discrete-event timeline and the
+/// interconnect's traffic counters.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests completed.
+    pub requests: usize,
+    /// Prompt tokens prefilled.
+    pub prompt_tokens: usize,
+    /// Tokens generated.
+    pub generated_tokens: usize,
+    /// End-to-end pipeline time (virtual seconds; prefill + generation).
+    pub makespan_secs: f64,
+    /// Wall-clock seconds the run actually took on this box (real PJRT
+    /// compute; diagnostics only — the paper metric is over makespan).
+    pub wall_secs: f64,
+    /// Token generation throughput = (prompt + generated) / makespan,
+    /// matching §5.2 ("total number of tokens divided by the end-to-end
+    /// latency").
+    pub throughput: f64,
+    /// Temporal GPU utilization on the virtual timeline (Nsight-style).
+    pub gpu_utilization: f64,
+    /// PCIe lane utilization.
+    pub pcie_utilization: f64,
+    /// Host↔GPU traffic by class.
+    pub traffic: TrafficCounter,
+    /// One-time artifact compilation seconds (excluded from makespan).
+    pub compile_secs: f64,
+}
+
+impl ServeReport {
+    pub fn from_parts(
+        requests: usize,
+        prompt_tokens: usize,
+        generated_tokens: usize,
+        timeline: &Timeline,
+        traffic: TrafficCounter,
+        wall_secs: f64,
+        compile_secs: f64,
+    ) -> Self {
+        let makespan = timeline.makespan();
+        let total = prompt_tokens + generated_tokens;
+        Self {
+            requests,
+            prompt_tokens,
+            generated_tokens,
+            makespan_secs: makespan,
+            wall_secs,
+            throughput: if makespan > 0.0 {
+                total as f64 / makespan
+            } else {
+                0.0
+            },
+            gpu_utilization: timeline.utilization(Lane::Gpu),
+            pcie_utilization: timeline.utilization(Lane::PCIe),
+            traffic,
+            compile_secs,
+        }
+    }
+
+    /// Generation-only throughput (tokens/s over the makespan).
+    pub fn gen_throughput(&self) -> f64 {
+        if self.makespan_secs > 0.0 {
+            self.generated_tokens as f64 / self.makespan_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line summary for logs/examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs | {}+{} tokens | makespan {:.3}s | {:.1} tok/s | GPU {:.1}% PCIe {:.1}% | h2d {:.1} MB",
+            self.requests,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.makespan_secs,
+            self.throughput,
+            self.gpu_utilization * 100.0,
+            self.pcie_utilization * 100.0,
+            self.traffic.h2d_total() as f64 / 1e6,
+        )
+    }
+}
+
+/// Per-request latency aggregates over a set of completions — the
+/// paper's §2.3 latency metrics (Time-To-First-Token, Time-Between-
+/// Tokens), measured on the virtual pipeline timeline.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tbt_mean: f64,
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+}
+
+/// Aggregate TTFT / TBT / end-to-end latency percentiles.
+pub fn latency_summary(completions: &[Completion]) -> LatencySummary {
+    if completions.is_empty() {
+        return LatencySummary::default();
+    }
+    let ttfts: Vec<f64> = completions.iter().map(|c| c.ttft).collect();
+    let lats: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
+    let tbts: Vec<f64> = completions
+        .iter()
+        .map(|c| c.tbt_mean())
+        .filter(|&t| t > 0.0)
+        .collect();
+    LatencySummary {
+        ttft_p50: percentile(&ttfts, 50.0),
+        ttft_p99: percentile(&ttfts, 99.0),
+        tbt_mean: if tbts.is_empty() {
+            0.0
+        } else {
+            tbts.iter().sum::<f64>() / tbts.len() as f64
+        },
+        latency_p50: percentile(&lats, 50.0),
+        latency_p99: percentile(&lats, 99.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcie::TrafficClass;
+
+    #[test]
+    fn report_computes_throughput() {
+        let mut tl = Timeline::new();
+        tl.schedule(Lane::Gpu, 0.0, 2.0);
+        tl.schedule(Lane::PCIe, 0.0, 1.0);
+        let mut traffic = TrafficCounter::default();
+        traffic.add(TrafficClass::KvLoad, 1000);
+        let r = ServeReport::from_parts(4, 64, 36, &tl, traffic, 5.0, 1.0);
+        assert!((r.throughput - 50.0).abs() < 1e-9);
+        assert!((r.gen_throughput() - 18.0).abs() < 1e-9);
+        assert!((r.gpu_utilization - 1.0).abs() < 1e-9);
+        assert!((r.pcie_utilization - 0.5).abs() < 1e-9);
+        assert!(r.summary().contains("4 reqs"));
+    }
+
+    #[test]
+    fn latency_summary_aggregates() {
+        let mk = |ttft: f64, times: Vec<f64>| Completion {
+            id: 0,
+            tokens: vec![1; 1 + times.len()],
+            prompt_len: 1,
+            ttft,
+            token_times: times,
+        };
+        let comps = vec![
+            mk(1.0, vec![1.0, 2.0, 3.0]),
+            mk(2.0, vec![2.0, 4.0, 6.0]),
+        ];
+        let s = latency_summary(&comps);
+        assert!((s.ttft_p50 - 1.5).abs() < 1e-9);
+        assert!((s.tbt_mean - 1.5).abs() < 1e-9); // (1.0 + 2.0)/2
+        assert!((s.latency_p50 - 4.5).abs() < 1e-9);
+        assert_eq!(latency_summary(&[]).ttft_p99, 0.0);
+    }
+}

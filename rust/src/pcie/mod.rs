@@ -1,0 +1,95 @@
+//! Host↔GPU interconnect model and the two-resource discrete-event
+//! timeline that both the real engine and the analytic simulator account
+//! their pipelines on.
+//!
+//! The paper's system alternates two hardware pipelines (Fig. 8): the
+//! "PCIe" lane (weight prefetch, KV block loads, checkpoint stores) and
+//! the "GPU" lane (KV-Gen recomputation + the forward pass). Throughput is
+//! set by whichever lane is longer per layer; the policy's entire job is
+//! making them equal. [`Timeline`] captures exactly that: operations are
+//! scheduled on a lane no earlier than their data dependencies, lanes
+//! never run two operations at once, and utilization is busy-time over
+//! makespan — the same "temporal utilization" definition the paper
+//! measures with Nsight (§5.1).
+
+mod timeline;
+mod traffic;
+
+pub use timeline::{Lane, Span, Timeline};
+pub use traffic::{TrafficClass, TrafficCounter};
+
+use crate::config::InterconnectSpec;
+
+/// Transfer direction over the interconnect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    HostToDevice,
+    DeviceToHost,
+}
+
+/// The modeled interconnect: spec + cumulative traffic accounting.
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    spec: InterconnectSpec,
+    traffic: TrafficCounter,
+}
+
+impl Interconnect {
+    pub fn new(spec: InterconnectSpec) -> Self {
+        Self {
+            spec,
+            traffic: TrafficCounter::default(),
+        }
+    }
+
+    pub fn spec(&self) -> &InterconnectSpec {
+        &self.spec
+    }
+
+    /// Model the time for a transfer and account its bytes.
+    pub fn transfer_time(&mut self, dir: Dir, class: TrafficClass, bytes: usize) -> f64 {
+        self.traffic.add(class, bytes);
+        match dir {
+            Dir::HostToDevice => self.spec.h2d_time(bytes),
+            Dir::DeviceToHost => self.spec.d2h_time(bytes),
+        }
+    }
+
+    /// Pure query (no accounting): time for `bytes` in `dir`.
+    pub fn peek_time(&self, dir: Dir, bytes: usize) -> f64 {
+        match dir {
+            Dir::HostToDevice => self.spec.h2d_time(bytes),
+            Dir::DeviceToHost => self.spec.d2h_time(bytes),
+        }
+    }
+
+    pub fn traffic(&self) -> &TrafficCounter {
+        &self.traffic
+    }
+
+    pub fn reset_traffic(&mut self) {
+        self.traffic = TrafficCounter::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_accounts_traffic() {
+        let mut ic = Interconnect::new(InterconnectSpec::pcie4_x16());
+        let t = ic.transfer_time(Dir::HostToDevice, TrafficClass::KvLoad, 25_000_000_000 / 1000);
+        // 25 MB at 25 GB/s = 1 ms + latency
+        assert!((t - (0.001 + ic.spec().latency_s)).abs() < 1e-9);
+        assert_eq!(ic.traffic().bytes(TrafficClass::KvLoad), 25_000_000);
+        assert_eq!(ic.traffic().bytes(TrafficClass::WeightLoad), 0);
+    }
+
+    #[test]
+    fn peek_does_not_account() {
+        let mut ic = Interconnect::new(InterconnectSpec::pcie4_x16());
+        let _ = ic.peek_time(Dir::HostToDevice, 1 << 20);
+        assert_eq!(ic.traffic().total(), 0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Two-lane discrete-event timeline (PCIe ∥ GPU), the accounting core of
+//! the Fig. 8 pipeline.
+
+/// A pipeline lane. The paper's timeline diagrams have exactly these two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    PCIe,
+    Gpu,
+}
+
+impl Lane {
+    fn idx(self) -> usize {
+        match self {
+            Lane::PCIe => 0,
+            Lane::Gpu => 1,
+        }
+    }
+}
+
+/// A scheduled interval on a lane, in seconds of virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    /// A zero-length span at t (for no-op dependencies).
+    pub fn at(t: f64) -> Span {
+        Span { start: t, end: t }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Discrete-event schedule over the two lanes.
+///
+/// Each lane executes operations serially in scheduling order; an
+/// operation starts at `max(lane_free, ready_at)` where `ready_at`
+/// expresses its data dependencies (ends of earlier spans). Utilization
+/// and makespan fall straight out of the bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    lane_free: [f64; 2],
+    busy: [f64; 2],
+    makespan: f64,
+    ops: [usize; 2],
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self {
+            lane_free: [0.0; 2],
+            busy: [0.0; 2],
+            makespan: 0.0,
+            ops: [0; 2],
+        }
+    }
+
+    /// Schedule an operation of `duration` seconds on `lane`, not earlier
+    /// than `ready_at`. Returns the realized span.
+    pub fn schedule(&mut self, lane: Lane, ready_at: f64, duration: f64) -> Span {
+        assert!(duration >= 0.0, "negative duration");
+        assert!(ready_at >= 0.0, "negative ready time");
+        let i = lane.idx();
+        let start = self.lane_free[i].max(ready_at);
+        let end = start + duration;
+        self.lane_free[i] = end;
+        self.busy[i] += duration;
+        self.makespan = self.makespan.max(end);
+        self.ops[i] += 1;
+        Span { start, end }
+    }
+
+    /// Earliest time `lane` can start a new operation.
+    pub fn lane_free(&self, lane: Lane) -> f64 {
+        self.lane_free[lane.idx()]
+    }
+
+    /// Total busy seconds accumulated on `lane`.
+    pub fn busy(&self, lane: Lane) -> f64 {
+        self.busy[lane.idx()]
+    }
+
+    /// End of the last scheduled operation across both lanes.
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    /// Temporal utilization of `lane`: busy time / makespan (0 if empty).
+    /// Matches the paper's Nsight "percentage of cycles with the unit
+    /// active" definition.
+    pub fn utilization(&self, lane: Lane) -> f64 {
+        if self.makespan == 0.0 {
+            0.0
+        } else {
+            self.busy(lane) / self.makespan
+        }
+    }
+
+    /// Number of operations scheduled on `lane`.
+    pub fn op_count(&self, lane: Lane) -> usize {
+        self.ops[lane.idx()]
+    }
+
+    /// Idle (bubble) seconds on `lane` up to the makespan.
+    pub fn idle(&self, lane: Lane) -> f64 {
+        self.makespan - self.busy(lane)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_on_one_lane() {
+        let mut t = Timeline::new();
+        let a = t.schedule(Lane::PCIe, 0.0, 1.0);
+        let b = t.schedule(Lane::PCIe, 0.0, 2.0);
+        assert_eq!(a, Span { start: 0.0, end: 1.0 });
+        assert_eq!(b, Span { start: 1.0, end: 3.0 });
+        assert_eq!(t.makespan(), 3.0);
+        assert_eq!(t.utilization(Lane::PCIe), 1.0);
+        assert_eq!(t.utilization(Lane::Gpu), 0.0);
+    }
+
+    #[test]
+    fn lanes_overlap() {
+        let mut t = Timeline::new();
+        let load = t.schedule(Lane::PCIe, 0.0, 2.0);
+        // compute depends on the load, runs on the other lane
+        let comp = t.schedule(Lane::Gpu, load.end, 1.5);
+        assert_eq!(comp.start, 2.0);
+        assert_eq!(t.makespan(), 3.5);
+        // second load overlaps the compute
+        let load2 = t.schedule(Lane::PCIe, 0.0, 3.0);
+        assert_eq!(load2.start, 2.0);
+        assert_eq!(t.makespan(), 5.0);
+    }
+
+    #[test]
+    fn dependency_delays_start() {
+        let mut t = Timeline::new();
+        let s = t.schedule(Lane::Gpu, 4.0, 1.0);
+        assert_eq!(s.start, 4.0);
+        assert_eq!(t.idle(Lane::Gpu), 4.0);
+        assert!((t.utilization(Lane::Gpu) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_busy_never_exceeds_makespan() {
+        crate::util::prop::check("timeline-busy", 200, |rng| {
+            let mut t = Timeline::new();
+            let mut last_end = 0.0f64;
+            for _ in 0..50 {
+                let lane = if rng.f64() < 0.5 { Lane::PCIe } else { Lane::Gpu };
+                let ready = if rng.f64() < 0.3 { last_end } else { 0.0 };
+                let dur = rng.f64() * 2.0;
+                let span = t.schedule(lane, ready, dur);
+                assert!(span.start >= ready);
+                assert!(span.end >= span.start);
+                last_end = span.end;
+            }
+            assert!(t.busy(Lane::PCIe) <= t.makespan() + 1e-9);
+            assert!(t.busy(Lane::Gpu) <= t.makespan() + 1e-9);
+            assert!(t.utilization(Lane::PCIe) <= 1.0 + 1e-9);
+        });
+    }
+}

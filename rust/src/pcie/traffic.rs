@@ -1,0 +1,125 @@
+//! Byte-exact traffic accounting by payload class — the raw data behind
+//! the paper's Fig. 13 (PCIe transfer volume breakdown for KV vs ACT).
+
+/// What a transfer carries. Classes mirror the paper's breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    /// Decoder-layer weights streamed host→GPU.
+    WeightLoad,
+    /// KV cache blocks host→GPU.
+    KvLoad,
+    /// Activation checkpoint blocks host→GPU (half the bytes of KV).
+    ActLoad,
+    /// Newly generated KV written back GPU→host.
+    KvStore,
+    /// New activation checkpoints written back GPU→host.
+    ActStore,
+}
+
+impl TrafficClass {
+    pub const ALL: [TrafficClass; 5] = [
+        TrafficClass::WeightLoad,
+        TrafficClass::KvLoad,
+        TrafficClass::ActLoad,
+        TrafficClass::KvStore,
+        TrafficClass::ActStore,
+    ];
+
+    fn idx(self) -> usize {
+        match self {
+            TrafficClass::WeightLoad => 0,
+            TrafficClass::KvLoad => 1,
+            TrafficClass::ActLoad => 2,
+            TrafficClass::KvStore => 3,
+            TrafficClass::ActStore => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficClass::WeightLoad => "weight_load",
+            TrafficClass::KvLoad => "kv_load",
+            TrafficClass::ActLoad => "act_load",
+            TrafficClass::KvStore => "kv_store",
+            TrafficClass::ActStore => "act_store",
+        }
+    }
+}
+
+/// Cumulative bytes per class.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficCounter {
+    bytes: [u64; 5],
+}
+
+impl TrafficCounter {
+    pub fn add(&mut self, class: TrafficClass, bytes: usize) {
+        self.bytes[class.idx()] += bytes as u64;
+    }
+
+    pub fn bytes(&self, class: TrafficClass) -> u64 {
+        self.bytes[class.idx()]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Host→GPU subtotal (what Fig. 13 plots).
+    pub fn h2d_total(&self) -> u64 {
+        self.bytes(TrafficClass::WeightLoad)
+            + self.bytes(TrafficClass::KvLoad)
+            + self.bytes(TrafficClass::ActLoad)
+    }
+
+    /// Cache-only (non-weight) host→GPU subtotal.
+    pub fn cache_load_total(&self) -> u64 {
+        self.bytes(TrafficClass::KvLoad) + self.bytes(TrafficClass::ActLoad)
+    }
+
+    /// Merge another counter into this one.
+    pub fn merge(&mut self, other: &TrafficCounter) {
+        for (a, b) in self.bytes.iter_mut().zip(other.bytes.iter()) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_independent() {
+        let mut c = TrafficCounter::default();
+        c.add(TrafficClass::KvLoad, 100);
+        c.add(TrafficClass::ActLoad, 50);
+        c.add(TrafficClass::KvLoad, 10);
+        assert_eq!(c.bytes(TrafficClass::KvLoad), 110);
+        assert_eq!(c.bytes(TrafficClass::ActLoad), 50);
+        assert_eq!(c.total(), 160);
+        assert_eq!(c.h2d_total(), 160);
+        assert_eq!(c.cache_load_total(), 160);
+    }
+
+    #[test]
+    fn stores_not_in_h2d() {
+        let mut c = TrafficCounter::default();
+        c.add(TrafficClass::KvStore, 30);
+        c.add(TrafficClass::WeightLoad, 70);
+        assert_eq!(c.h2d_total(), 70);
+        assert_eq!(c.total(), 100);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = TrafficCounter::default();
+        let mut b = TrafficCounter::default();
+        a.add(TrafficClass::ActStore, 5);
+        b.add(TrafficClass::ActStore, 7);
+        b.add(TrafficClass::WeightLoad, 1);
+        a.merge(&b);
+        assert_eq!(a.bytes(TrafficClass::ActStore), 12);
+        assert_eq!(a.total(), 13);
+    }
+}

@@ -1,0 +1,304 @@
+//! Host memory block allocation — Algorithm 1 of the paper (§4.3.1).
+//!
+//! Runs once at startup. Step 1 sizes an initial KV *or* ACT population to
+//! absorb the per-layer imbalance between weight loading and GPU-resident
+//! recomputation; step 2 fills the remaining host memory with the mix that
+//! equalizes `T_kv_gen(#ACT) = T_load_kv(#KV)` under the byte constraint
+//! `S_ACT·#ACT + S_KV·#KV = M_remaining`, using the fitted linear costs
+//! (closed form — no search).
+
+use super::regression::CostModel;
+use crate::cache::BlockSizes;
+
+/// Inputs to Algorithm 1.
+#[derive(Debug, Clone, Copy)]
+pub struct AllocationInputs {
+    /// Fitted cost functions + per-layer weight load time.
+    pub cost: CostModel,
+    /// ACT blocks already resident in GPU memory (`#ACT_GPU`).
+    pub act_gpu_blocks: usize,
+    /// Host bytes available to the hybrid cache (`M_Host - S_weight`).
+    pub host_cache_bytes: usize,
+    /// Block byte sizes (S_KV, S_ACT = ½·S_KV).
+    pub sizes: BlockSizes,
+}
+
+/// Output of Algorithm 1: the host block census.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostAllocation {
+    pub act_blocks: usize,
+    pub kv_blocks: usize,
+    /// Step-1 split, kept for introspection/ablation.
+    pub act_init: usize,
+    pub kv_init: usize,
+}
+
+impl HostAllocation {
+    /// ACT:KV ratio as a float (∞-safe: returns f64::INFINITY for kv=0).
+    pub fn ratio(&self) -> f64 {
+        if self.kv_blocks == 0 {
+            f64::INFINITY
+        } else {
+            self.act_blocks as f64 / self.kv_blocks as f64
+        }
+    }
+
+    pub fn total_bytes(&self, sizes: &BlockSizes) -> usize {
+        self.act_blocks * sizes.act_bytes + self.kv_blocks * sizes.kv_bytes
+    }
+}
+
+/// Algorithm 1, lines 10–18: the initial allocation balancing weight-load
+/// time against GPU-resident recomputation.
+///
+/// Extension over the paper's Eq. 9 (see DESIGN.md §Fidelity): host ACT
+/// blocks also consume PCIe time (`load_act`), so the fill rate for the
+/// idle-GPU branch is the *net* recomputation slope `kv_gen − load_act`.
+/// When that net slope is non-positive, feeding the GPU checkpoints is
+/// cheaper than any alternative at every count — the caller's budget
+/// clamp then decides (act-cache dominates).
+pub fn initial_cache_allocation(inp: &AllocationInputs) -> (usize, usize) {
+    let t_budget = inp.cost.load_w - inp.cost.kv_gen.eval(inp.act_gpu_blocks as f64);
+    if t_budget >= 0.0 {
+        // GPU would idle while weights stream: give it host ACT blocks to
+        // chew on.
+        let g = inp.cost.kv_gen;
+        let la = inp.cost.load_act;
+        let net_slope = g.slope - la.slope;
+        let act = if net_slope <= 0.0 {
+            // recompute never becomes the bottleneck: take the budget cap
+            inp.host_cache_bytes / inp.sizes.act_bytes
+        } else {
+            ((t_budget - (g.intercept - la.intercept)) / net_slope).max(0.0).floor() as usize
+        };
+        (act, 0)
+    } else {
+        // PCIe would idle while the GPU recomputes: schedule KV loads.
+        let kv = inp.cost.load_kv.inverse(-t_budget).floor() as usize;
+        (0, kv)
+    }
+}
+
+/// Algorithm 1, lines 20–27: fill remaining host memory keeping the two
+/// pipelines equal. Closed-form solution of
+///   S_ACT·a + S_KV·k = M_remaining
+///   g_s·a + g_i       = l_s·k + l_i
+pub fn alloc_remaining(inp: &AllocationInputs, act_init: usize, kv_init: usize) -> (usize, usize) {
+    let s_act = inp.sizes.act_bytes as f64;
+    let s_kv = inp.sizes.kv_bytes as f64;
+    let occupied = s_act * act_init as f64 + s_kv * kv_init as f64;
+    let remaining = inp.host_cache_bytes as f64 - occupied;
+    if remaining <= 0.0 {
+        return (0, 0);
+    }
+
+    let g = inp.cost.kv_gen;
+    let l = inp.cost.load_kv;
+    let la = inp.cost.load_act;
+    // Balance with the ACT-load extension:
+    //   g_s·a + g_i = l_s·k + l_i + la_s·a + la_i
+    //   s_ACT·a + s_KV·k = M_remaining
+    let net = g.slope - la.slope;
+    if net <= 0.0 {
+        // Recomputing a checkpoint costs the GPU less than its own PCIe
+        // load: ACT strictly dominates — fill everything with ACT.
+        return ((remaining / s_act).floor() as usize, 0);
+    }
+    let d = l.intercept + la.intercept - g.intercept;
+    // a = (l_s·k + d) / net ; substitute into the byte constraint.
+    let denom = s_act * l.slope / net + s_kv;
+    let k = (remaining - s_act * d / net) / denom;
+    // Clamp to the byte budget (the closed form can overshoot when the
+    // intercept correction exceeds a tiny remaining budget).
+    let k = k.clamp(0.0, remaining / s_kv);
+    let a = ((remaining - s_kv * k) / s_act).max(0.0);
+    (a.floor() as usize, k.floor() as usize)
+}
+
+/// Full Algorithm 1.
+pub fn hybrid_cache_allocation(inp: &AllocationInputs) -> HostAllocation {
+    let (act_init, kv_init) = initial_cache_allocation(inp);
+    // Step-1 blocks must themselves fit in host memory; clamp if the
+    // budget is tiny (the remaining step then gets nothing).
+    let (act_init, kv_init) = clamp_to_budget(inp, act_init, kv_init);
+    let (act_rem, kv_rem) = alloc_remaining(inp, act_init, kv_init);
+    HostAllocation {
+        act_blocks: act_init + act_rem,
+        kv_blocks: kv_init + kv_rem,
+        act_init,
+        kv_init,
+    }
+}
+
+/// Ablation baseline (§5.5): split host cache bytes 1:1 between the two
+/// kinds instead of running Algorithm 1.
+pub fn even_split_allocation(inp: &AllocationInputs) -> HostAllocation {
+    let half = inp.host_cache_bytes / 2;
+    HostAllocation {
+        act_blocks: half / inp.sizes.act_bytes,
+        kv_blocks: half / inp.sizes.kv_bytes,
+        act_init: 0,
+        kv_init: 0,
+    }
+}
+
+/// All-ACT allocation (HybridServe-Act-Cache baseline).
+pub fn act_only_allocation(inp: &AllocationInputs) -> HostAllocation {
+    HostAllocation {
+        act_blocks: inp.host_cache_bytes / inp.sizes.act_bytes,
+        kv_blocks: 0,
+        act_init: 0,
+        kv_init: 0,
+    }
+}
+
+/// All-KV allocation (FlexGen-style conventional cache).
+pub fn kv_only_allocation(inp: &AllocationInputs) -> HostAllocation {
+    HostAllocation {
+        act_blocks: 0,
+        kv_blocks: inp.host_cache_bytes / inp.sizes.kv_bytes,
+        act_init: 0,
+        kv_init: 0,
+    }
+}
+
+fn clamp_to_budget(inp: &AllocationInputs, act: usize, kv: usize) -> (usize, usize) {
+    let bytes = act * inp.sizes.act_bytes + kv * inp.sizes.kv_bytes;
+    if bytes <= inp.host_cache_bytes {
+        return (act, kv);
+    }
+    if act > 0 {
+        (inp.host_cache_bytes / inp.sizes.act_bytes, 0)
+    } else {
+        (0, inp.host_cache_bytes / inp.sizes.kv_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, SystemConfig};
+
+    fn inputs(model: &ModelConfig, host_gb: usize) -> AllocationInputs {
+        let sys = SystemConfig::paper_testbed();
+        AllocationInputs {
+            cost: CostModel::analytic(model, &sys),
+            act_gpu_blocks: 0,
+            host_cache_bytes: host_gb << 30,
+            sizes: BlockSizes::new(model, sys.block_tokens),
+        }
+    }
+
+    #[test]
+    fn allocation_fits_budget() {
+        for m in ModelConfig::paper_family() {
+            let inp = inputs(&m, 200);
+            let alloc = hybrid_cache_allocation(&inp);
+            assert!(
+                alloc.total_bytes(&inp.sizes) <= inp.host_cache_bytes,
+                "{}: {} > {}",
+                m.name,
+                alloc.total_bytes(&inp.sizes),
+                inp.host_cache_bytes
+            );
+            // budget is large; should be nearly fully used (> 99%)
+            assert!(
+                alloc.total_bytes(&inp.sizes) as f64 > 0.99 * inp.host_cache_bytes as f64,
+                "{} underuses budget",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn pipelines_balanced_at_allocation() {
+        // The remaining-step mix must equalize the two pipeline times.
+        let m = ModelConfig::opt_30b();
+        let inp = inputs(&m, 200);
+        let alloc = hybrid_cache_allocation(&inp);
+        let (a_rem, k_rem) = (
+            alloc.act_blocks - alloc.act_init,
+            alloc.kv_blocks - alloc.kv_init,
+        );
+        let t_gen = inp.cost.kv_gen.eval(a_rem as f64);
+        let t_load =
+            inp.cost.load_kv.eval(k_rem as f64) + inp.cost.load_act.eval(a_rem as f64);
+        if k_rem > 0 && a_rem > 0 {
+            let imbalance = (t_gen - t_load).abs() / t_gen.max(t_load);
+            assert!(imbalance < 0.05, "imbalance {imbalance}");
+        }
+    }
+
+    #[test]
+    fn recompute_window_present_and_model_dependent() {
+        // §5.2: weight streaming opens a recomputation window. For
+        // OPT-30B (h=7168) the net recompute slope is positive, so
+        // Algorithm 1 produces a finite mixed allocation; for OPT-6.7B
+        // (h=4096) recomputing a block costs the GPU *less* than its own
+        // PCIe load on this testbed, so the ACT cache dominates outright.
+        let a30 = hybrid_cache_allocation(&inputs(&ModelConfig::opt_30b(), 200));
+        let a67 = hybrid_cache_allocation(&inputs(&ModelConfig::opt_6_7b(), 200));
+        assert!(a30.act_init > 0, "opt-30b has no step-1 ACT window");
+        assert!(a30.act_blocks > 0);
+        let share67 = a67.act_blocks as f64 / (a67.act_blocks + a67.kv_blocks).max(1) as f64;
+        assert!(share67 > 0.9, "opt-6.7b act share {share67}");
+    }
+
+    #[test]
+    fn gpu_resident_act_reduces_init_budget() {
+        let m = ModelConfig::opt_30b();
+        let mut inp = inputs(&m, 200);
+        let (act0, _) = initial_cache_allocation(&inp);
+        inp.act_gpu_blocks = 10_000;
+        let (act1, kv1) = initial_cache_allocation(&inp);
+        // lots of GPU-resident recomputation -> less (or no) extra ACT,
+        // possibly KV instead
+        assert!(act1 < act0 || kv1 > 0);
+    }
+
+    #[test]
+    fn step1_branches() {
+        let m = ModelConfig::opt_30b();
+        let inp = inputs(&m, 200);
+        // t_budget >= 0 with no GPU blocks (weights dominate) -> ACT side
+        let (a, k) = initial_cache_allocation(&inp);
+        assert!(a > 0 && k == 0, "a={a} k={k}");
+        // overload GPU with blocks -> KV side
+        let mut inp2 = inp;
+        inp2.act_gpu_blocks = 1_000_000;
+        let (a2, k2) = initial_cache_allocation(&inp2);
+        assert!(a2 == 0 && k2 > 0, "a2={a2} k2={k2}");
+    }
+
+    #[test]
+    fn even_split_uses_half_each() {
+        let m = ModelConfig::opt_13b();
+        let inp = inputs(&m, 100);
+        let alloc = even_split_allocation(&inp);
+        let act_bytes = alloc.act_blocks * inp.sizes.act_bytes;
+        let kv_bytes = alloc.kv_blocks * inp.sizes.kv_bytes;
+        assert!((act_bytes as f64 - kv_bytes as f64).abs() < inp.sizes.kv_bytes as f64 * 2.0);
+    }
+
+    #[test]
+    fn property_allocation_never_oversubscribes() {
+        crate::util::prop::check("alloc-budget", 80, |rng| {
+            let m = rng.choose(&ModelConfig::paper_family()).clone();
+            let sys = SystemConfig::paper_testbed();
+            let inp = AllocationInputs {
+                cost: CostModel::analytic(&m, &sys),
+                act_gpu_blocks: rng.range(0, 100_000),
+                host_cache_bytes: rng.range(1 << 28, 400usize << 30),
+                sizes: BlockSizes::new(&m, sys.block_tokens),
+            };
+            for alloc in [
+                hybrid_cache_allocation(&inp),
+                even_split_allocation(&inp),
+                act_only_allocation(&inp),
+                kv_only_allocation(&inp),
+            ] {
+                assert!(alloc.total_bytes(&inp.sizes) <= inp.host_cache_bytes);
+            }
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Sampling-based linear regression of the two pipeline cost functions
+//! (paper §4.3, Fig. 11).
+//!
+//! The cache-management policy needs `T_kv_gen(n)` (GPU time to recompute
+//! K/V for `n` ACT blocks in one layer) and `T_load_kv(n)` (PCIe time to
+//! load one layer's share of `n` KV blocks). Both are measured by sampling
+//! a few block counts and fitting ordinary least squares; the paper
+//! reports R² = 0.99 for both on an RTX 4090 / PCIe 4.0 — our analytic
+//! sampler is linear by construction and the PJRT sampler lands ≥0.95.
+
+use crate::config::{ModelConfig, SystemConfig};
+use crate::util::stats::linear_fit;
+
+/// A fitted linear cost `T(n) = slope * n + intercept` over block counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearCost {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Goodness of fit of the sampled points.
+    pub r_squared: f64,
+}
+
+impl LinearCost {
+    /// Fit from (block count, seconds) samples.
+    pub fn fit(ns: &[f64], ts: &[f64]) -> Self {
+        let (slope, intercept, r_squared) = linear_fit(ns, ts);
+        Self {
+            slope,
+            intercept,
+            r_squared,
+        }
+    }
+
+    /// Evaluate at `n` blocks. `T(0) = 0` by definition (no work, no
+    /// time); for n > 0 the affine fit applies, clamped non-negative.
+    pub fn eval(&self, n: f64) -> f64 {
+        if n <= 0.0 {
+            0.0
+        } else {
+            (self.slope * n + self.intercept).max(0.0)
+        }
+    }
+
+    /// Largest `n` with `T(n) <= t` (the "find #ACT s.t. T_kv_gen(#ACT) =
+    /// T_budget" steps of Algorithm 1). Returns 0 for t <= T(0).
+    pub fn inverse(&self, t: f64) -> f64 {
+        if self.slope <= 0.0 {
+            return 0.0;
+        }
+        ((t - self.intercept) / self.slope).max(0.0)
+    }
+}
+
+/// Source of cost samples: the analytic model derives them from hardware
+/// specs; the PJRT runtime measures real kernel executions (Fig. 11's
+/// sampling run). Both feed the same fit.
+pub trait CostSampler {
+    /// Seconds of GPU time to recompute K/V for `blocks` ACT blocks
+    /// (single layer share).
+    fn sample_kv_gen(&mut self, blocks: usize) -> f64;
+    /// Seconds of PCIe time to load `blocks` KV blocks (single layer
+    /// share).
+    fn sample_load_kv(&mut self, blocks: usize) -> f64;
+    /// Seconds of PCIe time to load `blocks` ACT blocks (half the bytes
+    /// of KV). Default: half the KV time — exact up to the fixed latency.
+    fn sample_load_act(&mut self, blocks: usize) -> f64 {
+        self.sample_load_kv(blocks) / 2.0
+    }
+    /// Seconds to load one decoder layer's weights.
+    fn weight_load_time(&mut self) -> f64;
+}
+
+/// Analytic sampler: derives costs from the roofline model in
+/// [`SystemConfig`] — used by the full-scale simulator and as a fallback
+/// when no runtime is available.
+pub struct AnalyticSampler<'a> {
+    pub model: &'a ModelConfig,
+    pub sys: &'a SystemConfig,
+}
+
+impl<'a> AnalyticSampler<'a> {
+    fn tokens(&self, blocks: usize) -> usize {
+        blocks * self.sys.block_tokens
+    }
+}
+
+impl<'a> CostSampler for AnalyticSampler<'a> {
+    fn sample_kv_gen(&mut self, blocks: usize) -> f64 {
+        let flops = self.model.kv_gen_flops(self.tokens(blocks)) as f64;
+        // Recomputation is a well-shaped dense GEMM: bounded by the MXU
+        // rate and by streaming the weight panels from device memory.
+        let compute = flops / self.sys.gpu.effective_kvgen_flops();
+        let weight_reads =
+            (2 * self.model.hidden * self.model.hidden * self.model.dtype.bytes()) as f64
+                / self.sys.gpu.mem_bw;
+        compute.max(weight_reads) + 5e-6 // kernel launch
+    }
+
+    fn sample_load_kv(&mut self, blocks: usize) -> f64 {
+        let bytes = self.model.kv_bytes_per_layer(self.tokens(blocks));
+        self.sys.interconnect.h2d_time(bytes)
+    }
+
+    fn weight_load_time(&mut self) -> f64 {
+        // The engine keeps `gpu_weight_fraction` of the weights resident;
+        // only the spill streams per layer.
+        let resident = self.sys.gpu_weight_budget() as f64;
+        let total = self.model.total_weight_bytes() as f64;
+        let stream_fraction = ((total - resident) / total).clamp(0.0, 1.0);
+        let layer_bytes = self.model.layer_weight_bytes() as f64 * stream_fraction;
+        self.sys.interconnect.h2d_time(layer_bytes as usize)
+    }
+}
+
+/// The fitted pair of cost functions + the per-layer weight load constant:
+/// everything Algorithm 1 and the mini-batch packer need.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub kv_gen: LinearCost,
+    pub load_kv: LinearCost,
+    /// PCIe cost of loading ACT blocks. The paper's Eq. 9 omits this
+    /// term; on our testbed model it is non-negligible (an ACT block
+    /// costs half a KV block to ship), so Algorithm 1 is extended with
+    /// it — see DESIGN.md §Fidelity.
+    pub load_act: LinearCost,
+    pub load_w: f64,
+}
+
+/// Default sampling grid (block counts). Matches the regime Fig. 11
+/// plots (hundreds to thousands of tokens): large enough that the
+/// recomputation GEMM is compute-bound (out of the weight-panel-read
+/// floor), so the fit is genuinely linear.
+pub const SAMPLE_POINTS: [usize; 5] = [32, 64, 128, 256, 512];
+
+impl CostModel {
+    /// Sample `sampler` on `points` and fit both lines.
+    pub fn fit_from(sampler: &mut dyn CostSampler, points: &[usize]) -> Self {
+        assert!(points.len() >= 2, "need at least two sample points");
+        let ns: Vec<f64> = points.iter().map(|&n| n as f64).collect();
+        let gen_ts: Vec<f64> = points.iter().map(|&n| sampler.sample_kv_gen(n)).collect();
+        let load_ts: Vec<f64> = points.iter().map(|&n| sampler.sample_load_kv(n)).collect();
+        let act_ts: Vec<f64> = points.iter().map(|&n| sampler.sample_load_act(n)).collect();
+        Self {
+            kv_gen: LinearCost::fit(&ns, &gen_ts),
+            load_kv: LinearCost::fit(&ns, &load_ts),
+            load_act: LinearCost::fit(&ns, &act_ts),
+            load_w: sampler.weight_load_time(),
+        }
+    }
+
+    /// Convenience: analytic fit for a model/system pair.
+    pub fn analytic(model: &ModelConfig, sys: &SystemConfig) -> Self {
+        let mut s = AnalyticSampler { model, sys };
+        Self::fit_from(&mut s, &SAMPLE_POINTS)
+    }
+
+    /// `T_Computation` for a mini-batch with `act_blocks` ACT blocks
+    /// (Eq. 10).
+    pub fn t_computation(&self, act_blocks: usize) -> f64 {
+        self.kv_gen.eval(act_blocks as f64)
+    }
+
+    /// `T_PCIe` for a mini-batch loading `kv_blocks` KV blocks plus the
+    /// layer weights (Eq. 9).
+    pub fn t_pcie(&self, kv_blocks: usize) -> f64 {
+        self.load_w + self.load_kv.eval(kv_blocks as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_fit_is_linear() {
+        let m = ModelConfig::opt_30b();
+        let s = SystemConfig::paper_testbed();
+        let cm = CostModel::analytic(&m, &s);
+        assert!(cm.kv_gen.r_squared > 0.99, "kv_gen R² {}", cm.kv_gen.r_squared);
+        assert!(cm.load_kv.r_squared > 0.99, "load_kv R² {}", cm.load_kv.r_squared);
+        assert!(cm.kv_gen.slope > 0.0);
+        assert!(cm.load_kv.slope > 0.0);
+        assert!(cm.load_w > 0.0);
+    }
+
+    #[test]
+    fn weight_streaming_leaves_room_for_recomputation() {
+        // The paper's premise is NOT that recomputing a block is faster
+        // than shipping it (at h=7168 the skinny GEMM is ~3.6x the PCIe
+        // time per block); it is that the GPU idles for the entire
+        // weight-streaming window, so recomputation is free up to
+        // T_load_w / slope blocks per layer. Check that window is large.
+        let m = ModelConfig::opt_30b();
+        let s = SystemConfig::paper_testbed();
+        let cm = CostModel::analytic(&m, &s);
+        let free_blocks = cm.load_w / cm.kv_gen.slope;
+        assert!(
+            free_blocks > 50.0,
+            "only {free_blocks} blocks of free recomputation per layer"
+        );
+        // And each block recomputed instead of loaded saves real PCIe time.
+        assert!(cm.load_kv.slope > 0.0);
+    }
+
+    #[test]
+    fn eval_zero_is_zero() {
+        let lc = LinearCost {
+            slope: 1e-4,
+            intercept: 1e-5,
+            r_squared: 1.0,
+        };
+        assert_eq!(lc.eval(0.0), 0.0);
+        assert!(lc.eval(1.0) > 0.0);
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let lc = LinearCost {
+            slope: 2e-4,
+            intercept: 1e-5,
+            r_squared: 1.0,
+        };
+        for n in [1.0, 10.0, 333.0] {
+            let t = lc.eval(n);
+            assert!((lc.inverse(t) - n).abs() < 1e-9);
+        }
+        assert_eq!(lc.inverse(0.0), 0.0);
+    }
+
+    #[test]
+    fn property_inverse_is_monotone() {
+        crate::util::prop::check("inverse-monotone", 100, |rng| {
+            let lc = LinearCost {
+                slope: rng.f64() * 1e-3 + 1e-9,
+                intercept: rng.f64() * 1e-4,
+                r_squared: 1.0,
+            };
+            let t1 = rng.f64();
+            let t2 = t1 + rng.f64();
+            assert!(lc.inverse(t2) >= lc.inverse(t1));
+        });
+    }
+}

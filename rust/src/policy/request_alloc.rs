@@ -1,0 +1,142 @@
+//! Request block allocation (paper §4.3.2, Eq. 11).
+//!
+//! Every request keeps its own ACT:KV block mix at the host-level ratio
+//! chosen by Algorithm 1: `#ACT_req : #KV_req = #ACT_Host : #KV_Host`.
+//! After prefill, context blocks are materialized at this ratio; during
+//! generation each newly completed block picks the kind that keeps the
+//! request closest to the target ratio (the paper's 3:1 example: after
+//! five ACT and two KV blocks, the next is ACT... until 6:2).
+
+use crate::cache::BlockKind;
+
+/// Target ACT:KV ratio as a (act, kv) integer pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRatio {
+    pub act: usize,
+    pub kv: usize,
+}
+
+impl BlockRatio {
+    pub fn new(act: usize, kv: usize) -> Self {
+        Self { act, kv }
+    }
+
+    /// All-ACT (Act-cache-only system).
+    pub fn act_only() -> Self {
+        Self { act: 1, kv: 0 }
+    }
+
+    /// All-KV (conventional KV cache).
+    pub fn kv_only() -> Self {
+        Self { act: 0, kv: 1 }
+    }
+
+    /// Pick the kind for the next block given the request currently holds
+    /// `act` ACT and `kv` KV blocks.
+    ///
+    /// Chooses the kind whose increment moves the census toward the
+    /// target line `act·KV_t = kv·ACT_t` (exact integer arithmetic — no
+    /// float drift over long generations).
+    pub fn next_kind(&self, act: usize, kv: usize) -> BlockKind {
+        match (self.act, self.kv) {
+            (0, 0) => BlockKind::Kv, // degenerate: no target, default KV
+            (_, 0) => BlockKind::Act,
+            (0, _) => BlockKind::Kv,
+            (at, kt) => {
+                // Current ACT share vs target share, cross-multiplied:
+                // allocate ACT iff act/(act+kv) < at/(at+kt)
+                if act * (at + kt) < at * (act + kv + 1) {
+                    BlockKind::Act
+                } else {
+                    BlockKind::Kv
+                }
+            }
+        }
+    }
+
+    /// Split `n` prefill blocks into (act, kv) counts at this ratio
+    /// (ACT-favored rounding, matching GPU-preferred ACT placement).
+    pub fn split(&self, n: usize) -> (usize, usize) {
+        match (self.act, self.kv) {
+            (0, 0) => (0, n),
+            (_, 0) => (n, 0),
+            (0, _) => (0, n),
+            (at, kt) => {
+                let act = (n * at).div_ceil(at + kt);
+                (act, n - act)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_ratios() {
+        assert_eq!(BlockRatio::act_only().next_kind(5, 0), BlockKind::Act);
+        assert_eq!(BlockRatio::kv_only().next_kind(0, 5), BlockKind::Kv);
+        assert_eq!(BlockRatio::act_only().split(7), (7, 0));
+        assert_eq!(BlockRatio::kv_only().split(7), (0, 7));
+    }
+
+    #[test]
+    fn paper_example_3_to_1() {
+        // §4.3.2: ratio 3:1 with five ACT and two KV present -> next is ACT.
+        let r = BlockRatio::new(3, 1);
+        assert_eq!(r.next_kind(5, 2), BlockKind::Act);
+    }
+
+    #[test]
+    fn sequence_converges_to_ratio() {
+        let r = BlockRatio::new(2, 1);
+        let (mut act, mut kv) = (0usize, 0usize);
+        for _ in 0..300 {
+            match r.next_kind(act, kv) {
+                BlockKind::Act => act += 1,
+                BlockKind::Kv => kv += 1,
+            }
+        }
+        let share = act as f64 / 300.0;
+        assert!((share - 2.0 / 3.0).abs() < 0.01, "share {share}");
+    }
+
+    #[test]
+    fn split_sums_and_respects_ratio() {
+        let r = BlockRatio::new(178, 100); // the paper's 1.78:1 for OPT-66B
+        for n in [1usize, 10, 64, 999] {
+            let (a, k) = r.split(n);
+            assert_eq!(a + k, n);
+            if n >= 20 {
+                let share = a as f64 / n as f64;
+                assert!((share - 178.0 / 278.0).abs() < 0.05, "n={n} share={share}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_census_tracks_target() {
+        crate::util::prop::check("ratio-tracking", 100, |rng| {
+            let at = rng.range(0, 8);
+            let kt = rng.range(0, 8);
+            if at == 0 && kt == 0 {
+                return;
+            }
+            let r = BlockRatio::new(at, kt);
+            let (mut act, mut kv) = (0usize, 0usize);
+            for i in 1..=200usize {
+                match r.next_kind(act, kv) {
+                    BlockKind::Act => act += 1,
+                    BlockKind::Kv => kv += 1,
+                }
+                // census never strays more than one block from the target
+                let target_act = i as f64 * at as f64 / (at + kt) as f64;
+                assert!(
+                    (act as f64 - target_act).abs() <= 1.0 + 1e-9,
+                    "i={i} act={act} target={target_act}"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,245 @@
+//! artifacts/manifest.json parsing and shape-bucket lookup.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{Dtype, ModelConfig};
+use crate::util::Json;
+
+/// One tensor in an entry signature: (name, dtype, shape).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub ctx: Option<usize>,
+    pub tokens: Option<usize>,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest: model description + all entry points.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub batch_buckets: Vec<usize>,
+    pub seq_buckets: Vec<usize>,
+    pub kv_gen_buckets: Vec<usize>,
+    pub ctx_buckets: Vec<usize>,
+    /// (name, shape) of the 16 per-layer weight tensors, in call order.
+    pub layer_weights: Vec<(String, Vec<usize>)>,
+    /// (name, shape) of the global tensors (emb, pos, lnf_g, lnf_b).
+    pub globals: Vec<(String, Vec<usize>)>,
+    pub entries: Vec<Entry>,
+}
+
+fn sig_list(v: &Json) -> Result<Vec<TensorSig>> {
+    v.as_arr()
+        .context("signature not an array")?
+        .iter()
+        .map(|s| {
+            Ok(TensorSig {
+                name: s.at(0).as_str().context("sig name")?.to_string(),
+                dtype: s.at(1).as_str().context("sig dtype")?.to_string(),
+                shape: s.at(2).usize_array().context("sig shape")?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.get("model");
+        let model = ModelConfig {
+            name: m.get("name").as_str().context("model.name")?.to_string(),
+            num_layers: m.get("num_layers").as_usize().context("num_layers")?,
+            hidden: m.get("hidden").as_usize().context("hidden")?,
+            heads: m.get("heads").as_usize().context("heads")?,
+            ffn: m.get("ffn").as_usize().context("ffn")?,
+            vocab: m.get("vocab").as_usize().context("vocab")?,
+            max_context: m.get("max_context").as_usize().context("max_context")?,
+            dtype: Dtype::F32,
+        };
+
+        let named_shapes = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+            j.get(key)
+                .as_arr()
+                .with_context(|| format!("{key} missing"))?
+                .iter()
+                .map(|w| {
+                    Ok((
+                        w.get("name").as_str().context("weight name")?.to_string(),
+                        w.get("shape").usize_array().context("weight shape")?,
+                    ))
+                })
+                .collect()
+        };
+
+        let entries = j
+            .get("entries")
+            .as_arr()
+            .context("entries missing")?
+            .iter()
+            .map(|e| {
+                let p = e.get("params");
+                Ok(Entry {
+                    name: e.get("name").as_str().context("entry name")?.to_string(),
+                    kind: e.get("kind").as_str().context("entry kind")?.to_string(),
+                    file: dir.join(e.get("file").as_str().context("entry file")?),
+                    batch: p.get("batch").as_usize(),
+                    seq: p.get("seq").as_usize(),
+                    ctx: p.get("ctx").as_usize(),
+                    tokens: p.get("tokens").as_usize(),
+                    inputs: sig_list(e.get("inputs"))?,
+                    outputs: sig_list(e.get("outputs"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            model,
+            batch_buckets: j.get("buckets").get("batch").usize_array().context("batch buckets")?,
+            seq_buckets: j.get("buckets").get("seq").usize_array().context("seq buckets")?,
+            kv_gen_buckets: j
+                .get("buckets")
+                .get("kv_gen_tokens")
+                .usize_array()
+                .context("kv_gen buckets")?,
+            ctx_buckets: j
+                .get("buckets")
+                .get("ctx")
+                .usize_array()
+                .context("ctx buckets")?,
+            layer_weights: named_shapes("layer_weights")?,
+            globals: named_shapes("globals")?,
+            entries,
+        })
+    }
+
+    /// Smallest bucket value >= `n` (error if none).
+    fn bucket(buckets: &[usize], n: usize, what: &str) -> Result<usize> {
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .with_context(|| format!("no {what} bucket >= {n} (buckets {buckets:?})"))
+    }
+
+    pub fn batch_bucket(&self, b: usize) -> Result<usize> {
+        Self::bucket(&self.batch_buckets, b, "batch")
+    }
+
+    pub fn seq_bucket(&self, s: usize) -> Result<usize> {
+        Self::bucket(&self.seq_buckets, s, "seq")
+    }
+
+    pub fn kv_gen_bucket(&self, t: usize) -> Result<usize> {
+        Self::bucket(&self.kv_gen_buckets, t, "kv_gen tokens")
+    }
+
+    pub fn ctx_bucket(&self, c: usize) -> Result<usize> {
+        Self::bucket(&self.ctx_buckets, c, "ctx")
+    }
+
+    fn find(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("entry {name} not in manifest"))
+    }
+
+    /// Entry for embedding `b × s` tokens (bucketed).
+    pub fn embed(&self, b: usize, s: usize) -> Result<&Entry> {
+        let bb = self.batch_bucket(b)?;
+        let sb = if s == 1 { 1 } else { self.seq_bucket(s)? };
+        self.find(&format!("embed_b{bb}_s{sb}"))
+    }
+
+    pub fn layer_prefill(&self, b: usize, s: usize) -> Result<&Entry> {
+        let bb = self.batch_bucket(b)?;
+        let sb = self.seq_bucket(s)?;
+        self.find(&format!("layer_prefill_b{bb}_s{sb}"))
+    }
+
+    /// Decode entry for `b` requests attending over at most `ctx` cached
+    /// tokens (+1 self); both axes bucketed. Shipping only the needed
+    /// context bucket is the paged-attention move that keeps the KV
+    /// buffer copies proportional to live context.
+    pub fn layer_decode(&self, b: usize, ctx: usize) -> Result<&Entry> {
+        let bb = self.batch_bucket(b)?;
+        let cb = self.ctx_bucket(ctx)?;
+        self.find(&format!("layer_decode_b{bb}_c{cb}"))
+    }
+
+    pub fn kv_gen(&self, tokens: usize) -> Result<&Entry> {
+        let tb = self.kv_gen_bucket(tokens)?;
+        self.find(&format!("kv_gen_t{tb}"))
+    }
+
+    pub fn logits(&self, b: usize) -> Result<&Entry> {
+        let bb = self.batch_bucket(b)?;
+        self.find(&format!("logits_b{bb}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_and_buckets() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.model.name, "opt-tiny");
+        assert_eq!(m.layer_weights.len(), 16);
+        assert_eq!(m.globals.len(), 4);
+        assert!(m.entries.len() >= 30);
+
+        assert_eq!(m.batch_bucket(3).unwrap(), 4);
+        assert_eq!(m.batch_bucket(8).unwrap(), 8);
+        assert!(m.batch_bucket(9).is_err());
+        assert_eq!(m.seq_bucket(17).unwrap(), 32);
+        assert_eq!(m.kv_gen_bucket(65).unwrap(), 128);
+
+        let e = m.layer_decode(2, 100).unwrap();
+        assert_eq!(e.kind, "layer_decode");
+        assert_eq!(e.batch, Some(4));
+        assert_eq!(e.ctx, Some(128));
+        // 4 data inputs + 16 weights
+        assert_eq!(e.inputs.len(), 20);
+        assert!(e.file.exists());
+
+        let kv = m.kv_gen(100).unwrap();
+        assert_eq!(kv.tokens, Some(128));
+        assert_eq!(kv.outputs.len(), 2);
+    }
+}

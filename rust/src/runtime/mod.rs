@@ -1,0 +1,21 @@
+//! Runtime: PJRT client wrapper, artifact manifest, weights and tensors.
+//!
+//! This is the only module that touches XLA. Everything above it (engine,
+//! policy, baselines) sees host [`Tensor`]s and entry handles.
+
+mod manifest;
+mod pjrt;
+mod tensor;
+mod weights;
+
+pub use manifest::{Entry, Manifest, TensorSig};
+pub use pjrt::{ExecStats, PjrtRuntime};
+pub use tensor::Tensor;
+pub use weights::WeightStore;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `<crate root>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,275 @@
+//! PJRT execution: load HLO text artifacts, compile once per shape bucket,
+//! execute from the serving hot path.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (`HloModuleProto::from_text_file` reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1
+//! would otherwise reject).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Entry, Manifest};
+use super::tensor::Tensor;
+
+/// Cumulative execution statistics per entry (feeds the §Perf profile and
+/// the Fig. 11 sampling run).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    stats: HashMap<String, ExecStats>,
+    /// Seconds spent compiling (one-time, reported separately).
+    pub compile_secs: f64,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and parse the manifest in `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            exes: HashMap::new(),
+            stats: HashMap::new(),
+            compile_secs: 0.0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Ensure `entry` is compiled; returns nothing (hot path uses
+    /// [`Self::execute`]). Useful for warm-up so first-token latency does
+    /// not include compilation.
+    pub fn warm(&mut self, entry_name: &str) -> Result<()> {
+        if !self.exes.contains_key(entry_name) {
+            let entry = self
+                .manifest
+                .entries
+                .iter()
+                .find(|e| e.name == entry_name)
+                .with_context(|| format!("unknown entry {entry_name}"))?
+                .clone();
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .with_context(|| format!("loading {:?}", entry.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {entry_name}"))?;
+            self.compile_secs += t0.elapsed().as_secs_f64();
+            self.exes.insert(entry_name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Execute `entry` with `args`; returns the tuple elements as host
+    /// tensors plus the measured wall-clock seconds of the execution.
+    pub fn execute(&mut self, entry: &Entry, args: &[Literal]) -> Result<(Vec<Tensor>, f64)> {
+        anyhow::ensure!(
+            args.len() == entry.inputs.len(),
+            "{}: expected {} args, got {}",
+            entry.name,
+            entry.inputs.len(),
+            args.len()
+        );
+        self.warm(&entry.name)?;
+        let exe = self.exes.get(&entry.name).unwrap();
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", entry.name))?[0][0]
+            .to_literal_sync()?;
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let parts = result.to_tuple().context("untupling result")?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            entry.name,
+            entry.outputs.len(),
+            parts.len()
+        );
+        let tensors = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+
+        let s = self.stats.entry(entry.name.clone()).or_default();
+        s.calls += 1;
+        s.total_secs += elapsed;
+        Ok((tensors, elapsed))
+    }
+
+    /// Execute with borrowed literals (hot path: weight literals are
+    /// cached by the engine and only per-call data is marshalled).
+    pub fn execute_refs(
+        &mut self,
+        entry: &Entry,
+        args: &[&Literal],
+    ) -> Result<(Vec<Tensor>, f64)> {
+        anyhow::ensure!(
+            args.len() == entry.inputs.len(),
+            "{}: expected {} args, got {}",
+            entry.name,
+            entry.inputs.len(),
+            args.len()
+        );
+        self.warm(&entry.name)?;
+        let exe = self.exes.get(&entry.name).unwrap();
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&Literal>(args)
+            .with_context(|| format!("executing {}", entry.name))?[0][0]
+            .to_literal_sync()?;
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let parts = result.to_tuple().context("untupling result")?;
+        let tensors = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let s = self.stats.entry(entry.name.clone()).or_default();
+        s.calls += 1;
+        s.total_secs += elapsed;
+        Ok((tensors, elapsed))
+    }
+
+    /// Convenience: marshal host tensors and execute.
+    pub fn execute_tensors(
+        &mut self,
+        entry: &Entry,
+        args: &[&Tensor],
+    ) -> Result<(Vec<Tensor>, f64)> {
+        let literals = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        self.execute(entry, &literals)
+    }
+
+    /// Per-entry execution statistics (name → stats), sorted by time.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self.stats.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<PjrtRuntime> {
+        if !art_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(PjrtRuntime::new(&art_dir()).unwrap())
+    }
+
+    #[test]
+    fn kv_gen_entry_matches_golden() {
+        let Some(mut rt) = runtime() else { return };
+        let m = rt.manifest().clone();
+        let gdir = art_dir().join("golden");
+        let w = super::super::weights::WeightStore::from_params_bin(&m, &gdir.join("params.bin"))
+            .unwrap();
+
+        let read_f32 = |name: &str| -> Vec<f32> {
+            std::fs::read(gdir.join(name))
+                .unwrap()
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect()
+        };
+        let h = m.model.hidden;
+        let a_c = Tensor::f32(vec![16, h], read_f32("kv_gen_in.bin"));
+        let k_exp = read_f32("kv_gen_k.bin");
+        let v_exp = read_f32("kv_gen_v.bin");
+
+        let idx = |n: &str| super::super::weights::WeightStore::layer_tensor_index(&m, n).unwrap();
+        let lw = &w.layers[0];
+        let entry = m.kv_gen(16).unwrap().clone();
+        let (out, secs) = rt
+            .execute_tensors(
+                &entry,
+                &[
+                    &a_c,
+                    &lw[idx("ln1_g")],
+                    &lw[idx("ln1_b")],
+                    &lw[idx("wk")],
+                    &lw[idx("bk")],
+                    &lw[idx("wv")],
+                    &lw[idx("bv")],
+                ],
+            )
+            .unwrap();
+        assert!(secs > 0.0);
+        let k = out[0].as_f32().unwrap();
+        let v = out[1].as_f32().unwrap();
+        assert_eq!(k.len(), k_exp.len());
+        for (i, (a, b)) in k.iter().zip(&k_exp).enumerate() {
+            assert!((a - b).abs() < 1e-4, "K[{i}]: {a} vs {b}");
+        }
+        for (i, (a, b)) in v.iter().zip(&v_exp).enumerate() {
+            assert!((a - b).abs() < 1e-4, "V[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate_and_cache_compiles_once() {
+        let Some(mut rt) = runtime() else { return };
+        let m = rt.manifest().clone();
+        let entry = m.logits(1).unwrap().clone();
+        let h = m.model.hidden;
+        let w = super::super::weights::WeightStore::random(&m, 0);
+        let a = Tensor::zeros_f32(vec![1, h]);
+        for _ in 0..3 {
+            rt.execute_tensors(&entry, &[&a, &w.lnf_g, &w.lnf_b, &w.emb]).unwrap();
+        }
+        assert_eq!(rt.compiled_count(), 1);
+        let stats = rt.stats();
+        assert_eq!(stats[0].0, entry.name);
+        assert_eq!(stats[0].1.calls, 3);
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some(mut rt) = runtime() else { return };
+        let entry = rt.manifest().logits(1).unwrap().clone();
+        let a = Tensor::zeros_f32(vec![1, 4]);
+        assert!(rt.execute_tensors(&entry, &[&a]).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Host-side tensors and Literal marshalling.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// A host tensor: shape + typed data. The engine keeps all model state
+/// (weights, KV, activations) in these and marshals to [`xla::Literal`]
+/// at the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor::F32 {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Size in bytes (host representation).
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// Marshal to an XLA literal (one copy).
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            Tensor::F32 { shape, data } => {
+                let raw = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, raw)
+                    .context("create f32 literal")
+            }
+            Tensor::I32 { shape, data } => {
+                let raw = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, raw)
+                    .context("create i32 literal")
+            }
+        }
+    }
+
+    /// Unmarshal from an XLA literal.
+    pub fn from_literal(lit: &Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_bytes() {
+        let t = Tensor::zeros_f32(vec![4, 8]);
+        assert_eq!(t.shape(), &[4, 8]);
+        assert_eq!(t.len(), 32);
+        assert_eq!(t.bytes(), 128);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![-1, 0, 7, 42]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,193 @@
+//! Weight storage: the coordinator's "host memory" copy of the model.
+//!
+//! Weights load either from `artifacts/golden/params.bin` (the seeded
+//! checkpoint the python oracle generated — used by cross-layer tests) or
+//! from the in-crate PRNG (standalone runs). Layout must match
+//! `python/compile/aot.py::params_flat`: emb, pos, lnf_g, lnf_b, then per
+//! layer the 16 LAYER_WEIGHTS tensors in order.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+use crate::util::Rng;
+
+/// All model weights, host side.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub emb: Tensor,
+    pub pos: Tensor,
+    pub lnf_g: Tensor,
+    pub lnf_b: Tensor,
+    /// `layers[l]` holds the 16 per-layer tensors in manifest order.
+    pub layers: Vec<Vec<Tensor>>,
+}
+
+impl WeightStore {
+    /// Load from `params.bin` (little-endian f32, aot.py layout).
+    pub fn from_params_bin(manifest: &Manifest, path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if raw.len() % 4 != 0 {
+            bail!("params.bin length {} not a multiple of 4", raw.len());
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut off = 0usize;
+        let mut take = |shape: &[usize]| -> Result<Tensor> {
+            let n: usize = shape.iter().product();
+            if off + n > floats.len() {
+                bail!("params.bin truncated at offset {off} (need {n} more)");
+            }
+            let t = Tensor::f32(shape.to_vec(), floats[off..off + n].to_vec());
+            off += n;
+            Ok(t)
+        };
+
+        let g: Vec<Tensor> = manifest
+            .globals
+            .iter()
+            .map(|(_, shape)| take(shape))
+            .collect::<Result<_>>()?;
+        let [emb, pos, lnf_g, lnf_b]: [Tensor; 4] =
+            g.try_into().map_err(|_| anyhow::anyhow!("expected 4 globals"))?;
+
+        let mut layers = Vec::with_capacity(manifest.model.num_layers);
+        for _ in 0..manifest.model.num_layers {
+            let lw: Vec<Tensor> = manifest
+                .layer_weights
+                .iter()
+                .map(|(_, shape)| take(shape))
+                .collect::<Result<_>>()?;
+            layers.push(lw);
+        }
+        if off != floats.len() {
+            bail!("params.bin has {} trailing floats", floats.len() - off);
+        }
+        Ok(Self {
+            emb,
+            pos,
+            lnf_g,
+            lnf_b,
+            layers,
+        })
+    }
+
+    /// Seeded random weights with the same inits as aot.py::make_params
+    /// (gamma=1, beta/bias=0, gaussian matrices) — but NOT bit-identical
+    /// to python (different PRNG); use params.bin for golden parity.
+    pub fn random(manifest: &Manifest, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut mat = |shape: &[usize], scale: f32| -> Tensor {
+            let n: usize = shape.iter().product();
+            Tensor::f32(shape.to_vec(), (0..n).map(|_| rng.normal_f32(scale)).collect())
+        };
+        let by_name = |name: &str, shape: &[usize], mat: &mut dyn FnMut(&[usize], f32) -> Tensor| {
+            if name.ends_with("_g") {
+                Tensor::f32(shape.to_vec(), vec![1.0; shape.iter().product()])
+            } else if name.ends_with("_b") || name.starts_with('b') {
+                Tensor::zeros_f32(shape.to_vec())
+            } else {
+                mat(shape, 0.02)
+            }
+        };
+
+        let emb = mat(&manifest.globals[0].1, 0.05);
+        let pos = mat(&manifest.globals[1].1, 0.05);
+        let lnf_g = Tensor::f32(
+            manifest.globals[2].1.clone(),
+            vec![1.0; manifest.globals[2].1.iter().product()],
+        );
+        let lnf_b = Tensor::zeros_f32(manifest.globals[3].1.clone());
+
+        let layers = (0..manifest.model.num_layers)
+            .map(|_| {
+                manifest
+                    .layer_weights
+                    .iter()
+                    .map(|(name, shape)| by_name(name, shape, &mut mat))
+                    .collect()
+            })
+            .collect();
+        Self {
+            emb,
+            pos,
+            lnf_g,
+            lnf_b,
+            layers,
+        }
+    }
+
+    /// Index of a named per-layer tensor (e.g. "wk") in the layer vectors.
+    pub fn layer_tensor_index(manifest: &Manifest, name: &str) -> Result<usize> {
+        manifest
+            .layer_weights
+            .iter()
+            .position(|(n, _)| n == name)
+            .with_context(|| format!("no layer weight named {name}"))
+    }
+
+    /// Total bytes of all weights (host copy).
+    pub fn total_bytes(&self) -> usize {
+        let globals = self.emb.bytes() + self.pos.bytes() + self.lnf_g.bytes() + self.lnf_b.bytes();
+        let layers: usize = self
+            .layers
+            .iter()
+            .map(|l| l.iter().map(|t| t.bytes()).sum::<usize>())
+            .sum();
+        globals + layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn golden_params_load_and_layout() {
+        let dir = art_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let w = WeightStore::from_params_bin(&m, &dir.join("golden/params.bin")).unwrap();
+        assert_eq!(w.layers.len(), m.model.num_layers);
+        assert_eq!(w.emb.shape(), &[m.model.vocab, m.model.hidden]);
+        // aot.py builds ln gammas as ones
+        let idx = WeightStore::layer_tensor_index(&m, "ln1_g").unwrap();
+        assert!(w.layers[0][idx].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        // wq is random gaussian, non-zero
+        let wq = WeightStore::layer_tensor_index(&m, "wq").unwrap();
+        assert!(w.layers[0][wq].as_f32().unwrap().iter().any(|&x| x != 0.0));
+        // total bytes match the config's accounting (f32)
+        let cfg_bytes = crate::config::ModelConfig {
+            dtype: crate::config::Dtype::F32,
+            ..m.model.clone()
+        };
+        assert_eq!(w.total_bytes(), cfg_bytes.total_weight_bytes());
+    }
+
+    #[test]
+    fn random_weights_deterministic() {
+        let dir = art_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let a = WeightStore::random(&m, 1);
+        let b = WeightStore::random(&m, 1);
+        let c = WeightStore::random(&m, 2);
+        assert_eq!(a.emb, b.emb);
+        assert_ne!(a.emb, c.emb);
+    }
+}

@@ -1,0 +1,274 @@
+//! TCP serving front-end: newline-delimited JSON requests over a socket,
+//! batched into the engine — the "router" face of the coordinator.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"id": 7, "prompt": [12, 99, ...], "max_new": 16}
+//!   response: {"id": 7, "tokens": [12, 99, ..., 101, 42]}
+//!   error:    {"id": 7, "error": "..."}
+//!
+//! The engine owns PJRT state that is not `Send`, so it lives on a
+//! dedicated serving thread; the acceptor forwards parsed requests over a
+//! channel and the serving loop drains the queue in batches (continuous
+//! batching at batch-window granularity).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Engine, EngineConfig, Request};
+use crate::util::Json;
+
+/// A queued request + where to send its response.
+struct Pending {
+    req: Request,
+    client_id: i64,
+    resp: Sender<String>,
+}
+
+/// Server handle: join/shutdown.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    serve_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and start serving requests with an
+    /// engine built from `artifact_dir` + `cfg` on the serving thread.
+    pub fn spawn(addr: &str, artifact_dir: PathBuf, cfg: EngineConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("binding server socket")?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel::<Pending>();
+
+        let stop_a = stop.clone();
+        let accept_thread = std::thread::spawn(move || accept_loop(listener, tx, stop_a));
+
+        let stop_s = stop.clone();
+        let serve_thread = std::thread::spawn(move || {
+            let engine = match Engine::new(&artifact_dir, cfg) {
+                Ok(e) => e,
+                Err(e) => {
+                    log::error!("engine construction failed: {e:#}");
+                    return;
+                }
+            };
+            serve_loop(engine, rx, stop_s);
+        });
+
+        Ok(Server {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            serve_thread: Some(serve_thread),
+        })
+    }
+
+    /// Signal shutdown and join the threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.serve_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: Sender<Pending>, stop: Arc<AtomicBool>) {
+    let mut next_internal: u64 = 1;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                let base = next_internal;
+                next_internal += 1 << 20; // id space per connection
+                std::thread::spawn(move || {
+                    let _ = connection_loop(stream, tx, base);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn connection_loop(stream: TcpStream, tx: Sender<Pending>, id_base: u64) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let (resp_tx, resp_rx) = channel::<String>();
+
+    // Writer thread: serialize responses back to this client.
+    let w = std::thread::spawn(move || {
+        for line in resp_rx {
+            if writer.write_all(line.as_bytes()).is_err() {
+                break;
+            }
+            let _ = writer.write_all(b"\n");
+            let _ = writer.flush();
+        }
+    });
+
+    let mut n = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line, id_base + n) {
+            Ok((req, client_id)) => {
+                n += 1;
+                if tx
+                    .send(Pending {
+                        req,
+                        client_id,
+                        resp: resp_tx.clone(),
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Err(e) => {
+                let err = Json::obj(vec![("error", Json::str(&format!("{e:#}")))]);
+                let _ = resp_tx.send(err.to_string());
+            }
+        }
+    }
+    drop(resp_tx);
+    let _ = w.join();
+    Ok(())
+}
+
+fn parse_request(line: &str, internal_id: u64) -> Result<(Request, i64)> {
+    let j = Json::parse(line).context("bad json")?;
+    let client_id = j.get("id").as_i64().unwrap_or(internal_id as i64);
+    let prompt: Vec<i32> = j
+        .get("prompt")
+        .as_arr()
+        .context("prompt must be an array")?
+        .iter()
+        .map(|v| v.as_i64().map(|x| x as i32))
+        .collect::<Option<_>>()
+        .context("prompt must be integers")?;
+    let max_new = j.get("max_new").as_usize().unwrap_or(16);
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    Ok((Request::new(internal_id, prompt, max_new), client_id))
+}
+
+fn serve_loop(mut engine: Engine, rx: Receiver<Pending>, stop: Arc<AtomicBool>) {
+    const MAX_BATCH: usize = 32;
+    while !stop.load(Ordering::SeqCst) {
+        // Block briefly for the first request, then drain a batch window.
+        let first = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(p) => p,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        while batch.len() < MAX_BATCH {
+            match rx.try_recv() {
+                Ok(p) => batch.push(p),
+                Err(_) => break,
+            }
+        }
+
+        let reqs: Vec<Request> = batch.iter().map(|p| p.req.clone()).collect();
+        match engine.serve(&reqs) {
+            Ok((completions, report)) => {
+                log::info!("served batch: {}", report.summary());
+                for (comp, pending) in completions.iter().zip(&batch) {
+                    let resp = Json::obj(vec![
+                        ("id", Json::num(pending.client_id as f64)),
+                        (
+                            "tokens",
+                            Json::arr(comp.tokens.iter().map(|&t| Json::num(t as f64))),
+                        ),
+                    ]);
+                    let _ = pending.resp.send(resp.to_string());
+                }
+            }
+            Err(e) => {
+                for pending in &batch {
+                    let resp = Json::obj(vec![
+                        ("id", Json::num(pending.client_id as f64)),
+                        ("error", Json::str(&format!("{e:#}"))),
+                    ]);
+                    let _ = pending.resp.send(resp.to_string());
+                }
+            }
+        }
+    }
+}
+
+/// Blocking client helper: send one request, wait for the response line.
+pub fn client_request(
+    addr: &std::net::SocketAddr,
+    id: i64,
+    prompt: &[i32],
+    max_new: usize,
+) -> Result<Vec<i32>> {
+    let mut stream = TcpStream::connect(addr).context("connect")?;
+    let req = Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t as f64)))),
+        ("max_new", Json::num(max_new as f64)),
+    ]);
+    stream.write_all(req.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(&line).context("bad response json")?;
+    if let Some(err) = j.get("error").as_str() {
+        anyhow::bail!("server error: {err}");
+    }
+    j.get("tokens")
+        .as_arr()
+        .context("missing tokens")?
+        .iter()
+        .map(|v| v.as_i64().map(|x| x as i32).context("bad token"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_roundtrip() {
+        let (req, cid) = parse_request(r#"{"id": 3, "prompt": [1,2,3], "max_new": 4}"#, 9).unwrap();
+        assert_eq!(cid, 3);
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.max_new, 4);
+        assert_eq!(req.id, 9);
+    }
+
+    #[test]
+    fn parse_request_defaults_and_errors() {
+        let (req, _) = parse_request(r#"{"prompt": [5]}"#, 1).unwrap();
+        assert_eq!(req.max_new, 16);
+        assert!(parse_request(r#"{"prompt": []}"#, 1).is_err());
+        assert!(parse_request(r#"{"prompt": "x"}"#, 1).is_err());
+        assert!(parse_request("not json", 1).is_err());
+    }
+}

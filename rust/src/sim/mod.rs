@@ -1,0 +1,557 @@
+//! Analytic full-scale simulator.
+//!
+//! Replays the paper's experiments at OPT-6.7B…66B scale on the modeled
+//! RTX 4090 testbed. The *policy* code (Algorithm 1, Eq. 11 ratios,
+//! bin-packing cost metric) is the same code the real engine runs; only
+//! the per-operation costs come from the [`SimCost`] roofline instead of
+//! PJRT measurements. Every simulated system schedules onto the same
+//! two-lane [`Timeline`], so throughput / utilization / traffic are
+//! directly comparable across systems — exactly how the paper's §5
+//! figures are framed.
+
+mod cost;
+
+pub use cost::SimCost;
+
+use crate::cache::BlockSizes;
+use crate::config::{ModelConfig, SystemConfig};
+use crate::pcie::{Dir, Interconnect, Lane, Timeline, TrafficClass};
+use crate::policy::{AllocationInputs, BlockRatio, CostModel, PolicyConfig};
+
+/// A uniform batched workload (the paper's evaluation shape: B identical
+/// requests, fixed prompt, fixed generation length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Workload {
+    pub batch: usize,
+    pub prompt: usize,
+    pub gen: usize,
+}
+
+/// Which serving system to simulate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum System {
+    /// HybridServe with the given policy switches (Fig. 15 ablations).
+    HybridServe(PolicyConfig),
+    /// FlexGen: KV-only cache, zig-zag scheduling, weights spill to host.
+    FlexGen,
+    /// DeepSpeed-Inference: KV-only, whole-batch (no mini-batching), batch
+    /// capped by GPU memory for intermediates.
+    DeepSpeedInference,
+    /// HybridServe-Act-Cache: activation cache only.
+    ActOnly,
+    /// KV-cache with a fraction of context recomputed from token IDs
+    /// (§3.2's token recomputation).
+    TokenRecompute(f64),
+    /// PowerInfer-like: sparsified weights (hot subset resident), CPU-GPU
+    /// hybrid attention, KV cache in host memory (Table 2).
+    PowerInfer,
+}
+
+/// Simulation outcome (paper metric set).
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub throughput: f64,
+    pub gen_throughput: f64,
+    pub makespan: f64,
+    pub prefill_secs: f64,
+    pub gpu_utilization: f64,
+    pub pcie_utilization: f64,
+    pub traffic: crate::pcie::TrafficCounter,
+    /// ACT share of context blocks the policy chose (introspection).
+    pub act_block_share: f64,
+    /// Mini-batch size used in the generation phase.
+    pub minibatch: usize,
+}
+
+/// Simulate `system` serving `wl` on `model` × `sys`.
+pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Workload) -> SimResult {
+    let cost = SimCost::new(model, sys);
+    let sizes = BlockSizes::new(model, sys.block_tokens);
+    let nl = model.num_layers;
+    let bt = sys.block_tokens;
+    let max_ctx = wl.prompt + wl.gen;
+    let blocks_per_req = max_ctx.div_ceil(bt);
+
+    // ---- resolve the ACT:KV designation ratio ------------------------
+    let (ratio, recompute_frac) = match system {
+        System::HybridServe(policy) => {
+            let cm = CostModel::analytic(model, sys);
+            let host_cache = sys
+                .host
+                .memory_bytes
+                .saturating_sub(model.total_weight_bytes());
+            let alloc = policy.allocate(&AllocationInputs {
+                cost: cm,
+                act_gpu_blocks: cost.gpu_act_block_capacity(),
+                host_cache_bytes: host_cache,
+                sizes,
+            });
+            (BlockRatio::new(alloc.act_blocks.max(1), alloc.kv_blocks), 0.0)
+        }
+        System::ActOnly => (BlockRatio::act_only(), 0.0),
+        System::FlexGen | System::DeepSpeedInference | System::PowerInfer => {
+            (BlockRatio::kv_only(), 0.0)
+        }
+        System::TokenRecompute(r) => (BlockRatio::kv_only(), r.clamp(0.0, 1.0)),
+    };
+    let (act_per_req, kv_per_req) = ratio.split(blocks_per_req);
+    let act_share = act_per_req as f64 / blocks_per_req as f64;
+
+    // ---- mini-batch size ----------------------------------------------
+    let minibatch = match system {
+        System::DeepSpeedInference => {
+            // No zig-zag/paging: the whole batch's KV cache plus prefill
+            // intermediates must stay resident in GPU memory, which is
+            // what caps DeepSpeed's batch size (§5.2).
+            let kv_per_req = model.num_layers * model.kv_bytes_per_layer(max_ctx);
+            let inter_per_req = wl.prompt * model.hidden * model.dtype.bytes() * 8;
+            ((sys.gpu_cache_budget() + sys.gpu_buffer_budget())
+                / (kv_per_req + inter_per_req).max(1))
+                .clamp(1, wl.batch)
+        }
+        _ => {
+            // Buffer-limited: per-layer shares of each request's blocks.
+            let kv_block_layer = sizes.per_layer_bytes(crate::cache::BlockKind::Kv, model);
+            let act_block_layer = sizes.per_layer_bytes(crate::cache::BlockKind::Act, model);
+            let caps = crate::policy::BinCaps::from_buffer_bytes(
+                sys.gpu_buffer_budget(),
+                kv_block_layer,
+                act_block_layer,
+            );
+            let mut mb = wl.batch;
+            if kv_per_req > 0 {
+                mb = mb.min(caps.kv_max / kv_per_req.max(1));
+            }
+            if act_per_req > 0 {
+                mb = mb.min(caps.act_max / act_per_req.max(1));
+            }
+            mb.max(1)
+        }
+    };
+    // DeepSpeed serves its capped batch to completion, then the next
+    // round from scratch; everyone else mini-batches within one pass.
+    let rounds = if matches!(system, System::DeepSpeedInference) {
+        wl.batch.div_ceil(minibatch)
+    } else {
+        1
+    };
+    let round_batch = if rounds > 1 { minibatch } else { wl.batch };
+    // Ragged chunking: the last mini-batch carries the remainder.
+    let chunk_sizes: Vec<usize> = {
+        let full = round_batch / minibatch;
+        let rem = round_batch % minibatch;
+        let mut v = vec![minibatch; full];
+        if rem > 0 {
+            v.push(rem);
+        }
+        v
+    };
+    // DeepSpeed keeps KV on the GPU: no KV PCIe traffic.
+    let kv_on_gpu = matches!(system, System::DeepSpeedInference);
+
+    // ---- GPU-resident ACT fraction ------------------------------------
+    let total_act_blocks = act_per_req * wl.batch;
+    let gpu_act_frac = if total_act_blocks == 0 {
+        0.0
+    } else {
+        (cost.gpu_act_block_capacity() as f64 / total_act_blocks as f64).min(1.0)
+    };
+
+    let mut tl = Timeline::new();
+    let mut ic = Interconnect::new(sys.interconnect.clone());
+
+    // PowerInfer adjustments: hot weights resident (stream less), cold
+    // attention assist on CPU (slower effective attention).
+    // DeepSpeed-Inference "offloads most of the weight parameters to host
+    // memory ... streaming, layer-granular" (§2.4): it streams the FULL
+    // layer each use rather than keeping a resident slice.
+    let weight_scale = match system {
+        System::PowerInfer => 0.3,
+        System::DeepSpeedInference => {
+            if cost.stream_frac > 0.0 {
+                1.0 / cost.stream_frac
+            } else {
+                0.0
+            }
+        }
+        _ => 1.0,
+    };
+    let cpu_attn_penalty = if system == System::PowerInfer { 2.0 } else { 1.0 };
+
+    // ==== prefill phase (zig-zag: weights once per layer, minibatches
+    // stream under them; DeepSpeed runs rounds of its capped batch) =====
+    let mut weight_ready = 0.0f64;
+    for _l in 0..nl {
+        let wbytes = (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+        let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
+        let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
+        let mut gpu_end = 0.0;
+        for &mb in &chunk_sizes {
+            let t_fwd = cost.layer_prefill_time(mb, wl.prompt) * cpu_attn_penalty;
+            let span = tl.schedule(Lane::Gpu, weight_ready, t_fwd);
+            gpu_end = span.end;
+        }
+        // store the produced context state to host
+        let kv_toks = if kv_on_gpu {
+            0
+        } else {
+            (kv_per_req.min(blocks_per_req) * bt * round_batch).min(wl.prompt * round_batch)
+        };
+        let act_toks = (act_per_req * bt) as f64 * round_batch as f64 * (1.0 - gpu_act_frac);
+        let kv_b = model.kv_bytes_per_layer(kv_toks);
+        let act_b = model.act_bytes_per_layer(act_toks as usize);
+        // d2h stores ride the full-duplex return path: they are accounted
+        // as traffic but do not contend with h2d loads on the timeline.
+        let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::KvStore, kv_b);
+        let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::ActStore, act_b);
+        let _ = gpu_end;
+        weight_ready = w_span.end;
+    }
+    let prefill_secs = tl.makespan();
+    let gpu_busy_prefill = tl.busy(Lane::Gpu);
+
+    // ==== generation phase ==============================================
+    for step in 0..wl.gen {
+        let ctx = wl.prompt + step;
+        let ctx_blocks = ctx.div_ceil(bt);
+        let (act_b_req, kv_b_req) = ratio.split(ctx_blocks);
+        // token recomputation: a slice of the KV context is re-prefilled
+        let recompute_toks_req = (ctx as f64 * recompute_frac) as usize;
+        let kv_toks_req =
+            (kv_b_req * bt).min(ctx).saturating_sub(recompute_toks_req);
+        let act_toks_req = (act_b_req * bt).min(ctx);
+
+        for _l in 0..nl {
+            // weights for this layer (streamed once per layer per step)
+            let wbytes =
+                (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+            let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
+            let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
+
+            for &mb in &chunk_sizes {
+                // PCIe: cache loads for this mini-batch's layer share
+                let kv_bytes = if kv_on_gpu {
+                    0
+                } else {
+                    model.kv_bytes_per_layer(kv_toks_req * mb)
+                };
+                let act_host_toks =
+                    (act_toks_req as f64 * mb as f64 * (1.0 - gpu_act_frac)) as usize;
+                let act_bytes = model.act_bytes_per_layer(act_host_toks);
+                let t_kv = ic.transfer_time(Dir::HostToDevice, TrafficClass::KvLoad, kv_bytes);
+                let t_act = ic.transfer_time(Dir::HostToDevice, TrafficClass::ActLoad, act_bytes);
+                let load_span = tl.schedule(Lane::PCIe, 0.0, t_kv + t_act);
+
+                // GPU: KV-Gen for ACT tokens + (token-recompute prefill) +
+                // the decode forward, gated on data + weights
+                let t_gen = cost.kv_gen_time(act_toks_req * mb);
+                let t_recompute = if recompute_toks_req > 0 {
+                    cost.layer_prefill_time(mb, recompute_toks_req)
+                } else {
+                    0.0
+                };
+                let t_fwd = cost.layer_forward_time(mb, 1, ctx) * cpu_attn_penalty;
+                let ready = load_span.end.max(weight_ready);
+                let g = tl.schedule(Lane::Gpu, ready, t_gen + t_recompute + t_fwd);
+
+                // store the new token's designated state
+                let new_act = matches!(system, System::HybridServe(_) | System::ActOnly)
+                    && act_share > 0.0;
+                let (kv_store_t, act_store_t) = if kv_on_gpu {
+                    (0, 0)
+                } else if new_act {
+                    (0, mb)
+                } else {
+                    (mb, 0)
+                };
+                let kv_sb = model.kv_bytes_per_layer(kv_store_t);
+                let act_sb = model.act_bytes_per_layer(act_store_t);
+                // full-duplex d2h: traffic only (see prefill note)
+                let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::KvStore, kv_sb);
+                let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::ActStore, act_sb);
+                let _ = g;
+            }
+            weight_ready = w_span.end;
+        }
+    }
+
+    // Generation-phase temporal utilization (what Fig. 14 plots: the
+    // decode pipeline is where FlexGen's GPU starves).
+    let gen_span = (tl.makespan() - prefill_secs).max(1e-12);
+    let gpu_util_gen = ((tl.busy(Lane::Gpu) - gpu_busy_prefill) / gen_span).clamp(0.0, 1.0);
+
+    // DeepSpeed rounds: the whole pipeline repeats per round.
+    let makespan = tl.makespan() * rounds as f64;
+    let prefill_secs = prefill_secs * rounds as f64;
+    let mut traffic = ic.traffic().clone();
+    for _ in 1..rounds {
+        let snapshot = ic.traffic().clone();
+        traffic.merge(&snapshot);
+    }
+
+    let total_tokens = (wl.prompt + wl.gen) * wl.batch;
+    let gen_tokens = wl.gen * wl.batch;
+    SimResult {
+        throughput: total_tokens as f64 / makespan,
+        gen_throughput: gen_tokens as f64 / (makespan - prefill_secs).max(1e-9),
+        makespan,
+        prefill_secs,
+        gpu_utilization: gpu_util_gen,
+        pcie_utilization: tl.utilization(Lane::PCIe),
+        traffic,
+        act_block_share: act_share,
+        minibatch,
+    }
+}
+
+/// Single-layer decode latency breakdown (Fig. 6): returns
+/// `(recompute_secs, forward_secs)` for token recomputation (`Tok`) and
+/// activation recomputation (`Act`) at the given batch/context.
+pub fn layer_breakdown(
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    batch: usize,
+    ctx: usize,
+) -> ((f64, f64), (f64, f64)) {
+    let cost = SimCost::new(model, sys);
+    let fwd = cost.layer_forward_time(batch, 1, ctx);
+    let tok_recompute = cost.layer_prefill_time(batch, ctx);
+    let act_recompute = cost.kv_gen_time(ctx * batch);
+    ((tok_recompute, fwd), (act_recompute, fwd))
+}
+
+/// Per-token generation latency with a fraction of the KV context
+/// recomputed from token IDs (Fig. 4), normalized to ratio = 0.
+pub fn token_recompute_latency_curve(
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    batch: usize,
+    ctx: usize,
+    ratios: &[f64],
+) -> Vec<f64> {
+    let wl = Workload {
+        batch,
+        prompt: ctx,
+        gen: 8,
+    };
+    let base = simulate(model, sys, System::TokenRecompute(0.0), wl);
+    let base_step = (base.makespan - base.prefill_secs) / wl.gen as f64;
+    ratios
+        .iter()
+        .map(|&r| {
+            let res = simulate(model, sys, System::TokenRecompute(r), wl);
+            ((res.makespan - res.prefill_secs) / wl.gen as f64) / base_step
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn testbed() -> SystemConfig {
+        SystemConfig::paper_testbed()
+    }
+
+    fn wl(batch: usize, prompt: usize) -> Workload {
+        Workload {
+            batch,
+            prompt,
+            gen: 32,
+        }
+    }
+
+    #[test]
+    fn hybrid_beats_flexgen_at_30b() {
+        // Fig. 12 headline: HybridServe > Act-only > FlexGen.
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let w = wl(128, 512);
+        let hybrid = simulate(&m, &s, System::HybridServe(PolicyConfig::full()), w);
+        let act = simulate(&m, &s, System::ActOnly, w);
+        let flex = simulate(&m, &s, System::FlexGen, w);
+        assert!(
+            hybrid.throughput > flex.throughput,
+            "hybrid {} !> flexgen {}",
+            hybrid.throughput,
+            flex.throughput
+        );
+        // At short context pure-ACT is near-optimal; the hybrid must be
+        // within noise of it (and wins outright at long context below).
+        assert!(
+            hybrid.throughput > 0.9 * act.throughput,
+            "hybrid {} way below act-only {}",
+            hybrid.throughput,
+            act.throughput
+        );
+        // Our idealized FlexGen overlaps transfers perfectly, so the
+        // measured gap is smaller than the paper's 2.19x over the real
+        // FlexGen implementation (see EXPERIMENTS.md fidelity notes).
+        let speedup = hybrid.throughput / flex.throughput;
+        assert!((1.1..6.0).contains(&speedup), "speedup {speedup}");
+
+        // Long-context point (the paper's Fig. 15 setting): recomputation
+        // saturates the GPU, so the balanced hybrid beats act-only.
+        let wl_long = Workload { batch: 128, prompt: 1920, gen: 64 };
+        let hybrid_l = simulate(&m, &s, System::HybridServe(PolicyConfig::full()), wl_long);
+        let act_l = simulate(&m, &s, System::ActOnly, wl_long);
+        assert!(
+            hybrid_l.throughput > act_l.throughput,
+            "long ctx: hybrid {} !> act-only {}",
+            hybrid_l.throughput,
+            act_l.throughput
+        );
+    }
+
+    #[test]
+    fn deepspeed_slowest() {
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let w = wl(128, 512);
+        let flex = simulate(&m, &s, System::FlexGen, w);
+        let ds = simulate(&m, &s, System::DeepSpeedInference, w);
+        assert!(
+            ds.throughput < flex.throughput,
+            "ds {} !< flexgen {}",
+            ds.throughput,
+            flex.throughput
+        );
+    }
+
+    #[test]
+    fn flexgen_throughput_saturates_with_batch() {
+        // Fig. 3a: linear growth early, saturation at large batch.
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let t = |b| simulate(&m, &s, System::FlexGen, wl(b, 512)).gen_throughput;
+        let t16 = t(16);
+        let t64 = t(64);
+        let t256 = t(256);
+        let t1024 = t(1024);
+        assert!(t64 > 2.0 * t16, "no early scaling: {t16} -> {t64}");
+        let late_gain = t1024 / t256;
+        assert!(late_gain < 1.5, "no saturation: {t256} -> {t1024}");
+    }
+
+    #[test]
+    fn kv_traffic_linear_in_batch() {
+        // Fig. 3b: KV transfer volume grows linearly with batch size.
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let vol = |b: usize| {
+            simulate(&m, &s, System::FlexGen, wl(b, 1024))
+                .traffic
+                .bytes(TrafficClass::KvLoad) as f64
+        };
+        let v16 = vol(16);
+        let v64 = vol(64);
+        assert!((v64 / v16 - 4.0).abs() < 0.3, "ratio {}", v64 / v16);
+    }
+
+    #[test]
+    fn hybrid_reduces_cache_traffic() {
+        // Fig. 13: HybridServe moves fewer cache bytes than FlexGen.
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let w = wl(64, 512);
+        let hybrid = simulate(&m, &s, System::HybridServe(PolicyConfig::full()), w);
+        let flex = simulate(&m, &s, System::FlexGen, w);
+        assert!(
+            hybrid.traffic.cache_load_total() < flex.traffic.cache_load_total(),
+            "hybrid {} !< flex {}",
+            hybrid.traffic.cache_load_total(),
+            flex.traffic.cache_load_total()
+        );
+    }
+
+    #[test]
+    fn hybrid_gpu_utilization_higher() {
+        // Fig. 14: HybridServe's GPU utilization well above FlexGen's.
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let w = wl(128, 512);
+        let hybrid = simulate(&m, &s, System::HybridServe(PolicyConfig::full()), w);
+        let flex = simulate(&m, &s, System::FlexGen, w);
+        assert!(
+            hybrid.gpu_utilization > 2.0 * flex.gpu_utilization,
+            "hybrid {} vs flex {}",
+            hybrid.gpu_utilization,
+            flex.gpu_utilization
+        );
+        // and FlexGen's decode-phase utilization is starved (paper: ~8%)
+        assert!(flex.gpu_utilization < 0.2, "flex util {}", flex.gpu_utilization);
+    }
+
+    #[test]
+    fn token_recompute_latency_rises_with_ratio() {
+        // Fig. 4: latency increases with the recomputation ratio.
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let curve = token_recompute_latency_curve(&m, &s, 64, 1024, &[0.0, 0.25, 0.5]);
+        assert!((curve[0] - 1.0).abs() < 1e-6);
+        assert!(curve[1] > 1.0);
+        assert!(curve[2] > curve[1]);
+        // The qualitative conclusion (recompute costs more than it saves)
+        // holds; our roofline makes it even steeper than the paper's
+        // 1.45x — see EXPERIMENTS.md fidelity notes.
+        assert!(curve[2] > 1.05, "50% ratio -> {}", curve[2]);
+    }
+
+    #[test]
+    fn act_recompute_much_cheaper_than_token_recompute() {
+        // Fig. 6: activation recomputation cuts single-layer latency vs
+        // token recomputation (paper: −78% geomean).
+        let m = ModelConfig::opt_30b();
+        let s = testbed();
+        let ((tok_r, fwd), (act_r, _)) = layer_breakdown(&m, &s, 64, 1024);
+        let tok_total = tok_r + fwd;
+        let act_total = act_r + fwd;
+        let saving = 1.0 - act_total / tok_total;
+        assert!(saving > 0.5, "saving only {saving}");
+    }
+
+    #[test]
+    fn powerinfer_also_saturates() {
+        // Table 2's shape: PowerInfer throughput saturates as batch grows.
+        let m = ModelConfig::llama2_70b();
+        let s = testbed();
+        let t = |b| simulate(&m, &s, System::PowerInfer, wl(b, 256)).gen_throughput;
+        let t1 = t(1);
+        let t64 = t(64);
+        let t1024 = t(1024);
+        assert!(t64 > 3.0 * t1, "no early scaling: {t1} -> {t64}");
+        // 16x more batch buys < 3x more throughput: diminishing returns
+        // from the growing KV traffic (Table 2's saturation shape).
+        assert!(t1024 / t64 < 3.0, "no saturation: {t64} -> {t1024}");
+    }
+
+    #[test]
+    fn property_sim_is_deterministic_and_sane() {
+        crate::util::prop::check("sim-sane", 30, |rng| {
+            let models = ModelConfig::paper_family();
+            let m = rng.choose(&models);
+            let s = testbed();
+            let w = Workload {
+                batch: rng.range(1, 257),
+                prompt: rng.range(16, 1921),
+                gen: rng.range(1, 65),
+            };
+            let sys = match rng.range(0, 5) {
+                0 => System::HybridServe(PolicyConfig::full()),
+                1 => System::FlexGen,
+                2 => System::DeepSpeedInference,
+                3 => System::ActOnly,
+                _ => System::TokenRecompute(rng.f64()),
+            };
+            let a = simulate(m, &s, sys, w);
+            let b = simulate(m, &s, sys, w);
+            assert_eq!(a.makespan, b.makespan);
+            assert!(a.makespan > 0.0);
+            assert!(a.throughput > 0.0);
+            assert!(a.gpu_utilization <= 1.0 + 1e-9);
+            assert!(a.pcie_utilization <= 1.0 + 1e-9);
+            assert!((0.0..=1.0).contains(&a.act_block_share));
+            assert!(a.minibatch >= 1 && a.minibatch <= w.batch);
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! In-crate infrastructure: JSON, PRNG, property-test harness, stats.
+//!
+//! These exist because the build is fully offline against a minimal
+//! vendored crate set (see .cargo/config.toml) — no serde, rand, proptest
+//! or criterion. Each piece is small, tested, and tailored to what the
+//! serving stack needs.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

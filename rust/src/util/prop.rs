@@ -1,0 +1,64 @@
+//! Tiny property-testing harness (the offline vendor set has no proptest).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! [`Rng`]s; on failure it reports the seed so the case replays with
+//! `check_seed`. Shrinking is out of scope — seeds are cheap to bisect by
+//! hand and every generator here is seed-deterministic.
+
+use super::rng::Rng;
+
+/// Run `f(rng)` for `cases` deterministic seeds; panic with the failing
+/// seed on the first falsified property.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(0xC0FFEE ^ seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' falsified at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (debugging aid).
+pub fn check_seed<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(0xC0FFEE ^ seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.range(0, 1000);
+            let b = rng.range(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn reports_failing_seed() {
+        check("always-small", 50, |rng| {
+            assert!(rng.range(0, 100) < 90);
+        });
+    }
+
+    #[test]
+    fn seeds_are_reproducible() {
+        let mut seen = Vec::new();
+        check("collect", 5, |rng| seen.push(rng.next_u64()));
+        let mut seen2 = Vec::new();
+        check("collect", 5, |rng| seen2.push(rng.next_u64()));
+        assert_eq!(seen, seen2);
+    }
+}

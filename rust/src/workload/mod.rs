@@ -1,0 +1,151 @@
+//! Synthetic workload generation (§5.1-style evaluation workloads).
+//!
+//! The paper evaluates uniform batches (B identical-length prompts, fixed
+//! generation budget). Real traces are not public, so the generators here
+//! produce (a) the paper's uniform sweeps and (b) mixed-length batches
+//! with Zipf-distributed token ids for the packing/scheduling tests —
+//! enough variance to exercise the dynamic mini-batch former.
+
+use crate::engine::Request;
+use crate::util::Rng;
+
+/// Generator for batches of generation requests.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    rng: Rng,
+    vocab: usize,
+    /// Zipf exponent for token ids (natural-language-ish skew).
+    pub zipf_s: f64,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, vocab: usize) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            vocab,
+            zipf_s: 1.1,
+            next_id: 0,
+        }
+    }
+
+    fn prompt(&mut self, len: usize) -> Vec<i32> {
+        (0..len)
+            .map(|_| self.rng.zipf(self.vocab, self.zipf_s) as i32)
+            .collect()
+    }
+
+    /// The paper's uniform batch: `batch` requests, all `prompt_len`
+    /// prompts, all generating `gen` tokens.
+    pub fn uniform(&mut self, batch: usize, prompt_len: usize, gen: usize) -> Vec<Request> {
+        (0..batch)
+            .map(|_| {
+                let id = self.next_id;
+                self.next_id += 1;
+                Request::new(id, self.prompt(prompt_len), gen)
+            })
+            .collect()
+    }
+
+    /// Mixed-length batch: prompt lengths uniform in `[lo, hi)`.
+    pub fn mixed(&mut self, batch: usize, lo: usize, hi: usize, gen: usize) -> Vec<Request> {
+        (0..batch)
+            .map(|_| {
+                let id = self.next_id;
+                self.next_id += 1;
+                let len = self.rng.range(lo, hi);
+                Request::new(id, self.prompt(len), gen)
+            })
+            .collect()
+    }
+
+    /// Trace-like batch: prompt lengths log-normally distributed (the
+    /// shape of real chat/serving traces — many short prompts, a long
+    /// tail), clamped to `[4, max_len]`; generation budget scales with a
+    /// second log-normal draw clamped to `[1, max_gen]`.
+    pub fn trace_like(
+        &mut self,
+        batch: usize,
+        median_prompt: usize,
+        max_len: usize,
+        max_gen: usize,
+    ) -> Vec<Request> {
+        let mu = (median_prompt as f64).ln();
+        (0..batch)
+            .map(|_| {
+                let id = self.next_id;
+                self.next_id += 1;
+                let len = (mu + 0.6 * self.rng.normal()).exp().round() as usize;
+                let len = len.clamp(4, max_len);
+                let gen = ((max_gen as f64 / 2.0).ln() + 0.5 * self.rng.normal())
+                    .exp()
+                    .round() as usize;
+                let gen = gen.clamp(1, max_gen);
+                Request::new(id, self.prompt(len), gen)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shape() {
+        let mut g = WorkloadGen::new(0, 2048);
+        let reqs = g.uniform(4, 16, 8);
+        assert_eq!(reqs.len(), 4);
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 16);
+            assert_eq!(r.max_new, 8);
+            assert!(r.prompt.iter().all(|&t| (0..2048).contains(&t)));
+        }
+        // ids unique and sequential
+        assert_eq!(reqs[0].id + 1, reqs[1].id);
+    }
+
+    #[test]
+    fn mixed_lengths_in_range() {
+        let mut g = WorkloadGen::new(1, 2048);
+        let reqs = g.mixed(32, 10, 50, 4);
+        assert!(reqs.iter().all(|r| (10..50).contains(&r.prompt.len())));
+        let lens: std::collections::HashSet<_> = reqs.iter().map(|r| r.prompt.len()).collect();
+        assert!(lens.len() > 3, "no length variety");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkloadGen::new(7, 100).uniform(2, 8, 1);
+        let b = WorkloadGen::new(7, 100).uniform(2, 8, 1);
+        assert_eq!(a[0].prompt, b[0].prompt);
+    }
+
+    #[test]
+    fn trace_like_has_long_tail_and_respects_bounds() {
+        let mut g = WorkloadGen::new(5, 2048);
+        let reqs = g.trace_like(200, 24, 128, 16);
+        assert!(reqs.iter().all(|r| (4..=128).contains(&r.prompt.len())));
+        assert!(reqs.iter().all(|r| (1..=16).contains(&r.max_new)));
+        let lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
+        let mut sorted = lens.clone();
+        sorted.sort();
+        let median = sorted[lens.len() / 2];
+        assert!((12..=48).contains(&median), "median {median}");
+        // long tail: max well above median
+        assert!(*sorted.last().unwrap() > 2 * median);
+    }
+
+    #[test]
+    fn zipf_tokens_are_skewed() {
+        let mut g = WorkloadGen::new(3, 1000);
+        let reqs = g.uniform(8, 64, 1);
+        let low = reqs
+            .iter()
+            .flat_map(|r| &r.prompt)
+            .filter(|&&t| t < 50)
+            .count();
+        let total = 8 * 64;
+        assert!(low > total / 4, "zipf skew missing: {low}/{total}");
+    }
+}

@@ -1,0 +1,253 @@
+//! Integration tests over the public API: the full serving stack
+//! (artifacts -> runtime -> engine -> server) plus cross-policy
+//! equivalence. These complement the module-level unit/property tests.
+
+use hybridserve::engine::{Engine, EngineConfig, Request};
+use hybridserve::policy::{BlockRatio, PolicyConfig};
+use hybridserve::runtime::default_artifact_dir;
+use hybridserve::server::{client_request, Server};
+use hybridserve::workload::WorkloadGen;
+
+fn have_artifacts() -> bool {
+    let ok = default_artifact_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn continuous_serving_two_batches_reuses_engine() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    let mut wg = WorkloadGen::new(0, engine.model().vocab);
+
+    let reqs1 = wg.uniform(3, 24, 6);
+    let (c1, r1) = engine.serve(&reqs1).unwrap();
+    assert_eq!(c1.len(), 3);
+    assert!(r1.generated_tokens == 18);
+
+    // Second batch on the same engine: block manager must be fully
+    // recycled (no leaked blocks, fresh timeline).
+    let reqs2 = wg.uniform(5, 16, 4);
+    let (c2, r2) = engine.serve(&reqs2).unwrap();
+    assert_eq!(c2.len(), 5);
+    assert_eq!(r2.generated_tokens, 20);
+    assert!(r2.makespan_secs > 0.0);
+}
+
+#[test]
+fn all_policies_agree_on_tokens_and_disagree_on_traffic() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut wg = WorkloadGen::new(7, 2048);
+    let reqs = wg.mixed(6, 12, 60, 6);
+
+    let mut results = Vec::new();
+    for (name, policy, ratio) in [
+        ("hybrid", PolicyConfig::full(), None),
+        ("act", PolicyConfig::act_only(), None),
+        ("kv", PolicyConfig::full(), Some(BlockRatio::kv_only())),
+        ("even-fcfs", PolicyConfig::hybrid_no_policies(), None),
+    ] {
+        let cfg = EngineConfig {
+            policy,
+            ..EngineConfig::default()
+        };
+        let mut engine = Engine::new(&default_artifact_dir(), cfg).unwrap();
+        if let Some(r) = ratio {
+            engine.set_ratio(r);
+        }
+        let (comps, report) = engine.serve(&reqs).unwrap();
+        results.push((name, comps, report));
+    }
+
+    // Token-level equivalence across all cache configurations: the
+    // paper's zero-accuracy-loss claim at system level.
+    let (base_name, base, _) = &results[0];
+    for (name, comps, _) in &results[1..] {
+        for (a, b) in base.iter().zip(comps) {
+            assert_eq!(a.tokens, b.tokens, "{base_name} vs {name}");
+        }
+    }
+    // But the traffic profiles must differ (they designate blocks
+    // differently).
+    let kv_traffic = results[2].2.traffic.cache_load_total();
+    let act_traffic = results[1].2.traffic.cache_load_total();
+    assert!(act_traffic < kv_traffic, "act {act_traffic} !< kv {kv_traffic}");
+}
+
+#[test]
+fn tcp_server_round_trip() {
+    if !have_artifacts() {
+        return;
+    }
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        default_artifact_dir(),
+        EngineConfig::default(),
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    // Two concurrent clients, request batching happens server-side.
+    let h: Vec<_> = (0..2)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let prompt: Vec<i32> = (0..10).map(|i| (c * 31 + i) as i32).collect();
+                client_request(&addr, c as i64, &prompt, 5).unwrap()
+            })
+        })
+        .collect();
+    for (c, handle) in h.into_iter().enumerate() {
+        let tokens = handle.join().unwrap();
+        assert_eq!(tokens.len(), 15);
+        assert_eq!(tokens[0], (c * 31) as i32);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn deterministic_across_engine_instances() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut wg = WorkloadGen::new(3, 2048);
+    let reqs = wg.uniform(2, 20, 8);
+    let serve = || {
+        let mut e = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+        let (c, _) = e.serve(&reqs).unwrap();
+        c.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+    };
+    assert_eq!(serve(), serve());
+}
+
+#[test]
+fn figures_pipeline_writes_csvs() {
+    // The figure regeneration path used by benches/examples: every table
+    // renders and round-trips to CSV.
+    let figs = hybridserve::figures::all_figures();
+    assert_eq!(figs.len(), 10, "one per paper table/figure");
+    for f in figs {
+        let path = f.write_csv().unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert!(content.lines().count() >= 2, "{} too small", f.name);
+    }
+}
+
+#[test]
+fn eos_token_stops_generation_early() {
+    if !have_artifacts() {
+        return;
+    }
+    // First find what token a request would emit, then set EOS to it.
+    let mut probe = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    let req = vec![Request::new(0, vec![5, 9, 14, 200], 6)];
+    let (comps, _) = probe.serve(&req).unwrap();
+    let second_tok = comps[0].generated()[1];
+
+    let cfg = EngineConfig {
+        eos: Some(second_tok),
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(&default_artifact_dir(), cfg).unwrap();
+    let (comps, _) = engine.serve(&req).unwrap();
+    assert!(
+        comps[0].generated().len() < 6,
+        "eos did not stop generation: {:?}",
+        comps[0].generated()
+    );
+    assert!(!comps[0].tokens.contains(&second_tok) || comps[0].generated().len() <= 2);
+}
+
+#[test]
+fn bucket_boundary_prompts() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    // Exactly on seq buckets (16, 32) and just over (17, 33); single-token
+    // prompt pads into the smallest bucket.
+    for plen in [1usize, 15, 16, 17, 32, 33, 128] {
+        let reqs = vec![Request::new(plen as u64, vec![7; plen], 3)];
+        let (comps, _) = engine
+            .serve(&reqs)
+            .unwrap_or_else(|e| panic!("prompt len {plen}: {e:#}"));
+        assert_eq!(comps[0].generated().len(), 3, "plen {plen}");
+    }
+}
+
+#[test]
+fn latency_metrics_are_monotone_and_bounded() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    let mut wg = WorkloadGen::new(11, 2048);
+    let reqs = wg.uniform(4, 24, 6);
+    let (comps, report) = engine.serve(&reqs).unwrap();
+    let summary = hybridserve::metrics::latency_summary(&comps);
+    assert!(summary.ttft_p50 > 0.0);
+    assert!(summary.ttft_p99 >= summary.ttft_p50);
+    assert!(summary.tbt_mean > 0.0);
+    for c in &comps {
+        // token emission times strictly ordered on the virtual timeline
+        for w in c.token_times.windows(2) {
+            assert!(w[1] > w[0], "token times not monotone: {:?}", c.token_times);
+        }
+        assert!(c.ttft <= c.latency());
+        assert!(c.latency() <= report.makespan_secs + 1e-9);
+        assert_eq!(c.token_times.len(), c.generated().len());
+    }
+}
+
+#[test]
+fn max_context_request_exactly_fits() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    let max = engine.model().max_context; // 256 = largest prefill bucket + gen
+    let plen = 128; // largest compiled prefill bucket
+    let reqs = vec![Request::new(0, vec![3; plen], max - plen)];
+    let (comps, _) = engine.serve(&reqs).unwrap();
+    assert_eq!(comps[0].tokens.len(), max);
+    // one past max context must be rejected up front
+    let too_big = vec![Request::new(1, vec![3; plen], max - plen + 1)];
+    assert!(engine.serve(&too_big).is_err());
+}
+
+#[test]
+fn duplicate_request_ids_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    let reqs = vec![
+        Request::new(7, vec![1, 2, 3, 4], 2),
+        Request::new(7, vec![5, 6, 7, 8], 2),
+    ];
+    assert!(engine.serve(&reqs).is_err());
+    // engine remains usable afterwards
+    let ok = vec![Request::new(1, vec![1, 2, 3, 4], 2)];
+    assert!(engine.serve(&ok).is_ok());
+}
+
+#[test]
+fn trace_like_workload_serves() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&default_artifact_dir(), EngineConfig::default()).unwrap();
+    let mut wg = WorkloadGen::new(9, 2048);
+    let reqs = wg.trace_like(6, 20, 100, 8);
+    let (comps, report) = engine.serve(&reqs).unwrap();
+    assert_eq!(comps.len(), 6);
+    for (c, r) in comps.iter().zip(&reqs) {
+        assert_eq!(c.generated().len(), r.max_new);
+    }
+    assert!(report.throughput > 0.0);
+}
