@@ -1,0 +1,67 @@
+//! Online serving benchmark: Poisson arrivals at three load levels
+//! through the continuous-batching scheduler, reporting goodput and p99
+//! TTFT (the §5-style metrics that matter once requests *arrive* instead
+//! of being handed over as one closed batch).
+//!
+//! Levels are expressed as arrival rates; the low level approximates an
+//! unloaded system, the high level saturates it so queueing (and, with a
+//! constrained host pool, ACT-demotion preemption) shows up in the tail.
+
+use hybridserve::engine::{Engine, EngineConfig};
+use hybridserve::harness::FigureTable;
+use hybridserve::metrics::SloSpec;
+use hybridserve::runtime::default_artifact_dir;
+use hybridserve::sched::{SchedConfig, Scheduler};
+use hybridserve::workload::WorkloadGen;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let mut t = FigureTable::new(
+        "online_serve_poisson",
+        &[
+            "rate_rps",
+            "completed",
+            "throughput_tok_s",
+            "goodput_tok_s",
+            "slo_attain",
+            "ttft_p50_s",
+            "ttft_p99_s",
+            "queue_p99_s",
+            "preemptions",
+        ],
+    );
+
+    for rate in [2.0, 10.0, 50.0] {
+        let engine = Engine::new(&dir, EngineConfig::default()).expect("engine");
+        let cfg = SchedConfig {
+            slo: SloSpec {
+                ttft_secs: 0.5,
+                tpot_secs: 0.1,
+            },
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::new(engine, cfg);
+        let mut wg = WorkloadGen::new(42, 2048);
+        let trace = wg.poisson(24, rate, 32, 64, 8);
+        sched.run_trace(trace).expect("serve trace");
+        let r = sched.report();
+        t.row(vec![
+            format!("{rate:.0}"),
+            r.completed.to_string(),
+            format!("{:.1}", r.throughput),
+            format!("{:.1}", r.goodput),
+            format!("{:.2}", r.slo_attainment),
+            format!("{:.4}", r.ttft_p50),
+            format!("{:.4}", r.ttft_p99),
+            format!("{:.4}", r.queue_p99),
+            r.preemptions.to_string(),
+        ]);
+        println!("rate {rate:>4.0}/s: {}", r.summary());
+    }
+    t.emit();
+}

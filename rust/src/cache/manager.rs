@@ -3,8 +3,6 @@
 
 use std::collections::HashMap;
 
-use thiserror::Error;
-
 use super::block::{BlockKind, BlockSizes, Location, PhysBlockId};
 use super::table::{BlockTable, LogicalBlock};
 use crate::memsim::{MemError, MemPool};
@@ -12,16 +10,40 @@ use crate::memsim::{MemError, MemPool};
 /// Request identifier (assigned by the batcher).
 pub type RequestId = u64;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CacheError {
-    #[error(transparent)]
-    Mem(#[from] MemError),
-    #[error("unknown request {0}")]
+    Mem(MemError),
     UnknownRequest(RequestId),
-    #[error("request {req}: logical block {idx} out of range")]
     BadLogicalIndex { req: RequestId, idx: usize },
-    #[error("request {0} already registered")]
     DuplicateRequest(RequestId),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::Mem(e) => write!(f, "{e}"),
+            CacheError::UnknownRequest(r) => write!(f, "unknown request {r}"),
+            CacheError::BadLogicalIndex { req, idx } => {
+                write!(f, "request {req}: logical block {idx} out of range")
+            }
+            CacheError::DuplicateRequest(r) => write!(f, "request {r} already registered"),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CacheError::Mem(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<MemError> for CacheError {
+    fn from(e: MemError) -> Self {
+        CacheError::Mem(e)
+    }
 }
 
 /// Aggregate occupancy snapshot (drives policy decisions + Fig. 13/15).
@@ -38,6 +60,40 @@ pub struct CacheStats {
 impl CacheStats {
     pub fn total_blocks(&self) -> usize {
         self.kv_blocks_host + self.kv_blocks_gpu + self.act_blocks_host + self.act_blocks_gpu
+    }
+}
+
+/// Record of a KV→ACT demotion (the scheduler's preemption primitive):
+/// which logical blocks were converted and the net byte effect per tier.
+///
+/// Demotion turns a request's KV blocks into host-resident ACT blocks —
+/// exactly half the bytes — so its context survives as activation
+/// checkpoints that the KV-Gen path can recompute from, while the freed
+/// capacity admits new work. The online scheduler treats demotion as
+/// permanent (the victim migrates to the ACT tier — that is what keeps
+/// its admission reservations sound); [`BlockManager::restore_demotion`]
+/// is the inverse for policies that re-designate KV when capacity
+/// returns, and anchors the round-trip property tests below.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DemotionReceipt {
+    pub req: RequestId,
+    /// (logical index, original location) of each block that was KV.
+    pub demoted: Vec<(usize, Location)>,
+    /// Net bytes freed in the GPU pool (KV blocks that lived on GPU).
+    pub gpu_freed: usize,
+    /// Net host-pool byte change: positive = freed. Negative when GPU KV
+    /// blocks landed on the host as ACT (the host pool grew).
+    pub host_delta: isize,
+}
+
+impl DemotionReceipt {
+    /// Host bytes actually freed (0 if the host pool grew).
+    pub fn host_freed(&self) -> usize {
+        self.host_delta.max(0) as usize
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.demoted.len()
     }
 }
 
@@ -86,6 +142,14 @@ impl BlockManager {
 
     pub fn host_free(&self) -> usize {
         self.host.free()
+    }
+
+    pub fn gpu_capacity(&self) -> usize {
+        self.gpu.capacity()
+    }
+
+    pub fn host_capacity(&self) -> usize {
+        self.host.capacity()
     }
 
     /// How many more blocks of `kind` fit at `location` right now.
@@ -190,6 +254,151 @@ impl BlockManager {
         self.tables.get_mut(&req).unwrap().get_mut(idx).unwrap().location = location;
         self.bump_stats(kind, old_loc, -1, -(bytes as isize));
         self.bump_stats(kind, location, 1, bytes as isize);
+        Ok(())
+    }
+
+    /// Demote logical block `idx` of `req` from KV to a host-resident ACT
+    /// block (byte-exact: releases `kv_bytes`, allocates `act_bytes` on
+    /// the host). ACT blocks are left untouched (`Ok(false)`).
+    ///
+    /// The conversion is data-free on purpose: the engine retains every
+    /// token's activation row regardless of designation, so flipping the
+    /// block table entry is all a preemption costs — the paper's KV-Gen
+    /// recompute path restores K/V on the next decode step touching it.
+    pub fn demote_block(&mut self, req: RequestId, idx: usize) -> Result<bool, CacheError> {
+        let (kind, old_loc) = {
+            let table = self.tables.get(&req).ok_or(CacheError::UnknownRequest(req))?;
+            let b = table
+                .get(idx)
+                .ok_or(CacheError::BadLogicalIndex { req, idx })?;
+            (b.kind, b.location)
+        };
+        if kind == BlockKind::Act {
+            return Ok(false);
+        }
+        let kv_b = self.sizes.kv_bytes;
+        let act_b = self.sizes.act_bytes;
+        match old_loc {
+            Location::Host => {
+                // An ACT block is strictly smaller than the KV block being
+                // released, so release-then-alloc cannot fail.
+                self.host.release(kv_b).expect("accounting");
+                self.host
+                    .alloc(act_b)
+                    .expect("ACT block fits in the KV block just released");
+            }
+            Location::Gpu => {
+                // Host must take the ACT copy; fail atomically if it is full.
+                self.host.alloc(act_b)?;
+                self.gpu.release(kv_b).expect("accounting");
+            }
+        }
+        let b = self.tables.get_mut(&req).unwrap().get_mut(idx).unwrap();
+        b.kind = BlockKind::Act;
+        b.location = Location::Host;
+        self.bump_stats(BlockKind::Kv, old_loc, -1, -(kv_b as isize));
+        self.bump_stats(BlockKind::Act, Location::Host, 1, act_b as isize);
+        Ok(true)
+    }
+
+    /// Demote every KV block of `req` to host ACT blocks. Returns the
+    /// receipt needed to [`Self::restore_demotion`] later. No-op receipt
+    /// (empty `demoted`) when the request holds no KV blocks.
+    pub fn demote_request_to_act(&mut self, req: RequestId) -> Result<DemotionReceipt, CacheError> {
+        let kv_idx: Vec<(usize, Location)> = self
+            .tables
+            .get(&req)
+            .ok_or(CacheError::UnknownRequest(req))?
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.kind == BlockKind::Kv)
+            .map(|(i, b)| (i, b.location))
+            .collect();
+        let kv_b = self.sizes.kv_bytes as isize;
+        let act_b = self.sizes.act_bytes as isize;
+        let mut receipt = DemotionReceipt {
+            req,
+            ..DemotionReceipt::default()
+        };
+        for &(idx, loc) in &kv_idx {
+            self.demote_block(req, idx)?;
+            receipt.demoted.push((idx, loc));
+            match loc {
+                Location::Host => receipt.host_delta += kv_b - act_b,
+                Location::Gpu => {
+                    receipt.gpu_freed += kv_b as usize;
+                    receipt.host_delta -= act_b;
+                }
+            }
+        }
+        Ok(receipt)
+    }
+
+    /// Re-designate the blocks in `receipt` back to KV at their original
+    /// locations. Fails atomically (before mutating anything) when the
+    /// pools cannot take the KV bytes back.
+    pub fn restore_demotion(&mut self, receipt: &DemotionReceipt) -> Result<(), CacheError> {
+        let req = receipt.req;
+        // Validate every entry is still a host ACT block.
+        {
+            let table = self.tables.get(&req).ok_or(CacheError::UnknownRequest(req))?;
+            for &(idx, _) in &receipt.demoted {
+                let b = table
+                    .get(idx)
+                    .ok_or(CacheError::BadLogicalIndex { req, idx })?;
+                if b.kind != BlockKind::Act || b.location != Location::Host {
+                    return Err(CacheError::BadLogicalIndex { req, idx });
+                }
+            }
+        }
+        let kv_b = self.sizes.kv_bytes;
+        let act_b = self.sizes.act_bytes;
+        // Capacity precheck: applying entries one-by-one only ever grows
+        // usage toward the final state, so the aggregate check suffices.
+        let gpu_needed: usize = receipt
+            .demoted
+            .iter()
+            .filter(|(_, loc)| *loc == Location::Gpu)
+            .count()
+            * kv_b;
+        let host_kv: usize = receipt
+            .demoted
+            .iter()
+            .filter(|(_, loc)| *loc == Location::Host)
+            .count()
+            * kv_b;
+        let host_released = receipt.demoted.len() * act_b;
+        if gpu_needed > self.gpu.free() {
+            return Err(CacheError::Mem(MemError::OutOfMemory {
+                pool: "gpu-cache",
+                requested: gpu_needed,
+                free: self.gpu.free(),
+            }));
+        }
+        if host_kv > self.host.free() + host_released {
+            return Err(CacheError::Mem(MemError::OutOfMemory {
+                pool: "host-cache",
+                requested: host_kv - host_released.min(host_kv),
+                free: self.host.free(),
+            }));
+        }
+        // Apply GPU-bound entries first: they only shrink host usage, so
+        // the host-bound entries that follow climb monotonically to the
+        // prechecked final state (no transient overshoot).
+        let ordered = receipt
+            .demoted
+            .iter()
+            .filter(|(_, loc)| *loc == Location::Gpu)
+            .chain(receipt.demoted.iter().filter(|(_, loc)| *loc == Location::Host));
+        for &(idx, loc) in ordered {
+            self.host.release(act_b).expect("accounting");
+            self.pool_mut(loc).alloc(kv_b).expect("prechecked capacity");
+            let b = self.tables.get_mut(&req).unwrap().get_mut(idx).unwrap();
+            b.kind = BlockKind::Kv;
+            b.location = loc;
+            self.bump_stats(BlockKind::Act, Location::Host, -1, -(act_b as isize));
+            self.bump_stats(BlockKind::Kv, loc, 1, kv_b as isize);
+        }
         Ok(())
     }
 
@@ -353,6 +562,166 @@ mod tests {
                 assert!(s.gpu_bytes <= 4 << 20);
                 assert!(s.host_bytes <= 16 << 20);
             }
+        });
+    }
+
+    // ---- KV→ACT demotion (the scheduler's preemption primitive) --------
+
+    /// Build a random multi-request population; returns the live ids.
+    fn random_population(m: &mut BlockManager, rng: &mut crate::util::Rng) -> Vec<u64> {
+        let nreq = rng.range(1, 5) as u64;
+        for r in 0..nreq {
+            m.register(r).unwrap();
+        }
+        for _ in 0..rng.range(5, 60) {
+            let r = rng.range(0, nreq as usize) as u64;
+            let kind = if rng.f64() < 0.5 { BlockKind::Kv } else { BlockKind::Act };
+            let loc = if rng.f64() < 0.3 { Location::Gpu } else { Location::Host };
+            let _ = m.append_block(r, kind, loc, rng.range(1, 17));
+        }
+        (0..nreq).collect()
+    }
+
+    fn census_bytes(m: &BlockManager, ids: &[u64]) -> (usize, usize) {
+        let sizes = m.sizes();
+        let (mut gpu, mut host) = (0usize, 0usize);
+        for &r in ids {
+            for b in m.table(r).unwrap().iter() {
+                let bytes = sizes.bytes(b.kind);
+                match b.location {
+                    Location::Gpu => gpu += bytes,
+                    Location::Host => host += bytes,
+                }
+            }
+        }
+        (gpu, host)
+    }
+
+    #[test]
+    fn demote_block_converts_and_halves_bytes() {
+        let mut m = mgr();
+        m.register(1).unwrap();
+        m.append_block(1, BlockKind::Kv, Location::Host, 16).unwrap();
+        let h0 = m.host_free();
+        assert!(m.demote_block(1, 0).unwrap());
+        let b = *m.table(1).unwrap().get(0).unwrap();
+        assert_eq!(b.kind, BlockKind::Act);
+        assert_eq!(b.location, Location::Host);
+        assert_eq!(b.filled, 16);
+        assert_eq!(m.host_free(), h0 + m.sizes().kv_bytes - m.sizes().act_bytes);
+        // ACT blocks are left alone
+        assert!(!m.demote_block(1, 0).unwrap());
+        assert!(m.demote_block(1, 9).is_err());
+    }
+
+    #[test]
+    fn demote_gpu_kv_fails_atomically_when_host_is_full() {
+        let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+        let mut m = BlockManager::new(sizes, 4 << 20, sizes.kv_bytes);
+        m.register(1).unwrap();
+        m.append_block(1, BlockKind::Kv, Location::Gpu, 16).unwrap();
+        m.append_block(1, BlockKind::Kv, Location::Host, 16).unwrap(); // host now full
+        let before = m.stats();
+        assert!(matches!(m.demote_block(1, 0), Err(CacheError::Mem(_))));
+        assert_eq!(m.stats(), before);
+        assert_eq!(m.table(1).unwrap().get(0).unwrap().kind, BlockKind::Kv);
+    }
+
+    #[test]
+    fn restore_fails_atomically_without_capacity() {
+        let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+        let mut m = BlockManager::new(sizes, sizes.kv_bytes, 8 << 20);
+        m.register(1).unwrap();
+        m.append_block(1, BlockKind::Kv, Location::Gpu, 16).unwrap();
+        let receipt = m.demote_request_to_act(1).unwrap();
+        assert_eq!(receipt.gpu_freed, sizes.kv_bytes);
+        // Occupy the GPU slot the restore would need.
+        m.register(2).unwrap();
+        m.append_block(2, BlockKind::Kv, Location::Gpu, 16).unwrap();
+        let before = m.stats();
+        assert!(matches!(m.restore_demotion(&receipt), Err(CacheError::Mem(_))));
+        assert_eq!(m.stats(), before);
+        // Free the slot; restore now succeeds and returns the block to GPU.
+        m.free_request(2).unwrap();
+        m.restore_demotion(&receipt).unwrap();
+        let b = *m.table(1).unwrap().get(0).unwrap();
+        assert_eq!((b.kind, b.location), (BlockKind::Kv, Location::Gpu));
+    }
+
+    #[test]
+    fn property_demotion_preserves_pool_bytes_invariant() {
+        crate::util::prop::check("demote-invariant", 100, |rng| {
+            let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+            let mut m = BlockManager::new(sizes, 4 << 20, 32 << 20);
+            let ids = random_population(&mut m, rng);
+            let victim = *rng.choose(&ids);
+            let kv_before = m.table(victim).unwrap().count_kind(BlockKind::Kv);
+            let tokens_before = m.table(victim).unwrap().tokens();
+            let (g0, h0) = census_bytes(&m, &ids);
+            let receipt = m.demote_request_to_act(victim).unwrap();
+            // Census and byte accounting stay in lockstep.
+            let (g1, h1) = census_bytes(&m, &ids);
+            let s = m.stats();
+            assert_eq!(s.gpu_bytes, g1);
+            assert_eq!(s.host_bytes, h1);
+            assert_eq!(m.gpu_free(), (4 << 20) - g1);
+            assert_eq!(m.host_free(), (32 << 20) - h1);
+            // The receipt reports the exact deltas.
+            assert_eq!(receipt.blocks(), kv_before);
+            assert_eq!(g0 - g1, receipt.gpu_freed);
+            assert_eq!(h0 as isize - h1 as isize, receipt.host_delta);
+            // No KV blocks remain; token coverage is untouched.
+            assert_eq!(m.table(victim).unwrap().count_kind(BlockKind::Kv), 0);
+            assert_eq!(m.table(victim).unwrap().tokens(), tokens_before);
+        });
+    }
+
+    #[test]
+    fn property_demote_restore_roundtrips_block_table() {
+        crate::util::prop::check("demote-restore-roundtrip", 100, |rng| {
+            let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+            let mut m = BlockManager::new(sizes, 8 << 20, 32 << 20);
+            let ids = random_population(&mut m, rng);
+            let victim = *rng.choose(&ids);
+            let snapshot: Vec<LogicalBlock> =
+                m.table(victim).unwrap().iter().copied().collect();
+            let stats_before = m.stats();
+            let receipt = m.demote_request_to_act(victim).unwrap();
+            m.restore_demotion(&receipt).unwrap();
+            let restored: Vec<LogicalBlock> =
+                m.table(victim).unwrap().iter().copied().collect();
+            assert_eq!(snapshot, restored, "block table did not round-trip");
+            assert_eq!(m.stats(), stats_before);
+        });
+    }
+
+    #[test]
+    fn property_demote_then_free_releases_exact_footprint() {
+        crate::util::prop::check("demote-free-exact", 100, |rng| {
+            let sizes = BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+            let mut m = BlockManager::new(sizes, 4 << 20, 32 << 20);
+            let ids = random_population(&mut m, rng);
+            let victim = *rng.choose(&ids);
+            // Pre-demotion footprint of the victim, per tier.
+            let (mut fg, mut fh) = (0usize, 0usize);
+            for b in m.table(victim).unwrap().iter() {
+                match b.location {
+                    Location::Gpu => fg += sizes.bytes(b.kind),
+                    Location::Host => fh += sizes.bytes(b.kind),
+                }
+            }
+            let (g_free0, h_free0) = (m.gpu_free(), m.host_free());
+            m.demote_request_to_act(victim).unwrap();
+            m.free_request(victim).unwrap();
+            // Demote-then-free must release exactly what the request held
+            // before demotion — the ACT intermediates all cancel out.
+            assert_eq!(m.gpu_free(), g_free0 + fg);
+            assert_eq!(m.host_free(), h_free0 + fh);
+            // Remaining population is untouched.
+            let rest: Vec<u64> = ids.iter().copied().filter(|&r| r != victim).collect();
+            let (g, h) = census_bytes(&m, &rest);
+            assert_eq!(m.stats().gpu_bytes, g);
+            assert_eq!(m.stats().host_bytes, h);
         });
     }
 }

@@ -11,11 +11,16 @@
 //! ACT blocks are preferentially placed in GPU memory (they are smaller
 //! and feed recomputation directly); KV blocks normally live in host
 //! memory and stream over PCIe (§4.2.1).
+//!
+//! The manager also implements KV→ACT *demotion* — the byte-exact
+//! re-designation of a request's KV blocks as host ACT checkpoints that
+//! the online scheduler uses as its preemption primitive (see
+//! DESIGN.md §Scheduling).
 
 mod block;
 mod manager;
 mod table;
 
 pub use block::{BlockKind, BlockSizes, Location, PhysBlockId};
-pub use manager::{BlockManager, CacheError, CacheStats};
+pub use manager::{BlockManager, CacheError, CacheStats, DemotionReceipt};
 pub use table::{BlockTable, LogicalBlock};

@@ -77,6 +77,17 @@ pub struct ReqState {
     pub k: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
     pub done: bool,
+    /// Paused by the scheduler (preempted): excluded from prefill/decode
+    /// until resumed. Cache blocks and model state are retained.
+    pub paused: bool,
+    /// KV blocks were demoted to ACT checkpoints (preemption). All
+    /// subsequent blocks are designated ACT: the request has been moved
+    /// to the activation-cache tier, which is what lets the scheduler's
+    /// admission reservations stay sound after a demotion.
+    pub demoted: bool,
+    /// Completion already returned by a `step()` call (prevents double
+    /// reporting across steps).
+    pub reported: bool,
     /// Virtual-timeline emission time of each generated token.
     pub token_times: Vec<f64>,
 }
@@ -92,6 +103,9 @@ impl ReqState {
             k: vec![Vec::new(); num_layers],
             v: vec![Vec::new(); num_layers],
             done: false,
+            paused: false,
+            demoted: false,
+            reported: false,
             token_times: Vec::new(),
         }
     }

@@ -16,7 +16,24 @@
 //! - [`util`] — offline-build substrates: JSON, PRNG, stats, prop-testing
 //! - [`memsim`] — GPU/host capacity accounting
 //! - [`pcie`] — interconnect model, traffic classes, two-lane timeline
-//! - [`cache`] — hybrid KV/ACT block manager (PagedAttention-style)
+//! - [`cache`] — hybrid KV/ACT block manager (PagedAttention-style),
+//!   including KV→ACT demotion (the preemption primitive)
+//! - [`policy`] — Algorithm 1 host allocation, Eq. 11 ratio upkeep,
+//!   dynamic mini-batch packing, the sampled linear cost model (Fig. 11)
+//! - [`runtime`] — PJRT client wrapper, artifact manifest, weights,
+//!   tensors (the only module that touches XLA)
+//! - [`engine`] — prefill/decode execution with the hybrid cache; exposes
+//!   the step-wise `admit`/`step`/`retire` API and closed-batch `serve`
+//! - [`sched`] — online serving scheduler: admission queue, continuous
+//!   batching, ACT-demotion preemption under memory pressure
+//! - [`workload`] — synthetic batches + timed arrival traces (Poisson,
+//!   bursty on/off, deterministic replay)
+//! - [`metrics`] — offline serve reports and the online `SloReport`
+//!   (TTFT/TPOT percentiles, queue time, goodput under SLO)
+//! - [`server`] — TCP front-end driving the scheduler loop
+//! - [`sim`] — full-scale analytic simulator (paper-figure workloads)
+//! - [`figures`] — table/figure regeneration used by benches and tests
+//! - [`harness`] — timing/CSV bench harness (no criterion offline)
 
 pub mod cache;
 pub mod config;
@@ -28,6 +45,7 @@ pub mod metrics;
 pub mod pcie;
 pub mod policy;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod sim;
 pub mod util;

@@ -7,24 +7,39 @@
 //! failure on oversubscription — the same arithmetic Algorithm 1 does over
 //! `M_Host - S_weight`.
 
-use thiserror::Error;
-
 /// Out-of-memory style failures surfaced to the allocator/policy.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum MemError {
-    #[error("{pool}: out of memory (requested {requested} B, free {free} B)")]
     OutOfMemory {
         pool: &'static str,
         requested: usize,
         free: usize,
     },
-    #[error("{pool}: freeing {requested} B but only {used} B in use")]
     Underflow {
         pool: &'static str,
         requested: usize,
         used: usize,
     },
 }
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemError::OutOfMemory {
+                pool,
+                requested,
+                free,
+            } => write!(f, "{pool}: out of memory (requested {requested} B, free {free} B)"),
+            MemError::Underflow {
+                pool,
+                requested,
+                used,
+            } => write!(f, "{pool}: freeing {requested} B but only {used} B in use"),
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
 
 /// A named, fixed-capacity memory pool with byte-exact accounting.
 #[derive(Debug, Clone)]

@@ -1,5 +1,8 @@
 //! Serving metrics: throughput, utilization, traffic — the quantities the
-//! paper's evaluation section reports (§5.1 "Evaluation metrics").
+//! paper's evaluation section reports (§5.1 "Evaluation metrics") — plus
+//! the online-serving report ([`SloReport`]) produced by the
+//! [`crate::sched`] scheduler: TTFT/TPOT percentiles measured from
+//! *arrival*, queue time, queue depth, and goodput under an SLO.
 
 use crate::engine::Completion;
 use crate::pcie::{Lane, Timeline, TrafficCounter};
@@ -126,6 +129,199 @@ pub fn latency_summary(completions: &[Completion]) -> LatencySummary {
     }
 }
 
+// ----------------------------------------------------------------------
+// Online serving metrics (the scheduler's report)
+// ----------------------------------------------------------------------
+
+/// Latency service-level objective for online serving: a request meets
+/// the SLO when its TTFT (from arrival) and its mean TPOT both stay
+/// under the thresholds. Virtual-timeline seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub ttft_secs: f64,
+    pub tpot_secs: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        Self {
+            ttft_secs: 5.0,
+            tpot_secs: 1.0,
+        }
+    }
+}
+
+/// Per-request lifecycle timestamps recorded by the scheduler, all on the
+/// virtual timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestTiming {
+    /// When the request arrived (trace timestamp or submit time).
+    pub arrival: f64,
+    /// When the scheduler admitted it into the engine.
+    pub admitted: f64,
+    /// When its first generated token was emitted.
+    pub first_token: f64,
+    /// When its last token was emitted.
+    pub finished: f64,
+    /// Tokens generated.
+    pub generated: usize,
+}
+
+impl RequestTiming {
+    /// Seconds spent waiting in the admission queue.
+    pub fn queue_secs(&self) -> f64 {
+        (self.admitted - self.arrival).max(0.0)
+    }
+
+    /// Time-To-First-Token measured from arrival (what the user feels).
+    pub fn ttft(&self) -> f64 {
+        (self.first_token - self.arrival).max(0.0)
+    }
+
+    /// Mean Time-Per-Output-Token over the generation (0 for single-token
+    /// completions).
+    pub fn tpot(&self) -> f64 {
+        if self.generated < 2 {
+            0.0
+        } else {
+            (self.finished - self.first_token).max(0.0) / (self.generated - 1) as f64
+        }
+    }
+
+    /// End-to-end latency from arrival to last token.
+    pub fn e2e(&self) -> f64 {
+        (self.finished - self.arrival).max(0.0)
+    }
+
+    /// Does this request meet `slo`?
+    pub fn meets(&self, slo: &SloSpec) -> bool {
+        self.ttft() <= slo.ttft_secs && self.tpot() <= slo.tpot_secs
+    }
+}
+
+/// Outcome of an online serving run.
+#[derive(Debug, Clone, Default)]
+pub struct SloReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub generated_tokens: usize,
+    /// Virtual seconds from scheduler start to the last event.
+    pub makespan_secs: f64,
+    /// Admission-queue wait (seconds).
+    pub queue_mean: f64,
+    pub queue_p50: f64,
+    pub queue_p95: f64,
+    pub queue_p99: f64,
+    pub queue_max: f64,
+    /// TTFT from arrival (seconds).
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    /// TPOT (seconds per output token).
+    pub tpot_p50: f64,
+    pub tpot_p95: f64,
+    pub tpot_p99: f64,
+    /// End-to-end latency from arrival (seconds).
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+    /// Admission-queue depth sampled once per scheduler tick.
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    /// ACT-demotion preemptions performed.
+    pub preemptions: usize,
+    /// Generated tokens per virtual second.
+    pub throughput: f64,
+    /// Generated tokens per virtual second counting only SLO-satisfying
+    /// requests — the metric that actually degrades under overload.
+    pub goodput: f64,
+    /// Fraction of completed requests meeting the SLO.
+    pub slo_attainment: f64,
+}
+
+impl SloReport {
+    pub fn from_timings(
+        submitted: usize,
+        timings: &[RequestTiming],
+        slo: &SloSpec,
+        makespan_secs: f64,
+        preemptions: usize,
+        queue_depth_samples: &[usize],
+    ) -> Self {
+        let queues: Vec<f64> = timings.iter().map(|t| t.queue_secs()).collect();
+        let ttfts: Vec<f64> = timings.iter().map(|t| t.ttft()).collect();
+        let tpots: Vec<f64> = timings.iter().map(|t| t.tpot()).collect();
+        let lats: Vec<f64> = timings.iter().map(|t| t.e2e()).collect();
+        let generated_tokens: usize = timings.iter().map(|t| t.generated).sum();
+        let good_tokens: usize = timings
+            .iter()
+            .filter(|t| t.meets(slo))
+            .map(|t| t.generated)
+            .sum();
+        let met = timings.iter().filter(|t| t.meets(slo)).count();
+        let per_sec = |tokens: usize| {
+            if makespan_secs > 0.0 {
+                tokens as f64 / makespan_secs
+            } else {
+                0.0
+            }
+        };
+        Self {
+            submitted,
+            completed: timings.len(),
+            generated_tokens,
+            makespan_secs,
+            queue_mean: crate::util::stats::mean(&queues),
+            queue_p50: percentile(&queues, 50.0),
+            queue_p95: percentile(&queues, 95.0),
+            queue_p99: percentile(&queues, 99.0),
+            queue_max: queues.iter().cloned().fold(0.0, f64::max),
+            ttft_p50: percentile(&ttfts, 50.0),
+            ttft_p95: percentile(&ttfts, 95.0),
+            ttft_p99: percentile(&ttfts, 99.0),
+            tpot_p50: percentile(&tpots, 50.0),
+            tpot_p95: percentile(&tpots, 95.0),
+            tpot_p99: percentile(&tpots, 99.0),
+            latency_p50: percentile(&lats, 50.0),
+            latency_p95: percentile(&lats, 95.0),
+            latency_p99: percentile(&lats, 99.0),
+            mean_queue_depth: {
+                let d: Vec<f64> = queue_depth_samples.iter().map(|&x| x as f64).collect();
+                crate::util::stats::mean(&d)
+            },
+            max_queue_depth: queue_depth_samples.iter().copied().max().unwrap_or(0),
+            preemptions,
+            throughput: per_sec(generated_tokens),
+            goodput: per_sec(good_tokens),
+            slo_attainment: if timings.is_empty() {
+                0.0
+            } else {
+                met as f64 / timings.len() as f64
+            },
+        }
+    }
+
+    /// One-line summary for logs/examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}/{} reqs | {} tokens | makespan {:.3}s | {:.1} tok/s (goodput {:.1}, SLO {:.0}%) | \
+             TTFT p50 {:.3}s p99 {:.3}s | queue p99 {:.3}s depth max {} | {} preemptions",
+            self.completed,
+            self.submitted,
+            self.generated_tokens,
+            self.makespan_secs,
+            self.throughput,
+            self.goodput,
+            self.slo_attainment * 100.0,
+            self.ttft_p50,
+            self.ttft_p99,
+            self.queue_p99,
+            self.max_queue_depth,
+            self.preemptions,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,5 +360,71 @@ mod tests {
         assert!((s.tbt_mean - 1.5).abs() < 1e-9); // (1.0 + 2.0)/2
         assert!((s.latency_p50 - 4.5).abs() < 1e-9);
         assert_eq!(latency_summary(&[]).ttft_p99, 0.0);
+    }
+
+    #[test]
+    fn request_timing_derived_metrics() {
+        let t = RequestTiming {
+            arrival: 1.0,
+            admitted: 2.0,
+            first_token: 4.0,
+            finished: 10.0,
+            generated: 4,
+        };
+        assert!((t.queue_secs() - 1.0).abs() < 1e-12);
+        assert!((t.ttft() - 3.0).abs() < 1e-12);
+        assert!((t.tpot() - 2.0).abs() < 1e-12);
+        assert!((t.e2e() - 9.0).abs() < 1e-12);
+        assert!(t.meets(&SloSpec {
+            ttft_secs: 3.0,
+            tpot_secs: 2.0
+        }));
+        assert!(!t.meets(&SloSpec {
+            ttft_secs: 2.9,
+            tpot_secs: 2.0
+        }));
+        // single-token completions have no TPOT
+        let single = RequestTiming {
+            generated: 1,
+            ..t
+        };
+        assert_eq!(single.tpot(), 0.0);
+    }
+
+    #[test]
+    fn slo_report_aggregates_and_goodput() {
+        let mk = |arrival: f64, admitted: f64, first: f64, fin: f64, n: usize| RequestTiming {
+            arrival,
+            admitted,
+            first_token: first,
+            finished: fin,
+            generated: n,
+        };
+        let slo = SloSpec {
+            ttft_secs: 2.0,
+            tpot_secs: 1.0,
+        };
+        let timings = vec![
+            mk(0.0, 0.0, 1.0, 5.0, 5),  // meets: ttft 1, tpot 1
+            mk(0.0, 3.0, 4.0, 8.0, 5),  // fails: ttft 4
+        ];
+        let r = SloReport::from_timings(3, &timings, &slo, 10.0, 2, &[0, 1, 2]);
+        assert_eq!(r.submitted, 3);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.generated_tokens, 10);
+        assert!((r.throughput - 1.0).abs() < 1e-12);
+        assert!((r.goodput - 0.5).abs() < 1e-12);
+        assert!((r.slo_attainment - 0.5).abs() < 1e-12);
+        assert!((r.queue_max - 3.0).abs() < 1e-12);
+        assert!(r.queue_mean > 0.0);
+        assert!(r.ttft_p99 >= r.ttft_p50);
+        assert_eq!(r.max_queue_depth, 2);
+        assert!((r.mean_queue_depth - 1.0).abs() < 1e-12);
+        assert_eq!(r.preemptions, 2);
+        assert!(r.summary().contains("2/3 reqs"));
+        // empty run does not divide by zero
+        let empty = SloReport::from_timings(0, &[], &slo, 0.0, 0, &[]);
+        assert_eq!(empty.throughput, 0.0);
+        assert_eq!(empty.slo_attainment, 0.0);
     }
 }

@@ -85,6 +85,20 @@ impl Timeline {
         self.lane_free[lane.idx()]
     }
 
+    /// Advance the clock to `t` (idle time, both lanes): no operation may
+    /// start earlier. Used by the online scheduler to model request
+    /// arrival times — an empty pipeline fast-forwards to the next
+    /// arrival instead of serving it in the past. No-op if `t` is already
+    /// in the past; busy time is unaffected, so utilization correctly
+    /// dilutes over the idle gap.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t >= 0.0, "negative time");
+        for lf in &mut self.lane_free {
+            *lf = lf.max(t);
+        }
+        self.makespan = self.makespan.max(t);
+    }
+
     /// Total busy seconds accumulated on `lane`.
     pub fn busy(&self, lane: Lane) -> f64 {
         self.busy[lane.idx()]
@@ -154,6 +168,20 @@ mod tests {
         assert_eq!(s.start, 4.0);
         assert_eq!(t.idle(Lane::Gpu), 4.0);
         assert!((t.utilization(Lane::Gpu) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_to_inserts_idle_time() {
+        let mut t = Timeline::new();
+        t.schedule(Lane::Gpu, 0.0, 1.0);
+        t.advance_to(5.0);
+        assert_eq!(t.makespan(), 5.0);
+        assert_eq!(t.busy(Lane::Gpu), 1.0);
+        let s = t.schedule(Lane::Gpu, 0.0, 1.0);
+        assert_eq!(s.start, 5.0);
+        // moving backwards is a no-op
+        t.advance_to(2.0);
+        assert_eq!(t.lane_free(Lane::Gpu), 6.0);
     }
 
     #[test]

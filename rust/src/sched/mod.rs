@@ -1,0 +1,875 @@
+//! Online serving scheduler: admission queue, continuous batching, and an
+//! ACT-demotion memory-pressure controller.
+//!
+//! The seed engine only served closed batches; this module turns the repo
+//! into an actual serving system. Requests arrive with timestamps (see
+//! [`crate::workload`]'s arrival-process generators), wait in a FIFO
+//! admission queue, and are fed incrementally into the engine's step-wise
+//! API ([`StepEngine`]): every [`Scheduler::tick`] admits what fits, runs
+//! one engine step (prefill wave + one decode round under the dynamic
+//! mini-batch policy), and collects completions.
+//!
+//! ## Admission reservations
+//!
+//! Admission is gated on *reserved* host-cache bytes, not instantaneous
+//! free bytes: each admitted request reserves its worst-case lifetime
+//! footprint ([`StepEngine::projected_host_bytes`]), released when it
+//! retires. This makes admission sound — an admitted request can never
+//! OOM the pools mid-decode, no matter how the others grow.
+//!
+//! ## Preemption = KV→ACT demotion
+//!
+//! Under memory pressure the controller picks a victim (cost-model-scored,
+//! [`victim::select_victim`]) and *demotes* its KV blocks to host ACT
+//! checkpoints — half the bytes, byte-exact accounting — instead of
+//! swapping pages out or throwing work away. The victim's context
+//! survives as activation checkpoints; subsequent decode steps restore
+//! K/V through the paper's KV-Gen recompute path, so token outputs are
+//! bit-identical to a no-preemption run. A demoted request moves to the
+//! ACT tier permanently (future blocks are ACT), which is exactly what
+//! keeps the reservation arithmetic sound after the demotion discount.
+//!
+//! See DESIGN.md §Scheduling for the full design discussion.
+
+pub mod victim;
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::cache::{BlockSizes, DemotionReceipt};
+use crate::engine::{Completion, Engine, Request};
+use crate::metrics::{RequestTiming, SloReport, SloSpec};
+use crate::policy::CostModel;
+use crate::workload::TimedRequest;
+
+pub use victim::{demotion_score, select_victim, VictimInfo};
+
+/// The engine surface the scheduler drives. [`Engine`] implements it; the
+/// tests drive the scheduler with a deterministic mock so the scheduling
+/// logic is exercised without AOT artifacts or a PJRT backend.
+pub trait StepEngine {
+    /// Current virtual time.
+    fn now(&self) -> f64;
+    /// Fast-forward the virtual clock (idle time) to `t`.
+    fn advance_to(&mut self, t: f64);
+    /// Reject requests that can never be served (empty prompt, beyond
+    /// model context, worst-case footprint larger than the whole pool).
+    /// Called at submit time so one bad request errors back to its own
+    /// client instead of surfacing mid-tick and poisoning the loop.
+    fn validate(&self, req: &Request) -> Result<()>;
+    /// Admit a validated request (registers state + cache blocks).
+    fn admit(&mut self, req: &Request) -> Result<()>;
+    /// Prefill admitted requests and run one decode round; returns newly
+    /// finished completions.
+    fn step(&mut self) -> Result<Vec<Completion>>;
+    /// Free a finished request's state and cache blocks.
+    fn release(&mut self, id: u64) -> Result<()>;
+    /// Exclude a request from prefill/decode (state retained).
+    fn pause(&mut self, id: u64) -> Result<()>;
+    /// Re-include a paused request.
+    fn resume(&mut self, id: u64) -> Result<()>;
+    /// Demote the request's KV blocks to host ACT checkpoints; the
+    /// request grows only ACT blocks afterwards.
+    fn demote_to_act(&mut self, id: u64) -> Result<DemotionReceipt>;
+    /// Free bytes in the host cache pool right now.
+    fn host_free_bytes(&self) -> usize;
+    /// Total host cache pool capacity.
+    fn host_capacity_bytes(&self) -> usize;
+    /// Worst-case lifetime host bytes of a `(prompt_len, max_new)`
+    /// request at the current block-ratio policy.
+    fn projected_host_bytes(&self, prompt_len: usize, max_new: usize) -> usize;
+    /// Preemption-relevant footprint of a live request.
+    fn victim_info(&self, id: u64) -> Result<VictimInfo>;
+    /// The fitted cost model (victim scoring).
+    fn cost_model(&self) -> CostModel;
+    /// Hybrid cache block byte sizes.
+    fn block_sizes(&self) -> BlockSizes;
+}
+
+impl StepEngine for Engine {
+    fn now(&self) -> f64 {
+        Engine::now(self)
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        Engine::advance_to(self, t)
+    }
+
+    fn validate(&self, req: &Request) -> Result<()> {
+        anyhow::ensure!(!req.prompt.is_empty(), "request {} has empty prompt", req.id);
+        anyhow::ensure!(
+            req.prompt.len() + req.max_new <= self.model().max_context,
+            "request {} exceeds max context {}",
+            req.id,
+            self.model().max_context
+        );
+        let need = Engine::projected_host_bytes(self, req.prompt.len(), req.max_new);
+        let capacity = Engine::host_capacity_bytes(self);
+        anyhow::ensure!(
+            need <= capacity,
+            "request {} needs {need} B of host cache but the pool only has {capacity} B total",
+            req.id
+        );
+        Ok(())
+    }
+
+    fn admit(&mut self, req: &Request) -> Result<()> {
+        Engine::admit(self, req)
+    }
+
+    fn step(&mut self) -> Result<Vec<Completion>> {
+        Engine::step(self)
+    }
+
+    fn release(&mut self, id: u64) -> Result<()> {
+        Engine::retire(self, id).map(|_| ())
+    }
+
+    fn pause(&mut self, id: u64) -> Result<()> {
+        Engine::pause(self, id)
+    }
+
+    fn resume(&mut self, id: u64) -> Result<()> {
+        Engine::resume(self, id)
+    }
+
+    fn demote_to_act(&mut self, id: u64) -> Result<DemotionReceipt> {
+        Engine::demote_request(self, id)
+    }
+
+    fn host_free_bytes(&self) -> usize {
+        Engine::host_free_bytes(self)
+    }
+
+    fn host_capacity_bytes(&self) -> usize {
+        Engine::host_capacity_bytes(self)
+    }
+
+    fn projected_host_bytes(&self, prompt_len: usize, max_new: usize) -> usize {
+        Engine::projected_host_bytes(self, prompt_len, max_new)
+    }
+
+    fn victim_info(&self, id: u64) -> Result<VictimInfo> {
+        let (act, kv) = self.footprint(id)?;
+        Ok(VictimInfo {
+            id,
+            kv_blocks: kv,
+            act_blocks: act,
+            remaining_tokens: self.remaining_tokens(id)?,
+        })
+    }
+
+    fn cost_model(&self) -> CostModel {
+        *Engine::cost_model(self)
+    }
+
+    fn block_sizes(&self) -> BlockSizes {
+        Engine::block_sizes(self)
+    }
+}
+
+/// Scheduler tuning knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedConfig {
+    /// Maximum requests decoding concurrently (admission concurrency cap).
+    pub max_running: usize,
+    /// Enable the ACT-demotion preemption path (off = requests queue
+    /// until capacity frees naturally).
+    pub preemption: bool,
+    /// Latency SLO used for the goodput accounting in [`SloReport`].
+    pub slo: SloSpec,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            max_running: 32,
+            preemption: true,
+            slo: SloSpec::default(),
+        }
+    }
+}
+
+/// A request waiting for admission.
+#[derive(Debug, Clone)]
+struct Waiting {
+    arrival: f64,
+    req: Request,
+}
+
+/// Lifecycle bookkeeping of an admitted request.
+#[derive(Debug, Clone, Copy)]
+struct AdmitRecord {
+    arrival: f64,
+    admitted: f64,
+    reserved: usize,
+}
+
+/// The online scheduler. Owns the engine; drive it with
+/// [`Scheduler::submit`] + [`Scheduler::tick`] (the TCP front-end) or
+/// [`Scheduler::run_trace`] (benchmarks and tests).
+pub struct Scheduler<E: StepEngine> {
+    eng: E,
+    cfg: SchedConfig,
+    waiting: VecDeque<Waiting>,
+    running: Vec<u64>,
+    preempted: Vec<u64>,
+    admitted: HashMap<u64, AdmitRecord>,
+    reserved_total: usize,
+    timings: Vec<RequestTiming>,
+    depth_samples: Vec<usize>,
+    preemptions: usize,
+    submitted: usize,
+}
+
+impl<E: StepEngine> Scheduler<E> {
+    pub fn new(eng: E, cfg: SchedConfig) -> Self {
+        Self {
+            eng,
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            preempted: Vec::new(),
+            admitted: HashMap::new(),
+            reserved_total: 0,
+            timings: Vec::new(),
+            depth_samples: Vec::new(),
+            preemptions: 0,
+            submitted: 0,
+        }
+    }
+
+    /// Enqueue a request that arrived at virtual time `arrival`. Errors
+    /// here concern only this request (invalid, duplicate, can never be
+    /// served) — the caller answers that one client and keeps serving.
+    pub fn submit(&mut self, req: Request, arrival: f64) -> Result<()> {
+        anyhow::ensure!(arrival.is_finite() && arrival >= 0.0, "bad arrival time");
+        self.eng.validate(&req)?;
+        let duplicate = self.admitted.contains_key(&req.id)
+            || self.waiting.iter().any(|w| w.req.id == req.id);
+        anyhow::ensure!(!duplicate, "duplicate request id {}", req.id);
+        // Keep the queue sorted by arrival (stable for equal stamps).
+        let pos = self.waiting.partition_point(|w| w.arrival <= arrival);
+        self.waiting.insert(pos, Waiting { arrival, req });
+        self.submitted += 1;
+        Ok(())
+    }
+
+    /// Enqueue a timed request from a workload trace.
+    pub fn submit_timed(&mut self, tr: TimedRequest) -> Result<()> {
+        self.submit(tr.req, tr.arrival)
+    }
+
+    /// One scheduling iteration: resume/admit what fits, run one engine
+    /// step, collect completions. Returns the requests that finished this
+    /// tick (already released from the engine).
+    pub fn tick(&mut self) -> Result<Vec<Completion>> {
+        // Fast-forward an idle engine to the next arrival: nothing can be
+        // served in the past.
+        if self.running.is_empty() && self.preempted.is_empty() {
+            match self.waiting.front() {
+                Some(w) if w.arrival > self.eng.now() => {
+                    let a = w.arrival;
+                    self.eng.advance_to(a);
+                }
+                None => return Ok(Vec::new()),
+                _ => {}
+            }
+        }
+        let now = self.eng.now();
+
+        // Resume preempted requests first (they are older than anything
+        // in the queue). Safe without a capacity check: a preempted
+        // request still holds its admission reservation, which covers
+        // its remaining (ACT-only) growth.
+        while !self.preempted.is_empty() && self.running.len() < self.cfg.max_running {
+            let id = self.preempted.remove(0);
+            self.eng.resume(id)?;
+            self.running.push(id);
+        }
+
+        // Admission: FIFO in arrival order, gated on concurrency and on
+        // reserved host-cache bytes.
+        loop {
+            let (id, arrival, plen, mnew) = match self.waiting.front() {
+                Some(w) if w.arrival <= now && self.running.len() < self.cfg.max_running => {
+                    (w.req.id, w.arrival, w.req.prompt.len(), w.req.max_new)
+                }
+                _ => break,
+            };
+            let need = self.eng.projected_host_bytes(plen, mnew);
+            let capacity = self.eng.host_capacity_bytes();
+            if self.reserved_total + need > capacity {
+                let freed_enough = self.cfg.preemption && self.preempt_until(need)?;
+                if !freed_enough {
+                    anyhow::ensure!(
+                        !(self.running.is_empty()
+                            && self.preempted.is_empty()
+                            && self.reserved_total == 0),
+                        "request {id} needs {need} B of host cache but the pool only has {capacity} B total",
+                    );
+                    break;
+                }
+            }
+            let w = self.waiting.pop_front().unwrap();
+            self.eng.admit(&w.req)?;
+            self.admitted.insert(
+                id,
+                AdmitRecord {
+                    arrival,
+                    admitted: now,
+                    reserved: need,
+                },
+            );
+            self.reserved_total += need;
+            self.running.push(id);
+        }
+
+        if self.running.is_empty() {
+            // Everything live is beyond `now`: jump to the next arrival so
+            // the following tick makes progress.
+            if let Some(w) = self.waiting.front() {
+                if w.arrival > now {
+                    let a = w.arrival;
+                    self.eng.advance_to(a);
+                }
+            }
+            return Ok(Vec::new());
+        }
+
+        // Queue depth counts only requests that have actually arrived —
+        // trace-driven runs submit the whole future up front.
+        self.depth_samples
+            .push(self.waiting.iter().filter(|w| w.arrival <= now).count());
+
+        // One engine step: prefill wave + one decode round.
+        let done = self.eng.step()?;
+        let mut out = Vec::with_capacity(done.len());
+        for c in done {
+            self.running.retain(|&x| x != c.id);
+            self.preempted.retain(|&x| x != c.id);
+            let rec = self
+                .admitted
+                .remove(&c.id)
+                .expect("completion for a request the scheduler never admitted");
+            self.reserved_total -= rec.reserved;
+            self.timings.push(RequestTiming {
+                arrival: rec.arrival,
+                admitted: rec.admitted,
+                first_token: c.ttft,
+                finished: c.latency(),
+                generated: c.generated().len(),
+            });
+            self.eng.release(c.id)?;
+            out.push(c);
+        }
+        Ok(out)
+    }
+
+    /// Demote cost-model-chosen victims until `need` reserved bytes fit,
+    /// pausing each victim for the current round. Returns false when no
+    /// further demotion can free anything (the caller then waits for
+    /// completions instead).
+    fn preempt_until(&mut self, need: usize) -> Result<bool> {
+        let cost = self.eng.cost_model();
+        let sizes = self.eng.block_sizes();
+        let discount = sizes.kv_bytes - sizes.act_bytes;
+        while self.reserved_total + need > self.eng.host_capacity_bytes() {
+            let mut candidates = Vec::with_capacity(self.running.len());
+            for &id in &self.running {
+                candidates.push(self.eng.victim_info(id)?);
+            }
+            let Some(v) = select_victim(&candidates, &cost, sizes) else {
+                return Ok(false);
+            };
+            let receipt = self.eng.demote_to_act(v.id)?;
+            if receipt.blocks() == 0 {
+                return Ok(false);
+            }
+            // The demoted blocks can never be KV again, so the victim's
+            // worst-case footprint — and with it the reservation — shrinks
+            // by the KV/ACT byte difference per block.
+            let freed = receipt.blocks() * discount;
+            let rec = self.admitted.get_mut(&v.id).expect("victim not admitted");
+            let freed = freed.min(rec.reserved);
+            rec.reserved -= freed;
+            self.reserved_total -= freed;
+            self.eng.pause(v.id)?;
+            self.running.retain(|&x| x != v.id);
+            self.preempted.push(v.id);
+            self.preemptions += 1;
+        }
+        Ok(true)
+    }
+
+    /// Submit a whole timed trace, then [`Self::run_to_completion`].
+    pub fn run_trace(&mut self, trace: Vec<TimedRequest>) -> Result<Vec<Completion>> {
+        for tr in trace {
+            self.submit_timed(tr)?;
+        }
+        self.run_to_completion()
+    }
+
+    /// Tick until every submitted request has completed. Errors on a
+    /// stall (no progress across consecutive ticks — a scheduling bug or
+    /// an unsatisfiable request mix).
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        let mut stalled = 0usize;
+        while !self.is_idle() {
+            let before = (
+                self.waiting.len(),
+                self.running.len(),
+                self.preempted.len(),
+                self.timings.len(),
+            );
+            let now_before = self.eng.now();
+            all.extend(self.tick()?);
+            let after = (
+                self.waiting.len(),
+                self.running.len(),
+                self.preempted.len(),
+                self.timings.len(),
+            );
+            if after == before && self.eng.now() <= now_before {
+                stalled += 1;
+                anyhow::ensure!(
+                    stalled < 3,
+                    "scheduler stalled: {} waiting, {} running, {} preempted at t={}",
+                    after.0,
+                    after.1,
+                    after.2,
+                    self.eng.now()
+                );
+            } else {
+                stalled = 0;
+            }
+        }
+        Ok(all)
+    }
+
+    /// No work queued, running, or preempted.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty() && self.preempted.is_empty()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.eng.now()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn preempted_count(&self) -> usize {
+        self.preempted.len()
+    }
+
+    pub fn preemptions(&self) -> usize {
+        self.preemptions
+    }
+
+    /// The online metrics report over everything completed so far.
+    pub fn report(&self) -> SloReport {
+        SloReport::from_timings(
+            self.submitted,
+            &self.timings,
+            &self.cfg.slo,
+            self.eng.now(),
+            self.preemptions,
+            &self.depth_samples,
+        )
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.eng
+    }
+
+    pub fn engine_mut(&mut self) -> &mut E {
+        &mut self.eng
+    }
+
+    pub fn into_engine(self) -> E {
+        self.eng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{BlockKind, BlockManager, Location};
+    use crate::config::{ModelConfig, SystemConfig};
+    use crate::policy::BlockRatio;
+    use crate::workload::WorkloadGen;
+
+    // A deterministic engine mock: real block accounting (BlockManager +
+    // BlockRatio, the same types the engine uses), fixed virtual time per
+    // decode round, dummy tokens. Lets the scheduling logic run without
+    // AOT artifacts or a PJRT backend.
+    struct MockState {
+        prompt_len: usize,
+        max_new: usize,
+        generated: usize,
+        done: bool,
+        paused: bool,
+        demoted: bool,
+        prefilled: bool,
+        reported: bool,
+        token_times: Vec<f64>,
+    }
+
+    struct MockEngine {
+        blocks: BlockManager,
+        ratio: BlockRatio,
+        states: HashMap<u64, MockState>,
+        order: Vec<u64>,
+        clock: f64,
+        round_secs: f64,
+        cost: CostModel,
+    }
+
+    impl MockEngine {
+        /// `host_blocks` is the host pool capacity in KV-block units.
+        fn new(host_blocks: usize, ratio: BlockRatio) -> Self {
+            let sizes = crate::cache::BlockSizes::new(&ModelConfig::opt_tiny(), 16);
+            Self {
+                blocks: BlockManager::new(sizes, 0, host_blocks * sizes.kv_bytes),
+                ratio,
+                states: HashMap::new(),
+                order: Vec::new(),
+                clock: 0.0,
+                round_secs: 0.1,
+                cost: CostModel::analytic(&ModelConfig::opt_tiny(), &SystemConfig::tiny_testbed()),
+            }
+        }
+
+        fn alloc_token_slot(&mut self, id: u64) -> Result<()> {
+            let took = self.blocks.fill_last(id, 1)?;
+            if took == 0 {
+                let kind = if self.states[&id].demoted {
+                    BlockKind::Act
+                } else {
+                    let t = self.blocks.table(id)?;
+                    self.ratio
+                        .next_kind(t.count_kind(BlockKind::Act), t.count_kind(BlockKind::Kv))
+                };
+                self.blocks.append_block(id, kind, Location::Host, 1)?;
+            }
+            Ok(())
+        }
+    }
+
+    impl StepEngine for MockEngine {
+        fn now(&self) -> f64 {
+            self.clock
+        }
+
+        fn advance_to(&mut self, t: f64) {
+            self.clock = self.clock.max(t);
+        }
+
+        fn validate(&self, req: &Request) -> Result<()> {
+            anyhow::ensure!(!req.prompt.is_empty(), "request {} has empty prompt", req.id);
+            let need = self.projected_host_bytes(req.prompt.len(), req.max_new);
+            let capacity = self.blocks.host_capacity();
+            anyhow::ensure!(
+                need <= capacity,
+                "request {} needs {need} B of host cache but the pool only has {capacity} B total",
+                req.id
+            );
+            Ok(())
+        }
+
+        fn admit(&mut self, req: &Request) -> Result<()> {
+            anyhow::ensure!(!self.states.contains_key(&req.id), "duplicate {}", req.id);
+            self.blocks.register(req.id)?;
+            self.states.insert(
+                req.id,
+                MockState {
+                    prompt_len: req.prompt.len(),
+                    max_new: req.max_new,
+                    generated: 0,
+                    done: false,
+                    paused: false,
+                    demoted: false,
+                    prefilled: false,
+                    reported: false,
+                    token_times: Vec::new(),
+                },
+            );
+            self.order.push(req.id);
+            Ok(())
+        }
+
+        fn step(&mut self) -> Result<Vec<Completion>> {
+            let runnable: Vec<u64> = self
+                .order
+                .iter()
+                .copied()
+                .filter(|id| {
+                    let st = &self.states[id];
+                    !st.done && !st.paused
+                })
+                .collect();
+            if !runnable.is_empty() {
+                self.clock += self.round_secs;
+                for id in runnable {
+                    if !self.states[&id].prefilled {
+                        // Context blocks at the ratio, all host-resident.
+                        let plen = self.states[&id].prompt_len;
+                        let bt = self.blocks.sizes().block_tokens;
+                        let nblocks = plen.div_ceil(bt);
+                        let (mut act, mut kv) = (0usize, 0usize);
+                        for i in 0..nblocks {
+                            let filled = if i + 1 == nblocks { plen - i * bt } else { bt };
+                            let kind = self.ratio.next_kind(act, kv);
+                            match kind {
+                                BlockKind::Act => act += 1,
+                                BlockKind::Kv => kv += 1,
+                            }
+                            self.blocks.append_block(id, kind, Location::Host, filled)?;
+                        }
+                        let clock = self.clock;
+                        let st = self.states.get_mut(&id).unwrap();
+                        st.prefilled = true;
+                        st.generated = 1;
+                        st.token_times.push(clock);
+                    } else {
+                        let clock = self.clock;
+                        let st = self.states.get_mut(&id).unwrap();
+                        st.generated += 1;
+                        st.token_times.push(clock);
+                    }
+                    self.alloc_token_slot(id)?;
+                    let st = self.states.get_mut(&id).unwrap();
+                    if st.generated >= st.max_new {
+                        st.done = true;
+                    }
+                }
+            }
+            let mut fresh = Vec::new();
+            for (&id, st) in self.states.iter_mut() {
+                if st.done && !st.reported {
+                    st.reported = true;
+                    fresh.push(Completion {
+                        id,
+                        tokens: vec![0; st.prompt_len + st.generated],
+                        prompt_len: st.prompt_len,
+                        ttft: st.token_times.first().copied().unwrap_or(0.0),
+                        token_times: st.token_times.clone(),
+                    });
+                }
+            }
+            fresh.sort_by_key(|c| c.id);
+            Ok(fresh)
+        }
+
+        fn release(&mut self, id: u64) -> Result<()> {
+            anyhow::ensure!(self.states.remove(&id).is_some(), "unknown {id}");
+            self.blocks.free_request(id)?;
+            self.order.retain(|&x| x != id);
+            Ok(())
+        }
+
+        fn pause(&mut self, id: u64) -> Result<()> {
+            self.states.get_mut(&id).unwrap().paused = true;
+            Ok(())
+        }
+
+        fn resume(&mut self, id: u64) -> Result<()> {
+            self.states.get_mut(&id).unwrap().paused = false;
+            Ok(())
+        }
+
+        fn demote_to_act(&mut self, id: u64) -> Result<DemotionReceipt> {
+            self.states.get_mut(&id).unwrap().demoted = true;
+            Ok(self.blocks.demote_request_to_act(id)?)
+        }
+
+        fn host_free_bytes(&self) -> usize {
+            self.blocks.host_free()
+        }
+
+        fn host_capacity_bytes(&self) -> usize {
+            self.blocks.host_capacity()
+        }
+
+        fn projected_host_bytes(&self, prompt_len: usize, max_new: usize) -> usize {
+            let sizes = self.blocks.sizes();
+            let n = (prompt_len + max_new).div_ceil(sizes.block_tokens);
+            let (act, kv) = self.ratio.split(n);
+            act * sizes.act_bytes + (kv + 1) * sizes.kv_bytes
+        }
+
+        fn victim_info(&self, id: u64) -> Result<VictimInfo> {
+            let t = self.blocks.table(id)?;
+            let st = &self.states[&id];
+            Ok(VictimInfo {
+                id,
+                kv_blocks: t.count_kind(BlockKind::Kv),
+                act_blocks: t.count_kind(BlockKind::Act),
+                remaining_tokens: st.max_new.saturating_sub(st.generated),
+            })
+        }
+
+        fn cost_model(&self) -> CostModel {
+            self.cost
+        }
+
+        fn block_sizes(&self) -> BlockSizes {
+            self.blocks.sizes()
+        }
+    }
+
+    fn sched(host_blocks: usize, ratio: BlockRatio, cfg: SchedConfig) -> Scheduler<MockEngine> {
+        Scheduler::new(MockEngine::new(host_blocks, ratio), cfg)
+    }
+
+    fn req(id: u64, plen: usize, gen: usize) -> Request {
+        Request::new(id, vec![7; plen], gen)
+    }
+
+    #[test]
+    fn drains_a_poisson_trace_without_pressure() {
+        let mut s = sched(1024, BlockRatio::new(1, 1), SchedConfig::default());
+        let mut wg = WorkloadGen::new(3, 2048);
+        let trace = wg.poisson(12, 4.0, 16, 48, 4);
+        let done = s.run_trace(trace).unwrap();
+        assert_eq!(done.len(), 12);
+        assert!(s.is_idle());
+        let r = s.report();
+        assert_eq!(r.completed, 12);
+        assert_eq!(r.submitted, 12);
+        assert_eq!(r.preemptions, 0);
+        assert_eq!(r.generated_tokens, 48);
+        assert!(r.makespan_secs > 0.0);
+        assert!(r.ttft_p99 >= r.ttft_p50);
+        assert!(r.throughput > 0.0);
+    }
+
+    #[test]
+    fn idle_engine_fast_forwards_to_arrivals() {
+        let mut s = sched(1024, BlockRatio::new(1, 1), SchedConfig::default());
+        s.submit(req(1, 16, 2), 5.0).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        let r = s.report();
+        // Served after its arrival, and queue time ~0 (nothing ahead).
+        assert!(r.makespan_secs >= 5.0);
+        assert!(r.queue_max < 1e-9);
+        assert!(r.ttft_p50 > 0.0);
+    }
+
+    #[test]
+    fn concurrency_cap_queues_and_records_wait() {
+        let cfg = SchedConfig {
+            max_running: 1,
+            ..SchedConfig::default()
+        };
+        let mut s = sched(1024, BlockRatio::new(1, 1), cfg);
+        s.submit(req(1, 16, 4), 0.0).unwrap();
+        s.submit(req(2, 16, 4), 0.0).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let r = s.report();
+        assert_eq!(r.preemptions, 0);
+        assert!(r.queue_max > 0.0, "second request must have queued");
+        assert!(r.max_queue_depth >= 1);
+    }
+
+    #[test]
+    fn memory_pressure_triggers_demotion_preemption_and_everyone_finishes() {
+        // Host pool: 16 KV-block units. Each request projects to
+        // ceil(68/16)=5 blocks -> split(5)=(3 ACT, 2 KV) -> 3·½ + 3·1 =
+        // 4.5 units. Three fit (13.5); the fourth (18 > 16) needs the
+        // controller to demote victims (1 unit of reservation each).
+        let mut s = sched(16, BlockRatio::new(1, 1), SchedConfig::default());
+        for (i, arr) in [0.0, 0.01, 0.02, 0.03].into_iter().enumerate() {
+            s.submit(req(i as u64 + 1, 64, 4), arr).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4, "preempted and late requests must all finish");
+        let r = s.report();
+        assert!(r.preemptions >= 1, "expected at least one ACT demotion");
+        assert!(r.queue_max > 0.0, "the blocked request must show queue time");
+        assert_eq!(r.completed, 4);
+        assert!(r.slo_attainment <= 1.0 && r.goodput <= r.throughput + 1e-9);
+        // Preempted requests were resumed: nobody is left paused.
+        assert_eq!(s.preempted_count(), 0);
+        assert_eq!(s.running_count(), 0);
+    }
+
+    #[test]
+    fn preemption_disabled_still_completes_by_waiting() {
+        let cfg = SchedConfig {
+            preemption: false,
+            ..SchedConfig::default()
+        };
+        let mut s = sched(8, BlockRatio::new(1, 1), cfg);
+        s.submit(req(1, 64, 4), 0.0).unwrap();
+        s.submit(req(2, 64, 4), 0.0).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let r = s.report();
+        assert_eq!(r.preemptions, 0);
+        assert!(r.queue_max > 0.0, "second request waits for the first to retire");
+    }
+
+    #[test]
+    fn oversized_request_rejected_at_submit() {
+        let mut s = sched(2, BlockRatio::new(1, 1), SchedConfig::default());
+        // 20 blocks worst-case never fits a 2-block pool: rejected up
+        // front so the serving loop never sees it (one bad client must
+        // not poison the scheduler).
+        let err = s.submit(req(1, 250, 40), 0.0).unwrap_err();
+        assert!(format!("{err:#}").contains("host cache"), "got: {err:#}");
+        assert!(s.is_idle());
+        assert_eq!(s.report().submitted, 0);
+        // The scheduler keeps serving normal work afterwards (1 block +
+        // margin = 1.5 KV-units, fits the 2-block pool).
+        s.submit(req(2, 8, 2), 0.0).unwrap();
+        assert_eq!(s.run_to_completion().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn duplicate_and_invalid_submissions_are_rejected() {
+        let mut s = sched(64, BlockRatio::new(1, 1), SchedConfig::default());
+        s.submit(req(1, 16, 2), 0.0).unwrap();
+        assert!(s.submit(req(1, 16, 2), 0.1).is_err());
+        assert!(s.submit(Request::new(2, vec![], 2), 0.1).is_err());
+        assert!(s.submit(req(3, 16, 2), -1.0).is_err());
+        assert!(s.submit(req(4, 16, 2), f64::NAN).is_err());
+    }
+
+    #[test]
+    fn reservations_are_returned_on_retire() {
+        let mut s = sched(16, BlockRatio::new(1, 1), SchedConfig::default());
+        for i in 0..6u64 {
+            s.submit(req(i + 1, 64, 2), 0.0).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 6);
+        assert_eq!(s.reserved_total, 0, "all reservations must be released");
+        assert_eq!(s.engine().host_free_bytes(), s.engine().host_capacity_bytes());
+    }
+
+    #[test]
+    fn timings_are_causally_ordered() {
+        let mut s = sched(16, BlockRatio::new(1, 1), SchedConfig::default());
+        let mut wg = WorkloadGen::new(9, 2048);
+        let trace = wg.poisson(10, 8.0, 32, 80, 3);
+        s.run_trace(trace).unwrap();
+        for t in &s.timings {
+            assert!(t.admitted >= t.arrival - 1e-9);
+            assert!(t.first_token >= t.admitted - 1e-9);
+            assert!(t.finished >= t.first_token - 1e-9);
+            assert!(t.generated > 0);
+        }
+    }
+}

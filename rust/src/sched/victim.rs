@@ -1,0 +1,183 @@
+//! Preemption victim selection, driven by the fitted cost model.
+//!
+//! Demoting a victim's KV blocks to host ACT checkpoints frees
+//! `#KV · (S_KV − S_ACT)` host bytes but changes how the victim's future
+//! decode steps are served: the demoted blocks stop streaming over PCIe
+//! (`T_load_kv`) and start recomputing on the GPU (`T_kv_gen`). On the
+//! paper's testbed recomputation rides the weight-streaming window, so the
+//! marginal cost is often ~zero — exactly why ACT demotion is a cheaper
+//! preemption primitive than vLLM-style swap-out or recompute-from-prompt.
+//! When the GPU *is* the bottleneck the cost model prices the slowdown,
+//! and the scheduler picks the victim with the best bytes-freed per
+//! second of added pipeline time over its remaining generation.
+
+use std::cmp::Ordering;
+
+use crate::cache::BlockSizes;
+use crate::policy::CostModel;
+
+/// What the scheduler knows about a preemption candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VictimInfo {
+    pub id: u64,
+    /// KV blocks the candidate currently holds (demotable).
+    pub kv_blocks: usize,
+    /// ACT blocks the candidate currently holds.
+    pub act_blocks: usize,
+    /// Tokens the candidate still has to generate.
+    pub remaining_tokens: usize,
+}
+
+/// Host bytes a full KV→ACT demotion of `v` frees.
+pub fn bytes_freed(v: &VictimInfo, sizes: BlockSizes) -> usize {
+    v.kv_blocks * (sizes.kv_bytes - sizes.act_bytes)
+}
+
+/// Added per-layer pipeline seconds per remaining decode step if `v` is
+/// demoted: KV-Gen time over the enlarged ACT set minus the KV load the
+/// demotion removes. Clamped at zero — recomputation that hides under
+/// the weight-streaming window costs nothing.
+pub fn demotion_step_penalty(v: &VictimInfo, cost: &CostModel) -> f64 {
+    let t_after = cost.kv_gen.eval((v.act_blocks + v.kv_blocks) as f64);
+    let t_before =
+        cost.kv_gen.eval(v.act_blocks as f64) + cost.load_kv.eval(v.kv_blocks as f64);
+    (t_after - t_before).max(0.0)
+}
+
+/// Score of demoting `v`: host bytes freed per second of added pipeline
+/// time over the victim's remaining generation. Candidates without KV
+/// blocks score `-inf` (nothing to demote).
+pub fn demotion_score(v: &VictimInfo, cost: &CostModel, sizes: BlockSizes) -> f64 {
+    if v.kv_blocks == 0 {
+        return f64::NEG_INFINITY;
+    }
+    let freed = bytes_freed(v, sizes) as f64;
+    let penalty = demotion_step_penalty(v, cost) * v.remaining_tokens as f64;
+    freed / (1e-9 + penalty)
+}
+
+/// Pick the best demotion victim among `candidates` (None when nobody
+/// holds a KV block — there is nothing preemption could free).
+pub fn select_victim(
+    candidates: &[VictimInfo],
+    cost: &CostModel,
+    sizes: BlockSizes,
+) -> Option<VictimInfo> {
+    candidates
+        .iter()
+        .copied()
+        .filter(|v| v.kv_blocks > 0)
+        .max_by(|a, b| {
+            demotion_score(a, cost, sizes)
+                .partial_cmp(&demotion_score(b, cost, sizes))
+                .unwrap_or(Ordering::Equal)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::policy::LinearCost;
+
+    fn sizes() -> BlockSizes {
+        BlockSizes::new(&ModelConfig::opt_tiny(), 16)
+    }
+
+    /// A cost model where recomputation is strictly pricier than loading,
+    /// so the remaining-tokens term matters.
+    fn gpu_bound_cost() -> CostModel {
+        let line = |slope: f64| LinearCost {
+            slope,
+            intercept: 0.0,
+            r_squared: 1.0,
+        };
+        CostModel {
+            kv_gen: line(4e-4),
+            load_kv: line(1e-4),
+            load_act: line(5e-5),
+            load_w: 1e-3,
+        }
+    }
+
+    fn v(id: u64, kv: usize, act: usize, remaining: usize) -> VictimInfo {
+        VictimInfo {
+            id,
+            kv_blocks: kv,
+            act_blocks: act,
+            remaining_tokens: remaining,
+        }
+    }
+
+    #[test]
+    fn no_kv_blocks_means_no_victim() {
+        let c = gpu_bound_cost();
+        assert!(select_victim(&[v(1, 0, 5, 10)], &c, sizes()).is_none());
+        assert!(select_victim(&[], &c, sizes()).is_none());
+    }
+
+    #[test]
+    fn prefers_more_freed_bytes_at_equal_penalty() {
+        let c = gpu_bound_cost();
+        // Same remaining work, same total blocks — the bigger KV holder
+        // frees more and costs no more per block.
+        let a = v(1, 8, 0, 10);
+        let b = v(2, 2, 6, 10);
+        let picked = select_victim(&[b, a], &c, sizes()).unwrap();
+        assert_eq!(picked.id, 1);
+    }
+
+    #[test]
+    fn prefers_shorter_remaining_generation() {
+        let c = gpu_bound_cost();
+        // Identical footprints; the one that finishes sooner pays the
+        // recompute penalty for fewer steps.
+        let a = v(1, 4, 2, 100);
+        let b = v(2, 4, 2, 5);
+        let picked = select_victim(&[a, b], &c, sizes()).unwrap();
+        assert_eq!(picked.id, 2);
+    }
+
+    #[test]
+    fn free_recomputation_window_scores_everything_high() {
+        // Recompute cheaper than the load it replaces: penalty clamps to
+        // zero and scores rank purely by bytes freed.
+        let line = |slope: f64| LinearCost {
+            slope,
+            intercept: 0.0,
+            r_squared: 1.0,
+        };
+        let c = CostModel {
+            kv_gen: line(5e-6),
+            load_kv: line(1e-4),
+            load_act: line(5e-5),
+            load_w: 1e-3,
+        };
+        assert_eq!(demotion_step_penalty(&v(1, 6, 2, 8), &c), 0.0);
+        let picked = select_victim(&[v(1, 2, 0, 8), v(2, 5, 0, 999)], &c, sizes()).unwrap();
+        assert_eq!(picked.id, 2);
+    }
+
+    #[test]
+    fn property_score_monotone_in_kv_blocks_when_free() {
+        crate::util::prop::check("victim-score-monotone", 100, |rng| {
+            let line = |slope: f64| LinearCost {
+                slope,
+                intercept: 0.0,
+                r_squared: 1.0,
+            };
+            // Recompute hides under the weight window: penalty-free.
+            let c = CostModel {
+                kv_gen: line(1e-6),
+                load_kv: line(1e-4),
+                load_act: line(5e-5),
+                load_w: 1e-3,
+            };
+            let kv = rng.range(1, 30);
+            let rem = rng.range(1, 50);
+            let s1 = demotion_score(&v(1, kv, 3, rem), &c, sizes());
+            let s2 = demotion_score(&v(2, kv + 1, 3, rem), &c, sizes());
+            assert!(s2 > s1, "freeing more must score higher: {s1} vs {s2}");
+        });
+    }
+}

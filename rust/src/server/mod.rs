@@ -1,5 +1,5 @@
 //! TCP serving front-end: newline-delimited JSON requests over a socket,
-//! batched into the engine — the "router" face of the coordinator.
+//! fed into the online scheduler — the "router" face of the coordinator.
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"id": 7, "prompt": [12, 99, ...], "max_new": 16}
@@ -8,9 +8,15 @@
 //!
 //! The engine owns PJRT state that is not `Send`, so it lives on a
 //! dedicated serving thread; the acceptor forwards parsed requests over a
-//! channel and the serving loop drains the queue in batches (continuous
-//! batching at batch-window granularity).
+//! channel and the serving loop runs the [`crate::sched::Scheduler`]:
+//! every iteration drains newly arrived requests into the admission
+//! queue, then ticks the scheduler (continuous batching at decode-step
+//! granularity, with ACT-demotion preemption under memory pressure) and
+//! writes back whatever completed. This replaces the seed's
+//! batch-window draining, where a long batch blocked every later arrival
+//! until the whole batch retired.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -22,6 +28,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::engine::{Engine, EngineConfig, Request};
+use crate::sched::{SchedConfig, Scheduler};
 use crate::util::Json;
 
 /// A queued request + where to send its response.
@@ -173,49 +180,80 @@ fn parse_request(line: &str, internal_id: u64) -> Result<(Request, i64)> {
     Ok((Request::new(internal_id, prompt, max_new), client_id))
 }
 
-fn serve_loop(mut engine: Engine, rx: Receiver<Pending>, stop: Arc<AtomicBool>) {
-    const MAX_BATCH: usize = 32;
+/// Route a newly arrived request into the scheduler, or answer with an
+/// error line immediately when submission is rejected.
+fn enqueue(
+    sched: &mut Scheduler<Engine>,
+    waiters: &mut HashMap<u64, (i64, Sender<String>)>,
+    p: Pending,
+) {
+    let id = p.req.id;
+    // Arrival is stamped at the moment the serving thread sees the
+    // request: virtual time and wall time advance together from the
+    // queue's point of view.
+    let arrival = sched.now();
+    match sched.submit(p.req, arrival) {
+        Ok(()) => {
+            waiters.insert(id, (p.client_id, p.resp));
+        }
+        Err(e) => {
+            let resp = Json::obj(vec![
+                ("id", Json::num(p.client_id as f64)),
+                ("error", Json::str(&format!("{e:#}"))),
+            ]);
+            let _ = p.resp.send(resp.to_string());
+        }
+    }
+}
+
+fn serve_loop(engine: Engine, rx: Receiver<Pending>, stop: Arc<AtomicBool>) {
+    let mut sched = Scheduler::new(engine, SchedConfig::default());
+    let mut waiters: HashMap<u64, (i64, Sender<String>)> = HashMap::new();
     while !stop.load(Ordering::SeqCst) {
-        // Block briefly for the first request, then drain a batch window.
-        let first = match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(p) => p,
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-            Err(_) => break,
-        };
-        let mut batch = vec![first];
-        while batch.len() < MAX_BATCH {
-            match rx.try_recv() {
-                Ok(p) => batch.push(p),
+        // Idle: block briefly for the next request instead of spinning.
+        if sched.is_idle() {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(p) => enqueue(&mut sched, &mut waiters, p),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(_) => break,
             }
         }
+        // Drain everything that arrived while the last step ran.
+        while let Ok(p) = rx.try_recv() {
+            enqueue(&mut sched, &mut waiters, p);
+        }
 
-        let reqs: Vec<Request> = batch.iter().map(|p| p.req.clone()).collect();
-        match engine.serve(&reqs) {
-            Ok((completions, report)) => {
-                log::info!("served batch: {}", report.summary());
-                for (comp, pending) in completions.iter().zip(&batch) {
-                    let resp = Json::obj(vec![
-                        ("id", Json::num(pending.client_id as f64)),
-                        (
-                            "tokens",
-                            Json::arr(comp.tokens.iter().map(|&t| Json::num(t as f64))),
-                        ),
-                    ]);
-                    let _ = pending.resp.send(resp.to_string());
+        match sched.tick() {
+            Ok(completions) => {
+                for comp in completions {
+                    if let Some((client_id, resp)) = waiters.remove(&comp.id) {
+                        let msg = Json::obj(vec![
+                            ("id", Json::num(client_id as f64)),
+                            (
+                                "tokens",
+                                Json::arr(comp.tokens.iter().map(|&t| Json::num(t as f64))),
+                            ),
+                        ]);
+                        let _ = resp.send(msg.to_string());
+                    }
                 }
             }
             Err(e) => {
-                for pending in &batch {
-                    let resp = Json::obj(vec![
-                        ("id", Json::num(pending.client_id as f64)),
+                // A scheduler/engine failure is fatal for every request in
+                // flight: answer them all and stop serving.
+                log::error!("scheduler error: {e:#}");
+                for (_, (client_id, resp)) in waiters.drain() {
+                    let msg = Json::obj(vec![
+                        ("id", Json::num(client_id as f64)),
                         ("error", Json::str(&format!("{e:#}"))),
                     ]);
-                    let _ = pending.resp.send(resp.to_string());
+                    let _ = resp.send(msg.to_string());
                 }
+                break;
             }
         }
     }
+    log::info!("serving done: {}", sched.report().summary());
 }
 
 /// Blocking client helper: send one request, wait for the response line.

@@ -1,13 +1,24 @@
-//! Synthetic workload generation (§5.1-style evaluation workloads).
+//! Synthetic workload generation (§5.1-style evaluation workloads) and
+//! arrival processes for online serving.
 //!
 //! The paper evaluates uniform batches (B identical-length prompts, fixed
 //! generation budget). Real traces are not public, so the generators here
-//! produce (a) the paper's uniform sweeps and (b) mixed-length batches
-//! with Zipf-distributed token ids for the packing/scheduling tests —
-//! enough variance to exercise the dynamic mini-batch former.
+//! produce (a) the paper's uniform sweeps, (b) mixed-length batches with
+//! Zipf-distributed token ids for the packing/scheduling tests, and
+//! (c) **timed traces** for the online scheduler: Poisson arrivals,
+//! bursty on/off arrivals, and deterministic replay of explicit
+//! per-request arrival timestamps.
 
 use crate::engine::Request;
 use crate::util::Rng;
+
+/// A request plus its arrival timestamp (virtual seconds) — the unit of
+/// the online scheduler's input traces.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub arrival: f64,
+    pub req: Request,
+}
 
 /// Generator for batches of generation requests.
 #[derive(Debug, Clone)]
@@ -85,6 +96,99 @@ impl WorkloadGen {
             })
             .collect()
     }
+
+    // ---- arrival processes (online serving traces) ---------------------
+
+    /// Exponential inter-arrival draw for a process of `rate` events/sec.
+    fn exp_gap(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.rng.f64()).ln() / rate
+    }
+
+    /// Poisson arrivals: `n` requests at `rate` requests/sec, prompt
+    /// lengths uniform in `[prompt_lo, prompt_hi)`, fixed generation
+    /// budget. Arrivals are sorted and start just after t=0.
+    pub fn poisson(
+        &mut self,
+        n: usize,
+        rate: f64,
+        prompt_lo: usize,
+        prompt_hi: usize,
+        gen: usize,
+    ) -> Vec<TimedRequest> {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += self.exp_gap(rate);
+                let id = self.next_id;
+                self.next_id += 1;
+                let len = self.rng.range(prompt_lo, prompt_hi);
+                TimedRequest {
+                    arrival: t,
+                    req: Request::new(id, self.prompt(len), gen),
+                }
+            })
+            .collect()
+    }
+
+    /// Bursty on/off arrivals (two-state process): bursts of
+    /// exponentially-distributed size (mean `burst_mean` requests) arrive
+    /// at `rate_on` requests/sec, separated by idle gaps of mean
+    /// `off_gap_secs`. Models flash crowds / diurnal edges — the traffic
+    /// shape that actually stresses admission and preemption.
+    pub fn bursty(
+        &mut self,
+        n: usize,
+        rate_on: f64,
+        burst_mean: f64,
+        off_gap_secs: f64,
+        prompt_lo: usize,
+        prompt_hi: usize,
+        gen: usize,
+    ) -> Vec<TimedRequest> {
+        assert!(rate_on > 0.0 && burst_mean >= 1.0 && off_gap_secs >= 0.0);
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0;
+        while out.len() < n {
+            let burst = (-(1.0 - self.rng.f64()).ln() * burst_mean).ceil().max(1.0) as usize;
+            for _ in 0..burst.min(n - out.len()) {
+                t += self.exp_gap(rate_on);
+                let id = self.next_id;
+                self.next_id += 1;
+                let len = self.rng.range(prompt_lo, prompt_hi);
+                out.push(TimedRequest {
+                    arrival: t,
+                    req: Request::new(id, self.prompt(len), gen),
+                });
+            }
+            if off_gap_secs > 0.0 {
+                t += self.exp_gap(1.0 / off_gap_secs);
+            }
+        }
+        out
+    }
+
+    /// Deterministic trace replay: explicit `(arrival, prompt, max_new)`
+    /// entries, e.g. parsed from a recorded production trace. Entries are
+    /// sorted by arrival; ids are assigned in arrival order.
+    pub fn replay(&mut self, entries: Vec<(f64, Vec<i32>, usize)>) -> Vec<TimedRequest> {
+        let mut entries = entries;
+        // total_cmp: a malformed trace (NaN timestamp) must not panic the
+        // sort; the scheduler rejects non-finite arrivals at submit.
+        entries.sort_by(|a, b| a.0.total_cmp(&b.0));
+        entries
+            .into_iter()
+            .map(|(arrival, prompt, max_new)| {
+                let id = self.next_id;
+                self.next_id += 1;
+                TimedRequest {
+                    arrival,
+                    req: Request::new(id, prompt, max_new),
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +238,74 @@ mod tests {
         assert!((12..=48).contains(&median), "median {median}");
         // long tail: max well above median
         assert!(*sorted.last().unwrap() > 2 * median);
+    }
+
+    #[test]
+    fn poisson_arrivals_sorted_with_matching_rate() {
+        let mut g = WorkloadGen::new(11, 2048);
+        let n = 400;
+        let rate = 5.0;
+        let trace = g.poisson(n, rate, 16, 64, 4);
+        assert_eq!(trace.len(), n);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "arrivals must be sorted");
+            assert_eq!(w[0].req.id + 1, w[1].req.id);
+        }
+        assert!(trace.iter().all(|t| (16..64).contains(&t.req.prompt.len())));
+        // Mean inter-arrival ~ 1/rate (law of large numbers, loose bound).
+        let span = trace.last().unwrap().arrival - trace[0].arrival;
+        let mean_gap = span / (n - 1) as f64;
+        assert!(
+            (mean_gap - 1.0 / rate).abs() < 0.35 / rate,
+            "mean gap {mean_gap} vs expected {}",
+            1.0 / rate
+        );
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        let a = WorkloadGen::new(5, 100).poisson(10, 2.0, 8, 16, 2);
+        let b = WorkloadGen::new(5, 100).poisson(10, 2.0, 8, 16, 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.req.prompt, y.req.prompt);
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_have_on_off_structure() {
+        let mut g = WorkloadGen::new(21, 2048);
+        let rate_on = 50.0;
+        let off_gap = 2.0;
+        let trace = g.bursty(300, rate_on, 8.0, off_gap, 16, 32, 2);
+        assert_eq!(trace.len(), 300);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let gaps: Vec<f64> = trace.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+        // Most gaps are tight (in-burst), but some are long (off periods):
+        // far more dispersion than a Poisson process of the same mean.
+        let long = gaps.iter().filter(|&&x| x > off_gap / 2.0).count();
+        let short = gaps.iter().filter(|&&x| x < 5.0 / rate_on).count();
+        assert!(long >= 5, "expected off-gaps, saw {long}");
+        assert!(short > gaps.len() / 2, "expected tight in-burst gaps, saw {short}");
+    }
+
+    #[test]
+    fn replay_sorts_and_preserves_entries() {
+        let mut g = WorkloadGen::new(0, 2048);
+        let trace = g.replay(vec![
+            (3.5, vec![9, 9], 4),
+            (0.5, vec![1, 2, 3], 2),
+            (2.0, vec![4], 1),
+        ]);
+        let arrivals: Vec<f64> = trace.iter().map(|t| t.arrival).collect();
+        assert_eq!(arrivals, vec![0.5, 2.0, 3.5]);
+        assert_eq!(trace[0].req.prompt, vec![1, 2, 3]);
+        assert_eq!(trace[0].req.max_new, 2);
+        assert_eq!(trace[2].req.prompt, vec![9, 9]);
+        // ids follow arrival order
+        assert_eq!(trace[0].req.id + 1, trace[1].req.id);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Offline-vendored minimal replacement for the `anyhow` crate.
+//!
+//! The build is fully offline (no crates.io), so HybridServe carries the
+//! subset of `anyhow` it actually uses: [`Error`] with context chaining,
+//! the [`Result`] alias, the [`Context`] extension trait for `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror the real crate where they matter here:
+//!  * `Display` prints the outermost message; `{:#}` (alternate) prints
+//!    the whole chain joined by `": "`;
+//!  * any `E: std::error::Error + Send + Sync + 'static` converts into
+//!    [`Error`] (so `?` works), and its `source()` chain is captured;
+//!  * [`Error`] itself does **not** implement `std::error::Error`, which
+//!    is what lets the blanket `From` impl coexist with the reflexive
+//!    `From<Error> for Error` from core.
+
+use std::fmt;
+
+/// An error chain: `chain[0]` is the outermost message, later entries are
+/// the causes (inner context layers and `source()` links).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a plain message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// All messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    fn from_std<E: std::error::Error>(err: &E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::from_std(&err)
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `$cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "leaf failure")
+        }
+    }
+    impl std::error::Error for Leaf {}
+
+    fn fails() -> Result<()> {
+        Err(Leaf)?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_and_context_chains() {
+        let err = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{err}"), "outer");
+        assert_eq!(format!("{err:#}"), "outer: leaf failure");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        let err = none.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{err}"), "missing 7");
+
+        fn guarded(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert!(guarded(2).is_ok());
+        assert_eq!(format!("{:#}", guarded(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{:#}", guarded(3).unwrap_err()), "three is right out");
+    }
+
+    #[test]
+    fn source_chain_is_captured() {
+        #[derive(Debug)]
+        struct Outer(Leaf);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer failure")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let err: Error = Outer(Leaf).into();
+        assert_eq!(format!("{err:#}"), "outer failure: leaf failure");
+    }
+}
