@@ -1,0 +1,47 @@
+//! Sharded-scaling sweep — OPT-30B/66B at TP = 1/2/4 for all four
+//! systems (the paper-scale configurations a single 24 GB GPU cannot
+//! serve), plus a prompt-length sweep of HybridServe at each degree.
+
+use hybridserve::config::SystemConfig;
+use hybridserve::figures::tab_sharding;
+use hybridserve::harness::FigureTable;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::ModelConfig;
+
+fn main() {
+    tab_sharding().emit();
+
+    // HybridServe across prompt lengths at each TP degree: the longer the
+    // context, the more cache traffic — and the more the aggregate link
+    // bandwidth of the extra shards pays off.
+    let mut t = FigureTable::new(
+        "sharded_prompt_sweep",
+        &["model", "prompt", "tp1", "tp2", "tp4", "tp4_straggler_gap"],
+    );
+    for m in [ModelConfig::opt_30b(), ModelConfig::opt_66b()] {
+        for prompt in [128usize, 512, 1152, 1920] {
+            let wl = Workload { batch: 64, prompt, gen: 64 };
+            let run = |tp: usize| {
+                simulate(
+                    &m,
+                    &SystemConfig::paper_testbed_tp(tp),
+                    System::HybridServe(PolicyConfig::full()),
+                    wl,
+                )
+            };
+            let r1 = run(1);
+            let r2 = run(2);
+            let r4 = run(4);
+            t.row(vec![
+                m.name.clone(),
+                prompt.to_string(),
+                format!("{:.2}", r1.throughput),
+                format!("{:.2}", r2.throughput),
+                format!("{:.2}", r4.throughput),
+                format!("{:.4}", r4.straggler_gap),
+            ]);
+        }
+    }
+    t.emit();
+}

@@ -10,4 +10,4 @@ mod model;
 mod system;
 
 pub use model::{ModelConfig, Dtype};
-pub use system::{SystemConfig, GpuSpec, InterconnectSpec, HostSpec};
+pub use system::{SystemConfig, GpuSpec, InterconnectSpec, HostSpec, ShardSpec};

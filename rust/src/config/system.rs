@@ -5,6 +5,12 @@
 //! 882 GB DDR4.  The discrete-event pipeline and the analytic simulator
 //! take all timing inputs from here, so alternative testbeds are a config
 //! change, not a code change.
+//!
+//! [`ShardSpec`] scales the envelope out to a tensor-parallel multi-GPU
+//! rig: `gpu` and `interconnect` stay PER-SHARD specs (each GPU has its
+//! own host link), and the shard spec adds the degree plus the inter-GPU
+//! collective fabric the all-gather barriers ride on. `tp = 1` is the
+//! paper's single-GPU testbed, bit-for-bit (see DESIGN.md §Sharding).
 
 
 
@@ -118,12 +124,69 @@ impl HostSpec {
     }
 }
 
+/// Tensor-parallel sharding of the system across `tp` identical GPUs.
+///
+/// Every shard holds a `1/tp` slice of each weight matrix and of each
+/// cached KV/ACT block (hidden-dimension sharding, Megatron-style), and
+/// owns its own host link, so aggregate host↔device bandwidth grows
+/// linearly with `tp`. The price is two collectives per decoder layer
+/// (the all-gather after attention and after the FFN), which run on the
+/// inter-GPU fabric described here.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardSpec {
+    /// Tensor-parallel degree (number of GPU shards). 1 = single GPU.
+    pub tp: usize,
+    /// Sustained per-link bandwidth of the inter-GPU collective fabric in
+    /// bytes/s (P2P over the PCIe switch for 4090-class rigs — no NVLink).
+    pub collective_bw: f64,
+    /// Fixed latency per collective launch (ring setup + kernel launch).
+    pub collective_latency_s: f64,
+}
+
+impl ShardSpec {
+    /// Single GPU — no sharding, no collectives. The default everywhere.
+    pub fn single() -> Self {
+        Self {
+            tp: 1,
+            collective_bw: 20.0e9,
+            collective_latency_s: 20e-6,
+        }
+    }
+
+    /// `tp` GPUs collected over P2P PCIe (what a multi-4090 rig has:
+    /// ~20 GB/s sustained through the switch, no NVLink).
+    pub fn pcie_p2p(tp: usize) -> Self {
+        assert!(tp >= 1, "tensor-parallel degree must be >= 1");
+        Self {
+            tp,
+            ..Self::single()
+        }
+    }
+
+    /// Seconds for one ring all-gather of a `bytes`-sized (full, unsharded)
+    /// activation payload across the shards. Each link carries the
+    /// `(tp-1)/tp` fraction of the payload it does not already hold; a
+    /// single shard needs no collective at all.
+    pub fn allgather_time(&self, bytes: usize) -> f64 {
+        if self.tp <= 1 {
+            return 0.0;
+        }
+        let frac = (self.tp - 1) as f64 / self.tp as f64;
+        self.collective_latency_s + bytes as f64 * frac / self.collective_bw
+    }
+}
+
 /// Full system configuration used by the engine and the simulator.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
+    /// Per-shard GPU spec (the whole GPU when `shard.tp == 1`).
     pub gpu: GpuSpec,
+    /// Per-shard host link (one PCIe link per GPU).
     pub interconnect: InterconnectSpec,
     pub host: HostSpec,
+    /// Tensor-parallel layout. [`ShardSpec::single`] reproduces the
+    /// paper's single-GPU testbed exactly.
+    pub shard: ShardSpec,
     /// Tokens per hybrid cache block (vLLM uses 16; the paper keeps block
     /// granularity for both KV and ACT blocks).
     pub block_tokens: usize,
@@ -142,9 +205,19 @@ impl SystemConfig {
             gpu: GpuSpec::rtx_4090(),
             interconnect: InterconnectSpec::pcie4_x16(),
             host: HostSpec::xeon_882gb(),
+            shard: ShardSpec::single(),
             block_tokens: 16,
             gpu_weight_fraction: 0.5,
             gpu_buffer_fraction: 0.25,
+        }
+    }
+
+    /// The paper testbed scaled out to `tp` tensor-parallel GPUs, one
+    /// PCIe 4.0 x16 link each, collected over P2P PCIe.
+    pub fn paper_testbed_tp(tp: usize) -> Self {
+        Self {
+            shard: ShardSpec::pcie_p2p(tp),
+            ..Self::paper_testbed()
         }
     }
 
@@ -171,6 +244,7 @@ impl SystemConfig {
             host: HostSpec {
                 memory_bytes: 4 << 30,
             },
+            shard: ShardSpec::single(),
             block_tokens: 16,
             gpu_weight_fraction: 0.5,
             gpu_buffer_fraction: 0.25,
@@ -192,6 +266,23 @@ impl SystemConfig {
         self.gpu
             .memory_bytes
             .saturating_sub(self.gpu_weight_budget() + self.gpu_buffer_budget())
+    }
+
+    /// Tensor-parallel degree (shorthand for `shard.tp`).
+    pub fn tp(&self) -> usize {
+        self.shard.tp
+    }
+
+    /// Aggregate sustained host→device bandwidth across all shard links —
+    /// the resource sharding multiplies (the binding one for offloading
+    /// systems, per the KV-offloading bottleneck study in PAPERS.md).
+    pub fn aggregate_h2d_bw(&self) -> f64 {
+        self.interconnect.h2d_bw * self.shard.tp as f64
+    }
+
+    /// Total device memory across all shards.
+    pub fn total_gpu_memory(&self) -> usize {
+        self.gpu.memory_bytes * self.shard.tp
     }
 }
 
@@ -216,4 +307,40 @@ mod tests {
         assert!(s.gpu_cache_budget() > 0);
     }
 
+    #[test]
+    fn single_shard_has_no_collective_cost() {
+        let s = ShardSpec::single();
+        assert_eq!(s.tp, 1);
+        assert_eq!(s.allgather_time(1 << 30), 0.0);
+        assert_eq!(ShardSpec::pcie_p2p(1), s);
+    }
+
+    #[test]
+    fn allgather_time_scales_with_payload_and_degree() {
+        let s2 = ShardSpec::pcie_p2p(2);
+        let s4 = ShardSpec::pcie_p2p(4);
+        assert!(s2.allgather_time(1 << 24) > 0.0);
+        assert!(s2.allgather_time(1 << 26) > s2.allgather_time(1 << 24));
+        // a larger ring moves a larger fraction of the payload per link
+        assert!(s4.allgather_time(1 << 26) > s2.allgather_time(1 << 26));
+        // and never more than the full payload over one link + latency
+        let full = s4.collective_latency_s + (1 << 26) as f64 / s4.collective_bw;
+        assert!(s4.allgather_time(1 << 26) < full);
+    }
+
+    #[test]
+    fn sharded_testbed_aggregates_links_and_memory() {
+        let one = SystemConfig::paper_testbed();
+        let four = SystemConfig::paper_testbed_tp(4);
+        assert_eq!(one.tp(), 1);
+        assert_eq!(four.tp(), 4);
+        assert_eq!(four.aggregate_h2d_bw(), 4.0 * one.aggregate_h2d_bw());
+        assert_eq!(four.total_gpu_memory(), 4 * one.total_gpu_memory());
+        // per-shard budgets are unchanged: each GPU still partitions its
+        // own 24 GB the same way
+        assert_eq!(four.gpu_weight_budget(), one.gpu_weight_budget());
+        assert_eq!(four.gpu_cache_budget(), one.gpu_cache_budget());
+        // tp=1 via the sharded constructor is the exact same config
+        assert_eq!(SystemConfig::paper_testbed_tp(1), one);
+    }
 }

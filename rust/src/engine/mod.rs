@@ -230,6 +230,16 @@ impl Engine {
         &self.model
     }
 
+    /// The hardware envelope this engine was configured with.
+    pub fn system(&self) -> &SystemConfig {
+        &self.cfg.sys
+    }
+
+    /// The discrete-event timeline the engine accounts its pipeline on.
+    pub fn timeline(&self) -> &Timeline {
+        &self.tl
+    }
+
     pub fn cost_model(&self) -> &CostModel {
         &self.cost
     }

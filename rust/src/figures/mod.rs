@@ -260,7 +260,60 @@ pub fn fig15() -> FigureTable {
     t
 }
 
-/// All figures in paper order (what `examples/paper_figures.rs` emits).
+/// Sharded-scaling table (beyond the paper's single-GPU envelope):
+/// throughput of the four systems at TP = 1/2/4 for OPT-30B and OPT-66B
+/// (B=128, prompt 512, 128 new tokens), HybridServe's chosen ACT block
+/// share (the Eq. 11 ratio shifting as per-shard weight slices start
+/// fitting device memory), and HybridServe's speedup over its own TP=1
+/// point.
+pub fn tab_sharding() -> FigureTable {
+    let mut t = FigureTable::new(
+        "tab_sharding_tp_scaling",
+        &[
+            "model",
+            "tp",
+            "deepspeed",
+            "flexgen",
+            "act_cache",
+            "hybrid",
+            "hybrid_act_share",
+            "hybrid_vs_tp1",
+            "collective_gb",
+        ],
+    );
+    for m in [ModelConfig::opt_30b(), ModelConfig::opt_66b()] {
+        let wl = Workload { batch: 128, prompt: 512, gen: 128 };
+        let base = simulate(
+            &m,
+            &SystemConfig::paper_testbed_tp(1),
+            System::HybridServe(PolicyConfig::full()),
+            wl,
+        )
+        .throughput;
+        for tp in [1usize, 2, 4] {
+            let sys = SystemConfig::paper_testbed_tp(tp);
+            let ds = simulate(&m, &sys, System::DeepSpeedInference, wl);
+            let fg = simulate(&m, &sys, System::FlexGen, wl);
+            let ac = simulate(&m, &sys, System::ActOnly, wl);
+            let hy = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+            t.row(vec![
+                m.name.clone(),
+                tp.to_string(),
+                f2(ds.throughput),
+                f2(fg.throughput),
+                f2(ac.throughput),
+                f2(hy.throughput),
+                f3(hy.act_block_share),
+                f2(hy.throughput / base),
+                f2(hy.collective_bytes as f64 / 1e9),
+            ]);
+        }
+    }
+    t
+}
+
+/// All figures in paper order (what `examples/paper_figures.rs` emits),
+/// plus the beyond-paper sharding table.
 pub fn all_figures() -> Vec<FigureTable> {
     vec![
         fig3a(),
@@ -273,6 +326,7 @@ pub fn all_figures() -> Vec<FigureTable> {
         fig13(),
         fig14(),
         fig15(),
+        tab_sharding(),
     ]
 }
 
@@ -297,6 +351,22 @@ mod tests {
             let fg: f64 = row[fg_col].parse().unwrap();
             let hy: f64 = row[hy_col].parse().unwrap();
             assert!(hy > fg, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn tab_sharding_scales_every_system() {
+        let t = tab_sharding();
+        assert_eq!(t.rows.len(), 6, "2 models x 3 TP degrees");
+        // Within each model, HybridServe throughput grows with TP.
+        for rows in t.rows.chunks(3) {
+            let hy: Vec<f64> = rows.iter().map(|r| r[5].parse().unwrap()).collect();
+            assert!(hy[1] > hy[0], "tp2 {} !> tp1 {}", hy[1], hy[0]);
+            assert!(hy[2] > hy[1], "tp4 {} !> tp2 {}", hy[2], hy[1]);
+            // TP=1 rows report no collective traffic; TP>1 rows do.
+            let coll: Vec<f64> = rows.iter().map(|r| r[8].parse().unwrap()).collect();
+            assert_eq!(coll[0], 0.0);
+            assert!(coll[2] > 0.0);
         }
     }
 

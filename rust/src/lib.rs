@@ -12,10 +12,13 @@
 //! `artifacts/*.hlo.txt` via the PJRT CPU client and serves from there.
 //!
 //! Module map (see DESIGN.md for the full inventory):
-//! - [`config`] — model (OPT family) + system (testbed) configuration
+//! - [`config`] — model (OPT family) + system (testbed) configuration,
+//!   incl. tensor-parallel sharding (`ShardSpec`)
 //! - [`util`] — offline-build substrates: JSON, PRNG, stats, prop-testing
 //! - [`memsim`] — GPU/host capacity accounting
-//! - [`pcie`] — interconnect model, traffic classes, two-lane timeline
+//! - [`pcie`] — interconnect model, traffic classes, and the 2×N-lane
+//!   sharded timeline (one PCIe + one GPU lane per shard, all-gather
+//!   barriers)
 //! - [`cache`] — hybrid KV/ACT block manager (PagedAttention-style),
 //!   including KV→ACT demotion (the preemption primitive)
 //! - [`policy`] — Algorithm 1 host allocation, Eq. 11 ratio upkeep,

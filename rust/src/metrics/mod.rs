@@ -130,6 +130,38 @@ pub fn latency_summary(completions: &[Completion]) -> LatencySummary {
 }
 
 // ----------------------------------------------------------------------
+// Per-shard utilization (sharded timelines)
+// ----------------------------------------------------------------------
+
+/// Per-shard lane utilization read off a sharded [`Timeline`] — the
+/// serving-side analogue of the simulator's per-shard report. Empty when
+/// the engine exposes no timeline (e.g. scheduler tests on a mock).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardUtilization {
+    /// GPU-lane utilization per shard (len == tp).
+    pub gpu: Vec<f64>,
+    /// PCIe-lane utilization per shard link.
+    pub pcie: Vec<f64>,
+}
+
+impl ShardUtilization {
+    pub fn from_timeline(tl: &Timeline) -> Self {
+        let n = tl.shards();
+        Self {
+            gpu: (0..n).map(|s| tl.utilization_on(s, Lane::Gpu)).collect(),
+            pcie: (0..n).map(|s| tl.utilization_on(s, Lane::PCIe)).collect(),
+        }
+    }
+
+    /// Fastest-vs-slowest GPU shard utilization spread: 0 for a perfectly
+    /// symmetric rig (or a single GPU), growing as one shard starts
+    /// gating the all-gather barriers.
+    pub fn straggler_gap(&self) -> f64 {
+        crate::util::stats::spread(&self.gpu)
+    }
+}
+
+// ----------------------------------------------------------------------
 // Online serving metrics (the scheduler's report)
 // ----------------------------------------------------------------------
 
@@ -237,6 +269,12 @@ pub struct SloReport {
     pub goodput: f64,
     /// Fraction of completed requests meeting the SLO.
     pub slo_attainment: f64,
+    /// Per-shard lane utilization (empty when the engine exposes no
+    /// timeline; len == tp otherwise).
+    pub shard_util: ShardUtilization,
+    /// Max-min spread of per-shard GPU utilization (0 when symmetric or
+    /// single-GPU).
+    pub straggler_gap: f64,
 }
 
 impl SloReport {
@@ -298,7 +336,16 @@ impl SloReport {
             } else {
                 met as f64 / timings.len() as f64
             },
+            shard_util: ShardUtilization::default(),
+            straggler_gap: 0.0,
         }
+    }
+
+    /// Attach per-shard utilization read off the serving timeline.
+    pub fn with_shard_utilization(mut self, tl: &Timeline) -> Self {
+        self.shard_util = ShardUtilization::from_timeline(tl);
+        self.straggler_gap = self.shard_util.straggler_gap();
+        self
     }
 
     /// One-line summary for logs/examples.
@@ -426,5 +473,123 @@ mod tests {
         let empty = SloReport::from_timings(0, &[], &slo, 0.0, 0, &[]);
         assert_eq!(empty.throughput, 0.0);
         assert_eq!(empty.slo_attainment, 0.0);
+    }
+
+    // ---- percentile-math edge cases (ISSUE 2 satellite) ---------------
+
+    fn timing(arrival: f64, first: f64, fin: f64, n: usize) -> RequestTiming {
+        RequestTiming {
+            arrival,
+            admitted: arrival,
+            first_token: first,
+            finished: fin,
+            generated: n,
+        }
+    }
+
+    #[test]
+    fn slo_report_empty_sample_set() {
+        let r = SloReport::from_timings(5, &[], &SloSpec::default(), 3.0, 1, &[]);
+        assert_eq!(r.submitted, 5);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.generated_tokens, 0);
+        // every percentile of an empty set is 0, not NaN
+        for p in [
+            r.queue_p50, r.queue_p95, r.queue_p99, r.queue_max, r.queue_mean, r.ttft_p50,
+            r.ttft_p95, r.ttft_p99, r.tpot_p50, r.tpot_p95, r.tpot_p99, r.latency_p50,
+            r.latency_p95, r.latency_p99,
+        ] {
+            assert_eq!(p, 0.0, "empty percentile must be 0");
+        }
+        assert_eq!(r.throughput, 0.0);
+        assert_eq!(r.goodput, 0.0);
+        assert_eq!(r.slo_attainment, 0.0);
+        assert_eq!(r.mean_queue_depth, 0.0);
+        assert_eq!(r.max_queue_depth, 0);
+    }
+
+    #[test]
+    fn slo_report_single_sample() {
+        // With one completion every percentile collapses to that sample.
+        let t = timing(1.0, 2.5, 6.5, 5);
+        let r = SloReport::from_timings(1, &[t], &SloSpec::default(), 10.0, 0, &[1]);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.ttft_p50, t.ttft());
+        assert_eq!(r.ttft_p95, t.ttft());
+        assert_eq!(r.ttft_p99, t.ttft());
+        assert_eq!(r.tpot_p50, t.tpot());
+        assert_eq!(r.tpot_p99, t.tpot());
+        assert_eq!(r.latency_p50, t.e2e());
+        assert_eq!(r.latency_p99, t.e2e());
+        assert_eq!(r.queue_p99, 0.0);
+        assert!((r.throughput - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_report_identical_latencies() {
+        // All-identical samples: interpolation must not drift any
+        // percentile off the common value.
+        let ts: Vec<RequestTiming> =
+            (0..7).map(|_| timing(0.0, 1.0, 4.0, 4)).collect();
+        let r = SloReport::from_timings(7, &ts, &SloSpec::default(), 10.0, 0, &[0]);
+        assert_eq!(r.ttft_p50, 1.0);
+        assert_eq!(r.ttft_p95, 1.0);
+        assert_eq!(r.ttft_p99, 1.0);
+        assert_eq!(r.tpot_p50, 1.0);
+        assert_eq!(r.latency_p50, 4.0);
+        assert_eq!(r.latency_p99, 4.0);
+        assert_eq!(r.slo_attainment, 1.0);
+    }
+
+    #[test]
+    fn slo_report_goodput_zero_when_every_request_misses() {
+        let slo = SloSpec {
+            ttft_secs: 0.5,
+            tpot_secs: 0.1,
+        };
+        let ts = vec![timing(0.0, 2.0, 8.0, 4), timing(0.0, 3.0, 9.0, 4)];
+        let r = SloReport::from_timings(2, &ts, &slo, 10.0, 0, &[0, 0]);
+        assert!(r.throughput > 0.0, "tokens were still generated");
+        assert_eq!(r.goodput, 0.0, "no request met the SLO");
+        assert_eq!(r.slo_attainment, 0.0);
+    }
+
+    // ---- per-shard utilization ----------------------------------------
+
+    #[test]
+    fn shard_utilization_reads_sharded_timeline() {
+        let mut tl = Timeline::sharded(2);
+        tl.schedule_on(0, Lane::Gpu, 0.0, 4.0);
+        tl.schedule_on(1, Lane::Gpu, 0.0, 1.0);
+        tl.schedule_on(1, Lane::PCIe, 0.0, 2.0);
+        let u = ShardUtilization::from_timeline(&tl);
+        assert_eq!(u.gpu.len(), 2);
+        assert_eq!(u.pcie.len(), 2);
+        assert!((u.gpu[0] - 1.0).abs() < 1e-12);
+        assert!((u.gpu[1] - 0.25).abs() < 1e-12);
+        assert!((u.pcie[1] - 0.5).abs() < 1e-12);
+        assert!((u.straggler_gap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_gap_zero_for_symmetric_and_empty() {
+        assert_eq!(ShardUtilization::default().straggler_gap(), 0.0);
+        let mut tl = Timeline::sharded(3);
+        for s in 0..3 {
+            tl.schedule_on(s, Lane::Gpu, 0.0, 2.0);
+        }
+        let u = ShardUtilization::from_timeline(&tl);
+        assert_eq!(u.straggler_gap(), 0.0);
+    }
+
+    #[test]
+    fn report_attaches_shard_utilization() {
+        let mut tl = Timeline::sharded(2);
+        tl.schedule_on(0, Lane::Gpu, 0.0, 2.0);
+        tl.schedule_on(1, Lane::Gpu, 0.0, 1.0);
+        let r = SloReport::from_timings(0, &[], &SloSpec::default(), 2.0, 0, &[])
+            .with_shard_utilization(&tl);
+        assert_eq!(r.shard_util.gpu.len(), 2);
+        assert!((r.straggler_gap - 0.5).abs() < 1e-12);
     }
 }

@@ -11,6 +11,12 @@
 //! never run two operations at once, and utilization is busy-time over
 //! makespan — the same "temporal utilization" definition the paper
 //! measures with Nsight (§5.1).
+//!
+//! Under tensor parallelism ([`crate::config::ShardSpec`]) the timeline
+//! carries `2×N` lanes — one PCIe + one GPU lane per shard — and
+//! [`Timeline::barrier`] models the all-gather synchronization points
+//! after attention and the FFN. A single-shard timeline is bit-for-bit
+//! the historical two-lane one (DESIGN.md §Sharding).
 
 mod timeline;
 mod traffic;

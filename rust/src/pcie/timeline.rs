@@ -1,7 +1,15 @@
-//! Two-lane discrete-event timeline (PCIe ∥ GPU), the accounting core of
-//! the Fig. 8 pipeline.
+//! Discrete-event timeline over `2×N` lanes (one PCIe + one GPU lane per
+//! tensor-parallel shard), the accounting core of the Fig. 8 pipeline.
+//!
+//! `Timeline::new()` is the paper's single-GPU two-lane timeline;
+//! [`Timeline::sharded`] generalizes it to N shards and adds
+//! [`Timeline::barrier`] for the all-gather synchronization points of
+//! tensor parallelism. The single-shard instance behaves bit-for-bit like
+//! the historical two-lane implementation (see the equivalence property
+//! tests below and `rust/tests/tp1_equivalence.rs`).
 
-/// A pipeline lane. The paper's timeline diagrams have exactly these two.
+/// A pipeline lane within one shard. The paper's timeline diagrams have
+/// exactly these two per GPU.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Lane {
     PCIe,
@@ -35,18 +43,22 @@ impl Span {
     }
 }
 
-/// Discrete-event schedule over the two lanes.
+/// Discrete-event schedule over `2×N` lanes.
 ///
 /// Each lane executes operations serially in scheduling order; an
 /// operation starts at `max(lane_free, ready_at)` where `ready_at`
 /// expresses its data dependencies (ends of earlier spans). Utilization
-/// and makespan fall straight out of the bookkeeping.
+/// and makespan fall straight out of the bookkeeping. Shard-addressed
+/// methods carry an `_on` suffix; the suffix-free methods address shard 0
+/// and are exactly the historical single-GPU API.
 #[derive(Debug, Clone)]
 pub struct Timeline {
-    lane_free: [f64; 2],
-    busy: [f64; 2],
+    shards: usize,
+    /// Indexed `shard * 2 + lane.idx()`.
+    lane_free: Vec<f64>,
+    busy: Vec<f64>,
     makespan: f64,
-    ops: [usize; 2],
+    ops: Vec<usize>,
 }
 
 impl Default for Timeline {
@@ -56,21 +68,49 @@ impl Default for Timeline {
 }
 
 impl Timeline {
+    /// Single-shard (two-lane) timeline — the paper's Fig. 8 pipeline.
     pub fn new() -> Self {
+        Self::sharded(1)
+    }
+
+    /// Timeline over `shards` tensor-parallel shards (2 lanes each).
+    pub fn sharded(shards: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
         Self {
-            lane_free: [0.0; 2],
-            busy: [0.0; 2],
+            shards,
+            lane_free: vec![0.0; 2 * shards],
+            busy: vec![0.0; 2 * shards],
             makespan: 0.0,
-            ops: [0; 2],
+            ops: vec![0; 2 * shards],
         }
     }
 
-    /// Schedule an operation of `duration` seconds on `lane`, not earlier
-    /// than `ready_at`. Returns the realized span.
+    /// Number of shards this timeline schedules over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn slot(&self, shard: usize, lane: Lane) -> usize {
+        assert!(
+            shard < self.shards,
+            "shard {shard} out of range ({} shards)",
+            self.shards
+        );
+        shard * 2 + lane.idx()
+    }
+
+    /// Schedule an operation of `duration` seconds on shard 0's `lane`,
+    /// not earlier than `ready_at`. Returns the realized span.
     pub fn schedule(&mut self, lane: Lane, ready_at: f64, duration: f64) -> Span {
+        self.schedule_on(0, lane, ready_at, duration)
+    }
+
+    /// Schedule an operation of `duration` seconds on `shard`'s `lane`,
+    /// not earlier than `ready_at`. Returns the realized span.
+    pub fn schedule_on(&mut self, shard: usize, lane: Lane, ready_at: f64, duration: f64) -> Span {
         assert!(duration >= 0.0, "negative duration");
         assert!(ready_at >= 0.0, "negative ready time");
-        let i = lane.idx();
+        let i = self.slot(shard, lane);
         let start = self.lane_free[i].max(ready_at);
         let end = start + duration;
         self.lane_free[i] = end;
@@ -80,12 +120,41 @@ impl Timeline {
         Span { start, end }
     }
 
-    /// Earliest time `lane` can start a new operation.
-    pub fn lane_free(&self, lane: Lane) -> f64 {
-        self.lane_free[lane.idx()]
+    /// Schedule one collective of `duration` seconds on EVERY shard's GPU
+    /// lane, starting when all GPU lanes are free and `ready_at` has
+    /// passed — the all-gather barrier after attention / FFN in tensor
+    /// parallelism. All shards run the identical span, so the slowest
+    /// shard gates everyone (the straggler effect the per-shard
+    /// utilization metrics expose).
+    pub fn barrier(&mut self, ready_at: f64, duration: f64) -> Span {
+        assert!(duration >= 0.0, "negative duration");
+        assert!(ready_at >= 0.0, "negative ready time");
+        let mut start = ready_at;
+        for s in 0..self.shards {
+            start = start.max(self.lane_free[self.slot(s, Lane::Gpu)]);
+        }
+        let end = start + duration;
+        for s in 0..self.shards {
+            let i = self.slot(s, Lane::Gpu);
+            self.lane_free[i] = end;
+            self.busy[i] += duration;
+            self.ops[i] += 1;
+        }
+        self.makespan = self.makespan.max(end);
+        Span { start, end }
     }
 
-    /// Advance the clock to `t` (idle time, both lanes): no operation may
+    /// Earliest time shard 0's `lane` can start a new operation.
+    pub fn lane_free(&self, lane: Lane) -> f64 {
+        self.lane_free_on(0, lane)
+    }
+
+    /// Earliest time `shard`'s `lane` can start a new operation.
+    pub fn lane_free_on(&self, shard: usize, lane: Lane) -> f64 {
+        self.lane_free[self.slot(shard, lane)]
+    }
+
+    /// Advance the clock to `t` (idle time, all lanes): no operation may
     /// start earlier. Used by the online scheduler to model request
     /// arrival times — an empty pipeline fast-forwards to the next
     /// arrival instead of serving it in the past. No-op if `t` is already
@@ -99,35 +168,55 @@ impl Timeline {
         self.makespan = self.makespan.max(t);
     }
 
-    /// Total busy seconds accumulated on `lane`.
+    /// Total busy seconds accumulated on shard 0's `lane`.
     pub fn busy(&self, lane: Lane) -> f64 {
-        self.busy[lane.idx()]
+        self.busy_on(0, lane)
     }
 
-    /// End of the last scheduled operation across both lanes.
+    /// Total busy seconds accumulated on `shard`'s `lane`.
+    pub fn busy_on(&self, shard: usize, lane: Lane) -> f64 {
+        self.busy[self.slot(shard, lane)]
+    }
+
+    /// End of the last scheduled operation across all lanes.
     pub fn makespan(&self) -> f64 {
         self.makespan
     }
 
-    /// Temporal utilization of `lane`: busy time / makespan (0 if empty).
-    /// Matches the paper's Nsight "percentage of cycles with the unit
-    /// active" definition.
+    /// Temporal utilization of shard 0's `lane`: busy time / makespan
+    /// (0 if empty). Matches the paper's Nsight "percentage of cycles
+    /// with the unit active" definition.
     pub fn utilization(&self, lane: Lane) -> f64 {
+        self.utilization_on(0, lane)
+    }
+
+    /// Temporal utilization of `shard`'s `lane`.
+    pub fn utilization_on(&self, shard: usize, lane: Lane) -> f64 {
         if self.makespan == 0.0 {
             0.0
         } else {
-            self.busy(lane) / self.makespan
+            self.busy_on(shard, lane) / self.makespan
         }
     }
 
-    /// Number of operations scheduled on `lane`.
+    /// Number of operations scheduled on shard 0's `lane`.
     pub fn op_count(&self, lane: Lane) -> usize {
-        self.ops[lane.idx()]
+        self.op_count_on(0, lane)
     }
 
-    /// Idle (bubble) seconds on `lane` up to the makespan.
+    /// Number of operations scheduled on `shard`'s `lane`.
+    pub fn op_count_on(&self, shard: usize, lane: Lane) -> usize {
+        self.ops[self.slot(shard, lane)]
+    }
+
+    /// Idle (bubble) seconds on shard 0's `lane` up to the makespan.
     pub fn idle(&self, lane: Lane) -> f64 {
-        self.makespan - self.busy(lane)
+        self.idle_on(0, lane)
+    }
+
+    /// Idle (bubble) seconds on `shard`'s `lane` up to the makespan.
+    pub fn idle_on(&self, shard: usize, lane: Lane) -> f64 {
+        self.makespan - self.busy_on(shard, lane)
     }
 }
 
@@ -185,6 +274,51 @@ mod tests {
     }
 
     #[test]
+    fn shards_are_independent_lanes() {
+        let mut t = Timeline::sharded(2);
+        let a = t.schedule_on(0, Lane::Gpu, 0.0, 2.0);
+        let b = t.schedule_on(1, Lane::Gpu, 0.0, 3.0);
+        // same lane kind on different shards does not serialize
+        assert_eq!(a.start, 0.0);
+        assert_eq!(b.start, 0.0);
+        assert_eq!(t.makespan(), 3.0);
+        assert_eq!(t.busy_on(0, Lane::Gpu), 2.0);
+        assert_eq!(t.busy_on(1, Lane::Gpu), 3.0);
+        assert_eq!(t.op_count_on(0, Lane::PCIe), 0);
+    }
+
+    #[test]
+    fn barrier_syncs_all_gpu_lanes() {
+        let mut t = Timeline::sharded(2);
+        t.schedule_on(0, Lane::Gpu, 0.0, 1.0);
+        t.schedule_on(1, Lane::Gpu, 0.0, 3.0); // straggler
+        let b = t.barrier(0.0, 0.5);
+        // the barrier waits for the slowest shard, then occupies everyone
+        assert_eq!(b.start, 3.0);
+        assert_eq!(b.end, 3.5);
+        assert_eq!(t.lane_free_on(0, Lane::Gpu), 3.5);
+        assert_eq!(t.lane_free_on(1, Lane::Gpu), 3.5);
+        // PCIe lanes are not touched by a GPU barrier
+        assert_eq!(t.lane_free_on(0, Lane::PCIe), 0.0);
+        // post-barrier work starts together
+        let next = t.schedule_on(0, Lane::Gpu, 0.0, 1.0);
+        assert_eq!(next.start, 3.5);
+    }
+
+    #[test]
+    fn barrier_on_single_shard_is_plain_gpu_op() {
+        let mut a = Timeline::sharded(1);
+        let mut b = Timeline::sharded(1);
+        a.schedule_on(0, Lane::Gpu, 0.0, 1.0);
+        b.schedule_on(0, Lane::Gpu, 0.0, 1.0);
+        let sa = a.barrier(2.0, 0.25);
+        let sb = b.schedule_on(0, Lane::Gpu, 2.0, 0.25);
+        assert_eq!(sa, sb);
+        assert_eq!(a.makespan(), b.makespan());
+        assert_eq!(a.busy(Lane::Gpu), b.busy(Lane::Gpu));
+    }
+
+    #[test]
     fn property_busy_never_exceeds_makespan() {
         crate::util::prop::check("timeline-busy", 200, |rng| {
             let mut t = Timeline::new();
@@ -201,6 +335,95 @@ mod tests {
             assert!(t.busy(Lane::PCIe) <= t.makespan() + 1e-9);
             assert!(t.busy(Lane::Gpu) <= t.makespan() + 1e-9);
             assert!(t.utilization(Lane::PCIe) <= 1.0 + 1e-9);
+        });
+    }
+
+    /// The ISSUE-2 invariant suite: on every lane of a TP=1 or TP>1
+    /// timeline, (a) no two spans overlap, (b) a span never starts before
+    /// its declared dependency ends, (c) utilization stays in [0, 1], and
+    /// (d) the makespan equals the maximum span end.
+    #[test]
+    fn property_sharded_timeline_invariants() {
+        crate::util::prop::check("timeline-sharded-invariants", 120, |rng| {
+            let shards = rng.range(1, 5);
+            let mut t = Timeline::sharded(shards);
+            // External per-lane span log, indexed like the timeline.
+            let mut spans: Vec<Vec<Span>> = vec![Vec::new(); 2 * shards];
+            let mut max_end = 0.0f64;
+            let mut last_end = 0.0f64;
+            for _ in 0..60 {
+                let dur = rng.f64() * 2.0;
+                let dep = if rng.f64() < 0.4 { last_end } else { 0.0 };
+                let span = if shards > 1 && rng.f64() < 0.2 {
+                    let span = t.barrier(dep, dur);
+                    for s in 0..shards {
+                        spans[s * 2 + Lane::Gpu.idx()].push(span);
+                    }
+                    span
+                } else {
+                    let s = rng.range(0, shards);
+                    let lane = if rng.f64() < 0.5 { Lane::PCIe } else { Lane::Gpu };
+                    let span = t.schedule_on(s, lane, dep, dur);
+                    spans[s * 2 + lane.idx()].push(span);
+                    span
+                };
+                // (b) dependencies are respected
+                assert!(span.start >= dep, "span starts before its dependency");
+                assert!(span.end >= span.start);
+                last_end = span.end;
+                max_end = max_end.max(span.end);
+            }
+            // (a) spans on one lane never overlap (each starts at or
+            // after the previous one on that lane ends)
+            for lane_spans in &spans {
+                for w in lane_spans.windows(2) {
+                    assert!(
+                        w[1].start >= w[0].end,
+                        "spans overlap on a lane: {:?} then {:?}",
+                        w[0],
+                        w[1]
+                    );
+                }
+            }
+            // (c) + (d)
+            assert_eq!(t.makespan(), max_end, "makespan != max span end");
+            for s in 0..shards {
+                for lane in [Lane::PCIe, Lane::Gpu] {
+                    let u = t.utilization_on(s, lane);
+                    assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
+                    assert!(t.busy_on(s, lane) <= t.makespan() + 1e-9);
+                    assert!(t.idle_on(s, lane) >= -1e-9);
+                }
+            }
+        });
+    }
+
+    /// `Timeline::sharded(1)` is bit-for-bit the historical two-lane
+    /// timeline under arbitrary schedules (the span-level half of the
+    /// TP=1 equivalence argument; the `SimResult`-level half lives in
+    /// `rust/tests/tp1_equivalence.rs`).
+    #[test]
+    fn property_tp1_sharded_matches_two_lane() {
+        crate::util::prop::check("timeline-tp1-equivalence", 100, |rng| {
+            let mut a = Timeline::new();
+            let mut b = Timeline::sharded(1);
+            let mut last_end = 0.0f64;
+            for _ in 0..40 {
+                let lane = if rng.f64() < 0.5 { Lane::PCIe } else { Lane::Gpu };
+                let ready = if rng.f64() < 0.3 { last_end } else { 0.0 };
+                let dur = rng.f64() * 2.0;
+                let sa = a.schedule(lane, ready, dur);
+                let sb = b.schedule_on(0, lane, ready, dur);
+                assert_eq!(sa, sb, "span diverged between TP=1 code paths");
+                last_end = sa.end;
+            }
+            assert_eq!(a.makespan(), b.makespan());
+            for lane in [Lane::PCIe, Lane::Gpu] {
+                assert_eq!(a.busy(lane), b.busy_on(0, lane));
+                assert_eq!(a.lane_free(lane), b.lane_free_on(0, lane));
+                assert_eq!(a.op_count(lane), b.op_count_on(0, lane));
+                assert_eq!(a.utilization(lane), b.utilization_on(0, lane));
+            }
         });
     }
 }

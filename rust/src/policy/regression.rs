@@ -73,6 +73,13 @@ pub trait CostSampler {
 /// Analytic sampler: derives costs from the roofline model in
 /// [`SystemConfig`] — used by the full-scale simulator and as a fallback
 /// when no runtime is available.
+///
+/// All samples are PER-SHARD under tensor parallelism: FLOPs, weight-
+/// panel reads and host-link bytes divide by `sys.shard.tp` (fixed
+/// latencies do not), so Algorithm 1 balances one shard's PCIe lane
+/// against that shard's GPU lane — which, with symmetric shards, balances
+/// the whole rig against its *aggregate* link bandwidth. `tp = 1` is
+/// bit-for-bit the historical single-GPU sampler.
 pub struct AnalyticSampler<'a> {
     pub model: &'a ModelConfig,
     pub sys: &'a SystemConfig,
@@ -82,32 +89,40 @@ impl<'a> AnalyticSampler<'a> {
     fn tokens(&self, blocks: usize) -> usize {
         blocks * self.sys.block_tokens
     }
+
+    fn tp(&self) -> f64 {
+        self.sys.shard.tp as f64
+    }
 }
 
 impl<'a> CostSampler for AnalyticSampler<'a> {
     fn sample_kv_gen(&mut self, blocks: usize) -> f64 {
-        let flops = self.model.kv_gen_flops(self.tokens(blocks)) as f64;
+        let flops = self.model.kv_gen_flops(self.tokens(blocks)) as f64 / self.tp();
         // Recomputation is a well-shaped dense GEMM: bounded by the MXU
         // rate and by streaming the weight panels from device memory.
         let compute = flops / self.sys.gpu.effective_kvgen_flops();
         let weight_reads =
             (2 * self.model.hidden * self.model.hidden * self.model.dtype.bytes()) as f64
+                / self.tp()
                 / self.sys.gpu.mem_bw;
         compute.max(weight_reads) + 5e-6 // kernel launch
     }
 
     fn sample_load_kv(&mut self, blocks: usize) -> f64 {
-        let bytes = self.model.kv_bytes_per_layer(self.tokens(blocks));
+        let bytes = self
+            .model
+            .kv_bytes_per_layer(self.tokens(blocks))
+            .div_ceil(self.sys.shard.tp);
         self.sys.interconnect.h2d_time(bytes)
     }
 
     fn weight_load_time(&mut self) -> f64 {
         // The engine keeps `gpu_weight_fraction` of the weights resident;
-        // only the spill streams per layer.
+        // only the spill of this shard's weight slice streams per layer.
         let resident = self.sys.gpu_weight_budget() as f64;
-        let total = self.model.total_weight_bytes() as f64;
+        let total = self.model.total_weight_bytes() as f64 / self.tp();
         let stream_fraction = ((total - resident) / total).clamp(0.0, 1.0);
-        let layer_bytes = self.model.layer_weight_bytes() as f64 * stream_fraction;
+        let layer_bytes = self.model.layer_weight_bytes() as f64 / self.tp() * stream_fraction;
         self.sys.interconnect.h2d_time(layer_bytes as usize)
     }
 }
@@ -200,6 +215,22 @@ mod tests {
         );
         // And each block recomputed instead of loaded saves real PCIe time.
         assert!(cm.load_kv.slope > 0.0);
+    }
+
+    #[test]
+    fn sharding_shifts_the_cost_balance() {
+        let m = ModelConfig::opt_30b();
+        let cm1 = CostModel::analytic(&m, &SystemConfig::paper_testbed_tp(1));
+        let cm4 = CostModel::analytic(&m, &SystemConfig::paper_testbed_tp(4));
+        // per-shard slopes shrink on both axes (more aggregate bandwidth,
+        // less per-shard recompute) ...
+        assert!(cm4.kv_gen.slope < cm1.kv_gen.slope);
+        assert!(cm4.load_kv.slope < cm1.load_kv.slope);
+        // ... but the weight-load window collapses much faster: at tp=4
+        // each shard's 15 GB slice nearly fits its 12 GB residency budget,
+        // so the "free recomputation" window Algorithm 1 feeds shrinks —
+        // this is why the Eq. 11 ratio shifts under TP.
+        assert!(cm4.load_w < 0.2 * cm1.load_w, "{} !<< {}", cm4.load_w, cm1.load_w);
     }
 
     #[test]

@@ -29,8 +29,18 @@
 //! ACT tier permanently (future blocks are ACT), which is exactly what
 //! keeps the reservation arithmetic sound after the demotion discount.
 //!
-//! See DESIGN.md §Scheduling for the full design discussion.
+//! ## Sharded pools
+//!
+//! Under tensor parallelism ([`crate::config::ShardSpec`]) every cached
+//! block is striped over the shards, so worst-case reservations divide
+//! across per-shard host pools and a demotion frees its discount on
+//! every shard at once. The [`ShardLedger`] keeps that arithmetic; with
+//! one shard it is exactly the global byte check used before sharding.
+//!
+//! See DESIGN.md §Scheduling and §Sharding for the full design
+//! discussion.
 
+pub mod shard;
 pub mod victim;
 
 use std::collections::{HashMap, VecDeque};
@@ -39,10 +49,11 @@ use anyhow::Result;
 
 use crate::cache::{BlockSizes, DemotionReceipt};
 use crate::engine::{Completion, Engine, Request};
-use crate::metrics::{RequestTiming, SloReport, SloSpec};
+use crate::metrics::{RequestTiming, ShardUtilization, SloReport, SloSpec};
 use crate::policy::CostModel;
 use crate::workload::TimedRequest;
 
+pub use shard::ShardLedger;
 pub use victim::{demotion_score, select_victim, VictimInfo};
 
 /// The engine surface the scheduler drives. [`Engine`] implements it; the
@@ -85,6 +96,16 @@ pub trait StepEngine {
     fn cost_model(&self) -> CostModel;
     /// Hybrid cache block byte sizes.
     fn block_sizes(&self) -> BlockSizes;
+    /// Tensor-parallel degree of the backing system (how many host pools
+    /// reservations stripe over). Single-GPU engines keep the default.
+    fn shard_count(&self) -> usize {
+        1
+    }
+    /// Per-shard lane utilization of the engine's timeline, when the
+    /// engine exposes one (`None` for mocks without a timeline).
+    fn shard_utilization(&self) -> Option<ShardUtilization> {
+        None
+    }
 }
 
 impl StepEngine for Engine {
@@ -167,6 +188,14 @@ impl StepEngine for Engine {
     fn block_sizes(&self) -> BlockSizes {
         Engine::block_sizes(self)
     }
+
+    fn shard_count(&self) -> usize {
+        Engine::system(self).shard.tp
+    }
+
+    fn shard_utilization(&self) -> Option<ShardUtilization> {
+        Some(ShardUtilization::from_timeline(Engine::timeline(self)))
+    }
 }
 
 /// Scheduler tuning knobs.
@@ -203,7 +232,10 @@ struct Waiting {
 struct AdmitRecord {
     arrival: f64,
     admitted: f64,
+    /// Worst-case host bytes reserved across all shards.
     reserved: usize,
+    /// The per-shard slice booked in the [`ShardLedger`].
+    reserved_shard: usize,
 }
 
 /// The online scheduler. Owns the engine; drive it with
@@ -216,7 +248,14 @@ pub struct Scheduler<E: StepEngine> {
     running: Vec<u64>,
     preempted: Vec<u64>,
     admitted: HashMap<u64, AdmitRecord>,
+    /// Total reserved bytes across the whole rig — reporting/diagnostics
+    /// only. The ADMISSION AUTHORITY is the ledger below; the two are
+    /// updated together at admit/retire/demote (they differ in unit:
+    /// bytes vs per-shard stripes, which round).
     reserved_total: usize,
+    /// Per-shard reservation accounting (one pool per shard; a single
+    /// pool on single-GPU engines).
+    ledger: ShardLedger,
     timings: Vec<RequestTiming>,
     depth_samples: Vec<usize>,
     preemptions: usize,
@@ -225,6 +264,7 @@ pub struct Scheduler<E: StepEngine> {
 
 impl<E: StepEngine> Scheduler<E> {
     pub fn new(eng: E, cfg: SchedConfig) -> Self {
+        let ledger = ShardLedger::new(eng.host_capacity_bytes(), eng.shard_count());
         Self {
             eng,
             cfg,
@@ -233,6 +273,7 @@ impl<E: StepEngine> Scheduler<E> {
             preempted: Vec::new(),
             admitted: HashMap::new(),
             reserved_total: 0,
+            ledger,
             timings: Vec::new(),
             depth_samples: Vec::new(),
             preemptions: 0,
@@ -300,7 +341,7 @@ impl<E: StepEngine> Scheduler<E> {
             };
             let need = self.eng.projected_host_bytes(plen, mnew);
             let capacity = self.eng.host_capacity_bytes();
-            if self.reserved_total + need > capacity {
+            if !self.ledger.fits(need) {
                 let freed_enough = self.cfg.preemption && self.preempt_until(need)?;
                 if !freed_enough {
                     anyhow::ensure!(
@@ -314,12 +355,14 @@ impl<E: StepEngine> Scheduler<E> {
             }
             let w = self.waiting.pop_front().unwrap();
             self.eng.admit(&w.req)?;
+            let reserved_shard = self.ledger.reserve(need);
             self.admitted.insert(
                 id,
                 AdmitRecord {
                     arrival,
                     admitted: now,
                     reserved: need,
+                    reserved_shard,
                 },
             );
             self.reserved_total += need;
@@ -354,6 +397,7 @@ impl<E: StepEngine> Scheduler<E> {
                 .remove(&c.id)
                 .expect("completion for a request the scheduler never admitted");
             self.reserved_total -= rec.reserved;
+            self.ledger.release(rec.reserved_shard);
             self.timings.push(RequestTiming {
                 arrival: rec.arrival,
                 admitted: rec.admitted,
@@ -375,7 +419,8 @@ impl<E: StepEngine> Scheduler<E> {
         let cost = self.eng.cost_model();
         let sizes = self.eng.block_sizes();
         let discount = sizes.kv_bytes - sizes.act_bytes;
-        while self.reserved_total + need > self.eng.host_capacity_bytes() {
+        let shards = self.ledger.shards();
+        while !self.ledger.fits(need) {
             let mut candidates = Vec::with_capacity(self.running.len());
             for &id in &self.running {
                 candidates.push(self.eng.victim_info(id)?);
@@ -389,12 +434,17 @@ impl<E: StepEngine> Scheduler<E> {
             }
             // The demoted blocks can never be KV again, so the victim's
             // worst-case footprint — and with it the reservation — shrinks
-            // by the KV/ACT byte difference per block.
-            let freed = receipt.blocks() * discount;
+            // by the KV/ACT byte difference per block, on every shard the
+            // blocks are striped over. The per-shard discount rounds DOWN
+            // so the remaining stripe still covers the remaining
+            // worst-case footprint.
             let rec = self.admitted.get_mut(&v.id).expect("victim not admitted");
-            let freed = freed.min(rec.reserved);
+            let freed = (receipt.blocks() * discount).min(rec.reserved);
+            let freed_shard = (freed / shards).min(rec.reserved_shard);
             rec.reserved -= freed;
+            rec.reserved_shard -= freed_shard;
             self.reserved_total -= freed;
+            self.ledger.release(freed_shard);
             self.eng.pause(v.id)?;
             self.running.retain(|&x| x != v.id);
             self.preempted.push(v.id);
@@ -475,16 +525,28 @@ impl<E: StepEngine> Scheduler<E> {
         self.preemptions
     }
 
-    /// The online metrics report over everything completed so far.
+    /// The online metrics report over everything completed so far,
+    /// including per-shard utilization when the engine exposes a
+    /// timeline.
     pub fn report(&self) -> SloReport {
-        SloReport::from_timings(
+        let mut report = SloReport::from_timings(
             self.submitted,
             &self.timings,
             &self.cfg.slo,
             self.eng.now(),
             self.preemptions,
             &self.depth_samples,
-        )
+        );
+        if let Some(util) = self.eng.shard_utilization() {
+            report.straggler_gap = util.straggler_gap();
+            report.shard_util = util;
+        }
+        report
+    }
+
+    /// The per-shard reservation ledger (introspection).
+    pub fn ledger(&self) -> &ShardLedger {
+        &self.ledger
     }
 
     pub fn engine(&self) -> &E {
@@ -532,11 +594,17 @@ mod tests {
         clock: f64,
         round_secs: f64,
         cost: CostModel,
+        shards: usize,
     }
 
     impl MockEngine {
         /// `host_blocks` is the host pool capacity in KV-block units.
         fn new(host_blocks: usize, ratio: BlockRatio) -> Self {
+            Self::sharded(host_blocks, ratio, 1)
+        }
+
+        /// Same, striped over `shards` tensor-parallel host pools.
+        fn sharded(host_blocks: usize, ratio: BlockRatio, shards: usize) -> Self {
             let sizes = crate::cache::BlockSizes::new(&ModelConfig::opt_tiny(), 16);
             Self {
                 blocks: BlockManager::new(sizes, 0, host_blocks * sizes.kv_bytes),
@@ -546,6 +614,7 @@ mod tests {
                 clock: 0.0,
                 round_secs: 0.1,
                 cost: CostModel::analytic(&ModelConfig::opt_tiny(), &SystemConfig::tiny_testbed()),
+                shards,
             }
         }
 
@@ -725,6 +794,10 @@ mod tests {
         fn block_sizes(&self) -> BlockSizes {
             self.blocks.sizes()
         }
+
+        fn shard_count(&self) -> usize {
+            self.shards
+        }
     }
 
     fn sched(host_blocks: usize, ratio: BlockRatio, cfg: SchedConfig) -> Scheduler<MockEngine> {
@@ -856,7 +929,56 @@ mod tests {
         let done = s.run_to_completion().unwrap();
         assert_eq!(done.len(), 6);
         assert_eq!(s.reserved_total, 0, "all reservations must be released");
+        assert_eq!(s.ledger().reserved_per_shard(), 0, "ledger must drain too");
         assert_eq!(s.engine().host_free_bytes(), s.engine().host_capacity_bytes());
+    }
+
+    #[test]
+    fn sharded_reservations_divide_across_pools() {
+        // 4 shards over a 64-block pool: each pool holds 16 KV-block
+        // units, and every admission books a quarter-stripe on each.
+        let eng = MockEngine::sharded(64, BlockRatio::new(1, 1), 4);
+        let mut s = Scheduler::new(eng, SchedConfig::default());
+        assert_eq!(s.ledger().shards(), 4);
+        let cap = s.engine().host_capacity_bytes();
+        assert_eq!(s.ledger().capacity_per_shard(), cap / 4);
+        s.submit(req(1, 64, 4), 0.0).unwrap();
+        s.submit(req(2, 64, 4), 0.0).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(s.ledger().reserved_per_shard(), 0);
+        assert_eq!(s.reserved_total, 0);
+    }
+
+    #[test]
+    fn sharded_memory_pressure_demotes_and_everyone_finishes() {
+        // Same pressure scenario as the single-pool test, but striped
+        // over 2 shards: demotion must free its discount on every shard
+        // or the fourth request can never be admitted.
+        let eng = MockEngine::sharded(16, BlockRatio::new(1, 1), 2);
+        let mut s = Scheduler::new(eng, SchedConfig::default());
+        for (i, arr) in [0.0, 0.01, 0.02, 0.03].into_iter().enumerate() {
+            s.submit(req(i as u64 + 1, 64, 4), arr).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4, "preempted and late requests must all finish");
+        let r = s.report();
+        assert!(r.preemptions >= 1, "expected at least one ACT demotion");
+        assert_eq!(s.ledger().reserved_per_shard(), 0);
+        assert_eq!(s.preempted_count(), 0);
+        assert_eq!(s.running_count(), 0);
+    }
+
+    #[test]
+    fn report_has_no_shard_util_without_a_timeline() {
+        // The mock exposes no timeline, so the report keeps the empty
+        // default rather than inventing per-shard numbers.
+        let mut s = sched(64, BlockRatio::new(1, 1), SchedConfig::default());
+        s.submit(req(1, 16, 2), 0.0).unwrap();
+        s.run_to_completion().unwrap();
+        let r = s.report();
+        assert!(r.shard_util.gpu.is_empty());
+        assert_eq!(r.straggler_gap, 0.0);
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Per-shard reservation ledger for the admission controller.
+//!
+//! Under tensor parallelism every cached block is striped across all
+//! shards: a request's worst-case host footprint divides evenly over the
+//! `tp` host-memory pools (one pinned-buffer arena per GPU link), and a
+//! KV→ACT demotion frees its byte discount on *every* shard at once. The
+//! ledger keeps that per-shard arithmetic in one place so the scheduler's
+//! admission check stays a single `fits` call. With one shard it
+//! degenerates to exactly the global `reserved + need <= capacity` test
+//! the scheduler used before sharding.
+
+/// Reserved-byte accounting across `shards` symmetric host pools.
+#[derive(Debug, Clone)]
+pub struct ShardLedger {
+    cap_per_shard: usize,
+    reserved: Vec<usize>,
+}
+
+impl ShardLedger {
+    /// Split `total_capacity` bytes of host cache evenly over `shards`
+    /// pools. The per-shard capacity rounds UP like the per-shard
+    /// reservations do, so any request the engine's `validate` accepted
+    /// (`need <= total_capacity`) also fits an empty ledger — floor
+    /// rounding here would spuriously reject a pool-filling request on a
+    /// capacity not divisible by the shard count.
+    pub fn new(total_capacity: usize, shards: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        Self {
+            cap_per_shard: total_capacity.div_ceil(shards),
+            reserved: vec![0; shards],
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.reserved.len()
+    }
+
+    /// Per-shard slice of a `total`-byte reservation (rounded up — a
+    /// striped block occupies its full stripe on every shard).
+    pub fn per_shard(&self, total: usize) -> usize {
+        total.div_ceil(self.reserved.len())
+    }
+
+    /// Would a `total`-byte reservation fit on every shard right now?
+    pub fn fits(&self, total: usize) -> bool {
+        let need = self.per_shard(total);
+        self.reserved.iter().all(|&r| r + need <= self.cap_per_shard)
+    }
+
+    /// Book a `total`-byte reservation on every shard; returns the
+    /// per-shard amount actually booked (pass it back to [`Self::release`]
+    /// when the request retires).
+    pub fn reserve(&mut self, total: usize) -> usize {
+        let need = self.per_shard(total);
+        for r in &mut self.reserved {
+            *r += need;
+        }
+        need
+    }
+
+    /// Release `per_shard` bytes on every shard (an amount previously
+    /// booked by [`Self::reserve`], possibly shrunk by demotion
+    /// discounts).
+    pub fn release(&mut self, per_shard: usize) {
+        for r in &mut self.reserved {
+            *r = r
+                .checked_sub(per_shard)
+                .expect("ledger release exceeds reservation");
+        }
+    }
+
+    /// Highest per-shard reservation level (all shards move together
+    /// under symmetric striping, so this is also the lowest).
+    pub fn reserved_per_shard(&self) -> usize {
+        self.reserved.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn capacity_per_shard(&self) -> usize {
+        self.cap_per_shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_is_global_accounting() {
+        let mut l = ShardLedger::new(1000, 1);
+        assert_eq!(l.capacity_per_shard(), 1000);
+        assert_eq!(l.per_shard(301), 301);
+        assert!(l.fits(1000));
+        let booked = l.reserve(700);
+        assert_eq!(booked, 700);
+        assert!(l.fits(300));
+        assert!(!l.fits(301));
+        l.release(700);
+        assert_eq!(l.reserved_per_shard(), 0);
+    }
+
+    #[test]
+    fn striping_divides_and_rounds_up() {
+        let mut l = ShardLedger::new(1000, 4);
+        assert_eq!(l.capacity_per_shard(), 250);
+        assert_eq!(l.per_shard(1000), 250);
+        assert_eq!(l.per_shard(1001), 251); // stripe rounds up
+        let booked = l.reserve(999);
+        assert_eq!(booked, 250);
+        // every shard is at 250/250 now
+        assert!(!l.fits(1));
+        l.release(250);
+        assert!(l.fits(1000));
+    }
+
+    #[test]
+    fn demotion_discount_frees_on_every_shard() {
+        let mut l = ShardLedger::new(800, 2);
+        let booked = l.reserve(800); // 400 per shard
+        assert!(!l.fits(2));
+        // a demotion halves the victim's footprint: release the discount
+        // on both shards, keep the rest booked
+        let discount = l.per_shard(400);
+        l.release(discount);
+        assert_eq!(l.reserved_per_shard(), booked - discount);
+        assert!(l.fits(400));
+        assert!(!l.fits(402));
+    }
+
+    #[test]
+    fn full_pool_request_fits_with_odd_capacity() {
+        // 999 B over 2 shards: per-shard reservations round up to 500,
+        // so the capacity must too — a request the engine validated
+        // against the 999 B pool must fit the empty ledger.
+        let l = ShardLedger::new(999, 2);
+        assert_eq!(l.capacity_per_shard(), 500);
+        assert!(l.fits(999));
+    }
+
+    #[test]
+    #[should_panic(expected = "release exceeds reservation")]
+    fn over_release_panics() {
+        let mut l = ShardLedger::new(100, 2);
+        l.reserve(10);
+        l.release(6);
+    }
+
+    #[test]
+    fn property_ledger_never_oversubscribes() {
+        crate::util::prop::check("shard-ledger", 100, |rng| {
+            let shards = rng.range(1, 5);
+            let cap = rng.range(1 << 10, 1 << 20);
+            let mut l = ShardLedger::new(cap, shards);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..200 {
+                if rng.f64() < 0.6 || live.is_empty() {
+                    let want = rng.range(1, cap / 2 + 2);
+                    if l.fits(want) {
+                        live.push(l.reserve(want));
+                    }
+                } else {
+                    let i = rng.range(0, live.len());
+                    l.release(live.swap_remove(i));
+                }
+                assert!(l.reserved_per_shard() <= l.capacity_per_shard());
+                let expect: usize = live.iter().sum();
+                assert_eq!(l.reserved_per_shard(), expect, "ledger drifted");
+            }
+            for b in live.drain(..) {
+                l.release(b);
+            }
+            assert_eq!(l.reserved_per_shard(), 0);
+        });
+    }
+}

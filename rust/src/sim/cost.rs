@@ -1,6 +1,13 @@
 //! Analytic GPU/PCIe cost functions for full-scale OPT models on the
 //! paper's RTX 4090 testbed (roofline-style; see DESIGN.md §Hardware-
 //! Adaptation for why absolute numbers are model-derived).
+//!
+//! All costs are PER-SHARD under tensor parallelism: each of the `tp`
+//! GPUs holds a `1/tp` slice of every weight matrix and every cached
+//! block along the hidden dimension, so its FLOPs, device-memory reads
+//! and host-link bytes all divide by `tp` (fixed launch/DMA latencies do
+//! not). With `tp = 1` every expression reduces bit-for-bit to the
+//! single-GPU model — the TP=1 equivalence test pins that.
 
 use crate::config::{ModelConfig, SystemConfig};
 
@@ -11,24 +18,50 @@ use crate::config::{ModelConfig, SystemConfig};
 pub struct SimCost {
     pub model: ModelConfig,
     pub sys: SystemConfig,
-    /// Fraction of each layer's weights streamed from host per use.
+    /// Fraction of each layer's (per-shard) weights streamed from host
+    /// per use.
     pub stream_frac: f64,
+    /// Tensor-parallel degree (cached from `sys.shard.tp`).
+    pub tp: usize,
 }
 
 impl SimCost {
     pub fn new(model: &ModelConfig, sys: &SystemConfig) -> Self {
-        let total = model.total_weight_bytes() as f64;
-        let stream_frac = ((total - sys.gpu_weight_budget() as f64) / total).clamp(0.0, 1.0);
+        let tp = sys.shard.tp;
+        // Per-shard weight bytes vs this shard's resident budget: with
+        // more shards each GPU holds a smaller slice, so the streamed
+        // fraction shrinks (and can reach 0, closing the recomputation
+        // window — which is what shifts the Eq. 11 ratio under TP).
+        let shard_total = model.total_weight_bytes() as f64 / tp as f64;
+        let stream_frac =
+            ((shard_total - sys.gpu_weight_budget() as f64) / shard_total).clamp(0.0, 1.0);
         Self {
             model: model.clone(),
             sys: sys.clone(),
             stream_frac,
+            tp,
         }
     }
 
-    /// PCIe time to stream one layer's non-resident weights.
+    fn tp_f(&self) -> f64 {
+        self.tp as f64
+    }
+
+    /// This shard's slice of a `bytes`-sized full tensor (identity at
+    /// `tp = 1`).
+    pub fn shard_bytes(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.tp)
+    }
+
+    /// One shard's slice of a layer's weights in bytes.
+    pub fn shard_layer_weight_bytes(&self) -> usize {
+        self.model.layer_weight_bytes().div_ceil(self.tp)
+    }
+
+    /// PCIe time to stream one layer's non-resident weight slice over one
+    /// shard's host link.
     pub fn weight_stream_time(&self) -> f64 {
-        let bytes = (self.model.layer_weight_bytes() as f64 * self.stream_frac) as usize;
+        let bytes = (self.shard_layer_weight_bytes() as f64 * self.stream_frac) as usize;
         if bytes == 0 {
             0.0
         } else {
@@ -36,44 +69,49 @@ impl SimCost {
         }
     }
 
-    /// PCIe time to load one layer's share of KV for `tokens` tokens.
+    /// PCIe time to load one layer's per-shard share of KV for `tokens`
+    /// tokens.
     pub fn kv_load_time(&self, tokens: usize) -> f64 {
         if tokens == 0 {
             return 0.0;
         }
         self.sys
             .interconnect
-            .h2d_time(self.model.kv_bytes_per_layer(tokens))
+            .h2d_time(self.shard_bytes(self.model.kv_bytes_per_layer(tokens)))
     }
 
-    /// PCIe time to load one layer's share of ACT checkpoints.
+    /// PCIe time to load one layer's per-shard share of ACT checkpoints.
     pub fn act_load_time(&self, tokens: usize) -> f64 {
         if tokens == 0 {
             return 0.0;
         }
         self.sys
             .interconnect
-            .h2d_time(self.model.act_bytes_per_layer(tokens))
+            .h2d_time(self.shard_bytes(self.model.act_bytes_per_layer(tokens)))
     }
 
-    /// GPU time to recompute K/V for `tokens` checkpointed tokens in one
-    /// layer (Eq. 7): a skinny GEMM bounded by MXU rate and by streaming
-    /// the two weight panels from device memory.
+    /// GPU time to recompute this shard's K/V slice for `tokens`
+    /// checkpointed tokens in one layer (Eq. 7): a skinny GEMM bounded by
+    /// MXU rate and by streaming the two weight panels from device
+    /// memory. Both the FLOPs and the panel bytes divide by `tp`.
     pub fn kv_gen_time(&self, tokens: usize) -> f64 {
         if tokens == 0 {
             return 0.0;
         }
-        let flops = self.model.kv_gen_flops(tokens) as f64;
+        let flops = self.model.kv_gen_flops(tokens) as f64 / self.tp_f();
         let compute = flops / self.sys.gpu.effective_kvgen_flops();
         let panel_bytes =
-            (2 * self.model.hidden * self.model.hidden * self.model.dtype.bytes()) as f64;
+            (2 * self.model.hidden * self.model.hidden * self.model.dtype.bytes()) as f64
+                / self.tp_f();
         let mem = panel_bytes / self.sys.gpu.mem_bw;
         compute.max(mem) + 5e-6
     }
 
-    /// GPU time for one decoder layer's forward over `new_tokens` query
-    /// tokens total (across the mini-batch) with per-request context
-    /// `ctx` and `batch` requests.
+    /// GPU time for one decoder layer's per-shard forward over
+    /// `new_tokens` query tokens total (across the mini-batch) with
+    /// per-request context `ctx` and `batch` requests. Every shard sees
+    /// all tokens but only its `1/tp` slice of heads/FFN columns; the
+    /// kernel-launch constant stays per shard.
     pub fn layer_forward_time(&self, batch: usize, new_per_req: usize, ctx: usize) -> f64 {
         if batch == 0 || new_per_req == 0 {
             return 0.0;
@@ -83,13 +121,14 @@ impl SimCost {
         let f = m.ffn as f64;
         let n = (batch * new_per_req) as f64;
         // GEMM part: QKV + proj + FFN (weights shared across the batch).
-        let gemm_flops = n * (8.0 * h * h + 4.0 * h * f);
+        let gemm_flops = n * (8.0 * h * h + 4.0 * h * f) / self.tp_f();
         // Attention part: memory-bound reads of per-request KV.
-        let attn_flops = (batch * new_per_req) as f64 * 4.0 * ctx as f64 * h;
+        let attn_flops = (batch * new_per_req) as f64 * 4.0 * ctx as f64 * h / self.tp_f();
         let gemm = gemm_flops / self.sys.gpu.effective_gemm_flops();
         let attn = attn_flops / self.sys.gpu.effective_attn_flops();
-        // Device-memory term: each weight matrix read once per mini-batch.
-        let wread = self.model.layer_weight_bytes() as f64 / self.sys.gpu.mem_bw;
+        // Device-memory term: each weight-slice matrix read once per
+        // mini-batch.
+        let wread = self.model.layer_weight_bytes() as f64 / self.tp_f() / self.sys.gpu.mem_bw;
         gemm + attn + wread + 10e-6
     }
 
@@ -100,22 +139,25 @@ impl SimCost {
         self.layer_forward_time(batch, tokens, tokens / 2)
     }
 
-    /// D2H time to store one layer's share of newly produced state.
+    /// D2H time to store one layer's per-shard share of newly produced
+    /// state.
     pub fn store_time(&self, kv_tokens: usize, act_tokens: usize) -> f64 {
         let bytes = self.model.kv_bytes_per_layer(kv_tokens)
             + self.model.act_bytes_per_layer(act_tokens);
         if bytes == 0 {
             0.0
         } else {
-            self.sys.interconnect.d2h_time(bytes)
+            self.sys.interconnect.d2h_time(self.shard_bytes(bytes))
         }
     }
 
     /// GPU cache slice capacity in ACT blocks (for GPU-resident ACT).
+    /// Each shard stores only its `1/tp` slice of a resident block, so
+    /// the aggregate block capacity grows with the degree.
     pub fn gpu_act_block_capacity(&self) -> usize {
         let block_bytes =
             self.model.num_layers * self.model.act_bytes_per_layer(self.sys.block_tokens);
-        self.sys.gpu_cache_budget() / block_bytes.max(1)
+        self.sys.gpu_cache_budget() / self.shard_bytes(block_bytes).max(1)
     }
 }
 
@@ -125,6 +167,10 @@ mod tests {
 
     fn cost() -> SimCost {
         SimCost::new(&ModelConfig::opt_30b(), &SystemConfig::paper_testbed())
+    }
+
+    fn cost_tp(tp: usize) -> SimCost {
+        SimCost::new(&ModelConfig::opt_30b(), &SystemConfig::paper_testbed_tp(tp))
     }
 
     #[test]
@@ -170,5 +216,42 @@ mod tests {
         let c = SimCost::new(&ModelConfig::opt_6_7b(), &SystemConfig::paper_testbed());
         // 6.7B ~ 13 GB weights vs 12 GB resident budget -> small spill
         assert!(c.stream_frac < 0.2, "stream frac {}", c.stream_frac);
+    }
+
+    #[test]
+    fn sharding_divides_per_shard_costs() {
+        let c1 = cost_tp(1);
+        let c4 = cost_tp(4);
+        // per-shard link bytes shrink ~4x (modulo fixed DMA latency)
+        assert!(c4.kv_load_time(4096) < 0.3 * c1.kv_load_time(4096));
+        // per-shard GPU work shrinks ~4x (modulo launch constants)
+        assert!(c4.kv_gen_time(4096) < 0.3 * c1.kv_gen_time(4096));
+        assert!(c4.layer_forward_time(64, 1, 1024) < 0.3 * c1.layer_forward_time(64, 1, 1024));
+        // each GPU's resident budget covers a larger share of its smaller
+        // weight slice, so less streams
+        assert!(c4.stream_frac < c1.stream_frac, "{} !< {}", c4.stream_frac, c1.stream_frac);
+        // and the GPU ACT cache holds more blocks (each block's slice is
+        // smaller)
+        assert!(c4.gpu_act_block_capacity() > 2 * c1.gpu_act_block_capacity());
+    }
+
+    #[test]
+    fn opt30b_tp4_stops_streaming_most_weights() {
+        // 60 GB / 4 = 15 GB per shard vs 12 GB resident: only ~20%
+        // streams, vs ~80% on one GPU — the recomputation window closes.
+        let c4 = cost_tp(4);
+        assert!(c4.stream_frac < 0.3, "stream frac {}", c4.stream_frac);
+    }
+
+    #[test]
+    fn tp1_is_identity() {
+        let a = cost();
+        let b = cost_tp(1);
+        assert_eq!(a.stream_frac, b.stream_frac);
+        assert_eq!(a.kv_gen_time(777), b.kv_gen_time(777));
+        assert_eq!(a.kv_load_time(777), b.kv_load_time(777));
+        assert_eq!(a.layer_forward_time(32, 1, 512), b.layer_forward_time(32, 1, 512));
+        assert_eq!(a.shard_bytes(12345), 12345);
+        assert_eq!(a.shard_layer_weight_bytes(), a.model.layer_weight_bytes());
     }
 }

@@ -5,9 +5,19 @@
 //! bin-packing cost metric) is the same code the real engine runs; only
 //! the per-operation costs come from the [`SimCost`] roofline instead of
 //! PJRT measurements. Every simulated system schedules onto the same
-//! two-lane [`Timeline`], so throughput / utilization / traffic are
+//! discrete-event [`Timeline`], so throughput / utilization / traffic are
 //! directly comparable across systems — exactly how the paper's §5
 //! figures are framed.
+//!
+//! Under tensor parallelism (`sys.shard.tp > 1`) the timeline carries one
+//! PCIe + one GPU lane per shard: every shard streams its own weight
+//! slice and cache slices over its own host link, runs its slice of the
+//! layer kernels, and joins the all-gather barriers after attention and
+//! the FFN ([`Timeline::barrier`]). Algorithm 1 sees per-shard costs, so
+//! the Eq. 11 ACT:KV ratio shifts as the degree grows — per-shard weight
+//! slices start fitting device memory and the recomputation window
+//! closes. `tp = 1` reproduces the pre-sharding simulator bit-for-bit
+//! (`rust/tests/tp1_equivalence.rs` pins this).
 
 mod cost;
 
@@ -47,28 +57,40 @@ pub enum System {
     PowerInfer,
 }
 
-/// Simulation outcome (paper metric set).
+/// Simulation outcome (paper metric set + per-shard introspection).
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub throughput: f64,
     pub gen_throughput: f64,
     pub makespan: f64,
     pub prefill_secs: f64,
+    /// Mean generation-phase GPU temporal utilization across shards.
     pub gpu_utilization: f64,
+    /// Mean PCIe-lane utilization across shard links.
     pub pcie_utilization: f64,
     pub traffic: crate::pcie::TrafficCounter,
     /// ACT share of context blocks the policy chose (introspection).
     pub act_block_share: f64,
     /// Mini-batch size used in the generation phase.
     pub minibatch: usize,
+    /// Generation-phase GPU utilization per shard (len == tp).
+    pub shard_gpu_utilization: Vec<f64>,
+    /// Max-min spread of the per-shard GPU utilizations (0 when the rig
+    /// is symmetric or single-GPU).
+    pub straggler_gap: f64,
+    /// Bytes carried across all inter-GPU links by the tensor-parallel
+    /// all-gathers (0 at tp = 1).
+    pub collective_bytes: u64,
 }
 
-/// Simulate `system` serving `wl` on `model` × `sys`.
+/// Simulate `system` serving `wl` on `model` × `sys` (all `sys.shard.tp`
+/// shards of it).
 pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Workload) -> SimResult {
     let cost = SimCost::new(model, sys);
     let sizes = BlockSizes::new(model, sys.block_tokens);
     let nl = model.num_layers;
     let bt = sys.block_tokens;
+    let tp = sys.shard.tp;
     let max_ctx = wl.prompt + wl.gen;
     let blocks_per_req = max_ctx.div_ceil(bt);
 
@@ -98,21 +120,30 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     let act_share = act_per_req as f64 / blocks_per_req as f64;
 
     // ---- mini-batch size ----------------------------------------------
+    // Capacity terms are PER-SHARD slices against one shard's budget:
+    // each GPU stages/stores only its 1/tp stripe of every block, so the
+    // modeled hardware admits ~tp× larger mini-batches (identity at
+    // tp = 1).
     let minibatch = match system {
         System::DeepSpeedInference => {
-            // No zig-zag/paging: the whole batch's KV cache plus prefill
-            // intermediates must stay resident in GPU memory, which is
-            // what caps DeepSpeed's batch size (§5.2).
-            let kv_per_req = model.num_layers * model.kv_bytes_per_layer(max_ctx);
-            let inter_per_req = wl.prompt * model.hidden * model.dtype.bytes() * 8;
+            // No zig-zag/paging: the whole batch's KV-cache stripe plus
+            // prefill intermediates must stay resident in each GPU's
+            // memory, which is what caps DeepSpeed's batch size (§5.2).
+            let kv_per_req =
+                cost.shard_bytes(model.num_layers * model.kv_bytes_per_layer(max_ctx));
+            let inter_per_req =
+                cost.shard_bytes(wl.prompt * model.hidden * model.dtype.bytes() * 8);
             ((sys.gpu_cache_budget() + sys.gpu_buffer_budget())
                 / (kv_per_req + inter_per_req).max(1))
                 .clamp(1, wl.batch)
         }
         _ => {
-            // Buffer-limited: per-layer shares of each request's blocks.
-            let kv_block_layer = sizes.per_layer_bytes(crate::cache::BlockKind::Kv, model);
-            let act_block_layer = sizes.per_layer_bytes(crate::cache::BlockKind::Act, model);
+            // Buffer-limited: per-layer, per-shard stripes of each
+            // request's blocks.
+            let kv_block_layer =
+                cost.shard_bytes(sizes.per_layer_bytes(crate::cache::BlockKind::Kv, model));
+            let act_block_layer =
+                cost.shard_bytes(sizes.per_layer_bytes(crate::cache::BlockKind::Act, model));
             let caps = crate::policy::BinCaps::from_buffer_bytes(
                 sys.gpu_buffer_budget(),
                 kv_block_layer,
@@ -157,8 +188,17 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         (cost.gpu_act_block_capacity() as f64 / total_act_blocks as f64).min(1.0)
     };
 
-    let mut tl = Timeline::new();
+    let mut tl = Timeline::sharded(tp);
     let mut ic = Interconnect::new(sys.interconnect.clone());
+    let mut collective_bytes: u64 = 0;
+    // Total fabric bytes of the two per-layer all-gathers (after
+    // attention + after FFN) of one `tokens`-token chunk: each of the tp
+    // links carries the (tp-1)/tp payload fraction its GPU is missing.
+    let allgather = |tokens: usize, collective_bytes: &mut u64| -> f64 {
+        let payload = tokens * model.hidden * model.dtype.bytes();
+        *collective_bytes += 2 * (tp as u64 - 1) * payload as u64;
+        2.0 * sys.shard.allgather_time(payload)
+    };
 
     // PowerInfer adjustments: hot weights resident (stream less), cold
     // attention assist on CPU (slower effective attention).
@@ -178,20 +218,30 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     };
     let cpu_attn_penalty = if system == System::PowerInfer { 2.0 } else { 1.0 };
 
-    // ==== prefill phase (zig-zag: weights once per layer, minibatches
-    // stream under them; DeepSpeed runs rounds of its capped batch) =====
-    let mut weight_ready = 0.0f64;
+    // ==== prefill phase (zig-zag: weight slices once per layer on every
+    // shard's link, minibatches stream under them; DeepSpeed runs rounds
+    // of its capped batch) ==============================================
+    let mut weight_ready = vec![0.0f64; tp];
     for _l in 0..nl {
-        let wbytes = (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
-        let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
-        let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
-        let mut gpu_end = 0.0;
+        let wbytes =
+            (cost.shard_layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+        let mut w_end = vec![0.0f64; tp];
+        for (s, we) in w_end.iter_mut().enumerate() {
+            let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
+            *we = tl.schedule_on(s, Lane::PCIe, 0.0, t_w).end;
+        }
         for &mb in &chunk_sizes {
             let t_fwd = cost.layer_prefill_time(mb, wl.prompt) * cpu_attn_penalty;
-            let span = tl.schedule(Lane::Gpu, weight_ready, t_fwd);
-            gpu_end = span.end;
+            for s in 0..tp {
+                tl.schedule_on(s, Lane::Gpu, weight_ready[s], t_fwd);
+            }
+            if tp > 1 {
+                let t_ag = allgather(mb * wl.prompt, &mut collective_bytes);
+                tl.barrier(0.0, t_ag);
+            }
         }
-        // store the produced context state to host
+        // store the produced context state to host (each shard ships its
+        // slice over its own link)
         let kv_toks = if kv_on_gpu {
             0
         } else {
@@ -202,13 +252,22 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         let act_b = model.act_bytes_per_layer(act_toks as usize);
         // d2h stores ride the full-duplex return path: they are accounted
         // as traffic but do not contend with h2d loads on the timeline.
-        let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::KvStore, kv_b);
-        let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::ActStore, act_b);
-        let _ = gpu_end;
-        weight_ready = w_span.end;
+        for _s in 0..tp {
+            let _ = ic.transfer_time(
+                Dir::DeviceToHost,
+                TrafficClass::KvStore,
+                cost.shard_bytes(kv_b),
+            );
+            let _ = ic.transfer_time(
+                Dir::DeviceToHost,
+                TrafficClass::ActStore,
+                cost.shard_bytes(act_b),
+            );
+        }
+        weight_ready = w_end;
     }
     let prefill_secs = tl.makespan();
-    let gpu_busy_prefill = tl.busy(Lane::Gpu);
+    let gpu_busy_prefill: Vec<f64> = (0..tp).map(|s| tl.busy_on(s, Lane::Gpu)).collect();
 
     // ==== generation phase ==============================================
     for step in 0..wl.gen {
@@ -222,14 +281,18 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         let act_toks_req = (act_b_req * bt).min(ctx);
 
         for _l in 0..nl {
-            // weights for this layer (streamed once per layer per step)
+            // weight slices for this layer (streamed once per layer per
+            // step on every shard's link)
             let wbytes =
-                (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
-            let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
-            let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
+                (cost.shard_layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+            let mut w_end = vec![0.0f64; tp];
+            for (s, we) in w_end.iter_mut().enumerate() {
+                let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
+                *we = tl.schedule_on(s, Lane::PCIe, 0.0, t_w).end;
+            }
 
             for &mb in &chunk_sizes {
-                // PCIe: cache loads for this mini-batch's layer share
+                // per-shard slices of this mini-batch's layer share
                 let kv_bytes = if kv_on_gpu {
                     0
                 } else {
@@ -238,12 +301,10 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                 let act_host_toks =
                     (act_toks_req as f64 * mb as f64 * (1.0 - gpu_act_frac)) as usize;
                 let act_bytes = model.act_bytes_per_layer(act_host_toks);
-                let t_kv = ic.transfer_time(Dir::HostToDevice, TrafficClass::KvLoad, kv_bytes);
-                let t_act = ic.transfer_time(Dir::HostToDevice, TrafficClass::ActLoad, act_bytes);
-                let load_span = tl.schedule(Lane::PCIe, 0.0, t_kv + t_act);
 
                 // GPU: KV-Gen for ACT tokens + (token-recompute prefill) +
-                // the decode forward, gated on data + weights
+                // the decode forward — identical on every (symmetric)
+                // shard, gated on that shard's data + weights
                 let t_gen = cost.kv_gen_time(act_toks_req * mb);
                 let t_recompute = if recompute_toks_req > 0 {
                     cost.layer_prefill_time(mb, recompute_toks_req)
@@ -251,8 +312,26 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                     0.0
                 };
                 let t_fwd = cost.layer_forward_time(mb, 1, ctx) * cpu_attn_penalty;
-                let ready = load_span.end.max(weight_ready);
-                let g = tl.schedule(Lane::Gpu, ready, t_gen + t_recompute + t_fwd);
+
+                for s in 0..tp {
+                    let t_kv = ic.transfer_time(
+                        Dir::HostToDevice,
+                        TrafficClass::KvLoad,
+                        cost.shard_bytes(kv_bytes),
+                    );
+                    let t_act = ic.transfer_time(
+                        Dir::HostToDevice,
+                        TrafficClass::ActLoad,
+                        cost.shard_bytes(act_bytes),
+                    );
+                    let load_span = tl.schedule_on(s, Lane::PCIe, 0.0, t_kv + t_act);
+                    let ready = load_span.end.max(weight_ready[s]);
+                    let _ = tl.schedule_on(s, Lane::Gpu, ready, t_gen + t_recompute + t_fwd);
+                }
+                if tp > 1 {
+                    let t_ag = allgather(mb, &mut collective_bytes);
+                    tl.barrier(0.0, t_ag);
+                }
 
                 // store the new token's designated state
                 let new_act = matches!(system, System::HybridServe(_) | System::ActOnly)
@@ -267,18 +346,33 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                 let kv_sb = model.kv_bytes_per_layer(kv_store_t);
                 let act_sb = model.act_bytes_per_layer(act_store_t);
                 // full-duplex d2h: traffic only (see prefill note)
-                let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::KvStore, kv_sb);
-                let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::ActStore, act_sb);
-                let _ = g;
+                for _s in 0..tp {
+                    let _ = ic.transfer_time(
+                        Dir::DeviceToHost,
+                        TrafficClass::KvStore,
+                        cost.shard_bytes(kv_sb),
+                    );
+                    let _ = ic.transfer_time(
+                        Dir::DeviceToHost,
+                        TrafficClass::ActStore,
+                        cost.shard_bytes(act_sb),
+                    );
+                }
             }
-            weight_ready = w_span.end;
+            weight_ready = w_end;
         }
     }
 
     // Generation-phase temporal utilization (what Fig. 14 plots: the
-    // decode pipeline is where FlexGen's GPU starves).
+    // decode pipeline is where FlexGen's GPU starves), per shard.
     let gen_span = (tl.makespan() - prefill_secs).max(1e-12);
-    let gpu_util_gen = ((tl.busy(Lane::Gpu) - gpu_busy_prefill) / gen_span).clamp(0.0, 1.0);
+    let shard_gpu_utilization: Vec<f64> = (0..tp)
+        .map(|s| ((tl.busy_on(s, Lane::Gpu) - gpu_busy_prefill[s]) / gen_span).clamp(0.0, 1.0))
+        .collect();
+    let gpu_util_gen = shard_gpu_utilization.iter().sum::<f64>() / tp as f64;
+    let straggler_gap = crate::util::stats::spread(&shard_gpu_utilization);
+    let pcie_utilization =
+        (0..tp).map(|s| tl.utilization_on(s, Lane::PCIe)).sum::<f64>() / tp as f64;
 
     // DeepSpeed rounds: the whole pipeline repeats per round.
     let makespan = tl.makespan() * rounds as f64;
@@ -288,6 +382,7 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         let snapshot = ic.traffic().clone();
         traffic.merge(&snapshot);
     }
+    let collective_bytes = collective_bytes * rounds as u64;
 
     let total_tokens = (wl.prompt + wl.gen) * wl.batch;
     let gen_tokens = wl.gen * wl.batch;
@@ -297,10 +392,13 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         makespan,
         prefill_secs,
         gpu_utilization: gpu_util_gen,
-        pcie_utilization: tl.utilization(Lane::PCIe),
+        pcie_utilization,
         traffic,
         act_block_share: act_share,
         minibatch,
+        shard_gpu_utilization,
+        straggler_gap,
+        collective_bytes,
     }
 }
 
@@ -359,6 +457,16 @@ mod tests {
             prompt,
             gen: 32,
         }
+    }
+
+    /// The four systems the paper's §5 compares throughout.
+    fn four_systems() -> [System; 4] {
+        [
+            System::HybridServe(PolicyConfig::full()),
+            System::FlexGen,
+            System::DeepSpeedInference,
+            System::ActOnly,
+        ]
     }
 
     #[test]
@@ -526,11 +634,79 @@ mod tests {
     }
 
     #[test]
+    fn sharded_sim_runs_paper_scale_models() {
+        // The acceptance scenario: OPT-30B and OPT-66B at TP=2 and TP=4
+        // for all four systems — the configurations the single-GPU
+        // simulator could not express at all.
+        for m in [ModelConfig::opt_30b(), ModelConfig::opt_66b()] {
+            for tp in [2usize, 4] {
+                let s = SystemConfig::paper_testbed_tp(tp);
+                for sys in four_systems() {
+                    let r = simulate(&m, &s, sys, wl(64, 512));
+                    let tag = format!("{sys:?} {} tp{tp}", m.name);
+                    assert!(r.throughput > 0.0 && r.throughput.is_finite(), "{tag}");
+                    assert!(r.makespan > 0.0, "{tag}");
+                    assert_eq!(r.shard_gpu_utilization.len(), tp, "{tag}");
+                    for &u in &r.shard_gpu_utilization {
+                        assert!((0.0..=1.0 + 1e-9).contains(&u), "{tag}: util {u}");
+                    }
+                    assert!(r.pcie_utilization <= 1.0 + 1e-9, "{tag}");
+                    // symmetric shards: no straggler spread
+                    assert!(r.straggler_gap.abs() < 1e-9, "{tag}: gap {}", r.straggler_gap);
+                    // tensor parallelism is not free: the all-gathers
+                    // moved real bytes
+                    assert!(r.collective_bytes > 0, "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_scales_offloaded_throughput() {
+        // The motivation for the whole refactor: aggregate PCIe bandwidth
+        // is the binding resource for offloading systems, and sharding
+        // multiplies it. FlexGen (PCIe-bound) must scale well with TP.
+        let m = ModelConfig::opt_30b();
+        let w = wl(64, 512);
+        let t1 = simulate(&m, &SystemConfig::paper_testbed_tp(1), System::FlexGen, w).throughput;
+        let t2 = simulate(&m, &SystemConfig::paper_testbed_tp(2), System::FlexGen, w).throughput;
+        let t4 = simulate(&m, &SystemConfig::paper_testbed_tp(4), System::FlexGen, w).throughput;
+        assert!(t2 > 1.3 * t1, "tp2 {t2} !>> tp1 {t1}");
+        assert!(t4 > t2, "tp4 {t4} !> tp2 {t2}");
+        // Scaling is SUPER-linear for OPT-30B: besides 4x the link
+        // bandwidth, each shard's 15 GB weight slice mostly fits its
+        // 12 GB residency budget, so the streamed fraction collapses too.
+        // Sanity-bound it rather than asserting sub-linearity.
+        assert!(t4 > 3.0 * t1, "tp4 {t4} lost the residency win over tp1 {t1}");
+        assert!(t4 < 16.0 * t1, "tp4 {t4} implausibly fast vs tp1 {t1}");
+    }
+
+    #[test]
+    fn sharding_shifts_hybrid_ratio() {
+        // Eq. 11 under TP: at tp=4 each OPT-30B shard's 15 GB weight
+        // slice nearly fits the 12 GB residency budget, the weight-stream
+        // window collapses, and Algorithm 1 moves the mix toward KV
+        // (loading beats recomputing once the GPU has no idle window).
+        let m = ModelConfig::opt_30b();
+        let w = wl(64, 512);
+        let sys = System::HybridServe(PolicyConfig::full());
+        let r1 = simulate(&m, &SystemConfig::paper_testbed_tp(1), sys, w);
+        let r4 = simulate(&m, &SystemConfig::paper_testbed_tp(4), sys, w);
+        assert!(
+            r4.act_block_share < r1.act_block_share,
+            "act share did not shift: tp1 {} tp4 {}",
+            r1.act_block_share,
+            r4.act_block_share
+        );
+    }
+
+    #[test]
     fn property_sim_is_deterministic_and_sane() {
         crate::util::prop::check("sim-sane", 30, |rng| {
             let models = ModelConfig::paper_family();
             let m = rng.choose(&models);
-            let s = testbed();
+            let tp = *rng.choose(&[1usize, 2, 4]);
+            let s = SystemConfig::paper_testbed_tp(tp);
             let w = Workload {
                 batch: rng.range(1, 257),
                 prompt: rng.range(16, 1921),
@@ -552,6 +728,8 @@ mod tests {
             assert!(a.pcie_utilization <= 1.0 + 1e-9);
             assert!((0.0..=1.0).contains(&a.act_block_share));
             assert!(a.minibatch >= 1 && a.minibatch <= w.batch);
+            assert_eq!(a.shard_gpu_utilization.len(), tp);
+            assert_eq!(a.collective_bytes == 0, tp == 1);
         });
     }
 }

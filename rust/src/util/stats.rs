@@ -18,6 +18,17 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Max-min spread of a sample set (0 for empty). Used for the per-shard
+/// straggler gap: how far the slowest lane trails the fastest.
+pub fn spread(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    max - min
+}
+
 /// Percentile with linear interpolation; `p` in [0, 100].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
@@ -79,6 +90,14 @@ mod tests {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((mean(&xs) - 5.0).abs() < 1e-12);
         assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spread_is_max_minus_min() {
+        assert_eq!(spread(&[]), 0.0);
+        assert_eq!(spread(&[3.0]), 0.0);
+        assert_eq!(spread(&[1.0, 4.0, 2.5]), 3.0);
+        assert_eq!(spread(&[2.0, 2.0, 2.0]), 0.0);
     }
 
     #[test]

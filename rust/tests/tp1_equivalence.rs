@@ -1,0 +1,345 @@
+//! TP=1 equivalence: the sharded execution model with
+//! [`ShardSpec::single`] must reproduce the pre-refactor single-GPU
+//! simulator EXACTLY (bit-for-bit f64 equality, not a tolerance).
+//!
+//! The proof has two halves:
+//!  1. span level — `Timeline::sharded(1)` behaves identically to the
+//!     historical two-lane `Timeline` under arbitrary schedules (property
+//!     test `property_tp1_sharded_matches_two_lane` in `pcie::timeline`);
+//!  2. result level — this file keeps a verbatim copy of the pre-sharding
+//!     `sim::simulate` (the two-lane pipeline, exactly as it scheduled
+//!     before the refactor) and checks the refactored simulator matches
+//!     it on the reference workload for every `System` variant: makespan,
+//!     throughput, utilizations, minibatch, ACT share and per-class
+//!     traffic, all compared with `assert_eq!` on the raw f64/u64 values.
+
+use hybridserve::cache::{BlockKind, BlockSizes};
+use hybridserve::config::{ModelConfig, ShardSpec, SystemConfig};
+use hybridserve::pcie::{Dir, Interconnect, Lane, Timeline, TrafficClass, TrafficCounter};
+use hybridserve::policy::{AllocationInputs, BinCaps, BlockRatio, CostModel, PolicyConfig};
+use hybridserve::sim::{simulate, SimCost, System, Workload};
+
+/// What the pre-refactor simulator reported (the fields shared with
+/// today's `SimResult`).
+struct LegacyResult {
+    throughput: f64,
+    gen_throughput: f64,
+    makespan: f64,
+    prefill_secs: f64,
+    gpu_utilization: f64,
+    pcie_utilization: f64,
+    traffic: TrafficCounter,
+    act_block_share: f64,
+    minibatch: usize,
+}
+
+/// Verbatim copy of `sim::simulate` as it stood before the sharding
+/// refactor (two hard-coded lanes, one PCIe link). Only the paths were
+/// adapted (`crate::` → `hybridserve::`).
+fn legacy_simulate(
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    system: System,
+    wl: Workload,
+) -> LegacyResult {
+    let cost = SimCost::new(model, sys);
+    let sizes = BlockSizes::new(model, sys.block_tokens);
+    let nl = model.num_layers;
+    let bt = sys.block_tokens;
+    let max_ctx = wl.prompt + wl.gen;
+    let blocks_per_req = max_ctx.div_ceil(bt);
+
+    // ---- resolve the ACT:KV designation ratio ------------------------
+    let (ratio, recompute_frac) = match system {
+        System::HybridServe(policy) => {
+            let cm = CostModel::analytic(model, sys);
+            let host_cache = sys
+                .host
+                .memory_bytes
+                .saturating_sub(model.total_weight_bytes());
+            let alloc = policy.allocate(&AllocationInputs {
+                cost: cm,
+                act_gpu_blocks: cost.gpu_act_block_capacity(),
+                host_cache_bytes: host_cache,
+                sizes,
+            });
+            (BlockRatio::new(alloc.act_blocks.max(1), alloc.kv_blocks), 0.0)
+        }
+        System::ActOnly => (BlockRatio::act_only(), 0.0),
+        System::FlexGen | System::DeepSpeedInference | System::PowerInfer => {
+            (BlockRatio::kv_only(), 0.0)
+        }
+        System::TokenRecompute(r) => (BlockRatio::kv_only(), r.clamp(0.0, 1.0)),
+    };
+    let (act_per_req, kv_per_req) = ratio.split(blocks_per_req);
+    let act_share = act_per_req as f64 / blocks_per_req as f64;
+
+    // ---- mini-batch size ----------------------------------------------
+    let minibatch = match system {
+        System::DeepSpeedInference => {
+            let kv_per_req = model.num_layers * model.kv_bytes_per_layer(max_ctx);
+            let inter_per_req = wl.prompt * model.hidden * model.dtype.bytes() * 8;
+            ((sys.gpu_cache_budget() + sys.gpu_buffer_budget())
+                / (kv_per_req + inter_per_req).max(1))
+                .clamp(1, wl.batch)
+        }
+        _ => {
+            let kv_block_layer = sizes.per_layer_bytes(BlockKind::Kv, model);
+            let act_block_layer = sizes.per_layer_bytes(BlockKind::Act, model);
+            let caps = BinCaps::from_buffer_bytes(
+                sys.gpu_buffer_budget(),
+                kv_block_layer,
+                act_block_layer,
+            );
+            let mut mb = wl.batch;
+            if kv_per_req > 0 {
+                mb = mb.min(caps.kv_max / kv_per_req.max(1));
+            }
+            if act_per_req > 0 {
+                mb = mb.min(caps.act_max / act_per_req.max(1));
+            }
+            mb.max(1)
+        }
+    };
+    let rounds = if matches!(system, System::DeepSpeedInference) {
+        wl.batch.div_ceil(minibatch)
+    } else {
+        1
+    };
+    let round_batch = if rounds > 1 { minibatch } else { wl.batch };
+    let chunk_sizes: Vec<usize> = {
+        let full = round_batch / minibatch;
+        let rem = round_batch % minibatch;
+        let mut v = vec![minibatch; full];
+        if rem > 0 {
+            v.push(rem);
+        }
+        v
+    };
+    let kv_on_gpu = matches!(system, System::DeepSpeedInference);
+
+    // ---- GPU-resident ACT fraction ------------------------------------
+    let total_act_blocks = act_per_req * wl.batch;
+    let gpu_act_frac = if total_act_blocks == 0 {
+        0.0
+    } else {
+        (cost.gpu_act_block_capacity() as f64 / total_act_blocks as f64).min(1.0)
+    };
+
+    let mut tl = Timeline::new();
+    let mut ic = Interconnect::new(sys.interconnect.clone());
+
+    let weight_scale = match system {
+        System::PowerInfer => 0.3,
+        System::DeepSpeedInference => {
+            if cost.stream_frac > 0.0 {
+                1.0 / cost.stream_frac
+            } else {
+                0.0
+            }
+        }
+        _ => 1.0,
+    };
+    let cpu_attn_penalty = if system == System::PowerInfer { 2.0 } else { 1.0 };
+
+    // ==== prefill phase =================================================
+    let mut weight_ready = 0.0f64;
+    for _l in 0..nl {
+        let wbytes = (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+        let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
+        let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
+        let mut gpu_end = 0.0;
+        for &mb in &chunk_sizes {
+            let t_fwd = cost.layer_prefill_time(mb, wl.prompt) * cpu_attn_penalty;
+            let span = tl.schedule(Lane::Gpu, weight_ready, t_fwd);
+            gpu_end = span.end;
+        }
+        let kv_toks = if kv_on_gpu {
+            0
+        } else {
+            (kv_per_req.min(blocks_per_req) * bt * round_batch).min(wl.prompt * round_batch)
+        };
+        let act_toks = (act_per_req * bt) as f64 * round_batch as f64 * (1.0 - gpu_act_frac);
+        let kv_b = model.kv_bytes_per_layer(kv_toks);
+        let act_b = model.act_bytes_per_layer(act_toks as usize);
+        let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::KvStore, kv_b);
+        let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::ActStore, act_b);
+        let _ = gpu_end;
+        weight_ready = w_span.end;
+    }
+    let prefill_secs = tl.makespan();
+    let gpu_busy_prefill = tl.busy(Lane::Gpu);
+
+    // ==== generation phase ==============================================
+    for step in 0..wl.gen {
+        let ctx = wl.prompt + step;
+        let ctx_blocks = ctx.div_ceil(bt);
+        let (act_b_req, kv_b_req) = ratio.split(ctx_blocks);
+        let recompute_toks_req = (ctx as f64 * recompute_frac) as usize;
+        let kv_toks_req = (kv_b_req * bt).min(ctx).saturating_sub(recompute_toks_req);
+        let act_toks_req = (act_b_req * bt).min(ctx);
+
+        for _l in 0..nl {
+            let wbytes =
+                (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+            let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
+            let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
+
+            for &mb in &chunk_sizes {
+                let kv_bytes = if kv_on_gpu {
+                    0
+                } else {
+                    model.kv_bytes_per_layer(kv_toks_req * mb)
+                };
+                let act_host_toks =
+                    (act_toks_req as f64 * mb as f64 * (1.0 - gpu_act_frac)) as usize;
+                let act_bytes = model.act_bytes_per_layer(act_host_toks);
+                let t_kv = ic.transfer_time(Dir::HostToDevice, TrafficClass::KvLoad, kv_bytes);
+                let t_act = ic.transfer_time(Dir::HostToDevice, TrafficClass::ActLoad, act_bytes);
+                let load_span = tl.schedule(Lane::PCIe, 0.0, t_kv + t_act);
+
+                let t_gen = cost.kv_gen_time(act_toks_req * mb);
+                let t_recompute = if recompute_toks_req > 0 {
+                    cost.layer_prefill_time(mb, recompute_toks_req)
+                } else {
+                    0.0
+                };
+                let t_fwd = cost.layer_forward_time(mb, 1, ctx) * cpu_attn_penalty;
+                let ready = load_span.end.max(weight_ready);
+                let g = tl.schedule(Lane::Gpu, ready, t_gen + t_recompute + t_fwd);
+
+                let new_act = matches!(system, System::HybridServe(_) | System::ActOnly)
+                    && act_share > 0.0;
+                let (kv_store_t, act_store_t) = if kv_on_gpu {
+                    (0, 0)
+                } else if new_act {
+                    (0, mb)
+                } else {
+                    (mb, 0)
+                };
+                let kv_sb = model.kv_bytes_per_layer(kv_store_t);
+                let act_sb = model.act_bytes_per_layer(act_store_t);
+                let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::KvStore, kv_sb);
+                let _ = ic.transfer_time(Dir::DeviceToHost, TrafficClass::ActStore, act_sb);
+                let _ = g;
+            }
+            weight_ready = w_span.end;
+        }
+    }
+
+    let gen_span = (tl.makespan() - prefill_secs).max(1e-12);
+    let gpu_util_gen = ((tl.busy(Lane::Gpu) - gpu_busy_prefill) / gen_span).clamp(0.0, 1.0);
+
+    let makespan = tl.makespan() * rounds as f64;
+    let prefill_secs = prefill_secs * rounds as f64;
+    let mut traffic = ic.traffic().clone();
+    for _ in 1..rounds {
+        let snapshot = ic.traffic().clone();
+        traffic.merge(&snapshot);
+    }
+
+    let total_tokens = (wl.prompt + wl.gen) * wl.batch;
+    let gen_tokens = wl.gen * wl.batch;
+    LegacyResult {
+        throughput: total_tokens as f64 / makespan,
+        gen_throughput: gen_tokens as f64 / (makespan - prefill_secs).max(1e-9),
+        makespan,
+        prefill_secs,
+        gpu_utilization: gpu_util_gen,
+        pcie_utilization: tl.utilization(Lane::PCIe),
+        traffic,
+        act_block_share: act_share,
+        minibatch,
+    }
+}
+
+fn assert_matches_legacy(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Workload) {
+    let old = legacy_simulate(model, sys, system, wl);
+    let new = simulate(model, sys, system, wl);
+    let tag = format!("{system:?} on {}", model.name);
+    assert_eq!(old.makespan, new.makespan, "makespan diverged: {tag}");
+    assert_eq!(old.prefill_secs, new.prefill_secs, "prefill diverged: {tag}");
+    assert_eq!(old.throughput, new.throughput, "throughput diverged: {tag}");
+    assert_eq!(
+        old.gen_throughput, new.gen_throughput,
+        "gen throughput diverged: {tag}"
+    );
+    assert_eq!(
+        old.gpu_utilization, new.gpu_utilization,
+        "gpu util diverged: {tag}"
+    );
+    assert_eq!(
+        old.pcie_utilization, new.pcie_utilization,
+        "pcie util diverged: {tag}"
+    );
+    assert_eq!(old.minibatch, new.minibatch, "minibatch diverged: {tag}");
+    assert_eq!(
+        old.act_block_share, new.act_block_share,
+        "act share diverged: {tag}"
+    );
+    for class in TrafficClass::ALL {
+        assert_eq!(
+            old.traffic.bytes(class),
+            new.traffic.bytes(class),
+            "{} traffic diverged: {tag}",
+            class.name()
+        );
+    }
+    // The sharded result must also be self-consistent at TP=1.
+    assert_eq!(new.shard_gpu_utilization.len(), 1, "{tag}");
+    assert_eq!(new.shard_gpu_utilization[0], new.gpu_utilization, "{tag}");
+    assert_eq!(new.straggler_gap, 0.0, "{tag}");
+    assert_eq!(new.collective_bytes, 0, "{tag}");
+}
+
+#[test]
+fn sharded_tp1_matches_pre_refactor_simulator() {
+    let wl = Workload {
+        batch: 64,
+        prompt: 512,
+        gen: 32,
+    };
+    let sys = SystemConfig::paper_testbed();
+    assert_eq!(sys.shard, ShardSpec::single());
+    let m30 = ModelConfig::opt_30b();
+    for system in [
+        System::HybridServe(PolicyConfig::full()),
+        System::HybridServe(PolicyConfig::hybrid_no_policies()),
+        System::FlexGen,
+        System::DeepSpeedInference,
+        System::ActOnly,
+        System::TokenRecompute(0.25),
+        System::PowerInfer,
+    ] {
+        assert_matches_legacy(&m30, &sys, system, wl);
+    }
+    // and the smaller reference model of the golden test
+    let m67 = ModelConfig::opt_6_7b();
+    for system in [
+        System::HybridServe(PolicyConfig::full()),
+        System::FlexGen,
+        System::DeepSpeedInference,
+        System::ActOnly,
+    ] {
+        assert_matches_legacy(&m67, &sys, system, wl);
+    }
+}
+
+#[test]
+fn explicit_single_shard_spec_is_the_default_path() {
+    // `paper_testbed_tp(1)` must be the very same configuration value —
+    // there is no separate "sharded" code path to drift.
+    let one = SystemConfig::paper_testbed();
+    let explicit = SystemConfig::paper_testbed_tp(1);
+    assert_eq!(one, explicit);
+    let wl = Workload {
+        batch: 32,
+        prompt: 256,
+        gen: 16,
+    };
+    let m = ModelConfig::opt_13b();
+    let a = simulate(&m, &one, System::FlexGen, wl);
+    let b = simulate(&m, &explicit, System::FlexGen, wl);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.throughput, b.throughput);
+}
