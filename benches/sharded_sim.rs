@@ -3,7 +3,7 @@
 //! serve), plus a prompt-length sweep of HybridServe at each degree.
 
 use hybridserve::config::SystemConfig;
-use hybridserve::figures::tab_sharding;
+use hybridserve::figures::{tab_pipeline, tab_sharding};
 use hybridserve::harness::FigureTable;
 use hybridserve::policy::PolicyConfig;
 use hybridserve::sim::{simulate, System, Workload};
@@ -11,6 +11,7 @@ use hybridserve::ModelConfig;
 
 fn main() {
     tab_sharding().emit();
+    tab_pipeline().emit();
 
     // HybridServe across prompt lengths at each TP degree: the longer the
     // context, the more cache traffic — and the more the aggregate link

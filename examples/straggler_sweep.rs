@@ -1,0 +1,128 @@
+//! Asymmetric-straggler sweep (ROADMAP item 5): inject per-device clock
+//! and link-bandwidth skew through a heterogeneous `Topology` and report
+//! how throughput and goodput degrade as one device of a TP=4 rig falls
+//! behind.
+//!
+//! Two views per skew level:
+//!  * offline — the full-scale simulator's throughput and straggler gap
+//!    (OPT-30B, the Fig. 12 workload shape): the slow device gates every
+//!    all-gather barrier, so its utilization stays pinned while the
+//!    healthy devices idle;
+//!  * online — a Poisson trace through the scheduler on the analytic
+//!    step engine, with goodput / SLO attainment / p99 TTFT from
+//!    `SloReport`: the same skew felt as tail latency.
+//!
+//! Run with `cargo run --release --example straggler_sweep`.
+
+use hybridserve::cache::BlockSizes;
+use hybridserve::config::{InterconnectSpec, SystemConfig, Topology};
+use hybridserve::harness::FigureTable;
+use hybridserve::metrics::SloSpec;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sched::{AnalyticEngine, SchedConfig, Scheduler};
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::workload::WorkloadGen;
+use hybridserve::ModelConfig;
+
+/// TP=4 paper testbed with device (0, 1) slowed to `clock` of nominal
+/// and, when `x8_link`, its host link halved (PCIe 4.0 x8).
+fn skewed_system(clock: f64, x8_link: bool) -> SystemConfig {
+    let mut topo: Topology = SystemConfig::paper_testbed_tp(4).topology;
+    if clock < 1.0 {
+        topo = topo.with_clock_skew(0, 1, clock);
+    }
+    if x8_link {
+        topo = topo.with_link(
+            0,
+            1,
+            InterconnectSpec {
+                h2d_bw: 12.5e9,
+                d2h_bw: 12.5e9,
+                latency_s: 15e-6,
+            },
+        );
+    }
+    SystemConfig::with_topology(topo)
+}
+
+fn main() {
+    let m = ModelConfig::opt_30b();
+    let wl = Workload {
+        batch: 64,
+        prompt: 512,
+        gen: 64,
+    };
+
+    // (label, clock factor, x8 host link on the skewed device)
+    let levels: [(&str, f64, bool); 5] = [
+        ("uniform", 1.0, false),
+        ("clock-0.9", 0.9, false),
+        ("clock-0.7", 0.7, false),
+        ("x8-link", 1.0, true),
+        ("clock-0.7+x8", 0.7, true),
+    ];
+
+    let mut t = FigureTable::new(
+        "straggler_sweep",
+        &[
+            "skew",
+            "sim_throughput",
+            "sim_vs_uniform",
+            "sim_straggler_gap",
+            "goodput_tok_s",
+            "slo_attain",
+            "ttft_p99_s",
+            "online_straggler_gap",
+        ],
+    );
+
+    let base = simulate(
+        &m,
+        &skewed_system(1.0, false),
+        System::HybridServe(PolicyConfig::full()),
+        wl,
+    )
+    .throughput;
+
+    for (label, clock, x8) in levels {
+        let sys = skewed_system(clock, x8);
+
+        // ---- offline: full-scale simulator --------------------------
+        let r = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+
+        // ---- online: Poisson trace through the scheduler ------------
+        let sizes = BlockSizes::new(&m, sys.block_tokens);
+        let eng = AnalyticEngine::new(&m, &sys, 2000 * sizes.kv_bytes);
+        let cfg = SchedConfig {
+            slo: SloSpec {
+                ttft_secs: 20.0,
+                tpot_secs: 2.0,
+            },
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::new(eng, cfg);
+        let mut wg = WorkloadGen::new(7, 2048);
+        let trace = wg.poisson(24, 2.0, 256, 768, 16);
+        sched.run_trace(trace).expect("serve trace");
+        let online = sched.report();
+
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}", r.throughput),
+            format!("{:.3}", r.throughput / base),
+            format!("{:.4}", r.straggler_gap),
+            format!("{:.1}", online.goodput),
+            format!("{:.2}", online.slo_attainment),
+            format!("{:.4}", online.ttft_p99),
+            format!("{:.4}", online.straggler_gap),
+        ]);
+        println!(
+            "{label:>14}: sim {:.0} tok/s ({:.0}% of uniform, gap {:.3}) | online {}",
+            r.throughput,
+            100.0 * r.throughput / base,
+            r.straggler_gap,
+            online.summary()
+        );
+    }
+    t.emit();
+}

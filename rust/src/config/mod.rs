@@ -3,11 +3,14 @@
 //! [`ModelConfig`] describes a transformer decoder (the OPT family used in
 //! the paper plus a tiny variant that runs for real through the PJRT
 //! runtime).  [`SystemConfig`] describes the hardware envelope that the
-//! paper's testbed provides (RTX 4090 + PCIe 4.0 x16 + host DDR4) and that
-//! our discrete-event pipeline / analytic simulator reproduce.
+//! paper's testbed provides (RTX 4090 + PCIe 4.0 x16 + host DDR4) and the
+//! [`Topology`] — a TP×PP grid of per-device GPU + link slots — that the
+//! [`crate::plan::PlanBuilder`] lowers into an execution plan.
 
 mod model;
 mod system;
+mod topology;
 
-pub use model::{ModelConfig, Dtype};
-pub use system::{SystemConfig, GpuSpec, InterconnectSpec, HostSpec, ShardSpec};
+pub use model::{Dtype, ModelConfig};
+pub use system::{GpuSpec, HostSpec, InterconnectSpec, ShardSpec, SystemConfig};
+pub use topology::{CollectiveSpec, DeviceSlot, StageLinkSpec, Topology};

@@ -174,6 +174,22 @@ impl ModelConfig {
         }
     }
 
+    /// OPT-175B — the regime the paper's single-GPU testbed cannot touch
+    /// at all (~350 GB of fp16 weights): it exists to exercise the TP×PP
+    /// topology (e.g. 2×4 on modeled 24 GB devices).
+    pub fn opt_175b() -> Self {
+        Self {
+            name: "opt-175b".into(),
+            num_layers: 96,
+            hidden: 12288,
+            heads: 96,
+            ffn: 49152,
+            vocab: 50272,
+            max_context: 2048,
+            dtype: Dtype::F16,
+        }
+    }
+
     /// LLaMA2-70B-shaped config (Table 2 / PowerInfer comparison).
     pub fn llama2_70b() -> Self {
         Self {
@@ -211,6 +227,7 @@ impl ModelConfig {
             "opt-13b" => Some(Self::opt_13b()),
             "opt-30b" => Some(Self::opt_30b()),
             "opt-66b" => Some(Self::opt_66b()),
+            "opt-175b" => Some(Self::opt_175b()),
             "llama2-70b" => Some(Self::llama2_70b()),
             "opt-tiny" => Some(Self::opt_tiny()),
             _ => None,
@@ -256,6 +273,18 @@ mod tests {
     fn opt66b_weights_about_132gb() {
         let gb = ModelConfig::opt_66b().total_weight_bytes() as f64 / 1e9;
         assert!((120.0..145.0).contains(&gb), "got {gb} GB");
+    }
+
+    #[test]
+    fn opt175b_weights_about_350gb() {
+        // 175B params * 2 bytes ~ 350 GB — far beyond one 24 GB GPU or
+        // even a TP=4 rig's aggregate residency; the PP regime's raison
+        // d'être.
+        let m = ModelConfig::opt_175b();
+        let gb = m.total_weight_bytes() as f64 / 1e9;
+        assert!((330.0..370.0).contains(&gb), "got {gb} GB");
+        assert_eq!(m.hidden % m.heads, 0);
+        assert_eq!(ModelConfig::by_name("opt-175b").unwrap(), m);
     }
 
     #[test]

@@ -6,13 +6,15 @@
 //! take all timing inputs from here, so alternative testbeds are a config
 //! change, not a code change.
 //!
-//! [`ShardSpec`] scales the envelope out to a tensor-parallel multi-GPU
-//! rig: `gpu` and `interconnect` stay PER-SHARD specs (each GPU has its
-//! own host link), and the shard spec adds the degree plus the inter-GPU
-//! collective fabric the all-gather barriers ride on. `tp = 1` is the
-//! paper's single-GPU testbed, bit-for-bit (see DESIGN.md §Sharding).
+//! Multi-device rigs are described by [`Topology`] (`config::topology`):
+//! a TP×PP grid of per-device GPU + host-link slots that the
+//! [`crate::plan::PlanBuilder`] lowers into an execution plan. The
+//! legacy flat [`ShardSpec`] remains as a read-only mirror of the
+//! topology's TP dimension for not-yet-migrated callers; `tp = 1, pp = 1`
+//! is the paper's single-GPU testbed, bit-for-bit (see DESIGN.md
+//! §Topology).
 
-
+use super::topology::Topology;
 
 /// GPU compute + memory specification.
 #[derive(Debug, Clone, PartialEq)]
@@ -132,6 +134,11 @@ impl HostSpec {
 /// linearly with `tp`. The price is two collectives per decoder layer
 /// (the all-gather after attention and after the FFN), which run on the
 /// inter-GPU fabric described here.
+///
+/// Legacy: new code should describe parallelism with [`Topology`] (which
+/// adds pipeline stages and per-device heterogeneity); `SystemConfig`
+/// keeps this flat view in sync as a read-only mirror of the topology's
+/// TP dimension.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ShardSpec {
     /// Tensor-parallel degree (number of GPU shards). 1 = single GPU.
@@ -184,9 +191,14 @@ pub struct SystemConfig {
     /// Per-shard host link (one PCIe link per GPU).
     pub interconnect: InterconnectSpec,
     pub host: HostSpec,
-    /// Tensor-parallel layout. [`ShardSpec::single`] reproduces the
-    /// paper's single-GPU testbed exactly.
+    /// Flat tensor-parallel view, kept in sync with `topology` by every
+    /// constructor (legacy mirror — `topology` is the authority). Do NOT
+    /// mutate it to scale out: plan lowering asserts it still matches
+    /// `topology.legacy_shard()` and panics on divergence.
     pub shard: ShardSpec,
+    /// The TP×PP device grid this system runs on. [`Topology::single`]
+    /// reproduces the paper's single-GPU testbed exactly.
+    pub topology: Topology,
     /// Tokens per hybrid cache block (vLLM uses 16; the paper keeps block
     /// granularity for both KV and ACT blocks).
     pub block_tokens: usize,
@@ -206,6 +218,7 @@ impl SystemConfig {
             interconnect: InterconnectSpec::pcie4_x16(),
             host: HostSpec::xeon_882gb(),
             shard: ShardSpec::single(),
+            topology: Topology::single(GpuSpec::rtx_4090(), InterconnectSpec::pcie4_x16()),
             block_tokens: 16,
             gpu_weight_fraction: 0.5,
             gpu_buffer_fraction: 0.25,
@@ -215,8 +228,36 @@ impl SystemConfig {
     /// The paper testbed scaled out to `tp` tensor-parallel GPUs, one
     /// PCIe 4.0 x16 link each, collected over P2P PCIe.
     pub fn paper_testbed_tp(tp: usize) -> Self {
+        Self::paper_testbed_grid(tp, 1)
+    }
+
+    /// The paper testbed as a TP×PP grid: `tp` ranks per stage, `pp`
+    /// pipeline stages, uniform RTX-4090 slots with one PCIe 4.0 x16
+    /// host link each, collected over P2P PCIe. `(tp, 1)` is exactly
+    /// [`Self::paper_testbed_tp`]; `(1, 1)` is the paper testbed.
+    pub fn paper_testbed_grid(tp: usize, pp: usize) -> Self {
         Self {
             shard: ShardSpec::pcie_p2p(tp),
+            topology: Topology::uniform(
+                GpuSpec::rtx_4090(),
+                InterconnectSpec::pcie4_x16(),
+                tp,
+                pp,
+            ),
+            ..Self::paper_testbed()
+        }
+    }
+
+    /// A system over an explicit (possibly heterogeneous) topology. The
+    /// reference `gpu`/`interconnect` fields mirror slot (0, 0) — the
+    /// specs legacy single-device paths read — and `shard` mirrors the
+    /// topology's TP dimension.
+    pub fn with_topology(topology: Topology) -> Self {
+        Self {
+            gpu: topology.slot(0).gpu.clone(),
+            interconnect: topology.slot(0).link.clone(),
+            shard: topology.legacy_shard(),
+            topology,
             ..Self::paper_testbed()
         }
     }
@@ -226,21 +267,24 @@ impl SystemConfig {
     /// weights, so weight streaming, ACT spill and the block-placement
     /// decisions all actually trigger.
     pub fn tiny_testbed() -> Self {
+        let gpu = GpuSpec {
+            name: "sim-tiny".into(),
+            memory_bytes: 8 << 20,
+            peak_flops: 1.0e12,
+            mem_bw: 100.0e9,
+            gemm_efficiency: 0.5,
+            attn_efficiency: 0.25,
+            kvgen_efficiency: 0.6,
+        };
+        let interconnect = InterconnectSpec {
+            h2d_bw: 2.0e9,
+            d2h_bw: 2.0e9,
+            latency_s: 10e-6,
+        };
         Self {
-            gpu: GpuSpec {
-                name: "sim-tiny".into(),
-                memory_bytes: 8 << 20,
-                peak_flops: 1.0e12,
-                mem_bw: 100.0e9,
-                gemm_efficiency: 0.5,
-                attn_efficiency: 0.25,
-                kvgen_efficiency: 0.6,
-            },
-            interconnect: InterconnectSpec {
-                h2d_bw: 2.0e9,
-                d2h_bw: 2.0e9,
-                latency_s: 10e-6,
-            },
+            topology: Topology::single(gpu.clone(), interconnect.clone()),
+            gpu,
+            interconnect,
             host: HostSpec {
                 memory_bytes: 4 << 30,
             },
@@ -268,21 +312,32 @@ impl SystemConfig {
             .saturating_sub(self.gpu_weight_budget() + self.gpu_buffer_budget())
     }
 
-    /// Tensor-parallel degree (shorthand for `shard.tp`).
+    /// Tensor-parallel degree (ranks per pipeline stage).
     pub fn tp(&self) -> usize {
-        self.shard.tp
+        self.topology.tp
     }
 
-    /// Aggregate sustained host→device bandwidth across all shard links —
-    /// the resource sharding multiplies (the binding one for offloading
-    /// systems, per the KV-offloading bottleneck study in PAPERS.md).
+    /// Pipeline-parallel degree (stages).
+    pub fn pp(&self) -> usize {
+        self.topology.pp
+    }
+
+    /// Total devices in the grid (`tp × pp`).
+    pub fn devices(&self) -> usize {
+        self.topology.device_count()
+    }
+
+    /// Aggregate sustained host→device bandwidth across every device's
+    /// link — the resource parallelism multiplies (the binding one for
+    /// offloading systems, per the KV-offloading bottleneck study in
+    /// PAPERS.md).
     pub fn aggregate_h2d_bw(&self) -> f64 {
-        self.interconnect.h2d_bw * self.shard.tp as f64
+        self.topology.slots.iter().map(|s| s.link.h2d_bw).sum()
     }
 
-    /// Total device memory across all shards.
+    /// Total device memory across the grid.
     pub fn total_gpu_memory(&self) -> usize {
-        self.gpu.memory_bytes * self.shard.tp
+        self.topology.slots.iter().map(|s| s.gpu.memory_bytes).sum()
     }
 }
 
@@ -342,5 +397,44 @@ mod tests {
         assert_eq!(four.gpu_cache_budget(), one.gpu_cache_budget());
         // tp=1 via the sharded constructor is the exact same config
         assert_eq!(SystemConfig::paper_testbed_tp(1), one);
+    }
+
+    #[test]
+    fn grid_constructor_matches_tp_constructor_at_pp1() {
+        // The topology-era constructor collapses to the legacy one when
+        // there is a single pipeline stage — same config value, so there
+        // is no separate code path to drift.
+        for tp in [1usize, 2, 4] {
+            assert_eq!(
+                SystemConfig::paper_testbed_grid(tp, 1),
+                SystemConfig::paper_testbed_tp(tp)
+            );
+        }
+        let g = SystemConfig::paper_testbed_grid(2, 4);
+        assert_eq!(g.tp(), 2);
+        assert_eq!(g.pp(), 4);
+        assert_eq!(g.devices(), 8);
+        // the legacy mirror tracks the TP dimension only
+        assert_eq!(g.shard.tp, 2);
+        assert_eq!(g.aggregate_h2d_bw(), 8.0 * g.interconnect.h2d_bw);
+    }
+
+    #[test]
+    fn with_topology_mirrors_slot_zero_and_shard() {
+        use super::super::topology::Topology;
+        let topo = Topology::uniform(GpuSpec::rtx_4090(), InterconnectSpec::pcie4_x16(), 4, 2)
+            .with_clock_skew(0, 1, 0.8);
+        let sys = SystemConfig::with_topology(topo.clone());
+        assert_eq!(sys.gpu, topo.slot(0).gpu);
+        assert_eq!(sys.interconnect, topo.slot(0).link);
+        assert_eq!(sys.shard.tp, 4);
+        assert_eq!(sys.devices(), 8);
+        assert!(!sys.topology.is_uniform());
+        // uniform grid via with_topology equals the grid constructor
+        let uni = Topology::uniform(GpuSpec::rtx_4090(), InterconnectSpec::pcie4_x16(), 2, 2);
+        assert_eq!(
+            SystemConfig::with_topology(uni),
+            SystemConfig::paper_testbed_grid(2, 2)
+        );
     }
 }

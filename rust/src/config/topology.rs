@@ -1,0 +1,288 @@
+//! Device topology: a TP×PP grid of [`DeviceSlot`]s with heterogeneous
+//! links — the first-class parallelism description the [`ExecutionPlan`]
+//! lowers onto (the layered CPU-GPU execution-plan framing HybridGen and
+//! APEX use for asymmetric compute/link resources; see PAPERS.md).
+//!
+//! A [`Topology`] replaces the flat TP-only `ShardSpec` as the authority
+//! on how many devices exist and what each one looks like:
+//!
+//! * `tp` ranks per pipeline stage shard every weight matrix and every
+//!   cached KV/ACT block along the hidden dimension (Megatron-style),
+//!   joined by two ring all-gathers per decoder layer on the stage's
+//!   collective fabric;
+//! * `pp` pipeline stages own contiguous layer ranges; activations hop
+//!   stage → stage over the [`StageLinkSpec`] and the token produced by
+//!   the last stage feeds the next decode step of the first, which is
+//!   where pipeline bubbles come from;
+//! * every [`DeviceSlot`] carries its **own** [`GpuSpec`] and host
+//!   [`InterconnectSpec`], so x16/x8 link mixes, NVLink islands and
+//!   per-device clock skew are config, not code.
+//!
+//! `Topology::single()` and `SystemConfig::paper_testbed_tp(n)` keep the
+//! historical constructors as thin wrappers (uniform slots, one stage);
+//! plan-driven consumers are bit-for-bit identical to the pre-topology
+//! code paths in that regime (DESIGN.md §Topology).
+//!
+//! [`ExecutionPlan`]: crate::plan::ExecutionPlan
+
+use super::system::{GpuSpec, InterconnectSpec, ShardSpec};
+
+/// Intra-stage collective fabric (the ring the per-layer all-gathers run
+/// on). One per pipeline stage, so an NVLink island can coexist with
+/// P2P-PCIe stages in the same rig.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveSpec {
+    /// Sustained per-link bandwidth in bytes/s.
+    pub bw: f64,
+    /// Fixed latency per collective launch (ring setup + kernel launch).
+    pub latency_s: f64,
+}
+
+impl CollectiveSpec {
+    /// P2P over the PCIe switch — what a multi-4090 rig has (no NVLink).
+    /// Matches `ShardSpec::single()`'s fabric numbers exactly.
+    pub fn pcie_p2p() -> Self {
+        Self {
+            bw: 20.0e9,
+            latency_s: 20e-6,
+        }
+    }
+
+    /// NVLink-class island: ~200 GB/s sustained per link, sub-10µs launch.
+    pub fn nvlink() -> Self {
+        Self {
+            bw: 200.0e9,
+            latency_s: 8e-6,
+        }
+    }
+
+    /// Seconds for one ring all-gather of a `bytes`-sized (full,
+    /// unsharded) payload across `tp` ranks; same formula as the
+    /// historical `ShardSpec::allgather_time`.
+    pub fn allgather_time(&self, tp: usize, bytes: usize) -> f64 {
+        if tp <= 1 {
+            return 0.0;
+        }
+        let frac = (tp - 1) as f64 / tp as f64;
+        self.latency_s + bytes as f64 * frac / self.bw
+    }
+}
+
+/// Inter-stage activation link (stage s → s+1 P2P hop).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageLinkSpec {
+    /// Sustained bandwidth in bytes/s.
+    pub bw: f64,
+    /// Fixed per-hop latency in seconds.
+    pub latency_s: f64,
+}
+
+impl StageLinkSpec {
+    /// P2P PCIe hop (same physics as the collective fabric).
+    pub fn pcie_p2p() -> Self {
+        Self {
+            bw: 20.0e9,
+            latency_s: 20e-6,
+        }
+    }
+
+    /// Seconds to ship a `bytes`-sized activation payload one stage ahead.
+    pub fn hop_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bw
+    }
+}
+
+/// One device in the grid: its compute spec and its **own** host link
+/// (each GPU keeps a private PCIe link to host memory, so aggregate
+/// host↔device bandwidth grows with the device count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSlot {
+    pub gpu: GpuSpec,
+    pub link: InterconnectSpec,
+}
+
+/// A TP×PP grid of device slots. Device ids are row-major:
+/// `device = stage * tp + rank`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Tensor-parallel degree (ranks per stage).
+    pub tp: usize,
+    /// Pipeline-parallel degree (stages).
+    pub pp: usize,
+    /// `tp * pp` slots, row-major by stage.
+    pub slots: Vec<DeviceSlot>,
+    /// Per-stage collective fabric (`len == pp`).
+    pub collective: Vec<CollectiveSpec>,
+    /// Inter-stage activation link.
+    pub stage_link: StageLinkSpec,
+}
+
+impl Topology {
+    /// Uniform grid: every slot clones the same GPU + host link.
+    pub fn uniform(gpu: GpuSpec, link: InterconnectSpec, tp: usize, pp: usize) -> Self {
+        assert!(tp >= 1, "tensor-parallel degree must be >= 1");
+        assert!(pp >= 1, "pipeline-parallel degree must be >= 1");
+        Self {
+            tp,
+            pp,
+            slots: vec![DeviceSlot { gpu, link }; tp * pp],
+            collective: vec![CollectiveSpec::pcie_p2p(); pp],
+            stage_link: StageLinkSpec::pcie_p2p(),
+        }
+    }
+
+    /// Single device — the paper's one-GPU testbed shape.
+    pub fn single(gpu: GpuSpec, link: InterconnectSpec) -> Self {
+        Self::uniform(gpu, link, 1, 1)
+    }
+
+    /// Total devices in the grid.
+    pub fn device_count(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// Global device id of `(stage, rank)`.
+    pub fn device(&self, stage: usize, rank: usize) -> usize {
+        assert!(stage < self.pp && rank < self.tp, "slot out of range");
+        stage * self.tp + rank
+    }
+
+    /// The slot backing global device `dev`.
+    pub fn slot(&self, dev: usize) -> &DeviceSlot {
+        &self.slots[dev]
+    }
+
+    /// Global device ids of `stage`'s TP group.
+    pub fn stage_devices(&self, stage: usize) -> std::ops::Range<usize> {
+        assert!(stage < self.pp, "stage out of range");
+        stage * self.tp..(stage + 1) * self.tp
+    }
+
+    /// Pipeline stage of global device `dev`.
+    pub fn stage_of_device(&self, dev: usize) -> usize {
+        assert!(dev < self.device_count(), "device out of range");
+        dev / self.tp
+    }
+
+    /// Ring all-gather seconds for a full `bytes` payload within `stage`.
+    pub fn allgather_time(&self, stage: usize, bytes: usize) -> f64 {
+        self.collective[stage].allgather_time(self.tp, bytes)
+    }
+
+    /// Seconds to hand a `bytes` activation payload to the next stage.
+    pub fn stage_hop_time(&self, bytes: usize) -> f64 {
+        self.stage_link.hop_time(bytes)
+    }
+
+    /// Every slot identical and every stage on the same fabric?
+    pub fn is_uniform(&self) -> bool {
+        self.slots.windows(2).all(|w| w[0] == w[1])
+            && self.collective.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Replace one slot (heterogeneous rigs: x8 link, slower clock, ...).
+    pub fn with_slot(mut self, stage: usize, rank: usize, slot: DeviceSlot) -> Self {
+        let d = self.device(stage, rank);
+        self.slots[d] = slot;
+        self
+    }
+
+    /// Scale one device's compute clock (peak FLOPs and memory bandwidth)
+    /// by `factor` — the straggler-experiment knob.
+    pub fn with_clock_skew(mut self, stage: usize, rank: usize, factor: f64) -> Self {
+        assert!(factor > 0.0, "clock factor must be positive");
+        let d = self.device(stage, rank);
+        self.slots[d].gpu.peak_flops *= factor;
+        self.slots[d].gpu.mem_bw *= factor;
+        self
+    }
+
+    /// Replace one device's host link (x16 → x8 mixes).
+    pub fn with_link(mut self, stage: usize, rank: usize, link: InterconnectSpec) -> Self {
+        let d = self.device(stage, rank);
+        self.slots[d].link = link;
+        self
+    }
+
+    /// Put `stage` on an NVLink-island collective fabric.
+    pub fn with_nvlink_stage(mut self, stage: usize) -> Self {
+        assert!(stage < self.pp, "stage out of range");
+        self.collective[stage] = CollectiveSpec::nvlink();
+        self
+    }
+
+    /// The legacy flat view of this topology (stage-0 fabric, TP only) —
+    /// what `SystemConfig.shard` mirrors for not-yet-migrated callers.
+    pub fn legacy_shard(&self) -> ShardSpec {
+        ShardSpec {
+            tp: self.tp,
+            collective_bw: self.collective[0].bw,
+            collective_latency_s: self.collective[0].latency_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper() -> Topology {
+        Topology::uniform(GpuSpec::rtx_4090(), InterconnectSpec::pcie4_x16(), 2, 3)
+    }
+
+    #[test]
+    fn grid_indexing_is_row_major() {
+        let t = paper();
+        assert_eq!(t.device_count(), 6);
+        assert_eq!(t.device(0, 0), 0);
+        assert_eq!(t.device(1, 0), 2);
+        assert_eq!(t.device(2, 1), 5);
+        assert_eq!(t.stage_devices(1), 2..4);
+        assert_eq!(t.stage_of_device(3), 1);
+        assert_eq!(t.stage_of_device(4), 2);
+    }
+
+    #[test]
+    fn allgather_matches_legacy_shard_spec() {
+        // The fabric formula must be bit-for-bit the ShardSpec one.
+        let t = Topology::uniform(GpuSpec::rtx_4090(), InterconnectSpec::pcie4_x16(), 4, 1);
+        let legacy = ShardSpec::pcie_p2p(4);
+        for bytes in [0usize, 1 << 20, 1 << 26, 1 << 30] {
+            assert_eq!(t.allgather_time(0, bytes), legacy.allgather_time(bytes));
+        }
+        assert_eq!(t.legacy_shard(), legacy);
+        // single rank: no collective at all
+        let one = Topology::single(GpuSpec::rtx_4090(), InterconnectSpec::pcie4_x16());
+        assert_eq!(one.allgather_time(0, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn heterogeneity_builders() {
+        let x8 = InterconnectSpec {
+            h2d_bw: 12.5e9,
+            d2h_bw: 12.5e9,
+            latency_s: 15e-6,
+        };
+        let t = paper()
+            .with_clock_skew(1, 1, 0.8)
+            .with_link(0, 0, x8.clone())
+            .with_nvlink_stage(2);
+        assert!(!t.is_uniform());
+        assert_eq!(t.slot(3).gpu.peak_flops, GpuSpec::rtx_4090().peak_flops * 0.8);
+        assert_eq!(t.slot(0).link, x8);
+        assert_eq!(t.collective[2], CollectiveSpec::nvlink());
+        // NVLink stage's all-gather is much faster than the PCIe stages'
+        assert!(t.allgather_time(2, 1 << 26) < t.allgather_time(0, 1 << 26) / 5.0);
+        assert!(paper().is_uniform());
+    }
+
+    #[test]
+    fn stage_hop_scales_with_payload() {
+        let t = paper();
+        assert!(t.stage_hop_time(1 << 26) > t.stage_hop_time(1 << 20));
+        assert_eq!(
+            t.stage_hop_time(0),
+            StageLinkSpec::pcie_p2p().latency_s
+        );
+    }
+}

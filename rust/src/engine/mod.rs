@@ -124,6 +124,17 @@ impl Engine {
     /// `dir/golden/params.bin` when present (cross-layer parity with the
     /// python oracle), else seeded random weights.
     pub fn new(dir: &Path, cfg: EngineConfig) -> Result<Self> {
+        // The PJRT engine executes single-GPU: a multi-device topology
+        // would schedule all work on device 0 and fabricate straggler /
+        // bubble metrics for lanes that never run. Reject it up front;
+        // modeled TP×PP grids are served by `sched::AnalyticEngine`.
+        anyhow::ensure!(
+            cfg.sys.devices() == 1,
+            "the PJRT engine executes single-GPU today ({}×{} topology given); \
+             use sched::AnalyticEngine for modeled grids",
+            cfg.sys.tp(),
+            cfg.sys.pp()
+        );
         let mut rt = PjrtRuntime::new(dir)?;
         let model = rt.manifest().model.clone();
         let golden = dir.join("golden/params.bin");
@@ -200,6 +211,7 @@ impl Engine {
             WeightStore::layer_tensor_index(m, "bv")?,
         ];
 
+        let tl = Timeline::for_plan(&crate::plan::ExecutionPlan::for_system(&model, &cfg.sys));
         Ok(Self {
             rt,
             weights,
@@ -215,7 +227,7 @@ impl Engine {
             caps,
             blocks,
             ic,
-            tl: Timeline::new(),
+            tl,
             states: HashMap::new(),
             admit_order: Vec::new(),
             pending_prefill: Vec::new(),
@@ -238,6 +250,15 @@ impl Engine {
     /// The discrete-event timeline the engine accounts its pipeline on.
     pub fn timeline(&self) -> &Timeline {
         &self.tl
+    }
+
+    /// The lowered execution plan of this engine's (model, topology)
+    /// pair — what the scheduler derives its reservation striping and
+    /// per-stage metrics from. Always 1×1 today: construction rejects
+    /// larger grids until artifact sharding lands (ROADMAP), but the
+    /// surface is already the plan, not ad-hoc shard arithmetic.
+    pub fn execution_plan(&self) -> crate::plan::ExecutionPlan {
+        crate::plan::ExecutionPlan::for_system(&self.model, &self.cfg.sys)
     }
 
     pub fn cost_model(&self) -> &CostModel {
@@ -492,7 +513,7 @@ impl Engine {
     /// and the metrics report.
     pub fn serve(&mut self, requests: &[Request]) -> Result<(Vec<Completion>, ServeReport)> {
         let wall0 = Instant::now();
-        self.tl = Timeline::new();
+        self.tl = Timeline::for_plan(&self.execution_plan());
         self.ic.reset_traffic();
 
         let order: Vec<u64> = requests.iter().map(|r| r.id).collect();
@@ -587,14 +608,14 @@ impl Engine {
         let mut a = out.into_iter().next().unwrap();
 
         // GPU lane: embedding compute.
-        let mut gpu_ready = self.tl.lane_free(Lane::Gpu);
-        let span = self.tl.schedule(Lane::Gpu, gpu_ready, emb_secs);
+        let mut gpu_ready = self.tl.lane_free_on(0, Lane::Gpu);
+        let span = self.tl.schedule_on(0, Lane::Gpu, gpu_ready, emb_secs);
         gpu_ready = span.end;
 
         // Per-layer forward; weights for layer l+1 prefetch during layer l.
         let mut weight_ready = {
             let t = self.weight_stream_time();
-            let s = self.tl.schedule(Lane::PCIe, 0.0, t);
+            let s = self.tl.schedule_on(0, Lane::PCIe, 0.0, t);
             s.end
         };
         let entry = self.rt.manifest().layer_prefill(bb, sb)?.clone();
@@ -610,7 +631,7 @@ impl Engine {
             // Prefetch next layer's weights while this layer computes.
             let next_weight_ready = if l + 1 < nl {
                 let t = self.weight_stream_time();
-                self.tl.schedule(Lane::PCIe, 0.0, t).end
+                self.tl.schedule_on(0, Lane::PCIe, 0.0, t).end
             } else {
                 0.0
             };
@@ -619,7 +640,7 @@ impl Engine {
             let mut args: Vec<&xla::Literal> = vec![&a_lit];
             args.extend(self.layer_lits[l].iter());
             let (out, secs) = self.rt.execute_refs(&entry, &args)?;
-            let span = self.tl.schedule(Lane::Gpu, gpu_ready.max(weight_ready), secs);
+            let span = self.tl.schedule_on(0, Lane::Gpu, gpu_ready.max(weight_ready), secs);
             gpu_ready = span.end;
             weight_ready = next_weight_ready;
 
@@ -692,7 +713,7 @@ impl Engine {
             &entry,
             &[&last_t.to_literal()?, &self.lnf_g_lit, &self.lnf_b_lit, &self.emb_lit],
         )?;
-        let span = self.tl.schedule(Lane::Gpu, gpu_ready, secs);
+        let span = self.tl.schedule_on(0, Lane::Gpu, gpu_ready, secs);
         let logits = out[0].as_f32()?;
         let vocab = self.model.vocab;
         for (i, id) in ids.iter().enumerate() {
@@ -742,12 +763,12 @@ impl Engine {
         )?;
         let mut a = out.into_iter().next().unwrap();
 
-        let mut gpu_ready = self.tl.schedule(Lane::Gpu, self.tl.lane_free(Lane::Gpu), emb_secs).end;
+        let mut gpu_ready = self.tl.schedule_on(0, Lane::Gpu, self.tl.lane_free_on(0, Lane::Gpu), emb_secs).end;
         // Steady-state weight prefetch: layer 0's weights were fetched
         // during the previous step's tail; model the first fetch here.
         let mut weight_ready = {
             let t = self.weight_stream_time();
-            self.tl.schedule(Lane::PCIe, 0.0, t).end
+            self.tl.schedule_on(0, Lane::PCIe, 0.0, t).end
         };
 
         let decode_entry = self.rt.manifest().layer_decode(bb, max_cached)?.clone();
@@ -789,10 +810,10 @@ impl Engine {
             let t_act = self
                 .ic
                 .transfer_time(Dir::HostToDevice, TrafficClass::ActLoad, act_load_bytes);
-            let load_span = self.tl.schedule(Lane::PCIe, 0.0, t_kv + t_act);
+            let load_span = self.tl.schedule_on(0, Lane::PCIe, 0.0, t_kv + t_act);
             let next_weight_ready = if l + 1 < nl {
                 let t = self.weight_stream_time();
-                self.tl.schedule(Lane::PCIe, 0.0, t).end
+                self.tl.schedule_on(0, Lane::PCIe, 0.0, t).end
             } else {
                 0.0
             };
@@ -875,8 +896,8 @@ impl Engine {
 
             // GPU lane: KV-Gen then the forward pass, gated on data + weights.
             let data_ready = load_span.end.max(weight_ready).max(gpu_ready);
-            let gen_span = self.tl.schedule(Lane::Gpu, data_ready, gen_secs);
-            let dec_span = self.tl.schedule(Lane::Gpu, gen_span.end, dec_secs);
+            let gen_span = self.tl.schedule_on(0, Lane::Gpu, data_ready, gen_secs);
+            let dec_span = self.tl.schedule_on(0, Lane::Gpu, gen_span.end, dec_secs);
             gpu_ready = dec_span.end;
             weight_ready = next_weight_ready;
 
@@ -923,7 +944,7 @@ impl Engine {
             &entry,
             &[&last_t.to_literal()?, &self.lnf_g_lit, &self.lnf_b_lit, &self.emb_lit],
         )?;
-        let logits_span = self.tl.schedule(Lane::Gpu, gpu_ready, secs);
+        let logits_span = self.tl.schedule_on(0, Lane::Gpu, gpu_ready, secs);
         let logits = out[0].as_f32()?;
         let vocab = self.model.vocab;
 
@@ -1124,6 +1145,21 @@ mod tests {
                 Request::new(i, (0..len).map(|_| rng.range(0, 2000) as i32).collect(), 8)
             })
             .collect()
+    }
+
+    #[test]
+    fn rejects_multi_device_topologies_up_front() {
+        // The guard fires before any artifact/runtime access, so this
+        // runs without artifacts: a TP=2 system must error with a pointer
+        // to the analytic engine, not fabricate per-device metrics.
+        let cfg = EngineConfig {
+            sys: crate::config::SystemConfig::paper_testbed_tp(2),
+            ..EngineConfig::default()
+        };
+        let err = Engine::new(std::path::Path::new("/nonexistent"), cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("single-GPU"), "got: {msg}");
+        assert!(msg.contains("AnalyticEngine"), "got: {msg}");
     }
 
     #[test]

@@ -312,8 +312,61 @@ pub fn tab_sharding() -> FigureTable {
     t
 }
 
+/// Pipeline-parallel grid table (beyond the paper's envelope): OPT-66B
+/// and OPT-175B across TP×PP grids of up to 8 modeled devices — the
+/// regime where the model cannot fit any flat-TP rig's aggregate
+/// residency. Reports throughput of the four systems, HybridServe's
+/// chosen ACT share, the mean per-stage pipeline-bubble fraction, and
+/// the inter-stage activation traffic. The visible tension: PP multiplies
+/// aggregate host-link bandwidth for the weight stream (PCIe-bound
+/// systems speed up) while the token feedback across stages opens a
+/// compute bubble that closes the recomputation window (GPU-bound
+/// systems flatten) — see DESIGN.md §Topology.
+pub fn tab_pipeline() -> FigureTable {
+    let mut t = FigureTable::new(
+        "tab_pipeline_grid",
+        &[
+            "model",
+            "tp",
+            "pp",
+            "deepspeed",
+            "flexgen",
+            "act_cache",
+            "hybrid",
+            "hybrid_act_share",
+            "mean_bubble",
+            "stage_xfer_gb",
+        ],
+    );
+    for m in [ModelConfig::opt_66b(), ModelConfig::opt_175b()] {
+        let wl = Workload { batch: 64, prompt: 512, gen: 64 };
+        for (tp, pp) in [(2usize, 1usize), (2, 2), (2, 4), (4, 2)] {
+            let sys = SystemConfig::paper_testbed_grid(tp, pp);
+            let ds = simulate(&m, &sys, System::DeepSpeedInference, wl);
+            let fg = simulate(&m, &sys, System::FlexGen, wl);
+            let ac = simulate(&m, &sys, System::ActOnly, wl);
+            let hy = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+            let mean_bubble =
+                hy.stage_bubble.iter().sum::<f64>() / hy.stage_bubble.len() as f64;
+            t.row(vec![
+                m.name.clone(),
+                tp.to_string(),
+                pp.to_string(),
+                f2(ds.throughput),
+                f2(fg.throughput),
+                f2(ac.throughput),
+                f2(hy.throughput),
+                f3(hy.act_block_share),
+                f3(mean_bubble),
+                f2(hy.stage_transfer_bytes as f64 / 1e9),
+            ]);
+        }
+    }
+    t
+}
+
 /// All figures in paper order (what `examples/paper_figures.rs` emits),
-/// plus the beyond-paper sharding table.
+/// plus the beyond-paper sharding and pipeline tables.
 pub fn all_figures() -> Vec<FigureTable> {
     vec![
         fig3a(),
@@ -327,6 +380,7 @@ pub fn all_figures() -> Vec<FigureTable> {
         fig14(),
         fig15(),
         tab_sharding(),
+        tab_pipeline(),
     ]
 }
 
@@ -367,6 +421,26 @@ mod tests {
             let coll: Vec<f64> = rows.iter().map(|r| r[8].parse().unwrap()).collect();
             assert_eq!(coll[0], 0.0);
             assert!(coll[2] > 0.0);
+        }
+    }
+
+    #[test]
+    fn tab_pipeline_covers_grids_and_reports_bubbles() {
+        let t = tab_pipeline();
+        assert_eq!(t.rows.len(), 8, "2 models x 4 grids");
+        let bub = t.columns.iter().position(|c| c == "mean_bubble").unwrap();
+        let xfer = t.columns.iter().position(|c| c == "stage_xfer_gb").unwrap();
+        let pp_col = t.columns.iter().position(|c| c == "pp").unwrap();
+        for row in &t.rows {
+            let pp: usize = row[pp_col].parse().unwrap();
+            let b: f64 = row[bub].parse().unwrap();
+            let x: f64 = row[xfer].parse().unwrap();
+            assert!((0.0..=1.0).contains(&b), "{row:?}");
+            if pp == 1 {
+                assert_eq!(x, 0.0, "{row:?}");
+            } else {
+                assert!(x > 0.0, "{row:?}");
+            }
         }
     }
 

@@ -12,13 +12,18 @@
 //! `artifacts/*.hlo.txt` via the PJRT CPU client and serves from there.
 //!
 //! Module map (see DESIGN.md for the full inventory):
-//! - [`config`] — model (OPT family) + system (testbed) configuration,
-//!   incl. tensor-parallel sharding (`ShardSpec`)
+//! - [`config`] — model (OPT family, opt-6.7b…175b) + system (testbed)
+//!   configuration, incl. the TP×PP device grid (`Topology`: per-device
+//!   GPU/link slots, per-stage collective fabrics, inter-stage links)
+//! - [`plan`] — `PlanBuilder` lowering a (model, topology) pair into the
+//!   `ExecutionPlan` (stage layer ranges, per-device weight slices,
+//!   collective schedule, inter-stage transfers) that sim, policy,
+//!   scheduler and engine all consume
 //! - [`util`] — offline-build substrates: JSON, PRNG, stats, prop-testing
 //! - [`memsim`] — GPU/host capacity accounting
 //! - [`pcie`] — interconnect model, traffic classes, and the 2×N-lane
-//!   sharded timeline (one PCIe + one GPU lane per shard, all-gather
-//!   barriers)
+//!   plan-indexed timeline (one PCIe + one GPU lane per grid device,
+//!   stage-scoped all-gather barriers)
 //! - [`cache`] — hybrid KV/ACT block manager (PagedAttention-style),
 //!   including KV→ACT demotion (the preemption primitive)
 //! - [`policy`] — Algorithm 1 host allocation, Eq. 11 ratio upkeep,
@@ -28,13 +33,17 @@
 //! - [`engine`] — prefill/decode execution with the hybrid cache; exposes
 //!   the step-wise `admit`/`step`/`retire` API and closed-batch `serve`
 //! - [`sched`] — online serving scheduler: admission queue, continuous
-//!   batching, ACT-demotion preemption under memory pressure
+//!   batching, ACT-demotion preemption, plan-derived reservation ledger;
+//!   plus the artifact-free analytic step engine for sharded serving
+//!   experiments
 //! - [`workload`] — synthetic batches + timed arrival traces (Poisson,
 //!   bursty on/off, deterministic replay)
 //! - [`metrics`] — offline serve reports and the online `SloReport`
-//!   (TTFT/TPOT percentiles, queue time, goodput under SLO)
+//!   (TTFT/TPOT percentiles, queue time, goodput under SLO, per-device
+//!   utilization, straggler gap, per-stage pipeline bubbles)
 //! - [`server`] — TCP front-end driving the scheduler loop
-//! - [`sim`] — full-scale analytic simulator (paper-figure workloads)
+//! - [`sim`] — full-scale analytic simulator (paper-figure workloads,
+//!   TP×PP grids, heterogeneous straggler rigs)
 //! - [`figures`] — table/figure regeneration used by benches and tests
 //! - [`harness`] — timing/CSV bench harness (no criterion offline)
 
@@ -46,6 +55,7 @@ pub mod harness;
 pub mod memsim;
 pub mod metrics;
 pub mod pcie;
+pub mod plan;
 pub mod policy;
 pub mod runtime;
 pub mod sched;

@@ -60,8 +60,8 @@ impl ServeReport {
             } else {
                 0.0
             },
-            gpu_utilization: timeline.utilization(Lane::Gpu),
-            pcie_utilization: timeline.utilization(Lane::PCIe),
+            gpu_utilization: timeline.utilization_on(0, Lane::Gpu),
+            pcie_utilization: timeline.utilization_on(0, Lane::PCIe),
             traffic,
             compile_secs,
         }
@@ -133,31 +133,51 @@ pub fn latency_summary(completions: &[Completion]) -> LatencySummary {
 // Per-shard utilization (sharded timelines)
 // ----------------------------------------------------------------------
 
-/// Per-shard lane utilization read off a sharded [`Timeline`] — the
-/// serving-side analogue of the simulator's per-shard report. Empty when
+/// Per-device lane utilization read off a plan-indexed [`Timeline`] — the
+/// serving-side analogue of the simulator's per-device report. Empty when
 /// the engine exposes no timeline (e.g. scheduler tests on a mock).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ShardUtilization {
-    /// GPU-lane utilization per shard (len == tp).
+    /// GPU-lane utilization per grid device (len == tp·pp, plan order:
+    /// `stage * tp + rank`).
     pub gpu: Vec<f64>,
-    /// PCIe-lane utilization per shard link.
+    /// PCIe-lane utilization per device link.
     pub pcie: Vec<f64>,
 }
 
 impl ShardUtilization {
     pub fn from_timeline(tl: &Timeline) -> Self {
-        let n = tl.shards();
+        let n = tl.devices();
         Self {
-            gpu: (0..n).map(|s| tl.utilization_on(s, Lane::Gpu)).collect(),
-            pcie: (0..n).map(|s| tl.utilization_on(s, Lane::PCIe)).collect(),
+            gpu: (0..n).map(|d| tl.utilization_on(d, Lane::Gpu)).collect(),
+            pcie: (0..n).map(|d| tl.utilization_on(d, Lane::PCIe)).collect(),
         }
     }
 
-    /// Fastest-vs-slowest GPU shard utilization spread: 0 for a perfectly
-    /// symmetric rig (or a single GPU), growing as one shard starts
-    /// gating the all-gather barriers.
+    /// Fastest-vs-slowest GPU device utilization spread: 0 for a
+    /// perfectly symmetric rig (or a single GPU), growing as one device
+    /// starts gating the all-gather barriers.
     pub fn straggler_gap(&self) -> f64 {
         crate::util::stats::spread(&self.gpu)
+    }
+
+    /// Per-stage pipeline-bubble fraction, grouping the device list in
+    /// plan order into TP groups of `tp`: 1 − the stage's mean GPU
+    /// utilization, clamped to [0, 1]. Empty when no utilization was
+    /// recorded; a trailing partial group (utilization vector not a
+    /// multiple of `tp`) is averaged over its actual size.
+    pub fn stage_bubbles(&self, tp: usize) -> Vec<f64> {
+        if self.gpu.is_empty() {
+            return Vec::new();
+        }
+        let tp = tp.max(1);
+        self.gpu
+            .chunks(tp)
+            .map(|stage| {
+                let u = stage.iter().sum::<f64>() / stage.len() as f64;
+                (1.0 - u).clamp(0.0, 1.0)
+            })
+            .collect()
     }
 }
 
@@ -269,12 +289,16 @@ pub struct SloReport {
     pub goodput: f64,
     /// Fraction of completed requests meeting the SLO.
     pub slo_attainment: f64,
-    /// Per-shard lane utilization (empty when the engine exposes no
-    /// timeline; len == tp otherwise).
+    /// Per-device lane utilization (empty when the engine exposes no
+    /// timeline; len == tp·pp otherwise).
     pub shard_util: ShardUtilization,
-    /// Max-min spread of per-shard GPU utilization (0 when symmetric or
+    /// Max-min spread of per-device GPU utilization (0 when symmetric or
     /// single-GPU).
     pub straggler_gap: f64,
+    /// Per-stage pipeline-bubble fraction (1 − mean stage GPU
+    /// utilization; empty when the engine exposes no timeline, one entry
+    /// per pipeline stage otherwise).
+    pub stage_bubble: Vec<f64>,
 }
 
 impl SloReport {
@@ -338,13 +362,24 @@ impl SloReport {
             },
             shard_util: ShardUtilization::default(),
             straggler_gap: 0.0,
+            stage_bubble: Vec::new(),
         }
     }
 
-    /// Attach per-shard utilization read off the serving timeline.
-    pub fn with_shard_utilization(mut self, tl: &Timeline) -> Self {
+    /// Attach per-device utilization read off the serving timeline
+    /// (single-stage view; use [`Self::with_plan_utilization`] when the
+    /// grid has pipeline stages).
+    pub fn with_shard_utilization(self, tl: &Timeline) -> Self {
+        let tp = tl.devices();
+        self.with_plan_utilization(tl, tp)
+    }
+
+    /// Attach per-device utilization plus per-stage bubbles, grouping the
+    /// timeline's devices into TP groups of `tp` in plan order.
+    pub fn with_plan_utilization(mut self, tl: &Timeline, tp: usize) -> Self {
         self.shard_util = ShardUtilization::from_timeline(tl);
         self.straggler_gap = self.shard_util.straggler_gap();
+        self.stage_bubble = self.shard_util.stage_bubbles(tp);
         self
     }
 
@@ -377,8 +412,8 @@ mod tests {
     #[test]
     fn report_computes_throughput() {
         let mut tl = Timeline::new();
-        tl.schedule(Lane::Gpu, 0.0, 2.0);
-        tl.schedule(Lane::PCIe, 0.0, 1.0);
+        tl.schedule_on(0, Lane::Gpu, 0.0, 2.0);
+        tl.schedule_on(0, Lane::PCIe, 0.0, 1.0);
         let mut traffic = TrafficCounter::default();
         traffic.add(TrafficClass::KvLoad, 1000);
         let r = ServeReport::from_parts(4, 64, 36, &tl, traffic, 5.0, 1.0);
@@ -591,5 +626,34 @@ mod tests {
             .with_shard_utilization(&tl);
         assert_eq!(r.shard_util.gpu.len(), 2);
         assert!((r.straggler_gap - 0.5).abs() < 1e-12);
+        // single-stage view: one bubble entry = 1 - mean util
+        assert_eq!(r.stage_bubble.len(), 1);
+        assert!((r.stage_bubble[0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_bubbles_group_devices_by_tp() {
+        // A 2×2 grid in plan order: stage 0 = devices 0..2 fully busy,
+        // stage 1 = devices 2..4 idle half the time.
+        let mut tl = Timeline::sharded(4);
+        for d in 0..2 {
+            tl.schedule_on(d, Lane::Gpu, 0.0, 4.0);
+        }
+        for d in 2..4 {
+            tl.schedule_on(d, Lane::Gpu, 0.0, 2.0);
+        }
+        let u = ShardUtilization::from_timeline(&tl);
+        let bubbles = u.stage_bubbles(2);
+        assert_eq!(bubbles.len(), 2);
+        assert!((bubbles[0] - 0.0).abs() < 1e-12);
+        assert!((bubbles[1] - 0.5).abs() < 1e-12);
+        // grouping everything as one stage averages across the grid
+        let one = u.stage_bubbles(4);
+        assert_eq!(one.len(), 1);
+        assert!((one[0] - 0.25).abs() < 1e-12);
+        // empty utilization -> no stages, and tp=0 does not panic
+        assert!(ShardUtilization::default().stage_bubbles(2).is_empty());
+        // tp=0 clamps to 1 (one device per group) instead of panicking
+        assert_eq!(u.stage_bubbles(0).len(), 4);
     }
 }

@@ -12,11 +12,14 @@
 //! makespan — the same "temporal utilization" definition the paper
 //! measures with Nsight (§5.1).
 //!
-//! Under tensor parallelism ([`crate::config::ShardSpec`]) the timeline
-//! carries `2×N` lanes — one PCIe + one GPU lane per shard — and
-//! [`Timeline::barrier`] models the all-gather synchronization points
-//! after attention and the FFN. A single-shard timeline is bit-for-bit
-//! the historical two-lane one (DESIGN.md §Sharding).
+//! Under a parallel [`crate::config::Topology`] the timeline carries
+//! `2×N` lanes — one PCIe + one GPU lane per grid device — and
+//! [`Timeline::barrier_group`] models the all-gather synchronization
+//! points of one stage's TP group (after attention and the FFN). A
+//! single-device timeline is bit-for-bit the historical two-lane one
+//! (DESIGN.md §Topology). Heterogeneous per-device host links time their
+//! transfers through [`Interconnect::transfer_time_via`], which keeps the
+//! rig-wide traffic accounting in one counter.
 
 mod timeline;
 mod traffic;
@@ -61,6 +64,24 @@ impl Interconnect {
         }
     }
 
+    /// Model a transfer over a specific device's host `link` (possibly
+    /// different from the reference spec in a heterogeneous topology),
+    /// accounting its bytes in this rig-wide counter. With `link` equal
+    /// to the reference spec this is exactly [`Self::transfer_time`].
+    pub fn transfer_time_via(
+        &mut self,
+        link: &InterconnectSpec,
+        dir: Dir,
+        class: TrafficClass,
+        bytes: usize,
+    ) -> f64 {
+        self.traffic.add(class, bytes);
+        match dir {
+            Dir::HostToDevice => link.h2d_time(bytes),
+            Dir::DeviceToHost => link.d2h_time(bytes),
+        }
+    }
+
     /// Pure query (no accounting): time for `bytes` in `dir`.
     pub fn peek_time(&self, dir: Dir, bytes: usize) -> f64 {
         match dir {
@@ -90,6 +111,29 @@ mod tests {
         assert!((t - (0.001 + ic.spec().latency_s)).abs() < 1e-9);
         assert_eq!(ic.traffic().bytes(TrafficClass::KvLoad), 25_000_000);
         assert_eq!(ic.traffic().bytes(TrafficClass::WeightLoad), 0);
+    }
+
+    #[test]
+    fn transfer_via_foreign_link_accounts_centrally() {
+        let mut ic = Interconnect::new(InterconnectSpec::pcie4_x16());
+        let x8 = InterconnectSpec {
+            h2d_bw: 12.5e9,
+            d2h_bw: 12.5e9,
+            latency_s: 15e-6,
+        };
+        let t16 = ic.transfer_time_via(
+            &InterconnectSpec::pcie4_x16(),
+            Dir::HostToDevice,
+            TrafficClass::KvLoad,
+            1 << 25,
+        );
+        let t8 = ic.transfer_time_via(&x8, Dir::HostToDevice, TrafficClass::KvLoad, 1 << 25);
+        // identical spec -> identical time as the plain path would give
+        assert_eq!(t16, ic.peek_time(Dir::HostToDevice, 1 << 25));
+        // the x8 link is ~2x slower for the same payload
+        assert!(t8 > 1.8 * t16);
+        // both transfers landed in the one rig-wide counter
+        assert_eq!(ic.traffic().bytes(TrafficClass::KvLoad), 2 * (1 << 25) as u64);
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! Execution planning: lowering a (model, [`Topology`]) pair into the
+//! [`ExecutionPlan`] every parallel consumer schedules from.
+//!
+//! Before this module, each consumer (`sim::simulate`, the
+//! `AnalyticSampler`, the scheduler's `ShardLedger`, the engine) re-derived
+//! per-shard arithmetic independently from the flat `ShardSpec`. The plan
+//! centralizes the lowering:
+//!
+//! * **stage layer ranges** — `num_layers` split into `pp` contiguous
+//!   ranges, earlier stages taking the remainder (`ceil`-balanced);
+//! * **stage weight ownership** — each stage owns its layers' weights;
+//!   the embedding table + tied LM head live on the **last** stage (where
+//!   logits are computed), so at `pp = 1` the single stage owns exactly
+//!   `ModelConfig::total_weight_bytes()`;
+//! * **per-device streamed weight fraction** — each device holds a
+//!   `1/tp` slice of its stage's weights against its residency budget;
+//!   the streamed remainder paces the zig-zag weight pipeline and is what
+//!   the Eq. 11 ACT:KV balance reacts to;
+//! * **collective schedule** — two ring all-gathers per decoder layer
+//!   within the owning stage's TP group (after attention, after the FFN);
+//! * **inter-stage activation transfers** — one hop of the mini-batch's
+//!   hidden-state payload per stage boundary per layer pass, plus the
+//!   token feedback from last stage to first between decode steps (the
+//!   dependency that creates pipeline bubbles).
+//!
+//! With `tp = n, pp = 1` and uniform slots the plan reproduces the
+//! pre-topology per-shard arithmetic bit-for-bit (the f64 expressions are
+//! kept identical; `rust/tests/tp1_equivalence.rs` and the golden pins
+//! enforce it).
+
+use crate::config::{ModelConfig, SystemConfig, Topology};
+
+/// One pipeline stage of the lowered plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    /// Stage index (0-based, in pipeline order).
+    pub stage: usize,
+    /// Decoder layers this stage owns, `[start, end)`.
+    pub layers: std::ops::Range<usize>,
+    /// Global device ids of this stage's TP group, `[start, end)`.
+    pub devices: std::ops::Range<usize>,
+    /// Full (unsharded) weight bytes owned by the stage: its layers plus,
+    /// on the last stage, the embedding table + tied LM head.
+    pub weight_bytes: usize,
+    /// Fraction of each device's weight slice streamed from host per use
+    /// (0 when the `1/tp` slice fits the residency budget).
+    pub stream_frac: f64,
+}
+
+impl StagePlan {
+    /// Layers owned by this stage.
+    pub fn layer_count(&self) -> usize {
+        self.layers.end - self.layers.start
+    }
+
+    /// One device's weight-slice bytes (`ceil`-striped over the TP group).
+    pub fn device_weight_bytes(&self, tp: usize) -> usize {
+        self.weight_bytes.div_ceil(tp)
+    }
+}
+
+/// The lowered execution plan: what every parallel consumer schedules
+/// from instead of re-deriving per-shard arithmetic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Tensor-parallel degree (ranks per stage).
+    pub tp: usize,
+    /// Pipeline-parallel degree (stages).
+    pub pp: usize,
+    /// Decoder layers in the model.
+    pub num_layers: usize,
+    /// Per-stage lowering, in pipeline order (`len == pp`).
+    pub stages: Vec<StagePlan>,
+    /// Ring all-gathers per decoder layer within a stage's TP group (the
+    /// post-attention and post-FFN collectives).
+    pub collectives_per_layer: usize,
+}
+
+impl ExecutionPlan {
+    /// Lower `(model, sys.topology)` — shorthand for
+    /// [`PlanBuilder::new`]`(model, sys).build()`.
+    pub fn for_system(model: &ModelConfig, sys: &SystemConfig) -> Self {
+        PlanBuilder::new(model, sys).build()
+    }
+
+    /// Total devices in the grid.
+    pub fn device_count(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// The stage owning decoder layer `l`.
+    pub fn stage_of_layer(&self, l: usize) -> usize {
+        assert!(l < self.num_layers, "layer {l} out of range");
+        self.stages
+            .iter()
+            .position(|s| s.layers.contains(&l))
+            .expect("stage ranges cover every layer")
+    }
+
+    /// Global device ids of `stage`'s TP group.
+    pub fn stage_devices(&self, stage: usize) -> std::ops::Range<usize> {
+        self.stages[stage].devices.clone()
+    }
+
+    /// Is layer `l` the first layer of a stage other than stage 0 — i.e.
+    /// does entering it require an inter-stage activation hop?
+    pub fn is_stage_boundary(&self, l: usize) -> bool {
+        l > 0 && self.stage_of_layer(l) != self.stage_of_layer(l - 1)
+    }
+
+    /// Largest per-stage layer count (the most-loaded stage; what
+    /// per-device cache-residency arithmetic must provision for).
+    pub fn max_stage_layer_count(&self) -> usize {
+        self.stages.iter().map(|s| s.layer_count()).max().unwrap_or(0)
+    }
+
+    /// Largest per-stage full weight ownership in bytes (at `pp = 1` this
+    /// is exactly `ModelConfig::total_weight_bytes()`).
+    pub fn max_stage_weight_bytes(&self) -> usize {
+        self.stages.iter().map(|s| s.weight_bytes).max().unwrap_or(0)
+    }
+
+    /// Bytes of one inter-stage activation hop for `tokens` tokens.
+    pub fn stage_transfer_bytes(&self, model: &ModelConfig, tokens: usize) -> usize {
+        tokens * model.hidden * model.dtype.bytes()
+    }
+}
+
+/// Builds an [`ExecutionPlan`] from a model and a system's topology.
+pub struct PlanBuilder<'a> {
+    model: &'a ModelConfig,
+    sys: &'a SystemConfig,
+}
+
+impl<'a> PlanBuilder<'a> {
+    pub fn new(model: &'a ModelConfig, sys: &'a SystemConfig) -> Self {
+        Self { model, sys }
+    }
+
+    /// Lower the plan. Panics if the model has fewer layers than the
+    /// topology has stages (an empty stage cannot be scheduled), if the
+    /// system's legacy `shard` mirror was mutated out of sync with the
+    /// topology — the PR-2-era way to scale out (`sys.shard = ...`) must
+    /// fail loudly here rather than silently simulate one GPU — or if
+    /// device MEMORY sizes differ across slots (clock and link skew are
+    /// honored per device; the residency/budget math still assumes one
+    /// uniform memory size — ROADMAP: memory-heterogeneous plans).
+    pub fn build(self) -> ExecutionPlan {
+        let topo: &Topology = &self.sys.topology;
+        assert_eq!(
+            self.sys.shard,
+            topo.legacy_shard(),
+            "SystemConfig.shard (legacy read-only mirror) diverged from the \
+             topology; set parallelism via Topology — e.g. \
+             SystemConfig::paper_testbed_grid(tp, pp) or with_topology(...)"
+        );
+        assert!(
+            topo.slots
+                .iter()
+                .all(|s| s.gpu.memory_bytes == self.sys.gpu.memory_bytes),
+            "per-device memory sizes differ across slots; the residency \
+             arithmetic assumes a uniform device-memory budget (skew clocks \
+             or links instead, or wait for memory-heterogeneous plans)"
+        );
+        let (tp, pp) = (topo.tp, topo.pp);
+        let nl = self.model.num_layers;
+        assert!(
+            nl >= pp,
+            "model has {nl} layers but the topology has {pp} stages"
+        );
+        let base = nl / pp;
+        let rem = nl % pp;
+        let mut stages = Vec::with_capacity(pp);
+        let mut start = 0usize;
+        for s in 0..pp {
+            let n = base + usize::from(s < rem);
+            let layers = start..start + n;
+            start += n;
+            let mut weight_bytes = n * self.model.layer_weight_bytes();
+            if s == pp - 1 {
+                // Embedding + tied LM head live where logits are computed.
+                weight_bytes += self.model.embedding_bytes();
+            }
+            // Per-device slice vs residency budget — the SAME f64
+            // expression the pre-topology SimCost used at pp = 1, so the
+            // streamed fraction is bit-for-bit identical there.
+            let shard_total = weight_bytes as f64 / tp as f64;
+            let stream_frac = ((shard_total - self.sys.gpu_weight_budget() as f64) / shard_total)
+                .clamp(0.0, 1.0);
+            stages.push(StagePlan {
+                stage: s,
+                layers,
+                devices: s * tp..(s + 1) * tp,
+                weight_bytes,
+                stream_frac,
+            });
+        }
+        ExecutionPlan {
+            tp,
+            pp,
+            num_layers: nl,
+            stages,
+            collectives_per_layer: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(tp: usize, pp: usize) -> ExecutionPlan {
+        ExecutionPlan::for_system(
+            &ModelConfig::opt_30b(),
+            &SystemConfig::paper_testbed_grid(tp, pp),
+        )
+    }
+
+    #[test]
+    fn single_stage_owns_everything() {
+        let m = ModelConfig::opt_30b();
+        for tp in [1usize, 2, 4] {
+            let p = plan(tp, 1);
+            assert_eq!(p.stages.len(), 1);
+            assert_eq!(p.stages[0].layers, 0..m.num_layers);
+            // pp=1 equivalence anchor: the stage owns the full model.
+            assert_eq!(p.stages[0].weight_bytes, m.total_weight_bytes());
+            assert_eq!(p.max_stage_weight_bytes(), m.total_weight_bytes());
+            assert_eq!(p.max_stage_layer_count(), m.num_layers);
+            assert_eq!(p.device_count(), tp);
+            assert!(!p.is_stage_boundary(0));
+            assert!(!p.is_stage_boundary(17));
+        }
+    }
+
+    #[test]
+    fn stages_partition_layers_contiguously() {
+        for pp in [2usize, 3, 4] {
+            let p = plan(2, pp);
+            assert_eq!(p.stages.len(), pp);
+            let mut expect = 0usize;
+            for s in &p.stages {
+                assert_eq!(s.layers.start, expect, "gap before stage {}", s.stage);
+                expect = s.layers.end;
+                assert!(s.layer_count() >= p.num_layers / pp);
+            }
+            assert_eq!(expect, p.num_layers, "stages must cover every layer");
+            // layer→stage lookup is consistent with the ranges
+            for l in 0..p.num_layers {
+                let st = p.stage_of_layer(l);
+                assert!(p.stages[st].layers.contains(&l));
+                assert_eq!(
+                    p.is_stage_boundary(l),
+                    l > 0 && p.stage_of_layer(l - 1) != st
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_rides_the_last_stage() {
+        let m = ModelConfig::opt_30b();
+        let p = plan(2, 4);
+        let sum: usize = p.stages.iter().map(|s| s.weight_bytes).sum();
+        assert_eq!(sum, m.total_weight_bytes(), "stage weights must partition");
+        let per_layer = m.layer_weight_bytes();
+        for s in &p.stages[..3] {
+            assert_eq!(s.weight_bytes, s.layer_count() * per_layer);
+        }
+        assert!(p.stages[3].weight_bytes > p.stages[3].layer_count() * per_layer);
+    }
+
+    #[test]
+    fn pipeline_stages_regain_weight_residency() {
+        // The PP payoff for offloading: OPT-30B at tp=2 still streams most
+        // of each 30 GB slice; cutting the model into 4 stages drops each
+        // device to ~7.7 GB, under the 12 GB budget — streaming stops.
+        let p1 = plan(2, 1);
+        let p4 = plan(2, 4);
+        assert!(p1.stages[0].stream_frac > 0.5, "{}", p1.stages[0].stream_frac);
+        for s in &p4.stages {
+            assert!(
+                s.stream_frac < p1.stages[0].stream_frac,
+                "stage {} did not regain residency",
+                s.stage
+            );
+        }
+        assert_eq!(p4.stages[0].stream_frac, 0.0);
+    }
+
+    #[test]
+    fn device_weight_bytes_stripe_by_tp() {
+        let p = plan(4, 2);
+        for s in &p.stages {
+            assert_eq!(s.device_weight_bytes(4), s.weight_bytes.div_ceil(4));
+            assert_eq!(s.devices.len(), 4);
+        }
+        assert_eq!(p.stage_devices(1), 4..8);
+        assert_eq!(p.collectives_per_layer, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "stages")]
+    fn more_stages_than_layers_panics() {
+        let m = ModelConfig::opt_tiny(); // 4 layers
+        let sys = SystemConfig::paper_testbed_grid(1, 8);
+        let _ = ExecutionPlan::for_system(&m, &sys);
+    }
+
+    #[test]
+    #[should_panic(expected = "memory sizes differ")]
+    fn memory_skewed_slots_are_rejected() {
+        // Clock/link skew is modeled; a smaller-memory device is NOT (the
+        // residency budget is uniform) — reject rather than silently
+        // treat an 8 GB card as a 24 GB one.
+        use crate::config::{DeviceSlot, GpuSpec, InterconnectSpec};
+        let m = ModelConfig::opt_30b();
+        let mut small = GpuSpec::rtx_4090();
+        small.memory_bytes = 8 << 30;
+        let topo = SystemConfig::paper_testbed_tp(2)
+            .topology
+            .with_slot(
+                0,
+                1,
+                DeviceSlot {
+                    gpu: small,
+                    link: InterconnectSpec::pcie4_x16(),
+                },
+            );
+        let sys = SystemConfig::with_topology(topo);
+        let _ = ExecutionPlan::for_system(&m, &sys);
+    }
+
+    #[test]
+    #[should_panic(expected = "diverged")]
+    fn mutated_legacy_shard_mirror_panics() {
+        // The PR-2-era way to scale out must fail loudly, not silently
+        // lower a single-GPU plan.
+        use crate::config::ShardSpec;
+        let m = ModelConfig::opt_30b();
+        let mut sys = SystemConfig::paper_testbed();
+        sys.shard = ShardSpec::pcie_p2p(4);
+        let _ = ExecutionPlan::for_system(&m, &sys);
+    }
+
+    #[test]
+    fn uneven_layer_split_front_loads_remainder() {
+        // opt-tiny has 4 layers; 3 stages -> 2/1/1.
+        let m = ModelConfig::opt_tiny();
+        let sys = SystemConfig::paper_testbed_grid(1, 3);
+        let p = ExecutionPlan::for_system(&m, &sys);
+        let counts: Vec<usize> = p.stages.iter().map(|s| s.layer_count()).collect();
+        assert_eq!(counts, vec![2, 1, 1]);
+        assert_eq!(p.max_stage_layer_count(), 2);
+    }
+}

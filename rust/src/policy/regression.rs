@@ -74,12 +74,14 @@ pub trait CostSampler {
 /// [`SystemConfig`] — used by the full-scale simulator and as a fallback
 /// when no runtime is available.
 ///
-/// All samples are PER-SHARD under tensor parallelism: FLOPs, weight-
-/// panel reads and host-link bytes divide by `sys.shard.tp` (fixed
-/// latencies do not), so Algorithm 1 balances one shard's PCIe lane
-/// against that shard's GPU lane — which, with symmetric shards, balances
-/// the whole rig against its *aggregate* link bandwidth. `tp = 1` is
-/// bit-for-bit the historical single-GPU sampler.
+/// All samples are PER-DEVICE under the execution plan: FLOPs, weight-
+/// panel reads and host-link bytes divide by the topology's `tp` (fixed
+/// latencies do not), so Algorithm 1 balances one device's PCIe lane
+/// against that device's GPU lane — which, with symmetric ranks, balances
+/// the whole rig against its *aggregate* link bandwidth. The per-layer
+/// weight-load constant comes from the plan's most-loaded stage (at
+/// `pp = 1` that is the whole model — bit-for-bit the historical
+/// single-GPU sampler).
 pub struct AnalyticSampler<'a> {
     pub model: &'a ModelConfig,
     pub sys: &'a SystemConfig,
@@ -91,7 +93,7 @@ impl<'a> AnalyticSampler<'a> {
     }
 
     fn tp(&self) -> f64 {
-        self.sys.shard.tp as f64
+        self.sys.topology.tp as f64
     }
 }
 
@@ -112,15 +114,19 @@ impl<'a> CostSampler for AnalyticSampler<'a> {
         let bytes = self
             .model
             .kv_bytes_per_layer(self.tokens(blocks))
-            .div_ceil(self.sys.shard.tp);
+            .div_ceil(self.sys.topology.tp);
         self.sys.interconnect.h2d_time(bytes)
     }
 
     fn weight_load_time(&mut self) -> f64 {
         // The engine keeps `gpu_weight_fraction` of the weights resident;
-        // only the spill of this shard's weight slice streams per layer.
+        // only the spill of a device's weight slice streams per layer.
+        // Sized at the plan's most-loaded stage — the stage that paces
+        // the weight pipeline (at pp = 1: the whole model, exactly the
+        // historical expression).
+        let plan = crate::plan::ExecutionPlan::for_system(self.model, self.sys);
         let resident = self.sys.gpu_weight_budget() as f64;
-        let total = self.model.total_weight_bytes() as f64 / self.tp();
+        let total = plan.max_stage_weight_bytes() as f64 / self.tp();
         let stream_fraction = ((total - resident) / total).clamp(0.0, 1.0);
         let layer_bytes = self.model.layer_weight_bytes() as f64 / self.tp() * stream_fraction;
         self.sys.interconnect.h2d_time(layer_bytes as usize)
@@ -231,6 +237,21 @@ mod tests {
         // so the "free recomputation" window Algorithm 1 feeds shrinks —
         // this is why the Eq. 11 ratio shifts under TP.
         assert!(cm4.load_w < 0.2 * cm1.load_w, "{} !<< {}", cm4.load_w, cm1.load_w);
+    }
+
+    #[test]
+    fn pipeline_stages_shrink_the_weight_window() {
+        // PP splits the model across stages, so each device's slice
+        // regains residency and Algorithm 1's "free recomputation under
+        // the weight stream" window shrinks — same mechanism as TP, now
+        // driven by the plan's most-loaded stage.
+        let m = ModelConfig::opt_30b();
+        let cm1 = CostModel::analytic(&m, &SystemConfig::paper_testbed_grid(2, 1));
+        let cm4 = CostModel::analytic(&m, &SystemConfig::paper_testbed_grid(2, 4));
+        assert!(cm4.load_w < 0.2 * cm1.load_w, "{} !<< {}", cm4.load_w, cm1.load_w);
+        // per-layer slopes are stage-agnostic: only the window moves
+        assert_eq!(cm4.kv_gen.slope, cm1.kv_gen.slope);
+        assert_eq!(cm4.load_kv.slope, cm1.load_kv.slope);
     }
 
     #[test]

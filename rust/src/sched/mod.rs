@@ -31,15 +31,19 @@
 //!
 //! ## Sharded pools
 //!
-//! Under tensor parallelism ([`crate::config::ShardSpec`]) every cached
-//! block is striped over the shards, so worst-case reservations divide
-//! across per-shard host pools and a demotion frees its discount on
-//! every shard at once. The [`ShardLedger`] keeps that arithmetic; with
-//! one shard it is exactly the global byte check used before sharding.
+//! Under a parallel [`crate::config::Topology`] every cached block is
+//! striped over the grid — `1/tp` within a stage, per-layer shares
+//! across stages — so worst-case reservations divide across per-device
+//! host pools and a demotion frees its discount on every device at once.
+//! The [`ShardLedger`] keeps that arithmetic, lowered from the engine's
+//! [`crate::plan::ExecutionPlan`] when it exposes one
+//! ([`StepEngine::execution_plan`]); with one device it is exactly the
+//! global byte check used before sharding.
 //!
-//! See DESIGN.md §Scheduling and §Sharding for the full design
+//! See DESIGN.md §Scheduling and §Topology for the full design
 //! discussion.
 
+pub mod analytic;
 pub mod shard;
 pub mod victim;
 
@@ -53,6 +57,7 @@ use crate::metrics::{RequestTiming, ShardUtilization, SloReport, SloSpec};
 use crate::policy::CostModel;
 use crate::workload::TimedRequest;
 
+pub use analytic::AnalyticEngine;
 pub use shard::ShardLedger;
 pub use victim::{demotion_score, select_victim, VictimInfo};
 
@@ -101,7 +106,15 @@ pub trait StepEngine {
     fn shard_count(&self) -> usize {
         1
     }
-    /// Per-shard lane utilization of the engine's timeline, when the
+    /// The lowered execution plan of the backing system, when the engine
+    /// has one. The scheduler derives its reservation ledger from it
+    /// (most-loaded-stage stripes) instead of re-deriving per-shard
+    /// arithmetic; engines without a plan (`None`) fall back to the flat
+    /// [`Self::shard_count`] striping.
+    fn execution_plan(&self) -> Option<crate::plan::ExecutionPlan> {
+        None
+    }
+    /// Per-device lane utilization of the engine's timeline, when the
     /// engine exposes one (`None` for mocks without a timeline).
     fn shard_utilization(&self) -> Option<ShardUtilization> {
         None
@@ -190,7 +203,11 @@ impl StepEngine for Engine {
     }
 
     fn shard_count(&self) -> usize {
-        Engine::system(self).shard.tp
+        Engine::system(self).tp()
+    }
+
+    fn execution_plan(&self) -> Option<crate::plan::ExecutionPlan> {
+        Some(Engine::execution_plan(self))
     }
 
     fn shard_utilization(&self) -> Option<ShardUtilization> {
@@ -264,7 +281,13 @@ pub struct Scheduler<E: StepEngine> {
 
 impl<E: StepEngine> Scheduler<E> {
     pub fn new(eng: E, cfg: SchedConfig) -> Self {
-        let ledger = ShardLedger::new(eng.host_capacity_bytes(), eng.shard_count());
+        // The ledger lowers from the engine's execution plan when it has
+        // one (most-loaded-stage stripes over the whole grid); mocks
+        // without a plan stripe evenly over their declared shard count.
+        let ledger = match eng.execution_plan() {
+            Some(plan) => ShardLedger::for_plan(&plan, eng.host_capacity_bytes()),
+            None => ShardLedger::new(eng.host_capacity_bytes(), eng.shard_count()),
+        };
         Self {
             eng,
             cfg,
@@ -419,7 +442,6 @@ impl<E: StepEngine> Scheduler<E> {
         let cost = self.eng.cost_model();
         let sizes = self.eng.block_sizes();
         let discount = sizes.kv_bytes - sizes.act_bytes;
-        let shards = self.ledger.shards();
         while !self.ledger.fits(need) {
             let mut candidates = Vec::with_capacity(self.running.len());
             for &id in &self.running {
@@ -434,13 +456,13 @@ impl<E: StepEngine> Scheduler<E> {
             }
             // The demoted blocks can never be KV again, so the victim's
             // worst-case footprint — and with it the reservation — shrinks
-            // by the KV/ACT byte difference per block, on every shard the
-            // blocks are striped over. The per-shard discount rounds DOWN
-            // so the remaining stripe still covers the remaining
-            // worst-case footprint.
+            // by the KV/ACT byte difference per block, on every device the
+            // blocks are striped over. The per-device discount rounds DOWN
+            // (ledger stripe ratio) so the remaining stripe still covers
+            // the remaining worst-case footprint.
             let rec = self.admitted.get_mut(&v.id).expect("victim not admitted");
             let freed = (receipt.blocks() * discount).min(rec.reserved);
-            let freed_shard = (freed / shards).min(rec.reserved_shard);
+            let freed_shard = self.ledger.discount(freed).min(rec.reserved_shard);
             rec.reserved -= freed;
             rec.reserved_shard -= freed_shard;
             self.reserved_total -= freed;
@@ -526,8 +548,8 @@ impl<E: StepEngine> Scheduler<E> {
     }
 
     /// The online metrics report over everything completed so far,
-    /// including per-shard utilization when the engine exposes a
-    /// timeline.
+    /// including per-device utilization and per-stage pipeline bubbles
+    /// when the engine exposes a timeline.
     pub fn report(&self) -> SloReport {
         let mut report = SloReport::from_timings(
             self.submitted,
@@ -539,6 +561,12 @@ impl<E: StepEngine> Scheduler<E> {
         );
         if let Some(util) = self.eng.shard_utilization() {
             report.straggler_gap = util.straggler_gap();
+            let tp = self
+                .eng
+                .execution_plan()
+                .map(|p| p.tp)
+                .unwrap_or_else(|| util.gpu.len().max(1));
+            report.stage_bubble = util.stage_bubbles(tp);
             report.shard_util = util;
         }
         report

@@ -1,19 +1,36 @@
-//! Per-shard reservation ledger for the admission controller.
+//! Per-device reservation ledger for the admission controller.
 //!
-//! Under tensor parallelism every cached block is striped across all
-//! shards: a request's worst-case host footprint divides evenly over the
-//! `tp` host-memory pools (one pinned-buffer arena per GPU link), and a
-//! KV→ACT demotion frees its byte discount on *every* shard at once. The
-//! ledger keeps that per-shard arithmetic in one place so the scheduler's
-//! admission check stays a single `fits` call. With one shard it
-//! degenerates to exactly the global `reserved + need <= capacity` test
-//! the scheduler used before sharding.
+//! Under a parallel topology every cached block is striped across the
+//! grid: within a stage's TP group a block splits `1/tp` along the hidden
+//! dimension, and across pipeline stages a block's per-layer shares land
+//! on the stage owning each layer. A request's worst-case host footprint
+//! therefore divides over `tp × pp` host-memory pools (one pinned-buffer
+//! arena per GPU link), with the most-loaded stage — the one owning the
+//! most layers — holding the largest stripe. The ledger models exactly
+//! that binding stripe, derived from the [`ExecutionPlan`]
+//! ([`ShardLedger::for_plan`]) instead of re-deriving per-shard
+//! arithmetic: `stripe(total) = ceil(total · L_max / (L · tp))` per
+//! device, where `L_max` is the plan's largest per-stage layer count.
+//! A KV→ACT demotion frees its byte discount on *every* device at once.
+//! With one device it degenerates to exactly the global
+//! `reserved + need <= capacity` test the scheduler used before
+//! sharding; with `pp = 1` it is bit-for-bit the flat-TP ledger
+//! (`ceil(a·L / (L·tp)) = ceil(a/tp)`).
+//!
+//! [`ExecutionPlan`]: crate::plan::ExecutionPlan
 
-/// Reserved-byte accounting across `shards` symmetric host pools.
+/// Reserved-byte accounting across the grid's symmetric-by-stage host
+/// pools, tracked at the binding (most-loaded) stripe.
 #[derive(Debug, Clone)]
 pub struct ShardLedger {
     cap_per_shard: usize,
     reserved: Vec<usize>,
+    /// Stripe ratio numerator (the most-loaded stage's layer count; 1 for
+    /// the flat constructor).
+    stripe_num: usize,
+    /// Stripe ratio denominator (`num_layers · tp`; the device count for
+    /// the flat constructor).
+    stripe_den: usize,
 }
 
 impl ShardLedger {
@@ -25,31 +42,65 @@ impl ShardLedger {
     /// capacity not divisible by the shard count.
     pub fn new(total_capacity: usize, shards: usize) -> Self {
         assert!(shards >= 1, "need at least one shard");
-        Self {
-            cap_per_shard: total_capacity.div_ceil(shards),
+        Self::with_stripe(total_capacity, shards, 1, shards)
+    }
+
+    /// Ledger lowered from an execution plan: one pool per grid device,
+    /// stripes sized at the plan's most-loaded stage. At `pp = 1` this is
+    /// exactly [`Self::new`]`(total_capacity, tp)` (the stripe ratio
+    /// reduces), and at `tp = pp = 1` the historical global check.
+    pub fn for_plan(plan: &crate::plan::ExecutionPlan, total_capacity: usize) -> Self {
+        Self::with_stripe(
+            total_capacity,
+            plan.device_count(),
+            plan.max_stage_layer_count(),
+            plan.num_layers * plan.tp,
+        )
+    }
+
+    fn with_stripe(total_capacity: usize, shards: usize, num: usize, den: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(num >= 1 && den >= 1, "degenerate stripe ratio");
+        let mut l = Self {
+            cap_per_shard: 0,
             reserved: vec![0; shards],
-        }
+            stripe_num: num,
+            stripe_den: den,
+        };
+        // Capacity is the binding stripe of the whole pool: reservations
+        // and capacity round identically, preserving the fits(total_
+        // capacity)-on-empty invariant.
+        l.cap_per_shard = l.per_shard(total_capacity);
+        l
     }
 
     pub fn shards(&self) -> usize {
         self.reserved.len()
     }
 
-    /// Per-shard slice of a `total`-byte reservation (rounded up — a
-    /// striped block occupies its full stripe on every shard).
+    /// Binding per-device slice of a `total`-byte reservation (rounded up
+    /// — a striped block occupies its full stripe on every device of the
+    /// most-loaded stage).
     pub fn per_shard(&self, total: usize) -> usize {
-        total.div_ceil(self.reserved.len())
+        (total * self.stripe_num).div_ceil(self.stripe_den)
     }
 
-    /// Would a `total`-byte reservation fit on every shard right now?
+    /// Floor-rounded per-device slice of a freed `total` — the demotion
+    /// discount. Rounds DOWN so the stripe remaining after a partial
+    /// release still covers the remaining worst-case footprint.
+    pub fn discount(&self, total: usize) -> usize {
+        (total * self.stripe_num) / self.stripe_den
+    }
+
+    /// Would a `total`-byte reservation fit on every device right now?
     pub fn fits(&self, total: usize) -> bool {
         let need = self.per_shard(total);
         self.reserved.iter().all(|&r| r + need <= self.cap_per_shard)
     }
 
-    /// Book a `total`-byte reservation on every shard; returns the
-    /// per-shard amount actually booked (pass it back to [`Self::release`]
-    /// when the request retires).
+    /// Book a `total`-byte reservation on every device; returns the
+    /// per-device amount actually booked (pass it back to
+    /// [`Self::release`] when the request retires).
     pub fn reserve(&mut self, total: usize) -> usize {
         let need = self.per_shard(total);
         for r in &mut self.reserved {
@@ -58,7 +109,7 @@ impl ShardLedger {
         need
     }
 
-    /// Release `per_shard` bytes on every shard (an amount previously
+    /// Release `per_shard` bytes on every device (an amount previously
     /// booked by [`Self::reserve`], possibly shrunk by demotion
     /// discounts).
     pub fn release(&mut self, per_shard: usize) {
@@ -69,7 +120,7 @@ impl ShardLedger {
         }
     }
 
-    /// Highest per-shard reservation level (all shards move together
+    /// Highest per-device reservation level (all devices move together
     /// under symmetric striping, so this is also the lowest).
     pub fn reserved_per_shard(&self) -> usize {
         self.reserved.iter().copied().max().unwrap_or(0)
@@ -83,6 +134,8 @@ impl ShardLedger {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{ModelConfig, SystemConfig};
+    use crate::plan::ExecutionPlan;
 
     #[test]
     fn single_shard_is_global_accounting() {
@@ -119,7 +172,8 @@ mod tests {
         assert!(!l.fits(2));
         // a demotion halves the victim's footprint: release the discount
         // on both shards, keep the rest booked
-        let discount = l.per_shard(400);
+        let discount = l.discount(400);
+        assert_eq!(discount, 200);
         l.release(discount);
         assert_eq!(l.reserved_per_shard(), booked - discount);
         assert!(l.fits(400));
@@ -134,6 +188,41 @@ mod tests {
         let l = ShardLedger::new(999, 2);
         assert_eq!(l.capacity_per_shard(), 500);
         assert!(l.fits(999));
+    }
+
+    #[test]
+    fn plan_ledger_reduces_to_flat_tp_at_pp1() {
+        // ceil(a·L / (L·tp)) == ceil(a/tp): the plan-derived ledger at a
+        // single stage is the flat ledger, value for value.
+        let m = ModelConfig::opt_30b();
+        for tp in [1usize, 2, 4] {
+            let plan = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_tp(tp));
+            let a = ShardLedger::for_plan(&plan, 999_983); // prime-ish
+            let b = ShardLedger::new(999_983, tp);
+            assert_eq!(a.shards(), b.shards());
+            assert_eq!(a.capacity_per_shard(), b.capacity_per_shard());
+            for total in [0usize, 1, 17, 4096, 999_983] {
+                assert_eq!(a.per_shard(total), b.per_shard(total), "total {total}");
+                assert_eq!(a.discount(total), b.discount(total), "total {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_ledger_stripes_at_the_most_loaded_stage() {
+        // opt-tiny (4 layers) on 1×3: stages own 2/1/1 layers, so the
+        // binding stripe is 2/4 = half the bytes per device — larger
+        // than the naive 1/3 split, and the full pool still fits empty.
+        let m = ModelConfig::opt_tiny();
+        let plan = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_grid(1, 3));
+        let l = ShardLedger::for_plan(&plan, 1000);
+        assert_eq!(l.shards(), 3);
+        assert_eq!(l.per_shard(1000), 500);
+        assert_eq!(l.capacity_per_shard(), 500);
+        assert!(l.fits(1000));
+        // discount floors while reservations ceil
+        assert_eq!(l.per_shard(999), 500);
+        assert_eq!(l.discount(999), 499);
     }
 
     #[test]
@@ -164,6 +253,41 @@ mod tests {
                 assert!(l.reserved_per_shard() <= l.capacity_per_shard());
                 let expect: usize = live.iter().sum();
                 assert_eq!(l.reserved_per_shard(), expect, "ledger drifted");
+            }
+            for b in live.drain(..) {
+                l.release(b);
+            }
+            assert_eq!(l.reserved_per_shard(), 0);
+        });
+    }
+
+    #[test]
+    fn property_plan_ledger_invariants() {
+        // The weighted-stripe ledger keeps the flat ledger's invariants
+        // on arbitrary TP×PP grids: a validate-accepted request fits an
+        // empty ledger, discounts never exceed reservations, and the
+        // books drain to zero.
+        crate::util::prop::check("plan-ledger", 60, |rng| {
+            let m = ModelConfig::opt_30b();
+            let tp = rng.range(1, 5);
+            let pp = *rng.choose(&[1usize, 2, 3, 4]);
+            let plan = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_grid(tp, pp));
+            let cap = rng.range(1 << 12, 1 << 22);
+            let mut l = ShardLedger::for_plan(&plan, cap);
+            assert!(l.fits(cap), "full pool must fit the empty ledger");
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..100 {
+                if rng.f64() < 0.6 || live.is_empty() {
+                    let want = rng.range(1, cap / 2 + 2);
+                    assert!(l.discount(want) <= l.per_shard(want));
+                    if l.fits(want) {
+                        live.push(l.reserve(want));
+                    }
+                } else {
+                    let i = rng.range(0, live.len());
+                    l.release(live.swap_remove(i));
+                }
+                assert!(l.reserved_per_shard() <= l.capacity_per_shard());
             }
             for b in live.drain(..) {
                 l.release(b);

@@ -2,14 +2,23 @@
 //! paper's RTX 4090 testbed (roofline-style; see DESIGN.md §Hardware-
 //! Adaptation for why absolute numbers are model-derived).
 //!
-//! All costs are PER-SHARD under tensor parallelism: each of the `tp`
-//! GPUs holds a `1/tp` slice of every weight matrix and every cached
-//! block along the hidden dimension, so its FLOPs, device-memory reads
-//! and host-link bytes all divide by `tp` (fixed launch/DMA latencies do
-//! not). With `tp = 1` every expression reduces bit-for-bit to the
+//! All costs are PER-DEVICE under the execution plan: each of the `tp`
+//! ranks of a pipeline stage holds a `1/tp` slice of its stage's weight
+//! matrices and of every cached block along the hidden dimension, so its
+//! FLOPs, device-memory reads and host-link bytes all divide by `tp`
+//! (fixed launch/DMA latencies do not). The streamed weight fraction is
+//! per stage — a stage whose `1/tp` slice fits the residency budget stops
+//! streaming, which is what shifts the Eq. 11 balance under TP and PP.
+//! With `tp = 1, pp = 1` every expression reduces bit-for-bit to the
 //! single-GPU model — the TP=1 equivalence test pins that.
+//!
+//! Heterogeneous topologies evaluate the same formulas against a specific
+//! device's [`GpuSpec`] through the `*_with` variants; the plain methods
+//! use the reference spec (slot 0) and are unchanged from the flat-TP
+//! era.
 
-use crate::config::{ModelConfig, SystemConfig};
+use crate::config::{GpuSpec, ModelConfig, SystemConfig};
+use crate::plan::ExecutionPlan;
 
 /// Per-(model, system) cost calculator shared by every simulated serving
 /// system. All times are seconds; token counts are raw tokens (the block
@@ -18,28 +27,26 @@ use crate::config::{ModelConfig, SystemConfig};
 pub struct SimCost {
     pub model: ModelConfig,
     pub sys: SystemConfig,
-    /// Fraction of each layer's (per-shard) weights streamed from host
-    /// per use.
+    /// Stage-0 streamed weight fraction — at `pp = 1` the historical
+    /// global value (kept as a field for the legacy surface; per-stage
+    /// values come from [`Self::stage_stream_frac`]).
     pub stream_frac: f64,
-    /// Tensor-parallel degree (cached from `sys.shard.tp`).
+    /// Tensor-parallel degree (cached from the topology).
     pub tp: usize,
+    /// The lowered execution plan the costs are derived from.
+    pub plan: ExecutionPlan,
 }
 
 impl SimCost {
     pub fn new(model: &ModelConfig, sys: &SystemConfig) -> Self {
-        let tp = sys.shard.tp;
-        // Per-shard weight bytes vs this shard's resident budget: with
-        // more shards each GPU holds a smaller slice, so the streamed
-        // fraction shrinks (and can reach 0, closing the recomputation
-        // window — which is what shifts the Eq. 11 ratio under TP).
-        let shard_total = model.total_weight_bytes() as f64 / tp as f64;
-        let stream_frac =
-            ((shard_total - sys.gpu_weight_budget() as f64) / shard_total).clamp(0.0, 1.0);
+        let plan = ExecutionPlan::for_system(model, sys);
+        let stream_frac = plan.stages[0].stream_frac;
         Self {
             model: model.clone(),
             sys: sys.clone(),
             stream_frac,
-            tp,
+            tp: plan.tp,
+            plan,
         }
     }
 
@@ -47,19 +54,24 @@ impl SimCost {
         self.tp as f64
     }
 
-    /// This shard's slice of a `bytes`-sized full tensor (identity at
+    /// Streamed weight fraction of `stage`'s per-device slice.
+    pub fn stage_stream_frac(&self, stage: usize) -> f64 {
+        self.plan.stages[stage].stream_frac
+    }
+
+    /// This device's slice of a `bytes`-sized full tensor (identity at
     /// `tp = 1`).
     pub fn shard_bytes(&self, bytes: usize) -> usize {
         bytes.div_ceil(self.tp)
     }
 
-    /// One shard's slice of a layer's weights in bytes.
+    /// One device's slice of a layer's weights in bytes.
     pub fn shard_layer_weight_bytes(&self) -> usize {
         self.model.layer_weight_bytes().div_ceil(self.tp)
     }
 
     /// PCIe time to stream one layer's non-resident weight slice over one
-    /// shard's host link.
+    /// device's host link (stage-0 fraction; legacy surface).
     pub fn weight_stream_time(&self) -> f64 {
         let bytes = (self.shard_layer_weight_bytes() as f64 * self.stream_frac) as usize;
         if bytes == 0 {
@@ -69,7 +81,7 @@ impl SimCost {
         }
     }
 
-    /// PCIe time to load one layer's per-shard share of KV for `tokens`
+    /// PCIe time to load one layer's per-device share of KV for `tokens`
     /// tokens.
     pub fn kv_load_time(&self, tokens: usize) -> f64 {
         if tokens == 0 {
@@ -80,7 +92,7 @@ impl SimCost {
             .h2d_time(self.shard_bytes(self.model.kv_bytes_per_layer(tokens)))
     }
 
-    /// PCIe time to load one layer's per-shard share of ACT checkpoints.
+    /// PCIe time to load one layer's per-device share of ACT checkpoints.
     pub fn act_load_time(&self, tokens: usize) -> f64 {
         if tokens == 0 {
             return 0.0;
@@ -90,29 +102,41 @@ impl SimCost {
             .h2d_time(self.shard_bytes(self.model.act_bytes_per_layer(tokens)))
     }
 
-    /// GPU time to recompute this shard's K/V slice for `tokens`
-    /// checkpointed tokens in one layer (Eq. 7): a skinny GEMM bounded by
-    /// MXU rate and by streaming the two weight panels from device
-    /// memory. Both the FLOPs and the panel bytes divide by `tp`.
-    pub fn kv_gen_time(&self, tokens: usize) -> f64 {
+    /// GPU time to recompute this device's K/V slice for `tokens`
+    /// checkpointed tokens in one layer (Eq. 7) on a specific device's
+    /// GPU: a skinny GEMM bounded by MXU rate and by streaming the two
+    /// weight panels from device memory. Both the FLOPs and the panel
+    /// bytes divide by `tp`.
+    pub fn kv_gen_time_with(&self, gpu: &GpuSpec, tokens: usize) -> f64 {
         if tokens == 0 {
             return 0.0;
         }
         let flops = self.model.kv_gen_flops(tokens) as f64 / self.tp_f();
-        let compute = flops / self.sys.gpu.effective_kvgen_flops();
+        let compute = flops / gpu.effective_kvgen_flops();
         let panel_bytes =
             (2 * self.model.hidden * self.model.hidden * self.model.dtype.bytes()) as f64
                 / self.tp_f();
-        let mem = panel_bytes / self.sys.gpu.mem_bw;
+        let mem = panel_bytes / gpu.mem_bw;
         compute.max(mem) + 5e-6
     }
 
-    /// GPU time for one decoder layer's per-shard forward over
+    /// [`Self::kv_gen_time_with`] on the reference GPU spec.
+    pub fn kv_gen_time(&self, tokens: usize) -> f64 {
+        self.kv_gen_time_with(&self.sys.gpu, tokens)
+    }
+
+    /// GPU time for one decoder layer's per-device forward over
     /// `new_tokens` query tokens total (across the mini-batch) with
-    /// per-request context `ctx` and `batch` requests. Every shard sees
-    /// all tokens but only its `1/tp` slice of heads/FFN columns; the
-    /// kernel-launch constant stays per shard.
-    pub fn layer_forward_time(&self, batch: usize, new_per_req: usize, ctx: usize) -> f64 {
+    /// per-request context `ctx` and `batch` requests, on a specific
+    /// device's GPU. Every rank sees all tokens but only its `1/tp` slice
+    /// of heads/FFN columns; the kernel-launch constant stays per device.
+    pub fn layer_forward_time_with(
+        &self,
+        gpu: &GpuSpec,
+        batch: usize,
+        new_per_req: usize,
+        ctx: usize,
+    ) -> f64 {
         if batch == 0 || new_per_req == 0 {
             return 0.0;
         }
@@ -124,22 +148,32 @@ impl SimCost {
         let gemm_flops = n * (8.0 * h * h + 4.0 * h * f) / self.tp_f();
         // Attention part: memory-bound reads of per-request KV.
         let attn_flops = (batch * new_per_req) as f64 * 4.0 * ctx as f64 * h / self.tp_f();
-        let gemm = gemm_flops / self.sys.gpu.effective_gemm_flops();
-        let attn = attn_flops / self.sys.gpu.effective_attn_flops();
+        let gemm = gemm_flops / gpu.effective_gemm_flops();
+        let attn = attn_flops / gpu.effective_attn_flops();
         // Device-memory term: each weight-slice matrix read once per
         // mini-batch.
-        let wread = self.model.layer_weight_bytes() as f64 / self.tp_f() / self.sys.gpu.mem_bw;
+        let wread = self.model.layer_weight_bytes() as f64 / self.tp_f() / gpu.mem_bw;
         gemm + attn + wread + 10e-6
     }
 
-    /// GPU time for a full prefill pass of `tokens` tokens through ONE
-    /// layer (causal attention over itself).
-    pub fn layer_prefill_time(&self, batch: usize, tokens: usize) -> f64 {
-        // average causal context = tokens/2
-        self.layer_forward_time(batch, tokens, tokens / 2)
+    /// [`Self::layer_forward_time_with`] on the reference GPU spec.
+    pub fn layer_forward_time(&self, batch: usize, new_per_req: usize, ctx: usize) -> f64 {
+        self.layer_forward_time_with(&self.sys.gpu, batch, new_per_req, ctx)
     }
 
-    /// D2H time to store one layer's per-shard share of newly produced
+    /// GPU time for a full prefill pass of `tokens` tokens through ONE
+    /// layer (causal attention over itself) on a specific device's GPU.
+    pub fn layer_prefill_time_with(&self, gpu: &GpuSpec, batch: usize, tokens: usize) -> f64 {
+        // average causal context = tokens/2
+        self.layer_forward_time_with(gpu, batch, tokens, tokens / 2)
+    }
+
+    /// [`Self::layer_prefill_time_with`] on the reference GPU spec.
+    pub fn layer_prefill_time(&self, batch: usize, tokens: usize) -> f64 {
+        self.layer_prefill_time_with(&self.sys.gpu, batch, tokens)
+    }
+
+    /// D2H time to store one layer's per-device share of newly produced
     /// state.
     pub fn store_time(&self, kv_tokens: usize, act_tokens: usize) -> f64 {
         let bytes = self.model.kv_bytes_per_layer(kv_tokens)
@@ -152,12 +186,20 @@ impl SimCost {
     }
 
     /// GPU cache slice capacity in ACT blocks (for GPU-resident ACT).
-    /// Each shard stores only its `1/tp` slice of a resident block, so
-    /// the aggregate block capacity grows with the degree.
+    /// Each device stores only its `1/tp` slice of its stage's layers of
+    /// a resident block; a block is GPU-resident only when every stage
+    /// holds its share, so the most-loaded stage bounds the census.
     pub fn gpu_act_block_capacity(&self) -> usize {
-        let block_bytes =
-            self.model.num_layers * self.model.act_bytes_per_layer(self.sys.block_tokens);
-        self.sys.gpu_cache_budget() / self.shard_bytes(block_bytes).max(1)
+        self.plan
+            .stages
+            .iter()
+            .map(|s| {
+                let block_bytes =
+                    s.layer_count() * self.model.act_bytes_per_layer(self.sys.block_tokens);
+                self.sys.gpu_cache_budget() / self.shard_bytes(block_bytes).max(1)
+            })
+            .min()
+            .expect("plan has at least one stage")
     }
 }
 
@@ -171,6 +213,13 @@ mod tests {
 
     fn cost_tp(tp: usize) -> SimCost {
         SimCost::new(&ModelConfig::opt_30b(), &SystemConfig::paper_testbed_tp(tp))
+    }
+
+    fn cost_grid(tp: usize, pp: usize) -> SimCost {
+        SimCost::new(
+            &ModelConfig::opt_30b(),
+            &SystemConfig::paper_testbed_grid(tp, pp),
+        )
     }
 
     #[test]
@@ -222,9 +271,9 @@ mod tests {
     fn sharding_divides_per_shard_costs() {
         let c1 = cost_tp(1);
         let c4 = cost_tp(4);
-        // per-shard link bytes shrink ~4x (modulo fixed DMA latency)
+        // per-device link bytes shrink ~4x (modulo fixed DMA latency)
         assert!(c4.kv_load_time(4096) < 0.3 * c1.kv_load_time(4096));
-        // per-shard GPU work shrinks ~4x (modulo launch constants)
+        // per-device GPU work shrinks ~4x (modulo launch constants)
         assert!(c4.kv_gen_time(4096) < 0.3 * c1.kv_gen_time(4096));
         assert!(c4.layer_forward_time(64, 1, 1024) < 0.3 * c1.layer_forward_time(64, 1, 1024));
         // each GPU's resident budget covers a larger share of its smaller
@@ -253,5 +302,53 @@ mod tests {
         assert_eq!(a.layer_forward_time(32, 1, 512), b.layer_forward_time(32, 1, 512));
         assert_eq!(a.shard_bytes(12345), 12345);
         assert_eq!(a.shard_layer_weight_bytes(), a.model.layer_weight_bytes());
+    }
+
+    #[test]
+    fn stream_frac_field_is_stage_zero_of_the_plan() {
+        // The legacy field and the plan agree at pp = 1 — same expression,
+        // single source of truth.
+        for tp in [1usize, 2, 4] {
+            let c = cost_tp(tp);
+            assert_eq!(c.plan.pp, 1);
+            assert_eq!(c.stream_frac, c.stage_stream_frac(0));
+        }
+    }
+
+    #[test]
+    fn pipeline_stages_shrink_streaming_and_grow_act_capacity() {
+        let c1 = cost_grid(2, 1);
+        let c4 = cost_grid(2, 4);
+        // each stage's per-device slice regains residency
+        for s in 0..4 {
+            assert!(c4.stage_stream_frac(s) < c1.stream_frac);
+        }
+        // per-device ACT block slices cover only the stage's layers, so
+        // the resident-block census grows with pp
+        assert!(
+            c4.gpu_act_block_capacity() > 2 * c1.gpu_act_block_capacity(),
+            "{} !>> {}",
+            c4.gpu_act_block_capacity(),
+            c1.gpu_act_block_capacity()
+        );
+        // per-layer kernel/link costs do not depend on the stage split
+        assert_eq!(c4.kv_gen_time(512), c1.kv_gen_time(512));
+        assert_eq!(c4.kv_load_time(512), c1.kv_load_time(512));
+    }
+
+    #[test]
+    fn with_variants_respond_to_device_specs() {
+        let c = cost();
+        let mut slow = c.sys.gpu.clone();
+        slow.peak_flops *= 0.5;
+        slow.mem_bw *= 0.5;
+        assert!(c.kv_gen_time_with(&slow, 2048) > c.kv_gen_time(2048));
+        assert!(c.layer_forward_time_with(&slow, 64, 1, 1024) > c.layer_forward_time(64, 1, 1024));
+        // the reference-spec variant is exactly the plain method
+        assert_eq!(c.kv_gen_time_with(&c.sys.gpu, 2048), c.kv_gen_time(2048));
+        assert_eq!(
+            c.layer_prefill_time_with(&c.sys.gpu, 8, 512),
+            c.layer_prefill_time(8, 512)
+        );
     }
 }

@@ -1,6 +1,6 @@
 //! Analytic full-scale simulator.
 //!
-//! Replays the paper's experiments at OPT-6.7B…66B scale on the modeled
+//! Replays the paper's experiments at OPT-6.7B…175B scale on the modeled
 //! RTX 4090 testbed. The *policy* code (Algorithm 1, Eq. 11 ratios,
 //! bin-packing cost metric) is the same code the real engine runs; only
 //! the per-operation costs come from the [`SimCost`] roofline instead of
@@ -9,15 +9,28 @@
 //! directly comparable across systems — exactly how the paper's §5
 //! figures are framed.
 //!
-//! Under tensor parallelism (`sys.shard.tp > 1`) the timeline carries one
-//! PCIe + one GPU lane per shard: every shard streams its own weight
-//! slice and cache slices over its own host link, runs its slice of the
-//! layer kernels, and joins the all-gather barriers after attention and
-//! the FFN ([`Timeline::barrier`]). Algorithm 1 sees per-shard costs, so
-//! the Eq. 11 ACT:KV ratio shifts as the degree grows — per-shard weight
-//! slices start fitting device memory and the recomputation window
-//! closes. `tp = 1` reproduces the pre-sharding simulator bit-for-bit
-//! (`rust/tests/tp1_equivalence.rs` pins this).
+//! Parallel rigs are described by the system's [`crate::config::Topology`]
+//! and lowered through [`crate::plan::ExecutionPlan`]: the timeline
+//! carries one PCIe + one GPU lane per grid device. Within a stage, every
+//! rank streams its own weight/cache slices over its own host link, runs
+//! its slice of the layer kernels, and joins the stage-scoped all-gather
+//! barriers ([`Timeline::barrier_group`]). Across stages, the layer loop
+//! follows the plan's ranges: entering a new stage charges the
+//! inter-stage activation hop as a dependency edge (async P2P copies
+//! overlap compute, so they cost latency, not lane occupancy), and each
+//! decode step's first layer waits for that mini-batch chunk to exit the
+//! last stage of the previous step — the token feedback that creates
+//! pipeline bubbles. The zig-zag weight order is kept layer-major per
+//! stage (weights stream once per layer per step — the offloading-optimal
+//! order), so chunks traverse stages in lock-step: PP here buys aggregate
+//! host-link bandwidth and weight residency, and the per-stage bubble
+//! fraction in [`SimResult`] prices what it costs in compute idleness.
+//!
+//! Heterogeneous slots (x8 links, clock skew, NVLink islands) time every
+//! operation against their own specs; the straggler gap exposes the
+//! resulting asymmetry. `tp = n, pp = 1` with uniform links reproduces
+//! the pre-topology simulator bit-for-bit (`rust/tests/tp1_equivalence.rs`
+//! and the golden pins enforce it).
 
 mod cost;
 
@@ -26,6 +39,7 @@ pub use cost::SimCost;
 use crate::cache::BlockSizes;
 use crate::config::{ModelConfig, SystemConfig};
 use crate::pcie::{Dir, Interconnect, Lane, Timeline, TrafficClass};
+use crate::plan::ExecutionPlan;
 use crate::policy::{AllocationInputs, BlockRatio, CostModel, PolicyConfig};
 
 /// A uniform batched workload (the paper's evaluation shape: B identical
@@ -57,40 +71,51 @@ pub enum System {
     PowerInfer,
 }
 
-/// Simulation outcome (paper metric set + per-shard introspection).
+/// Simulation outcome (paper metric set + per-device introspection).
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub throughput: f64,
     pub gen_throughput: f64,
     pub makespan: f64,
     pub prefill_secs: f64,
-    /// Mean generation-phase GPU temporal utilization across shards.
+    /// Mean generation-phase GPU temporal utilization across devices.
     pub gpu_utilization: f64,
-    /// Mean PCIe-lane utilization across shard links.
+    /// Mean PCIe-lane utilization across device links.
     pub pcie_utilization: f64,
     pub traffic: crate::pcie::TrafficCounter,
     /// ACT share of context blocks the policy chose (introspection).
     pub act_block_share: f64,
     /// Mini-batch size used in the generation phase.
     pub minibatch: usize,
-    /// Generation-phase GPU utilization per shard (len == tp).
+    /// Generation-phase GPU utilization per grid device (len == tp·pp,
+    /// plan order: `stage * tp + rank`).
     pub shard_gpu_utilization: Vec<f64>,
-    /// Max-min spread of the per-shard GPU utilizations (0 when the rig
+    /// Max-min spread of the per-device GPU utilizations (0 when the rig
     /// is symmetric or single-GPU).
     pub straggler_gap: f64,
-    /// Bytes carried across all inter-GPU links by the tensor-parallel
+    /// Bytes carried across all intra-stage links by the tensor-parallel
     /// all-gathers (0 at tp = 1).
     pub collective_bytes: u64,
+    /// Bytes of inter-stage activation hops (0 at pp = 1).
+    pub stage_transfer_bytes: u64,
+    /// Generation-phase pipeline-bubble fraction per stage: 1 − the
+    /// stage's mean GPU utilization, in [0, 1] (len == pp; a single
+    /// stage's bubble is just its GPU idleness).
+    pub stage_bubble: Vec<f64>,
 }
 
-/// Simulate `system` serving `wl` on `model` × `sys` (all `sys.shard.tp`
-/// shards of it).
+/// Simulate `system` serving `wl` on `model` × `sys` — every device of
+/// the system's TP×PP topology, heterogeneous slots included.
 pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Workload) -> SimResult {
     let cost = SimCost::new(model, sys);
+    let plan: &ExecutionPlan = &cost.plan;
+    let topo = &sys.topology;
     let sizes = BlockSizes::new(model, sys.block_tokens);
     let nl = model.num_layers;
     let bt = sys.block_tokens;
-    let tp = sys.shard.tp;
+    let tp = plan.tp;
+    let pp = plan.pp;
+    let devices = plan.device_count();
     let max_ctx = wl.prompt + wl.gen;
     let blocks_per_req = max_ctx.div_ceil(bt);
 
@@ -120,17 +145,19 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     let act_share = act_per_req as f64 / blocks_per_req as f64;
 
     // ---- mini-batch size ----------------------------------------------
-    // Capacity terms are PER-SHARD slices against one shard's budget:
-    // each GPU stages/stores only its 1/tp stripe of every block, so the
-    // modeled hardware admits ~tp× larger mini-batches (identity at
-    // tp = 1).
+    // Capacity terms are PER-DEVICE slices against one device's budget:
+    // each GPU stages/stores only its stripe of every block, so the
+    // modeled hardware admits larger mini-batches (identity at tp = 1,
+    // pp = 1).
     let minibatch = match system {
         System::DeepSpeedInference => {
             // No zig-zag/paging: the whole batch's KV-cache stripe plus
             // prefill intermediates must stay resident in each GPU's
             // memory, which is what caps DeepSpeed's batch size (§5.2).
+            // A device only holds its stage's layers (the most-loaded
+            // stage binds).
             let kv_per_req =
-                cost.shard_bytes(model.num_layers * model.kv_bytes_per_layer(max_ctx));
+                cost.shard_bytes(plan.max_stage_layer_count() * model.kv_bytes_per_layer(max_ctx));
             let inter_per_req =
                 cost.shard_bytes(wl.prompt * model.hidden * model.dtype.bytes() * 8);
             ((sys.gpu_cache_budget() + sys.gpu_buffer_budget())
@@ -138,7 +165,7 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                 .clamp(1, wl.batch)
         }
         _ => {
-            // Buffer-limited: per-layer, per-shard stripes of each
+            // Buffer-limited: per-layer, per-device stripes of each
             // request's blocks.
             let kv_block_layer =
                 cost.shard_bytes(sizes.per_layer_bytes(crate::cache::BlockKind::Kv, model));
@@ -188,59 +215,92 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         (cost.gpu_act_block_capacity() as f64 / total_act_blocks as f64).min(1.0)
     };
 
-    let mut tl = Timeline::sharded(tp);
+    let mut tl = Timeline::for_plan(plan);
     let mut ic = Interconnect::new(sys.interconnect.clone());
     let mut collective_bytes: u64 = 0;
+    let mut stage_transfer_bytes: u64 = 0;
     // Total fabric bytes of the two per-layer all-gathers (after
-    // attention + after FFN) of one `tokens`-token chunk: each of the tp
-    // links carries the (tp-1)/tp payload fraction its GPU is missing.
-    let allgather = |tokens: usize, collective_bytes: &mut u64| -> f64 {
+    // attention + after FFN) of one `tokens`-token chunk within `stage`'s
+    // TP group: each of the tp links carries the (tp-1)/tp payload
+    // fraction its GPU is missing.
+    let allgather = |stage: usize, tokens: usize, collective_bytes: &mut u64| -> f64 {
         let payload = tokens * model.hidden * model.dtype.bytes();
         *collective_bytes += 2 * (tp as u64 - 1) * payload as u64;
-        2.0 * sys.shard.allgather_time(payload)
+        2.0 * topo.allgather_time(stage, payload)
     };
 
     // PowerInfer adjustments: hot weights resident (stream less), cold
     // attention assist on CPU (slower effective attention).
     // DeepSpeed-Inference "offloads most of the weight parameters to host
     // memory ... streaming, layer-granular" (§2.4): it streams the FULL
-    // layer each use rather than keeping a resident slice.
-    let weight_scale = match system {
-        System::PowerInfer => 0.3,
-        System::DeepSpeedInference => {
-            if cost.stream_frac > 0.0 {
-                1.0 / cost.stream_frac
-            } else {
-                0.0
+    // layer each use rather than keeping a resident slice — per stage,
+    // since each stage streams against its own residency split.
+    let weight_scale: Vec<f64> = (0..pp)
+        .map(|s| match system {
+            System::PowerInfer => 0.3,
+            System::DeepSpeedInference => {
+                let sf = cost.stage_stream_frac(s);
+                if sf > 0.0 {
+                    1.0 / sf
+                } else {
+                    0.0
+                }
             }
-        }
-        _ => 1.0,
-    };
+            _ => 1.0,
+        })
+        .collect();
     let cpu_attn_penalty = if system == System::PowerInfer { 2.0 } else { 1.0 };
 
+    let nchunks = chunk_sizes.len();
+
     // ==== prefill phase (zig-zag: weight slices once per layer on every
-    // shard's link, minibatches stream under them; DeepSpeed runs rounds
-    // of its capped batch) ==============================================
-    let mut weight_ready = vec![0.0f64; tp];
-    for _l in 0..nl {
-        let wbytes =
-            (cost.shard_layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
-        let mut w_end = vec![0.0f64; tp];
-        for (s, we) in w_end.iter_mut().enumerate() {
-            let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
-            *we = tl.schedule_on(s, Lane::PCIe, 0.0, t_w).end;
+    // owning device's link, minibatches stream under them; DeepSpeed runs
+    // rounds of its capped batch) =========================================
+    let mut weight_ready = vec![0.0f64; devices];
+    // Completion time of each mini-batch chunk at its current pipeline
+    // position (barrier end within the stage, or the GPU span end at
+    // tp = 1). Feeds the inter-stage hop and the next step's token
+    // dependency; never gates anything at pp = 1.
+    let mut chunk_done = vec![0.0f64; nchunks];
+    for l in 0..nl {
+        let stage = plan.stage_of_layer(l);
+        let devs = plan.stage_devices(stage);
+        let boundary = plan.is_stage_boundary(l);
+        let sf = cost.stage_stream_frac(stage);
+        let mut w_end = weight_ready.clone();
+        for d in devs.clone() {
+            let wbytes =
+                (cost.shard_layer_weight_bytes() as f64 * sf * weight_scale[stage]) as usize;
+            let t_w = ic.transfer_time_via(
+                &topo.slot(d).link,
+                Dir::HostToDevice,
+                TrafficClass::WeightLoad,
+                wbytes,
+            );
+            w_end[d] = tl.schedule_on(d, Lane::PCIe, 0.0, t_w).end;
         }
-        for &mb in &chunk_sizes {
-            let t_fwd = cost.layer_prefill_time(mb, wl.prompt) * cpu_attn_penalty;
-            for s in 0..tp {
-                tl.schedule_on(s, Lane::Gpu, weight_ready[s], t_fwd);
+        for (c, &mb) in chunk_sizes.iter().enumerate() {
+            let ready_extra = if boundary {
+                stage_transfer_bytes += plan.stage_transfer_bytes(model, mb * wl.prompt) as u64;
+                chunk_done[c] + topo.stage_hop_time(plan.stage_transfer_bytes(model, mb * wl.prompt))
+            } else {
+                0.0
+            };
+            let mut last_end = 0.0f64;
+            for d in devs.clone() {
+                let t_fwd = cost.layer_prefill_time_with(&topo.slot(d).gpu, mb, wl.prompt)
+                    * cpu_attn_penalty;
+                let ready = weight_ready[d].max(ready_extra);
+                last_end = tl.schedule_on(d, Lane::Gpu, ready, t_fwd).end;
             }
-            if tp > 1 {
-                let t_ag = allgather(mb * wl.prompt, &mut collective_bytes);
-                tl.barrier(0.0, t_ag);
-            }
+            chunk_done[c] = if tp > 1 {
+                let t_ag = allgather(stage, mb * wl.prompt, &mut collective_bytes);
+                tl.barrier_group(devs.clone(), 0.0, t_ag).end
+            } else {
+                last_end
+            };
         }
-        // store the produced context state to host (each shard ships its
+        // store the produced context state to host (each device ships its
         // slice over its own link)
         let kv_toks = if kv_on_gpu {
             0
@@ -252,13 +312,15 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         let act_b = model.act_bytes_per_layer(act_toks as usize);
         // d2h stores ride the full-duplex return path: they are accounted
         // as traffic but do not contend with h2d loads on the timeline.
-        for _s in 0..tp {
-            let _ = ic.transfer_time(
+        for d in devs {
+            let _ = ic.transfer_time_via(
+                &topo.slot(d).link,
                 Dir::DeviceToHost,
                 TrafficClass::KvStore,
                 cost.shard_bytes(kv_b),
             );
-            let _ = ic.transfer_time(
+            let _ = ic.transfer_time_via(
+                &topo.slot(d).link,
                 Dir::DeviceToHost,
                 TrafficClass::ActStore,
                 cost.shard_bytes(act_b),
@@ -267,7 +329,7 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         weight_ready = w_end;
     }
     let prefill_secs = tl.makespan();
-    let gpu_busy_prefill: Vec<f64> = (0..tp).map(|s| tl.busy_on(s, Lane::Gpu)).collect();
+    let gpu_busy_prefill: Vec<f64> = (0..devices).map(|d| tl.busy_on(d, Lane::Gpu)).collect();
 
     // ==== generation phase ==============================================
     for step in 0..wl.gen {
@@ -280,19 +342,28 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
             (kv_b_req * bt).min(ctx).saturating_sub(recompute_toks_req);
         let act_toks_req = (act_b_req * bt).min(ctx);
 
-        for _l in 0..nl {
+        for l in 0..nl {
+            let stage = plan.stage_of_layer(l);
+            let devs = plan.stage_devices(stage);
+            let boundary = plan.is_stage_boundary(l);
+            let sf = cost.stage_stream_frac(stage);
             // weight slices for this layer (streamed once per layer per
-            // step on every shard's link)
-            let wbytes =
-                (cost.shard_layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
-            let mut w_end = vec![0.0f64; tp];
-            for (s, we) in w_end.iter_mut().enumerate() {
-                let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
-                *we = tl.schedule_on(s, Lane::PCIe, 0.0, t_w).end;
+            // step on every owning device's link)
+            let mut w_end = weight_ready.clone();
+            for d in devs.clone() {
+                let wbytes =
+                    (cost.shard_layer_weight_bytes() as f64 * sf * weight_scale[stage]) as usize;
+                let t_w = ic.transfer_time_via(
+                    &topo.slot(d).link,
+                    Dir::HostToDevice,
+                    TrafficClass::WeightLoad,
+                    wbytes,
+                );
+                w_end[d] = tl.schedule_on(d, Lane::PCIe, 0.0, t_w).end;
             }
 
-            for &mb in &chunk_sizes {
-                // per-shard slices of this mini-batch's layer share
+            for (c, &mb) in chunk_sizes.iter().enumerate() {
+                // per-device slices of this mini-batch's layer share
                 let kv_bytes = if kv_on_gpu {
                     0
                 } else {
@@ -302,36 +373,56 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                     (act_toks_req as f64 * mb as f64 * (1.0 - gpu_act_frac)) as usize;
                 let act_bytes = model.act_bytes_per_layer(act_host_toks);
 
-                // GPU: KV-Gen for ACT tokens + (token-recompute prefill) +
-                // the decode forward — identical on every (symmetric)
-                // shard, gated on that shard's data + weights
-                let t_gen = cost.kv_gen_time(act_toks_req * mb);
-                let t_recompute = if recompute_toks_req > 0 {
-                    cost.layer_prefill_time(mb, recompute_toks_req)
+                // Inter-stage hop on a boundary; on the step's first
+                // layer the chunk waits for its own token to exit the
+                // last stage of the previous step (pipeline feedback).
+                let ready_extra = if boundary {
+                    stage_transfer_bytes += plan.stage_transfer_bytes(model, mb) as u64;
+                    chunk_done[c] + topo.stage_hop_time(plan.stage_transfer_bytes(model, mb))
+                } else if l == 0 && pp > 1 {
+                    chunk_done[c]
                 } else {
                     0.0
                 };
-                let t_fwd = cost.layer_forward_time(mb, 1, ctx) * cpu_attn_penalty;
 
-                for s in 0..tp {
-                    let t_kv = ic.transfer_time(
+                // GPU: KV-Gen for ACT tokens + (token-recompute prefill) +
+                // the decode forward — per device against its own specs,
+                // gated on that device's data + weights
+                let mut last_end = 0.0f64;
+                for d in devs.clone() {
+                    let gpu = &topo.slot(d).gpu;
+                    let t_gen = cost.kv_gen_time_with(gpu, act_toks_req * mb);
+                    let t_recompute = if recompute_toks_req > 0 {
+                        cost.layer_prefill_time_with(gpu, mb, recompute_toks_req)
+                    } else {
+                        0.0
+                    };
+                    let t_fwd =
+                        cost.layer_forward_time_with(gpu, mb, 1, ctx) * cpu_attn_penalty;
+                    let t_kv = ic.transfer_time_via(
+                        &topo.slot(d).link,
                         Dir::HostToDevice,
                         TrafficClass::KvLoad,
                         cost.shard_bytes(kv_bytes),
                     );
-                    let t_act = ic.transfer_time(
+                    let t_act = ic.transfer_time_via(
+                        &topo.slot(d).link,
                         Dir::HostToDevice,
                         TrafficClass::ActLoad,
                         cost.shard_bytes(act_bytes),
                     );
-                    let load_span = tl.schedule_on(s, Lane::PCIe, 0.0, t_kv + t_act);
-                    let ready = load_span.end.max(weight_ready[s]);
-                    let _ = tl.schedule_on(s, Lane::Gpu, ready, t_gen + t_recompute + t_fwd);
+                    let load_span = tl.schedule_on(d, Lane::PCIe, 0.0, t_kv + t_act);
+                    let ready = load_span.end.max(weight_ready[d]).max(ready_extra);
+                    last_end = tl
+                        .schedule_on(d, Lane::Gpu, ready, t_gen + t_recompute + t_fwd)
+                        .end;
                 }
-                if tp > 1 {
-                    let t_ag = allgather(mb, &mut collective_bytes);
-                    tl.barrier(0.0, t_ag);
-                }
+                chunk_done[c] = if tp > 1 {
+                    let t_ag = allgather(stage, mb, &mut collective_bytes);
+                    tl.barrier_group(devs.clone(), 0.0, t_ag).end
+                } else {
+                    last_end
+                };
 
                 // store the new token's designated state
                 let new_act = matches!(system, System::HybridServe(_) | System::ActOnly)
@@ -346,13 +437,15 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                 let kv_sb = model.kv_bytes_per_layer(kv_store_t);
                 let act_sb = model.act_bytes_per_layer(act_store_t);
                 // full-duplex d2h: traffic only (see prefill note)
-                for _s in 0..tp {
-                    let _ = ic.transfer_time(
+                for d in devs.clone() {
+                    let _ = ic.transfer_time_via(
+                        &topo.slot(d).link,
                         Dir::DeviceToHost,
                         TrafficClass::KvStore,
                         cost.shard_bytes(kv_sb),
                     );
-                    let _ = ic.transfer_time(
+                    let _ = ic.transfer_time_via(
+                        &topo.slot(d).link,
                         Dir::DeviceToHost,
                         TrafficClass::ActStore,
                         cost.shard_bytes(act_sb),
@@ -364,15 +457,25 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     }
 
     // Generation-phase temporal utilization (what Fig. 14 plots: the
-    // decode pipeline is where FlexGen's GPU starves), per shard.
+    // decode pipeline is where FlexGen's GPU starves), per device.
     let gen_span = (tl.makespan() - prefill_secs).max(1e-12);
-    let shard_gpu_utilization: Vec<f64> = (0..tp)
-        .map(|s| ((tl.busy_on(s, Lane::Gpu) - gpu_busy_prefill[s]) / gen_span).clamp(0.0, 1.0))
+    let shard_gpu_utilization: Vec<f64> = (0..devices)
+        .map(|d| ((tl.busy_on(d, Lane::Gpu) - gpu_busy_prefill[d]) / gen_span).clamp(0.0, 1.0))
         .collect();
-    let gpu_util_gen = shard_gpu_utilization.iter().sum::<f64>() / tp as f64;
+    let gpu_util_gen = shard_gpu_utilization.iter().sum::<f64>() / devices as f64;
     let straggler_gap = crate::util::stats::spread(&shard_gpu_utilization);
     let pcie_utilization =
-        (0..tp).map(|s| tl.utilization_on(s, Lane::PCIe)).sum::<f64>() / tp as f64;
+        (0..devices).map(|d| tl.utilization_on(d, Lane::PCIe)).sum::<f64>() / devices as f64;
+    // Per-stage pipeline bubble: the stage's mean GPU idleness over the
+    // generation window.
+    let stage_bubble: Vec<f64> = (0..pp)
+        .map(|s| {
+            let devs = plan.stage_devices(s);
+            let n = devs.len() as f64;
+            let u = devs.map(|d| shard_gpu_utilization[d]).sum::<f64>() / n;
+            (1.0 - u).clamp(0.0, 1.0)
+        })
+        .collect();
 
     // DeepSpeed rounds: the whole pipeline repeats per round.
     let makespan = tl.makespan() * rounds as f64;
@@ -383,6 +486,7 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         traffic.merge(&snapshot);
     }
     let collective_bytes = collective_bytes * rounds as u64;
+    let stage_transfer_bytes = stage_transfer_bytes * rounds as u64;
 
     let total_tokens = (wl.prompt + wl.gen) * wl.batch;
     let gen_tokens = wl.gen * wl.batch;
@@ -399,6 +503,8 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         shard_gpu_utilization,
         straggler_gap,
         collective_bytes,
+        stage_transfer_bytes,
+        stage_bubble,
     }
 }
 
@@ -446,6 +552,7 @@ pub fn token_recompute_latency_curve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::InterconnectSpec;
 
     fn testbed() -> SystemConfig {
         SystemConfig::paper_testbed()
@@ -635,8 +742,8 @@ mod tests {
 
     #[test]
     fn sharded_sim_runs_paper_scale_models() {
-        // The acceptance scenario: OPT-30B and OPT-66B at TP=2 and TP=4
-        // for all four systems — the configurations the single-GPU
+        // The PR-2 acceptance scenario: OPT-30B and OPT-66B at TP=2 and
+        // TP=4 for all four systems — the configurations the single-GPU
         // simulator could not express at all.
         for m in [ModelConfig::opt_30b(), ModelConfig::opt_66b()] {
             for tp in [2usize, 4] {
@@ -656,9 +763,132 @@ mod tests {
                     // tensor parallelism is not free: the all-gathers
                     // moved real bytes
                     assert!(r.collective_bytes > 0, "{tag}");
+                    // one stage: no inter-stage traffic, bubble = idleness
+                    assert_eq!(r.stage_transfer_bytes, 0, "{tag}");
+                    assert_eq!(r.stage_bubble.len(), 1, "{tag}");
                 }
             }
         }
+    }
+
+    #[test]
+    fn pipelined_sim_runs_opt175b() {
+        // The ISSUE-3 acceptance scenario: OPT-175B end-to-end at
+        // TP=2×PP=4 for all four systems, with per-stage bubble fractions
+        // reported.
+        let m = ModelConfig::opt_175b();
+        let s = SystemConfig::paper_testbed_grid(2, 4);
+        for sys in four_systems() {
+            let r = simulate(&m, &s, sys, wl(64, 512));
+            let tag = format!("{sys:?} opt-175b tp2pp4");
+            assert!(r.throughput > 0.0 && r.throughput.is_finite(), "{tag}");
+            assert_eq!(r.shard_gpu_utilization.len(), 8, "{tag}");
+            assert_eq!(r.stage_bubble.len(), 4, "{tag}");
+            for &b in &r.stage_bubble {
+                assert!((0.0..=1.0).contains(&b), "{tag}: bubble {b}");
+            }
+            // activations really hop between stages
+            assert!(r.stage_transfer_bytes > 0, "{tag}");
+            // symmetric grid: no straggler spread
+            assert!(r.straggler_gap.abs() < 1e-9, "{tag}");
+        }
+    }
+
+    #[test]
+    fn pipeline_feedback_creates_bubbles() {
+        // The token produced by the last stage feeds the next decode step
+        // of the first: with the batch in one chunk the compute pipeline
+        // cannot overlap stages, so each stage's GPU idles for roughly
+        // the other stages' share of the step (bubble ≳ (pp-1)/pp for
+        // GPU-bound systems).
+        let m = ModelConfig::opt_175b();
+        let r = simulate(
+            &m,
+            &SystemConfig::paper_testbed_grid(2, 4),
+            System::ActOnly,
+            wl(64, 512),
+        );
+        for &b in &r.stage_bubble {
+            assert!(b > 0.5, "expected a deep pipeline bubble, got {b}");
+        }
+        // and the single-stage run's bubble is just its GPU idleness
+        let r1 = simulate(&m, &SystemConfig::paper_testbed_tp(2), System::ActOnly, wl(64, 512));
+        assert!((r1.stage_bubble[0] - (1.0 - r1.gpu_utilization)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_scales_offloaded_weight_streaming() {
+        // The PP payoff for offloading: each stage streams only its own
+        // layers over its own links, so aggregate weight bandwidth grows
+        // with pp and PCIe-bound FlexGen speeds up even though compute
+        // bubbles appear.
+        let m = ModelConfig::opt_175b();
+        let w = wl(64, 512);
+        let t1 = simulate(&m, &SystemConfig::paper_testbed_grid(2, 1), System::FlexGen, w)
+            .throughput;
+        let t4 = simulate(&m, &SystemConfig::paper_testbed_grid(2, 4), System::FlexGen, w)
+            .throughput;
+        assert!(t4 > 2.0 * t1, "pp4 {t4} !>> pp1 {t1}");
+    }
+
+    #[test]
+    fn heterogeneous_topology_exposes_stragglers() {
+        // A skewed device (slower clock + x8 link) must surface in the
+        // straggler gap and cost real throughput vs the uniform rig.
+        let m = ModelConfig::opt_30b();
+        let w = wl(64, 512);
+        let uniform = SystemConfig::paper_testbed_tp(4);
+        let skewed = SystemConfig::with_topology(
+            uniform
+                .topology
+                .clone()
+                .with_clock_skew(0, 2, 0.8)
+                .with_link(
+                    0,
+                    2,
+                    InterconnectSpec {
+                        h2d_bw: 12.5e9,
+                        d2h_bw: 12.5e9,
+                        latency_s: 15e-6,
+                    },
+                ),
+        );
+        for sys in [System::HybridServe(PolicyConfig::full()), System::FlexGen] {
+            let ru = simulate(&m, &uniform, sys, w);
+            let rs = simulate(&m, &skewed, sys, w);
+            let tag = format!("{sys:?}");
+            assert!(rs.straggler_gap > 1e-6, "{tag}: gap {}", rs.straggler_gap);
+            assert!(
+                rs.throughput < ru.throughput,
+                "{tag}: skewed {} !< uniform {}",
+                rs.throughput,
+                ru.throughput
+            );
+            for &u in &rs.shard_gpu_utilization {
+                assert!((0.0..=1.0 + 1e-9).contains(&u), "{tag}: util {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn nvlink_island_shrinks_collective_cost() {
+        // Same grid, NVLink fabric on every stage: the all-gather spans
+        // shrink, so throughput can only improve.
+        let m = ModelConfig::opt_30b();
+        let w = wl(64, 512);
+        let pcie = SystemConfig::paper_testbed_grid(4, 1);
+        let mut topo = pcie.topology.clone();
+        topo = topo.with_nvlink_stage(0);
+        let nvlink = SystemConfig::with_topology(topo);
+        let rp = simulate(&m, &pcie, System::ActOnly, w);
+        let rn = simulate(&m, &nvlink, System::ActOnly, w);
+        assert!(
+            rn.throughput >= rp.throughput,
+            "nvlink {} !>= pcie {}",
+            rn.throughput,
+            rp.throughput
+        );
+        assert_eq!(rn.collective_bytes, rp.collective_bytes);
     }
 
     #[test]
@@ -706,7 +936,8 @@ mod tests {
             let models = ModelConfig::paper_family();
             let m = rng.choose(&models);
             let tp = *rng.choose(&[1usize, 2, 4]);
-            let s = SystemConfig::paper_testbed_tp(tp);
+            let pp = *rng.choose(&[1usize, 2, 4]);
+            let s = SystemConfig::paper_testbed_grid(tp, pp);
             let w = Workload {
                 batch: rng.range(1, 257),
                 prompt: rng.range(16, 1921),
@@ -728,8 +959,13 @@ mod tests {
             assert!(a.pcie_utilization <= 1.0 + 1e-9);
             assert!((0.0..=1.0).contains(&a.act_block_share));
             assert!(a.minibatch >= 1 && a.minibatch <= w.batch);
-            assert_eq!(a.shard_gpu_utilization.len(), tp);
+            assert_eq!(a.shard_gpu_utilization.len(), tp * pp);
             assert_eq!(a.collective_bytes == 0, tp == 1);
+            assert_eq!(a.stage_transfer_bytes == 0, pp == 1);
+            assert_eq!(a.stage_bubble.len(), pp);
+            for &bub in &a.stage_bubble {
+                assert!((0.0..=1.0).contains(&bub), "bubble {bub}");
+            }
         });
     }
 }

@@ -1,0 +1,107 @@
+//! Golden regression test for the pipeline-parallel regime: pins the
+//! simulated throughput of all four `System` variants for OPT-175B on a
+//! TP=2×PP=4 grid (B=64, prompt 512, 32 new tokens) to the committed
+//! values in `rust/tests/golden/sim_opt175b_tp2pp4.json`, within ±0.1%.
+//!
+//! Together with `golden_sim.rs` (single-GPU OPT-6.7B) this brackets the
+//! topology refactor from both ends: the flat pin proves `pp = 1`
+//! changed nothing, this pin freezes the newly opened TP×PP regime so
+//! later plan/timeline changes cannot silently bend it. Re-pin after a
+//! deliberate model change with `UPDATE_GOLDEN=1` and justify it in the
+//! same commit.
+
+use hybridserve::config::SystemConfig;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::util::json::Json;
+use hybridserve::ModelConfig;
+
+const GOLDEN: &str = include_str!("golden/sim_opt175b_tp2pp4.json");
+const GOLDEN_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/golden/sim_opt175b_tp2pp4.json"
+);
+
+/// The four systems the paper's §5 compares, with their golden keys.
+fn systems() -> [(&'static str, System); 4] {
+    [
+        ("hybrid", System::HybridServe(PolicyConfig::full())),
+        ("flexgen", System::FlexGen),
+        ("deepspeed", System::DeepSpeedInference),
+        ("act_only", System::ActOnly),
+    ]
+}
+
+fn reference_throughputs() -> Vec<(&'static str, f64)> {
+    let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+    let wl = golden.get("workload");
+    let workload = Workload {
+        batch: wl.get("batch").as_usize().unwrap(),
+        prompt: wl.get("prompt").as_usize().unwrap(),
+        gen: wl.get("gen").as_usize().unwrap(),
+    };
+    let model = ModelConfig::by_name(golden.get("model").as_str().unwrap()).unwrap();
+    let topo = golden.get("topology");
+    let sys = SystemConfig::paper_testbed_grid(
+        topo.get("tp").as_usize().unwrap(),
+        topo.get("pp").as_usize().unwrap(),
+    );
+    systems()
+        .into_iter()
+        .map(|(key, system)| (key, simulate(&model, &sys, system, workload).throughput))
+        .collect()
+}
+
+#[test]
+fn golden_throughput_opt175b_tp2pp4_within_tolerance() {
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+        let rewritten = Json::obj(vec![
+            ("model", golden.get("model").clone()),
+            ("topology", golden.get("topology").clone()),
+            ("workload", golden.get("workload").clone()),
+            ("tolerance", golden.get("tolerance").clone()),
+            (
+                "throughput",
+                Json::obj(
+                    reference_throughputs()
+                        .into_iter()
+                        .map(|(k, t)| (k, Json::num(t)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(GOLDEN_PATH, rewritten.to_string()).expect("rewrite golden file");
+        println!("rewrote {GOLDEN_PATH}");
+        return;
+    }
+
+    let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+    let tolerance = golden.get("tolerance").as_f64().unwrap();
+    assert!(tolerance <= 0.001, "golden tolerance must stay at ±0.1%");
+    let pinned = golden.get("throughput");
+    for (key, measured) in reference_throughputs() {
+        let expected = pinned.get(key).as_f64().unwrap_or_else(|| {
+            panic!("golden file has no throughput entry for '{key}'");
+        });
+        let rel = (measured - expected).abs() / expected;
+        assert!(
+            rel <= tolerance,
+            "{key}: simulated throughput {measured:.6} drifted {:.4}% from the \
+             pinned {expected:.6} (tolerance ±{:.2}%); if this shift is \
+             intentional, re-pin with UPDATE_GOLDEN=1 and justify it in the \
+             same commit",
+            rel * 100.0,
+            tolerance * 100.0,
+        );
+    }
+}
+
+#[test]
+fn golden_pp_workload_is_deterministic() {
+    // Two runs must agree bit-for-bit — the pin above is only meaningful
+    // if there is no run-to-run noise.
+    let a = reference_throughputs();
+    let b = reference_throughputs();
+    assert_eq!(a, b);
+}

@@ -1,0 +1,125 @@
+//! Topology/plan equivalence: the TP×PP execution-plan path with a
+//! single pipeline stage and uniform links must reproduce the flat-TP
+//! simulator EXACTLY (bit-for-bit f64 equality, not a tolerance) for
+//! every `System` variant — and the grid constructors must be the same
+//! configuration value, so there is no separate code path to drift.
+//!
+//! This is the TP×PP=1 half of the ISSUE-3 acceptance criteria; the
+//! TP=1 half (vs the verbatim pre-refactor two-lane simulator) stays
+//! pinned by `tp1_equivalence.rs`, and the OPT-175B TP=2×PP=4 regime is
+//! pinned by `golden_pp.rs`.
+
+use hybridserve::config::{ModelConfig, SystemConfig, Topology};
+use hybridserve::pcie::TrafficClass;
+use hybridserve::plan::ExecutionPlan;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+
+fn assert_identical(model: &ModelConfig, a: &SystemConfig, b: &SystemConfig, system: System) {
+    let wl = Workload {
+        batch: 64,
+        prompt: 512,
+        gen: 32,
+    };
+    let ra = simulate(model, a, system, wl);
+    let rb = simulate(model, b, system, wl);
+    let tag = format!("{system:?} on {}", model.name);
+    assert_eq!(ra.makespan, rb.makespan, "makespan diverged: {tag}");
+    assert_eq!(ra.prefill_secs, rb.prefill_secs, "prefill diverged: {tag}");
+    assert_eq!(ra.throughput, rb.throughput, "throughput diverged: {tag}");
+    assert_eq!(ra.gen_throughput, rb.gen_throughput, "gen thr diverged: {tag}");
+    assert_eq!(ra.gpu_utilization, rb.gpu_utilization, "gpu util diverged: {tag}");
+    assert_eq!(ra.pcie_utilization, rb.pcie_utilization, "pcie util diverged: {tag}");
+    assert_eq!(ra.minibatch, rb.minibatch, "minibatch diverged: {tag}");
+    assert_eq!(ra.act_block_share, rb.act_block_share, "act share diverged: {tag}");
+    assert_eq!(ra.collective_bytes, rb.collective_bytes, "collectives diverged: {tag}");
+    assert_eq!(ra.stage_transfer_bytes, rb.stage_transfer_bytes, "{tag}");
+    assert_eq!(ra.shard_gpu_utilization, rb.shard_gpu_utilization, "{tag}");
+    assert_eq!(ra.stage_bubble, rb.stage_bubble, "{tag}");
+    for class in TrafficClass::ALL {
+        assert_eq!(
+            ra.traffic.bytes(class),
+            rb.traffic.bytes(class),
+            "{} traffic diverged: {tag}",
+            class.name()
+        );
+    }
+}
+
+#[test]
+fn grid_pp1_is_the_flat_tp_path() {
+    // paper_testbed_grid(tp, 1) and paper_testbed_tp(tp) are the same
+    // value, and an explicit uniform Topology via with_topology is too:
+    // the plan-lowered simulator has ONE code path.
+    let m = ModelConfig::opt_30b();
+    for tp in [1usize, 2, 4] {
+        let flat = SystemConfig::paper_testbed_tp(tp);
+        let grid = SystemConfig::paper_testbed_grid(tp, 1);
+        assert_eq!(flat, grid);
+        let explicit = SystemConfig::with_topology(Topology::uniform(
+            flat.gpu.clone(),
+            flat.interconnect.clone(),
+            tp,
+            1,
+        ));
+        assert_eq!(flat, explicit);
+        for system in [
+            System::HybridServe(PolicyConfig::full()),
+            System::FlexGen,
+            System::DeepSpeedInference,
+            System::ActOnly,
+            System::TokenRecompute(0.25),
+            System::PowerInfer,
+        ] {
+            assert_identical(&m, &flat, &explicit, system);
+        }
+    }
+}
+
+#[test]
+fn plan_lowering_is_deterministic_and_consistent() {
+    // The same (model, system) pair always lowers to the same plan, and
+    // the plan agrees with the topology's grid arithmetic.
+    let m = ModelConfig::opt_175b();
+    let sys = SystemConfig::paper_testbed_grid(2, 4);
+    let a = ExecutionPlan::for_system(&m, &sys);
+    let b = ExecutionPlan::for_system(&m, &sys);
+    assert_eq!(a, b);
+    assert_eq!(a.device_count(), sys.devices());
+    assert_eq!(a.tp, sys.tp());
+    assert_eq!(a.pp, sys.pp());
+    let total: usize = a.stages.iter().map(|s| s.weight_bytes).sum();
+    assert_eq!(total, m.total_weight_bytes());
+}
+
+#[test]
+fn opt175b_grid_runs_all_systems_end_to_end() {
+    // The acceptance scenario behind the golden pin: OPT-175B at
+    // TP=2×PP=4 for all four System variants, with sane per-stage
+    // bubbles. (~350 GB of weights: no flat-TP rig of these devices can
+    // hold a slice, so this regime simply did not exist before the plan.)
+    let m = ModelConfig::opt_175b();
+    let sys = SystemConfig::paper_testbed_grid(2, 4);
+    let wl = Workload {
+        batch: 64,
+        prompt: 512,
+        gen: 32,
+    };
+    for system in [
+        System::HybridServe(PolicyConfig::full()),
+        System::FlexGen,
+        System::DeepSpeedInference,
+        System::ActOnly,
+    ] {
+        let r = simulate(&m, &sys, system, wl);
+        let tag = format!("{system:?}");
+        assert!(r.throughput > 0.0 && r.throughput.is_finite(), "{tag}");
+        assert_eq!(r.shard_gpu_utilization.len(), 8, "{tag}");
+        assert_eq!(r.stage_bubble.len(), 4, "{tag}");
+        for &b in &r.stage_bubble {
+            assert!((0.0..=1.0).contains(&b), "{tag}: bubble {b}");
+        }
+        assert!(r.stage_transfer_bytes > 0, "{tag}");
+        assert!(r.collective_bytes > 0, "{tag}");
+    }
+}

@@ -13,6 +13,12 @@
 //!     throughput, utilizations, minibatch, ACT share and per-class
 //!     traffic, all compared with `assert_eq!` on the raw f64/u64 values.
 
+// The verbatim legacy copy below intentionally drives the Timeline
+// through the historical suffix-free (device-0) accessors, which are now
+// deprecated thin wrappers over the plan-indexed API — that is exactly
+// the surface this test pins.
+#![allow(deprecated)]
+
 use hybridserve::cache::{BlockKind, BlockSizes};
 use hybridserve::config::{ModelConfig, ShardSpec, SystemConfig};
 use hybridserve::pcie::{Dir, Interconnect, Lane, Timeline, TrafficClass, TrafficCounter};
