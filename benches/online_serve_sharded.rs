@@ -9,19 +9,28 @@
 //! high-rate cells actually hit admission pressure and the ACT-demotion
 //! preemption path (preemptions > 0), exercising the per-device
 //! reservation striping end to end. A TP=4×PP=2 grid cell closes with
-//! per-stage bubbles.
+//! per-stage bubbles, and the PP cells run under BOTH pipeline schedules
+//! (lock-step layer-major and chunk-major 1F1B): on OPT-30B at 4×2 the
+//! per-stage slices are resident, so the chunk-major engine overlaps the
+//! decode-round feedback and the same trace clears at higher goodput.
 
 use hybridserve::cache::BlockSizes;
-use hybridserve::config::SystemConfig;
+use hybridserve::config::{SchedulePolicy, SystemConfig};
 use hybridserve::harness::FigureTable;
 use hybridserve::metrics::SloSpec;
 use hybridserve::sched::{AnalyticEngine, SchedConfig, Scheduler};
 use hybridserve::workload::WorkloadGen;
 use hybridserve::ModelConfig;
 
-fn run(tp: usize, pp: usize, rate: f64, host_blocks: usize) -> hybridserve::metrics::SloReport {
+fn run(
+    tp: usize,
+    pp: usize,
+    rate: f64,
+    host_blocks: usize,
+    schedule: SchedulePolicy,
+) -> hybridserve::metrics::SloReport {
     let m = ModelConfig::opt_30b();
-    let sys = SystemConfig::paper_testbed_grid(tp, pp);
+    let sys = SystemConfig::paper_testbed_grid(tp, pp).with_schedule(schedule);
     let sizes = BlockSizes::new(&m, sys.block_tokens);
     let eng = AnalyticEngine::new(&m, &sys, host_blocks * sizes.kv_bytes);
     let cfg = SchedConfig {
@@ -44,6 +53,7 @@ fn main() {
         &[
             "tp",
             "pp",
+            "schedule",
             "rate_rps",
             "completed",
             "throughput_tok_s",
@@ -57,20 +67,24 @@ fn main() {
         ],
     );
 
-    for (tp, pp) in [(2usize, 1usize), (4, 1), (4, 2)] {
+    // pp = 1 has a single lowering; the 4×2 grid cell runs both schedules.
+    let cells = [
+        (2usize, 1usize, SchedulePolicy::LayerMajor),
+        (4, 1, SchedulePolicy::LayerMajor),
+        (4, 2, SchedulePolicy::LayerMajor),
+        (4, 2, SchedulePolicy::OneFOneB),
+    ];
+    for (tp, pp, schedule) in cells {
         for rate in [0.5, 2.0, 8.0] {
             // A ~400-block (≈9 GB) host pool: roomy at low rate, tight
             // enough at 8 rps that admissions queue on the ledger and the
             // ACT-demotion path fires for the late arrivals.
-            let r = run(tp, pp, rate, 400);
-            let mean_bubble = if r.stage_bubble.is_empty() {
-                0.0
-            } else {
-                r.stage_bubble.iter().sum::<f64>() / r.stage_bubble.len() as f64
-            };
+            let r = run(tp, pp, rate, 400, schedule);
+            let mean_bubble = r.mean_stage_bubble();
             t.row(vec![
                 tp.to_string(),
                 pp.to_string(),
+                r.pipeline_schedule.to_string(),
                 format!("{rate:.1}"),
                 r.completed.to_string(),
                 format!("{:.1}", r.throughput),
@@ -82,7 +96,11 @@ fn main() {
                 format!("{:.4}", r.straggler_gap),
                 format!("{:.4}", mean_bubble),
             ]);
-            println!("tp{tp} pp{pp} rate {rate:>4.1}/s: {}", r.summary());
+            println!(
+                "tp{tp} pp{pp} {} rate {rate:>4.1}/s: {}",
+                r.pipeline_schedule,
+                r.summary()
+            );
         }
     }
     t.emit();

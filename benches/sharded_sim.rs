@@ -1,8 +1,10 @@
 //! Sharded-scaling sweep — OPT-30B/66B at TP = 1/2/4 for all four
 //! systems (the paper-scale configurations a single 24 GB GPU cannot
-//! serve), plus a prompt-length sweep of HybridServe at each degree.
+//! serve), a prompt-length sweep of HybridServe at each degree, and a
+//! pipeline-schedule sweep (layer-major vs chunk-major 1F1B vs the auto
+//! pick) across TP×PP grids.
 
-use hybridserve::config::SystemConfig;
+use hybridserve::config::{SchedulePolicy, SystemConfig};
 use hybridserve::figures::{tab_pipeline, tab_sharding};
 use hybridserve::harness::FigureTable;
 use hybridserve::policy::PolicyConfig;
@@ -12,6 +14,52 @@ use hybridserve::ModelConfig;
 fn main() {
     tab_sharding().emit();
     tab_pipeline().emit();
+
+    // Schedule sweep: where does chunk-major pay? Resident stage slices
+    // (OPT-30B grids) overlap the feedback bubble for free; streaming
+    // slices (OPT-175B) lose the duplicated weight streams. The auto
+    // column is the planner's pick evaluated at this workload.
+    let mut sched = FigureTable::new(
+        "schedule_sweep",
+        &[
+            "model", "tp", "pp", "layer_major", "one_f_one_b", "auto", "auto_pick",
+            "bubble_lm", "bubble_1f1b",
+        ],
+    );
+    for m in [ModelConfig::opt_30b(), ModelConfig::opt_66b(), ModelConfig::opt_175b()] {
+        for (tp, pp) in [(2usize, 2usize), (2, 4), (4, 2)] {
+            let wl = Workload { batch: 64, prompt: 512, gen: 64 };
+            let run = |policy: SchedulePolicy| {
+                simulate(
+                    &m,
+                    &SystemConfig::paper_testbed_grid(tp, pp).with_schedule(policy),
+                    System::HybridServe(PolicyConfig::full()),
+                    wl,
+                )
+            };
+            let lm = run(SchedulePolicy::LayerMajor);
+            let ob = run(SchedulePolicy::OneFOneB);
+            // The auto pick, derived from the two runs already in hand
+            // via the same rule `simulate`'s Auto branch uses.
+            let auto = if hybridserve::sim::auto_prefers_chunk_major(&lm, &ob) {
+                &ob
+            } else {
+                &lm
+            };
+            sched.row(vec![
+                m.name.clone(),
+                tp.to_string(),
+                pp.to_string(),
+                format!("{:.2}", lm.throughput),
+                format!("{:.2}", ob.throughput),
+                format!("{:.2}", auto.throughput),
+                auto.schedule.name().to_string(),
+                format!("{:.3}", lm.mean_stage_bubble()),
+                format!("{:.3}", ob.mean_stage_bubble()),
+            ]);
+        }
+    }
+    sched.emit();
 
     // HybridServe across prompt lengths at each TP degree: the longer the
     // context, the more cache traffic — and the more the aggregate link

@@ -183,6 +183,26 @@ impl ShardSpec {
     }
 }
 
+/// Requested pipeline micro-batch schedule for `pp > 1` topologies —
+/// which [`crate::plan::PipelineSchedule`] the plan lowers to.
+///
+/// `LayerMajor` keeps the historical lock-step zig-zag (the default, and
+/// the only behavior before the schedule axis existed), `OneFOneB` forces
+/// the chunk-major 1F1B lowering, and `Auto` lets the planner pick per
+/// (model, topology) by simulated throughput
+/// ([`crate::plan::choose_schedule`]; `sim::simulate` re-evaluates the
+/// pick at the actual workload). Irrelevant at `pp = 1`, where every
+/// request lowers to `LayerMajor`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Lock-step layer-major zig-zag (historical behavior).
+    LayerMajor,
+    /// Chunk-major 1F1B micro-batch pipelining.
+    OneFOneB,
+    /// Pick per (model, topology) by simulated throughput.
+    Auto,
+}
+
 /// Full system configuration used by the engine and the simulator.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -208,6 +228,9 @@ pub struct SystemConfig {
     /// Fraction of GPU memory reserved for the double-buffered KV/ACT
     /// staging buffers.
     pub gpu_buffer_fraction: f64,
+    /// Requested pipeline micro-batch schedule (`pp > 1` only; see
+    /// [`SchedulePolicy`]). Defaults to the historical `LayerMajor`.
+    pub schedule: SchedulePolicy,
 }
 
 impl SystemConfig {
@@ -222,6 +245,7 @@ impl SystemConfig {
             block_tokens: 16,
             gpu_weight_fraction: 0.5,
             gpu_buffer_fraction: 0.25,
+            schedule: SchedulePolicy::LayerMajor,
         }
     }
 
@@ -292,7 +316,15 @@ impl SystemConfig {
             block_tokens: 16,
             gpu_weight_fraction: 0.5,
             gpu_buffer_fraction: 0.25,
+            schedule: SchedulePolicy::LayerMajor,
         }
+    }
+
+    /// This config with a different pipeline micro-batch schedule policy
+    /// (builder style — `paper_testbed_grid(2, 4).with_schedule(...)`).
+    pub fn with_schedule(mut self, schedule: SchedulePolicy) -> Self {
+        self.schedule = schedule;
+        self
     }
 
     /// GPU bytes available for resident weights.
@@ -417,6 +449,25 @@ mod tests {
         // the legacy mirror tracks the TP dimension only
         assert_eq!(g.shard.tp, 2);
         assert_eq!(g.aggregate_h2d_bw(), 8.0 * g.interconnect.h2d_bw);
+    }
+
+    #[test]
+    fn schedule_policy_defaults_layer_major_and_builds() {
+        // Every constructor keeps the historical lock-step default, so
+        // pre-schedule-axis configs are value-identical.
+        assert_eq!(SystemConfig::paper_testbed().schedule, SchedulePolicy::LayerMajor);
+        assert_eq!(
+            SystemConfig::paper_testbed_grid(2, 4).schedule,
+            SchedulePolicy::LayerMajor
+        );
+        assert_eq!(SystemConfig::tiny_testbed().schedule, SchedulePolicy::LayerMajor);
+        let s = SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::OneFOneB);
+        assert_eq!(s.schedule, SchedulePolicy::OneFOneB);
+        // the builder only touches the schedule
+        assert_eq!(
+            s.with_schedule(SchedulePolicy::LayerMajor),
+            SystemConfig::paper_testbed_grid(2, 4)
+        );
     }
 
     #[test]

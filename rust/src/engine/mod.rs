@@ -174,6 +174,9 @@ impl Engine {
             act_gpu_blocks: cfg.sys.gpu_cache_budget() / sizes.act_bytes,
             host_cache_bytes,
             sizes,
+            // The PJRT engine executes single-GPU (pp = 1): no pipeline
+            // feedback, no bubble — the historical allocation exactly.
+            bubble: 0.0,
         });
         let ratio = if !cfg.policy.hybrid_cache {
             BlockRatio::act_only()

@@ -312,17 +312,22 @@ pub fn tab_sharding() -> FigureTable {
     t
 }
 
-/// Pipeline-parallel grid table (beyond the paper's envelope): OPT-66B
-/// and OPT-175B across TP×PP grids of up to 8 modeled devices — the
-/// regime where the model cannot fit any flat-TP rig's aggregate
-/// residency. Reports throughput of the four systems, HybridServe's
-/// chosen ACT share, the mean per-stage pipeline-bubble fraction, and
-/// the inter-stage activation traffic. The visible tension: PP multiplies
+/// Pipeline-parallel grid table (beyond the paper's envelope): OPT-30B,
+/// OPT-66B and OPT-175B across TP×PP grids of up to 8 modeled devices —
+/// the regime where the model cannot fit any flat-TP rig's aggregate
+/// residency. Reports throughput of the four systems under the lock-step
+/// layer-major schedule, HybridServe's chosen ACT share, the mean
+/// per-stage pipeline-bubble fraction, the inter-stage activation
+/// traffic — and the schedule axis: HybridServe/FlexGen under the
+/// chunk-major 1F1B lowering, HybridServe's 1F1B mean bubble, and the
+/// schedule the auto planner picks. The visible tension: PP multiplies
 /// aggregate host-link bandwidth for the weight stream (PCIe-bound
 /// systems speed up) while the token feedback across stages opens a
-/// compute bubble that closes the recomputation window (GPU-bound
-/// systems flatten) — see DESIGN.md §Topology.
+/// compute bubble; chunk-major overlaps the bubble where stage slices
+/// are resident (OPT-30B grids) and loses to its own duplicated weight
+/// streams where they are not (OPT-175B) — see DESIGN.md §Schedules.
 pub fn tab_pipeline() -> FigureTable {
+    use crate::config::SchedulePolicy;
     let mut t = FigureTable::new(
         "tab_pipeline_grid",
         &[
@@ -336,18 +341,34 @@ pub fn tab_pipeline() -> FigureTable {
             "hybrid_act_share",
             "mean_bubble",
             "stage_xfer_gb",
+            "flexgen_1f1b",
+            "hybrid_1f1b",
+            "bubble_1f1b",
+            "auto_pick",
         ],
     );
-    for m in [ModelConfig::opt_66b(), ModelConfig::opt_175b()] {
+    for m in [
+        ModelConfig::opt_30b(),
+        ModelConfig::opt_66b(),
+        ModelConfig::opt_175b(),
+    ] {
         let wl = Workload { batch: 64, prompt: 512, gen: 64 };
         for (tp, pp) in [(2usize, 1usize), (2, 2), (2, 4), (4, 2)] {
             let sys = SystemConfig::paper_testbed_grid(tp, pp);
+            let ofob = sys.clone().with_schedule(SchedulePolicy::OneFOneB);
             let ds = simulate(&m, &sys, System::DeepSpeedInference, wl);
             let fg = simulate(&m, &sys, System::FlexGen, wl);
             let ac = simulate(&m, &sys, System::ActOnly, wl);
             let hy = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
-            let mean_bubble =
-                hy.stage_bubble.iter().sum::<f64>() / hy.stage_bubble.len() as f64;
+            let fg_ob = simulate(&m, &ofob, System::FlexGen, wl);
+            let hy_ob = simulate(&m, &ofob, System::HybridServe(PolicyConfig::full()), wl);
+            // The auto pick, derived from the two runs already in hand
+            // via the same rule `simulate`'s Auto branch uses.
+            let hy_auto = if crate::sim::auto_prefers_chunk_major(&hy, &hy_ob) {
+                &hy_ob
+            } else {
+                &hy
+            };
             t.row(vec![
                 m.name.clone(),
                 tp.to_string(),
@@ -357,8 +378,12 @@ pub fn tab_pipeline() -> FigureTable {
                 f2(ac.throughput),
                 f2(hy.throughput),
                 f3(hy.act_block_share),
-                f3(mean_bubble),
+                f3(hy.mean_stage_bubble()),
                 f2(hy.stage_transfer_bytes as f64 / 1e9),
+                f2(fg_ob.throughput),
+                f2(hy_ob.throughput),
+                f3(hy_ob.mean_stage_bubble()),
+                hy_auto.schedule.name().to_string(),
             ]);
         }
     }
@@ -427,19 +452,38 @@ mod tests {
     #[test]
     fn tab_pipeline_covers_grids_and_reports_bubbles() {
         let t = tab_pipeline();
-        assert_eq!(t.rows.len(), 8, "2 models x 4 grids");
-        let bub = t.columns.iter().position(|c| c == "mean_bubble").unwrap();
-        let xfer = t.columns.iter().position(|c| c == "stage_xfer_gb").unwrap();
-        let pp_col = t.columns.iter().position(|c| c == "pp").unwrap();
+        assert_eq!(t.rows.len(), 12, "3 models x 4 grids");
+        let col = |name: &str| t.columns.iter().position(|c| c == name).unwrap();
+        let (bub, xfer, pp_col) = (col("mean_bubble"), col("stage_xfer_gb"), col("pp"));
+        let (bub_ob, pick) = (col("bubble_1f1b"), col("auto_pick"));
+        let (model_col, hy_col, hy_ob_col) = (col("model"), col("hybrid"), col("hybrid_1f1b"));
         for row in &t.rows {
             let pp: usize = row[pp_col].parse().unwrap();
             let b: f64 = row[bub].parse().unwrap();
+            let b_ob: f64 = row[bub_ob].parse().unwrap();
             let x: f64 = row[xfer].parse().unwrap();
             assert!((0.0..=1.0).contains(&b), "{row:?}");
+            assert!((0.0..=1.0).contains(&b_ob), "{row:?}");
             if pp == 1 {
                 assert_eq!(x, 0.0, "{row:?}");
+                // one stage: the 1F1B lowering IS layer-major
+                assert_eq!(row[hy_col], row[hy_ob_col], "{row:?}");
+                assert_eq!(row[pick], "layer_major", "{row:?}");
             } else {
                 assert!(x > 0.0, "{row:?}");
+            }
+            // the auto pick is one of the two lowerings and never loses
+            let hy: f64 = row[hy_col].parse().unwrap();
+            let hy_ob: f64 = row[hy_ob_col].parse().unwrap();
+            assert!(
+                row[pick] == "layer_major" || row[pick] == "one_f_one_b",
+                "{row:?}"
+            );
+            // resident OPT-30B grids are the chunk-major win condition
+            if row[model_col] == "opt-30b" && pp > 1 {
+                assert_eq!(row[pick], "one_f_one_b", "{row:?}");
+                assert!(hy_ob > hy, "{row:?}");
+                assert!(b_ob < b, "{row:?}");
             }
         }
     }

@@ -15,10 +15,13 @@
 //! - [`config`] — model (OPT family, opt-6.7b…175b) + system (testbed)
 //!   configuration, incl. the TP×PP device grid (`Topology`: per-device
 //!   GPU/link slots, per-stage collective fabrics, inter-stage links)
+//!   and the pipeline-schedule policy (`SchedulePolicy`: layer-major /
+//!   chunk-major 1F1B / auto)
 //! - [`plan`] — `PlanBuilder` lowering a (model, topology) pair into the
 //!   `ExecutionPlan` (stage layer ranges, per-device weight slices,
-//!   collective schedule, inter-stage transfers) that sim, policy,
-//!   scheduler and engine all consume
+//!   collective schedule, inter-stage transfers, and the resolved
+//!   `PipelineSchedule` with its bubble/duplication estimates) that sim,
+//!   policy, scheduler and engine all consume
 //! - [`util`] — offline-build substrates: JSON, PRNG, stats, prop-testing
 //! - [`memsim`] — GPU/host capacity accounting
 //! - [`pcie`] — interconnect model, traffic classes, and the 2×N-lane
@@ -43,9 +46,15 @@
 //!   utilization, straggler gap, per-stage pipeline bubbles)
 //! - [`server`] — TCP front-end driving the scheduler loop
 //! - [`sim`] — full-scale analytic simulator (paper-figure workloads,
-//!   TP×PP grids, heterogeneous straggler rigs)
+//!   TP×PP grids, heterogeneous straggler rigs, layer-major vs
+//!   chunk-major pipeline schedules)
 //! - [`figures`] — table/figure regeneration used by benches and tests
 //! - [`harness`] — timing/CSV bench harness (no criterion offline)
+
+// The suffix-free device-0 `Timeline` accessors are `#[deprecated]` thin
+// wrappers; in-crate tests must not regress onto them (the two intentional
+// pin-the-wrapper tests carry local `#[allow(deprecated)]`).
+#![cfg_attr(test, deny(deprecated))]
 
 pub mod cache;
 pub mod config;

@@ -299,9 +299,19 @@ pub struct SloReport {
     /// utilization; empty when the engine exposes no timeline, one entry
     /// per pipeline stage otherwise).
     pub stage_bubble: Vec<f64>,
+    /// The pipeline schedule the engine's plan resolved to
+    /// ([`crate::plan::PipelineSchedule::name`]; empty when the engine
+    /// exposes no execution plan — e.g. scheduler tests on a mock).
+    pub pipeline_schedule: &'static str,
 }
 
 impl SloReport {
+    /// Mean per-stage pipeline-bubble fraction (0 when the engine exposed
+    /// no timeline and `stage_bubble` is empty).
+    pub fn mean_stage_bubble(&self) -> f64 {
+        crate::util::stats::mean(&self.stage_bubble)
+    }
+
     pub fn from_timings(
         submitted: usize,
         timings: &[RequestTiming],
@@ -363,6 +373,7 @@ impl SloReport {
             shard_util: ShardUtilization::default(),
             straggler_gap: 0.0,
             stage_bubble: Vec::new(),
+            pipeline_schedule: "",
         }
     }
 

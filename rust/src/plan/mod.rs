@@ -28,7 +28,45 @@
 //! kept identical; `rust/tests/tp1_equivalence.rs` and the golden pins
 //! enforce it).
 
-use crate::config::{ModelConfig, SystemConfig, Topology};
+use crate::config::{ModelConfig, SchedulePolicy, SystemConfig, Topology};
+
+/// How mini-batch chunks traverse the pipeline stages — the schedule the
+/// plan lowers to (requested via [`SchedulePolicy`] on the system config).
+///
+/// * [`Self::LayerMajor`] — the historical lock-step zig-zag: every chunk
+///   computes layer `l` before any chunk enters layer `l + 1`, so each
+///   stage streams its layer weights ONCE per decode step and all chunks
+///   share the stream. Offloading-optimal, but chunks cross stages in
+///   lock-step and the token feedback opens a ≈`(pp−1)/pp` compute bubble.
+/// * [`Self::OneFOneB`] — chunk-major (1F1B/GPipe-style): chunks flow
+///   through stages independently — stage `s` starts chunk `c + 1` while
+///   stage `s + 1` runs chunk `c` — overlapping the feedback bubble at
+///   the price of re-streaming each stage's non-resident weights once per
+///   in-flight chunk (the duplicated per-stage weight stream).
+///
+/// At `pp = 1` the two schedules are the same physical execution (one
+/// stage has nothing to overlap and keeps the zig-zag weight share), so
+/// every lowering resolves to `LayerMajor` there — the schedule-
+/// equivalence tests pin that bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineSchedule {
+    /// Lock-step layer-major zig-zag (weights stream once per layer per
+    /// step; chunks cross stages together).
+    LayerMajor,
+    /// Chunk-major 1F1B: chunks pipeline through stages independently;
+    /// weight streams duplicate per in-flight chunk.
+    OneFOneB,
+}
+
+impl PipelineSchedule {
+    /// Stable lowercase name for reports and golden files.
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineSchedule::LayerMajor => "layer_major",
+            PipelineSchedule::OneFOneB => "one_f_one_b",
+        }
+    }
+}
 
 /// One pipeline stage of the lowered plan.
 #[derive(Debug, Clone, PartialEq)]
@@ -74,6 +112,10 @@ pub struct ExecutionPlan {
     /// Ring all-gathers per decoder layer within a stage's TP group (the
     /// post-attention and post-FFN collectives).
     pub collectives_per_layer: usize,
+    /// The resolved micro-batch schedule (requested [`SchedulePolicy`]
+    /// with `Auto` settled by probe simulation and `pp = 1` collapsed to
+    /// `LayerMajor`).
+    pub schedule: PipelineSchedule,
 }
 
 impl ExecutionPlan {
@@ -123,6 +165,76 @@ impl ExecutionPlan {
     /// Bytes of one inter-stage activation hop for `tokens` tokens.
     pub fn stage_transfer_bytes(&self, model: &ModelConfig, tokens: usize) -> usize {
         tokens * model.hidden * model.dtype.bytes()
+    }
+
+    /// Mini-batch chunks concurrently in flight under the schedule: 1 for
+    /// the lock-step layer-major order, up to `pp` for chunk-major (one
+    /// chunk per stage in the steady state).
+    pub fn inflight_chunks(&self) -> usize {
+        match self.schedule {
+            PipelineSchedule::LayerMajor => 1,
+            PipelineSchedule::OneFOneB => self.pp,
+        }
+    }
+
+    /// Nominal duplication of each stage's per-layer weight stream per
+    /// decode step: layer-major shares one stream across every chunk;
+    /// chunk-major re-streams per in-flight chunk. This is the factor
+    /// `AnalyticSampler::weight_load_time` scales the Eq. 9/11 window by.
+    pub fn weight_stream_passes(&self) -> usize {
+        self.inflight_chunks()
+    }
+
+    /// Analytic per-stage pipeline-bubble estimate of the schedule for a
+    /// decode wave of `chunks` mini-batch chunks — what the bubble-aware
+    /// Algorithm 1 feeds into the Eq. 11 `t_budget` window. Layer-major
+    /// pays the full `(pp−1)/pp` token-feedback wait; chunk-major amortizes
+    /// the fill/drain over the chunks in flight: `(pp−1)/(pp−1+chunks)`
+    /// (identical at one chunk, → 0 as chunks grow). Always 0 at `pp = 1`.
+    pub fn schedule_bubble(&self, chunks: usize) -> f64 {
+        if self.pp <= 1 {
+            return 0.0;
+        }
+        let pp = self.pp as f64;
+        match self.schedule {
+            PipelineSchedule::LayerMajor => (pp - 1.0) / pp,
+            PipelineSchedule::OneFOneB => {
+                let c = chunks.max(1) as f64;
+                (pp - 1.0) / (pp - 1.0 + c)
+            }
+        }
+    }
+}
+
+/// Pick the schedule for a `(model, topology)` pair by simulated
+/// throughput: both fixed lowerings run a probe workload (the golden
+/// B=64 / prompt 512 / 32-token shape — decode-heavy enough that the
+/// pick reflects the steady serving regime, not the prefill wave) under
+/// HybridServe's full policy and the faster one wins (ties keep the
+/// historical layer-major order). This is how [`PlanBuilder`] settles
+/// [`SchedulePolicy::Auto`] for consumers outside the simulator;
+/// `sim::simulate` re-evaluates the choice at the actual workload
+/// instead, so its auto pick is never worse than layer-major on the
+/// workload it reports.
+pub fn choose_schedule(model: &ModelConfig, sys: &SystemConfig) -> PipelineSchedule {
+    if sys.pp() == 1 {
+        return PipelineSchedule::LayerMajor;
+    }
+    let probe = crate::sim::Workload {
+        batch: 64,
+        prompt: 512,
+        gen: 32,
+    };
+    let system = crate::sim::System::HybridServe(crate::policy::PolicyConfig::full());
+    let throughput = |policy: SchedulePolicy| {
+        let mut fixed = sys.clone();
+        fixed.schedule = policy;
+        crate::sim::simulate(model, &fixed, system, probe).throughput
+    };
+    if throughput(SchedulePolicy::OneFOneB) > throughput(SchedulePolicy::LayerMajor) {
+        PipelineSchedule::OneFOneB
+    } else {
+        PipelineSchedule::LayerMajor
     }
 }
 
@@ -195,12 +307,25 @@ impl<'a> PlanBuilder<'a> {
                 stream_frac,
             });
         }
+        // Resolve the schedule axis: one stage always lowers layer-major
+        // (chunk-major has nothing to overlap and would only forfeit the
+        // zig-zag weight share); `Auto` is settled by probe simulation.
+        let schedule = if pp == 1 {
+            PipelineSchedule::LayerMajor
+        } else {
+            match self.sys.schedule {
+                SchedulePolicy::LayerMajor => PipelineSchedule::LayerMajor,
+                SchedulePolicy::OneFOneB => PipelineSchedule::OneFOneB,
+                SchedulePolicy::Auto => choose_schedule(self.model, self.sys),
+            }
+        };
         ExecutionPlan {
             tp,
             pp,
             num_layers: nl,
             stages,
             collectives_per_layer: 2,
+            schedule,
         }
     }
 }
@@ -341,6 +466,77 @@ mod tests {
         let mut sys = SystemConfig::paper_testbed();
         sys.shard = ShardSpec::pcie_p2p(4);
         let _ = ExecutionPlan::for_system(&m, &sys);
+    }
+
+    #[test]
+    fn schedule_resolves_layer_major_at_pp1_and_by_policy() {
+        let m = ModelConfig::opt_30b();
+        // pp = 1: every policy (including a forced OneFOneB) lowers to
+        // layer-major — there is only one schedule on one stage.
+        for policy in [
+            SchedulePolicy::LayerMajor,
+            SchedulePolicy::OneFOneB,
+            SchedulePolicy::Auto,
+        ] {
+            let mut sys = SystemConfig::paper_testbed_tp(2);
+            sys.schedule = policy;
+            let p = ExecutionPlan::for_system(&m, &sys);
+            assert_eq!(p.schedule, PipelineSchedule::LayerMajor, "{policy:?}");
+            assert_eq!(p.inflight_chunks(), 1);
+            assert_eq!(p.weight_stream_passes(), 1);
+            assert_eq!(p.schedule_bubble(7), 0.0);
+        }
+        // pp > 1: fixed policies resolve verbatim.
+        let sys = SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::OneFOneB);
+        let p = ExecutionPlan::for_system(&m, &sys);
+        assert_eq!(p.schedule, PipelineSchedule::OneFOneB);
+        assert_eq!(p.inflight_chunks(), 4);
+        assert_eq!(p.weight_stream_passes(), 4);
+        assert_eq!(PipelineSchedule::OneFOneB.name(), "one_f_one_b");
+    }
+
+    #[test]
+    fn schedule_bubble_shapes() {
+        let m = ModelConfig::opt_30b();
+        let lm = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_grid(2, 4));
+        // lock-step: the full (pp-1)/pp feedback wait, chunk-independent
+        assert_eq!(lm.schedule_bubble(1), 0.75);
+        assert_eq!(lm.schedule_bubble(64), 0.75);
+        let sys = SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::OneFOneB);
+        let ob = ExecutionPlan::for_system(&m, &sys);
+        // chunk-major: identical at one chunk, amortized as chunks grow
+        assert_eq!(ob.schedule_bubble(1), 0.75);
+        assert!(ob.schedule_bubble(4) < 0.5);
+        assert!(ob.schedule_bubble(64) < 0.05);
+        let mut prev = 1.0;
+        for c in 1..=32 {
+            let b = ob.schedule_bubble(c);
+            assert!((0.0..=1.0).contains(&b));
+            assert!(b <= prev, "bubble must shrink with chunks");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn auto_schedule_picks_by_regime() {
+        // OPT-30B at 2×4: per-stage slices fully resident (stream_frac 0)
+        // — chunk-major overlap is free, the probe must pick it. OPT-175B
+        // at 2×4: ~70% of every slice streams, duplicated streams drown
+        // the overlap — the probe must keep layer-major.
+        let resident = choose_schedule(
+            &ModelConfig::opt_30b(),
+            &SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::Auto),
+        );
+        assert_eq!(resident, PipelineSchedule::OneFOneB);
+        let streaming = choose_schedule(
+            &ModelConfig::opt_175b(),
+            &SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::Auto),
+        );
+        assert_eq!(streaming, PipelineSchedule::LayerMajor);
+        // and the PlanBuilder resolves Auto through the same probe
+        let sys = SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::Auto);
+        let p = ExecutionPlan::for_system(&ModelConfig::opt_30b(), &sys);
+        assert_eq!(p.schedule, PipelineSchedule::OneFOneB);
     }
 
     #[test]

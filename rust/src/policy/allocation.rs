@@ -7,8 +7,14 @@
 //! `S_ACT·#ACT + S_KV·#KV = M_remaining`, using the fitted linear costs
 //! (closed form — no search).
 
-use super::regression::CostModel;
+use super::regression::{CostModel, LinearCost};
 use crate::cache::BlockSizes;
+
+/// Cap on the bubble fraction fed into the cost scaling: a bubble of
+/// exactly 1 would make recomputation infinitely expensive and poison the
+/// closed forms with non-finite intermediates; clamping to 1 − 1e-9 keeps
+/// every expression finite while still driving the ACT share to zero.
+const MAX_BUBBLE: f64 = 1.0 - 1e-9;
 
 /// Inputs to Algorithm 1.
 #[derive(Debug, Clone, Copy)]
@@ -21,6 +27,34 @@ pub struct AllocationInputs {
     pub host_cache_bytes: usize,
     /// Block byte sizes (S_KV, S_ACT = ½·S_KV).
     pub sizes: BlockSizes,
+    /// Pipeline-bubble fraction of each decode step the GPU spends idle
+    /// in the token-feedback wait, in [0, 1] — the schedule's analytic
+    /// estimate ([`crate::plan::ExecutionPlan::schedule_bubble`]). The
+    /// bubble is DEAD time for recomputation (the next step's forward
+    /// cannot start, and in the modeled pipeline KV-Gen serializes behind
+    /// the feedback), so it scales the wall-clock cost of recomputing a
+    /// block by `1/(1−bubble)` and the Eq. 11 balance shifts toward KV.
+    /// 0 (the single-stage / pre-schedule-axis value) reproduces the
+    /// historical allocation bit-for-bit.
+    pub bubble: f64,
+}
+
+impl AllocationInputs {
+    /// The recomputation cost line as the bubble-degraded GPU sees it:
+    /// slope and intercept scaled by `1/(1−bubble)`. Exactly `kv_gen` at
+    /// bubble = 0 (multiplication by 1.0 is exact in f64).
+    fn effective_kv_gen(&self) -> LinearCost {
+        let b = self.bubble.clamp(0.0, 1.0);
+        if b == 0.0 {
+            return self.cost.kv_gen;
+        }
+        let c = 1.0 / (1.0 - b.min(MAX_BUBBLE));
+        LinearCost {
+            slope: self.cost.kv_gen.slope * c,
+            intercept: self.cost.kv_gen.intercept * c,
+            r_squared: self.cost.kv_gen.r_squared,
+        }
+    }
 }
 
 /// Output of Algorithm 1: the host block census.
@@ -57,12 +91,18 @@ impl HostAllocation {
 /// When that net slope is non-positive, feeding the GPU checkpoints is
 /// cheaper than any alternative at every count — the caller's budget
 /// clamp then decides (act-cache dominates).
+///
+/// Bubble-aware extension (DESIGN.md §Schedules): the recomputation line
+/// is [`AllocationInputs::effective_kv_gen`] — a pipeline bubble inflates
+/// the wall-clock cost of recomputation by `1/(1−bubble)`, shrinking the
+/// `t_budget` window and the ACT share with it. `bubble = 0` is the
+/// historical Algorithm 1, bit-for-bit.
 pub fn initial_cache_allocation(inp: &AllocationInputs) -> (usize, usize) {
-    let t_budget = inp.cost.load_w - inp.cost.kv_gen.eval(inp.act_gpu_blocks as f64);
+    let g = inp.effective_kv_gen();
+    let t_budget = inp.cost.load_w - g.eval(inp.act_gpu_blocks as f64);
     if t_budget >= 0.0 {
         // GPU would idle while weights stream: give it host ACT blocks to
         // chew on.
-        let g = inp.cost.kv_gen;
         let la = inp.cost.load_act;
         let net_slope = g.slope - la.slope;
         let act = if net_slope <= 0.0 {
@@ -92,10 +132,10 @@ pub fn alloc_remaining(inp: &AllocationInputs, act_init: usize, kv_init: usize) 
         return (0, 0);
     }
 
-    let g = inp.cost.kv_gen;
+    let g = inp.effective_kv_gen();
     let l = inp.cost.load_kv;
     let la = inp.cost.load_act;
-    // Balance with the ACT-load extension:
+    // Balance with the ACT-load extension (g is the bubble-scaled line):
     //   g_s·a + g_i = l_s·k + l_i + la_s·a + la_i
     //   s_ACT·a + s_KV·k = M_remaining
     let net = g.slope - la.slope;
@@ -186,6 +226,7 @@ mod tests {
             act_gpu_blocks: 0,
             host_cache_bytes: host_gb << 30,
             sizes: BlockSizes::new(model, sys.block_tokens),
+            bubble: 0.0,
         }
     }
 
@@ -290,6 +331,7 @@ mod tests {
                 act_gpu_blocks: rng.range(0, 100_000),
                 host_cache_bytes: rng.range(1 << 28, 400usize << 30),
                 sizes: BlockSizes::new(&m, sys.block_tokens),
+                bubble: 0.0,
             };
             for alloc in [
                 hybrid_cache_allocation(&inp),
@@ -298,6 +340,66 @@ mod tests {
                 kv_only_allocation(&inp),
             ] {
                 assert!(alloc.total_bytes(&inp.sizes) <= inp.host_cache_bytes);
+            }
+        });
+    }
+
+    // ---- bubble-aware Algorithm 1 (ISSUE 4) ---------------------------
+
+    fn act_fraction(alloc: &HostAllocation) -> f64 {
+        alloc.act_blocks as f64 / (alloc.act_blocks + alloc.kv_blocks).max(1) as f64
+    }
+
+    #[test]
+    fn bubble_shrinks_the_act_share_to_zero() {
+        let m = ModelConfig::opt_30b();
+        let base = inputs(&m, 200);
+        let at = |bubble: f64| {
+            act_fraction(&hybrid_cache_allocation(&AllocationInputs { bubble, ..base }))
+        };
+        // deeper feedback wait -> recompute pays less -> mix moves to KV
+        assert!(at(0.5) < at(0.0), "{} !< {}", at(0.5), at(0.0));
+        assert!(at(0.75) < at(0.5));
+        // a fully idle GPU recomputes nothing
+        assert_eq!(at(1.0), 0.0);
+        // out-of-range inputs clamp instead of poisoning the closed form
+        assert_eq!(at(7.5), 0.0);
+        assert_eq!(at(-3.0), at(0.0));
+    }
+
+    #[test]
+    fn property_act_fraction_monotone_in_bubble() {
+        // The ISSUE-4 property: Algorithm 1's ACT fraction is monotone
+        // non-increasing in the injected bubble fraction, stays inside
+        // the byte budget, and reduces EXACTLY to today's answer at
+        // bubble = 0 (the pp = 1 regime).
+        crate::util::prop::check("alloc-bubble-monotone", 60, |rng| {
+            let m = rng.choose(&ModelConfig::paper_family()).clone();
+            let sys = SystemConfig::paper_testbed();
+            let base = AllocationInputs {
+                cost: CostModel::analytic(&m, &sys),
+                act_gpu_blocks: rng.range(0, 100_000),
+                host_cache_bytes: rng.range(1 << 28, 400usize << 30),
+                sizes: BlockSizes::new(&m, sys.block_tokens),
+                bubble: 0.0,
+            };
+            let zero = hybrid_cache_allocation(&base);
+            let explicit = hybrid_cache_allocation(&AllocationInputs { bubble: 0.0, ..base });
+            assert_eq!(zero, explicit, "bubble = 0 must be today's answer exactly");
+            let mut prev = f64::INFINITY;
+            for i in 0..=20 {
+                let bubble = i as f64 / 20.0;
+                let alloc = hybrid_cache_allocation(&AllocationInputs { bubble, ..base });
+                assert!(
+                    alloc.total_bytes(&base.sizes) <= base.host_cache_bytes,
+                    "oversubscribed at bubble {bubble}"
+                );
+                let f = act_fraction(&alloc);
+                assert!(
+                    f <= prev + 1e-12,
+                    "ACT fraction grew at bubble {bubble}: {prev} -> {f}"
+                );
+                prev = f;
             }
         });
     }

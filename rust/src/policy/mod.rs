@@ -91,6 +91,7 @@ mod tests {
             act_gpu_blocks: 0,
             host_cache_bytes: 200usize << 30,
             sizes: BlockSizes::new(&m, sys.block_tokens),
+            bubble: 0.0,
         };
         let full = PolicyConfig::full().allocate(&inp);
         let act = PolicyConfig::act_only().allocate(&inp);
@@ -119,6 +120,7 @@ mod tests {
                 act_gpu_blocks: 0,
                 host_cache_bytes: 200usize << 30,
                 sizes: BlockSizes::new(&m, sys.block_tokens),
+                bubble: 0.0,
             };
             let alloc = hybrid_cache_allocation(&inp);
             let share = alloc.act_blocks as f64

@@ -9,6 +9,7 @@
 //! sampler is linear by construction and the PJRT sampler lands ≥0.95.
 
 use crate::config::{ModelConfig, SystemConfig};
+use crate::plan::ExecutionPlan;
 use crate::util::stats::linear_fit;
 
 /// A fitted linear cost `T(n) = slope * n + intercept` over block counts.
@@ -85,9 +86,30 @@ pub trait CostSampler {
 pub struct AnalyticSampler<'a> {
     pub model: &'a ModelConfig,
     pub sys: &'a SystemConfig,
+    /// The lowered execution plan the weight-window sizing reads —
+    /// resolved ONCE at construction, so a `SchedulePolicy::Auto` config
+    /// runs its probe exactly once and the fitted `load_w` can never
+    /// disagree with the schedule the caller's plan executes.
+    plan: ExecutionPlan,
 }
 
 impl<'a> AnalyticSampler<'a> {
+    /// Build a sampler, lowering the plan from `sys` (an `Auto` schedule
+    /// resolves here, not inside every sample call).
+    pub fn new(model: &'a ModelConfig, sys: &'a SystemConfig) -> Self {
+        Self {
+            plan: ExecutionPlan::for_system(model, sys),
+            model,
+            sys,
+        }
+    }
+
+    /// Build over an already-lowered plan (e.g. the one `SimCost` holds),
+    /// skipping the redundant lowering entirely.
+    pub fn for_plan(model: &'a ModelConfig, sys: &'a SystemConfig, plan: ExecutionPlan) -> Self {
+        Self { model, sys, plan }
+    }
+
     fn tokens(&self, blocks: usize) -> usize {
         blocks * self.sys.block_tokens
     }
@@ -123,13 +145,19 @@ impl<'a> CostSampler for AnalyticSampler<'a> {
         // only the spill of a device's weight slice streams per layer.
         // Sized at the plan's most-loaded stage — the stage that paces
         // the weight pipeline (at pp = 1: the whole model, exactly the
-        // historical expression).
-        let plan = crate::plan::ExecutionPlan::for_system(self.model, self.sys);
+        // historical expression). Under the chunk-major schedule the
+        // stream is DUPLICATED once per in-flight chunk per step
+        // (`ExecutionPlan::weight_stream_passes`), so the per-layer
+        // weight window Algorithm 1 balances recomputation against grows
+        // by that factor — the duplicated traffic re-opens the window the
+        // pipeline bubble closed. Layer-major / pp = 1: one pass, the
+        // historical value bit-for-bit.
+        let plan = &self.plan;
         let resident = self.sys.gpu_weight_budget() as f64;
         let total = plan.max_stage_weight_bytes() as f64 / self.tp();
         let stream_fraction = ((total - resident) / total).clamp(0.0, 1.0);
         let layer_bytes = self.model.layer_weight_bytes() as f64 / self.tp() * stream_fraction;
-        self.sys.interconnect.h2d_time(layer_bytes as usize)
+        plan.weight_stream_passes() as f64 * self.sys.interconnect.h2d_time(layer_bytes as usize)
     }
 }
 
@@ -171,7 +199,19 @@ impl CostModel {
 
     /// Convenience: analytic fit for a model/system pair.
     pub fn analytic(model: &ModelConfig, sys: &SystemConfig) -> Self {
-        let mut s = AnalyticSampler { model, sys };
+        let mut s = AnalyticSampler::new(model, sys);
+        Self::fit_from(&mut s, &SAMPLE_POINTS)
+    }
+
+    /// Analytic fit reusing an already-lowered plan (the fit's weight
+    /// window then provably matches the plan's resolved schedule, and an
+    /// `Auto` config is not re-probed).
+    pub fn analytic_for_plan(
+        model: &ModelConfig,
+        sys: &SystemConfig,
+        plan: &ExecutionPlan,
+    ) -> Self {
+        let mut s = AnalyticSampler::for_plan(model, sys, plan.clone());
         Self::fit_from(&mut s, &SAMPLE_POINTS)
     }
 
@@ -252,6 +292,31 @@ mod tests {
         // per-layer slopes are stage-agnostic: only the window moves
         assert_eq!(cm4.kv_gen.slope, cm1.kv_gen.slope);
         assert_eq!(cm4.load_kv.slope, cm1.load_kv.slope);
+    }
+
+    #[test]
+    fn chunk_major_duplicates_the_weight_window() {
+        // Under OneFOneB each stage re-streams its non-resident layer
+        // weights once per in-flight chunk, so the sampled per-layer
+        // weight window is exactly `pp` layer-major windows; the per-block
+        // slopes (link and GPU physics) are schedule-independent.
+        use crate::config::SchedulePolicy;
+        let m = ModelConfig::opt_175b();
+        let lm = CostModel::analytic(&m, &SystemConfig::paper_testbed_grid(2, 4));
+        let ob = CostModel::analytic(
+            &m,
+            &SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::OneFOneB),
+        );
+        assert_eq!(ob.load_w, 4.0 * lm.load_w);
+        assert_eq!(ob.kv_gen.slope, lm.kv_gen.slope);
+        assert_eq!(ob.load_kv.slope, lm.load_kv.slope);
+        // pp = 1: the forced chunk-major policy resolves to layer-major
+        // and the window is untouched.
+        let flat = CostModel::analytic(
+            &m,
+            &SystemConfig::paper_testbed_tp(2).with_schedule(SchedulePolicy::OneFOneB),
+        );
+        assert_eq!(flat.load_w, CostModel::analytic(&m, &SystemConfig::paper_testbed_tp(2)).load_w);
     }
 
     #[test]

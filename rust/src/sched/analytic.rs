@@ -58,11 +58,13 @@ pub struct AnalyticEngine {
     tl: Timeline,
     states: HashMap<u64, ReqState>,
     order: Vec<u64>,
-    /// Time the previous pass's tokens left the last stage — the pipeline
-    /// feedback the next decode round's first stage must wait for (same
-    /// dependency the simulator models; redundant at pp = 1, where lane
-    /// serialization already enforces it).
-    last_exit: f64,
+    /// Per-chunk times the previous pass's tokens left the last stage —
+    /// the pipeline feedback each chunk of the next decode round must
+    /// wait for (same dependency the simulator models; redundant at
+    /// pp = 1, where lane serialization already enforces it). One entry
+    /// under the layer-major schedule; up to `pp` under chunk-major,
+    /// which is what lets consecutive rounds' chunks interleave.
+    last_exit: Vec<f64>,
 }
 
 impl AnalyticEngine {
@@ -73,13 +75,22 @@ impl AnalyticEngine {
     pub fn new(model: &ModelConfig, sys: &SystemConfig, host_cache_bytes: usize) -> Self {
         let cost = SimCost::new(model, sys);
         let plan = cost.plan.clone();
-        let cm = CostModel::analytic(model, sys);
+        // Fit the cost model against the plan already lowered above: a
+        // `SchedulePolicy::Auto` config resolves its probe exactly once,
+        // and the fitted weight window always matches the schedule this
+        // engine executes.
+        let cm = CostModel::analytic_for_plan(model, sys, &plan);
         let sizes = BlockSizes::new(model, sys.block_tokens);
+        // Bubble-aware Algorithm 1: the allocator sees the analytic
+        // bubble the plan's schedule leaves at its steady-state chunk
+        // count (0 at pp = 1 — the historical allocation, bit-for-bit).
+        let bubble = plan.schedule_bubble(plan.inflight_chunks());
         let alloc = crate::policy::hybrid_cache_allocation(&AllocationInputs {
             cost: cm,
             act_gpu_blocks: cost.gpu_act_block_capacity(),
             host_cache_bytes,
             sizes,
+            bubble,
         });
         let ratio = BlockRatio::new(alloc.act_blocks.max(1), alloc.kv_blocks);
         let tl = Timeline::for_plan(&plan);
@@ -94,8 +105,13 @@ impl AnalyticEngine {
             tl,
             states: HashMap::new(),
             order: Vec::new(),
-            last_exit: 0.0,
+            last_exit: vec![0.0],
         }
+    }
+
+    /// The pipeline schedule the engine's plan resolved to.
+    pub fn schedule(&self) -> crate::plan::PipelineSchedule {
+        self.plan.schedule
     }
 
     /// The ACT:KV designation ratio Algorithm 1 chose.
@@ -129,59 +145,94 @@ impl AnalyticEngine {
         Ok(())
     }
 
-    /// Schedule one pipeline pass over every stage: per-device PCIe span
-    /// (weight stream + cache loads), per-device GPU span gated on its
-    /// own loads plus the previous stage's handoff, the stage's
-    /// all-gather barrier, and the inter-stage hop. `entry_ready` gates
-    /// the first stage (the previous round's last-stage exit for decode;
-    /// 0 for a fresh prefill wave). Returns — and records in
-    /// `last_exit` — the time the pass left the last stage.
+    /// Chunks a pass of `n` requests splits into under the plan's
+    /// schedule: one under layer-major, up to `pp` (never more than `n`)
+    /// under chunk-major.
+    fn pass_chunks(&self, n: usize) -> usize {
+        self.plan.inflight_chunks().min(n.max(1))
+    }
+
+    /// Schedule one pipeline pass over every stage, split into the
+    /// schedule's micro-batch chunks. Per chunk, per stage: a per-device
+    /// PCIe span (the weight stream — re-issued PER CHUNK, the duplicated
+    /// stream chunk-major trades for overlap — plus the chunk's share of
+    /// the cache loads), a per-device GPU span gated on its own loads,
+    /// the previous stage's handoff and the chunk's `entries` gate (the
+    /// previous round's per-chunk last-stage exit for decode; 0 for a
+    /// fresh prefill wave), the stage's all-gather barrier, and the
+    /// inter-stage hop. Under layer-major this is exactly one chunk —
+    /// the historical pass. Chunk `c + 1` occupies stage `s` while chunk
+    /// `c` runs on stage `s + 1`'s lanes, which is where the 1F1B
+    /// overlap comes from. Records — and returns the max of — the
+    /// per-chunk last-stage exits in `last_exit`.
     fn schedule_pass(
         &mut self,
         gpu_secs_base: f64,
-        pcie_secs_base: f64,
+        weight_pcie_base: f64,
+        cache_pcie_base: f64,
         hop_tokens: usize,
-        entry_ready: f64,
+        entries: &[f64],
     ) -> f64 {
+        let chunks = entries.len();
+        let frac = 1.0 / chunks as f64;
+        let chunk_hop = hop_tokens.div_ceil(chunks);
         let topo = &self.sys.topology;
         let last = self.plan.stages.len() - 1;
-        let mut handoff = entry_ready;
-        for stage in &self.plan.stages {
-            let layers = stage.layer_count() as f64;
-            let mut stage_end = 0.0f64;
-            for d in stage.devices.clone() {
-                let slot = topo.slot(d);
-                // Heterogeneity: scale the reference-spec durations by
-                // this device's deficit vs the reference GPU/link.
-                let gpu_scale = self.sys.gpu.peak_flops / slot.gpu.peak_flops;
-                let link_scale = self.sys.interconnect.h2d_bw / slot.link.h2d_bw;
-                let t_pcie = layers * pcie_secs_base * link_scale;
-                let t_gpu = layers * gpu_secs_base * gpu_scale;
-                let load = self.tl.schedule_on(d, Lane::PCIe, 0.0, t_pcie);
-                let span = self.tl.schedule_on(d, Lane::Gpu, load.end.max(handoff), t_gpu);
-                stage_end = stage_end.max(span.end);
-            }
-            if self.plan.tp > 1 {
-                let payload = self.plan.stage_transfer_bytes(&self.model, hop_tokens);
-                let t_ag =
-                    layers * self.plan.collectives_per_layer as f64
+        let mut exits = Vec::with_capacity(chunks);
+        for &entry in entries {
+            let mut handoff = entry;
+            for stage in &self.plan.stages {
+                let layers = stage.layer_count() as f64;
+                let mut stage_end = 0.0f64;
+                for d in stage.devices.clone() {
+                    let slot = topo.slot(d);
+                    // Heterogeneity: scale the reference-spec durations by
+                    // this device's deficit vs the reference GPU/link.
+                    let gpu_scale = self.sys.gpu.peak_flops / slot.gpu.peak_flops;
+                    let link_scale = self.sys.interconnect.h2d_bw / slot.link.h2d_bw;
+                    let t_pcie =
+                        layers * (weight_pcie_base + cache_pcie_base * frac) * link_scale;
+                    let t_gpu = layers * gpu_secs_base * frac * gpu_scale;
+                    let load = self.tl.schedule_on(d, Lane::PCIe, 0.0, t_pcie);
+                    let span = self.tl.schedule_on(d, Lane::Gpu, load.end.max(handoff), t_gpu);
+                    stage_end = stage_end.max(span.end);
+                }
+                if self.plan.tp > 1 {
+                    let payload = self.plan.stage_transfer_bytes(&self.model, chunk_hop);
+                    let t_ag = layers
+                        * self.plan.collectives_per_layer as f64
                         * topo.allgather_time(stage.stage, payload);
-                stage_end = self
-                    .tl
-                    .barrier_group(stage.devices.clone(), 0.0, t_ag)
-                    .end;
+                    stage_end = self
+                        .tl
+                        .barrier_group(stage.devices.clone(), 0.0, t_ag)
+                        .end;
+                }
+                // Activation hop to the next stage; the chunk's result
+                // leaves the last stage with no further hop.
+                handoff = if stage.stage < last {
+                    stage_end
+                        + topo.stage_hop_time(
+                            self.plan.stage_transfer_bytes(&self.model, chunk_hop),
+                        )
+                } else {
+                    stage_end
+                };
             }
-            // Activation hop to the next stage; the pass's result leaves
-            // the last stage with no further hop.
-            handoff = if stage.stage < last {
-                stage_end
-                    + topo.stage_hop_time(self.plan.stage_transfer_bytes(&self.model, hop_tokens))
-            } else {
-                stage_end
-            };
+            exits.push(handoff);
         }
-        self.last_exit = handoff;
-        handoff
+        let end = exits.iter().cloned().fold(0.0f64, f64::max);
+        self.last_exit = exits;
+        end
+    }
+
+    /// Per-chunk feedback gates for the next pass: chunk `c` waits for
+    /// the previous pass's chunk `c` exit (chunks beyond the previous
+    /// pass's count wait for its last exit).
+    fn feedback_entries(&self, chunks: usize) -> Vec<f64> {
+        let fallback = self.last_exit.last().copied().unwrap_or(0.0);
+        (0..chunks)
+            .map(|c| self.last_exit.get(c).copied().unwrap_or(fallback))
+            .collect()
     }
 }
 
@@ -267,10 +318,11 @@ impl StepEngine for AnalyticEngine {
                 }
             }
             let gpu_base = self.cost.layer_prefill_time(batch, max_prompt);
-            let pcie_base = self.cost.weight_stream_time();
+            let w_base = self.cost.weight_stream_time();
             // A fresh prompt depends on no earlier tokens: no feedback
             // gate (lane serialization still orders it after prior work).
-            let end = self.schedule_pass(gpu_base, pcie_base, batch * max_prompt, 0.0);
+            let entries = vec![0.0; self.pass_chunks(batch)];
+            let end = self.schedule_pass(gpu_base, w_base, 0.0, batch * max_prompt, &entries);
             for &id in &wave {
                 let st = self.states.get_mut(&id).unwrap();
                 st.prefilled = true;
@@ -312,14 +364,15 @@ impl StepEngine for AnalyticEngine {
             let mean_ctx = ctx_sum / n;
             let gpu_base = self.cost.kv_gen_time(act_blocks * bt)
                 + self.cost.layer_forward_time(n, 1, mean_ctx);
-            let pcie_base = self.cost.weight_stream_time()
-                + self.cost.kv_load_time(kv_blocks * bt)
+            let w_base = self.cost.weight_stream_time();
+            let cache_base = self.cost.kv_load_time(kv_blocks * bt)
                 + self.cost.act_load_time(act_blocks * bt);
-            // Decode consumes the tokens the previous pass produced: the
-            // first stage waits for the last stage's prior exit — the
-            // pipeline feedback that creates bubbles at pp > 1.
-            let entry = self.last_exit;
-            let end = self.schedule_pass(gpu_base, pcie_base, n, entry);
+            // Decode consumes the tokens the previous pass produced: each
+            // chunk waits for its own prior last-stage exit — the
+            // pipeline feedback that creates bubbles at pp > 1 (and that
+            // the chunk-major schedule overlaps across chunks).
+            let entries = self.feedback_entries(self.pass_chunks(n));
+            let end = self.schedule_pass(gpu_base, w_base, cache_base, n, &entries);
             for &id in &runnable {
                 {
                     let st = self.states.get_mut(&id).unwrap();
@@ -508,6 +561,47 @@ mod tests {
         for &b in &r.stage_bubble {
             assert!(b > 0.3, "pipeline feedback lost: stage bubble only {b}");
         }
+    }
+
+    #[test]
+    fn chunk_major_rounds_overlap_the_feedback() {
+        // The engine-side 1F1B payoff, on the same rig as
+        // `decode_rounds_respect_pipeline_feedback`: opt-6.7b on 1×2 has
+        // fully resident stage slices (no weight stream to duplicate), so
+        // splitting each round into chunks lets stage 0 run chunk c+1
+        // while stage 1 runs chunk c — the feedback bubble shrinks and
+        // the same trace finishes sooner than under lock-step.
+        use crate::config::SchedulePolicy;
+        use crate::metrics::SloReport;
+        let m = ModelConfig::opt_6_7b();
+        let run = |policy: SchedulePolicy| -> SloReport {
+            let sys = SystemConfig::paper_testbed_grid(1, 2).with_schedule(policy);
+            let sizes = BlockSizes::new(&m, sys.block_tokens);
+            let eng = AnalyticEngine::new(&m, &sys, 4096 * sizes.kv_bytes);
+            let mut s = Scheduler::new(eng, SchedConfig::default());
+            for i in 0..4u64 {
+                s.submit(Request::new(i + 1, vec![7; 64], 16), 0.0).unwrap();
+            }
+            let done = s.run_to_completion().unwrap();
+            assert_eq!(done.len(), 4);
+            s.report()
+        };
+        let lm = run(SchedulePolicy::LayerMajor);
+        let ob = run(SchedulePolicy::OneFOneB);
+        assert_eq!(lm.pipeline_schedule, "layer_major");
+        assert_eq!(ob.pipeline_schedule, "one_f_one_b");
+        assert!(
+            ob.mean_stage_bubble() < lm.mean_stage_bubble(),
+            "1F1B bubble {} !< lock-step bubble {}",
+            ob.mean_stage_bubble(),
+            lm.mean_stage_bubble()
+        );
+        assert!(
+            ob.makespan_secs < lm.makespan_secs,
+            "1F1B {} !< lock-step {}",
+            ob.makespan_secs,
+            lm.makespan_secs
+        );
     }
 
     #[test]

@@ -367,11 +367,22 @@ impl<E: StepEngine> Scheduler<E> {
             if !self.ledger.fits(need) {
                 let freed_enough = self.cfg.preemption && self.preempt_until(need)?;
                 if !freed_enough {
+                    // An idle, fully drained ledger that still rejects the
+                    // request can never admit it. The request may pass the
+                    // engine's raw-pool validate and still land here: the
+                    // per-device stripe rounds up, and a chunk-major plan
+                    // pre-commits pinned staging for its duplicated weight
+                    // streams — say so instead of pretending need > pool.
                     anyhow::ensure!(
                         !(self.running.is_empty()
                             && self.preempted.is_empty()
                             && self.reserved_total == 0),
-                        "request {id} needs {need} B of host cache but the pool only has {capacity} B total",
+                        "request {id} needs {need} B of host cache but can never fit the \
+                         reservation ledger ({} B pool; per-device stripe capacity {} B, \
+                         schedule staging carve-out {} B)",
+                        capacity,
+                        self.ledger.capacity_per_shard(),
+                        self.ledger.schedule_overhead(),
                     );
                     break;
                 }
@@ -568,6 +579,9 @@ impl<E: StepEngine> Scheduler<E> {
                 .unwrap_or_else(|| util.gpu.len().max(1));
             report.stage_bubble = util.stage_bubbles(tp);
             report.shard_util = util;
+        }
+        if let Some(plan) = self.eng.execution_plan() {
+            report.pipeline_schedule = plan.schedule.name();
         }
         report
     }

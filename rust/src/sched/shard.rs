@@ -31,6 +31,12 @@ pub struct ShardLedger {
     /// Stripe ratio denominator (`num_layers · tp`; the device count for
     /// the flat constructor).
     stripe_den: usize,
+    /// Per-device pinned-staging carve-out for the schedule's duplicated
+    /// weight streams (0 under layer-major / pp = 1 / fully resident
+    /// stages): chunk-major keeps one extra in-flight per-layer weight
+    /// stream per additional chunk, each needing a pinned host staging
+    /// buffer out of the same pool the cache reservations draw on.
+    schedule_overhead: usize,
 }
 
 impl ShardLedger {
@@ -42,23 +48,52 @@ impl ShardLedger {
     /// capacity not divisible by the shard count.
     pub fn new(total_capacity: usize, shards: usize) -> Self {
         assert!(shards >= 1, "need at least one shard");
-        Self::with_stripe(total_capacity, shards, 1, shards)
+        Self::with_stripe(total_capacity, shards, 1, shards, 0)
     }
 
     /// Ledger lowered from an execution plan: one pool per grid device,
-    /// stripes sized at the plan's most-loaded stage. At `pp = 1` this is
-    /// exactly [`Self::new`]`(total_capacity, tp)` (the stripe ratio
-    /// reduces), and at `tp = pp = 1` the historical global check.
+    /// stripes sized at the plan's most-loaded stage, plus the schedule's
+    /// duplicated-stream staging carve-out (chunk-major pins
+    /// `inflight_chunks − 1` extra per-layer weight-stream buffers per
+    /// device, sized at the most-loaded stage's streamed layer slice).
+    /// At `pp = 1` this is exactly [`Self::new`]`(total_capacity, tp)`
+    /// (the stripe ratio reduces and the overhead vanishes), and at
+    /// `tp = pp = 1` the historical global check. Under layer-major the
+    /// overhead is always 0 — value-identical to the pre-schedule ledger.
+    ///
+    /// The carve-out can make a request that fits the raw pool fail
+    /// `fits` even on an empty ledger (forced chunk-major on a heavily
+    /// streaming plan with a tiny pool); the scheduler surfaces that as a
+    /// clean admission error rather than waiting forever.
     pub fn for_plan(plan: &crate::plan::ExecutionPlan, total_capacity: usize) -> Self {
+        // Most-loaded stage's per-device streamed bytes of ONE layer —
+        // the staging unit a duplicated stream pins.
+        let layer_stream = plan
+            .stages
+            .iter()
+            .map(|s| {
+                ((s.weight_bytes as f64 / s.layer_count() as f64 / plan.tp as f64)
+                    * s.stream_frac) as usize
+            })
+            .max()
+            .unwrap_or(0);
+        let overhead = (plan.inflight_chunks() - 1) * layer_stream;
         Self::with_stripe(
             total_capacity,
             plan.device_count(),
             plan.max_stage_layer_count(),
             plan.num_layers * plan.tp,
+            overhead,
         )
     }
 
-    fn with_stripe(total_capacity: usize, shards: usize, num: usize, den: usize) -> Self {
+    fn with_stripe(
+        total_capacity: usize,
+        shards: usize,
+        num: usize,
+        den: usize,
+        schedule_overhead: usize,
+    ) -> Self {
         assert!(shards >= 1, "need at least one shard");
         assert!(num >= 1 && den >= 1, "degenerate stripe ratio");
         let mut l = Self {
@@ -66,10 +101,11 @@ impl ShardLedger {
             reserved: vec![0; shards],
             stripe_num: num,
             stripe_den: den,
+            schedule_overhead,
         };
         // Capacity is the binding stripe of the whole pool: reservations
         // and capacity round identically, preserving the fits(total_
-        // capacity)-on-empty invariant.
+        // capacity)-on-empty invariant (modulo the schedule carve-out).
         l.cap_per_shard = l.per_shard(total_capacity);
         l
     }
@@ -92,10 +128,19 @@ impl ShardLedger {
         (total * self.stripe_num) / self.stripe_den
     }
 
-    /// Would a `total`-byte reservation fit on every device right now?
+    /// Per-device pinned-staging bytes pre-committed to the schedule's
+    /// duplicated weight streams (0 for layer-major plans).
+    pub fn schedule_overhead(&self) -> usize {
+        self.schedule_overhead
+    }
+
+    /// Would a `total`-byte reservation fit on every device right now,
+    /// on top of the schedule's staging carve-out?
     pub fn fits(&self, total: usize) -> bool {
         let need = self.per_shard(total);
-        self.reserved.iter().all(|&r| r + need <= self.cap_per_shard)
+        self.reserved
+            .iter()
+            .all(|&r| r + need + self.schedule_overhead <= self.cap_per_shard)
     }
 
     /// Book a `total`-byte reservation on every device; returns the
@@ -223,6 +268,65 @@ mod tests {
         // discount floors while reservations ceil
         assert_eq!(l.per_shard(999), 500);
         assert_eq!(l.discount(999), 499);
+    }
+
+    #[test]
+    fn chunk_major_ledger_carves_duplicated_stream_staging() {
+        use crate::config::SchedulePolicy;
+        let cap = 8usize << 30;
+        // Fully resident stages (OPT-30B 2×4, stream_frac = 0): chunk-major
+        // duplicates nothing, the ledger is value-identical to layer-major.
+        let m = ModelConfig::opt_30b();
+        let lm = ShardLedger::for_plan(
+            &ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_grid(2, 4)),
+            cap,
+        );
+        let ob_resident = ShardLedger::for_plan(
+            &ExecutionPlan::for_system(
+                &m,
+                &SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::OneFOneB),
+            ),
+            cap,
+        );
+        assert_eq!(lm.schedule_overhead(), 0);
+        assert_eq!(ob_resident.schedule_overhead(), 0);
+        assert!(lm.fits(cap) && ob_resident.fits(cap));
+        // Streaming stages (OPT-175B 2×4, ~70% of each slice streams):
+        // chunk-major pins (pp − 1) extra per-layer stream buffers per
+        // device, so a pool-filling request no longer fits the empty
+        // ledger — the carve-out is real capacity.
+        let m175 = ModelConfig::opt_175b();
+        let ob_streaming = ShardLedger::for_plan(
+            &ExecutionPlan::for_system(
+                &m175,
+                &SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::OneFOneB),
+            ),
+            cap,
+        );
+        let overhead = ob_streaming.schedule_overhead();
+        assert!(overhead > 0, "streaming plan must pin staging");
+        // 3 extra streams of a ~1.3 GB streamed layer slice: order GBs
+        assert!(overhead > 1 << 30, "overhead {overhead}");
+        assert!(!ob_streaming.fits(cap));
+        // and the layer-major ledger on the same plan shape is untouched
+        let lm175 = ShardLedger::for_plan(
+            &ExecutionPlan::for_system(&m175, &SystemConfig::paper_testbed_grid(2, 4)),
+            cap,
+        );
+        assert_eq!(lm175.schedule_overhead(), 0);
+        assert!(lm175.fits(cap));
+        // dynamic reservations still book and drain on top of the base
+        // (the resident ledger has room; the streaming one may reject —
+        // `fits` is the gate either way and the books stay consistent)
+        for ledger in [&ob_resident, &ob_streaming] {
+            let mut l = ledger.clone();
+            let want_total = cap / 4;
+            if l.fits(want_total) {
+                let booked = l.reserve(want_total);
+                l.release(booked);
+            }
+            assert_eq!(l.reserved_per_shard(), 0);
+        }
     }
 
     #[test]

@@ -337,6 +337,30 @@ mod tests {
     }
 
     #[test]
+    fn schedule_does_not_change_stage_arithmetic() {
+        // The schedule axis changes WHEN weights stream (once per step vs
+        // once per chunk), never the per-stage residency arithmetic: the
+        // duplication is priced by the plan (`weight_stream_passes`) and
+        // the event loop, not by skewing slice sizes.
+        use crate::config::SchedulePolicy;
+        let m = ModelConfig::opt_30b();
+        let lm = SimCost::new(&m, &SystemConfig::paper_testbed_grid(2, 4));
+        let ob = SimCost::new(
+            &m,
+            &SystemConfig::paper_testbed_grid(2, 4).with_schedule(SchedulePolicy::OneFOneB),
+        );
+        assert_eq!(lm.plan.schedule, crate::plan::PipelineSchedule::LayerMajor);
+        assert_eq!(ob.plan.schedule, crate::plan::PipelineSchedule::OneFOneB);
+        for s in 0..4 {
+            assert_eq!(lm.stage_stream_frac(s), ob.stage_stream_frac(s));
+        }
+        assert_eq!(lm.gpu_act_block_capacity(), ob.gpu_act_block_capacity());
+        assert_eq!(lm.shard_layer_weight_bytes(), ob.shard_layer_weight_bytes());
+        assert_eq!(lm.plan.weight_stream_passes(), 1);
+        assert_eq!(ob.plan.weight_stream_passes(), 4);
+    }
+
+    #[test]
     fn with_variants_respond_to_device_specs() {
         let c = cost();
         let mut slow = c.sys.gpu.clone();

@@ -1,0 +1,181 @@
+//! Schedule-equivalence suite (ISSUE 4): pins the relationship between
+//! the two pipeline lowerings.
+//!
+//!  1. exact half — at `pp = 1` (any tp) a forced `OneFOneB` policy IS
+//!     the layer-major execution, bit-for-bit (exact f64 equality for
+//!     every `System` variant and every `SimResult` field, same style as
+//!     `tp1_equivalence.rs`): one stage has nothing to overlap, so the
+//!     lowering collapses and no separate code path can drift;
+//!  2. property half — a seeded 100-case sweep over random grids and
+//!     workloads: the chunk-major-capable planner (`SchedulePolicy::Auto`,
+//!     which evaluates both lowerings at the actual workload) never loses
+//!     to layer-major; `stage_bubble` stays in [0, 1] under every
+//!     schedule; and switching to `OneFOneB` does not grow the bubble —
+//!     exactly (≤ +1e-9) where the stage slices are fully resident and a
+//!     recompute pipeline exists, and within +0.05 wherever the auto
+//!     planner actually picks chunk-major.
+
+use hybridserve::config::{SchedulePolicy, SystemConfig};
+use hybridserve::pcie::TrafficClass;
+use hybridserve::plan::{ExecutionPlan, PipelineSchedule};
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, SimResult, System, Workload};
+use hybridserve::ModelConfig;
+
+/// The four systems the paper's §5 compares throughout.
+fn four_systems() -> [System; 4] {
+    [
+        System::HybridServe(PolicyConfig::full()),
+        System::FlexGen,
+        System::DeepSpeedInference,
+        System::ActOnly,
+    ]
+}
+
+/// Exact f64/u64 equality of every reported field.
+fn assert_results_identical(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.throughput, b.throughput, "{tag}: throughput");
+    assert_eq!(a.gen_throughput, b.gen_throughput, "{tag}: gen_throughput");
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.prefill_secs, b.prefill_secs, "{tag}: prefill");
+    assert_eq!(a.gpu_utilization, b.gpu_utilization, "{tag}: gpu util");
+    assert_eq!(a.pcie_utilization, b.pcie_utilization, "{tag}: pcie util");
+    assert_eq!(a.act_block_share, b.act_block_share, "{tag}: act share");
+    assert_eq!(a.minibatch, b.minibatch, "{tag}: minibatch");
+    assert_eq!(
+        a.shard_gpu_utilization, b.shard_gpu_utilization,
+        "{tag}: shard utils"
+    );
+    assert_eq!(a.straggler_gap, b.straggler_gap, "{tag}: straggler gap");
+    assert_eq!(a.collective_bytes, b.collective_bytes, "{tag}: collectives");
+    assert_eq!(
+        a.stage_transfer_bytes, b.stage_transfer_bytes,
+        "{tag}: stage transfers"
+    );
+    assert_eq!(a.stage_bubble, b.stage_bubble, "{tag}: bubbles");
+    assert_eq!(a.schedule, b.schedule, "{tag}: resolved schedule");
+    for class in TrafficClass::ALL {
+        assert_eq!(
+            a.traffic.bytes(class),
+            b.traffic.bytes(class),
+            "{tag}: {} traffic",
+            class.name()
+        );
+    }
+}
+
+#[test]
+fn one_f_one_b_at_pp1_is_layer_major_bit_for_bit() {
+    let m = ModelConfig::opt_30b();
+    let wl = Workload {
+        batch: 64,
+        prompt: 512,
+        gen: 32,
+    };
+    for tp in [1usize, 2, 4] {
+        for system in four_systems() {
+            let lm = simulate(&m, &SystemConfig::paper_testbed_tp(tp), system, wl);
+            let ob = simulate(
+                &m,
+                &SystemConfig::paper_testbed_tp(tp).with_schedule(SchedulePolicy::OneFOneB),
+                system,
+                wl,
+            );
+            let auto = simulate(
+                &m,
+                &SystemConfig::paper_testbed_tp(tp).with_schedule(SchedulePolicy::Auto),
+                system,
+                wl,
+            );
+            let tag = format!("{system:?} tp{tp}");
+            assert_eq!(lm.schedule, PipelineSchedule::LayerMajor, "{tag}");
+            assert_results_identical(&lm, &ob, &tag);
+            assert_results_identical(&lm, &auto, &tag);
+        }
+    }
+}
+
+#[test]
+fn property_chunk_major_planner_never_loses() {
+    hybridserve::util::prop::check("schedule-axis", 100, |rng| {
+        let models = [ModelConfig::opt_30b(), ModelConfig::opt_66b()];
+        let m = rng.choose(&models);
+        let tp = *rng.choose(&[1usize, 2, 4]);
+        let pp = *rng.choose(&[1usize, 2, 4]);
+        let batch = rng.range(1, 129);
+        let prompt = rng.range(16, 1025);
+        let gen = rng.range(1, 17);
+        let w = Workload { batch, prompt, gen };
+        let sys_ix = rng.range(0, 4);
+        let system = four_systems()[sys_ix];
+
+        let lm = simulate(m, &SystemConfig::paper_testbed_grid(tp, pp), system, w);
+        let ob = simulate(
+            m,
+            &SystemConfig::paper_testbed_grid(tp, pp).with_schedule(SchedulePolicy::OneFOneB),
+            system,
+            w,
+        );
+        let auto = simulate(
+            m,
+            &SystemConfig::paper_testbed_grid(tp, pp).with_schedule(SchedulePolicy::Auto),
+            system,
+            w,
+        );
+
+        for r in [&lm, &ob, &auto] {
+            assert_eq!(r.stage_bubble.len(), pp, "bubble vector length");
+            for &b in &r.stage_bubble {
+                assert!((0.0..=1.0).contains(&b), "bubble {b}");
+            }
+        }
+        // the chunk-major-capable planner never loses to layer-major
+        assert!(
+            auto.makespan <= lm.makespan * (1.0 + 1e-12),
+            "auto {} > layer-major {}",
+            auto.makespan,
+            lm.makespan
+        );
+        assert!(auto.throughput >= lm.throughput);
+        assert!(auto.throughput >= ob.throughput);
+        // pp = 1: the chunk-major lowering IS layer-major, exactly
+        if pp == 1 {
+            assert_results_identical(&lm, &ob, "pp=1");
+        }
+        // when the auto pick is chunk-major, the bubble it was chosen to
+        // overlap must not grow
+        if auto.schedule == PipelineSchedule::OneFOneB {
+            assert!(
+                ob.mean_stage_bubble() <= lm.mean_stage_bubble() + 0.05,
+                "bubble grew under the chosen schedule: {} -> {}",
+                lm.mean_stage_bubble(),
+                ob.mean_stage_bubble()
+            );
+        }
+        // fully-resident stages + a recompute pipeline: chunk-major
+        // strictly overlaps the feedback wait (no duplicated stream to
+        // pay — the clean win regime)
+        let plan = ExecutionPlan::for_system(m, &SystemConfig::paper_testbed_grid(tp, pp));
+        let sf_max = plan
+            .stages
+            .iter()
+            .map(|s| s.stream_frac)
+            .fold(0.0f64, f64::max);
+        let recompute_pipeline =
+            matches!(system, System::HybridServe(_) | System::ActOnly);
+        if pp > 1 && sf_max == 0.0 && recompute_pipeline {
+            assert!(
+                ob.mean_stage_bubble() <= lm.mean_stage_bubble() + 1e-9,
+                "resident bubble grew: {} -> {}",
+                lm.mean_stage_bubble(),
+                ob.mean_stage_bubble()
+            );
+            assert!(
+                ob.makespan <= lm.makespan * (1.0 + 1e-12),
+                "resident chunk-major lost: {} > {}",
+                ob.makespan,
+                lm.makespan
+            );
+        }
+    });
+}

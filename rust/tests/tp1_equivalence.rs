@@ -68,6 +68,9 @@ fn legacy_simulate(
                 act_gpu_blocks: cost.gpu_act_block_capacity(),
                 host_cache_bytes: host_cache,
                 sizes,
+                // The legacy simulator predates the schedule axis: a flat
+                // TP rig has one stage and a zero bubble.
+                bubble: 0.0,
             });
             (BlockRatio::new(alloc.act_blocks.max(1), alloc.kv_blocks), 0.0)
         }

@@ -1,0 +1,162 @@
+"""Mirror of the new AnalyticEngine pass math for the
+`chunk_major_rounds_overlap_the_feedback` test scenario: opt-6.7b on a
+1x2 grid, 4 requests (prompt 64, max_new 16), ample pool, no preemption.
+Also re-verifies `decode_rounds_respect_pipeline_feedback` (LM, 1 req)."""
+
+import sys
+
+sys.path.insert(0, "/root/repo/tools/pysim")
+from port import *  # noqa
+
+
+def next_kind(ratio, act, kv):
+    at, kt = ratio.act, ratio.kv
+    if at == 0 and kt == 0:
+        return "kv"
+    if kt == 0:
+        return "act"
+    if at == 0:
+        return "kv"
+    return "act" if act * (at + kt) < at * (act + kv + 1) else "kv"
+
+
+class Engine:
+    def __init__(self, model, sys_, host_cache_bytes):
+        self.m = model
+        self.sys = sys_
+        self.cost = SimCost(model, sys_)
+        self.plan = self.cost.plan
+        cm = analytic_cost_model(model, sys_)
+        sizes = BlockSizes(model, sys_.block_tokens)
+        self.sizes = sizes
+        inflight = self.plan.pp if self.plan.schedule == ONE_F_ONE_B else 1
+        bubble = self.plan.schedule_bubble(inflight)
+        a, k = hybrid_cache_allocation(cm, self.cost.gpu_act_block_capacity(), host_cache_bytes, sizes, bubble)
+        self.ratio = BlockRatio(max(a, 1), k)
+        self.tl = Timeline(self.plan.device_count())
+        self.last_exit = [0.0]
+        self.reqs = {}  # id -> dict(prompt, max_new, generated, blocks=[(kind, filled)], prefilled)
+
+    def admit(self, rid, prompt, max_new):
+        self.reqs[rid] = dict(prompt=prompt, max_new=max_new, generated=0, blocks=[], prefilled=False)
+
+    def alloc_token_slot(self, st):
+        if st["blocks"] and st["blocks"][-1][1] < 16:
+            k, f = st["blocks"][-1]
+            st["blocks"][-1] = (k, f + 1)
+            return
+        act = sum(1 for k, _ in st["blocks"] if k == "act")
+        kv = sum(1 for k, _ in st["blocks"] if k == "kv")
+        st["blocks"].append((next_kind(self.ratio, act, kv), 1))
+
+    def pass_chunks(self, n):
+        inflight = self.plan.pp if self.plan.schedule == ONE_F_ONE_B else 1
+        return min(inflight, max(n, 1))
+
+    def feedback_entries(self, chunks):
+        fb = self.last_exit[-1] if self.last_exit else 0.0
+        return [self.last_exit[c] if c < len(self.last_exit) else fb for c in range(chunks)]
+
+    def schedule_pass(self, gpu_base, w_base, cache_base, hop_tokens, entries):
+        chunks = len(entries)
+        frac = 1.0 / chunks
+        chunk_hop = div_ceil(hop_tokens, chunks)
+        last = len(self.plan.stages) - 1
+        exits = []
+        for entry in entries:
+            handoff = entry
+            for stage in self.plan.stages:
+                layers = float(stage.layer_count())
+                stage_end = 0.0
+                for d in range(stage.dev_start, stage.dev_end):
+                    gpu_scale = 1.0
+                    link_scale = 1.0
+                    t_pcie = layers * (w_base + cache_base * frac) * link_scale
+                    t_gpu = layers * gpu_base * frac * gpu_scale
+                    _, load_end = self.tl.schedule_on(d, PCIE, 0.0, t_pcie)
+                    _, end = self.tl.schedule_on(d, GPU, max(load_end, handoff), t_gpu)
+                    stage_end = max(stage_end, end)
+                if self.plan.tp > 1:
+                    payload = self.plan.stage_transfer_bytes(self.m, chunk_hop)
+                    t_ag = layers * 2 * self.sys.allgather_time(stage.stage, payload)
+                    _, stage_end = self.tl.barrier_group(stage.dev_start, stage.dev_end, 0.0, t_ag)
+                if stage.stage < last:
+                    handoff = stage_end + self.sys.stage_hop_time(self.plan.stage_transfer_bytes(self.m, chunk_hop))
+                else:
+                    handoff = stage_end
+            exits.append(handoff)
+        self.last_exit = exits
+        return max(exits)
+
+    def step(self):
+        wave = [r for r in self.reqs.values() if not r["prefilled"]]
+        if wave:
+            batch = len(wave)
+            max_prompt = max(r["prompt"] for r in wave)
+            for r in wave:
+                plen = r["prompt"]
+                nb = div_ceil(plen, 16)
+                act = kv = 0
+                for i in range(nb):
+                    filled = plen - i * 16 if i + 1 == nb else 16
+                    k = next_kind(self.ratio, act, kv)
+                    if k == "act":
+                        act += 1
+                    else:
+                        kv += 1
+                    r["blocks"].append((k, filled))
+            gpu_base = self.cost.layer_prefill_time(batch, max_prompt)
+            w_base = self.cost.weight_stream_time()
+            entries = [0.0] * self.pass_chunks(batch)
+            self.schedule_pass(gpu_base, w_base, 0.0, batch * max_prompt, entries)
+            for r in wave:
+                r["prefilled"] = True
+                r["generated"] = 1
+                self.alloc_token_slot(r)
+
+        runnable = [r for r in self.reqs.values() if r["prefilled"] and r["generated"] < r["max_new"]]
+        if runnable:
+            n = len(runnable)
+            act_blocks = sum(1 for r in runnable for k, _ in r["blocks"] if k == "act")
+            kv_blocks = sum(1 for r in runnable for k, _ in r["blocks"] if k == "kv")
+            ctx_sum = sum(r["prompt"] + r["generated"] for r in runnable)
+            mean_ctx = ctx_sum // n
+            gpu_base = self.cost.kv_gen_time(act_blocks * 16) + self.cost.layer_forward_time(n, 1, mean_ctx)
+            w_base = self.cost.weight_stream_time()
+            cache_base = self.cost.kv_load_time(kv_blocks * 16) + self.cost.act_load_time(act_blocks * 16)
+            entries = self.feedback_entries(self.pass_chunks(n))
+            self.schedule_pass(gpu_base, w_base, cache_base, n, entries)
+            for r in runnable:
+                r["generated"] += 1
+                self.alloc_token_slot(r)
+        return all(r["generated"] >= r["max_new"] for r in self.reqs.values())
+
+
+def run(schedule, nreq):
+    m = opt_6_7b()
+    s = SystemConfig(1, 2, schedule)
+    sizes = BlockSizes(m, 16)
+    eng = Engine(m, s, 4096 * sizes.kv_bytes)
+    for i in range(nreq):
+        eng.admit(i + 1, 64, 16)
+    for _ in range(1000):
+        if eng.step():
+            break
+    devices = eng.plan.device_count()
+    mk = eng.tl.makespan()
+    bubbles = []
+    for st in eng.plan.stages:
+        u = sum(eng.tl.utilization_on(d, GPU) for d in range(st.dev_start, st.dev_end)) / (st.dev_end - st.dev_start)
+        bubbles.append(clamp(1.0 - u, 0.0, 1.0))
+    return mk, bubbles
+
+
+lm_mk, lm_b = run(LAYER_MAJOR, 4)
+ob_mk, ob_b = run(ONE_F_ONE_B, 4)
+print(f"4 reqs: LM makespan {lm_mk*1e3:.2f} ms bubbles {[f'{b:.3f}' for b in lm_b]}")
+print(f"4 reqs: OB makespan {ob_mk*1e3:.2f} ms bubbles {[f'{b:.3f}' for b in ob_b]}")
+print("mean bubble OB < LM:", sum(ob_b) / 2 < sum(lm_b) / 2, " makespan OB < LM:", ob_mk < lm_mk)
+
+# existing test: decode_rounds_respect_pipeline_feedback (LM, 1 req, bubble > 0.3)
+mk1, b1 = run(LAYER_MAJOR, 1)
+print(f"1 req LM: bubbles {[f'{b:.3f}' for b in b1]}  (all > 0.3: {all(b > 0.3 for b in b1)})")

@@ -1,0 +1,32 @@
+"""Regenerate the pinned golden throughput numbers (see README.md)."""
+
+import json
+import sys
+
+sys.path.insert(0, "/root/repo/tools/pysim")
+from port import *  # noqa
+
+SYSTEMS = [("hybrid", HYBRID), ("flexgen", FLEXGEN), ("deepspeed", DEEPSPEED), ("act_only", ACT_ONLY)]
+
+
+def main():
+    m = opt_175b()
+    wl = Workload(64, 512, 32)
+
+    # rust/tests/golden/sim_opt175b_tp2pp4.json (layer-major default)
+    lm = {k: simulate(m, SystemConfig(2, 4, LAYER_MAJOR), s, wl).throughput for k, s in SYSTEMS}
+    print("sim_opt175b_tp2pp4.json throughput:")
+    print(json.dumps(lm, indent=2))
+
+    # rust/tests/golden/sim_opt175b_tp2pp4_schedules.json (both lowerings)
+    both = {}
+    for sched in [LAYER_MAJOR, ONE_F_ONE_B]:
+        both[sched] = {
+            k: simulate(m, SystemConfig(2, 4, sched), s, wl).throughput for k, s in SYSTEMS
+        }
+    print("sim_opt175b_tp2pp4_schedules.json throughput:")
+    print(json.dumps(both, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,948 @@
+"""Line-by-line Python port of the rust `hybridserve` analytic simulator.
+
+Mirrors rust/src/{config,plan,sim,policy,pcie} closely enough to reproduce
+the committed goldens bit-for-bit (Python float == IEEE f64). Used to
+generate/validate golden files and to prototype schedule changes in a
+container without a Rust toolchain. Keep operation ORDER identical to the
+Rust when editing — f64 addition is not associative.
+"""
+
+import math
+
+# ---------------------------------------------------------------- helpers
+
+
+def div_ceil(a, b):
+    return -(-a // b)
+
+
+def clamp(x, lo, hi):
+    return max(lo, min(hi, x))
+
+
+def f64_trunc(x):
+    """Rust `as usize` on a non-negative finite f64: truncate toward zero."""
+    return int(x)
+
+
+# ---------------------------------------------------------------- config
+
+
+class Dtype:
+    F16 = 2
+    F32 = 4
+
+
+class ModelConfig:
+    def __init__(self, name, num_layers, hidden, heads, ffn, vocab, max_context, dtype):
+        self.name = name
+        self.num_layers = num_layers
+        self.hidden = hidden
+        self.heads = heads
+        self.ffn = ffn
+        self.vocab = vocab
+        self.max_context = max_context
+        self.dtype = dtype  # bytes per element
+
+    def layer_weight_bytes(self):
+        h, f = self.hidden, self.ffn
+        mats = 4 * h * h + 2 * h * f
+        biases = 4 * h + f + h
+        norms = 4 * h
+        return (mats + biases + norms) * self.dtype
+
+    def embedding_bytes(self):
+        return (self.vocab * self.hidden + self.max_context * self.hidden + 2 * self.hidden) * self.dtype
+
+    def total_weight_bytes(self):
+        return self.num_layers * self.layer_weight_bytes() + self.embedding_bytes()
+
+    def kv_bytes_per_layer(self, tokens):
+        return 2 * tokens * self.hidden * self.dtype
+
+    def act_bytes_per_layer(self, tokens):
+        return tokens * self.hidden * self.dtype
+
+    def kv_gen_flops(self, tokens):
+        return 2 * tokens * self.hidden * 2 * self.hidden
+
+
+def opt_6_7b():
+    return ModelConfig("opt-6.7b", 32, 4096, 32, 16384, 50272, 2048, Dtype.F16)
+
+
+def opt_13b():
+    return ModelConfig("opt-13b", 40, 5120, 40, 20480, 50272, 2048, Dtype.F16)
+
+
+def opt_30b():
+    return ModelConfig("opt-30b", 48, 7168, 56, 28672, 50272, 2048, Dtype.F16)
+
+
+def opt_66b():
+    return ModelConfig("opt-66b", 64, 9216, 72, 36864, 50272, 2048, Dtype.F16)
+
+
+def opt_175b():
+    return ModelConfig("opt-175b", 96, 12288, 96, 49152, 50272, 2048, Dtype.F16)
+
+
+def llama2_70b():
+    return ModelConfig("llama2-70b", 80, 8192, 64, 28672, 32000, 4096, Dtype.F16)
+
+
+class GpuSpec:
+    def __init__(self):
+        self.memory_bytes = 24 * (1 << 30)
+        self.peak_flops = 330.3e12
+        self.mem_bw = 1.008e12
+        self.gemm_efficiency = 0.60
+        self.attn_efficiency = 0.15
+        self.kvgen_efficiency = 0.85
+
+    def effective_kvgen_flops(self):
+        return self.peak_flops * self.kvgen_efficiency
+
+    def effective_gemm_flops(self):
+        return self.peak_flops * self.gemm_efficiency
+
+    def effective_attn_flops(self):
+        return self.peak_flops * self.attn_efficiency
+
+
+class InterconnectSpec:
+    def __init__(self, h2d_bw=25.0e9, d2h_bw=25.0e9, latency_s=15e-6):
+        self.h2d_bw = h2d_bw
+        self.d2h_bw = d2h_bw
+        self.latency_s = latency_s
+
+    def h2d_time(self, b):
+        return self.latency_s + b / self.h2d_bw
+
+    def d2h_time(self, b):
+        return self.latency_s + b / self.d2h_bw
+
+
+COLLECTIVE_BW = 20.0e9
+COLLECTIVE_LAT = 20e-6
+STAGE_LINK_BW = 20.0e9
+STAGE_LINK_LAT = 20e-6
+
+# Schedule policy values (config-level)
+LAYER_MAJOR = "layer_major"
+ONE_F_ONE_B = "one_f_one_b"
+AUTO = "auto"
+
+
+class SystemConfig:
+    def __init__(self, tp=1, pp=1, schedule=LAYER_MAJOR):
+        self.gpu = GpuSpec()
+        self.interconnect = InterconnectSpec()
+        self.host_memory = 882 * (1 << 30)
+        self.tp = tp
+        self.pp = pp
+        self.block_tokens = 16
+        self.gpu_weight_fraction = 0.5
+        self.gpu_buffer_fraction = 0.25
+        self.schedule = schedule
+
+    def with_schedule(self, schedule):
+        s = SystemConfig(self.tp, self.pp, schedule)
+        return s
+
+    def gpu_weight_budget(self):
+        return f64_trunc(self.gpu.memory_bytes * self.gpu_weight_fraction)
+
+    def gpu_buffer_budget(self):
+        return f64_trunc(self.gpu.memory_bytes * self.gpu_buffer_fraction)
+
+    def gpu_cache_budget(self):
+        return max(0, self.gpu.memory_bytes - (self.gpu_weight_budget() + self.gpu_buffer_budget()))
+
+    def allgather_time(self, stage, payload):
+        if self.tp <= 1:
+            return 0.0
+        frac = (self.tp - 1) / self.tp
+        return COLLECTIVE_LAT + payload * frac / COLLECTIVE_BW
+
+    def stage_hop_time(self, b):
+        return STAGE_LINK_LAT + b / STAGE_LINK_BW
+
+
+# ---------------------------------------------------------------- plan
+
+
+class StagePlan:
+    def __init__(self, stage, lay_start, lay_end, dev_start, dev_end, weight_bytes, stream_frac):
+        self.stage = stage
+        self.lay_start = lay_start
+        self.lay_end = lay_end
+        self.dev_start = dev_start
+        self.dev_end = dev_end
+        self.weight_bytes = weight_bytes
+        self.stream_frac = stream_frac
+
+    def layer_count(self):
+        return self.lay_end - self.lay_start
+
+
+class ExecutionPlan:
+    def __init__(self, model, sys, schedule=None):
+        tp, pp = sys.tp, sys.pp
+        nl = model.num_layers
+        assert nl >= pp
+        base, rem = nl // pp, nl % pp
+        self.tp, self.pp, self.num_layers = tp, pp, nl
+        self.stages = []
+        start = 0
+        for s in range(pp):
+            n = base + (1 if s < rem else 0)
+            wb = n * model.layer_weight_bytes()
+            if s == pp - 1:
+                wb += model.embedding_bytes()
+            shard_total = wb / tp
+            sf = clamp((shard_total - sys.gpu_weight_budget()) / shard_total, 0.0, 1.0)
+            self.stages.append(StagePlan(s, start, start + n, s * tp, (s + 1) * tp, wb, sf))
+            start += n
+        self.collectives_per_layer = 2
+        # Resolved schedule: pp = 1 always lowers to layer-major (the
+        # zig-zag weight share is the identity schedule on one stage).
+        if schedule is None:
+            schedule = sys.schedule
+        if pp == 1 or schedule == LAYER_MAJOR:
+            self.schedule = LAYER_MAJOR
+        elif schedule == ONE_F_ONE_B:
+            self.schedule = ONE_F_ONE_B
+        else:
+            self.schedule = AUTO  # resolved by simulate()
+
+    def device_count(self):
+        return self.tp * self.pp
+
+    def stage_of_layer(self, l):
+        for s in self.stages:
+            if s.lay_start <= l < s.lay_end:
+                return s.stage
+        raise AssertionError
+
+    def is_stage_boundary(self, l):
+        return l > 0 and self.stage_of_layer(l) != self.stage_of_layer(l - 1)
+
+    def max_stage_layer_count(self):
+        return max(s.layer_count() for s in self.stages)
+
+    def max_stage_weight_bytes(self):
+        return max(s.weight_bytes for s in self.stages)
+
+    def stage_transfer_bytes(self, model, tokens):
+        return tokens * model.hidden * model.dtype
+
+    def weight_stream_passes(self):
+        """Nominal weight-stream duplication per stage per step."""
+        return self.pp if self.schedule == ONE_F_ONE_B else 1
+
+    def schedule_bubble(self, chunks):
+        """Analytic per-stage pipeline-bubble estimate for the schedule."""
+        if self.pp <= 1:
+            return 0.0
+        pp = self.pp
+        if self.schedule == ONE_F_ONE_B:
+            c = max(chunks, 1)
+            return (pp - 1) / (pp - 1 + c)
+        return (pp - 1) / pp
+
+
+# ---------------------------------------------------------------- cost
+
+
+class SimCost:
+    def __init__(self, model, sys, schedule=None):
+        self.model = model
+        self.sys = sys
+        self.plan = ExecutionPlan(model, sys, schedule)
+        self.stream_frac = self.plan.stages[0].stream_frac
+        self.tp = self.plan.tp
+
+    def stage_stream_frac(self, s):
+        return self.plan.stages[s].stream_frac
+
+    def shard_bytes(self, b):
+        return div_ceil(b, self.tp)
+
+    def shard_layer_weight_bytes(self):
+        return div_ceil(self.model.layer_weight_bytes(), self.tp)
+
+    def weight_stream_time(self):
+        b = f64_trunc(self.shard_layer_weight_bytes() * self.stream_frac)
+        return 0.0 if b == 0 else self.sys.interconnect.h2d_time(b)
+
+    def kv_load_time(self, tokens):
+        if tokens == 0:
+            return 0.0
+        return self.sys.interconnect.h2d_time(self.shard_bytes(self.model.kv_bytes_per_layer(tokens)))
+
+    def act_load_time(self, tokens):
+        if tokens == 0:
+            return 0.0
+        return self.sys.interconnect.h2d_time(self.shard_bytes(self.model.act_bytes_per_layer(tokens)))
+
+    def kv_gen_time(self, tokens):
+        if tokens == 0:
+            return 0.0
+        gpu = self.sys.gpu
+        flops = self.model.kv_gen_flops(tokens) / self.tp
+        compute = flops / gpu.effective_kvgen_flops()
+        panel = (2 * self.model.hidden * self.model.hidden * self.model.dtype) / self.tp
+        mem = panel / gpu.mem_bw
+        return max(compute, mem) + 5e-6
+
+    def layer_forward_time(self, batch, new_per_req, ctx):
+        if batch == 0 or new_per_req == 0:
+            return 0.0
+        gpu = self.sys.gpu
+        m = self.model
+        h, f = float(m.hidden), float(m.ffn)
+        n = float(batch * new_per_req)
+        gemm_flops = n * (8.0 * h * h + 4.0 * h * f) / self.tp
+        attn_flops = (batch * new_per_req) * 4.0 * ctx * h / self.tp
+        gemm = gemm_flops / gpu.effective_gemm_flops()
+        attn = attn_flops / gpu.effective_attn_flops()
+        wread = m.layer_weight_bytes() / self.tp / gpu.mem_bw
+        return gemm + attn + wread + 10e-6
+
+    def layer_prefill_time(self, batch, tokens):
+        return self.layer_forward_time(batch, tokens, tokens // 2)
+
+    def gpu_act_block_capacity(self):
+        caps = []
+        for s in self.stages():
+            block_bytes = s.layer_count() * self.model.act_bytes_per_layer(self.sys.block_tokens)
+            caps.append(self.sys.gpu_cache_budget() // max(self.shard_bytes(block_bytes), 1))
+        return min(caps)
+
+    def stages(self):
+        return self.plan.stages
+
+
+# ---------------------------------------------------------------- policy
+
+
+class LinearCost:
+    def __init__(self, slope, intercept, r2=1.0):
+        self.slope = slope
+        self.intercept = intercept
+        self.r_squared = r2
+
+    def eval(self, n):
+        if n <= 0.0:
+            return 0.0
+        return max(self.slope * n + self.intercept, 0.0)
+
+    def inverse(self, t):
+        if self.slope <= 0.0:
+            return 0.0
+        return max((t - self.intercept) / self.slope, 0.0)
+
+
+def linear_fit(xs, ys):
+    mx = sum(xs) / len(xs)
+    my = sum(ys) / len(ys)
+    sxx = sum((x - mx) * (x - mx) for x in xs)
+    sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    slope = sxy / sxx
+    intercept = my - slope * mx
+    ss_tot = sum((y - my) * (y - my) for y in ys)
+    ss_res = sum((y - (slope * x + intercept)) ** 2 for x, y in zip(xs, ys))
+    r2 = 1.0 if ss_tot == 0.0 else 1.0 - ss_res / ss_tot
+    return slope, intercept, r2
+
+
+SAMPLE_POINTS = [32, 64, 128, 256, 512]
+
+
+class CostModel:
+    def __init__(self, kv_gen, load_kv, load_act, load_w):
+        self.kv_gen = kv_gen
+        self.load_kv = load_kv
+        self.load_act = load_act
+        self.load_w = load_w
+
+
+def analytic_cost_model(model, sys, schedule=None):
+    tp = float(sys.tp)
+
+    def sample_kv_gen(blocks):
+        tokens = blocks * sys.block_tokens
+        flops = model.kv_gen_flops(tokens) / tp
+        compute = flops / sys.gpu.effective_kvgen_flops()
+        weight_reads = (2 * model.hidden * model.hidden * model.dtype) / tp / sys.gpu.mem_bw
+        return max(compute, weight_reads) + 5e-6
+
+    def sample_load_kv(blocks):
+        b = div_ceil(model.kv_bytes_per_layer(blocks * sys.block_tokens), sys.tp)
+        return sys.interconnect.h2d_time(b)
+
+    def weight_load_time():
+        plan = ExecutionPlan(model, sys, schedule)
+        resident = float(sys.gpu_weight_budget())
+        total = plan.max_stage_weight_bytes() / tp
+        stream_fraction = clamp((total - resident) / total, 0.0, 1.0)
+        layer_bytes = model.layer_weight_bytes() / tp * stream_fraction
+        # NEW (schedule axis): chunk-major re-streams each stage's layer
+        # weights once per in-flight chunk per step; the per-layer window
+        # Algorithm 1 balances against multiplies accordingly.
+        passes = plan.weight_stream_passes()
+        return passes * sys.interconnect.h2d_time(f64_trunc(layer_bytes))
+
+    ns = [float(n) for n in SAMPLE_POINTS]
+    gen_ts = [sample_kv_gen(n) for n in SAMPLE_POINTS]
+    load_ts = [sample_load_kv(n) for n in SAMPLE_POINTS]
+    act_ts = [sample_load_kv(n) / 2.0 for n in SAMPLE_POINTS]
+    kv_gen = LinearCost(*linear_fit(ns, gen_ts))
+    load_kv = LinearCost(*linear_fit(ns, load_ts))
+    load_act = LinearCost(*linear_fit(ns, act_ts))
+    return CostModel(kv_gen, load_kv, load_act, weight_load_time())
+
+
+class BlockSizes:
+    def __init__(self, model, block_tokens):
+        self.block_tokens = block_tokens
+        self.kv_bytes = model.num_layers * model.kv_bytes_per_layer(block_tokens)
+        self.act_bytes = model.num_layers * model.act_bytes_per_layer(block_tokens)
+
+    def per_layer_bytes(self, kind, model):
+        b = self.kv_bytes if kind == "kv" else self.act_bytes
+        return b // model.num_layers
+
+
+MAX_BUBBLE = 1.0 - 1e-9
+
+
+def effective_kv_gen(g, bubble):
+    """Scale the recompute cost by the GPU's non-idle share: with the GPU
+    waiting `bubble` of each step in the pipeline feedback, recomputing a
+    block costs 1/(1-bubble) of its busy-time in wall time."""
+    b = clamp(bubble, 0.0, 1.0)
+    if b == 0.0:
+        return g
+    c = 1.0 / (1.0 - min(b, MAX_BUBBLE))
+    return LinearCost(g.slope * c, g.intercept * c, g.r_squared)
+
+
+def initial_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble=0.0):
+    g = effective_kv_gen(cost.kv_gen, bubble)
+    t_budget = cost.load_w - g.eval(float(act_gpu_blocks))
+    if t_budget >= 0.0:
+        la = cost.load_act
+        net_slope = g.slope - la.slope
+        if net_slope <= 0.0:
+            act = host_cache_bytes // sizes.act_bytes
+        else:
+            act = f64_trunc(math.floor(max((t_budget - (g.intercept - la.intercept)) / net_slope, 0.0)))
+        return (act, 0)
+    else:
+        kv = f64_trunc(math.floor(cost.load_kv.inverse(-t_budget)))
+        return (0, kv)
+
+
+def alloc_remaining(cost, act_init, kv_init, host_cache_bytes, sizes, bubble=0.0):
+    s_act = float(sizes.act_bytes)
+    s_kv = float(sizes.kv_bytes)
+    occupied = s_act * act_init + s_kv * kv_init
+    remaining = host_cache_bytes - occupied
+    if remaining <= 0.0:
+        return (0, 0)
+    g = effective_kv_gen(cost.kv_gen, bubble)
+    l = cost.load_kv
+    la = cost.load_act
+    net = g.slope - la.slope
+    if net <= 0.0:
+        return (f64_trunc(math.floor(remaining / s_act)), 0)
+    d = l.intercept + la.intercept - g.intercept
+    denom = s_act * l.slope / net + s_kv
+    k = (remaining - s_act * d / net) / denom
+    k = clamp(k, 0.0, remaining / s_kv)
+    a = max((remaining - s_kv * k) / s_act, 0.0)
+    return (f64_trunc(math.floor(a)), f64_trunc(math.floor(k)))
+
+
+def clamp_to_budget(act, kv, host_cache_bytes, sizes):
+    b = act * sizes.act_bytes + kv * sizes.kv_bytes
+    if b <= host_cache_bytes:
+        return (act, kv)
+    if act > 0:
+        return (host_cache_bytes // sizes.act_bytes, 0)
+    return (0, host_cache_bytes // sizes.kv_bytes)
+
+
+def hybrid_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble=0.0):
+    a0, k0 = initial_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble)
+    a0, k0 = clamp_to_budget(a0, k0, host_cache_bytes, sizes)
+    ar, kr = alloc_remaining(cost, a0, k0, host_cache_bytes, sizes, bubble)
+    return (a0 + ar, k0 + kr)
+
+
+class BlockRatio:
+    def __init__(self, act, kv):
+        self.act = act
+        self.kv = kv
+
+    @staticmethod
+    def act_only():
+        return BlockRatio(1, 0)
+
+    @staticmethod
+    def kv_only():
+        return BlockRatio(0, 1)
+
+    def split(self, n):
+        at, kt = self.act, self.kv
+        if at == 0 and kt == 0:
+            return (0, n)
+        if kt == 0:
+            return (n, 0)
+        if at == 0:
+            return (0, n)
+        act = div_ceil(n * at, at + kt)
+        return (act, n - act)
+
+
+class BinCaps:
+    def __init__(self, bytes_, kv_block_bytes, act_block_bytes):
+        per_buffer = bytes_ // 4
+        self.act_max = max(per_buffer // act_block_bytes, 1)
+        self.kv_max = max(per_buffer // kv_block_bytes, 1)
+
+
+# ---------------------------------------------------------------- timeline
+
+
+PCIE, GPU = 0, 1
+
+
+class Timeline:
+    def __init__(self, devices):
+        self.devices = devices
+        self.lane_free = [0.0] * (2 * devices)
+        self.busy = [0.0] * (2 * devices)
+        self._makespan = 0.0
+
+    def schedule_on(self, d, lane, ready_at, duration):
+        i = d * 2 + lane
+        start = max(self.lane_free[i], ready_at)
+        end = start + duration
+        self.lane_free[i] = end
+        self.busy[i] += duration
+        self._makespan = max(self._makespan, end)
+        return (start, end)
+
+    def barrier_group(self, dev_start, dev_end, ready_at, duration):
+        start = ready_at
+        for d in range(dev_start, dev_end):
+            start = max(start, self.lane_free[d * 2 + GPU])
+        end = start + duration
+        for d in range(dev_start, dev_end):
+            i = d * 2 + GPU
+            self.lane_free[i] = end
+            self.busy[i] += duration
+        self._makespan = max(self._makespan, end)
+        return (start, end)
+
+    def makespan(self):
+        return self._makespan
+
+    def busy_on(self, d, lane):
+        return self.busy[d * 2 + lane]
+
+    def utilization_on(self, d, lane):
+        return 0.0 if self._makespan == 0.0 else self.busy_on(d, lane) / self._makespan
+
+
+class Traffic:
+    CLASSES = ["weight_load", "kv_load", "act_load", "kv_store", "act_store"]
+
+    def __init__(self):
+        self.bytes = {c: 0 for c in self.CLASSES}
+
+    def add(self, c, b):
+        self.bytes[c] += b
+
+    def cache_load_total(self):
+        return self.bytes["kv_load"] + self.bytes["act_load"]
+
+
+class Interconnect:
+    def __init__(self, spec):
+        self.spec = spec
+        self.traffic = Traffic()
+
+    def transfer_time_via(self, link, dir_, cls, b):
+        self.traffic.add(cls, b)
+        return link.h2d_time(b) if dir_ == "h2d" else link.d2h_time(b)
+
+
+# ---------------------------------------------------------------- systems
+
+
+class System:
+    def __init__(self, kind, policy_full=True, recompute=0.0):
+        self.kind = kind  # hybrid | flexgen | deepspeed | act_only | token_recompute | powerinfer
+        self.policy_full = policy_full
+        self.recompute = recompute
+
+    def __repr__(self):
+        return self.kind
+
+
+HYBRID = System("hybrid")
+FLEXGEN = System("flexgen")
+DEEPSPEED = System("deepspeed")
+ACT_ONLY = System("act_only")
+POWERINFER = System("powerinfer")
+
+
+def token_recompute(r):
+    return System("token_recompute", recompute=r)
+
+
+class Workload:
+    def __init__(self, batch, prompt, gen):
+        self.batch = batch
+        self.prompt = prompt
+        self.gen = gen
+
+
+class SimResult:
+    pass
+
+
+def even_split_allocation(host_cache_bytes, sizes):
+    half = host_cache_bytes // 2
+    return (half // sizes.act_bytes, half // sizes.kv_bytes)
+
+
+# ---------------------------------------------------------------- simulate
+
+
+def resolve_schedule(sys):
+    if sys.pp == 1:
+        return LAYER_MAJOR
+    return sys.schedule
+
+
+def simulate(model, sys, system, wl, bubble_aware=True):
+    """Mirror of sim::simulate with the schedule axis.
+
+    bubble_aware=False reproduces the pre-issue-4 allocator (for
+    comparing against the committed goldens).
+    """
+    sched = resolve_schedule(sys)
+    if sched == AUTO:
+        lm = simulate(model, sys.with_schedule(LAYER_MAJOR), system, wl, bubble_aware)
+        ofob = simulate(model, sys.with_schedule(ONE_F_ONE_B), system, wl, bubble_aware)
+        return lm if lm.throughput >= ofob.throughput else ofob
+
+    cost = SimCost(model, sys, sched)
+    plan = cost.plan
+    sizes = BlockSizes(model, sys.block_tokens)
+    nl = model.num_layers
+    bt = sys.block_tokens
+    tp, pp = plan.tp, plan.pp
+    devices = plan.device_count()
+    max_ctx = wl.prompt + wl.gen
+    blocks_per_req = div_ceil(max_ctx, bt)
+
+    host_cache = max(0, sys.host_memory - model.total_weight_bytes())
+
+    def hybrid_ratio(bubble):
+        cm = analytic_cost_model(model, sys, sched)
+        a, k = hybrid_cache_allocation(cm, cost.gpu_act_block_capacity(), host_cache, sizes, bubble)
+        return BlockRatio(max(a, 1), k)
+
+    def minibatch_for(ratio_, act_per_req_, kv_per_req_):
+        if system.kind == "deepspeed":
+            kv_pr = cost.shard_bytes(plan.max_stage_layer_count() * model.kv_bytes_per_layer(max_ctx))
+            inter_pr = cost.shard_bytes(wl.prompt * model.hidden * model.dtype * 8)
+            return clamp(
+                (sys.gpu_cache_budget() + sys.gpu_buffer_budget()) // max(kv_pr + inter_pr, 1),
+                1,
+                wl.batch,
+            )
+        kv_block_layer = cost.shard_bytes(sizes.per_layer_bytes("kv", model))
+        act_block_layer = cost.shard_bytes(sizes.per_layer_bytes("act", model))
+        caps = BinCaps(sys.gpu_buffer_budget(), kv_block_layer, act_block_layer)
+        mb = wl.batch
+        if kv_per_req_ > 0:
+            mb = min(mb, caps.kv_max // max(kv_per_req_, 1))
+        if act_per_req_ > 0:
+            mb = min(mb, caps.act_max // max(act_per_req_, 1))
+        # Chunk-major micro-batching: the 1F1B schedule needs at least pp
+        # chunks in flight to overlap stages — cap the chunk size so the
+        # batch splits into >= pp micro-batches (GPipe-style).
+        if sched == ONE_F_ONE_B and pp > 1:
+            mb = min(mb, div_ceil(wl.batch, pp))
+        return max(mb, 1)
+
+    # ---- resolve the ACT:KV designation ratio -------------------------
+    recompute_frac = 0.0
+    if system.kind == "hybrid":
+        bubble0 = plan.schedule_bubble(1) if bubble_aware else 0.0
+        ratio = hybrid_ratio(bubble0)
+    elif system.kind == "act_only":
+        ratio = BlockRatio.act_only()
+    elif system.kind in ("flexgen", "deepspeed", "powerinfer"):
+        ratio = BlockRatio.kv_only()
+    else:
+        ratio = BlockRatio.kv_only()
+        recompute_frac = clamp(system.recompute, 0.0, 1.0)
+
+    act_per_req, kv_per_req = ratio.split(blocks_per_req)
+    minibatch = minibatch_for(ratio, act_per_req, kv_per_req)
+
+    # Chunk-major refinement: with the chunk count known, the bubble the
+    # schedule actually leaves is smaller — re-run Algorithm 1 once.
+    if system.kind == "hybrid" and bubble_aware and sched == ONE_F_ONE_B and pp > 1:
+        rounds0 = div_ceil(wl.batch, minibatch) if system.kind == "deepspeed" else 1
+        rb0 = minibatch if rounds0 > 1 else wl.batch
+        nchunks0 = rb0 // minibatch + (1 if rb0 % minibatch > 0 else 0)
+        if nchunks0 > 1:
+            ratio = hybrid_ratio(plan.schedule_bubble(nchunks0))
+            act_per_req, kv_per_req = ratio.split(blocks_per_req)
+            minibatch = minibatch_for(ratio, act_per_req, kv_per_req)
+
+    act_share = act_per_req / blocks_per_req
+
+    rounds = div_ceil(wl.batch, minibatch) if system.kind == "deepspeed" else 1
+    round_batch = minibatch if rounds > 1 else wl.batch
+    full = round_batch // minibatch
+    rem = round_batch % minibatch
+    chunk_sizes = [minibatch] * full + ([rem] if rem > 0 else [])
+    kv_on_gpu = system.kind == "deepspeed"
+
+    total_act_blocks = act_per_req * wl.batch
+    if total_act_blocks == 0:
+        gpu_act_frac = 0.0
+    else:
+        gpu_act_frac = min(cost.gpu_act_block_capacity() / total_act_blocks, 1.0)
+
+    tl = Timeline(devices)
+    ic = Interconnect(sys.interconnect)
+    collective_bytes = 0
+    stage_transfer_bytes = 0
+
+    def allgather(stage, tokens):
+        nonlocal collective_bytes
+        payload = tokens * model.hidden * model.dtype
+        collective_bytes += 2 * (tp - 1) * payload
+        return 2.0 * sys.allgather_time(stage, payload)
+
+    weight_scale = []
+    for s in range(pp):
+        if system.kind == "powerinfer":
+            weight_scale.append(0.3)
+        elif system.kind == "deepspeed":
+            sf = cost.stage_stream_frac(s)
+            weight_scale.append(1.0 / sf if sf > 0.0 else 0.0)
+        else:
+            weight_scale.append(1.0)
+    cpu_attn_penalty = 2.0 if system.kind == "powerinfer" else 1.0
+
+    nchunks = len(chunk_sizes)
+    chunk_major = sched == ONE_F_ONE_B and pp > 1
+
+    # ==== prefill phase ================================================
+    weight_ready = [0.0] * devices
+    chunk_done = [0.0] * nchunks
+
+    def stream_weights(stage, devs, w_end):
+        sf = cost.stage_stream_frac(stage)
+        for d in range(*devs):
+            wbytes = f64_trunc(cost.shard_layer_weight_bytes() * sf * weight_scale[stage])
+            t_w = ic.transfer_time_via(sys.interconnect, "h2d", "weight_load", wbytes)
+            (_, end) = tl.schedule_on(d, PCIE, 0.0, t_w)
+            w_end[d] = end
+
+    def prefill_layer_chunk(l, stage, devs, boundary, c, mb):
+        nonlocal stage_transfer_bytes
+        if boundary:
+            stage_transfer_bytes += plan.stage_transfer_bytes(model, mb * wl.prompt)
+            ready_extra = chunk_done[c] + sys.stage_hop_time(plan.stage_transfer_bytes(model, mb * wl.prompt))
+        else:
+            ready_extra = 0.0
+        last_end = 0.0
+        for d in range(*devs):
+            t_fwd = cost.layer_prefill_time(mb, wl.prompt) * cpu_attn_penalty
+            ready = max(weight_ready[d], ready_extra)
+            (_, end) = tl.schedule_on(d, GPU, ready, t_fwd)
+            last_end = end
+        if tp > 1:
+            t_ag = allgather(stage, mb * wl.prompt)
+            (_, end) = tl.barrier_group(devs[0], devs[1], 0.0, t_ag)
+            chunk_done[c] = end
+        else:
+            chunk_done[c] = last_end
+
+    def prefill_store(devs):
+        if kv_on_gpu:
+            kv_toks = 0
+        else:
+            kv_toks = min(min(kv_per_req, blocks_per_req) * bt * round_batch, wl.prompt * round_batch)
+        act_toks = (act_per_req * bt) * float(round_batch) * (1.0 - gpu_act_frac)
+        kv_b = model.kv_bytes_per_layer(kv_toks)
+        act_b = model.act_bytes_per_layer(f64_trunc(act_toks))
+        for d in range(*devs):
+            ic.transfer_time_via(sys.interconnect, "d2h", "kv_store", cost.shard_bytes(kv_b))
+            ic.transfer_time_via(sys.interconnect, "d2h", "act_store", cost.shard_bytes(act_b))
+
+    if not chunk_major:
+        for l in range(nl):
+            stage = plan.stage_of_layer(l)
+            devs = (plan.stages[stage].dev_start, plan.stages[stage].dev_end)
+            boundary = plan.is_stage_boundary(l)
+            w_end = list(weight_ready)
+            stream_weights(stage, devs, w_end)
+            for c, mb in enumerate(chunk_sizes):
+                prefill_layer_chunk(l, stage, devs, boundary, c, mb)
+            prefill_store(devs)
+            weight_ready = w_end
+    else:
+        # chunk-major: chunks traverse all layers independently; each
+        # chunk re-streams the stage's layer weights (duplicated stream).
+        for c, mb in enumerate(chunk_sizes):
+            for l in range(nl):
+                stage = plan.stage_of_layer(l)
+                devs = (plan.stages[stage].dev_start, plan.stages[stage].dev_end)
+                boundary = plan.is_stage_boundary(l)
+                w_end = list(weight_ready)
+                stream_weights(stage, devs, w_end)
+                prefill_layer_chunk(l, stage, devs, boundary, c, mb)
+                weight_ready = w_end
+        # stores: same bytes as layer-major, accounted once per layer
+        for l in range(nl):
+            stage = plan.stage_of_layer(l)
+            devs = (plan.stages[stage].dev_start, plan.stages[stage].dev_end)
+            prefill_store(devs)
+
+    prefill_secs = tl.makespan()
+    gpu_busy_prefill = [tl.busy_on(d, GPU) for d in range(devices)]
+
+    # ==== generation phase =============================================
+    def decode_layer_chunk(l, stage, devs, boundary, c, mb, kv_toks_req, act_toks_req, recompute_toks_req, ctx):
+        nonlocal stage_transfer_bytes
+        if kv_on_gpu:
+            kv_bytes = 0
+        else:
+            kv_bytes = model.kv_bytes_per_layer(kv_toks_req * mb)
+        act_host_toks = f64_trunc(act_toks_req * float(mb) * (1.0 - gpu_act_frac))
+        act_bytes = model.act_bytes_per_layer(act_host_toks)
+
+        if boundary:
+            stage_transfer_bytes += plan.stage_transfer_bytes(model, mb)
+            ready_extra = chunk_done[c] + sys.stage_hop_time(plan.stage_transfer_bytes(model, mb))
+        elif l == 0 and pp > 1:
+            ready_extra = chunk_done[c]
+        else:
+            ready_extra = 0.0
+
+        last_end = 0.0
+        for d in range(*devs):
+            t_gen = cost.kv_gen_time(act_toks_req * mb)
+            t_recompute = cost.layer_prefill_time(mb, recompute_toks_req) if recompute_toks_req > 0 else 0.0
+            t_fwd = cost.layer_forward_time(mb, 1, ctx) * cpu_attn_penalty
+            t_kv = ic.transfer_time_via(sys.interconnect, "h2d", "kv_load", cost.shard_bytes(kv_bytes))
+            t_act = ic.transfer_time_via(sys.interconnect, "h2d", "act_load", cost.shard_bytes(act_bytes))
+            (_, load_end) = tl.schedule_on(d, PCIE, 0.0, t_kv + t_act)
+            ready = max(load_end, weight_ready[d], ready_extra)
+            (_, end) = tl.schedule_on(d, GPU, ready, t_gen + t_recompute + t_fwd)
+            last_end = end
+        if tp > 1:
+            t_ag = allgather(stage, mb)
+            (_, end) = tl.barrier_group(devs[0], devs[1], 0.0, t_ag)
+            chunk_done[c] = end
+        else:
+            chunk_done[c] = last_end
+
+        new_act = system.kind in ("hybrid", "act_only") and act_share > 0.0
+        if kv_on_gpu:
+            kv_store_t, act_store_t = 0, 0
+        elif new_act:
+            kv_store_t, act_store_t = 0, mb
+        else:
+            kv_store_t, act_store_t = mb, 0
+        kv_sb = model.kv_bytes_per_layer(kv_store_t)
+        act_sb = model.act_bytes_per_layer(act_store_t)
+        for d in range(*devs):
+            ic.transfer_time_via(sys.interconnect, "d2h", "kv_store", cost.shard_bytes(kv_sb))
+            ic.transfer_time_via(sys.interconnect, "d2h", "act_store", cost.shard_bytes(act_sb))
+
+    for step in range(wl.gen):
+        ctx = wl.prompt + step
+        ctx_blocks = div_ceil(ctx, bt)
+        act_b_req, kv_b_req = ratio.split(ctx_blocks)
+        recompute_toks_req = f64_trunc(ctx * recompute_frac)
+        kv_toks_req = max(min(kv_b_req * bt, ctx) - recompute_toks_req, 0)
+        act_toks_req = min(act_b_req * bt, ctx)
+
+        if not chunk_major:
+            for l in range(nl):
+                stage = plan.stage_of_layer(l)
+                devs = (plan.stages[stage].dev_start, plan.stages[stage].dev_end)
+                boundary = plan.is_stage_boundary(l)
+                w_end = list(weight_ready)
+                stream_weights(stage, devs, w_end)
+                for c, mb in enumerate(chunk_sizes):
+                    decode_layer_chunk(
+                        l, stage, devs, boundary, c, mb, kv_toks_req, act_toks_req, recompute_toks_req, ctx
+                    )
+                weight_ready = w_end
+        else:
+            for c, mb in enumerate(chunk_sizes):
+                for l in range(nl):
+                    stage = plan.stage_of_layer(l)
+                    devs = (plan.stages[stage].dev_start, plan.stages[stage].dev_end)
+                    boundary = plan.is_stage_boundary(l)
+                    w_end = list(weight_ready)
+                    stream_weights(stage, devs, w_end)
+                    decode_layer_chunk(
+                        l, stage, devs, boundary, c, mb, kv_toks_req, act_toks_req, recompute_toks_req, ctx
+                    )
+                    weight_ready = w_end
+
+    gen_span = max(tl.makespan() - prefill_secs, 1e-12)
+    shard_gpu_utilization = [
+        clamp((tl.busy_on(d, GPU) - gpu_busy_prefill[d]) / gen_span, 0.0, 1.0) for d in range(devices)
+    ]
+    gpu_util_gen = sum(shard_gpu_utilization) / devices
+    straggler_gap = (max(shard_gpu_utilization) - min(shard_gpu_utilization)) if shard_gpu_utilization else 0.0
+    pcie_utilization = sum(tl.utilization_on(d, PCIE) for d in range(devices)) / devices
+    stage_bubble = []
+    for s in range(pp):
+        ds, de = plan.stages[s].dev_start, plan.stages[s].dev_end
+        u = sum(shard_gpu_utilization[ds:de]) / (de - ds)
+        stage_bubble.append(clamp(1.0 - u, 0.0, 1.0))
+
+    makespan = tl.makespan() * rounds
+    prefill_secs = prefill_secs * rounds
+    traffic = {k: v * rounds for k, v in ic.traffic.bytes.items()}
+    collective_bytes *= rounds
+    stage_transfer_bytes *= rounds
+
+    total_tokens = (wl.prompt + wl.gen) * wl.batch
+    gen_tokens = wl.gen * wl.batch
+    r = SimResult()
+    r.throughput = total_tokens / makespan
+    r.gen_throughput = gen_tokens / max(makespan - prefill_secs, 1e-9)
+    r.makespan = makespan
+    r.prefill_secs = prefill_secs
+    r.gpu_utilization = gpu_util_gen
+    r.pcie_utilization = pcie_utilization
+    r.traffic = traffic
+    r.act_block_share = act_share
+    r.minibatch = minibatch
+    r.shard_gpu_utilization = shard_gpu_utilization
+    r.straggler_gap = straggler_gap
+    r.collective_bytes = collective_bytes
+    r.stage_transfer_bytes = stage_transfer_bytes
+    r.stage_bubble = stage_bubble
+    r.schedule = sched
+    return r

@@ -1,0 +1,154 @@
+"""Dry-run of the NEW Rust property tests, with the exact util::rng
+xoshiro256** stream, so the committed seeds are verified before the Rust
+exists. Mirrors util::prop::check's seeding: Rng::new(0xC0FFEE ^ seed)."""
+
+import sys
+
+sys.path.insert(0, "/root/repo/tools/pysim")
+from port import *  # noqa
+
+M64 = (1 << 64) - 1
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    def __init__(self, seed):
+        sm = seed & M64
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & M64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            s.append((z ^ (z >> 31)) & M64)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range(self, lo, hi):
+        assert hi > lo
+        return lo + self.next_u64() % (hi - lo)
+
+    def choose(self, items):
+        return items[self.range(0, len(items))]
+
+
+def check(name, cases, f):
+    for seed in range(cases):
+        try:
+            f(Rng(0xC0FFEE ^ seed))
+        except AssertionError as e:
+            print(f"property '{name}' falsified at seed {seed}: {e}")
+            raise
+
+
+# ---- property 1: the schedule axis (rust/tests/schedule_equivalence.rs)
+
+SYSTEMS = [HYBRID, FLEXGEN, DEEPSPEED, ACT_ONLY]
+
+bubble_up_margins = []
+resident_margins = []
+
+
+def schedule_property(rng):
+    models = [opt_30b(), opt_66b()]
+    m = rng.choose(models)
+    tp = rng.choose([1, 2, 4])
+    pp = rng.choose([1, 2, 4])
+    batch = rng.range(1, 129)
+    prompt = rng.range(16, 1025)
+    gen = rng.range(1, 17)
+    w = Workload(batch, prompt, gen)
+    sysix = rng.range(0, 4)
+    system = SYSTEMS[sysix]
+
+    lm = simulate(m, SystemConfig(tp, pp, LAYER_MAJOR), system, w)
+    ob = simulate(m, SystemConfig(tp, pp, ONE_F_ONE_B), system, w)
+    auto = simulate(m, SystemConfig(tp, pp, AUTO), system, w)
+
+    for r in (lm, ob, auto):
+        assert len(r.stage_bubble) == pp, "bubble vector length"
+        for b in r.stage_bubble:
+            assert 0.0 <= b <= 1.0, f"bubble {b}"
+    # the chunk-major-capable planner never loses to layer-major
+    assert auto.makespan <= lm.makespan * (1.0 + 1e-12), f"auto {auto.makespan} > lm {lm.makespan}"
+    assert auto.throughput >= lm.throughput
+    assert auto.throughput >= ob.throughput
+    # pp=1: the chunk-major lowering IS layer-major, exactly
+    if pp == 1:
+        assert ob.makespan == lm.makespan
+        assert ob.throughput == lm.throughput
+        assert ob.traffic == lm.traffic
+    # when the auto pick is chunk-major, the bubble it was chosen to
+    # overlap must not grow
+    if auto.schedule == ONE_F_ONE_B:
+        mb_lm = sum(lm.stage_bubble) / pp
+        mb_ob = sum(ob.stage_bubble) / pp
+        bubble_up_margins.append(mb_ob - mb_lm)
+        assert mb_ob <= mb_lm + 0.05, f"bubble grew {mb_lm} -> {mb_ob}"
+    # fully-resident stages + a recompute pipeline: chunk-major strictly
+    # overlaps the feedback wait
+    plan = ExecutionPlan(m, SystemConfig(tp, pp))
+    sf_max = max(s.stream_frac for s in plan.stages)
+    if pp > 1 and sf_max == 0.0 and system.kind in ("hybrid", "act_only"):
+        mb_lm = sum(lm.stage_bubble) / pp
+        mb_ob = sum(ob.stage_bubble) / pp
+        resident_margins.append(mb_ob - mb_lm)
+        assert mb_ob <= mb_lm + 1e-9, f"resident bubble grew {mb_lm} -> {mb_ob}"
+        assert ob.makespan <= lm.makespan * (1.0 + 1e-12), "resident chunk-major lost"
+
+
+# ---- property 2: bubble-aware Algorithm 1 (policy/allocation.rs)
+
+
+def alloc_property(rng):
+    models = [opt_6_7b(), opt_13b(), opt_30b(), opt_66b()]
+    m = rng.choose(models)
+    s = SystemConfig(1, 1)
+    cm = analytic_cost_model(m, s)
+    sizes = BlockSizes(m, 16)
+    act_gpu = rng.range(0, 100_000)
+    host = rng.range(1 << 28, 400 << 30)
+    a0, k0 = hybrid_cache_allocation(cm, act_gpu, host, sizes, 0.0)
+    ad, kd = hybrid_cache_allocation(cm, act_gpu, host, sizes)
+    assert (a0, k0) == (ad, kd), "bubble=0 must reduce to today's answer"
+    prev = None
+    for i in range(0, 21):
+        b = i / 20.0
+        a, k = hybrid_cache_allocation(cm, act_gpu, host, sizes, b)
+        assert a * sizes.act_bytes + k * sizes.kv_bytes <= host, "oversubscribed"
+        f = a / max(a + k, 1)
+        if prev is not None:
+            assert f <= prev + 1e-12, f"ACT fraction grew at bubble {b}: {prev} -> {f}"
+        prev = f
+
+
+if __name__ == "__main__":
+    import time
+
+    t0 = time.time()
+    check("alloc-bubble-monotone", 60, alloc_property)
+    print(f"alloc-bubble-monotone: 60 cases OK ({time.time()-t0:.1f}s)")
+    t0 = time.time()
+    check("schedule-axis", 100, schedule_property)
+    print(f"schedule-axis: 100 cases OK ({time.time()-t0:.1f}s)")
+    if bubble_up_margins:
+        print(f"  auto-picked-1f1b cases: {len(bubble_up_margins)}, worst bubble growth {max(bubble_up_margins):+.4f}")
+    if resident_margins:
+        print(f"  resident cases: {len(resident_margins)}, worst bubble growth {max(resident_margins):+.4f}")

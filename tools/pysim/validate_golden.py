@@ -1,0 +1,58 @@
+"""Validate the port against the committed goldens (pre-change behavior)."""
+
+import json
+import sys
+
+sys.path.insert(0, "/root/repo/tools/pysim")
+from port import *  # noqa
+
+
+def check(name, got, want, tol=1e-9):
+    rel = abs(got - want) / want
+    status = "OK " if rel <= tol else "FAIL"
+    print(f"  {status} {name}: got {got!r} want {want!r} rel {rel:.2e}")
+    return rel <= tol
+
+
+def main():
+    ok = True
+
+    g = json.load(open("/root/repo/rust/tests/golden/sim_opt6_7b.json"))
+    wl = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+    m = opt_6_7b()
+    s = SystemConfig(1, 1)
+    print("golden sim_opt6_7b (tp=1, pp=1):")
+    for key, system in [("hybrid", HYBRID), ("flexgen", FLEXGEN), ("deepspeed", DEEPSPEED), ("act_only", ACT_ONLY)]:
+        r = simulate(m, s, system, wl, bubble_aware=False)
+        ok &= check(key, r.throughput, g["throughput"][key])
+
+    g = json.load(open("/root/repo/rust/tests/golden/sim_opt175b_tp2pp4.json"))
+    wl = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+    m = opt_175b()
+    s = SystemConfig(g["topology"]["tp"], g["topology"]["pp"])
+    print("golden sim_opt175b_tp2pp4 (tp=2, pp=4), bubble-aware allocator:")
+    for key, system in [("hybrid", HYBRID), ("flexgen", FLEXGEN), ("deepspeed", DEEPSPEED), ("act_only", ACT_ONLY)]:
+        r = simulate(m, s, system, wl)
+        ok &= check(key, r.throughput, g["throughput"][key])
+
+    # Historical cross-check: the pre-ISSUE-4 allocator (no bubble in
+    # Eq. 11) must still reproduce the value golden_pp pinned before the
+    # re-pin — proves the port models both generations of the policy.
+    print("pre-bubble-aware allocator reproduces the PR-3 pin:")
+    r = simulate(m, s, HYBRID, wl, bubble_aware=False)
+    ok &= check("hybrid (PR-3)", r.throughput, 281.21887836856496)
+
+    g = json.load(open("/root/repo/rust/tests/golden/sim_opt175b_tp2pp4_schedules.json"))
+    print("golden sim_opt175b_tp2pp4_schedules (both lowerings):")
+    for sched in [LAYER_MAJOR, ONE_F_ONE_B]:
+        s2 = SystemConfig(2, 4, sched)
+        for key, system in [("hybrid", HYBRID), ("flexgen", FLEXGEN), ("deepspeed", DEEPSPEED), ("act_only", ACT_ONLY)]:
+            r = simulate(m, s2, system, wl)
+            ok &= check(f"{sched}/{key}", r.throughput, g["throughput"][sched][key])
+
+    print("ALL OK" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
