@@ -1,0 +1,87 @@
+//! Mixed-memory sweep (ISSUE 5): OPT-66B on a TP=2×PP=2 grid, sweeping
+//! stage 1's device memory from the testbed's 24 GB up to 80 GB while
+//! stage 0 stays on 24 GB cards — the fleet-mixing scenario (40/80 GB
+//! device classes in one rig) the `MemoryPlan` refactor exists for.
+//!
+//! Three views per memory level:
+//!  * residency — stage 1's pacing streamed-weight fraction and the rig's
+//!    resident-ACT census (min over devices) straight off the plan's
+//!    `MemoryPlan`;
+//!  * offline — the full-scale simulator's throughput for HybridServe
+//!    and FlexGen (per-device weight streams: only stage 1 speeds up);
+//!  * policy — Algorithm 1 run PER STAGE (`stage_cache_allocations`):
+//!    as stage 1's weight slice goes resident its recomputation window
+//!    collapses and ITS ACT fraction drops toward KV while stage 0's
+//!    stays put — the per-stage Eq. 11 split a rig-level scalar budget
+//!    could never express.
+//!
+//! Run with `cargo run --release --example mixed_memory_sweep`.
+
+use hybridserve::config::SystemConfig;
+use hybridserve::harness::FigureTable;
+use hybridserve::plan::ExecutionPlan;
+use hybridserve::policy::{stage_cache_allocations, HostAllocation, PolicyConfig};
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::ModelConfig;
+
+fn act_fraction(a: &HostAllocation) -> f64 {
+    a.act_blocks as f64 / (a.act_blocks + a.kv_blocks).max(1) as f64
+}
+
+fn main() {
+    let m = ModelConfig::opt_66b();
+    let wl = Workload {
+        batch: 64,
+        prompt: 512,
+        gen: 64,
+    };
+    let policy = PolicyConfig::full();
+    let host_cache = 400usize << 30;
+
+    let mut t = FigureTable::new(
+        "mixed_memory_sweep",
+        &[
+            "stage1_mem_gb",
+            "stage1_stream_frac",
+            "rig_act_capacity_blocks",
+            "hybrid_tok_s",
+            "flexgen_tok_s",
+            "stage0_act_frac",
+            "stage1_act_frac",
+        ],
+    );
+
+    for gb in [24usize, 32, 40, 48, 64, 80] {
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_stage_memory(1, gb << 30),
+        );
+        let plan = ExecutionPlan::for_system(&m, &sys);
+        let mp = plan.memory();
+
+        let hybrid = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), wl);
+        let flex = simulate(&m, &sys, System::FlexGen, wl);
+        let per_stage = stage_cache_allocations(&policy, &m, &sys, &plan, host_cache, 0.0);
+
+        t.row(vec![
+            format!("{gb}"),
+            format!("{:.3}", plan.stages[1].stream_frac),
+            format!("{}", mp.act_capacity_blocks()),
+            format!("{:.1}", hybrid.throughput),
+            format!("{:.1}", flex.throughput),
+            format!("{:.3}", act_fraction(&per_stage[0])),
+            format!("{:.3}", act_fraction(&per_stage[1])),
+        ]);
+        println!(
+            "stage1 {gb:>2} GB: stream {:.3} | hybrid {:>6.1} tok/s, flexgen {:>6.1} tok/s | \
+             ACT frac stage0 {:.3} stage1 {:.3}",
+            plan.stages[1].stream_frac,
+            hybrid.throughput,
+            flex.throughput,
+            act_fraction(&per_stage[0]),
+            act_fraction(&per_stage[1]),
+        );
+    }
+    t.emit();
+}

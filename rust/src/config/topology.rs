@@ -204,6 +204,27 @@ impl Topology {
         self
     }
 
+    /// Set one device's memory size (mixed-memory rigs: a 24 GB card
+    /// next to 48/80 GB cards). The plan lowers per-device residency
+    /// budgets from these, so heterogeneous sizes are config, not code.
+    pub fn with_memory(mut self, stage: usize, rank: usize, memory_bytes: usize) -> Self {
+        assert!(memory_bytes > 0, "device memory must be positive");
+        let d = self.device(stage, rank);
+        self.slots[d].gpu.memory_bytes = memory_bytes;
+        self
+    }
+
+    /// Set every device of `stage` to `memory_bytes` (a whole stage on a
+    /// different device class — the mixed-memory sweep knob).
+    pub fn with_stage_memory(mut self, stage: usize, memory_bytes: usize) -> Self {
+        assert!(memory_bytes > 0, "device memory must be positive");
+        assert!(stage < self.pp, "stage out of range");
+        for d in self.stage_devices(stage) {
+            self.slots[d].gpu.memory_bytes = memory_bytes;
+        }
+        self
+    }
+
     /// Put `stage` on an NVLink-island collective fabric.
     pub fn with_nvlink_stage(mut self, stage: usize) -> Self {
         assert!(stage < self.pp, "stage out of range");
@@ -274,6 +295,22 @@ mod tests {
         // NVLink stage's all-gather is much faster than the PCIe stages'
         assert!(t.allgather_time(2, 1 << 26) < t.allgather_time(0, 1 << 26) / 5.0);
         assert!(paper().is_uniform());
+    }
+
+    #[test]
+    fn memory_builders_set_slots() {
+        let t = paper()
+            .with_memory(0, 1, 8 << 30)
+            .with_stage_memory(2, 48 << 30);
+        assert!(!t.is_uniform());
+        assert_eq!(t.slot(1).gpu.memory_bytes, 8 << 30);
+        assert_eq!(t.slot(0).gpu.memory_bytes, 24 << 30);
+        for d in t.stage_devices(2) {
+            assert_eq!(t.slot(d).gpu.memory_bytes, 48 << 30);
+        }
+        // only memory changes: clocks and links stay nominal
+        assert_eq!(t.slot(1).gpu.peak_flops, GpuSpec::rtx_4090().peak_flops);
+        assert_eq!(t.slot(1).link, InterconnectSpec::pcie4_x16());
     }
 
     #[test]

@@ -19,9 +19,12 @@
 //!   chunk-major 1F1B / auto)
 //! - [`plan`] — `PlanBuilder` lowering a (model, topology) pair into the
 //!   `ExecutionPlan` (stage layer ranges, per-device weight slices,
-//!   collective schedule, inter-stage transfers, and the resolved
-//!   `PipelineSchedule` with its bubble/duplication estimates) that sim,
-//!   policy, scheduler and engine all consume
+//!   collective schedule, inter-stage transfers, the resolved
+//!   `PipelineSchedule` with its bubble/duplication estimates, and the
+//!   per-device `MemoryPlan` residency table — weight/staging/cache
+//!   budgets, streamed fractions and block censuses per device, the
+//!   authority that admits memory-heterogeneous grids) that sim, policy,
+//!   scheduler and engine all consume
 //! - [`util`] — offline-build substrates: JSON, PRNG, stats, prop-testing
 //! - [`memsim`] — GPU/host capacity accounting
 //! - [`pcie`] — interconnect model, traffic classes, and the 2×N-lane
@@ -36,9 +39,10 @@
 //! - [`engine`] — prefill/decode execution with the hybrid cache; exposes
 //!   the step-wise `admit`/`step`/`retire` API and closed-batch `serve`
 //! - [`sched`] — online serving scheduler: admission queue, continuous
-//!   batching, ACT-demotion preemption, plan-derived reservation ledger;
-//!   plus the artifact-free analytic step engine for sharded serving
-//!   experiments
+//!   batching, ACT-demotion preemption, plan-derived per-device
+//!   reservation ledger (`Booking` receipts) with pressed-device
+//!   (`StagePressure`) victim scoring; plus the artifact-free analytic
+//!   step engine for sharded serving experiments
 //! - [`workload`] — synthetic batches + timed arrival traces (Poisson,
 //!   bursty on/off, deterministic replay)
 //! - [`metrics`] — offline serve reports and the online `SloReport`
@@ -46,14 +50,14 @@
 //!   utilization, straggler gap, per-stage pipeline bubbles)
 //! - [`server`] — TCP front-end driving the scheduler loop
 //! - [`sim`] — full-scale analytic simulator (paper-figure workloads,
-//!   TP×PP grids, heterogeneous straggler rigs, layer-major vs
-//!   chunk-major pipeline schedules)
+//!   TP×PP grids, heterogeneous straggler AND mixed-memory rigs,
+//!   layer-major vs chunk-major pipeline schedules)
 //! - [`figures`] — table/figure regeneration used by benches and tests
 //! - [`harness`] — timing/CSV bench harness (no criterion offline)
 
-// The suffix-free device-0 `Timeline` accessors are `#[deprecated]` thin
-// wrappers; in-crate tests must not regress onto them (the two intentional
-// pin-the-wrapper tests carry local `#[allow(deprecated)]`).
+// The deprecated shard-0 `Timeline` wrappers were removed in PR 5; keep
+// the gate so any future deprecation cannot quietly accumulate in-crate
+// callers the way the suffix-free accessors once did.
 #![cfg_attr(test, deny(deprecated))]
 
 pub mod cache;

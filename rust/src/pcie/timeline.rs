@@ -12,9 +12,10 @@
 //! two-lane implementation (see the equivalence property tests below and
 //! `rust/tests/tp1_equivalence.rs`).
 //!
-//! The plan-indexed accessors (`*_on(device, …)`) are the API; the
-//! suffix-free device-0 methods are `#[deprecated]` thin wrappers kept
-//! for the historical single-GPU surface.
+//! The plan-indexed accessors (`*_on(device, …)`) are the API. The
+//! suffix-free device-0 wrappers that once mirrored the historical
+//! single-GPU surface were `#[deprecated]` in PR 3 and removed in PR 5 —
+//! every caller addresses its device explicitly.
 
 /// A pipeline lane within one device. The paper's timeline diagrams have
 /// exactly these two per GPU.
@@ -58,8 +59,8 @@ impl Span {
 /// expresses its data dependencies (ends of earlier spans). Utilization
 /// and makespan fall straight out of the bookkeeping. Device-addressed
 /// methods carry an `_on` suffix and take the global device id of the
-/// execution plan (`stage * tp + rank`); the suffix-free methods are
-/// deprecated device-0 wrappers (exactly the historical single-GPU API).
+/// execution plan (`stage * tp + rank`); device 0 of a single-device
+/// timeline is exactly the historical two-lane pipeline.
 #[derive(Debug, Clone)]
 pub struct Timeline {
     devices: usize,
@@ -119,13 +120,6 @@ impl Timeline {
         device * 2 + lane.idx()
     }
 
-    /// Schedule an operation of `duration` seconds on device 0's `lane`,
-    /// not earlier than `ready_at`. Returns the realized span.
-    #[deprecated(note = "address the device explicitly: use `schedule_on(device, ...)`")]
-    pub fn schedule(&mut self, lane: Lane, ready_at: f64, duration: f64) -> Span {
-        self.schedule_on(0, lane, ready_at, duration)
-    }
-
     /// Schedule an operation of `duration` seconds on `device`'s `lane`,
     /// not earlier than `ready_at`. Returns the realized span.
     pub fn schedule_on(&mut self, device: usize, lane: Lane, ready_at: f64, duration: f64) -> Span {
@@ -180,12 +174,6 @@ impl Timeline {
         Span { start, end }
     }
 
-    /// Earliest time device 0's `lane` can start a new operation.
-    #[deprecated(note = "address the device explicitly: use `lane_free_on(device, ...)`")]
-    pub fn lane_free(&self, lane: Lane) -> f64 {
-        self.lane_free_on(0, lane)
-    }
-
     /// Earliest time `device`'s `lane` can start a new operation.
     pub fn lane_free_on(&self, device: usize, lane: Lane) -> f64 {
         self.lane_free[self.slot(device, lane)]
@@ -205,12 +193,6 @@ impl Timeline {
         self.makespan = self.makespan.max(t);
     }
 
-    /// Total busy seconds accumulated on device 0's `lane`.
-    #[deprecated(note = "address the device explicitly: use `busy_on(device, ...)`")]
-    pub fn busy(&self, lane: Lane) -> f64 {
-        self.busy_on(0, lane)
-    }
-
     /// Total busy seconds accumulated on `device`'s `lane`.
     pub fn busy_on(&self, device: usize, lane: Lane) -> f64 {
         self.busy[self.slot(device, lane)]
@@ -219,12 +201,6 @@ impl Timeline {
     /// End of the last scheduled operation across all lanes.
     pub fn makespan(&self) -> f64 {
         self.makespan
-    }
-
-    /// Temporal utilization of device 0's `lane`.
-    #[deprecated(note = "address the device explicitly: use `utilization_on(device, ...)`")]
-    pub fn utilization(&self, lane: Lane) -> f64 {
-        self.utilization_on(0, lane)
     }
 
     /// Temporal utilization of `device`'s `lane`: busy time / makespan
@@ -238,21 +214,9 @@ impl Timeline {
         }
     }
 
-    /// Number of operations scheduled on device 0's `lane`.
-    #[deprecated(note = "address the device explicitly: use `op_count_on(device, ...)`")]
-    pub fn op_count(&self, lane: Lane) -> usize {
-        self.op_count_on(0, lane)
-    }
-
     /// Number of operations scheduled on `device`'s `lane`.
     pub fn op_count_on(&self, device: usize, lane: Lane) -> usize {
         self.ops[self.slot(device, lane)]
-    }
-
-    /// Idle (bubble) seconds on device 0's `lane` up to the makespan.
-    #[deprecated(note = "address the device explicitly: use `idle_on(device, ...)`")]
-    pub fn idle(&self, lane: Lane) -> f64 {
-        self.idle_on(0, lane)
     }
 
     /// Idle (bubble) seconds on `device`'s `lane` up to the makespan.
@@ -399,22 +363,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_are_device_zero() {
-        // The legacy suffix-free accessors must stay exact thin wrappers
-        // over the plan-indexed API (single migration point).
-        let mut t = Timeline::sharded(2);
-        let a = t.schedule(Lane::Gpu, 0.5, 1.5);
-        assert_eq!(a, Span { start: 0.5, end: 2.0 });
-        t.schedule_on(1, Lane::Gpu, 0.0, 9.0);
-        assert_eq!(t.busy(Lane::Gpu), t.busy_on(0, Lane::Gpu));
-        assert_eq!(t.lane_free(Lane::Gpu), t.lane_free_on(0, Lane::Gpu));
-        assert_eq!(t.utilization(Lane::Gpu), t.utilization_on(0, Lane::Gpu));
-        assert_eq!(t.op_count(Lane::Gpu), t.op_count_on(0, Lane::Gpu));
-        assert_eq!(t.idle(Lane::Gpu), t.idle_on(0, Lane::Gpu));
-    }
-
-    #[test]
     fn property_busy_never_exceeds_makespan() {
         crate::util::prop::check("timeline-busy", 200, |rng| {
             let mut t = Timeline::new();
@@ -500,12 +448,11 @@ mod tests {
         });
     }
 
-    /// `Timeline::sharded(1)` is bit-for-bit the historical two-lane
-    /// timeline under arbitrary schedules (the span-level half of the
-    /// TP=1 equivalence argument; the `SimResult`-level half lives in
-    /// `rust/tests/tp1_equivalence.rs`).
+    /// `Timeline::new()` and `Timeline::sharded(1)` are the same
+    /// two-lane pipeline under arbitrary schedules (the span-level half
+    /// of the TP=1 equivalence argument; the `SimResult`-level half
+    /// lives in `rust/tests/tp1_equivalence.rs`).
     #[test]
-    #[allow(deprecated)]
     fn property_tp1_sharded_matches_two_lane() {
         crate::util::prop::check("timeline-tp1-equivalence", 100, |rng| {
             let mut a = Timeline::new();
@@ -515,17 +462,17 @@ mod tests {
                 let lane = if rng.f64() < 0.5 { Lane::PCIe } else { Lane::Gpu };
                 let ready = if rng.f64() < 0.3 { last_end } else { 0.0 };
                 let dur = rng.f64() * 2.0;
-                let sa = a.schedule(lane, ready, dur);
+                let sa = a.schedule_on(0, lane, ready, dur);
                 let sb = b.schedule_on(0, lane, ready, dur);
                 assert_eq!(sa, sb, "span diverged between TP=1 code paths");
                 last_end = sa.end;
             }
             assert_eq!(a.makespan(), b.makespan());
             for lane in [Lane::PCIe, Lane::Gpu] {
-                assert_eq!(a.busy(lane), b.busy_on(0, lane));
-                assert_eq!(a.lane_free(lane), b.lane_free_on(0, lane));
-                assert_eq!(a.op_count(lane), b.op_count_on(0, lane));
-                assert_eq!(a.utilization(lane), b.utilization_on(0, lane));
+                assert_eq!(a.busy_on(0, lane), b.busy_on(0, lane));
+                assert_eq!(a.lane_free_on(0, lane), b.lane_free_on(0, lane));
+                assert_eq!(a.op_count_on(0, lane), b.op_count_on(0, lane));
+                assert_eq!(a.utilization_on(0, lane), b.utilization_on(0, lane));
             }
         });
     }

@@ -1,0 +1,305 @@
+//! `MemoryPlan`: the per-device residency/budget authority of an
+//! [`ExecutionPlan`].
+//!
+//! Before this module every consumer re-derived memory budgets from one
+//! rig-level scalar: `SimCost` carried a single `stream_frac`, the
+//! allocation policy read `SystemConfig::gpu_cache_budget()` (slot-0
+//! memory), and `PlanBuilder` hard-rejected topologies whose slots
+//! differed in `memory_bytes`. The `MemoryPlan` replaces that scalar
+//! arithmetic with a per-device table computed ONCE by [`PlanBuilder`]:
+//! each grid device partitions *its own* `memory_bytes` with the system's
+//! weight/buffer fractions, prices *its own* streamed weight fraction
+//! against its stage's `1/tp` slice, and reports *its own* resident
+//! KV/ACT block census over its stage's layers. Rig-level answers are
+//! explicit reductions (`min` for capacities — a block is resident only
+//! when every device holds its share; `max` for stream fractions — the
+//! slowest stream paces the weight pipeline), so heterogeneous-memory
+//! grids (24 GB cards next to 80 GB cards) are config, not code.
+//!
+//! Uniform grids degenerate to the historical arithmetic EXACTLY: every
+//! expression here is the same f64/usize sequence the scalar code used,
+//! evaluated per device — `rust/tests/memory_plan.rs` pins the
+//! equivalence and the sim goldens pin the end-to-end results.
+//!
+//! [`ExecutionPlan`]: super::ExecutionPlan
+//! [`PlanBuilder`]: super::PlanBuilder
+
+use crate::config::{ModelConfig, SystemConfig};
+
+/// One device's memory budget under the plan: how its `memory_bytes`
+/// split into resident weights, pinned staging and resident cache, and
+/// what that implies for its streamed weight fraction and block census.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceBudget {
+    /// Global device id (`stage * tp + rank`).
+    pub device: usize,
+    /// Pipeline stage owning this device.
+    pub stage: usize,
+    /// The device's total memory (from its topology slot).
+    pub memory_bytes: usize,
+    /// Bytes reserved for weights resident on this device
+    /// (`memory_bytes · gpu_weight_fraction` — the per-device
+    /// generalization of `SystemConfig::gpu_weight_budget`).
+    pub weight_resident_bytes: usize,
+    /// Bytes reserved for the double-buffered KV/ACT staging buffers
+    /// (`memory_bytes · gpu_buffer_fraction`).
+    pub pinned_staging_bytes: usize,
+    /// Bytes left for resident ACT blocks after weights + staging.
+    pub cache_bytes: usize,
+    /// Fraction of this device's `1/tp` weight slice of its stage that
+    /// streams from host per use (0 when the slice fits
+    /// `weight_resident_bytes`).
+    pub stream_frac: f64,
+    /// Resident-KV block census: how many KV blocks of this device's
+    /// stage-layer slice fit `cache_bytes`.
+    pub kv_capacity_blocks: usize,
+    /// Resident-ACT block census: how many ACT blocks of this device's
+    /// stage-layer slice fit `cache_bytes` (the Eq. 11 `#ACT_GPU` term).
+    pub act_capacity_blocks: usize,
+}
+
+/// Per-device residency table of an execution plan (`len == tp · pp`,
+/// plan device order). See the module docs for the reduction rules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryPlan {
+    devices: Vec<DeviceBudget>,
+}
+
+impl MemoryPlan {
+    /// Lower the per-device table for `plan`'s grid. Called by
+    /// [`super::PlanBuilder::build`]; consumers read it off the plan.
+    pub(super) fn lower(
+        model: &ModelConfig,
+        sys: &SystemConfig,
+        stages: &[super::StagePlan],
+        tp: usize,
+    ) -> Self {
+        let mut devices = Vec::with_capacity(sys.devices());
+        for s in stages {
+            // Per-device slice of the stage's weights — the SAME f64
+            // expression the scalar PlanBuilder used, against this
+            // device's own residency budget.
+            let shard_total = s.weight_bytes as f64 / tp as f64;
+            for d in s.devices.clone() {
+                let memory_bytes = sys.topology.slot(d).gpu.memory_bytes;
+                let weight_resident_bytes =
+                    (memory_bytes as f64 * sys.gpu_weight_fraction) as usize;
+                let pinned_staging_bytes =
+                    (memory_bytes as f64 * sys.gpu_buffer_fraction) as usize;
+                let cache_bytes =
+                    memory_bytes.saturating_sub(weight_resident_bytes + pinned_staging_bytes);
+                let stream_frac = ((shard_total - weight_resident_bytes as f64) / shard_total)
+                    .clamp(0.0, 1.0);
+                // Block census of this device's stage slice (per-device
+                // stripe of every layer the stage owns): same expression
+                // as the historical min-over-stages census, per device.
+                let act_block_bytes = (s.layer_count()
+                    * model.act_bytes_per_layer(sys.block_tokens))
+                .div_ceil(tp);
+                let kv_block_bytes = (s.layer_count()
+                    * model.kv_bytes_per_layer(sys.block_tokens))
+                .div_ceil(tp);
+                devices.push(DeviceBudget {
+                    device: d,
+                    stage: s.stage,
+                    memory_bytes,
+                    weight_resident_bytes,
+                    pinned_staging_bytes,
+                    cache_bytes,
+                    stream_frac,
+                    kv_capacity_blocks: cache_bytes / kv_block_bytes.max(1),
+                    act_capacity_blocks: cache_bytes / act_block_bytes.max(1),
+                });
+            }
+        }
+        Self { devices }
+    }
+
+    /// The budget table, in plan device order.
+    pub fn devices(&self) -> &[DeviceBudget] {
+        &self.devices
+    }
+
+    /// One device's budget.
+    pub fn device(&self, d: usize) -> &DeviceBudget {
+        &self.devices[d]
+    }
+
+    /// Streamed weight fraction of device `d`'s slice.
+    pub fn stream_frac(&self, d: usize) -> f64 {
+        self.devices[d].stream_frac
+    }
+
+    /// Largest per-device streamed fraction across the grid — the device
+    /// pacing the weight pipeline (ties keep the lowest id through
+    /// `fold`'s left bias).
+    pub fn max_stream_frac(&self) -> f64 {
+        self.devices.iter().map(|b| b.stream_frac).fold(0.0, f64::max)
+    }
+
+    /// Largest streamed fraction within one stage's TP group (the
+    /// stage's pacing device).
+    pub fn stage_max_stream_frac(&self, stage: usize) -> f64 {
+        self.devices
+            .iter()
+            .filter(|b| b.stage == stage)
+            .map(|b| b.stream_frac)
+            .fold(0.0, f64::max)
+    }
+
+    /// Rig resident-ACT block census: a block is GPU-resident only when
+    /// EVERY device holds its stage slice, so the tightest device bounds
+    /// the count (min over devices — on uniform grids identical to the
+    /// historical min-over-stages census).
+    pub fn act_capacity_blocks(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|b| b.act_capacity_blocks)
+            .min()
+            .expect("plan has at least one device")
+    }
+
+    /// Rig resident-KV block census (min over devices).
+    pub fn kv_capacity_blocks(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|b| b.kv_capacity_blocks)
+            .min()
+            .expect("plan has at least one device")
+    }
+
+    /// Resident-ACT census of one stage's TP group (min over its
+    /// devices).
+    pub fn stage_act_capacity(&self, stage: usize) -> usize {
+        self.devices
+            .iter()
+            .filter(|b| b.stage == stage)
+            .map(|b| b.act_capacity_blocks)
+            .min()
+            .expect("stage has at least one device")
+    }
+
+    /// Smallest per-device pinned-staging budget — what bounds the
+    /// double-buffered mini-batch staging everywhere (uniform grids:
+    /// exactly `SystemConfig::gpu_buffer_budget`).
+    pub fn min_pinned_staging_bytes(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|b| b.pinned_staging_bytes)
+            .min()
+            .expect("plan has at least one device")
+    }
+
+    /// Smallest per-device cache + staging total (the DeepSpeed-style
+    /// whole-batch residency bound; uniform grids: exactly
+    /// `gpu_cache_budget + gpu_buffer_budget`).
+    pub fn min_cache_plus_staging_bytes(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|b| b.cache_bytes + b.pinned_staging_bytes)
+            .min()
+            .expect("plan has at least one device")
+    }
+
+    /// The most memory-pressed device of the grid: the one streaming the
+    /// largest fraction of its weight slice, ties broken toward the
+    /// smaller resident-ACT census, then the lowest device id.
+    /// Introspection/diagnostics — rig-level Algorithm 1 budgets use the
+    /// min/max REDUCTIONS above directly (which realize this device's
+    /// window and census), and the scheduler's admission-time pressed
+    /// pool comes from `ShardLedger::pressed_device`.
+    pub fn pressed_device(&self) -> usize {
+        let mut best = 0usize;
+        for b in &self.devices[1..] {
+            let cur = &self.devices[best];
+            if b.stream_frac > cur.stream_frac
+                || (b.stream_frac == cur.stream_frac
+                    && b.act_capacity_blocks < cur.act_capacity_blocks)
+            {
+                best = b.device;
+            }
+        }
+        best
+    }
+
+    /// Every device on the same `memory_bytes`? (Budgets can still
+    /// differ per STAGE on uniform grids — layer splits skew the
+    /// censuses; this only detects per-slot memory skew.)
+    pub fn is_uniform(&self) -> bool {
+        self.devices
+            .windows(2)
+            .all(|w| w[0].memory_bytes == w[1].memory_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{ModelConfig, SystemConfig};
+    use crate::plan::ExecutionPlan;
+
+    #[test]
+    fn uniform_budgets_match_the_legacy_scalars() {
+        // On a uniform grid every device's budget is the historical
+        // SystemConfig arithmetic, value for value (the full seeded
+        // suite lives in rust/tests/memory_plan.rs).
+        let m = ModelConfig::opt_30b();
+        for (tp, pp) in [(1usize, 1usize), (2, 1), (2, 4)] {
+            let sys = SystemConfig::paper_testbed_grid(tp, pp);
+            let plan = ExecutionPlan::for_system(&m, &sys);
+            let mp = plan.memory();
+            assert!(mp.is_uniform());
+            assert_eq!(mp.devices().len(), tp * pp);
+            for b in mp.devices() {
+                assert_eq!(b.memory_bytes, sys.gpu.memory_bytes);
+                assert_eq!(b.weight_resident_bytes, sys.gpu_weight_budget());
+                assert_eq!(b.pinned_staging_bytes, sys.gpu_buffer_budget());
+                assert_eq!(b.cache_bytes, sys.gpu_cache_budget());
+                assert_eq!(b.stream_frac, plan.stages[b.stage].stream_frac);
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_memory_shows_per_device() {
+        // Stage 1 on 48 GB cards: its devices regain residency (smaller
+        // stream_frac, larger ACT census) while stage 0 keeps the 24 GB
+        // arithmetic untouched.
+        let m = ModelConfig::opt_66b();
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_stage_memory(1, 48 << 30),
+        );
+        let plan = ExecutionPlan::for_system(&m, &sys);
+        let mp = plan.memory();
+        assert!(!mp.is_uniform());
+        let s0 = &mp.devices()[0];
+        let s1 = &mp.devices()[2];
+        assert_eq!(s0.memory_bytes, 24 << 30);
+        assert_eq!(s1.memory_bytes, 48 << 30);
+        assert!(s1.stream_frac < s0.stream_frac);
+        assert!(s1.act_capacity_blocks > s0.act_capacity_blocks);
+        assert!(s1.kv_capacity_blocks > s0.kv_capacity_blocks);
+        // reductions: capacities bind at the tight stage, the pacing
+        // stream fraction at the starved one
+        assert_eq!(mp.act_capacity_blocks(), mp.stage_act_capacity(0));
+        assert_eq!(mp.max_stream_frac(), mp.stage_max_stream_frac(0));
+        assert_eq!(mp.min_pinned_staging_bytes(), s0.pinned_staging_bytes);
+        assert_eq!(mp.pressed_device(), 0);
+    }
+
+    #[test]
+    fn pressed_device_prefers_higher_stream_then_smaller_census() {
+        let m = ModelConfig::opt_66b();
+        // skew ONE device (stage 1, rank 1) down to 16 GB: it streams the
+        // most and is the pressed one.
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_memory(1, 1, 16 << 30),
+        );
+        let mp = ExecutionPlan::for_system(&m, &sys).memory().clone();
+        assert_eq!(mp.pressed_device(), 3);
+        assert_eq!(mp.act_capacity_blocks(), mp.device(3).act_capacity_blocks);
+    }
+}

@@ -27,6 +27,17 @@
 //! pre-topology per-shard arithmetic bit-for-bit (the f64 expressions are
 //! kept identical; `rust/tests/tp1_equivalence.rs` and the golden pins
 //! enforce it).
+//!
+//! Residency and budgets live in the plan's [`MemoryPlan`] (`memory`
+//! submodule): a per-device table of weight-residency, staging and cache
+//! budgets computed once here and consumed by `SimCost`, the allocation
+//! policy, the `ShardLedger` and the scheduler — which is what lets the
+//! builder accept grids whose slots differ in `memory_bytes` (uniform
+//! grids degenerate to the historical scalar arithmetic exactly).
+
+mod memory;
+
+pub use memory::{DeviceBudget, MemoryPlan};
 
 use crate::config::{ModelConfig, SchedulePolicy, SystemConfig, Topology};
 
@@ -80,8 +91,10 @@ pub struct StagePlan {
     /// Full (unsharded) weight bytes owned by the stage: its layers plus,
     /// on the last stage, the embedding table + tied LM head.
     pub weight_bytes: usize,
-    /// Fraction of each device's weight slice streamed from host per use
-    /// (0 when the `1/tp` slice fits the residency budget).
+    /// Streamed weight fraction of the stage's PACING device — the
+    /// largest per-device fraction in its TP group (identical on every
+    /// device of a memory-uniform stage). Per-device values live in the
+    /// plan's [`MemoryPlan`].
     pub stream_frac: f64,
 }
 
@@ -116,6 +129,8 @@ pub struct ExecutionPlan {
     /// with `Auto` settled by probe simulation and `pp = 1` collapsed to
     /// `LayerMajor`).
     pub schedule: PipelineSchedule,
+    /// Per-device residency/budget authority (see [`MemoryPlan`]).
+    memory: MemoryPlan,
 }
 
 impl ExecutionPlan {
@@ -128,6 +143,13 @@ impl ExecutionPlan {
     /// Total devices in the grid.
     pub fn device_count(&self) -> usize {
         self.tp * self.pp
+    }
+
+    /// The per-device residency/budget table this plan was lowered with
+    /// — the single authority every consumer queries instead of
+    /// re-deriving scalar budgets from `SystemConfig`.
+    pub fn memory(&self) -> &MemoryPlan {
+        &self.memory
     }
 
     /// The stage owning decoder layer `l`.
@@ -250,13 +272,12 @@ impl<'a> PlanBuilder<'a> {
     }
 
     /// Lower the plan. Panics if the model has fewer layers than the
-    /// topology has stages (an empty stage cannot be scheduled), if the
+    /// topology has stages (an empty stage cannot be scheduled) or if the
     /// system's legacy `shard` mirror was mutated out of sync with the
     /// topology — the PR-2-era way to scale out (`sys.shard = ...`) must
-    /// fail loudly here rather than silently simulate one GPU — or if
-    /// device MEMORY sizes differ across slots (clock and link skew are
-    /// honored per device; the residency/budget math still assumes one
-    /// uniform memory size — ROADMAP: memory-heterogeneous plans).
+    /// fail loudly here rather than silently simulate one GPU. Slots may
+    /// differ in clock, link AND `memory_bytes`: residency budgets are
+    /// lowered per device into the plan's [`MemoryPlan`].
     pub fn build(self) -> ExecutionPlan {
         let topo: &Topology = &self.sys.topology;
         assert_eq!(
@@ -265,14 +286,6 @@ impl<'a> PlanBuilder<'a> {
             "SystemConfig.shard (legacy read-only mirror) diverged from the \
              topology; set parallelism via Topology — e.g. \
              SystemConfig::paper_testbed_grid(tp, pp) or with_topology(...)"
-        );
-        assert!(
-            topo.slots
-                .iter()
-                .all(|s| s.gpu.memory_bytes == self.sys.gpu.memory_bytes),
-            "per-device memory sizes differ across slots; the residency \
-             arithmetic assumes a uniform device-memory budget (skew clocks \
-             or links instead, or wait for memory-heterogeneous plans)"
         );
         let (tp, pp) = (topo.tp, topo.pp);
         let nl = self.model.num_layers;
@@ -293,19 +306,23 @@ impl<'a> PlanBuilder<'a> {
                 // Embedding + tied LM head live where logits are computed.
                 weight_bytes += self.model.embedding_bytes();
             }
-            // Per-device slice vs residency budget — the SAME f64
-            // expression the pre-topology SimCost used at pp = 1, so the
-            // streamed fraction is bit-for-bit identical there.
-            let shard_total = weight_bytes as f64 / tp as f64;
-            let stream_frac = ((shard_total - self.sys.gpu_weight_budget() as f64) / shard_total)
-                .clamp(0.0, 1.0);
             stages.push(StagePlan {
                 stage: s,
                 layers,
                 devices: s * tp..(s + 1) * tp,
                 weight_bytes,
-                stream_frac,
+                // Filled from the MemoryPlan below (the stage's pacing
+                // device); per-device values live there.
+                stream_frac: 0.0,
             });
+        }
+        // Per-device residency authority; each device prices its own
+        // slice against its own memory (the SAME f64 expression the
+        // pre-topology SimCost used, so uniform grids are bit-for-bit
+        // identical). The stage-level field mirrors the pacing device.
+        let memory = MemoryPlan::lower(self.model, self.sys, &stages, tp);
+        for s in &mut stages {
+            s.stream_frac = memory.stage_max_stream_frac(s.stage);
         }
         // Resolve the schedule axis: one stage always lowers layer-major
         // (chunk-major has nothing to overlap and would only forfeit the
@@ -326,6 +343,7 @@ impl<'a> PlanBuilder<'a> {
             stages,
             collectives_per_layer: 2,
             schedule,
+            memory,
         }
     }
 }
@@ -433,27 +451,28 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "memory sizes differ")]
-    fn memory_skewed_slots_are_rejected() {
-        // Clock/link skew is modeled; a smaller-memory device is NOT (the
-        // residency budget is uniform) — reject rather than silently
-        // treat an 8 GB card as a 24 GB one.
-        use crate::config::{DeviceSlot, GpuSpec, InterconnectSpec};
+    fn memory_skewed_slots_are_accepted_per_device() {
+        // The PR-5 headline: an 8 GB card next to 24 GB cards lowers to
+        // per-device budgets instead of being rejected — the small card
+        // streams more of its slice and binds the resident-ACT census,
+        // and the stage field mirrors its pacing (max) fraction.
         let m = ModelConfig::opt_30b();
-        let mut small = GpuSpec::rtx_4090();
-        small.memory_bytes = 8 << 30;
         let topo = SystemConfig::paper_testbed_tp(2)
             .topology
-            .with_slot(
-                0,
-                1,
-                DeviceSlot {
-                    gpu: small,
-                    link: InterconnectSpec::pcie4_x16(),
-                },
-            );
+            .with_memory(0, 1, 8 << 30);
         let sys = SystemConfig::with_topology(topo);
-        let _ = ExecutionPlan::for_system(&m, &sys);
+        let p = ExecutionPlan::for_system(&m, &sys);
+        let mp = p.memory();
+        assert!(!mp.is_uniform());
+        assert!(mp.stream_frac(1) > mp.stream_frac(0));
+        assert_eq!(p.stages[0].stream_frac, mp.stream_frac(1));
+        assert_eq!(mp.pressed_device(), 1);
+        assert!(mp.device(1).act_capacity_blocks < mp.device(0).act_capacity_blocks);
+        assert_eq!(mp.act_capacity_blocks(), mp.device(1).act_capacity_blocks);
+        // the uniform grid's stage field still equals every device's frac
+        let uni = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_tp(2));
+        assert_eq!(uni.stages[0].stream_frac, uni.memory().stream_frac(0));
+        assert_eq!(uni.stages[0].stream_frac, uni.memory().stream_frac(1));
     }
 
     #[test]

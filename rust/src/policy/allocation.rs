@@ -9,6 +9,8 @@
 
 use super::regression::{CostModel, LinearCost};
 use crate::cache::BlockSizes;
+use crate::config::{ModelConfig, SystemConfig};
+use crate::plan::ExecutionPlan;
 
 /// Cap on the bubble fraction fed into the cost scaling: a bubble of
 /// exactly 1 would make recomputation infinitely expensive and poison the
@@ -40,6 +42,53 @@ pub struct AllocationInputs {
 }
 
 impl AllocationInputs {
+    /// Rig-level inputs from the plan's [`crate::plan::MemoryPlan`]: the
+    /// fitted cost model's weight window comes from the grid's pacing
+    /// device and `#ACT_GPU` from the tightest device's census — the
+    /// PRESSED device's view of the rig, not slot-0's. On memory-uniform
+    /// grids this is exactly the historical construction, value for
+    /// value.
+    pub fn for_plan(
+        model: &ModelConfig,
+        sys: &SystemConfig,
+        plan: &ExecutionPlan,
+        host_cache_bytes: usize,
+        bubble: f64,
+    ) -> Self {
+        Self {
+            cost: CostModel::analytic_for_plan(model, sys, plan),
+            act_gpu_blocks: plan.memory().act_capacity_blocks(),
+            host_cache_bytes,
+            sizes: BlockSizes::new(model, sys.block_tokens),
+            bubble,
+        }
+    }
+
+    /// Inputs for ONE pipeline stage: the weight window is the stage's
+    /// own pacing device ([`CostModel::analytic_for_stage`]) and
+    /// `#ACT_GPU` its own TP group's census. On memory-heterogeneous
+    /// grids a 24 GB stage and an 80 GB stage therefore see different
+    /// recomputation windows — Algorithm 1 run per stage yields a
+    /// different ACT:KV mix per stage (DESIGN.md §MemoryPlan).
+    /// `host_cache_bytes` is whatever host-pool share the caller assigns
+    /// the stage.
+    pub fn for_stage(
+        model: &ModelConfig,
+        sys: &SystemConfig,
+        plan: &ExecutionPlan,
+        stage: usize,
+        host_cache_bytes: usize,
+        bubble: f64,
+    ) -> Self {
+        Self {
+            cost: CostModel::analytic_for_stage(model, sys, plan, stage),
+            act_gpu_blocks: plan.memory().stage_act_capacity(stage),
+            host_cache_bytes,
+            sizes: BlockSizes::new(model, sys.block_tokens),
+            bubble,
+        }
+    }
+
     /// The recomputation cost line as the bubble-degraded GPU sees it:
     /// slope and intercept scaled by `1/(1−bubble)`. Exactly `kv_gen` at
     /// bubble = 0 (multiplication by 1.0 is exact in f64).
@@ -168,6 +217,27 @@ pub fn hybrid_cache_allocation(inp: &AllocationInputs) -> HostAllocation {
         act_init,
         kv_init,
     }
+}
+
+/// Algorithm 1 run once PER PIPELINE STAGE against each stage's own
+/// pressed-device budget ([`AllocationInputs::for_stage`]), splitting the
+/// host pool evenly across stages. The returned vector has one
+/// [`HostAllocation`] per stage: on memory-heterogeneous grids the ACT
+/// share differs per stage (a large-memory stage keeps its weights
+/// resident — no recompute window, mix shifts to KV — while a starved
+/// stage's long weight stream buys free recomputation).
+pub fn stage_cache_allocations(
+    policy: &super::PolicyConfig,
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    plan: &ExecutionPlan,
+    host_cache_bytes: usize,
+    bubble: f64,
+) -> Vec<HostAllocation> {
+    let share = host_cache_bytes / plan.pp.max(1);
+    (0..plan.pp)
+        .map(|s| policy.allocate(&AllocationInputs::for_stage(model, sys, plan, s, share, bubble)))
+        .collect()
 }
 
 /// Ablation baseline (§5.5): split host cache bytes 1:1 between the two
@@ -342,6 +412,73 @@ mod tests {
                 assert!(alloc.total_bytes(&inp.sizes) <= inp.host_cache_bytes);
             }
         });
+    }
+
+    // ---- MemoryPlan-backed inputs (ISSUE 5) ---------------------------
+
+    #[test]
+    fn for_plan_is_the_manual_construction_on_uniform_grids() {
+        use crate::plan::ExecutionPlan;
+        let m = ModelConfig::opt_30b();
+        let sys = SystemConfig::paper_testbed_tp(2);
+        let plan = ExecutionPlan::for_system(&m, &sys);
+        let auto = AllocationInputs::for_plan(&m, &sys, &plan, 200usize << 30, 0.0);
+        let manual = AllocationInputs {
+            cost: CostModel::analytic_for_plan(&m, &sys, &plan),
+            act_gpu_blocks: plan.memory().act_capacity_blocks(),
+            host_cache_bytes: 200usize << 30,
+            sizes: BlockSizes::new(&m, sys.block_tokens),
+            bubble: 0.0,
+        };
+        assert_eq!(auto.act_gpu_blocks, manual.act_gpu_blocks);
+        assert_eq!(auto.cost.load_w, manual.cost.load_w);
+        assert_eq!(
+            hybrid_cache_allocation(&auto),
+            hybrid_cache_allocation(&manual)
+        );
+    }
+
+    #[test]
+    fn stage_allocations_differ_under_memory_skew() {
+        // The ISSUE-5 policy headline: Algorithm 1 per stage. Put stage 1
+        // of an OPT-66B 2×2 grid on 80 GB cards — its weight slice goes
+        // fully resident, the recompute window collapses, and ITS mix
+        // shifts hard toward KV while the starved 24 GB stage keeps a
+        // large ACT share.
+        use crate::plan::ExecutionPlan;
+        let m = ModelConfig::opt_66b();
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_stage_memory(1, 80 << 30),
+        );
+        let plan = ExecutionPlan::for_system(&m, &sys);
+        let policy = crate::policy::PolicyConfig::full();
+        let per_stage =
+            stage_cache_allocations(&policy, &m, &sys, &plan, 400usize << 30, 0.0);
+        assert_eq!(per_stage.len(), 2);
+        let share = |a: &HostAllocation| {
+            a.act_blocks as f64 / (a.act_blocks + a.kv_blocks).max(1) as f64
+        };
+        assert!(
+            share(&per_stage[0]) > share(&per_stage[1]),
+            "starved stage {} !> resident stage {}",
+            share(&per_stage[0]),
+            share(&per_stage[1])
+        );
+        // each stage stays inside its host share
+        let sizes = BlockSizes::new(&m, sys.block_tokens);
+        for a in &per_stage {
+            assert!(a.total_bytes(&sizes) <= 200usize << 30);
+        }
+        // uniform grid: per-stage runs still partition and stay sane
+        let uni_sys = SystemConfig::paper_testbed_grid(2, 2);
+        let uni_plan = ExecutionPlan::for_system(&m, &uni_sys);
+        let uni = stage_cache_allocations(&policy, &m, &uni_sys, &uni_plan, 400usize << 30, 0.0);
+        assert_eq!(uni.len(), 2);
+        for a in &uni {
+            assert!(a.act_blocks + a.kv_blocks > 0);
+        }
     }
 
     // ---- bubble-aware Algorithm 1 (ISSUE 4) ---------------------------

@@ -19,7 +19,7 @@ pub mod request_alloc;
 
 pub use allocation::{
     act_only_allocation, even_split_allocation, hybrid_cache_allocation, kv_only_allocation,
-    AllocationInputs, HostAllocation,
+    stage_cache_allocations, AllocationInputs, HostAllocation,
 };
 pub use minibatch::{balance, f_b, fcfs_minibatches, form_minibatches, BinCaps, MiniBatch, ReqFootprint};
 pub use regression::{AnalyticSampler, CostModel, CostSampler, LinearCost, SAMPLE_POINTS};

@@ -91,6 +91,11 @@ pub struct AnalyticSampler<'a> {
     /// runs its probe exactly once and the fitted `load_w` can never
     /// disagree with the schedule the caller's plan executes.
     plan: ExecutionPlan,
+    /// Restrict the weight-window sizing to one pipeline stage's devices
+    /// (`None` = the whole rig's pacing device). Per-stage windows are
+    /// what lets Algorithm 1's ACT:KV mix differ per stage on
+    /// memory-heterogeneous grids.
+    stage: Option<usize>,
 }
 
 impl<'a> AnalyticSampler<'a> {
@@ -101,13 +106,36 @@ impl<'a> AnalyticSampler<'a> {
             plan: ExecutionPlan::for_system(model, sys),
             model,
             sys,
+            stage: None,
         }
     }
 
     /// Build over an already-lowered plan (e.g. the one `SimCost` holds),
     /// skipping the redundant lowering entirely.
     pub fn for_plan(model: &'a ModelConfig, sys: &'a SystemConfig, plan: ExecutionPlan) -> Self {
-        Self { model, sys, plan }
+        Self {
+            model,
+            sys,
+            plan,
+            stage: None,
+        }
+    }
+
+    /// Same, with the weight window sized at one stage's pacing device
+    /// instead of the rig's.
+    pub fn for_stage(
+        model: &'a ModelConfig,
+        sys: &'a SystemConfig,
+        plan: ExecutionPlan,
+        stage: usize,
+    ) -> Self {
+        assert!(stage < plan.pp, "stage out of range");
+        Self {
+            model,
+            sys,
+            plan,
+            stage: Some(stage),
+        }
     }
 
     fn tokens(&self, blocks: usize) -> usize {
@@ -141,23 +169,38 @@ impl<'a> CostSampler for AnalyticSampler<'a> {
     }
 
     fn weight_load_time(&mut self) -> f64 {
-        // The engine keeps `gpu_weight_fraction` of the weights resident;
-        // only the spill of a device's weight slice streams per layer.
-        // Sized at the plan's most-loaded stage — the stage that paces
-        // the weight pipeline (at pp = 1: the whole model, exactly the
-        // historical expression). Under the chunk-major schedule the
-        // stream is DUPLICATED once per in-flight chunk per step
-        // (`ExecutionPlan::weight_stream_passes`), so the per-layer
+        // The engine keeps `gpu_weight_fraction` of each device's memory
+        // resident for weights; only the spill of a device's slice
+        // streams per layer. The window is sized PER DEVICE from the
+        // plan's MemoryPlan — each device's own streamed fraction over
+        // its own host link — and the slowest stream paces the pipeline
+        // (max over devices; restricted to one stage's TP group for a
+        // per-stage sampler). On memory-uniform grids the pacing device
+        // sits in the most-loaded stage and the value is bit-for-bit the
+        // historical most-loaded-stage expression. Under the chunk-major
+        // schedule the stream is DUPLICATED once per in-flight chunk per
+        // step (`ExecutionPlan::weight_stream_passes`), so the per-layer
         // weight window Algorithm 1 balances recomputation against grows
         // by that factor — the duplicated traffic re-opens the window the
         // pipeline bubble closed. Layer-major / pp = 1: one pass, the
         // historical value bit-for-bit.
         let plan = &self.plan;
-        let resident = self.sys.gpu_weight_budget() as f64;
-        let total = plan.max_stage_weight_bytes() as f64 / self.tp();
-        let stream_fraction = ((total - resident) / total).clamp(0.0, 1.0);
-        let layer_bytes = self.model.layer_weight_bytes() as f64 / self.tp() * stream_fraction;
-        plan.weight_stream_passes() as f64 * self.sys.interconnect.h2d_time(layer_bytes as usize)
+        let window = plan
+            .memory()
+            .devices()
+            .iter()
+            .filter(|b| self.stage.map_or(true, |s| b.stage == s))
+            .map(|b| {
+                let layer_bytes =
+                    self.model.layer_weight_bytes() as f64 / self.tp() * b.stream_frac;
+                self.sys
+                    .topology
+                    .slot(b.device)
+                    .link
+                    .h2d_time(layer_bytes as usize)
+            })
+            .fold(0.0, f64::max);
+        plan.weight_stream_passes() as f64 * window
     }
 }
 
@@ -212,6 +255,22 @@ impl CostModel {
         plan: &ExecutionPlan,
     ) -> Self {
         let mut s = AnalyticSampler::for_plan(model, sys, plan.clone());
+        Self::fit_from(&mut s, &SAMPLE_POINTS)
+    }
+
+    /// Analytic fit with the weight window sized at ONE stage's pacing
+    /// device (its own streamed fraction over its own link) instead of
+    /// the rig's. The per-block lines are stage-independent; only
+    /// `load_w` moves — which is exactly the term that makes Algorithm 1
+    /// allocate a different ACT:KV mix per stage on memory-heterogeneous
+    /// grids (DESIGN.md §MemoryPlan).
+    pub fn analytic_for_stage(
+        model: &ModelConfig,
+        sys: &SystemConfig,
+        plan: &ExecutionPlan,
+        stage: usize,
+    ) -> Self {
+        let mut s = AnalyticSampler::for_stage(model, sys, plan.clone(), stage);
         Self::fit_from(&mut s, &SAMPLE_POINTS)
     }
 
@@ -317,6 +376,36 @@ mod tests {
             &SystemConfig::paper_testbed_tp(2).with_schedule(SchedulePolicy::OneFOneB),
         );
         assert_eq!(flat.load_w, CostModel::analytic(&m, &SystemConfig::paper_testbed_tp(2)).load_w);
+    }
+
+    #[test]
+    fn stage_windows_split_by_ownership_and_memory() {
+        // Per-stage fits: the last stage carries the embedding, so its
+        // window is the largest on a uniform grid — and the rig-level fit
+        // equals that pacing stage's fit.
+        let m = ModelConfig::opt_66b();
+        let sys = SystemConfig::paper_testbed_grid(2, 2);
+        let plan = ExecutionPlan::for_system(&m, &sys);
+        let rig = CostModel::analytic_for_plan(&m, &sys, &plan);
+        let s0 = CostModel::analytic_for_stage(&m, &sys, &plan, 0);
+        let s1 = CostModel::analytic_for_stage(&m, &sys, &plan, 1);
+        assert!(s1.load_w > s0.load_w, "{} !> {}", s1.load_w, s0.load_w);
+        assert_eq!(rig.load_w, s1.load_w);
+        // the per-block lines are stage-independent
+        assert_eq!(s0.kv_gen.slope, s1.kv_gen.slope);
+        assert_eq!(s0.load_kv.slope, s1.load_kv.slope);
+        // memory skew moves a stage's window independently: give stage 1
+        // bigger cards and ITS window collapses while stage 0's stays.
+        let het = SystemConfig::with_topology(
+            sys.topology.clone().with_stage_memory(1, 80 << 30),
+        );
+        let hplan = ExecutionPlan::for_system(&m, &het);
+        let h0 = CostModel::analytic_for_stage(&m, &het, &hplan, 0);
+        let h1 = CostModel::analytic_for_stage(&m, &het, &hplan, 1);
+        assert_eq!(h0.load_w, s0.load_w);
+        assert!(h1.load_w < s1.load_w);
+        // and the rig window now paces at stage 0
+        assert_eq!(CostModel::analytic_for_plan(&m, &het, &hplan).load_w, h0.load_w);
     }
 
     #[test]

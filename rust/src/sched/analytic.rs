@@ -31,7 +31,7 @@ use crate::plan::ExecutionPlan;
 use crate::policy::{AllocationInputs, BlockRatio, CostModel};
 use crate::sim::SimCost;
 
-use super::{StepEngine, VictimInfo};
+use super::{StagePressure, StepEngine, VictimInfo};
 
 struct ReqState {
     prompt_len: usize,
@@ -154,7 +154,8 @@ impl AnalyticEngine {
 
     /// Schedule one pipeline pass over every stage, split into the
     /// schedule's micro-batch chunks. Per chunk, per stage: a per-device
-    /// PCIe span (the weight stream — re-issued PER CHUNK, the duplicated
+    /// PCIe span (the device's OWN weight stream — its MemoryPlan
+    /// fraction over its own link, re-issued PER CHUNK, the duplicated
     /// stream chunk-major trades for overlap — plus the chunk's share of
     /// the cache loads), a per-device GPU span gated on its own loads,
     /// the previous stage's handoff and the chunk's `entries` gate (the
@@ -168,7 +169,6 @@ impl AnalyticEngine {
     fn schedule_pass(
         &mut self,
         gpu_secs_base: f64,
-        weight_pcie_base: f64,
         cache_pcie_base: f64,
         hop_tokens: usize,
         entries: &[f64],
@@ -186,12 +186,15 @@ impl AnalyticEngine {
                 let mut stage_end = 0.0f64;
                 for d in stage.devices.clone() {
                     let slot = topo.slot(d);
-                    // Heterogeneity: scale the reference-spec durations by
-                    // this device's deficit vs the reference GPU/link.
+                    // Heterogeneity: the weight stream is priced on the
+                    // device's own budget + link (per-device MemoryPlan);
+                    // cache loads and GPU spans scale the reference-spec
+                    // durations by this device's deficit vs the
+                    // reference GPU/link.
                     let gpu_scale = self.sys.gpu.peak_flops / slot.gpu.peak_flops;
                     let link_scale = self.sys.interconnect.h2d_bw / slot.link.h2d_bw;
-                    let t_pcie =
-                        layers * (weight_pcie_base + cache_pcie_base * frac) * link_scale;
+                    let w_dev = self.cost.device_weight_stream_time(d);
+                    let t_pcie = layers * (w_dev + cache_pcie_base * frac * link_scale);
                     let t_gpu = layers * gpu_secs_base * frac * gpu_scale;
                     let load = self.tl.schedule_on(d, Lane::PCIe, 0.0, t_pcie);
                     let span = self.tl.schedule_on(d, Lane::Gpu, load.end.max(handoff), t_gpu);
@@ -318,11 +321,10 @@ impl StepEngine for AnalyticEngine {
                 }
             }
             let gpu_base = self.cost.layer_prefill_time(batch, max_prompt);
-            let w_base = self.cost.weight_stream_time();
             // A fresh prompt depends on no earlier tokens: no feedback
             // gate (lane serialization still orders it after prior work).
             let entries = vec![0.0; self.pass_chunks(batch)];
-            let end = self.schedule_pass(gpu_base, w_base, 0.0, batch * max_prompt, &entries);
+            let end = self.schedule_pass(gpu_base, 0.0, batch * max_prompt, &entries);
             for &id in &wave {
                 let st = self.states.get_mut(&id).unwrap();
                 st.prefilled = true;
@@ -364,7 +366,6 @@ impl StepEngine for AnalyticEngine {
             let mean_ctx = ctx_sum / n;
             let gpu_base = self.cost.kv_gen_time(act_blocks * bt)
                 + self.cost.layer_forward_time(n, 1, mean_ctx);
-            let w_base = self.cost.weight_stream_time();
             let cache_base = self.cost.kv_load_time(kv_blocks * bt)
                 + self.cost.act_load_time(act_blocks * bt);
             // Decode consumes the tokens the previous pass produced: each
@@ -372,7 +373,7 @@ impl StepEngine for AnalyticEngine {
             // pipeline feedback that creates bubbles at pp > 1 (and that
             // the chunk-major schedule overlaps across chunks).
             let entries = self.feedback_entries(self.pass_chunks(n));
-            let end = self.schedule_pass(gpu_base, w_base, cache_base, n, &entries);
+            let end = self.schedule_pass(gpu_base, cache_base, n, &entries);
             for &id in &runnable {
                 {
                     let st = self.states.get_mut(&id).unwrap();
@@ -483,6 +484,19 @@ impl StepEngine for AnalyticEngine {
 
     fn shard_utilization(&self) -> Option<ShardUtilization> {
         Some(ShardUtilization::from_timeline(&self.tl))
+    }
+
+    fn pressure_at(&self, device: usize) -> StagePressure {
+        let slot = self.sys.topology.slot(device);
+        StagePressure {
+            device,
+            stage: self.plan.memory().device(device).stage,
+            gpu_scale: self.sys.gpu.peak_flops / slot.gpu.peak_flops,
+            link_scale: self.sys.interconnect.h2d_bw / slot.link.h2d_bw,
+            // the pressed device's own per-layer weight stream is free
+            // recompute time for demotion scoring
+            free_window_secs: self.cost.device_weight_stream_time(device),
+        }
     }
 }
 
@@ -602,6 +616,39 @@ mod tests {
             ob.makespan_secs,
             lm.makespan_secs
         );
+    }
+
+    #[test]
+    fn mixed_memory_grid_serves_and_demotes_end_to_end() {
+        // The ISSUE-5 scheduler acceptance: a grid with per-device
+        // memory skew (stage 1 on 48 GB cards) admits, serves, preempts
+        // under pressure and drains through the per-device ledger.
+        let m = ModelConfig::opt_30b();
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_stage_memory(1, 48 << 30),
+        );
+        let sizes = BlockSizes::new(&m, sys.block_tokens);
+        let mut eng = AnalyticEngine::new(&m, &sys, 16 * sizes.kv_bytes);
+        eng.set_ratio(crate::policy::BlockRatio::new(1, 1));
+        // the engine prices pressure per device: the 24 GB card streams,
+        // the 48 GB card does not
+        let p0 = eng.pressure_at(0);
+        let p2 = eng.pressure_at(2);
+        assert!(p0.free_window_secs > 0.0, "24 GB card must stream");
+        assert_eq!(p2.free_window_secs, 0.0, "48 GB card must be resident");
+        assert_eq!(p2.stage, 1);
+        let mut s = Scheduler::new(eng, SchedConfig::default());
+        for (i, arr) in [0.0, 0.01, 0.02, 0.03].into_iter().enumerate() {
+            s.submit(Request::new(i as u64 + 1, vec![7; 64], 16), arr).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4);
+        let r = s.report();
+        assert!(r.preemptions >= 1, "expected ACT demotion under pressure");
+        assert_eq!(s.ledger().shards(), 4);
+        assert_eq!(s.ledger().reserved_per_shard(), 0);
     }
 
     #[test]

@@ -35,10 +35,14 @@
 //! striped over the grid — `1/tp` within a stage, per-layer shares
 //! across stages — so worst-case reservations divide across per-device
 //! host pools and a demotion frees its discount on every device at once.
-//! The [`ShardLedger`] keeps that arithmetic, lowered from the engine's
+//! The [`ShardLedger`] keeps that arithmetic with one stripe PER DEVICE
+//! (receipt-based [`Booking`]s), lowered from the engine's
 //! [`crate::plan::ExecutionPlan`] when it exposes one
 //! ([`StepEngine::execution_plan`]); with one device it is exactly the
-//! global byte check used before sharding.
+//! global byte check used before sharding. When an admission does not
+//! fit, the ledger names the PRESSED device and victim selection prices
+//! the demotion against that device's clock, link and weight-stream
+//! window ([`StagePressure`]) instead of rig-wide costs.
 //!
 //! See DESIGN.md §Scheduling and §Topology for the full design
 //! discussion.
@@ -58,8 +62,11 @@ use crate::policy::CostModel;
 use crate::workload::TimedRequest;
 
 pub use analytic::AnalyticEngine;
-pub use shard::ShardLedger;
-pub use victim::{demotion_score, select_victim, VictimInfo};
+pub use shard::{Booking, ShardLedger};
+pub use victim::{
+    demotion_score, demotion_score_pressed, select_victim, select_victim_pressed, StagePressure,
+    VictimInfo,
+};
 
 /// The engine surface the scheduler drives. [`Engine`] implements it; the
 /// tests drive the scheduler with a deterministic mock so the scheduling
@@ -108,9 +115,10 @@ pub trait StepEngine {
     }
     /// The lowered execution plan of the backing system, when the engine
     /// has one. The scheduler derives its reservation ledger from it
-    /// (most-loaded-stage stripes) instead of re-deriving per-shard
-    /// arithmetic; engines without a plan (`None`) fall back to the flat
-    /// [`Self::shard_count`] striping.
+    /// (per-device stage-share stripes + per-device staging carve-outs)
+    /// instead of re-deriving per-shard arithmetic; engines without a
+    /// plan (`None`) fall back to the flat [`Self::shard_count`]
+    /// striping.
     fn execution_plan(&self) -> Option<crate::plan::ExecutionPlan> {
         None
     }
@@ -118,6 +126,15 @@ pub trait StepEngine {
     /// engine exposes one (`None` for mocks without a timeline).
     fn shard_utilization(&self) -> Option<ShardUtilization> {
         None
+    }
+    /// The pressed-device view of global device `device` for victim
+    /// scoring: its clock/link skew vs the reference spec and its
+    /// per-layer weight-stream window. Engines without per-device
+    /// modeling keep the uniform default (rig-wide scoring, bit-for-bit
+    /// the pre-MemoryPlan behavior).
+    fn pressure_at(&self, device: usize) -> StagePressure {
+        let _ = device;
+        StagePressure::uniform()
     }
 }
 
@@ -245,14 +262,14 @@ struct Waiting {
 }
 
 /// Lifecycle bookkeeping of an admitted request.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 struct AdmitRecord {
     arrival: f64,
     admitted: f64,
     /// Worst-case host bytes reserved across all shards.
     reserved: usize,
-    /// The per-shard slice booked in the [`ShardLedger`].
-    reserved_shard: usize,
+    /// The per-device receipt booked in the [`ShardLedger`].
+    booking: Booking,
 }
 
 /// The online scheduler. Owns the engine; drive it with
@@ -389,14 +406,14 @@ impl<E: StepEngine> Scheduler<E> {
             }
             let w = self.waiting.pop_front().unwrap();
             self.eng.admit(&w.req)?;
-            let reserved_shard = self.ledger.reserve(need);
+            let booking = self.ledger.reserve(need);
             self.admitted.insert(
                 id,
                 AdmitRecord {
                     arrival,
                     admitted: now,
                     reserved: need,
-                    reserved_shard,
+                    booking,
                 },
             );
             self.reserved_total += need;
@@ -431,7 +448,7 @@ impl<E: StepEngine> Scheduler<E> {
                 .remove(&c.id)
                 .expect("completion for a request the scheduler never admitted");
             self.reserved_total -= rec.reserved;
-            self.ledger.release(rec.reserved_shard);
+            self.ledger.release(&rec.booking);
             self.timings.push(RequestTiming {
                 arrival: rec.arrival,
                 admitted: rec.admitted,
@@ -446,19 +463,25 @@ impl<E: StepEngine> Scheduler<E> {
     }
 
     /// Demote cost-model-chosen victims until `need` reserved bytes fit,
-    /// pausing each victim for the current round. Returns false when no
+    /// pausing each victim for the current round. Victims are scored
+    /// against the PRESSED device — the pool the ledger reports most
+    /// oversubscribed for this admission, priced through the engine's
+    /// [`StepEngine::pressure_at`] view — so on heterogeneous grids the
+    /// demotion that is free on the starved device wins even when the
+    /// rig-wide cost model would pick differently. Returns false when no
     /// further demotion can free anything (the caller then waits for
     /// completions instead).
     fn preempt_until(&mut self, need: usize) -> Result<bool> {
         let cost = self.eng.cost_model();
         let sizes = self.eng.block_sizes();
         let discount = sizes.kv_bytes - sizes.act_bytes;
+        let pressure = self.eng.pressure_at(self.ledger.pressed_device(need));
         while !self.ledger.fits(need) {
             let mut candidates = Vec::with_capacity(self.running.len());
             for &id in &self.running {
                 candidates.push(self.eng.victim_info(id)?);
             }
-            let Some(v) = select_victim(&candidates, &cost, sizes) else {
+            let Some(v) = select_victim_pressed(&candidates, &cost, sizes, &pressure) else {
                 return Ok(false);
             };
             let receipt = self.eng.demote_to_act(v.id)?;
@@ -468,16 +491,16 @@ impl<E: StepEngine> Scheduler<E> {
             // The demoted blocks can never be KV again, so the victim's
             // worst-case footprint — and with it the reservation — shrinks
             // by the KV/ACT byte difference per block, on every device the
-            // blocks are striped over. The per-device discount rounds DOWN
-            // (ledger stripe ratio) so the remaining stripe still covers
+            // blocks are striped over. The per-device discounts round DOWN
+            // (ledger stripe ratios) so the remaining stripes still cover
             // the remaining worst-case footprint.
             let rec = self.admitted.get_mut(&v.id).expect("victim not admitted");
             let freed = (receipt.blocks() * discount).min(rec.reserved);
-            let freed_shard = self.ledger.discount(freed).min(rec.reserved_shard);
+            let freed_booking = self.ledger.discount(freed).clamped_to(&rec.booking);
             rec.reserved -= freed;
-            rec.reserved_shard -= freed_shard;
+            rec.booking.shrink(&freed_booking);
             self.reserved_total -= freed;
-            self.ledger.release(freed_shard);
+            self.ledger.release(&freed_booking);
             self.eng.pause(v.id)?;
             self.running.retain(|&x| x != v.id);
             self.preempted.push(v.id);

@@ -5,38 +5,101 @@
 //! dimension, and across pipeline stages a block's per-layer shares land
 //! on the stage owning each layer. A request's worst-case host footprint
 //! therefore divides over `tp × pp` host-memory pools (one pinned-buffer
-//! arena per GPU link), with the most-loaded stage — the one owning the
-//! most layers — holding the largest stripe. The ledger models exactly
-//! that binding stripe, derived from the [`ExecutionPlan`]
-//! ([`ShardLedger::for_plan`]) instead of re-deriving per-shard
-//! arithmetic: `stripe(total) = ceil(total · L_max / (L · tp))` per
-//! device, where `L_max` is the plan's largest per-stage layer count.
-//! A KV→ACT demotion frees its byte discount on *every* device at once.
-//! With one device it degenerates to exactly the global
+//! arena per GPU link), with each device's stripe sized by ITS stage's
+//! layer share: `stripe_d(total) = ceil(total · L_d / (L · tp))` where
+//! `L_d` is the layer count of the stage owning device `d`. The ledger
+//! books exactly those per-device stripes (PR 4 booked every device at
+//! the most-loaded stage's scalar stripe; the per-device ledger frees
+//! the over-reservation on lighter stages), derived from the
+//! [`ExecutionPlan`] ([`ShardLedger::for_plan`]). Reservations are
+//! receipts ([`Booking`]) — release and demotion discounts replay the
+//! same per-device amounts, so the books can never drift. A KV→ACT
+//! demotion frees its byte discount on *every* device at once.
+//!
+//! The chunk-major staging carve-out is per-device too: each device pins
+//! `inflight_chunks − 1` extra per-layer weight-stream buffers sized at
+//! ITS OWN streamed layer slice (per-device [`crate::plan::MemoryPlan`]
+//! fractions), so on a memory-heterogeneous grid only the streaming
+//! devices pay it.
+//!
+//! With one device the ledger degenerates to exactly the global
 //! `reserved + need <= capacity` test the scheduler used before
 //! sharding; with `pp = 1` it is bit-for-bit the flat-TP ledger
-//! (`ceil(a·L / (L·tp)) = ceil(a/tp)`).
+//! (`ceil(a·L / (L·tp)) = ceil(a/tp)`), and on uniform-layer grids the
+//! per-device stripes all equal the old binding stripe.
 //!
 //! [`ExecutionPlan`]: crate::plan::ExecutionPlan
 
-/// Reserved-byte accounting across the grid's symmetric-by-stage host
-/// pools, tracked at the binding (most-loaded) stripe.
+/// Per-device amounts actually booked by one [`ShardLedger::reserve`]
+/// call (or computed by [`ShardLedger::discount`]). Pass it back to
+/// [`ShardLedger::release`] when the request retires; shrink it with
+/// [`Booking::shrink`] when a demotion returns part of it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Booking {
+    per_device: Vec<usize>,
+}
+
+impl Booking {
+    /// The booked amount on device `d`.
+    pub fn on(&self, d: usize) -> usize {
+        self.per_device[d]
+    }
+
+    /// The largest per-device amount (the binding stripe).
+    pub fn binding(&self) -> usize {
+        self.per_device.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Nothing booked on any device?
+    pub fn is_empty(&self) -> bool {
+        self.per_device.iter().all(|&b| b == 0)
+    }
+
+    /// Clamp this booking to at most `cap`'s per-device amounts (a
+    /// demotion discount can never return more than the request still
+    /// has booked).
+    pub fn clamped_to(&self, cap: &Booking) -> Booking {
+        assert_eq!(self.per_device.len(), cap.per_device.len(), "foreign booking");
+        Booking {
+            per_device: self
+                .per_device
+                .iter()
+                .zip(&cap.per_device)
+                .map(|(&a, &b)| a.min(b))
+                .collect(),
+        }
+    }
+
+    /// Subtract `other` from this booking (panics on underflow — the
+    /// caller must clamp first).
+    pub fn shrink(&mut self, other: &Booking) {
+        assert_eq!(self.per_device.len(), other.per_device.len(), "foreign booking");
+        for (b, &o) in self.per_device.iter_mut().zip(&other.per_device) {
+            *b = b
+                .checked_sub(o)
+                .expect("booking shrink exceeds booked amount");
+        }
+    }
+}
+
+/// Reserved-byte accounting across the grid's per-device host pools.
 #[derive(Debug, Clone)]
 pub struct ShardLedger {
-    cap_per_shard: usize,
+    /// Per-device stripe capacity of the whole pool.
+    caps: Vec<usize>,
     reserved: Vec<usize>,
-    /// Stripe ratio numerator (the most-loaded stage's layer count; 1 for
-    /// the flat constructor).
-    stripe_num: usize,
+    /// Per-device stripe ratio numerator (the device's stage layer
+    /// count; 1 for the flat constructor).
+    nums: Vec<usize>,
     /// Stripe ratio denominator (`num_layers · tp`; the device count for
     /// the flat constructor).
-    stripe_den: usize,
+    den: usize,
     /// Per-device pinned-staging carve-out for the schedule's duplicated
     /// weight streams (0 under layer-major / pp = 1 / fully resident
-    /// stages): chunk-major keeps one extra in-flight per-layer weight
+    /// devices): chunk-major keeps one extra in-flight per-layer weight
     /// stream per additional chunk, each needing a pinned host staging
     /// buffer out of the same pool the cache reservations draw on.
-    schedule_overhead: usize,
+    overheads: Vec<usize>,
 }
 
 impl ShardLedger {
@@ -48,65 +111,65 @@ impl ShardLedger {
     /// capacity not divisible by the shard count.
     pub fn new(total_capacity: usize, shards: usize) -> Self {
         assert!(shards >= 1, "need at least one shard");
-        Self::with_stripe(total_capacity, shards, 1, shards, 0)
+        Self::with_stripes(total_capacity, vec![1; shards], shards, vec![0; shards])
     }
 
     /// Ledger lowered from an execution plan: one pool per grid device,
-    /// stripes sized at the plan's most-loaded stage, plus the schedule's
+    /// each striped at ITS stage's layer share, plus the schedule's
     /// duplicated-stream staging carve-out (chunk-major pins
     /// `inflight_chunks − 1` extra per-layer weight-stream buffers per
-    /// device, sized at the most-loaded stage's streamed layer slice).
-    /// At `pp = 1` this is exactly [`Self::new`]`(total_capacity, tp)`
-    /// (the stripe ratio reduces and the overhead vanishes), and at
-    /// `tp = pp = 1` the historical global check. Under layer-major the
-    /// overhead is always 0 — value-identical to the pre-schedule ledger.
+    /// device, sized at that device's own streamed layer slice from the
+    /// plan's [`crate::plan::MemoryPlan`]). At `pp = 1` this is exactly
+    /// [`Self::new`]`(total_capacity, tp)` (the stripe ratios reduce and
+    /// the overhead vanishes), and at `tp = pp = 1` the historical
+    /// global check.
     ///
     /// The carve-out can make a request that fits the raw pool fail
     /// `fits` even on an empty ledger (forced chunk-major on a heavily
     /// streaming plan with a tiny pool); the scheduler surfaces that as a
     /// clean admission error rather than waiting forever.
     pub fn for_plan(plan: &crate::plan::ExecutionPlan, total_capacity: usize) -> Self {
-        // Most-loaded stage's per-device streamed bytes of ONE layer —
-        // the staging unit a duplicated stream pins.
-        let layer_stream = plan
-            .stages
-            .iter()
-            .map(|s| {
-                ((s.weight_bytes as f64 / s.layer_count() as f64 / plan.tp as f64)
-                    * s.stream_frac) as usize
-            })
-            .max()
-            .unwrap_or(0);
-        let overhead = (plan.inflight_chunks() - 1) * layer_stream;
-        Self::with_stripe(
-            total_capacity,
-            plan.device_count(),
-            plan.max_stage_layer_count(),
-            plan.num_layers * plan.tp,
-            overhead,
-        )
+        let extra = plan.inflight_chunks() - 1;
+        let mut nums = Vec::with_capacity(plan.device_count());
+        let mut overheads = Vec::with_capacity(plan.device_count());
+        for b in plan.memory().devices() {
+            let s = &plan.stages[b.stage];
+            nums.push(s.layer_count());
+            // This device's streamed bytes of ONE layer — the staging
+            // unit a duplicated stream pins on it.
+            let layer_stream = ((s.weight_bytes as f64
+                / s.layer_count() as f64
+                / plan.tp as f64)
+                * b.stream_frac) as usize;
+            overheads.push(extra * layer_stream);
+        }
+        Self::with_stripes(total_capacity, nums, plan.num_layers * plan.tp, overheads)
     }
 
-    fn with_stripe(
+    fn with_stripes(
         total_capacity: usize,
-        shards: usize,
-        num: usize,
+        nums: Vec<usize>,
         den: usize,
-        schedule_overhead: usize,
+        overheads: Vec<usize>,
     ) -> Self {
-        assert!(shards >= 1, "need at least one shard");
-        assert!(num >= 1 && den >= 1, "degenerate stripe ratio");
+        assert!(!nums.is_empty(), "need at least one device");
+        assert!(den >= 1 && nums.iter().all(|&n| n >= 1), "degenerate stripe");
+        assert_eq!(nums.len(), overheads.len());
         let mut l = Self {
-            cap_per_shard: 0,
-            reserved: vec![0; shards],
-            stripe_num: num,
-            stripe_den: den,
-            schedule_overhead,
+            caps: Vec::new(),
+            reserved: vec![0; nums.len()],
+            nums,
+            den,
+            overheads,
         };
-        // Capacity is the binding stripe of the whole pool: reservations
-        // and capacity round identically, preserving the fits(total_
-        // capacity)-on-empty invariant (modulo the schedule carve-out).
-        l.cap_per_shard = l.per_shard(total_capacity);
+        // Capacity is each device's stripe of the whole pool:
+        // reservations and capacity round identically, preserving the
+        // fits(total_capacity)-on-empty invariant (modulo the schedule
+        // carve-out).
+        let caps: Vec<usize> = (0..l.nums.len())
+            .map(|d| l.stripe_on(d, total_capacity))
+            .collect();
+        l.caps = caps;
         l
     }
 
@@ -114,65 +177,112 @@ impl ShardLedger {
         self.reserved.len()
     }
 
-    /// Binding per-device slice of a `total`-byte reservation (rounded up
-    /// — a striped block occupies its full stripe on every device of the
-    /// most-loaded stage).
-    pub fn per_shard(&self, total: usize) -> usize {
-        (total * self.stripe_num).div_ceil(self.stripe_den)
+    /// Device `d`'s slice of a `total`-byte reservation (rounded up — a
+    /// striped block occupies its full stripe on every device of its
+    /// stage).
+    pub fn stripe_on(&self, d: usize, total: usize) -> usize {
+        (total * self.nums[d]).div_ceil(self.den)
     }
 
-    /// Floor-rounded per-device slice of a freed `total` — the demotion
-    /// discount. Rounds DOWN so the stripe remaining after a partial
-    /// release still covers the remaining worst-case footprint.
-    pub fn discount(&self, total: usize) -> usize {
-        (total * self.stripe_num) / self.stripe_den
+    /// Binding (largest) per-device slice of a `total`-byte reservation —
+    /// what the most-loaded device books.
+    pub fn per_shard(&self, total: usize) -> usize {
+        (0..self.shards())
+            .map(|d| self.stripe_on(d, total))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Per-device pinned-staging bytes pre-committed to the schedule's
-    /// duplicated weight streams (0 for layer-major plans).
+    /// duplicated weight streams on device `d` (0 for layer-major plans).
+    pub fn schedule_overhead_on(&self, d: usize) -> usize {
+        self.overheads[d]
+    }
+
+    /// Largest per-device staging carve-out (0 for layer-major plans).
     pub fn schedule_overhead(&self) -> usize {
-        self.schedule_overhead
+        self.overheads.iter().copied().max().unwrap_or(0)
     }
 
     /// Would a `total`-byte reservation fit on every device right now,
-    /// on top of the schedule's staging carve-out?
+    /// on top of each device's schedule staging carve-out?
     pub fn fits(&self, total: usize) -> bool {
-        let need = self.per_shard(total);
-        self.reserved
-            .iter()
-            .all(|&r| r + need + self.schedule_overhead <= self.cap_per_shard)
+        (0..self.shards()).all(|d| {
+            self.reserved[d] + self.stripe_on(d, total) + self.overheads[d] <= self.caps[d]
+        })
     }
 
     /// Book a `total`-byte reservation on every device; returns the
-    /// per-device amount actually booked (pass it back to
-    /// [`Self::release`] when the request retires).
-    pub fn reserve(&mut self, total: usize) -> usize {
-        let need = self.per_shard(total);
-        for r in &mut self.reserved {
-            *r += need;
+    /// per-device receipt (pass it back to [`Self::release`] when the
+    /// request retires).
+    pub fn reserve(&mut self, total: usize) -> Booking {
+        let per_device: Vec<usize> =
+            (0..self.shards()).map(|d| self.stripe_on(d, total)).collect();
+        for (r, &b) in self.reserved.iter_mut().zip(&per_device) {
+            *r += b;
         }
-        need
+        Booking { per_device }
     }
 
-    /// Release `per_shard` bytes on every device (an amount previously
-    /// booked by [`Self::reserve`], possibly shrunk by demotion
-    /// discounts).
-    pub fn release(&mut self, per_shard: usize) {
-        for r in &mut self.reserved {
+    /// Release a previously booked receipt (possibly shrunk by demotion
+    /// discounts) on every device.
+    pub fn release(&mut self, booking: &Booking) {
+        assert_eq!(booking.per_device.len(), self.shards(), "foreign booking");
+        for (r, &b) in self.reserved.iter_mut().zip(&booking.per_device) {
             *r = r
-                .checked_sub(per_shard)
+                .checked_sub(b)
                 .expect("ledger release exceeds reservation");
         }
     }
 
-    /// Highest per-device reservation level (all devices move together
-    /// under symmetric striping, so this is also the lowest).
+    /// Per-device discount of a freed `total` — the demotion credit.
+    /// Rounds DOWN on every device so the stripe remaining after a
+    /// partial release still covers the remaining worst-case footprint.
+    pub fn discount(&self, total: usize) -> Booking {
+        Booking {
+            per_device: (0..self.shards())
+                .map(|d| (total * self.nums[d]) / self.den)
+                .collect(),
+        }
+    }
+
+    /// The device a `need`-byte admission is most oversubscribed on —
+    /// the one whose pool is actually out of memory (largest shortfall
+    /// of `reserved + stripe + overhead` against its capacity; ties keep
+    /// the lowest id). This is the device plan-aware victim selection
+    /// prices demotions against.
+    pub fn pressed_device(&self, need: usize) -> usize {
+        let mut best = 0usize;
+        let mut best_deficit = isize::MIN;
+        for d in 0..self.shards() {
+            let want = self.reserved[d] + self.stripe_on(d, need) + self.overheads[d];
+            let deficit = want as isize - self.caps[d] as isize;
+            if deficit > best_deficit {
+                best_deficit = deficit;
+                best = d;
+            }
+        }
+        best
+    }
+
+    /// Highest per-device reservation level.
     pub fn reserved_per_shard(&self) -> usize {
         self.reserved.iter().copied().max().unwrap_or(0)
     }
 
+    /// Reservation level on device `d`.
+    pub fn reserved_on(&self, d: usize) -> usize {
+        self.reserved[d]
+    }
+
+    /// Largest per-device stripe capacity (the binding pool).
     pub fn capacity_per_shard(&self) -> usize {
-        self.cap_per_shard
+        self.caps.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Stripe capacity of device `d`'s pool.
+    pub fn capacity_on(&self, d: usize) -> usize {
+        self.caps[d]
     }
 }
 
@@ -189,10 +299,10 @@ mod tests {
         assert_eq!(l.per_shard(301), 301);
         assert!(l.fits(1000));
         let booked = l.reserve(700);
-        assert_eq!(booked, 700);
+        assert_eq!(booked.binding(), 700);
         assert!(l.fits(300));
         assert!(!l.fits(301));
-        l.release(700);
+        l.release(&booked);
         assert_eq!(l.reserved_per_shard(), 0);
     }
 
@@ -203,26 +313,30 @@ mod tests {
         assert_eq!(l.per_shard(1000), 250);
         assert_eq!(l.per_shard(1001), 251); // stripe rounds up
         let booked = l.reserve(999);
-        assert_eq!(booked, 250);
+        assert_eq!(booked.binding(), 250);
+        assert_eq!(booked.on(0), booked.on(3));
         // every shard is at 250/250 now
         assert!(!l.fits(1));
-        l.release(250);
+        l.release(&booked);
         assert!(l.fits(1000));
     }
 
     #[test]
     fn demotion_discount_frees_on_every_shard() {
         let mut l = ShardLedger::new(800, 2);
-        let booked = l.reserve(800); // 400 per shard
+        let mut booked = l.reserve(800); // 400 per shard
         assert!(!l.fits(2));
         // a demotion halves the victim's footprint: release the discount
         // on both shards, keep the rest booked
-        let discount = l.discount(400);
-        assert_eq!(discount, 200);
-        l.release(discount);
-        assert_eq!(l.reserved_per_shard(), booked - discount);
+        let discount = l.discount(400).clamped_to(&booked);
+        assert_eq!(discount.binding(), 200);
+        booked.shrink(&discount);
+        l.release(&discount);
+        assert_eq!(l.reserved_per_shard(), 200);
         assert!(l.fits(400));
         assert!(!l.fits(402));
+        l.release(&booked);
+        assert_eq!(l.reserved_per_shard(), 0);
     }
 
     #[test]
@@ -247,27 +361,37 @@ mod tests {
             assert_eq!(a.shards(), b.shards());
             assert_eq!(a.capacity_per_shard(), b.capacity_per_shard());
             for total in [0usize, 1, 17, 4096, 999_983] {
-                assert_eq!(a.per_shard(total), b.per_shard(total), "total {total}");
+                for d in 0..tp {
+                    assert_eq!(a.stripe_on(d, total), b.stripe_on(d, total), "total {total}");
+                }
                 assert_eq!(a.discount(total), b.discount(total), "total {total}");
             }
         }
     }
 
     #[test]
-    fn plan_ledger_stripes_at_the_most_loaded_stage() {
-        // opt-tiny (4 layers) on 1×3: stages own 2/1/1 layers, so the
-        // binding stripe is 2/4 = half the bytes per device — larger
-        // than the naive 1/3 split, and the full pool still fits empty.
+    fn plan_ledger_stripes_per_device_stage_share() {
+        // opt-tiny (4 layers) on 1×3: stages own 2/1/1 layers. Device 0
+        // (the 2-layer stage) stripes at 2/4 = half the bytes; devices 1
+        // and 2 at 1/4 — the per-device ledger books each device at ITS
+        // stage's share (PR 4 booked everyone at the binding 2/4), and
+        // the full pool still fits empty.
         let m = ModelConfig::opt_tiny();
         let plan = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_grid(1, 3));
         let l = ShardLedger::for_plan(&plan, 1000);
         assert_eq!(l.shards(), 3);
+        assert_eq!(l.stripe_on(0, 1000), 500);
+        assert_eq!(l.stripe_on(1, 1000), 250);
+        assert_eq!(l.stripe_on(2, 1000), 250);
         assert_eq!(l.per_shard(1000), 500);
-        assert_eq!(l.capacity_per_shard(), 500);
+        assert_eq!(l.capacity_on(0), 500);
+        assert_eq!(l.capacity_on(1), 250);
         assert!(l.fits(1000));
-        // discount floors while reservations ceil
-        assert_eq!(l.per_shard(999), 500);
-        assert_eq!(l.discount(999), 499);
+        // discount floors while reservations ceil, per device
+        assert_eq!(l.stripe_on(0, 999), 500);
+        assert_eq!(l.discount(999).on(0), 499);
+        assert_eq!(l.stripe_on(1, 999), 250);
+        assert_eq!(l.discount(999).on(1), 249);
     }
 
     #[test]
@@ -323,18 +447,59 @@ mod tests {
             let want_total = cap / 4;
             if l.fits(want_total) {
                 let booked = l.reserve(want_total);
-                l.release(booked);
+                l.release(&booked);
             }
             assert_eq!(l.reserved_per_shard(), 0);
         }
     }
 
     #[test]
+    fn mixed_memory_carveout_is_per_device() {
+        // Chunk-major on a mixed-memory OPT-175B grid: the 192 GB stage
+        // keeps its ~88 GB slice fully resident and streams nothing, so
+        // ONLY the 24 GB devices pin duplicated-stream staging.
+        use crate::config::SchedulePolicy;
+        let m = ModelConfig::opt_175b();
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_stage_memory(1, 192 << 30),
+        )
+        .with_schedule(SchedulePolicy::OneFOneB);
+        let plan = ExecutionPlan::for_system(&m, &sys);
+        assert_eq!(plan.memory().stream_frac(2), 0.0, "big stage must be resident");
+        let l = ShardLedger::for_plan(&plan, 8usize << 30);
+        assert!(l.schedule_overhead_on(0) > 0);
+        assert_eq!(l.schedule_overhead_on(2), 0);
+        assert_eq!(l.schedule_overhead_on(3), 0);
+        assert_eq!(l.schedule_overhead(), l.schedule_overhead_on(0));
+    }
+
+    #[test]
+    fn pressed_device_tracks_the_oversubscribed_pool() {
+        // opt-tiny 1×3 (2/1/1 layers): device 0's stripes are twice the
+        // others', so it is the pressed pool for any admission.
+        let m = ModelConfig::opt_tiny();
+        let plan = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_grid(1, 3));
+        let mut l = ShardLedger::for_plan(&plan, 1000);
+        assert_eq!(l.pressed_device(100), 0);
+        let _ = l.reserve(500);
+        assert_eq!(l.pressed_device(600), 0);
+        // uniform flat ledger: ties resolve to device 0
+        let flat = ShardLedger::new(1000, 4);
+        assert_eq!(flat.pressed_device(1), 0);
+    }
+
+    #[test]
     #[should_panic(expected = "release exceeds reservation")]
     fn over_release_panics() {
         let mut l = ShardLedger::new(100, 2);
-        l.reserve(10);
-        l.release(6);
+        let mut b = l.reserve(10);
+        l.release(&b);
+        // build a non-empty booking by reserving again, then over-release
+        b = l.reserve(10);
+        l.release(&b);
+        l.release(&b);
     }
 
     #[test]
@@ -343,7 +508,7 @@ mod tests {
             let shards = rng.range(1, 5);
             let cap = rng.range(1 << 10, 1 << 20);
             let mut l = ShardLedger::new(cap, shards);
-            let mut live: Vec<usize> = Vec::new();
+            let mut live: Vec<Booking> = Vec::new();
             for _ in 0..200 {
                 if rng.f64() < 0.6 || live.is_empty() {
                     let want = rng.range(1, cap / 2 + 2);
@@ -352,14 +517,15 @@ mod tests {
                     }
                 } else {
                     let i = rng.range(0, live.len());
-                    l.release(live.swap_remove(i));
+                    let b = live.swap_remove(i);
+                    l.release(&b);
                 }
                 assert!(l.reserved_per_shard() <= l.capacity_per_shard());
-                let expect: usize = live.iter().sum();
-                assert_eq!(l.reserved_per_shard(), expect, "ledger drifted");
+                let expect: usize = live.iter().map(|b| b.on(0)).sum();
+                assert_eq!(l.reserved_on(0), expect, "ledger drifted");
             }
             for b in live.drain(..) {
-                l.release(b);
+                l.release(&b);
             }
             assert_eq!(l.reserved_per_shard(), 0);
         });
@@ -367,34 +533,47 @@ mod tests {
 
     #[test]
     fn property_plan_ledger_invariants() {
-        // The weighted-stripe ledger keeps the flat ledger's invariants
-        // on arbitrary TP×PP grids: a validate-accepted request fits an
-        // empty ledger, discounts never exceed reservations, and the
-        // books drain to zero.
+        // The per-device-stripe ledger keeps the flat ledger's invariants
+        // on arbitrary TP×PP grids (memory-skewed slots included): a
+        // validate-accepted request fits an empty ledger, discounts never
+        // exceed reservations on any device, and the books drain to zero.
         crate::util::prop::check("plan-ledger", 60, |rng| {
             let m = ModelConfig::opt_30b();
             let tp = rng.range(1, 5);
             let pp = *rng.choose(&[1usize, 2, 3, 4]);
-            let plan = ExecutionPlan::for_system(&m, &SystemConfig::paper_testbed_grid(tp, pp));
+            let mut topo = SystemConfig::paper_testbed_grid(tp, pp).topology;
+            if rng.f64() < 0.5 {
+                // random memory skew on one device
+                let stage = rng.range(0, pp);
+                let rank = rng.range(0, tp);
+                let mem = rng.range(8usize << 30, 96usize << 30);
+                topo = topo.with_memory(stage, rank, mem);
+            }
+            let plan = ExecutionPlan::for_system(&m, &SystemConfig::with_topology(topo));
             let cap = rng.range(1 << 12, 1 << 22);
             let mut l = ShardLedger::for_plan(&plan, cap);
             assert!(l.fits(cap), "full pool must fit the empty ledger");
-            let mut live: Vec<usize> = Vec::new();
+            let mut live: Vec<Booking> = Vec::new();
             for _ in 0..100 {
                 if rng.f64() < 0.6 || live.is_empty() {
                     let want = rng.range(1, cap / 2 + 2);
-                    assert!(l.discount(want) <= l.per_shard(want));
+                    for d in 0..l.shards() {
+                        assert!(l.discount(want).on(d) <= l.stripe_on(d, want));
+                    }
                     if l.fits(want) {
                         live.push(l.reserve(want));
                     }
                 } else {
                     let i = rng.range(0, live.len());
-                    l.release(live.swap_remove(i));
+                    let b = live.swap_remove(i);
+                    l.release(&b);
                 }
-                assert!(l.reserved_per_shard() <= l.capacity_per_shard());
+                for d in 0..l.shards() {
+                    assert!(l.reserved_on(d) <= l.capacity_on(d));
+                }
             }
             for b in live.drain(..) {
-                l.release(b);
+                l.release(&b);
             }
             assert_eq!(l.reserved_per_shard(), 0);
         });

@@ -10,6 +10,16 @@
 //! When the GPU *is* the bottleneck the cost model prices the slowdown,
 //! and the scheduler picks the victim with the best bytes-freed per
 //! second of added pipeline time over its remaining generation.
+//!
+//! Scoring is PLAN-AWARE through [`StagePressure`]: the demotion is
+//! priced against the device actually out of memory (the pressed pool the
+//! [`super::ShardLedger`] reports), not rig-wide costs. A pressed device
+//! with a slow clock pays more per recomputed block; one with a slow link
+//! credits more per removed KV load; and one streaming a large weight
+//! fraction (small memory) recomputes FOR FREE up to its per-layer
+//! weight-stream window — which is what flips the pick on
+//! memory-heterogeneous grids. [`StagePressure::uniform`] (scales 1,
+//! window 0) reproduces the rig-wide scoring bit-for-bit.
 
 use std::cmp::Ordering;
 
@@ -28,50 +38,129 @@ pub struct VictimInfo {
     pub remaining_tokens: usize,
 }
 
+/// The pressed device's view of a demotion: which device is out of
+/// memory and how its specs skew the rig-level cost lines. Produced by
+/// [`super::StepEngine::pressure_at`] for the pool the ledger reports
+/// pressed; [`Self::uniform`] is the reference-device view (scales 1,
+/// no free window) and scores identically to the pre-MemoryPlan code.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StagePressure {
+    /// Global device id of the pressed pool.
+    pub device: usize,
+    /// Pipeline stage owning it.
+    pub stage: usize,
+    /// Multiplier on GPU-time lines: reference clock / pressed device
+    /// clock (> 1 for a slower device).
+    pub gpu_scale: f64,
+    /// Multiplier on host-link-time lines: reference bandwidth / pressed
+    /// device bandwidth (> 1 for a slower link).
+    pub link_scale: f64,
+    /// Per-layer weight-stream window of the pressed device in seconds:
+    /// GPU time that is FREE for recomputation because the device idles
+    /// under its own weight stream anyway (0 for a fully resident
+    /// device).
+    pub free_window_secs: f64,
+}
+
+impl StagePressure {
+    /// Reference-device pressure: no skew, no free window — scoring is
+    /// exactly the rig-wide cost model.
+    pub fn uniform() -> Self {
+        Self {
+            device: 0,
+            stage: 0,
+            gpu_scale: 1.0,
+            link_scale: 1.0,
+            free_window_secs: 0.0,
+        }
+    }
+}
+
+impl Default for StagePressure {
+    fn default() -> Self {
+        Self::uniform()
+    }
+}
+
 /// Host bytes a full KV→ACT demotion of `v` frees.
 pub fn bytes_freed(v: &VictimInfo, sizes: BlockSizes) -> usize {
     v.kv_blocks * (sizes.kv_bytes - sizes.act_bytes)
 }
 
 /// Added per-layer pipeline seconds per remaining decode step if `v` is
-/// demoted: KV-Gen time over the enlarged ACT set minus the KV load the
-/// demotion removes. Clamped at zero — recomputation that hides under
-/// the weight-streaming window costs nothing.
-pub fn demotion_step_penalty(v: &VictimInfo, cost: &CostModel) -> f64 {
-    let t_after = cost.kv_gen.eval((v.act_blocks + v.kv_blocks) as f64);
-    let t_before =
-        cost.kv_gen.eval(v.act_blocks as f64) + cost.load_kv.eval(v.kv_blocks as f64);
-    (t_after - t_before).max(0.0)
+/// demoted, as the PRESSED device pays them: KV-Gen time over the
+/// enlarged ACT set (at the pressed clock) minus the larger of the
+/// replaced pipeline time (previous KV-Gen at the pressed clock + the KV
+/// load the demotion removes, at the pressed link) and the device's free
+/// weight-stream window. Clamped at zero — recomputation that hides
+/// under the weight stream costs nothing.
+pub fn demotion_step_penalty_pressed(
+    v: &VictimInfo,
+    cost: &CostModel,
+    pressure: &StagePressure,
+) -> f64 {
+    let t_after = cost.kv_gen.eval((v.act_blocks + v.kv_blocks) as f64) * pressure.gpu_scale;
+    let t_before = cost.kv_gen.eval(v.act_blocks as f64) * pressure.gpu_scale
+        + cost.load_kv.eval(v.kv_blocks as f64) * pressure.link_scale;
+    (t_after - t_before.max(pressure.free_window_secs)).max(0.0)
 }
 
-/// Score of demoting `v`: host bytes freed per second of added pipeline
-/// time over the victim's remaining generation. Candidates without KV
-/// blocks score `-inf` (nothing to demote).
-pub fn demotion_score(v: &VictimInfo, cost: &CostModel, sizes: BlockSizes) -> f64 {
+/// [`demotion_step_penalty_pressed`] at [`StagePressure::uniform`] — the
+/// historical rig-wide penalty, bit-for-bit (scales of exactly 1.0 and a
+/// zero window change no f64).
+pub fn demotion_step_penalty(v: &VictimInfo, cost: &CostModel) -> f64 {
+    demotion_step_penalty_pressed(v, cost, &StagePressure::uniform())
+}
+
+/// Score of demoting `v` under `pressure`: host bytes freed per second
+/// of added pipeline time over the victim's remaining generation.
+/// Candidates without KV blocks score `-inf` (nothing to demote).
+pub fn demotion_score_pressed(
+    v: &VictimInfo,
+    cost: &CostModel,
+    sizes: BlockSizes,
+    pressure: &StagePressure,
+) -> f64 {
     if v.kv_blocks == 0 {
         return f64::NEG_INFINITY;
     }
     let freed = bytes_freed(v, sizes) as f64;
-    let penalty = demotion_step_penalty(v, cost) * v.remaining_tokens as f64;
+    let penalty = demotion_step_penalty_pressed(v, cost, pressure) * v.remaining_tokens as f64;
     freed / (1e-9 + penalty)
 }
 
-/// Pick the best demotion victim among `candidates` (None when nobody
-/// holds a KV block — there is nothing preemption could free).
-pub fn select_victim(
+/// [`demotion_score_pressed`] at the uniform pressure (legacy surface).
+pub fn demotion_score(v: &VictimInfo, cost: &CostModel, sizes: BlockSizes) -> f64 {
+    demotion_score_pressed(v, cost, sizes, &StagePressure::uniform())
+}
+
+/// Pick the best demotion victim among `candidates` as the pressed
+/// device prices them (None when nobody holds a KV block — there is
+/// nothing preemption could free).
+pub fn select_victim_pressed(
     candidates: &[VictimInfo],
     cost: &CostModel,
     sizes: BlockSizes,
+    pressure: &StagePressure,
 ) -> Option<VictimInfo> {
     candidates
         .iter()
         .copied()
         .filter(|v| v.kv_blocks > 0)
         .max_by(|a, b| {
-            demotion_score(a, cost, sizes)
-                .partial_cmp(&demotion_score(b, cost, sizes))
+            demotion_score_pressed(a, cost, sizes, pressure)
+                .partial_cmp(&demotion_score_pressed(b, cost, sizes, pressure))
                 .unwrap_or(Ordering::Equal)
         })
+}
+
+/// [`select_victim_pressed`] at the uniform pressure (legacy surface).
+pub fn select_victim(
+    candidates: &[VictimInfo],
+    cost: &CostModel,
+    sizes: BlockSizes,
+) -> Option<VictimInfo> {
+    select_victim_pressed(candidates, cost, sizes, &StagePressure::uniform())
 }
 
 #[cfg(test)]
@@ -156,6 +245,73 @@ mod tests {
         assert_eq!(demotion_step_penalty(&v(1, 6, 2, 8), &c), 0.0);
         let picked = select_victim(&[v(1, 2, 0, 8), v(2, 5, 0, 999)], &c, sizes()).unwrap();
         assert_eq!(picked.id, 2);
+    }
+
+    #[test]
+    fn uniform_pressure_is_the_legacy_score() {
+        // scales of 1.0 and a zero window change no f64: both surfaces
+        // must agree exactly on arbitrary candidates.
+        let c = gpu_bound_cost();
+        let p = StagePressure::uniform();
+        for cand in [v(1, 8, 0, 10), v(2, 2, 6, 10), v(3, 4, 2, 100)] {
+            assert_eq!(
+                demotion_score(&cand, &c, sizes()),
+                demotion_score_pressed(&cand, &c, sizes(), &p)
+            );
+            assert_eq!(
+                demotion_step_penalty(&cand, &c),
+                demotion_step_penalty_pressed(&cand, &c, &p)
+            );
+        }
+        assert_eq!(StagePressure::default(), p);
+    }
+
+    #[test]
+    fn stage_skewed_pressure_changes_the_pick() {
+        // The ISSUE-5 acceptance pin: the same two candidates, a
+        // different pressed device, a different victim.
+        //
+        // Candidate A holds many KV blocks but has a long generation
+        // left; candidate B holds few KV blocks and is nearly done. On a
+        // GPU-bound pressed device (no free window) the per-step
+        // recompute penalty compounds over A's remaining tokens, so the
+        // nearly-done B is the cheap victim. If the pressed device is a
+        // SMALL-MEMORY card instead, its weight stream idles the GPU
+        // long enough that recomputation is free — the penalty term
+        // vanishes and the scheduler goes straight for A's bytes.
+        let c = gpu_bound_cost();
+        let a = v(1, 12, 0, 200); // big footprint, long tail
+        let b = v(2, 3, 0, 2); // small footprint, nearly done
+        let compute_pressed = StagePressure::uniform();
+        let picked = select_victim_pressed(&[a, b], &c, sizes(), &compute_pressed).unwrap();
+        assert_eq!(picked.id, 2, "GPU-bound pressure must spare the long request");
+        // pressed device streams weights for 10 ms per layer: recompute
+        // of either candidate hides under it entirely
+        let memory_pressed = StagePressure {
+            device: 3,
+            stage: 1,
+            gpu_scale: 1.0,
+            link_scale: 1.0,
+            free_window_secs: 10e-3,
+        };
+        let picked = select_victim_pressed(&[a, b], &c, sizes(), &memory_pressed).unwrap();
+        assert_eq!(picked.id, 1, "a streaming pressed device frees the most bytes");
+        // a slower pressed clock penalizes recompute even harder: the
+        // short request stays the pick and the long one's score drops
+        let slow_clock = StagePressure {
+            gpu_scale: 4.0,
+            ..StagePressure::uniform()
+        };
+        let s_uniform = demotion_score_pressed(&a, &c, sizes(), &compute_pressed);
+        let s_slow = demotion_score_pressed(&a, &c, sizes(), &slow_clock);
+        assert!(s_slow < s_uniform);
+        // a slower pressed LINK credits the removed KV loads more: the
+        // penalty shrinks and the big holder's score rises
+        let slow_link = StagePressure {
+            link_scale: 4.0,
+            ..StagePressure::uniform()
+        };
+        assert!(demotion_score_pressed(&a, &c, sizes(), &slow_link) > s_uniform);
     }
 
     #[test]

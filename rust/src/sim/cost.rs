@@ -18,19 +18,21 @@
 //! era.
 
 use crate::config::{GpuSpec, ModelConfig, SystemConfig};
-use crate::plan::ExecutionPlan;
+use crate::plan::{ExecutionPlan, MemoryPlan};
 
 /// Per-(model, system) cost calculator shared by every simulated serving
 /// system. All times are seconds; token counts are raw tokens (the block
 /// abstraction is applied by the caller).
+///
+/// Residency arithmetic is PER-DEVICE through the plan's [`MemoryPlan`]:
+/// the old rig-level `stream_frac` field and `stage_stream_frac` query
+/// are gone — callers ask a specific device ([`Self::device_stream_frac`],
+/// [`Self::device_weight_stream_time`]) and rig-level answers are
+/// explicit reductions on the memory plan.
 #[derive(Debug, Clone)]
 pub struct SimCost {
     pub model: ModelConfig,
     pub sys: SystemConfig,
-    /// Stage-0 streamed weight fraction — at `pp = 1` the historical
-    /// global value (kept as a field for the legacy surface; per-stage
-    /// values come from [`Self::stage_stream_frac`]).
-    pub stream_frac: f64,
     /// Tensor-parallel degree (cached from the topology).
     pub tp: usize,
     /// The lowered execution plan the costs are derived from.
@@ -40,11 +42,9 @@ pub struct SimCost {
 impl SimCost {
     pub fn new(model: &ModelConfig, sys: &SystemConfig) -> Self {
         let plan = ExecutionPlan::for_system(model, sys);
-        let stream_frac = plan.stages[0].stream_frac;
         Self {
             model: model.clone(),
             sys: sys.clone(),
-            stream_frac,
             tp: plan.tp,
             plan,
         }
@@ -54,9 +54,14 @@ impl SimCost {
         self.tp as f64
     }
 
-    /// Streamed weight fraction of `stage`'s per-device slice.
-    pub fn stage_stream_frac(&self, stage: usize) -> f64 {
-        self.plan.stages[stage].stream_frac
+    /// The plan's per-device residency/budget table.
+    pub fn memory(&self) -> &MemoryPlan {
+        self.plan.memory()
+    }
+
+    /// Streamed weight fraction of device `d`'s slice of its stage.
+    pub fn device_stream_frac(&self, d: usize) -> f64 {
+        self.plan.memory().stream_frac(d)
     }
 
     /// This device's slice of a `bytes`-sized full tensor (identity at
@@ -70,15 +75,24 @@ impl SimCost {
         self.model.layer_weight_bytes().div_ceil(self.tp)
     }
 
-    /// PCIe time to stream one layer's non-resident weight slice over one
-    /// device's host link (stage-0 fraction; legacy surface).
-    pub fn weight_stream_time(&self) -> f64 {
-        let bytes = (self.shard_layer_weight_bytes() as f64 * self.stream_frac) as usize;
+    /// PCIe time for device `d` to stream one layer's non-resident slice
+    /// of its weight shard over ITS OWN host link (0 when the slice is
+    /// fully resident on that device).
+    pub fn device_weight_stream_time(&self, d: usize) -> f64 {
+        let bytes =
+            (self.shard_layer_weight_bytes() as f64 * self.device_stream_frac(d)) as usize;
         if bytes == 0 {
             0.0
         } else {
-            self.sys.interconnect.h2d_time(bytes)
+            self.sys.topology.slot(d).link.h2d_time(bytes)
         }
+    }
+
+    /// [`Self::device_weight_stream_time`] on device 0 — the historical
+    /// single-GPU surface (at `tp = pp = 1` with uniform slots this is
+    /// bit-for-bit the pre-MemoryPlan `weight_stream_time`).
+    pub fn weight_stream_time(&self) -> f64 {
+        self.device_weight_stream_time(0)
     }
 
     /// PCIe time to load one layer's per-device share of KV for `tokens`
@@ -187,19 +201,12 @@ impl SimCost {
 
     /// GPU cache slice capacity in ACT blocks (for GPU-resident ACT).
     /// Each device stores only its `1/tp` slice of its stage's layers of
-    /// a resident block; a block is GPU-resident only when every stage
-    /// holds its share, so the most-loaded stage bounds the census.
+    /// a resident block; a block is GPU-resident only when EVERY device
+    /// holds its share, so the tightest device bounds the census — the
+    /// memory plan's min-over-devices reduction (identical to the old
+    /// min-over-stages arithmetic on uniform grids).
     pub fn gpu_act_block_capacity(&self) -> usize {
-        self.plan
-            .stages
-            .iter()
-            .map(|s| {
-                let block_bytes =
-                    s.layer_count() * self.model.act_bytes_per_layer(self.sys.block_tokens);
-                self.sys.gpu_cache_budget() / self.shard_bytes(block_bytes).max(1)
-            })
-            .min()
-            .expect("plan has at least one stage")
+        self.plan.memory().act_capacity_blocks()
     }
 }
 
@@ -225,7 +232,8 @@ mod tests {
     #[test]
     fn weight_streaming_dominates_for_30b() {
         let c = cost();
-        assert!(c.stream_frac > 0.7, "stream frac {}", c.stream_frac);
+        let sf = c.device_stream_frac(0);
+        assert!(sf > 0.7, "stream frac {sf}");
         // ~1.2 GB per layer, most streamed at 25 GB/s -> tens of ms
         let t = c.weight_stream_time();
         assert!((0.02..0.1).contains(&t), "weight stream {t}");
@@ -264,7 +272,8 @@ mod tests {
     fn small_model_streams_little() {
         let c = SimCost::new(&ModelConfig::opt_6_7b(), &SystemConfig::paper_testbed());
         // 6.7B ~ 13 GB weights vs 12 GB resident budget -> small spill
-        assert!(c.stream_frac < 0.2, "stream frac {}", c.stream_frac);
+        let sf = c.device_stream_frac(0);
+        assert!(sf < 0.2, "stream frac {sf}");
     }
 
     #[test]
@@ -278,7 +287,12 @@ mod tests {
         assert!(c4.layer_forward_time(64, 1, 1024) < 0.3 * c1.layer_forward_time(64, 1, 1024));
         // each GPU's resident budget covers a larger share of its smaller
         // weight slice, so less streams
-        assert!(c4.stream_frac < c1.stream_frac, "{} !< {}", c4.stream_frac, c1.stream_frac);
+        assert!(
+            c4.device_stream_frac(0) < c1.device_stream_frac(0),
+            "{} !< {}",
+            c4.device_stream_frac(0),
+            c1.device_stream_frac(0)
+        );
         // and the GPU ACT cache holds more blocks (each block's slice is
         // smaller)
         assert!(c4.gpu_act_block_capacity() > 2 * c1.gpu_act_block_capacity());
@@ -289,14 +303,15 @@ mod tests {
         // 60 GB / 4 = 15 GB per shard vs 12 GB resident: only ~20%
         // streams, vs ~80% on one GPU — the recomputation window closes.
         let c4 = cost_tp(4);
-        assert!(c4.stream_frac < 0.3, "stream frac {}", c4.stream_frac);
+        let sf = c4.device_stream_frac(0);
+        assert!(sf < 0.3, "stream frac {sf}");
     }
 
     #[test]
     fn tp1_is_identity() {
         let a = cost();
         let b = cost_tp(1);
-        assert_eq!(a.stream_frac, b.stream_frac);
+        assert_eq!(a.device_stream_frac(0), b.device_stream_frac(0));
         assert_eq!(a.kv_gen_time(777), b.kv_gen_time(777));
         assert_eq!(a.kv_load_time(777), b.kv_load_time(777));
         assert_eq!(a.layer_forward_time(32, 1, 512), b.layer_forward_time(32, 1, 512));
@@ -305,13 +320,16 @@ mod tests {
     }
 
     #[test]
-    fn stream_frac_field_is_stage_zero_of_the_plan() {
-        // The legacy field and the plan agree at pp = 1 — same expression,
-        // single source of truth.
+    fn device_queries_agree_with_the_plan() {
+        // The per-device query, the plan's stage field and the memory
+        // plan are the same value — one source of truth, no re-derivation.
         for tp in [1usize, 2, 4] {
             let c = cost_tp(tp);
             assert_eq!(c.plan.pp, 1);
-            assert_eq!(c.stream_frac, c.stage_stream_frac(0));
+            for d in 0..tp {
+                assert_eq!(c.device_stream_frac(d), c.plan.stages[0].stream_frac);
+                assert_eq!(c.device_stream_frac(d), c.memory().stream_frac(d));
+            }
         }
     }
 
@@ -320,8 +338,8 @@ mod tests {
         let c1 = cost_grid(2, 1);
         let c4 = cost_grid(2, 4);
         // each stage's per-device slice regains residency
-        for s in 0..4 {
-            assert!(c4.stage_stream_frac(s) < c1.stream_frac);
+        for d in 0..8 {
+            assert!(c4.device_stream_frac(d) < c1.device_stream_frac(0));
         }
         // per-device ACT block slices cover only the stage's layers, so
         // the resident-block census grows with pp
@@ -351,13 +369,43 @@ mod tests {
         );
         assert_eq!(lm.plan.schedule, crate::plan::PipelineSchedule::LayerMajor);
         assert_eq!(ob.plan.schedule, crate::plan::PipelineSchedule::OneFOneB);
-        for s in 0..4 {
-            assert_eq!(lm.stage_stream_frac(s), ob.stage_stream_frac(s));
+        for d in 0..8 {
+            assert_eq!(lm.device_stream_frac(d), ob.device_stream_frac(d));
         }
         assert_eq!(lm.gpu_act_block_capacity(), ob.gpu_act_block_capacity());
         assert_eq!(lm.shard_layer_weight_bytes(), ob.shard_layer_weight_bytes());
         assert_eq!(lm.plan.weight_stream_passes(), 1);
         assert_eq!(ob.plan.weight_stream_passes(), 4);
+    }
+
+    #[test]
+    fn mixed_memory_grid_prices_streams_per_device() {
+        // A 48 GB stage next to 24 GB cards: its devices stop streaming
+        // (or stream much less), their per-device stream time collapses,
+        // and the rig ACT census still binds at the tight stage.
+        let m = ModelConfig::opt_66b();
+        let uni = SimCost::new(&m, &SystemConfig::paper_testbed_grid(2, 2));
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_stage_memory(1, 48 << 30),
+        );
+        let het = SimCost::new(&m, &sys);
+        // stage 0 untouched, bit for bit
+        assert_eq!(het.device_stream_frac(0), uni.device_stream_frac(0));
+        assert_eq!(
+            het.device_weight_stream_time(0),
+            uni.device_weight_stream_time(0)
+        );
+        // stage 1 regains residency on the bigger cards
+        assert!(het.device_stream_frac(2) < uni.device_stream_frac(2));
+        assert!(het.device_weight_stream_time(2) < uni.device_weight_stream_time(2));
+        // the census min-reduces at the 24 GB stage
+        assert_eq!(
+            het.gpu_act_block_capacity(),
+            het.memory().stage_act_capacity(0)
+        );
+        assert!(het.gpu_act_block_capacity() >= uni.gpu_act_block_capacity());
     }
 
     #[test]

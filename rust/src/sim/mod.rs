@@ -26,11 +26,14 @@
 //! host-link bandwidth and weight residency, and the per-stage bubble
 //! fraction in [`SimResult`] prices what it costs in compute idleness.
 //!
-//! Heterogeneous slots (x8 links, clock skew, NVLink islands) time every
-//! operation against their own specs; the straggler gap exposes the
-//! resulting asymmetry. `tp = n, pp = 1` with uniform links reproduces
-//! the pre-topology simulator bit-for-bit (`rust/tests/tp1_equivalence.rs`
-//! and the golden pins enforce it).
+//! Heterogeneous slots (x8 links, clock skew, NVLink islands, and —
+//! through the plan's [`crate::plan::MemoryPlan`] — per-device MEMORY
+//! sizes) time every operation against their own specs: each device
+//! streams its own weight fraction over its own link, and rig-level
+//! capacities are min-over-devices reductions. The straggler gap exposes
+//! the resulting asymmetry. `tp = n, pp = 1` with uniform slots
+//! reproduces the pre-topology simulator bit-for-bit
+//! (`rust/tests/tp1_equivalence.rs` and the golden pins enforce it).
 //!
 //! **Schedules** (DESIGN.md §Schedules): the event loop lowers the plan's
 //! [`crate::plan::PipelineSchedule`]. `LayerMajor` keeps the historical
@@ -224,7 +227,9 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                     .shard_bytes(plan.max_stage_layer_count() * model.kv_bytes_per_layer(max_ctx));
                 let inter_per_req =
                     cost.shard_bytes(wl.prompt * model.hidden * model.dtype.bytes() * 8);
-                ((sys.gpu_cache_budget() + sys.gpu_buffer_budget())
+                // per-device budgets: the tightest device of the grid
+                // bounds the whole-batch residency
+                (cost.memory().min_cache_plus_staging_bytes()
                     / (kv_per_req + inter_per_req).max(1))
                     .clamp(1, wl.batch)
             }
@@ -236,7 +241,8 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                 let act_block_layer =
                     cost.shard_bytes(sizes.per_layer_bytes(crate::cache::BlockKind::Act, model));
                 let caps = crate::policy::BinCaps::from_buffer_bytes(
-                    sys.gpu_buffer_budget(),
+                    // tightest device's pinned-staging arena
+                    cost.memory().min_pinned_staging_bytes(),
                     kv_block_layer,
                     act_block_layer,
                 );
@@ -324,13 +330,15 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     // attention assist on CPU (slower effective attention).
     // DeepSpeed-Inference "offloads most of the weight parameters to host
     // memory ... streaming, layer-granular" (§2.4): it streams the FULL
-    // layer each use rather than keeping a resident slice — per stage,
-    // since each stage streams against its own residency split.
-    let weight_scale: Vec<f64> = (0..pp)
-        .map(|s| match system {
+    // layer each use rather than keeping a resident slice — per DEVICE,
+    // since each device streams against its own residency budget
+    // (memory-heterogeneous grids split within a rig; uniform grids are
+    // the historical per-stage values exactly).
+    let weight_scale: Vec<f64> = (0..devices)
+        .map(|d| match system {
             System::PowerInfer => 0.3,
             System::DeepSpeedInference => {
-                let sf = cost.stage_stream_frac(s);
+                let sf = cost.device_stream_frac(d);
                 if sf > 0.0 {
                     1.0 / sf
                 } else {
@@ -352,13 +360,16 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     // bodies live in closures so the two orders cannot drift apart.
 
     // Stream one layer's weight slices on every owning device's link,
-    // recording each device's stream end in `w_end`.
+    // recording each device's stream end in `w_end`. Each device streams
+    // ITS OWN fraction (per-device MemoryPlan budgets): on mixed-memory
+    // grids a 48 GB card next to a 24 GB card streams less of the same
+    // stage slice over the same wall-clock window.
     let stream_weights =
         |tl: &mut Timeline, ic: &mut Interconnect, stage: usize, w_end: &mut [f64]| {
-            let sf = cost.stage_stream_frac(stage);
             for d in plan.stage_devices(stage) {
-                let wbytes =
-                    (cost.shard_layer_weight_bytes() as f64 * sf * weight_scale[stage]) as usize;
+                let wbytes = (cost.shard_layer_weight_bytes() as f64
+                    * cost.device_stream_frac(d)
+                    * weight_scale[d]) as usize;
                 let t_w = ic.transfer_time_via(
                     &topo.slot(d).link,
                     Dir::HostToDevice,
@@ -1071,6 +1082,76 @@ mod tests {
                 assert!((0.0..=1.0 + 1e-9).contains(&u), "{tag}: util {u}");
             }
         }
+    }
+
+    #[test]
+    fn mixed_memory_grid_runs_end_to_end() {
+        // The PR-5 acceptance scenario: per-device memory skew accepted
+        // and simulated for all four systems. OPT-66B on 2×2 with stage 1
+        // on 48 GB cards: stage 1 stops streaming most of its slice, so
+        // weight-bound systems speed up vs the uniform 24 GB grid.
+        let m = ModelConfig::opt_66b();
+        let w = wl(64, 512);
+        let uniform = SystemConfig::paper_testbed_grid(2, 2);
+        let mixed = SystemConfig::with_topology(
+            uniform.topology.clone().with_stage_memory(1, 48 << 30),
+        );
+        for sys in four_systems() {
+            let r = simulate(&m, &mixed, sys, w);
+            let tag = format!("{sys:?} mixed-mem");
+            assert!(r.throughput > 0.0 && r.throughput.is_finite(), "{tag}");
+            assert_eq!(r.shard_gpu_utilization.len(), 4, "{tag}");
+            assert_eq!(r.stage_bubble.len(), 2, "{tag}");
+            for &u in &r.shard_gpu_utilization {
+                assert!((0.0..=1.0 + 1e-9).contains(&u), "{tag}: util {u}");
+            }
+        }
+        // FlexGen is weight-stream-bound at this scale: the extra
+        // residency on stage 1 must buy real throughput.
+        let ru = simulate(&m, &uniform, System::FlexGen, w);
+        let rm = simulate(&m, &mixed, System::FlexGen, w);
+        assert!(
+            rm.throughput > ru.throughput,
+            "mixed {} !> uniform {}",
+            rm.throughput,
+            ru.throughput
+        );
+        // and the WeightLoad traffic really shrank (stage 1 streams less)
+        assert!(
+            rm.traffic.bytes(TrafficClass::WeightLoad)
+                < ru.traffic.bytes(TrafficClass::WeightLoad)
+        );
+    }
+
+    #[test]
+    fn single_small_card_binds_the_rig_census() {
+        // One 8 GB card in a TP=2 rig: it streams more than its peer and
+        // the hybrid policy sees the rig through the pressed device.
+        let m = ModelConfig::opt_30b();
+        let w = wl(64, 512);
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_tp(2)
+                .topology
+                .with_memory(0, 1, 8 << 30),
+        );
+        let r = simulate(&m, &sys, System::HybridServe(PolicyConfig::full()), w);
+        assert!(r.throughput > 0.0 && r.throughput.is_finite());
+        let ru = simulate(
+            &m,
+            &SystemConfig::paper_testbed_tp(2),
+            System::HybridServe(PolicyConfig::full()),
+            w,
+        );
+        // the small card streams most of its slice: the rig slows down,
+        // and the wider weight window tilts Algorithm 1 toward ACT (the
+        // pressed device's view, not the healthy card's)
+        assert!(r.throughput < ru.throughput);
+        assert!(
+            r.act_block_share >= ru.act_block_share,
+            "{} !>= {}",
+            r.act_block_share,
+            ru.act_block_share
+        );
     }
 
     #[test]

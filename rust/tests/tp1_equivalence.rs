@@ -13,11 +13,11 @@
 //!     throughput, utilizations, minibatch, ACT share and per-class
 //!     traffic, all compared with `assert_eq!` on the raw f64/u64 values.
 
-// The verbatim legacy copy below intentionally drives the Timeline
-// through the historical suffix-free (device-0) accessors, which are now
-// deprecated thin wrappers over the plan-indexed API — that is exactly
-// the surface this test pins.
-#![allow(deprecated)]
+// The legacy copy below drives the Timeline through the plan-indexed
+// `*_on(0, ...)` accessors (the deprecated suffix-free wrappers were
+// removed in PR 5 — device 0 of a single-device timeline IS the
+// historical two-lane pipeline, pinned by the span-level property test
+// in `pcie::timeline`).
 
 use hybridserve::cache::{BlockKind, BlockSizes};
 use hybridserve::config::{ModelConfig, ShardSpec, SystemConfig};
@@ -141,8 +141,8 @@ fn legacy_simulate(
     let weight_scale = match system {
         System::PowerInfer => 0.3,
         System::DeepSpeedInference => {
-            if cost.stream_frac > 0.0 {
-                1.0 / cost.stream_frac
+            if cost.device_stream_frac(0) > 0.0 {
+                1.0 / cost.device_stream_frac(0)
             } else {
                 0.0
             }
@@ -154,13 +154,13 @@ fn legacy_simulate(
     // ==== prefill phase =================================================
     let mut weight_ready = 0.0f64;
     for _l in 0..nl {
-        let wbytes = (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+        let wbytes = (model.layer_weight_bytes() as f64 * cost.device_stream_frac(0) * weight_scale) as usize;
         let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
-        let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
+        let w_span = tl.schedule_on(0, Lane::PCIe, 0.0, t_w);
         let mut gpu_end = 0.0;
         for &mb in &chunk_sizes {
             let t_fwd = cost.layer_prefill_time(mb, wl.prompt) * cpu_attn_penalty;
-            let span = tl.schedule(Lane::Gpu, weight_ready, t_fwd);
+            let span = tl.schedule_on(0, Lane::Gpu, weight_ready, t_fwd);
             gpu_end = span.end;
         }
         let kv_toks = if kv_on_gpu {
@@ -177,7 +177,7 @@ fn legacy_simulate(
         weight_ready = w_span.end;
     }
     let prefill_secs = tl.makespan();
-    let gpu_busy_prefill = tl.busy(Lane::Gpu);
+    let gpu_busy_prefill = tl.busy_on(0, Lane::Gpu);
 
     // ==== generation phase ==============================================
     for step in 0..wl.gen {
@@ -190,9 +190,9 @@ fn legacy_simulate(
 
         for _l in 0..nl {
             let wbytes =
-                (model.layer_weight_bytes() as f64 * cost.stream_frac * weight_scale) as usize;
+                (model.layer_weight_bytes() as f64 * cost.device_stream_frac(0) * weight_scale) as usize;
             let t_w = ic.transfer_time(Dir::HostToDevice, TrafficClass::WeightLoad, wbytes);
-            let w_span = tl.schedule(Lane::PCIe, 0.0, t_w);
+            let w_span = tl.schedule_on(0, Lane::PCIe, 0.0, t_w);
 
             for &mb in &chunk_sizes {
                 let kv_bytes = if kv_on_gpu {
@@ -205,7 +205,7 @@ fn legacy_simulate(
                 let act_bytes = model.act_bytes_per_layer(act_host_toks);
                 let t_kv = ic.transfer_time(Dir::HostToDevice, TrafficClass::KvLoad, kv_bytes);
                 let t_act = ic.transfer_time(Dir::HostToDevice, TrafficClass::ActLoad, act_bytes);
-                let load_span = tl.schedule(Lane::PCIe, 0.0, t_kv + t_act);
+                let load_span = tl.schedule_on(0, Lane::PCIe, 0.0, t_kv + t_act);
 
                 let t_gen = cost.kv_gen_time(act_toks_req * mb);
                 let t_recompute = if recompute_toks_req > 0 {
@@ -215,7 +215,7 @@ fn legacy_simulate(
                 };
                 let t_fwd = cost.layer_forward_time(mb, 1, ctx) * cpu_attn_penalty;
                 let ready = load_span.end.max(weight_ready);
-                let g = tl.schedule(Lane::Gpu, ready, t_gen + t_recompute + t_fwd);
+                let g = tl.schedule_on(0, Lane::Gpu, ready, t_gen + t_recompute + t_fwd);
 
                 let new_act = matches!(system, System::HybridServe(_) | System::ActOnly)
                     && act_share > 0.0;
@@ -237,7 +237,7 @@ fn legacy_simulate(
     }
 
     let gen_span = (tl.makespan() - prefill_secs).max(1e-12);
-    let gpu_util_gen = ((tl.busy(Lane::Gpu) - gpu_busy_prefill) / gen_span).clamp(0.0, 1.0);
+    let gpu_util_gen = ((tl.busy_on(0, Lane::Gpu) - gpu_busy_prefill) / gen_span).clamp(0.0, 1.0);
 
     let makespan = tl.makespan() * rounds as f64;
     let prefill_secs = prefill_secs * rounds as f64;
@@ -255,7 +255,7 @@ fn legacy_simulate(
         makespan,
         prefill_secs,
         gpu_utilization: gpu_util_gen,
-        pcie_utilization: tl.utilization(Lane::PCIe),
+        pcie_utilization: tl.utilization_on(0, Lane::PCIe),
         traffic,
         act_block_share: act_share,
         minibatch,

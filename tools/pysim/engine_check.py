@@ -57,7 +57,7 @@ class Engine:
         fb = self.last_exit[-1] if self.last_exit else 0.0
         return [self.last_exit[c] if c < len(self.last_exit) else fb for c in range(chunks)]
 
-    def schedule_pass(self, gpu_base, w_base, cache_base, hop_tokens, entries):
+    def schedule_pass(self, gpu_base, cache_base, hop_tokens, entries):
         chunks = len(entries)
         frac = 1.0 / chunks
         chunk_hop = div_ceil(hop_tokens, chunks)
@@ -71,7 +71,8 @@ class Engine:
                 for d in range(stage.dev_start, stage.dev_end):
                     gpu_scale = 1.0
                     link_scale = 1.0
-                    t_pcie = layers * (w_base + cache_base * frac) * link_scale
+                    w_dev = self.cost.device_weight_stream_time(d)
+                    t_pcie = layers * (w_dev + cache_base * frac * link_scale)
                     t_gpu = layers * gpu_base * frac * gpu_scale
                     _, load_end = self.tl.schedule_on(d, PCIE, 0.0, t_pcie)
                     _, end = self.tl.schedule_on(d, GPU, max(load_end, handoff), t_gpu)
@@ -106,9 +107,8 @@ class Engine:
                         kv += 1
                     r["blocks"].append((k, filled))
             gpu_base = self.cost.layer_prefill_time(batch, max_prompt)
-            w_base = self.cost.weight_stream_time()
             entries = [0.0] * self.pass_chunks(batch)
-            self.schedule_pass(gpu_base, w_base, 0.0, batch * max_prompt, entries)
+            self.schedule_pass(gpu_base, 0.0, batch * max_prompt, entries)
             for r in wave:
                 r["prefilled"] = True
                 r["generated"] = 1
@@ -122,10 +122,9 @@ class Engine:
             ctx_sum = sum(r["prompt"] + r["generated"] for r in runnable)
             mean_ctx = ctx_sum // n
             gpu_base = self.cost.kv_gen_time(act_blocks * 16) + self.cost.layer_forward_time(n, 1, mean_ctx)
-            w_base = self.cost.weight_stream_time()
             cache_base = self.cost.kv_load_time(kv_blocks * 16) + self.cost.act_load_time(act_blocks * 16)
             entries = self.feedback_entries(self.pass_chunks(n))
-            self.schedule_pass(gpu_base, w_base, cache_base, n, entries)
+            self.schedule_pass(gpu_base, cache_base, n, entries)
             for r in runnable:
                 r["generated"] += 1
                 self.alloc_token_slot(r)

@@ -27,6 +27,14 @@ def main():
     print("sim_opt175b_tp2pp4_schedules.json throughput:")
     print(json.dumps(both, indent=2))
 
+    # rust/tests/golden/sim_opt66b_hetmem.json (ISSUE-5 mixed-memory pin:
+    # OPT-66B on 2x2 with stage 1 on 48 GB cards)
+    m66 = opt_66b()
+    het = SystemConfig(2, 2).with_stage_memory(1, 48 << 30)
+    hetg = {k: simulate(m66, het, s, wl).throughput for k, s in SYSTEMS}
+    print("sim_opt66b_hetmem.json throughput:")
+    print(json.dumps(hetg, indent=2))
+
 
 if __name__ == "__main__":
     main()

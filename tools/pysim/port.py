@@ -135,7 +135,7 @@ AUTO = "auto"
 
 
 class SystemConfig:
-    def __init__(self, tp=1, pp=1, schedule=LAYER_MAJOR):
+    def __init__(self, tp=1, pp=1, schedule=LAYER_MAJOR, mem_overrides=None):
         self.gpu = GpuSpec()
         self.interconnect = InterconnectSpec()
         self.host_memory = 882 * (1 << 30)
@@ -145,10 +145,22 @@ class SystemConfig:
         self.gpu_weight_fraction = 0.5
         self.gpu_buffer_fraction = 0.25
         self.schedule = schedule
+        # device id -> memory_bytes (mirror of Topology::with_memory /
+        # with_stage_memory); absent devices keep the reference 24 GB.
+        self.mem_overrides = dict(mem_overrides or {})
 
     def with_schedule(self, schedule):
-        s = SystemConfig(self.tp, self.pp, schedule)
-        return s
+        return SystemConfig(self.tp, self.pp, schedule, self.mem_overrides)
+
+    def with_stage_memory(self, stage, memory_bytes):
+        assert 0 <= stage < self.pp, "stage out of range"  # mirror the Rust builder
+        ov = dict(self.mem_overrides)
+        for d in range(stage * self.tp, (stage + 1) * self.tp):
+            ov[d] = memory_bytes
+        return SystemConfig(self.tp, self.pp, self.schedule, ov)
+
+    def device_memory(self, d):
+        return self.mem_overrides.get(d, self.gpu.memory_bytes)
 
     def gpu_weight_budget(self):
         return f64_trunc(self.gpu.memory_bytes * self.gpu_weight_fraction)
@@ -186,6 +198,60 @@ class StagePlan:
         return self.lay_end - self.lay_start
 
 
+class DeviceBudget:
+    """Mirror of plan::memory::DeviceBudget (per-device residency)."""
+
+    def __init__(self, device, stage, memory_bytes, wrb, psb, cache, sf, kv_cap, act_cap):
+        self.device = device
+        self.stage = stage
+        self.memory_bytes = memory_bytes
+        self.weight_resident_bytes = wrb
+        self.pinned_staging_bytes = psb
+        self.cache_bytes = cache
+        self.stream_frac = sf
+        self.kv_capacity_blocks = kv_cap
+        self.act_capacity_blocks = act_cap
+
+
+class MemoryPlan:
+    """Mirror of plan::memory::MemoryPlan (same op order as the Rust)."""
+
+    def __init__(self, model, sys, stages, tp):
+        self.devices = []
+        for s in stages:
+            shard_total = s.weight_bytes / tp
+            for d in range(s.dev_start, s.dev_end):
+                mem = sys.device_memory(d)
+                wrb = f64_trunc(mem * sys.gpu_weight_fraction)
+                psb = f64_trunc(mem * sys.gpu_buffer_fraction)
+                cache = max(0, mem - (wrb + psb))
+                sf = clamp((shard_total - wrb) / shard_total, 0.0, 1.0)
+                abb = div_ceil(s.layer_count() * model.act_bytes_per_layer(sys.block_tokens), tp)
+                kbb = div_ceil(s.layer_count() * model.kv_bytes_per_layer(sys.block_tokens), tp)
+                self.devices.append(
+                    DeviceBudget(d, s.stage, mem, wrb, psb, cache, sf,
+                                 cache // max(kbb, 1), cache // max(abb, 1))
+                )
+
+    def stream_frac(self, d):
+        return self.devices[d].stream_frac
+
+    def stage_max_stream_frac(self, stage):
+        return max([b.stream_frac for b in self.devices if b.stage == stage] + [0.0])
+
+    def act_capacity_blocks(self):
+        return min(b.act_capacity_blocks for b in self.devices)
+
+    def kv_capacity_blocks(self):
+        return min(b.kv_capacity_blocks for b in self.devices)
+
+    def min_pinned_staging_bytes(self):
+        return min(b.pinned_staging_bytes for b in self.devices)
+
+    def min_cache_plus_staging_bytes(self):
+        return min(b.cache_bytes + b.pinned_staging_bytes for b in self.devices)
+
+
 class ExecutionPlan:
     def __init__(self, model, sys, schedule=None):
         tp, pp = sys.tp, sys.pp
@@ -200,10 +266,13 @@ class ExecutionPlan:
             wb = n * model.layer_weight_bytes()
             if s == pp - 1:
                 wb += model.embedding_bytes()
-            shard_total = wb / tp
-            sf = clamp((shard_total - sys.gpu_weight_budget()) / shard_total, 0.0, 1.0)
-            self.stages.append(StagePlan(s, start, start + n, s * tp, (s + 1) * tp, wb, sf))
+            self.stages.append(StagePlan(s, start, start + n, s * tp, (s + 1) * tp, wb, 0.0))
             start += n
+        # Per-device residency authority; the stage field mirrors the
+        # pacing (max) device of its TP group.
+        self.memory = MemoryPlan(model, sys, self.stages, tp)
+        for s in self.stages:
+            s.stream_frac = self.memory.stage_max_stream_frac(s.stage)
         self.collectives_per_layer = 2
         # Resolved schedule: pp = 1 always lowers to layer-major (the
         # zig-zag weight share is the identity schedule on one stage).
@@ -260,11 +329,10 @@ class SimCost:
         self.model = model
         self.sys = sys
         self.plan = ExecutionPlan(model, sys, schedule)
-        self.stream_frac = self.plan.stages[0].stream_frac
         self.tp = self.plan.tp
 
-    def stage_stream_frac(self, s):
-        return self.plan.stages[s].stream_frac
+    def device_stream_frac(self, d):
+        return self.plan.memory.stream_frac(d)
 
     def shard_bytes(self, b):
         return div_ceil(b, self.tp)
@@ -272,9 +340,12 @@ class SimCost:
     def shard_layer_weight_bytes(self):
         return div_ceil(self.model.layer_weight_bytes(), self.tp)
 
-    def weight_stream_time(self):
-        b = f64_trunc(self.shard_layer_weight_bytes() * self.stream_frac)
+    def device_weight_stream_time(self, d):
+        b = f64_trunc(self.shard_layer_weight_bytes() * self.device_stream_frac(d))
         return 0.0 if b == 0 else self.sys.interconnect.h2d_time(b)
+
+    def weight_stream_time(self):
+        return self.device_weight_stream_time(0)
 
     def kv_load_time(self, tokens):
         if tokens == 0:
@@ -314,11 +385,7 @@ class SimCost:
         return self.layer_forward_time(batch, tokens, tokens // 2)
 
     def gpu_act_block_capacity(self):
-        caps = []
-        for s in self.stages():
-            block_bytes = s.layer_count() * self.model.act_bytes_per_layer(self.sys.block_tokens)
-            caps.append(self.sys.gpu_cache_budget() // max(self.shard_bytes(block_bytes), 1))
-        return min(caps)
+        return self.plan.memory.act_capacity_blocks()
 
     def stages(self):
         return self.plan.stages
@@ -384,15 +451,18 @@ def analytic_cost_model(model, sys, schedule=None):
 
     def weight_load_time():
         plan = ExecutionPlan(model, sys, schedule)
-        resident = float(sys.gpu_weight_budget())
-        total = plan.max_stage_weight_bytes() / tp
-        stream_fraction = clamp((total - resident) / total, 0.0, 1.0)
-        layer_bytes = model.layer_weight_bytes() / tp * stream_fraction
-        # NEW (schedule axis): chunk-major re-streams each stage's layer
-        # weights once per in-flight chunk per step; the per-layer window
-        # Algorithm 1 balances against multiplies accordingly.
+        # Per-device window from the MemoryPlan: each device's own
+        # streamed fraction over its own link; the slowest stream paces
+        # the pipeline (max over devices — on uniform grids bit-for-bit
+        # the historical most-loaded-stage expression). Chunk-major
+        # re-streams once per in-flight chunk per step, so the window
+        # Algorithm 1 balances against multiplies by the pass count.
+        window = 0.0
+        for b in plan.memory.devices:
+            layer_bytes = model.layer_weight_bytes() / tp * b.stream_frac
+            window = max(window, sys.interconnect.h2d_time(f64_trunc(layer_bytes)))
         passes = plan.weight_stream_passes()
-        return passes * sys.interconnect.h2d_time(f64_trunc(layer_bytes))
+        return passes * window
 
     ns = [float(n) for n in SAMPLE_POINTS]
     gen_ts = [sample_kv_gen(n) for n in SAMPLE_POINTS]
@@ -664,13 +734,13 @@ def simulate(model, sys, system, wl, bubble_aware=True):
             kv_pr = cost.shard_bytes(plan.max_stage_layer_count() * model.kv_bytes_per_layer(max_ctx))
             inter_pr = cost.shard_bytes(wl.prompt * model.hidden * model.dtype * 8)
             return clamp(
-                (sys.gpu_cache_budget() + sys.gpu_buffer_budget()) // max(kv_pr + inter_pr, 1),
+                plan.memory.min_cache_plus_staging_bytes() // max(kv_pr + inter_pr, 1),
                 1,
                 wl.batch,
             )
         kv_block_layer = cost.shard_bytes(sizes.per_layer_bytes("kv", model))
         act_block_layer = cost.shard_bytes(sizes.per_layer_bytes("act", model))
-        caps = BinCaps(sys.gpu_buffer_budget(), kv_block_layer, act_block_layer)
+        caps = BinCaps(plan.memory.min_pinned_staging_bytes(), kv_block_layer, act_block_layer)
         mb = wl.batch
         if kv_per_req_ > 0:
             mb = min(mb, caps.kv_max // max(kv_per_req_, 1))
@@ -736,12 +806,13 @@ def simulate(model, sys, system, wl, bubble_aware=True):
         collective_bytes += 2 * (tp - 1) * payload
         return 2.0 * sys.allgather_time(stage, payload)
 
+    # per DEVICE (memory-heterogeneous grids split within a rig)
     weight_scale = []
-    for s in range(pp):
+    for d in range(devices):
         if system.kind == "powerinfer":
             weight_scale.append(0.3)
         elif system.kind == "deepspeed":
-            sf = cost.stage_stream_frac(s)
+            sf = cost.device_stream_frac(d)
             weight_scale.append(1.0 / sf if sf > 0.0 else 0.0)
         else:
             weight_scale.append(1.0)
@@ -755,9 +826,10 @@ def simulate(model, sys, system, wl, bubble_aware=True):
     chunk_done = [0.0] * nchunks
 
     def stream_weights(stage, devs, w_end):
-        sf = cost.stage_stream_frac(stage)
         for d in range(*devs):
-            wbytes = f64_trunc(cost.shard_layer_weight_bytes() * sf * weight_scale[stage])
+            wbytes = f64_trunc(
+                cost.shard_layer_weight_bytes() * cost.device_stream_frac(d) * weight_scale[d]
+            )
             t_w = ic.transfer_time_via(sys.interconnect, "h2d", "weight_load", wbytes)
             (_, end) = tl.schedule_on(d, PCIE, 0.0, t_w)
             w_end[d] = end

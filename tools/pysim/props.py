@@ -139,12 +139,121 @@ def alloc_property(rng):
         prev = f
 
 
+# ---- property 3: MemoryPlan (rust/tests/memory_plan.rs, ISSUE 5) ------
+# Mirrors the Rust suite's draw ORDER exactly (same xoshiro stream):
+# grid() = choose(paper_family), range(1,5), choose([1,2,3,4]).
+
+FAMILY = [opt_6_7b, opt_13b, opt_30b, opt_66b]
+
+
+def draw_grid(rng):
+    m = rng.choose(FAMILY)()
+    tp = rng.range(1, 5)
+    pp = rng.choose([1, 2, 3, 4])
+    return m, tp, pp
+
+
+def memory_plan_uniform_property(rng):
+    m, tp, pp = draw_grid(rng)
+    sys = SystemConfig(tp, pp)
+    plan = ExecutionPlan(m, sys)
+    mp = plan.memory
+    assert len(mp.devices) == tp * pp
+    census_min = None
+    for b in mp.devices:
+        assert b.memory_bytes == sys.gpu.memory_bytes
+        assert b.weight_resident_bytes == sys.gpu_weight_budget()
+        assert b.pinned_staging_bytes == sys.gpu_buffer_budget()
+        assert b.cache_bytes == sys.gpu_cache_budget()
+        s = plan.stages[b.stage]
+        shard_total = s.weight_bytes / tp
+        legacy = clamp((shard_total - sys.gpu_weight_budget()) / shard_total, 0.0, 1.0)
+        assert b.stream_frac == legacy, "stream_frac != legacy expression"
+        assert s.stream_frac == b.stream_frac
+        block_bytes = s.layer_count() * m.act_bytes_per_layer(sys.block_tokens)
+        legacy_census = sys.gpu_cache_budget() // max(div_ceil(block_bytes, tp), 1)
+        assert b.act_capacity_blocks == legacy_census
+        census_min = legacy_census if census_min is None else min(census_min, legacy_census)
+    assert mp.act_capacity_blocks() == census_min
+    assert mp.min_pinned_staging_bytes() == sys.gpu_buffer_budget()
+    assert mp.min_cache_plus_staging_bytes() == sys.gpu_cache_budget() + sys.gpu_buffer_budget()
+
+
+def memory_plan_invariants_property(rng):
+    m, tp, pp = draw_grid(rng)
+    ov = {}
+    for _ in range(rng.range(0, 3)):
+        stage = rng.range(0, pp)
+        rank = rng.range(0, tp)
+        ov[stage * tp + rank] = rng.range(8 << 30, 96 << 30)
+    sys = SystemConfig(tp, pp, LAYER_MAJOR, ov)
+    plan = ExecutionPlan(m, sys)
+    mp = plan.memory
+    act_sum = kv_sum = 0
+    for b in mp.devices:
+        assert 0.0 <= b.stream_frac <= 1.0
+        assert b.weight_resident_bytes + b.pinned_staging_bytes + b.cache_bytes <= b.memory_bytes
+        assert b.act_capacity_blocks >= mp.act_capacity_blocks()
+        assert b.kv_capacity_blocks >= mp.kv_capacity_blocks()
+        # floor-census cross-check (catches a wrong block-bytes divisor)
+        s = plan.stages[b.stage]
+        act_bb = max(div_ceil(s.layer_count() * m.act_bytes_per_layer(sys.block_tokens), tp), 1)
+        kv_bb = max(div_ceil(s.layer_count() * m.kv_bytes_per_layer(sys.block_tokens), tp), 1)
+        assert b.act_capacity_blocks * act_bb <= b.cache_bytes < (b.act_capacity_blocks + 1) * act_bb
+        assert b.kv_capacity_blocks * kv_bb <= b.cache_bytes < (b.kv_capacity_blocks + 1) * kv_bb
+        act_sum += b.act_capacity_blocks
+        kv_sum += b.kv_capacity_blocks
+    assert act_sum >= mp.act_capacity_blocks()
+    assert kv_sum >= mp.kv_capacity_blocks()
+    # pressed-device rule (max stream_frac, ties -> smaller ACT census,
+    # then lowest id) realizes the pacing fraction — mirror of
+    # MemoryPlan::pressed_device
+    best = 0
+    for b in mp.devices[1:]:
+        cur = mp.devices[best]
+        if b.stream_frac > cur.stream_frac or (
+            b.stream_frac == cur.stream_frac
+            and b.act_capacity_blocks < cur.act_capacity_blocks
+        ):
+            best = b.device
+    assert mp.devices[best].stream_frac == max(b.stream_frac for b in mp.devices)
+
+
+def memory_plan_monotone_property(rng):
+    m, tp, pp = draw_grid(rng)
+    stage = rng.range(0, pp)
+    rank = rng.range(0, tp)
+    device = stage * tp + rank
+    prev_frac = float("inf")
+    prev_act = prev_kv = 0
+    mem = rng.range(8 << 30, 16 << 30)
+    for _ in range(6):
+        sys = SystemConfig(tp, pp, LAYER_MAJOR, {device: mem})
+        plan = ExecutionPlan(m, sys)
+        b = plan.memory.devices[device]
+        assert b.stream_frac <= prev_frac, f"stream_frac grew: {prev_frac} -> {b.stream_frac}"
+        assert b.act_capacity_blocks >= prev_act
+        assert b.kv_capacity_blocks >= prev_kv
+        for other in plan.memory.devices:
+            if other.device != device:
+                assert other.memory_bytes == sys.gpu.memory_bytes
+        prev_frac = b.stream_frac
+        prev_act = b.act_capacity_blocks
+        prev_kv = b.kv_capacity_blocks
+        mem += rng.range(1 << 30, 16 << 30)
+
+
 if __name__ == "__main__":
     import time
 
     t0 = time.time()
     check("alloc-bubble-monotone", 60, alloc_property)
     print(f"alloc-bubble-monotone: 60 cases OK ({time.time()-t0:.1f}s)")
+    t0 = time.time()
+    check("memory-plan-uniform", 100, memory_plan_uniform_property)
+    check("memory-plan-invariants", 100, memory_plan_invariants_property)
+    check("memory-plan-monotone", 100, memory_plan_monotone_property)
+    print(f"memory-plan suites: 3x100 cases OK ({time.time()-t0:.1f}s)")
     t0 = time.time()
     check("schedule-axis", 100, schedule_property)
     print(f"schedule-axis: 100 cases OK ({time.time()-t0:.1f}s)")

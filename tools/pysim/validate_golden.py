@@ -50,6 +50,18 @@ def main():
             r = simulate(m, s2, system, wl)
             ok &= check(f"{sched}/{key}", r.throughput, g["throughput"][sched][key])
 
+    g = json.load(open("/root/repo/rust/tests/golden/sim_opt66b_hetmem.json"))
+    wl = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+    m = opt_66b()
+    t = g["topology"]
+    s = SystemConfig(t["tp"], t["pp"]).with_stage_memory(
+        t["skewed_stage"], t["skewed_memory_gb"] << 30
+    )
+    print("golden sim_opt66b_hetmem (tp=2, pp=2, stage 1 on 48 GB):")
+    for key, system in [("hybrid", HYBRID), ("flexgen", FLEXGEN), ("deepspeed", DEEPSPEED), ("act_only", ACT_ONLY)]:
+        r = simulate(m, s, system, wl)
+        ok &= check(key, r.throughput, g["throughput"][key])
+
     print("ALL OK" if ok else "MISMATCH")
     return 0 if ok else 1
 
