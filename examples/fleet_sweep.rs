@@ -1,0 +1,118 @@
+//! Fleet sweep (ISSUE 6): score candidate grid shapes by $/token, plan a
+//! replica count against a diurnal load curve, then serve a session
+//! trace on the planned heterogeneous fleet under each router policy.
+//!
+//! Three views:
+//!  * autoscaler — each candidate grid's simulated throughput, $/hour
+//!    and $/token on a probe workload, plus the replica plan along a
+//!    diurnal offered-load curve;
+//!  * policies — goodput / p99 TTFT / $/Mtok per router policy on the
+//!    same 24/48/80 GB fleet and trace (cache-affinity wins: returning
+//!    turns re-prefill only their new tokens on their owner);
+//!  * sessions — router hit/miss census per policy.
+//!
+//! Run with `cargo run --release --example fleet_sweep`.
+
+use hybridserve::cache::BlockSizes;
+use hybridserve::config::ModelConfig;
+use hybridserve::fleet::{single_gpu_config, Autoscaler, Fleet, PriceTable, RoutePolicy};
+use hybridserve::harness::FigureTable;
+use hybridserve::metrics::SloSpec;
+use hybridserve::sched::SchedConfig;
+use hybridserve::sim::Workload;
+use hybridserve::workload::{RateEnvelope, SessionMix, WorkloadGen};
+
+fn main() {
+    let m = ModelConfig::opt_6_7b();
+    let prices = PriceTable::cloud_2025();
+
+    // --- autoscaler: score candidate grids, plan against a load curve
+    let auto = Autoscaler::new(
+        &m,
+        vec![
+            ("24g".into(), single_gpu_config(24 << 30)),
+            ("48g".into(), single_gpu_config(48 << 30)),
+            ("80g".into(), single_gpu_config(80 << 30)),
+        ],
+        &prices,
+        Workload {
+            batch: 8,
+            prompt: 64,
+            gen: 8,
+        },
+    );
+    let mut scores = FigureTable::new(
+        "fleet_autoscaler",
+        &["grid", "tok_s", "dollars_per_hour", "dollars_per_mtok"],
+    );
+    for s in auto.scores() {
+        scores.row(vec![
+            s.label.clone(),
+            format!("{:.1}", s.tokens_per_sec),
+            format!("{:.2}", s.hourly),
+            format!("{:.3}", s.cost_per_token * 1e6),
+        ]);
+    }
+    scores.emit();
+    println!("best grid: {}", auto.best().label);
+
+    let env = RateEnvelope::Diurnal {
+        period_secs: 86400.0,
+        trough: 0.2,
+    };
+    let peak = auto.best().tokens_per_sec * 2.5;
+    let curve: Vec<f64> = (0..8).map(|h| peak * env.multiplier(h as f64 * 10800.0)).collect();
+    let plan = auto.plan(&curve);
+    println!("diurnal plan (8 x 3h buckets, peak {peak:.0} tok/s): {plan:?}");
+
+    // --- policies on a fixed heterogeneous fleet
+    let trace = WorkloadGen::new(17, 2048).session_trace(&SessionMix {
+        sessions: 16,
+        session_rate: 0.8,
+        turns: (3, 6),
+        first_prompt: (32, 96),
+        turn_tokens: (16, 48),
+        gen: 16,
+        think_secs: 3.0,
+    });
+    let systems = vec![
+        single_gpu_config(24 << 30),
+        single_gpu_config(48 << 30),
+        single_gpu_config(80 << 30),
+    ];
+    let host_pool = 4096 * BlockSizes::new(&m, 16).kv_bytes;
+    let cfg = SchedConfig {
+        max_running: 32,
+        preemption: true,
+        slo: SloSpec::default(),
+    };
+
+    let mut t = FigureTable::new(
+        "fleet_policies",
+        &[
+            "policy",
+            "goodput_tok_s",
+            "ttft_p99_s",
+            "dollars_per_mtok",
+            "hits",
+            "misses",
+        ],
+    );
+    for policy in [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastQueueDepth,
+        RoutePolicy::CacheAffinity,
+    ] {
+        let mut fleet = Fleet::new(&m, &systems, host_pool, cfg, policy, 7, &prices);
+        let fr = fleet.serve(&trace).expect("fleet trace");
+        t.row(vec![
+            policy.name().to_string(),
+            format!("{:.1}", fr.fleet.goodput),
+            format!("{:.4}", fr.fleet.ttft_p99),
+            format!("{:.3}", fr.cost_per_token * 1e6),
+            fr.session_hits.to_string(),
+            fr.session_misses.to_string(),
+        ]);
+    }
+    t.emit();
+}

@@ -1,0 +1,225 @@
+//! Cost-aware grid selection and replica-count planning: score candidate
+//! grid shapes by $/token (per-GPU-hour price table over the analytic
+//! simulator's throughput), then scale the replica count against an
+//! offered-load curve — the VM-selection shape of *Cost-Efficient LLM
+//! Serving in the Cloud* applied to HybridServe grids.
+
+use crate::config::{ModelConfig, SystemConfig};
+use crate::policy::PolicyConfig;
+use crate::sim::{simulate, System, Workload};
+
+/// One price tier: a GPU class keyed by its memory size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuPrice {
+    pub mem_gb: usize,
+    pub dollars_per_hour: f64,
+}
+
+/// Per-GPU-hour price table. A device is priced at the smallest tier
+/// whose memory covers it; beyond the largest tier the price
+/// extrapolates linearly in memory.
+#[derive(Debug, Clone)]
+pub struct PriceTable {
+    tiers: Vec<GpuPrice>,
+}
+
+impl PriceTable {
+    pub fn new(mut tiers: Vec<GpuPrice>) -> Self {
+        assert!(!tiers.is_empty(), "empty price table");
+        tiers.sort_by_key(|t| t.mem_gb);
+        Self { tiers }
+    }
+
+    /// On-demand cloud prices (2025-ish): 24 GB consumer tier, 48 GB
+    /// workstation tier, 80 GB datacenter tier.
+    pub fn cloud_2025() -> Self {
+        Self::new(vec![
+            GpuPrice {
+                mem_gb: 24,
+                dollars_per_hour: 0.44,
+            },
+            GpuPrice {
+                mem_gb: 48,
+                dollars_per_hour: 1.10,
+            },
+            GpuPrice {
+                mem_gb: 80,
+                dollars_per_hour: 2.49,
+            },
+        ])
+    }
+
+    /// $/hour of one device with `memory_bytes` of HBM.
+    pub fn gpu_hourly(&self, memory_bytes: usize) -> f64 {
+        let gib = 1usize << 30;
+        for t in &self.tiers {
+            if t.mem_gb * gib >= memory_bytes {
+                return t.dollars_per_hour;
+            }
+        }
+        let last = self.tiers.last().unwrap();
+        last.dollars_per_hour * (memory_bytes as f64 / (last.mem_gb * gib) as f64)
+    }
+
+    /// $/hour of a whole replica: the sum over its grid's device slots
+    /// (mixed-memory grids price per device).
+    pub fn replica_hourly(&self, sys: &SystemConfig) -> f64 {
+        (0..sys.topology.device_count())
+            .map(|d| self.gpu_hourly(sys.topology.slot(d).gpu.memory_bytes))
+            .sum()
+    }
+}
+
+/// A scored candidate grid shape.
+#[derive(Debug, Clone)]
+pub struct CandidateScore {
+    pub label: String,
+    pub sys: SystemConfig,
+    /// Simulated serving throughput on the probe workload (tokens/sec).
+    pub tokens_per_sec: f64,
+    /// Replica price ($/hour).
+    pub hourly: f64,
+    /// $/token = hourly / 3600 / tokens_per_sec (infinite when the grid
+    /// serves nothing).
+    pub cost_per_token: f64,
+}
+
+/// Scores candidate grids once at construction (via [`simulate`] on the
+/// probe workload), then answers "how many replicas of the cheapest
+/// grid for this offered load?" — deterministically, so the planning
+/// properties and goldens are stable.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    scores: Vec<CandidateScore>,
+    best: usize,
+    /// Headroom factor: plan for replicas running at this fraction of
+    /// their simulated throughput (default 0.7).
+    pub target_utilization: f64,
+}
+
+impl Autoscaler {
+    pub fn new(
+        model: &ModelConfig,
+        candidates: Vec<(String, SystemConfig)>,
+        prices: &PriceTable,
+        probe: Workload,
+    ) -> Self {
+        assert!(!candidates.is_empty(), "no candidate grids");
+        let scores: Vec<CandidateScore> = candidates
+            .into_iter()
+            .map(|(label, sys)| {
+                let r = simulate(model, &sys, System::HybridServe(PolicyConfig::full()), probe);
+                let hourly = prices.replica_hourly(&sys);
+                let cost_per_token = if r.throughput > 0.0 {
+                    hourly / 3600.0 / r.throughput
+                } else {
+                    f64::INFINITY
+                };
+                CandidateScore {
+                    label,
+                    sys,
+                    tokens_per_sec: r.throughput,
+                    hourly,
+                    cost_per_token,
+                }
+            })
+            .collect();
+        let best = scores
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.cost_per_token.total_cmp(&b.cost_per_token))
+            .map(|(i, _)| i)
+            .unwrap();
+        Self {
+            scores,
+            best,
+            target_utilization: 0.7,
+        }
+    }
+
+    /// Every candidate's score, in the order given.
+    pub fn scores(&self) -> &[CandidateScore] {
+        &self.scores
+    }
+
+    /// The $/token-cheapest candidate (first wins ties — `min_by` keeps
+    /// the earliest minimum, so candidate order is a deterministic
+    /// tie-break).
+    pub fn best(&self) -> &CandidateScore {
+        &self.scores[self.best]
+    }
+
+    /// Replicas of the best grid needed to carry `offered` tokens/sec at
+    /// the target utilization. Monotone non-decreasing in `offered` by
+    /// construction (a ceiling of a non-decreasing linear function), and
+    /// never below one replica.
+    pub fn replicas_for(&self, offered_tokens_per_sec: f64) -> usize {
+        let cap = self.best().tokens_per_sec * self.target_utilization;
+        if !(offered_tokens_per_sec > 0.0) || cap <= 0.0 {
+            return 1;
+        }
+        ((offered_tokens_per_sec / cap).ceil() as usize).max(1)
+    }
+
+    /// Replica counts along an offered-load curve (tokens/sec per
+    /// interval) — the autoscaler loop's plan against e.g. a diurnal
+    /// envelope.
+    pub fn plan(&self, load_curve: &[f64]) -> Vec<usize> {
+        load_curve.iter().map(|&l| self.replicas_for(l)).collect()
+    }
+
+    /// `n` clones of the best grid (what the fleet scales out with).
+    pub fn fleet_systems(&self, n: usize) -> Vec<SystemConfig> {
+        (0..n).map(|_| self.best().sys.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn price_table_tiers_and_extrapolation() {
+        let p = PriceTable::cloud_2025();
+        let gib = 1usize << 30;
+        assert_eq!(p.gpu_hourly(24 * gib), 0.44);
+        assert_eq!(p.gpu_hourly(16 * gib), 0.44, "rounds up to the 24 GB tier");
+        assert_eq!(p.gpu_hourly(48 * gib), 1.10);
+        assert_eq!(p.gpu_hourly(49 * gib), 2.49, "next tier up");
+        assert!((p.gpu_hourly(160 * gib) - 4.98).abs() < 1e-12, "linear beyond the table");
+        let sys = SystemConfig::paper_testbed();
+        assert_eq!(p.replica_hourly(&sys), 0.44);
+        let grid = SystemConfig::paper_testbed_grid(2, 2);
+        assert!((p.replica_hourly(&grid) - 4.0 * 0.44).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replicas_scale_with_offered_load() {
+        let m = crate::config::ModelConfig::opt_6_7b();
+        let probe = Workload {
+            batch: 8,
+            prompt: 64,
+            gen: 8,
+        };
+        let auto = Autoscaler::new(
+            &m,
+            vec![("4090".into(), SystemConfig::paper_testbed())],
+            &PriceTable::cloud_2025(),
+            probe,
+        );
+        assert!(auto.best().tokens_per_sec > 0.0);
+        assert!(auto.best().cost_per_token > 0.0);
+        assert_eq!(auto.replicas_for(0.0), 1);
+        let one = auto.replicas_for(auto.best().tokens_per_sec * 0.5);
+        let cap = auto.best().tokens_per_sec * auto.target_utilization;
+        assert_eq!(auto.replicas_for(cap * 3.5), 4);
+        assert!(one >= 1);
+        let plan = auto.plan(&[0.0, cap, cap * 2.0, cap * 2.0 + 1e-9]);
+        assert_eq!(plan[0], 1);
+        assert_eq!(plan[1], 1);
+        assert_eq!(plan[2], 2);
+        assert_eq!(plan[3], 3);
+        assert_eq!(auto.fleet_systems(3).len(), 3);
+    }
+}

@@ -1,0 +1,279 @@
+//! Fleet layer: replica routing, session affinity, and cost-aware
+//! autoscaling over the artifact-free analytic serving stack (the
+//! ROADMAP's "millions of users" direction).
+//!
+//! - [`Replica`] — one `Scheduler<AnalyticEngine>` with its own grid
+//!   (`Topology`/`MemoryPlan`), so fleets mix 24/48/80 GB devices
+//! - [`Router`] — pluggable placement ([`RoutePolicy`]): round-robin,
+//!   least-queue-depth, cache-affinity with a [`SessionTable`] tracking
+//!   which replica owns each conversation's KV/ACT residency; seeded
+//!   deterministic tie-breaking
+//! - [`Autoscaler`] — $/token scoring of candidate grids from a
+//!   [`PriceTable`], replica-count planning against a load curve
+//! - [`Fleet`] — drives the replicas through a
+//!   [`SessionRequest`](crate::workload::SessionRequest) trace and merges
+//!   per-replica reports into a [`FleetReport`] (pooled percentiles, not
+//!   averaged ones)
+//!
+//! Cache-affinity is where HybridServe's hybrid cache becomes a fleet
+//! concern: a returning turn re-prefills only its new tokens on the
+//! replica holding its history, and the full history anywhere else. The
+//! router models that as a prompt-prefix discount — the cached prefix is
+//! dropped from the submitted prompt, which is exactly the work the
+//! owning replica's cache saves.
+
+mod autoscaler;
+mod replica;
+mod router;
+
+pub use autoscaler::{Autoscaler, CandidateScore, GpuPrice, PriceTable};
+pub use replica::Replica;
+pub use router::{Route, RoutePolicy, Router, SessionEntry, SessionTable};
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, SystemConfig};
+use crate::engine::Request;
+use crate::metrics::FleetReport;
+use crate::sched::SchedConfig;
+use crate::workload::SessionRequest;
+
+/// A single-GPU grid derived from the paper testbed with `memory_bytes`
+/// of HBM on its one device. The override goes through
+/// `Topology::with_memory` on the topology ALONE — the reference
+/// GPU spec stays the 24 GB testbed card, so budgets derived from the
+/// reference (and the pysim mirror's `mem_overrides` semantics) are
+/// unchanged; only the device's own `MemoryPlan` residency grows.
+pub fn single_gpu_config(memory_bytes: usize) -> SystemConfig {
+    let mut sys = SystemConfig::paper_testbed();
+    sys.topology = sys.topology.clone().with_memory(0, 0, memory_bytes);
+    sys
+}
+
+/// A replica set behind one router.
+pub struct Fleet {
+    replicas: Vec<Replica>,
+    router: Router,
+    slo: crate::metrics::SloSpec,
+    cost_per_hour: f64,
+}
+
+impl Fleet {
+    /// Build one replica per grid in `systems` (heterogeneous fleets pass
+    /// different grids), all sharing the model, per-replica host pool and
+    /// scheduler config. Pricing comes per replica from `prices`.
+    pub fn new(
+        model: &ModelConfig,
+        systems: &[SystemConfig],
+        host_cache_bytes: usize,
+        cfg: SchedConfig,
+        policy: RoutePolicy,
+        seed: u64,
+        prices: &PriceTable,
+    ) -> Self {
+        assert!(!systems.is_empty(), "a fleet needs at least one replica");
+        let replicas: Vec<Replica> = systems
+            .iter()
+            .enumerate()
+            .map(|(id, sys)| {
+                let mut r = Replica::new(id, model, sys.clone(), host_cache_bytes, cfg);
+                r.hourly = prices.replica_hourly(sys);
+                r
+            })
+            .collect();
+        let cost_per_hour = replicas.iter().map(|r| r.hourly).sum();
+        Self {
+            replicas,
+            router: Router::new(policy, seed),
+            slo: cfg.slo,
+            cost_per_hour,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn cost_per_hour(&self) -> f64 {
+        self.cost_per_hour
+    }
+
+    /// Route one arrival: pump every replica up to the arrival instant
+    /// (so loads and clocks are current), ask the router for a placement,
+    /// strip the cached prefix on a session hit, submit, and record the
+    /// new residency.
+    pub fn dispatch(&mut self, sr: &SessionRequest) -> Result<Route> {
+        for r in &mut self.replicas {
+            r.pump(sr.arrival)?;
+        }
+        let loads: Vec<usize> = self.replicas.iter().map(|r| r.load()).collect();
+        let route = self.router.route(sr.session, sr.history_len, &loads);
+        debug_assert!(sr.history_len < sr.req.prompt.len(), "a turn adds new tokens");
+        let prompt = sr.req.prompt[route.cached_prefix..].to_vec();
+        let req = Request::new(sr.req.id, prompt, sr.req.max_new);
+        self.replicas[route.replica].submit(req, sr.arrival)?;
+        // After serving, the replica holds this turn's full context plus
+        // its reply — the prefix the session's NEXT turn can reuse.
+        self.router
+            .record(sr.session, route.replica, sr.req.prompt.len() + sr.req.max_new);
+        Ok(route)
+    }
+
+    /// Serve a whole session trace (must be arrival-sorted, as
+    /// [`crate::workload::WorkloadGen::session_trace`] produces) and
+    /// report fleet-level metrics with pooled percentiles.
+    pub fn serve(&mut self, trace: &[SessionRequest]) -> Result<FleetReport> {
+        for w in trace.windows(2) {
+            debug_assert!(w[0].arrival <= w[1].arrival, "trace must be arrival-sorted");
+        }
+        for sr in trace {
+            self.dispatch(sr)?;
+        }
+        for r in &mut self.replicas {
+            r.drain()?;
+        }
+        Ok(self.report())
+    }
+
+    /// Fleet report over everything served so far.
+    pub fn report(&self) -> FleetReport {
+        let per_replica = self.replicas.iter().map(|r| r.report()).collect();
+        FleetReport::new(
+            per_replica,
+            &self.slo,
+            self.cost_per_hour,
+            self.router.session_hits(),
+            self.router.session_misses(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SloSpec;
+    use crate::workload::{SessionMix, WorkloadGen};
+
+    fn model() -> ModelConfig {
+        ModelConfig::opt_6_7b()
+    }
+
+    fn cfg() -> SchedConfig {
+        SchedConfig {
+            max_running: 32,
+            preemption: true,
+            slo: SloSpec::default(),
+        }
+    }
+
+    fn small_trace(seed: u64) -> Vec<crate::workload::SessionRequest> {
+        WorkloadGen::new(seed, 2048).session_trace(&SessionMix {
+            sessions: 6,
+            session_rate: 0.5,
+            turns: (2, 4),
+            first_prompt: (16, 48),
+            turn_tokens: (8, 24),
+            gen: 8,
+            think_secs: 4.0,
+        })
+    }
+
+    fn host_pool() -> usize {
+        // Ample pool: admission never pressures, so tests exercise
+        // routing rather than preemption.
+        let m = model();
+        let sizes = crate::cache::BlockSizes::new(&m, 16);
+        4096 * sizes.kv_bytes
+    }
+
+    #[test]
+    fn heterogeneous_fleet_serves_a_session_trace() {
+        let m = model();
+        let systems = vec![
+            single_gpu_config(24 << 30),
+            single_gpu_config(48 << 30),
+            single_gpu_config(80 << 30),
+        ];
+        let mut fleet = Fleet::new(
+            &m,
+            &systems,
+            host_pool(),
+            cfg(),
+            RoutePolicy::CacheAffinity,
+            7,
+            &PriceTable::cloud_2025(),
+        );
+        assert!((fleet.cost_per_hour() - (0.44 + 1.10 + 2.49)).abs() < 1e-12);
+        let trace = small_trace(11);
+        let submitted = trace.len();
+        let fr = fleet.serve(&trace).unwrap();
+        assert_eq!(fr.replicas, 3);
+        assert_eq!(fr.fleet.submitted, submitted);
+        assert_eq!(fr.fleet.completed, submitted);
+        assert!(fr.fleet.goodput > 0.0);
+        assert!(fr.cost_per_token > 0.0);
+        // every returning turn went home: all hits, no misses
+        assert!(fr.session_hits > 0);
+        assert_eq!(fr.session_misses, 0, "affinity never misses");
+    }
+
+    #[test]
+    fn affinity_prefill_discount_shrinks_the_submitted_prompt() {
+        let m = model();
+        let systems = vec![single_gpu_config(24 << 30); 2];
+        let mut fleet = Fleet::new(
+            &m,
+            &systems,
+            host_pool(),
+            cfg(),
+            RoutePolicy::CacheAffinity,
+            0,
+            &PriceTable::cloud_2025(),
+        );
+        let trace = small_trace(3);
+        // returning turns: cached prefix equals the full history
+        for sr in &trace {
+            let route = fleet.dispatch(sr).unwrap();
+            assert_eq!(route.cached_prefix, sr.history_len);
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_sessions_and_misses() {
+        let m = model();
+        let systems = vec![single_gpu_config(24 << 30); 3];
+        let mut fleet = Fleet::new(
+            &m,
+            &systems,
+            host_pool(),
+            cfg(),
+            RoutePolicy::RoundRobin,
+            0,
+            &PriceTable::cloud_2025(),
+        );
+        let trace = small_trace(11);
+        let fr = fleet.serve(&trace).unwrap();
+        // a 3-replica cycle keeps hitting sessions off their owner
+        assert!(
+            fr.session_misses > 0,
+            "round-robin on 3 replicas must re-prefill some turns"
+        );
+        // per-replica submitted counts within 1 of each other
+        let counts: Vec<usize> = fr.per_replica.iter().map(|r| r.submitted).collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1, "round-robin imbalance {counts:?}");
+    }
+}

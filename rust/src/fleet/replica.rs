@@ -1,0 +1,105 @@
+//! One serving replica: a [`Scheduler`] over the artifact-free
+//! [`AnalyticEngine`], carrying its own grid ([`SystemConfig`] /
+//! `Topology` / `MemoryPlan`) so a fleet can mix 24/48/80 GB devices.
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, SystemConfig};
+use crate::engine::Request;
+use crate::metrics::SloReport;
+use crate::sched::{AnalyticEngine, SchedConfig, Scheduler};
+
+/// A single replica of the serving stack. Driving it with
+/// [`Replica::pump`] between arrivals reproduces the standalone
+/// scheduler's tick sequence exactly (admission only ever considers
+/// requests that have arrived, and `submit` never touches the engine),
+/// which is what keeps a one-replica fleet bit-for-bit equal to
+/// `Scheduler::run_trace`.
+pub struct Replica {
+    pub id: usize,
+    /// $/hour price of this replica's grid (set by the fleet from its
+    /// price table; 0 until priced).
+    pub hourly: f64,
+    sys: SystemConfig,
+    sched: Scheduler<AnalyticEngine>,
+}
+
+impl Replica {
+    pub fn new(
+        id: usize,
+        model: &ModelConfig,
+        sys: SystemConfig,
+        host_cache_bytes: usize,
+        cfg: SchedConfig,
+    ) -> Self {
+        let eng = AnalyticEngine::new(model, &sys, host_cache_bytes);
+        Self {
+            id,
+            hourly: 0.0,
+            sys,
+            sched: Scheduler::new(eng, cfg),
+        }
+    }
+
+    pub fn system(&self) -> &SystemConfig {
+        &self.sys
+    }
+
+    /// In-flight census: everything submitted and not yet completed
+    /// (queued + running + preempted) — the load signal the router sees.
+    pub fn load(&self) -> usize {
+        self.sched.queue_depth() + self.sched.running_count() + self.sched.preempted_count()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.sched.now()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    pub fn submit(&mut self, req: Request, arrival: f64) -> Result<()> {
+        self.sched.submit(req, arrival)
+    }
+
+    /// Tick until the replica's clock reaches `t` or it runs dry —
+    /// called before routing an arrival at `t`, so loads and clocks
+    /// reflect everything that happened first. Returns completions
+    /// collected along the way.
+    pub fn pump(&mut self, t: f64) -> Result<usize> {
+        let mut done = 0usize;
+        let mut stalled = 0usize;
+        while !self.sched.is_idle() && self.sched.now() < t {
+            let before = self.sched.now();
+            let n = self.sched.tick()?.len();
+            done += n;
+            if n == 0 && self.sched.now() <= before {
+                stalled += 1;
+                anyhow::ensure!(
+                    stalled < 3,
+                    "replica {} stalled pumping to t={t} at now={}",
+                    self.id,
+                    self.sched.now()
+                );
+            } else {
+                stalled = 0;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Run everything submitted to completion.
+    pub fn drain(&mut self) -> Result<usize> {
+        Ok(self.sched.run_to_completion()?.len())
+    }
+
+    pub fn report(&self) -> SloReport {
+        self.sched.report()
+    }
+
+    /// The underlying scheduler (equivalence tests and introspection).
+    pub fn scheduler(&self) -> &Scheduler<AnalyticEngine> {
+        &self.sched
+    }
+}

@@ -1,0 +1,281 @@
+//! Request routing across replicas: pluggable policies plus the session
+//! table that makes HybridServe placement sticky — a returning
+//! conversation is cheap only on the replica already holding its KV/ACT
+//! blocks, so the router is where the hybrid cache's locality becomes a
+//! fleet-level concern.
+
+use std::collections::HashMap;
+
+use crate::util::Rng;
+
+/// Routing policy of a [`Router`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas in id order.
+    RoundRobin,
+    /// Send to the replica with the fewest in-flight requests (queued +
+    /// running + preempted), seeded-random among ties.
+    LeastQueueDepth,
+    /// Send a returning session to the replica holding its blocks;
+    /// fresh sessions fall back to least-queue-depth placement.
+    CacheAffinity,
+}
+
+impl RoutePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastQueueDepth => "least-queue",
+            RoutePolicy::CacheAffinity => "cache-affinity",
+        }
+    }
+}
+
+/// Which replica owns a session's cache residency, and how many tokens
+/// of context (prompt history + generated replies) it holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionEntry {
+    pub replica: usize,
+    pub cached_tokens: usize,
+}
+
+/// Session → owning-replica map. One conversation has exactly one owner:
+/// routing a turn elsewhere moves ownership (the old residency is dead
+/// weight that ages out; the model here keeps only the latest placement,
+/// which is what the affinity policy needs).
+#[derive(Debug, Clone, Default)]
+pub struct SessionTable {
+    map: HashMap<u64, SessionEntry>,
+}
+
+impl SessionTable {
+    pub fn owner(&self, session: u64) -> Option<SessionEntry> {
+        self.map.get(&session).copied()
+    }
+
+    /// Record that `session`'s context now lives on `replica`.
+    pub fn record(&mut self, session: u64, replica: usize, cached_tokens: usize) {
+        self.map.insert(
+            session,
+            SessionEntry {
+                replica,
+                cached_tokens,
+            },
+        );
+    }
+
+    /// Drop every session owned by `replica` (scale-down: its cache is
+    /// gone, so returning turns must re-prefill elsewhere).
+    pub fn evict_replica(&mut self, replica: usize) {
+        self.map.retain(|_, e| e.replica != replica);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// A routing decision: where the request goes and how many prompt tokens
+/// the chosen replica already holds (0 on a miss — the replica then
+/// re-prefills the full history).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    pub replica: usize,
+    pub cached_prefix: usize,
+}
+
+/// Replica chooser. Deterministic for a given seed: ties in the
+/// least-loaded scan draw from the router's own xoshiro stream (one
+/// `range` draw per tie, none otherwise), so goldens stay stable.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    rng: Rng,
+    rr_next: usize,
+    sessions: SessionTable,
+    hits: usize,
+    misses: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, seed: u64) -> Self {
+        Self {
+            policy,
+            rng: Rng::new(seed),
+            rr_next: 0,
+            sessions: SessionTable::default(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn sessions(&self) -> &SessionTable {
+        &self.sessions
+    }
+
+    pub fn sessions_mut(&mut self) -> &mut SessionTable {
+        &mut self.sessions
+    }
+
+    /// Returning-turn routing outcomes so far (turns with history that
+    /// landed on / off their session's owner).
+    pub fn session_hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn session_misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Least-in-flight replica; ties broken by one seeded draw over the
+    /// tied ids (in id order), so the choice is stable per seed.
+    fn least_loaded(&mut self, loads: &[usize]) -> usize {
+        let min = *loads.iter().min().expect("empty fleet");
+        let ties: Vec<usize> = (0..loads.len()).filter(|&i| loads[i] == min).collect();
+        if ties.len() == 1 {
+            ties[0]
+        } else {
+            ties[self.rng.range(0, ties.len())]
+        }
+    }
+
+    /// Choose a replica for one turn of `session` whose prompt replays
+    /// `history_len` tokens of context. `loads` is the per-replica
+    /// in-flight census (its length is the current fleet size). The hit
+    /// prefix is opportunistic under EVERY policy — the cache is a
+    /// property of the replica, not of the policy — but only
+    /// [`RoutePolicy::CacheAffinity`] steers returning turns to the
+    /// owner, which is why it wins on session-heavy traces.
+    pub fn route(&mut self, session: u64, history_len: usize, loads: &[usize]) -> Route {
+        let n = loads.len();
+        assert!(n > 0, "routing into an empty fleet");
+        let owner = self.sessions.owner(session).filter(|e| e.replica < n);
+        let replica = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let c = self.rr_next % n;
+                self.rr_next = (self.rr_next + 1) % n;
+                c
+            }
+            RoutePolicy::LeastQueueDepth => self.least_loaded(loads),
+            RoutePolicy::CacheAffinity => match owner {
+                Some(e) => e.replica,
+                None => self.least_loaded(loads),
+            },
+        };
+        let cached_prefix = match owner {
+            Some(e) if e.replica == replica => e.cached_tokens.min(history_len),
+            _ => 0,
+        };
+        if history_len > 0 {
+            if cached_prefix > 0 {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+            }
+        }
+        Route {
+            replica,
+            cached_prefix,
+        }
+    }
+
+    /// Record the routed turn's new residency: after serving, `replica`
+    /// holds the turn's full context plus its reply.
+    pub fn record(&mut self, session: u64, replica: usize, cached_tokens: usize) {
+        self.sessions.record(session, replica, cached_tokens);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 0);
+        let loads = [0usize; 3];
+        let picks: Vec<usize> = (0..7).map(|s| r.route(s, 0, &loads).replica).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_queue_prefers_the_idle_replica() {
+        let mut r = Router::new(RoutePolicy::LeastQueueDepth, 1);
+        assert_eq!(r.route(0, 0, &[3, 0, 2]).replica, 1);
+        assert_eq!(r.route(1, 0, &[5, 4, 1]).replica, 2);
+    }
+
+    #[test]
+    fn least_queue_ties_are_seed_deterministic() {
+        let picks = |seed: u64| -> Vec<usize> {
+            let mut r = Router::new(RoutePolicy::LeastQueueDepth, seed);
+            (0..16).map(|s| r.route(s, 0, &[1, 1, 1, 1]).replica).collect()
+        };
+        assert_eq!(picks(7), picks(7), "same seed, same tie-breaks");
+        assert_ne!(picks(7), picks(8), "different seed reshuffles ties");
+        // no draw is burnt when there is no tie: the stream stays aligned
+        let mut a = Router::new(RoutePolicy::LeastQueueDepth, 3);
+        let mut b = Router::new(RoutePolicy::LeastQueueDepth, 3);
+        assert_eq!(a.route(0, 0, &[2, 0, 1]).replica, 1);
+        assert_eq!(a.route(1, 0, &[1, 1, 3]).replica, b.route(1, 0, &[1, 1, 3]).replica);
+    }
+
+    #[test]
+    fn affinity_homes_returning_sessions_and_counts_hits() {
+        let mut r = Router::new(RoutePolicy::CacheAffinity, 0);
+        let first = r.route(42, 0, &[0, 0, 0]);
+        assert_eq!(first.cached_prefix, 0);
+        r.record(42, first.replica, 100);
+        // second turn: 80 tokens of history, all cached on the owner
+        let second = r.route(42, 80, &[9, 9, 9]);
+        assert_eq!(second.replica, first.replica, "affinity must go home");
+        assert_eq!(second.cached_prefix, 80);
+        assert_eq!(r.session_hits(), 1);
+        assert_eq!(r.session_misses(), 0);
+        // cached prefix never exceeds what the owner holds
+        r.record(42, first.replica, 50);
+        assert_eq!(r.route(42, 80, &[0, 0, 0]).cached_prefix, 50);
+    }
+
+    #[test]
+    fn round_robin_misses_returning_sessions_off_owner() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 0);
+        let first = r.route(7, 0, &[0, 0]);
+        assert_eq!(first.replica, 0);
+        r.record(7, 0, 64);
+        // next turn round-robins to replica 1: full re-prefill, a miss
+        let second = r.route(7, 32, &[0, 0]);
+        assert_eq!(second.replica, 1);
+        assert_eq!(second.cached_prefix, 0);
+        assert_eq!(r.session_misses(), 1);
+        // ...but when the cycle happens to land on the owner, the cached
+        // prefix is used opportunistically
+        r.record(7, 1, 96);
+        let third = r.route(7, 64, &[0, 0]);
+        assert_eq!(third.replica, 0);
+        assert_eq!(third.cached_prefix, 0, "owner is 1, pick was 0");
+    }
+
+    #[test]
+    fn scale_down_eviction_forgets_owned_sessions() {
+        let mut r = Router::new(RoutePolicy::CacheAffinity, 0);
+        r.record(1, 0, 10);
+        r.record(2, 1, 10);
+        r.sessions_mut().evict_replica(1);
+        assert_eq!(r.sessions().len(), 1);
+        assert!(r.sessions().owner(2).is_none());
+        // a shrunk fleet invalidates out-of-range owners at route time
+        r.record(3, 5, 10);
+        let route = r.route(3, 8, &[0, 0]);
+        assert!(route.replica < 2);
+        assert_eq!(route.cached_prefix, 0);
+    }
+}

@@ -44,10 +44,17 @@
 //!   (`StagePressure`) victim scoring; plus the artifact-free analytic
 //!   step engine for sharded serving experiments
 //! - [`workload`] — synthetic batches + timed arrival traces (Poisson,
-//!   bursty on/off, deterministic replay)
-//! - [`metrics`] — offline serve reports and the online `SloReport`
+//!   bursty on/off, deterministic replay, multi-tenant diurnal mixtures
+//!   on independent per-tenant streams, multi-turn session traces)
+//! - [`metrics`] — offline serve reports, the online `SloReport`
 //!   (TTFT/TPOT percentiles, queue time, goodput under SLO, per-device
-//!   utilization, straggler gap, per-stage pipeline bubbles)
+//!   utilization, straggler gap, per-stage pipeline bubbles; pooled-
+//!   sample `merge`) and the fleet-level `FleetReport` ($/token,
+//!   load imbalance, session hit rate)
+//! - [`fleet`] — replica fleet over the analytic engine: pluggable
+//!   routing (round-robin / least-queue / cache-affinity with a session
+//!   table), per-GPU-hour $/token autoscaling, heterogeneous
+//!   mixed-memory replica grids
 //! - [`server`] — TCP front-end driving the scheduler loop
 //! - [`sim`] — full-scale analytic simulator (paper-figure workloads,
 //!   TP×PP grids, heterogeneous straggler AND mixed-memory rigs,
@@ -64,6 +71,7 @@ pub mod cache;
 pub mod config;
 pub mod engine;
 pub mod figures;
+pub mod fleet;
 pub mod harness;
 pub mod memsim;
 pub mod metrics;

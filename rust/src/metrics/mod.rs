@@ -303,6 +303,13 @@ pub struct SloReport {
     /// ([`crate::plan::PipelineSchedule::name`]; empty when the engine
     /// exposes no execution plan — e.g. scheduler tests on a mock).
     pub pipeline_schedule: &'static str,
+    /// The per-request samples this report was derived from — retained so
+    /// fleet-level merging ([`SloReport::merge`]) re-derives percentiles
+    /// over the POOLED samples instead of averaging per-replica
+    /// percentiles (which is not a percentile of anything).
+    pub samples: Vec<RequestTiming>,
+    /// Queue-depth samples, retained for the same reason.
+    pub depth_samples: Vec<usize>,
 }
 
 impl SloReport {
@@ -374,7 +381,33 @@ impl SloReport {
             straggler_gap: 0.0,
             stage_bubble: Vec::new(),
             pipeline_schedule: "",
+            samples: timings.to_vec(),
+            depth_samples: queue_depth_samples.to_vec(),
         }
+    }
+
+    /// Merge per-replica reports into one fleet-level report by POOLING
+    /// the per-request samples and re-deriving every percentile over the
+    /// union — the satellite fix: averaging per-replica p99s
+    /// under-reports the tail whenever replicas are imbalanced.
+    /// `submitted`/`preemptions`/depth samples add; makespan is the max
+    /// (replicas run concurrently). Timeline-derived fields
+    /// (`shard_util`, `stage_bubble`, `pipeline_schedule`) stay at their
+    /// defaults — there is no single timeline behind a merged report.
+    pub fn merge(reports: &[SloReport], slo: &SloSpec) -> SloReport {
+        let mut samples: Vec<RequestTiming> = Vec::new();
+        let mut depths: Vec<usize> = Vec::new();
+        let mut submitted = 0usize;
+        let mut preemptions = 0usize;
+        let mut makespan = 0.0f64;
+        for r in reports {
+            samples.extend_from_slice(&r.samples);
+            depths.extend_from_slice(&r.depth_samples);
+            submitted += r.submitted;
+            preemptions += r.preemptions;
+            makespan = makespan.max(r.makespan_secs);
+        }
+        SloReport::from_timings(submitted, &samples, slo, makespan, preemptions, &depths)
     }
 
     /// Attach per-device utilization read off the serving timeline
@@ -411,6 +444,99 @@ impl SloReport {
             self.queue_p99,
             self.max_queue_depth,
             self.preemptions,
+        )
+    }
+}
+
+// ----------------------------------------------------------------------
+// Fleet-level aggregation
+// ----------------------------------------------------------------------
+
+/// Fleet-level serving report: the pooled [`SloReport`] over every
+/// replica plus the cost and balance quantities the autoscaler trades
+/// off — $/hour of the fleet, $/generated-token over the run, and the
+/// per-replica load imbalance.
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    /// Pooled-sample report over the whole fleet ([`SloReport::merge`]).
+    pub fleet: SloReport,
+    /// The per-replica reports the pool was merged from.
+    pub per_replica: Vec<SloReport>,
+    pub replicas: usize,
+    /// Sum of per-replica $/hour prices.
+    pub cost_per_hour: f64,
+    /// Dollars per generated token over this run:
+    /// `cost_per_hour · makespan/3600 / generated_tokens` (0 when nothing
+    /// was generated).
+    pub cost_per_token: f64,
+    /// Per-replica completed-request imbalance: `(max − min) / mean`
+    /// completions per replica (0 for a balanced or empty fleet).
+    pub load_imbalance: f64,
+    /// Session-affinity routing outcomes (returning turns that landed on
+    /// the replica holding their history vs ones that re-prefilled).
+    pub session_hits: usize,
+    pub session_misses: usize,
+}
+
+impl FleetReport {
+    pub fn new(
+        per_replica: Vec<SloReport>,
+        slo: &SloSpec,
+        cost_per_hour: f64,
+        session_hits: usize,
+        session_misses: usize,
+    ) -> Self {
+        let fleet = SloReport::merge(&per_replica, slo);
+        let cost_per_token = if fleet.generated_tokens > 0 {
+            cost_per_hour * (fleet.makespan_secs / 3600.0) / fleet.generated_tokens as f64
+        } else {
+            0.0
+        };
+        let completed: Vec<f64> = per_replica.iter().map(|r| r.completed as f64).collect();
+        let mean = crate::util::stats::mean(&completed);
+        let load_imbalance = if mean > 0.0 {
+            crate::util::stats::spread(&completed) / mean
+        } else {
+            0.0
+        };
+        Self {
+            replicas: per_replica.len(),
+            fleet,
+            per_replica,
+            cost_per_hour,
+            cost_per_token,
+            load_imbalance,
+            session_hits,
+            session_misses,
+        }
+    }
+
+    /// Fraction of returning session turns that hit their cached history
+    /// (0 when no turn ever returned).
+    pub fn session_hit_rate(&self) -> f64 {
+        let total = self.session_hits + self.session_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.session_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line summary for logs/examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} replicas | {}/{} reqs | goodput {:.1} tok/s | TTFT p99 {:.3}s | \
+             ${:.2}/h, ${:.3}/Mtok | imbalance {:.2} | session hits {}/{}",
+            self.replicas,
+            self.fleet.completed,
+            self.fleet.submitted,
+            self.fleet.goodput,
+            self.fleet.ttft_p99,
+            self.cost_per_hour,
+            self.cost_per_token * 1e6,
+            self.load_imbalance,
+            self.session_hits,
+            self.session_hits + self.session_misses,
         )
     }
 }
@@ -666,5 +792,115 @@ mod tests {
         assert!(ShardUtilization::default().stage_bubbles(2).is_empty());
         // tp=0 clamps to 1 (one device per group) instead of panicking
         assert_eq!(u.stage_bubbles(0).len(), 4);
+    }
+
+    // ---- SloReport::merge (fleet satellite fix) -----------------------
+
+    #[test]
+    fn merge_pools_samples_instead_of_averaging_percentiles() {
+        let slo = SloSpec::default();
+        // Replica A: 9 fast requests; replica B: 1 slow one. Averaging
+        // the two p99s says (1 + 10)/2 = 5.5s; the pooled p99 must sit
+        // near the slow tail instead.
+        let fast: Vec<RequestTiming> = (0..9).map(|_| timing(0.0, 1.0, 2.0, 2)).collect();
+        let slow = vec![timing(0.0, 10.0, 11.0, 2)];
+        let a = SloReport::from_timings(9, &fast, &slo, 4.0, 0, &[1, 2]);
+        let b = SloReport::from_timings(1, &slow, &slo, 12.0, 1, &[3]);
+        let merged = SloReport::merge(&[a.clone(), b.clone()], &slo);
+        assert_eq!(merged.submitted, 10);
+        assert_eq!(merged.completed, 10);
+        assert_eq!(merged.preemptions, 1);
+        assert_eq!(merged.makespan_secs, 12.0, "makespan is the max, not the sum");
+        let averaged = (a.ttft_p99 + b.ttft_p99) / 2.0;
+        assert!((averaged - 5.5).abs() < 1e-9);
+        assert!(
+            merged.ttft_p99 > 9.0,
+            "pooled p99 {} must sit in the tail, not at the average {averaged}",
+            merged.ttft_p99
+        );
+        // pooled depth samples: mean over 3 samples, max 3
+        assert_eq!(merged.max_queue_depth, 3);
+        assert!((merged.mean_queue_depth - 2.0).abs() < 1e-12);
+        // tokens/goodput re-derived over the pool and the max makespan
+        assert_eq!(merged.generated_tokens, 20);
+        assert!((merged.throughput - 20.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_with_an_empty_replica_is_harmless() {
+        let slo = SloSpec::default();
+        let ts = vec![timing(0.0, 1.0, 3.0, 3)];
+        let busy = SloReport::from_timings(1, &ts, &slo, 5.0, 0, &[1]);
+        let idle = SloReport::from_timings(0, &[], &slo, 0.0, 0, &[]);
+        let merged = SloReport::merge(&[busy.clone(), idle], &slo);
+        assert_eq!(merged.completed, 1);
+        assert_eq!(merged.ttft_p99, busy.ttft_p99);
+        assert_eq!(merged.latency_p50, busy.latency_p50);
+        assert_eq!(merged.makespan_secs, 5.0);
+        // merging nothing at all stays all-zero
+        let empty = SloReport::merge(&[], &slo);
+        assert_eq!(empty.completed, 0);
+        assert_eq!(empty.ttft_p99, 0.0);
+        assert_eq!(empty.goodput, 0.0);
+    }
+
+    #[test]
+    fn merge_of_one_replica_is_identity_on_the_slo_fields() {
+        let slo = SloSpec::default();
+        let ts: Vec<RequestTiming> = (0..5)
+            .map(|i| timing(i as f64, i as f64 + 1.0, i as f64 + 3.0, 4))
+            .collect();
+        let solo = SloReport::from_timings(6, &ts, &slo, 9.0, 2, &[0, 1, 2]);
+        let merged = SloReport::merge(std::slice::from_ref(&solo), &slo);
+        assert_eq!(merged.submitted, solo.submitted);
+        assert_eq!(merged.completed, solo.completed);
+        assert_eq!(merged.ttft_p50, solo.ttft_p50);
+        assert_eq!(merged.ttft_p99, solo.ttft_p99);
+        assert_eq!(merged.tpot_p95, solo.tpot_p95);
+        assert_eq!(merged.latency_p99, solo.latency_p99);
+        assert_eq!(merged.queue_p99, solo.queue_p99);
+        assert_eq!(merged.goodput, solo.goodput);
+        assert_eq!(merged.mean_queue_depth, solo.mean_queue_depth);
+        assert_eq!(merged.preemptions, solo.preemptions);
+    }
+
+    #[test]
+    fn merge_when_every_request_misses_the_slo() {
+        let slo = SloSpec {
+            ttft_secs: 0.1,
+            tpot_secs: 0.01,
+        };
+        let a = SloReport::from_timings(1, &[timing(0.0, 5.0, 9.0, 4)], &slo, 10.0, 0, &[]);
+        let b = SloReport::from_timings(1, &[timing(0.0, 6.0, 9.5, 4)], &slo, 11.0, 0, &[]);
+        let merged = SloReport::merge(&[a, b], &slo);
+        assert!(merged.throughput > 0.0);
+        assert_eq!(merged.goodput, 0.0, "no pooled request meets the SLO");
+        assert_eq!(merged.slo_attainment, 0.0);
+    }
+
+    // ---- FleetReport --------------------------------------------------
+
+    #[test]
+    fn fleet_report_costs_and_imbalance() {
+        let slo = SloSpec::default();
+        // 3 + 1 completions, 4 tokens each, makespans 8s and 36s.
+        let a_ts: Vec<RequestTiming> = (0..3).map(|_| timing(0.0, 1.0, 2.0, 4)).collect();
+        let a = SloReport::from_timings(3, &a_ts, &slo, 8.0, 0, &[]);
+        let b = SloReport::from_timings(1, &[timing(0.0, 1.0, 2.0, 4)], &slo, 36.0, 0, &[]);
+        let fr = FleetReport::new(vec![a, b], &slo, 2.0, 5, 3);
+        assert_eq!(fr.replicas, 2);
+        assert_eq!(fr.fleet.generated_tokens, 16);
+        // $2/h for 36s over 16 tokens
+        let expect = 2.0 * (36.0 / 3600.0) / 16.0;
+        assert!((fr.cost_per_token - expect).abs() < 1e-15);
+        // completions 3 vs 1: spread 2, mean 2 -> imbalance 1
+        assert!((fr.load_imbalance - 1.0).abs() < 1e-12);
+        assert!((fr.session_hit_rate() - 0.625).abs() < 1e-12);
+        assert!(fr.summary().contains("2 replicas"));
+        // degenerate: no tokens, no completions
+        let empty = FleetReport::new(vec![], &slo, 1.0, 0, 0);
+        assert_eq!(empty.cost_per_token, 0.0);
+        assert_eq!(empty.load_imbalance, 0.0);
+        assert_eq!(empty.session_hit_rate(), 0.0);
     }
 }

@@ -4,10 +4,14 @@
 //! The paper evaluates uniform batches (B identical-length prompts, fixed
 //! generation budget). Real traces are not public, so the generators here
 //! produce (a) the paper's uniform sweeps, (b) mixed-length batches with
-//! Zipf-distributed token ids for the packing/scheduling tests, and
+//! Zipf-distributed token ids for the packing/scheduling tests,
 //! (c) **timed traces** for the online scheduler: Poisson arrivals,
 //! bursty on/off arrivals, and deterministic replay of explicit
-//! per-request arrival timestamps.
+//! per-request arrival timestamps, and (d) **fleet traces**: multi-tenant
+//! Poisson mixtures under a time-varying rate envelope (each tenant on
+//! its own xoshiro stream, so tenant sets compose without perturbing each
+//! other) and multi-turn conversation traces ([`SessionRequest`]) whose
+//! growing prompt history is what makes cache-affinity routing matter.
 
 use crate::engine::Request;
 use crate::util::Rng;
@@ -20,10 +24,108 @@ pub struct TimedRequest {
     pub req: Request,
 }
 
+/// A timed request tagged with the conversation it belongs to — the unit
+/// of the fleet router's input traces. `history_len` counts the prompt
+/// prefix (previous turns' prompts + generated replies) that a replica
+/// already holding this session's KV/ACT blocks would NOT re-prefill.
+#[derive(Debug, Clone)]
+pub struct SessionRequest {
+    pub arrival: f64,
+    /// Conversation key (stable across the session's turns).
+    pub session: u64,
+    /// Tokens of `req.prompt` that are replayed history, not new input.
+    pub history_len: usize,
+    pub req: Request,
+}
+
+impl SessionRequest {
+    /// Lift a plain timed request into a single-turn session (its own
+    /// conversation, no history) — how session-less traces enter the
+    /// fleet path unchanged.
+    pub fn from_timed(tr: TimedRequest) -> Self {
+        Self {
+            arrival: tr.arrival,
+            session: tr.req.id,
+            history_len: 0,
+            req: tr.req,
+        }
+    }
+}
+
+/// One tenant of a multi-tenant arrival mix: a Poisson stream of
+/// `rate` requests/sec (at envelope peak) with uniform prompt lengths in
+/// `[prompt.0, prompt.1)` and a fixed generation budget.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub rate: f64,
+    pub prompt: (usize, usize),
+    pub gen: usize,
+}
+
+/// Time-varying arrival-rate envelope, as a multiplier in `(0, 1]` over a
+/// tenant's peak rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateEnvelope {
+    /// Constant peak rate.
+    Flat,
+    /// Diurnal cosine: trough at t = 0, peak at half `period_secs`
+    /// (multiplier `trough + (1-trough)·(1-cos(2πt/T))/2`).
+    Diurnal { period_secs: f64, trough: f64 },
+}
+
+impl RateEnvelope {
+    /// Rate multiplier at virtual time `t` (always in `(0, 1]` for
+    /// `trough` in `(0, 1]`).
+    pub fn multiplier(&self, t: f64) -> f64 {
+        match *self {
+            RateEnvelope::Flat => 1.0,
+            RateEnvelope::Diurnal {
+                period_secs,
+                trough,
+            } => trough + (1.0 - trough) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * t / period_secs).cos()),
+        }
+    }
+}
+
+/// Shape of a multi-turn conversation trace (see
+/// [`WorkloadGen::session_trace`]).
+#[derive(Debug, Clone)]
+pub struct SessionMix {
+    /// Conversations in the trace.
+    pub sessions: usize,
+    /// New conversations start as a Poisson process of this rate (1/sec).
+    pub session_rate: f64,
+    /// Turns per conversation, uniform in `[lo, hi)`.
+    pub turns: (usize, usize),
+    /// First-turn prompt length, uniform in `[lo, hi)`.
+    pub first_prompt: (usize, usize),
+    /// Later-turn NEW prompt tokens, uniform in `[lo, hi)`.
+    pub turn_tokens: (usize, usize),
+    /// Generation budget per turn.
+    pub gen: usize,
+    /// Mean think time between a reply and the user's next turn (sec).
+    pub think_secs: f64,
+}
+
+/// FNV-1a 64-bit over the tenant name: the per-tenant stream key is
+/// derived from the NAME, not the position, so inserting a tenant can
+/// never shift another tenant onto a different stream.
+fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Generator for batches of generation requests.
 #[derive(Debug, Clone)]
 pub struct WorkloadGen {
     rng: Rng,
+    /// Root seed, kept so per-tenant child streams derive from it.
+    seed: u64,
     vocab: usize,
     /// Zipf exponent for token ids (natural-language-ish skew).
     pub zipf_s: f64,
@@ -34,16 +136,19 @@ impl WorkloadGen {
     pub fn new(seed: u64, vocab: usize) -> Self {
         Self {
             rng: Rng::new(seed),
+            seed,
             vocab,
             zipf_s: 1.1,
             next_id: 0,
         }
     }
 
+    fn prompt_with(rng: &mut Rng, vocab: usize, zipf_s: f64, len: usize) -> Vec<i32> {
+        (0..len).map(|_| rng.zipf(vocab, zipf_s) as i32).collect()
+    }
+
     fn prompt(&mut self, len: usize) -> Vec<i32> {
-        (0..len)
-            .map(|_| self.rng.zipf(self.vocab, self.zipf_s) as i32)
-            .collect()
+        Self::prompt_with(&mut self.rng, self.vocab, self.zipf_s, len)
     }
 
     /// The paper's uniform batch: `batch` requests, all `prompt_len`
@@ -100,9 +205,13 @@ impl WorkloadGen {
     // ---- arrival processes (online serving traces) ---------------------
 
     /// Exponential inter-arrival draw for a process of `rate` events/sec.
-    fn exp_gap(&mut self, rate: f64) -> f64 {
+    fn exp_gap_with(rng: &mut Rng, rate: f64) -> f64 {
         debug_assert!(rate > 0.0);
-        -(1.0 - self.rng.f64()).ln() / rate
+        -(1.0 - rng.f64()).ln() / rate
+    }
+
+    fn exp_gap(&mut self, rate: f64) -> f64 {
+        Self::exp_gap_with(&mut self.rng, rate)
     }
 
     /// Poisson arrivals: `n` requests at `rate` requests/sec, prompt
@@ -185,6 +294,124 @@ impl WorkloadGen {
                 TimedRequest {
                     arrival,
                     req: Request::new(id, prompt, max_new),
+                }
+            })
+            .collect()
+    }
+
+    // ---- fleet traces (multi-tenant mixtures, sessions) ----------------
+
+    /// Multi-tenant Poisson mixture under a rate envelope, one trace per
+    /// tenant (same tenant order as `tenants`). Every tenant draws from
+    /// its OWN xoshiro stream, keyed `root_seed ^ fnv1a(name)`: adding,
+    /// removing or reordering tenants never perturbs another tenant's
+    /// arrivals or prompts. The envelope thins the peak-rate process
+    /// (accept an arrival at `t` with probability `multiplier(t)`), which
+    /// preserves per-tenant stream independence under any envelope.
+    /// Request ids are assigned tenant-by-tenant from the generator's
+    /// running counter.
+    pub fn multi_tenant_split(
+        &mut self,
+        tenants: &[TenantSpec],
+        horizon_secs: f64,
+        envelope: RateEnvelope,
+    ) -> Vec<Vec<TimedRequest>> {
+        assert!(horizon_secs > 0.0, "horizon must be positive");
+        tenants
+            .iter()
+            .map(|ten| {
+                assert!(ten.rate > 0.0, "tenant rate must be positive");
+                let mut rng = Rng::new(self.seed ^ fnv1a(&ten.name));
+                let mut out = Vec::new();
+                let mut t = 0.0;
+                loop {
+                    t += Self::exp_gap_with(&mut rng, ten.rate);
+                    if t >= horizon_secs {
+                        break;
+                    }
+                    // Thinning: one uniform draw per candidate arrival,
+                    // kept even under `Flat` (multiplier 1 accepts all)
+                    // so the stream position per arrival is
+                    // envelope-independent.
+                    if rng.f64() > envelope.multiplier(t) {
+                        continue;
+                    }
+                    let len = rng.range(ten.prompt.0, ten.prompt.1);
+                    let prompt = Self::prompt_with(&mut rng, self.vocab, self.zipf_s, len);
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    out.push(TimedRequest {
+                        arrival: t,
+                        req: Request::new(id, prompt, ten.gen),
+                    });
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// [`Self::multi_tenant_split`] merged into one arrival-sorted trace
+    /// (stable sort, so equal stamps keep tenant order).
+    pub fn multi_tenant(
+        &mut self,
+        tenants: &[TenantSpec],
+        horizon_secs: f64,
+        envelope: RateEnvelope,
+    ) -> Vec<TimedRequest> {
+        let mut merged: Vec<TimedRequest> = self
+            .multi_tenant_split(tenants, horizon_secs, envelope)
+            .into_iter()
+            .flatten()
+            .collect();
+        merged.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        merged
+    }
+
+    /// Multi-turn conversation trace: sessions open as a Poisson process;
+    /// each turn's prompt replays the full history (previous prompts plus
+    /// the replies generated for them, as placeholder token id 1 — the
+    /// analytic engines price lengths, not token values) followed by the
+    /// turn's new tokens. Turns within a session are separated by
+    /// exponential think time after `gen` tokens of reply. The trace is
+    /// sorted by arrival (stable) with ids assigned in arrival order —
+    /// the session-heavy workload where cache-affinity routing pays.
+    pub fn session_trace(&mut self, mix: &SessionMix) -> Vec<SessionRequest> {
+        assert!(mix.session_rate > 0.0 && mix.think_secs > 0.0 && mix.gen >= 1);
+        let mut turns: Vec<(f64, u64, usize, Vec<i32>, usize)> = Vec::new();
+        let mut start = 0.0;
+        for s in 0..mix.sessions {
+            start += self.exp_gap(mix.session_rate);
+            let nturns = self.rng.range(mix.turns.0, mix.turns.1);
+            let mut t = start;
+            let mut history: Vec<i32> = Vec::new();
+            for turn in 0..nturns {
+                let tlen = if turn == 0 {
+                    self.rng.range(mix.first_prompt.0, mix.first_prompt.1)
+                } else {
+                    t += self.exp_gap(1.0 / mix.think_secs);
+                    self.rng.range(mix.turn_tokens.0, mix.turn_tokens.1)
+                };
+                let new_tokens = self.prompt(tlen);
+                let history_len = history.len();
+                let mut full = history.clone();
+                full.extend_from_slice(&new_tokens);
+                turns.push((t, s as u64, history_len, full.clone(), mix.gen));
+                history = full;
+                let hist_with_reply = history.len() + mix.gen;
+                history.resize(hist_with_reply, 1);
+            }
+        }
+        turns.sort_by(|a, b| a.0.total_cmp(&b.0));
+        turns
+            .into_iter()
+            .map(|(arrival, session, history_len, prompt, gen)| {
+                let id = self.next_id;
+                self.next_id += 1;
+                SessionRequest {
+                    arrival,
+                    session,
+                    history_len,
+                    req: Request::new(id, prompt, gen),
                 }
             })
             .collect()
@@ -306,6 +533,154 @@ mod tests {
         assert_eq!(trace[2].req.prompt, vec![9, 9]);
         // ids follow arrival order
         assert_eq!(trace[0].req.id + 1, trace[1].req.id);
+    }
+
+    fn tenant(name: &str, rate: f64) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            rate,
+            prompt: (16, 64),
+            gen: 4,
+        }
+    }
+
+    #[test]
+    fn tenant_streams_survive_adding_a_tenant() {
+        // The satellite fix: adding tenant C must not perturb A's or B's
+        // arrivals/prompts (ids may shift — they come from the shared
+        // counter — but the per-tenant draws must be identical).
+        let ab = WorkloadGen::new(42, 2048).multi_tenant_split(
+            &[tenant("a", 3.0), tenant("b", 1.0)],
+            30.0,
+            RateEnvelope::Flat,
+        );
+        let abc = WorkloadGen::new(42, 2048).multi_tenant_split(
+            &[tenant("a", 3.0), tenant("c", 5.0), tenant("b", 1.0)],
+            30.0,
+            RateEnvelope::Flat,
+        );
+        for (i, j) in [(0usize, 0usize), (1, 2)] {
+            assert_eq!(ab[i].len(), abc[j].len(), "tenant length changed");
+            for (x, y) in ab[i].iter().zip(&abc[j]) {
+                assert_eq!(x.arrival, y.arrival);
+                assert_eq!(x.req.prompt, y.req.prompt);
+                assert_eq!(x.req.max_new, y.req.max_new);
+            }
+        }
+        assert!(!ab[0].is_empty() && !ab[1].is_empty());
+    }
+
+    #[test]
+    fn multi_tenant_merges_sorted_with_rates() {
+        let mut g = WorkloadGen::new(9, 2048);
+        let trace = g.multi_tenant(
+            &[tenant("heavy", 10.0), tenant("light", 1.0)],
+            60.0,
+            RateEnvelope::Flat,
+        );
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // heavy ~ 10x light (loose LLN bound) and everything in horizon
+        let n = trace.len() as f64;
+        assert!((400.0..=800.0).contains(&n), "total {n}");
+        assert!(trace.iter().all(|t| t.arrival < 60.0));
+        // ids unique
+        let ids: std::collections::HashSet<_> = trace.iter().map(|t| t.req.id).collect();
+        assert_eq!(ids.len(), trace.len());
+    }
+
+    #[test]
+    fn diurnal_envelope_thins_the_trough() {
+        let env = RateEnvelope::Diurnal {
+            period_secs: 100.0,
+            trough: 0.2,
+        };
+        assert!((env.multiplier(0.0) - 0.2).abs() < 1e-12);
+        assert!((env.multiplier(50.0) - 1.0).abs() < 1e-12);
+        let mut g = WorkloadGen::new(7, 2048);
+        let trace = g.multi_tenant(&[tenant("t", 20.0)], 100.0, env);
+        let trough: usize = trace
+            .iter()
+            .filter(|t| t.arrival < 25.0 || t.arrival >= 75.0)
+            .count();
+        let peak = trace.len() - trough;
+        assert!(
+            peak > 2 * trough,
+            "diurnal peak {peak} not dominating trough {trough}"
+        );
+        // flat trace at the same seed is a superset in count
+        let flat = WorkloadGen::new(7, 2048).multi_tenant(&[tenant("t", 20.0)], 100.0, RateEnvelope::Flat);
+        assert!(flat.len() > trace.len());
+    }
+
+    fn mix() -> SessionMix {
+        SessionMix {
+            sessions: 10,
+            session_rate: 0.5,
+            turns: (2, 5),
+            first_prompt: (16, 48),
+            turn_tokens: (8, 24),
+            gen: 8,
+            think_secs: 4.0,
+        }
+    }
+
+    #[test]
+    fn session_trace_grows_history_per_turn() {
+        let mut g = WorkloadGen::new(13, 2048);
+        let trace = g.session_trace(&mix());
+        assert!(trace.len() >= 20, "10 sessions x >=2 turns");
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "sorted by arrival");
+            assert_eq!(w[0].req.id + 1, w[1].req.id, "ids in arrival order");
+        }
+        use std::collections::HashMap;
+        let mut by_session: HashMap<u64, Vec<&SessionRequest>> = HashMap::new();
+        for sr in &trace {
+            by_session.entry(sr.session).or_default().push(sr);
+        }
+        assert_eq!(by_session.len(), 10);
+        for turns in by_session.values() {
+            assert!((2..5).contains(&turns.len()));
+            assert_eq!(turns[0].history_len, 0, "first turn has no history");
+            for w in turns.windows(2) {
+                // next turn's history = previous full prompt + its reply
+                assert_eq!(
+                    w[1].history_len,
+                    w[0].req.prompt.len() + w[0].req.max_new,
+                    "history must cover the previous turn's context"
+                );
+                assert!(w[1].req.prompt.len() > w[1].history_len, "new tokens appended");
+                assert!(w[1].arrival > w[0].arrival, "turns advance in time");
+                // the history prefix replays the previous prompt verbatim
+                assert_eq!(
+                    &w[1].req.prompt[..w[0].req.prompt.len()],
+                    &w[0].req.prompt[..],
+                );
+            }
+        }
+        // determinism
+        let again = WorkloadGen::new(13, 2048).session_trace(&mix());
+        assert_eq!(trace.len(), again.len());
+        for (a, b) in trace.iter().zip(&again) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.req.prompt, b.req.prompt);
+        }
+    }
+
+    #[test]
+    fn from_timed_lifts_to_single_turn_sessions() {
+        let mut g = WorkloadGen::new(3, 2048);
+        let trace = g.poisson(5, 2.0, 8, 16, 2);
+        for tr in trace {
+            let id = tr.req.id;
+            let arrival = tr.arrival;
+            let sr = SessionRequest::from_timed(tr);
+            assert_eq!(sr.session, id);
+            assert_eq!(sr.history_len, 0);
+            assert_eq!(sr.arrival, arrival);
+        }
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Fleet-layer test suite: seeded 100-case property suites over the
+//! router, autoscaler, report merge, and tenant streams, plus the two
+//! integration anchors — a single-replica fleet reproduces the direct
+//! scheduler bit-for-bit, and cache-affinity strictly beats round-robin
+//! goodput on a session-heavy trace.
+//!
+//! Every property draws through `util::prop::check`'s per-case xoshiro
+//! stream in a FIXED order so `tools/pysim/fleet.py` can dry-run the
+//! same seeds draw-for-draw without a cargo toolchain.
+
+use std::collections::HashMap;
+
+use hybridserve::cache::BlockSizes;
+use hybridserve::config::{ModelConfig, SystemConfig};
+use hybridserve::fleet::{
+    single_gpu_config, Autoscaler, Fleet, PriceTable, RoutePolicy, Router,
+};
+use hybridserve::metrics::{RequestTiming, SloReport, SloSpec};
+use hybridserve::sched::{AnalyticEngine, SchedConfig, Scheduler};
+use hybridserve::sim::Workload;
+use hybridserve::util::prop;
+use hybridserve::workload::{
+    RateEnvelope, SessionMix, SessionRequest, TenantSpec, WorkloadGen,
+};
+
+fn model() -> ModelConfig {
+    ModelConfig::opt_6_7b()
+}
+
+/// Ample host pool (4096 KV blocks): admission never pressures, so the
+/// tests exercise routing and merging rather than preemption — and the
+/// pysim mirror's trivial `reserved + need <= capacity` ledger holds.
+fn host_pool() -> usize {
+    let m = model();
+    4096 * BlockSizes::new(&m, 16).kv_bytes
+}
+
+fn cfg() -> SchedConfig {
+    SchedConfig {
+        max_running: 32,
+        preemption: true,
+        slo: SloSpec::default(),
+    }
+}
+
+// ---------------------------------------------------------------- router
+
+/// Affinity never sends a live session to a replica without its blocks
+/// while capacity allows (here: always — `loads` never hides a replica),
+/// and the cached prefix on the owner covers the full history.
+#[test]
+fn property_affinity_keeps_sessions_home() {
+    prop::check("fleet-affinity-home", 100, |rng| {
+        let nrep = rng.range(2, 9);
+        let mut router = Router::new(RoutePolicy::CacheAffinity, rng.next_u64());
+        let steps = rng.range(20, 61);
+        let mut owner: HashMap<u64, usize> = HashMap::new();
+        let mut ctx: HashMap<u64, usize> = HashMap::new();
+        for _ in 0..steps {
+            let session = rng.range(0, 10) as u64;
+            let loads: Vec<usize> = (0..nrep).map(|_| rng.range(0, 8)).collect();
+            let history = ctx.get(&session).copied().unwrap_or(0);
+            let route = router.route(session, history, &loads);
+            assert!(route.replica < nrep);
+            match owner.get(&session) {
+                Some(&o) => {
+                    assert_eq!(route.replica, o, "live session routed off its blocks");
+                    assert_eq!(route.cached_prefix, history, "owner holds the full history");
+                }
+                None => assert_eq!(route.cached_prefix, 0, "fresh session has no cache"),
+            }
+            let grown = history + rng.range(1, 33);
+            router.record(session, route.replica, grown);
+            owner.insert(session, route.replica);
+            ctx.insert(session, grown);
+        }
+        assert_eq!(router.session_misses(), 0, "affinity never misses");
+    });
+}
+
+/// Round-robin is balanced within ±1 request for any fleet size and
+/// request count, regardless of the (ignored) load census.
+#[test]
+fn property_round_robin_balanced_within_one() {
+    prop::check("fleet-rr-balance", 100, |rng| {
+        let nrep = rng.range(1, 9);
+        let mut router = Router::new(RoutePolicy::RoundRobin, rng.next_u64());
+        let k = rng.range(1, 200);
+        let mut counts = vec![0usize; nrep];
+        for s in 0..k {
+            let loads: Vec<usize> = (0..nrep).map(|_| rng.range(0, 100)).collect();
+            counts[router.route(s as u64, 0, &loads).replica] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1, "round-robin imbalance {counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), k);
+    });
+}
+
+// ------------------------------------------------------------ autoscaler
+
+/// Autoscaler output is monotone non-decreasing in offered load, never
+/// below one replica, and `plan` is pointwise `replicas_for`.
+#[test]
+fn property_autoscaler_monotone_in_offered_load() {
+    let m = model();
+    let auto = Autoscaler::new(
+        &m,
+        vec![
+            ("24g".into(), single_gpu_config(24 << 30)),
+            ("48g".into(), single_gpu_config(48 << 30)),
+            ("80g".into(), single_gpu_config(80 << 30)),
+        ],
+        &PriceTable::cloud_2025(),
+        Workload {
+            batch: 8,
+            prompt: 64,
+            gen: 8,
+        },
+    );
+    assert!(auto.best().tokens_per_sec > 0.0);
+    prop::check("fleet-autoscaler-monotone", 100, |rng| {
+        let a = rng.f64() * 5000.0;
+        let b = rng.f64() * 5000.0;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let n_lo = auto.replicas_for(lo);
+        let n_hi = auto.replicas_for(hi);
+        assert!(n_lo >= 1);
+        assert!(n_lo <= n_hi, "offered {lo} -> {n_lo} but {hi} -> {n_hi}");
+        assert_eq!(auto.plan(&[lo, hi]), vec![n_lo, n_hi]);
+        assert_eq!(auto.fleet_systems(n_hi).len(), n_hi);
+    });
+}
+
+// ----------------------------------------------------------- slo merge
+
+/// Merging per-replica reports is invariant to how completions were
+/// partitioned across replicas: percentiles re-derive from the pooled
+/// samples, so any split of one sample set merges back to the direct
+/// report (sorted-percentile fields bit-for-bit; summed means to 1e-9).
+#[test]
+fn property_merge_is_partition_invariant() {
+    prop::check("fleet-merge-partition", 100, |rng| {
+        let n = rng.range(1, 40);
+        let timings: Vec<RequestTiming> = (0..n)
+            .map(|_| {
+                let arrival = rng.f64() * 10.0;
+                let queue = rng.f64();
+                let ttft = rng.f64() * 2.0;
+                let generated = rng.range(1, 20);
+                let tpot = rng.f64() * 0.5;
+                let first_token = arrival + queue + ttft;
+                RequestTiming {
+                    arrival,
+                    admitted: arrival + queue,
+                    first_token,
+                    finished: first_token + tpot * generated as f64,
+                    generated,
+                }
+            })
+            .collect();
+        let k = rng.range(1, 6);
+        let mut parts: Vec<Vec<RequestTiming>> = vec![Vec::new(); k];
+        for t in &timings {
+            parts[rng.range(0, k)].push(*t);
+        }
+        let slo = SloSpec::default();
+        let makespan = 20.0;
+        let direct = SloReport::from_timings(n, &timings, &slo, makespan, 0, &[]);
+        let reports: Vec<SloReport> = parts
+            .iter()
+            .map(|p| SloReport::from_timings(p.len(), p, &slo, makespan, 0, &[]))
+            .collect();
+        let merged = SloReport::merge(&reports, &slo);
+        // integer-derived and sorted fields are exact
+        assert_eq!(merged.submitted, direct.submitted);
+        assert_eq!(merged.completed, direct.completed);
+        assert_eq!(merged.generated_tokens, direct.generated_tokens);
+        assert_eq!(merged.makespan_secs, direct.makespan_secs);
+        assert_eq!(merged.throughput, direct.throughput);
+        assert_eq!(merged.goodput, direct.goodput);
+        assert_eq!(merged.slo_attainment, direct.slo_attainment);
+        assert_eq!(merged.ttft_p50, direct.ttft_p50);
+        assert_eq!(merged.ttft_p99, direct.ttft_p99);
+        assert_eq!(merged.tpot_p95, direct.tpot_p95);
+        assert_eq!(merged.latency_p99, direct.latency_p99);
+        assert_eq!(merged.queue_p99, direct.queue_p99);
+        assert_eq!(merged.queue_max, direct.queue_max);
+        // the mean sums in pooled order: equal to ulp noise only
+        assert!((merged.queue_mean - direct.queue_mean).abs() <= 1e-9);
+    });
+}
+
+// ------------------------------------------------------- tenant streams
+
+/// Each tenant's arrival stream is seeded independently (seed ^ FNV-1a
+/// of the tenant name), so inserting a tenant into the mix leaves the
+/// other tenants' streams untouched.
+#[test]
+fn property_tenant_streams_are_independent() {
+    prop::check("fleet-tenant-streams", 100, |rng| {
+        let seed = rng.next_u64();
+        let rate_a = 0.5 + rng.f64() * 4.0;
+        let rate_b = 0.5 + rng.f64() * 4.0;
+        let rate_c = 0.5 + rng.f64() * 4.0;
+        let horizon = 10.0 + rng.f64() * 20.0;
+        let envelope = if rng.range(0, 2) == 1 {
+            RateEnvelope::Diurnal {
+                period_secs: horizon,
+                trough: 0.3,
+            }
+        } else {
+            RateEnvelope::Flat
+        };
+        let spec = |name: &str, rate: f64| TenantSpec {
+            name: name.into(),
+            rate,
+            prompt: (16, 64),
+            gen: 8,
+        };
+        let two = WorkloadGen::new(seed, 512).multi_tenant_split(
+            &[spec("alpha", rate_a), spec("beta", rate_b)],
+            horizon,
+            envelope,
+        );
+        let three = WorkloadGen::new(seed, 512).multi_tenant_split(
+            &[spec("alpha", rate_a), spec("gamma", rate_c), spec("beta", rate_b)],
+            horizon,
+            envelope,
+        );
+        for (was, now) in [(0usize, 0usize), (1, 2)] {
+            assert_eq!(two[was].len(), three[now].len(), "stream length shifted");
+            for (x, y) in two[was].iter().zip(&three[now]) {
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+                assert_eq!(x.req.prompt, y.req.prompt);
+                assert_eq!(x.req.max_new, y.req.max_new);
+            }
+        }
+    });
+}
+
+// ----------------------------------------------------------- integration
+
+fn direct_and_fleet_reports() -> (SloReport, SloReport) {
+    let m = model();
+    let sys = SystemConfig::paper_testbed();
+    let trace = WorkloadGen::new(5, 2048).poisson(30, 2.0, 16, 64, 8);
+
+    let mut direct = Scheduler::new(AnalyticEngine::new(&m, &sys, host_pool()), cfg());
+    direct.run_trace(trace.clone()).unwrap();
+
+    let mut fleet = Fleet::new(
+        &m,
+        std::slice::from_ref(&sys),
+        host_pool(),
+        cfg(),
+        RoutePolicy::RoundRobin,
+        0,
+        &PriceTable::cloud_2025(),
+    );
+    let sessions: Vec<SessionRequest> = trace.into_iter().map(SessionRequest::from_timed).collect();
+    let fr = fleet.serve(&sessions).unwrap();
+    assert_eq!(fr.replicas, 1);
+    (direct.report(), fr.per_replica.into_iter().next().unwrap())
+}
+
+/// A one-replica fleet is the existing online-serving path, bit for bit:
+/// pumping between arrivals reproduces `run_trace`'s tick sequence
+/// exactly, so every timing sample — and hence every report field —
+/// matches to the last ulp.
+#[test]
+fn single_replica_fleet_matches_direct_scheduler_bit_for_bit() {
+    let (direct, fleet) = direct_and_fleet_reports();
+    assert_eq!(fleet.submitted, direct.submitted);
+    assert_eq!(fleet.completed, direct.completed);
+    assert_eq!(fleet.generated_tokens, direct.generated_tokens);
+    assert_eq!(fleet.preemptions, direct.preemptions);
+    assert_eq!(fleet.makespan_secs.to_bits(), direct.makespan_secs.to_bits());
+    assert_eq!(fleet.throughput.to_bits(), direct.throughput.to_bits());
+    assert_eq!(fleet.goodput.to_bits(), direct.goodput.to_bits());
+    assert_eq!(fleet.ttft_p50.to_bits(), direct.ttft_p50.to_bits());
+    assert_eq!(fleet.ttft_p99.to_bits(), direct.ttft_p99.to_bits());
+    assert_eq!(fleet.tpot_p99.to_bits(), direct.tpot_p99.to_bits());
+    assert_eq!(fleet.latency_p99.to_bits(), direct.latency_p99.to_bits());
+    assert_eq!(fleet.queue_mean.to_bits(), direct.queue_mean.to_bits());
+    assert_eq!(fleet.samples.len(), direct.samples.len());
+    for (f, d) in fleet.samples.iter().zip(&direct.samples) {
+        assert_eq!(f.arrival.to_bits(), d.arrival.to_bits());
+        assert_eq!(f.admitted.to_bits(), d.admitted.to_bits());
+        assert_eq!(f.first_token.to_bits(), d.first_token.to_bits());
+        assert_eq!(f.finished.to_bits(), d.finished.to_bits());
+        assert_eq!(f.generated, d.generated);
+    }
+    assert_eq!(fleet.depth_samples, direct.depth_samples);
+}
+
+fn session_heavy_trace() -> Vec<SessionRequest> {
+    WorkloadGen::new(17, 2048).session_trace(&SessionMix {
+        sessions: 16,
+        session_rate: 0.8,
+        turns: (3, 6),
+        first_prompt: (32, 96),
+        turn_tokens: (16, 48),
+        gen: 16,
+        think_secs: 3.0,
+    })
+}
+
+fn serve_policy(policy: RoutePolicy) -> hybridserve::metrics::FleetReport {
+    let m = model();
+    let systems = vec![single_gpu_config(24 << 30); 3];
+    let mut fleet = Fleet::new(
+        &m,
+        &systems,
+        host_pool(),
+        cfg(),
+        policy,
+        7,
+        &PriceTable::cloud_2025(),
+    );
+    fleet.serve(&session_heavy_trace()).unwrap()
+}
+
+/// The tentpole's headline claim: at equal fleet cost, cache-affinity
+/// strictly beats round-robin goodput on a session-heavy trace, because
+/// returning turns re-prefill only their new tokens on the owner.
+#[test]
+fn affinity_beats_round_robin_goodput_at_equal_cost() {
+    let affinity = serve_policy(RoutePolicy::CacheAffinity);
+    let rr = serve_policy(RoutePolicy::RoundRobin);
+    assert_eq!(affinity.cost_per_hour, rr.cost_per_hour, "same fleet, same price");
+    assert_eq!(affinity.fleet.completed, rr.fleet.completed);
+    assert_eq!(affinity.session_misses, 0);
+    assert!(rr.session_misses > 0, "3-replica cycle must miss");
+    assert!(
+        affinity.fleet.goodput > rr.fleet.goodput,
+        "affinity {} must beat round-robin {}",
+        affinity.fleet.goodput,
+        rr.fleet.goodput
+    );
+    assert!(affinity.cost_per_token < rr.cost_per_token);
+}

@@ -1,0 +1,228 @@
+//! Golden regression test for the fleet layer: pins one heterogeneous
+//! fleet cell (4 single-device replicas at 24/24/48/80 GB serving a
+//! session trace under cache-affinity), the single-replica cell that
+//! must reproduce the existing online-serving numbers, and the
+//! affinity-vs-round-robin goodput duel, to the committed values in
+//! `rust/tests/golden/fleet_cell.json` within ±0.1%.
+//!
+//! Goldens regenerate with `UPDATE_GOLDEN=1` (or through
+//! `tools/pysim/fleet.py` when no cargo toolchain is available — the
+//! pysim mirror reproduces these cells bit-for-bit, which is how the
+//! committed values were produced and cross-checked).
+
+use hybridserve::cache::BlockSizes;
+use hybridserve::config::{ModelConfig, SystemConfig};
+use hybridserve::fleet::{single_gpu_config, Fleet, PriceTable, RoutePolicy};
+use hybridserve::metrics::{FleetReport, SloSpec};
+use hybridserve::sched::{AnalyticEngine, SchedConfig, Scheduler};
+use hybridserve::util::json::Json;
+use hybridserve::workload::{SessionMix, SessionRequest, WorkloadGen};
+
+const GOLDEN: &str = include_str!("golden/fleet_cell.json");
+const GOLDEN_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/golden/fleet_cell.json"
+);
+
+fn cfg() -> SchedConfig {
+    SchedConfig {
+        max_running: 32,
+        preemption: true,
+        slo: SloSpec::default(),
+    }
+}
+
+fn host_pool(model: &ModelConfig) -> usize {
+    4096 * BlockSizes::new(model, 16).kv_bytes
+}
+
+fn mix_from(j: &Json) -> (u64, SessionMix) {
+    let pair = |key: &str| {
+        let a = j.get(key);
+        (a.at(0).as_usize().unwrap(), a.at(1).as_usize().unwrap())
+    };
+    (
+        j.get("seed").as_usize().unwrap() as u64,
+        SessionMix {
+            sessions: j.get("sessions").as_usize().unwrap(),
+            session_rate: j.get("session_rate").as_f64().unwrap(),
+            turns: pair("turns"),
+            first_prompt: pair("first_prompt"),
+            turn_tokens: pair("turn_tokens"),
+            gen: j.get("gen").as_usize().unwrap(),
+            think_secs: j.get("think_secs").as_f64().unwrap(),
+        },
+    )
+}
+
+fn policy_from(name: &str) -> RoutePolicy {
+    match name {
+        "round-robin" => RoutePolicy::RoundRobin,
+        "least-queue" => RoutePolicy::LeastQueueDepth,
+        "cache-affinity" => RoutePolicy::CacheAffinity,
+        other => panic!("unknown policy {other}"),
+    }
+}
+
+fn serve_cell(model: &ModelConfig, cell: &Json, policy: RoutePolicy) -> FleetReport {
+    let systems: Vec<SystemConfig> = cell
+        .get("memories_gb")
+        .usize_array()
+        .unwrap()
+        .into_iter()
+        .map(|gb| single_gpu_config(gb << 30))
+        .collect();
+    let mut fleet = Fleet::new(
+        model,
+        &systems,
+        host_pool(model),
+        cfg(),
+        policy,
+        cell.get("seed").as_usize().unwrap() as u64,
+        &PriceTable::cloud_2025(),
+    );
+    let (mix_seed, mix) = mix_from(cell.get("mix"));
+    let trace = WorkloadGen::new(mix_seed, 2048).session_trace(&mix);
+    fleet.serve(&trace).unwrap()
+}
+
+/// (measured name, measured value, golden value) triples for every
+/// pinned number in the file.
+fn measured(golden: &Json) -> Vec<(String, f64, f64)> {
+    let model = ModelConfig::by_name(golden.get("model").as_str().unwrap()).unwrap();
+    let mut out = Vec::new();
+
+    // single-replica cell: the fleet path must reproduce the existing
+    // online-serving numbers (cross-checked bit-for-bit in fleet.rs
+    // against Scheduler::run_trace; pinned here against the pysim port)
+    let single = golden.get("single");
+    let tr = single.get("trace");
+    let trace = WorkloadGen::new(tr.get("seed").as_usize().unwrap() as u64, 2048).poisson(
+        tr.get("n").as_usize().unwrap(),
+        tr.get("rate").as_f64().unwrap(),
+        tr.get("prompt_lo").as_usize().unwrap(),
+        tr.get("prompt_hi").as_usize().unwrap(),
+        tr.get("gen").as_usize().unwrap(),
+    );
+    let sys = SystemConfig::paper_testbed();
+    let mut sched = Scheduler::new(AnalyticEngine::new(&model, &sys, host_pool(&model)), cfg());
+    sched.run_trace(trace).unwrap();
+    let report = sched.report();
+    for (key, value) in [
+        ("throughput", report.throughput),
+        ("goodput", report.goodput),
+        ("ttft_p99", report.ttft_p99),
+    ] {
+        out.push((
+            format!("single.{key}"),
+            value,
+            single.get(key).as_f64().unwrap(),
+        ));
+    }
+
+    // heterogeneous fleet cell under cache-affinity
+    let het = golden.get("het_cell");
+    let fr = serve_cell(&model, het, policy_from(het.get("policy").as_str().unwrap()));
+    for (key, value) in [
+        ("goodput", fr.fleet.goodput),
+        ("ttft_p99", fr.fleet.ttft_p99),
+        ("cost_per_token", fr.cost_per_token),
+    ] {
+        out.push((format!("het_cell.{key}"), value, het.get(key).as_f64().unwrap()));
+    }
+
+    // policy duel: goodput per policy on the same trace and fleet
+    let duel = golden.get("policy_duel");
+    for policy in ["cache-affinity", "round-robin"] {
+        let fr = serve_cell(&model, duel, policy_from(policy));
+        out.push((
+            format!("policy_duel.goodput.{policy}"),
+            fr.fleet.goodput,
+            duel.get("goodput").get(policy).as_f64().unwrap(),
+        ));
+    }
+    out
+}
+
+#[test]
+fn golden_fleet_cells_within_tolerance() {
+    let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+    let triples = measured(&golden);
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        let lookup = |prefix: &str, key: &str| {
+            let name = format!("{prefix}.{key}");
+            let v = triples.iter().find(|(n, _, _)| *n == name).unwrap().1;
+            (key.to_string(), Json::num(v))
+        };
+        let section = |src: &Json, prefix: &str, keys: &[&str]| {
+            let mut obj: Vec<(String, Json)> = src
+                .as_obj()
+                .unwrap()
+                .iter()
+                .filter(|(k, _)| !keys.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            obj.extend(keys.iter().map(|k| lookup(prefix, k)));
+            let refs: Vec<(&str, Json)> = obj.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+            Json::obj(refs)
+        };
+        let duel_goodput = Json::obj(vec![
+            ("cache-affinity", lookup("policy_duel.goodput", "cache-affinity").1),
+            ("round-robin", lookup("policy_duel.goodput", "round-robin").1),
+        ]);
+        let mut duel: Vec<(&str, Json)> = Vec::new();
+        let duel_src = golden.get("policy_duel").as_obj().unwrap();
+        for (k, v) in duel_src {
+            if k != "goodput" {
+                duel.push((k.as_str(), v.clone()));
+            }
+        }
+        duel.push(("goodput", duel_goodput));
+        let rewritten = Json::obj(vec![
+            ("model", golden.get("model").clone()),
+            ("tolerance", golden.get("tolerance").clone()),
+            (
+                "single",
+                section(golden.get("single"), "single", &["throughput", "goodput", "ttft_p99"]),
+            ),
+            (
+                "het_cell",
+                section(
+                    golden.get("het_cell"),
+                    "het_cell",
+                    &["goodput", "ttft_p99", "cost_per_token"],
+                ),
+            ),
+            ("policy_duel", Json::obj(duel)),
+        ]);
+        std::fs::write(GOLDEN_PATH, rewritten.to_string()).unwrap();
+        eprintln!("golden rewritten: {GOLDEN_PATH}");
+        return;
+    }
+    let tol = golden.get("tolerance").as_f64().unwrap();
+    for (name, value, pinned) in triples {
+        let rel = if pinned != 0.0 {
+            ((value - pinned) / pinned).abs()
+        } else {
+            value.abs()
+        };
+        assert!(
+            rel <= tol,
+            "{name}: measured {value} vs golden {pinned} (rel err {rel:.6} > {tol})"
+        );
+    }
+}
+
+/// Qualitative companion to the pinned duel: the affinity win must hold
+/// as an inequality, not just as two pinned numbers.
+#[test]
+fn golden_duel_affinity_wins() {
+    let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+    let duel = golden.get("policy_duel").get("goodput");
+    let aff = duel.get("cache-affinity").as_f64().unwrap();
+    let rr = duel.get("round-robin").as_f64().unwrap();
+    assert!(
+        aff > rr,
+        "pinned goodputs must keep cache-affinity ahead ({aff} vs {rr})"
+    );
+}

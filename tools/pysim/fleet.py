@@ -1,0 +1,1481 @@
+#!/usr/bin/env python3
+"""Fleet-layer mirror of `rust/src/fleet` (ISSUE 6), over the engine
+mirror in `port.py` and the exact xoshiro256** stream in `props.py`.
+
+This file is how the fleet goldens and the seeded fleet test suites are
+verified without a cargo toolchain: it re-implements, op-for-op,
+
+  * `sched::AnalyticEngine` at tp = pp = 1 (prefill wave + decode round
+    + completions over the roofline `SimCost`, Algorithm-1 block ratio,
+    per-request block tables, `Timeline` lanes),
+  * the `sched::Scheduler` tick loop (arrival fast-forward, FIFO
+    admission against the reservation ledger — which degenerates to the
+    global `reserved + need <= capacity` check on one device — depth
+    sampling, completion timings),
+  * `metrics` (RequestTiming / SloReport::from_timings / merge /
+    FleetReport),
+  * `workload` (poisson, multi-tenant splits on per-tenant FNV-keyed
+    xoshiro streams, diurnal thinning, session traces),
+  * `fleet` (Router policies + SessionTable, Replica pump/drain, Fleet
+    dispatch with the cached-prefix prompt discount, PriceTable,
+    Autoscaler).
+
+The mirror deliberately has NO preemption path: every committed fleet
+test runs with an ample host pool (4096 KV blocks), so if admission ever
+pressures here the mirror raises instead of silently diverging.
+
+Usage:
+  python3 tools/pysim/fleet.py                  # dry-run all suites + validate goldens
+  python3 tools/pysim/fleet.py --update-golden  # also rewrite rust/tests/golden/fleet_cell.json
+"""
+
+import bisect
+import json
+import math
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, HERE)
+
+from port import (  # noqa: F401
+    GPU,
+    LAYER_MAJOR,
+    PCIE,
+    BlockRatio,
+    BlockSizes,
+    HYBRID,
+    SimCost,
+    SystemConfig,
+    Timeline,
+    Workload,
+    analytic_cost_model,
+    div_ceil,
+    hybrid_cache_allocation,
+    opt_6_7b,
+    simulate,
+)
+from props import M64, Rng, check
+
+GIB = 1 << 30
+GOLDEN_PATH = os.path.join(HERE, "..", "..", "rust", "tests", "golden", "fleet_cell.json")
+
+ACT, KV = "act", "kv"
+
+
+# ------------------------------------------------------------------ stats
+# Mirror of util::stats — mean sums in iteration order, percentile sorts
+# a copy and interpolates linearly on rank (p/100)*(len-1).
+
+
+def stats_mean(xs):
+    if not xs:
+        return 0.0
+    tot = 0.0
+    for x in xs:
+        tot += x
+    return tot / len(xs)
+
+
+def stats_spread(xs):
+    if not xs:
+        return 0.0
+    return max(xs) - min(xs)
+
+
+def percentile(xs, p):
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    rank = (p / 100.0) * (len(ys) - 1)
+    lo = int(math.floor(rank))
+    hi = int(math.ceil(rank))
+    if lo == hi:
+        return ys[lo]
+    frac = rank - lo
+    return ys[lo] + (ys[hi] - ys[lo]) * frac
+
+
+# ---------------------------------------------------------------- metrics
+
+
+class SloSpec:
+    def __init__(self, ttft_secs=5.0, tpot_secs=1.0):
+        self.ttft_secs = ttft_secs
+        self.tpot_secs = tpot_secs
+
+
+class RequestTiming:
+    __slots__ = ("arrival", "admitted", "first_token", "finished", "generated")
+
+    def __init__(self, arrival, admitted, first_token, finished, generated):
+        self.arrival = arrival
+        self.admitted = admitted
+        self.first_token = first_token
+        self.finished = finished
+        self.generated = generated
+
+    def queue_secs(self):
+        return max(self.admitted - self.arrival, 0.0)
+
+    def ttft(self):
+        return max(self.first_token - self.arrival, 0.0)
+
+    def tpot(self):
+        if self.generated < 2:
+            return 0.0
+        return max(self.finished - self.first_token, 0.0) / (self.generated - 1)
+
+    def e2e(self):
+        return max(self.finished - self.arrival, 0.0)
+
+    def meets(self, slo):
+        return self.ttft() <= slo.ttft_secs and self.tpot() <= slo.tpot_secs
+
+
+class SloReport:
+    @staticmethod
+    def from_timings(submitted, timings, slo, makespan_secs, preemptions, depth_samples):
+        r = SloReport()
+        queues = [t.queue_secs() for t in timings]
+        ttfts = [t.ttft() for t in timings]
+        tpots = [t.tpot() for t in timings]
+        lats = [t.e2e() for t in timings]
+        generated_tokens = sum(t.generated for t in timings)
+        good_tokens = sum(t.generated for t in timings if t.meets(slo))
+        met = sum(1 for t in timings if t.meets(slo))
+
+        def per_sec(tokens):
+            return tokens / makespan_secs if makespan_secs > 0.0 else 0.0
+
+        r.submitted = submitted
+        r.completed = len(timings)
+        r.generated_tokens = generated_tokens
+        r.makespan_secs = makespan_secs
+        r.queue_mean = stats_mean(queues)
+        r.queue_p50 = percentile(queues, 50.0)
+        r.queue_p95 = percentile(queues, 95.0)
+        r.queue_p99 = percentile(queues, 99.0)
+        qmax = 0.0
+        for q in queues:
+            qmax = max(qmax, q)
+        r.queue_max = qmax
+        r.ttft_p50 = percentile(ttfts, 50.0)
+        r.ttft_p95 = percentile(ttfts, 95.0)
+        r.ttft_p99 = percentile(ttfts, 99.0)
+        r.tpot_p50 = percentile(tpots, 50.0)
+        r.tpot_p95 = percentile(tpots, 95.0)
+        r.tpot_p99 = percentile(tpots, 99.0)
+        r.latency_p50 = percentile(lats, 50.0)
+        r.latency_p95 = percentile(lats, 95.0)
+        r.latency_p99 = percentile(lats, 99.0)
+        r.mean_queue_depth = stats_mean([float(d) for d in depth_samples])
+        r.max_queue_depth = max(depth_samples) if depth_samples else 0
+        r.preemptions = preemptions
+        r.throughput = per_sec(generated_tokens)
+        r.goodput = per_sec(good_tokens)
+        r.slo_attainment = met / len(timings) if timings else 0.0
+        r.samples = list(timings)
+        r.depth_samples = list(depth_samples)
+        return r
+
+    @staticmethod
+    def merge(reports, slo):
+        samples = []
+        depths = []
+        submitted = 0
+        preemptions = 0
+        makespan = 0.0
+        for rep in reports:
+            samples.extend(rep.samples)
+            depths.extend(rep.depth_samples)
+            submitted += rep.submitted
+            preemptions += rep.preemptions
+            makespan = max(makespan, rep.makespan_secs)
+        return SloReport.from_timings(submitted, samples, slo, makespan, preemptions, depths)
+
+
+class FleetReport:
+    def __init__(self, per_replica, slo, cost_per_hour, session_hits, session_misses):
+        fleet = SloReport.merge(per_replica, slo)
+        if fleet.generated_tokens > 0:
+            cost_per_token = cost_per_hour * (fleet.makespan_secs / 3600.0) / fleet.generated_tokens
+        else:
+            cost_per_token = 0.0
+        completed = [float(r.completed) for r in per_replica]
+        mean = stats_mean(completed)
+        self.replicas = len(per_replica)
+        self.fleet = fleet
+        self.per_replica = per_replica
+        self.cost_per_hour = cost_per_hour
+        self.cost_per_token = cost_per_token
+        self.load_imbalance = stats_spread(completed) / mean if mean > 0.0 else 0.0
+        self.session_hits = session_hits
+        self.session_misses = session_misses
+
+    def session_hit_rate(self):
+        total = self.session_hits + self.session_misses
+        return self.session_hits / total if total else 0.0
+
+
+# --------------------------------------------------------------- workload
+
+
+_ZIPF_CUM = {}
+
+
+def _zipf_cum(n, s):
+    """Cumulative truncated-harmonic table, summed in the exact order
+    Rust's `Rng::zipf` accumulates (k = 1..n), cached per (n, s)."""
+    key = (n, s)
+    cum = _ZIPF_CUM.get(key)
+    if cum is None:
+        cum = []
+        acc = 0.0
+        for k in range(1, n + 1):
+            acc += 1.0 / float(k) ** s
+            cum.append(acc)
+        _ZIPF_CUM[key] = cum
+    return cum
+
+
+def zipf(rng, n, s):
+    cum = _zipf_cum(n, s)
+    target = rng.f64() * cum[-1]
+    i = bisect.bisect_left(cum, target)
+    return i if i < n else n - 1
+
+
+def fnv1a(name):
+    h = 0xCBF29CE484222325
+    for b in name.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return h
+
+
+FLAT = ("flat",)
+
+
+def diurnal(period_secs, trough):
+    return ("diurnal", period_secs, trough)
+
+
+def env_multiplier(env, t):
+    if env[0] == "flat":
+        return 1.0
+    _, period, trough = env
+    return trough + (1.0 - trough) * 0.5 * (1.0 - math.cos(2.0 * math.pi * t / period))
+
+
+class Request:
+    __slots__ = ("id", "prompt", "max_new")
+
+    def __init__(self, id, prompt, max_new):
+        self.id = id
+        self.prompt = prompt
+        self.max_new = max_new
+
+
+class TimedRequest:
+    __slots__ = ("arrival", "req")
+
+    def __init__(self, arrival, req):
+        self.arrival = arrival
+        self.req = req
+
+
+class SessionRequest:
+    __slots__ = ("arrival", "session", "history_len", "req")
+
+    def __init__(self, arrival, session, history_len, req):
+        self.arrival = arrival
+        self.session = session
+        self.history_len = history_len
+        self.req = req
+
+    @staticmethod
+    def from_timed(tr):
+        return SessionRequest(tr.arrival, tr.req.id, 0, tr.req)
+
+
+class TenantSpec:
+    def __init__(self, name, rate, prompt, gen):
+        self.name = name
+        self.rate = rate
+        self.prompt = prompt
+        self.gen = gen
+
+
+class SessionMix:
+    def __init__(self, sessions, session_rate, turns, first_prompt, turn_tokens, gen, think_secs):
+        self.sessions = sessions
+        self.session_rate = session_rate
+        self.turns = turns
+        self.first_prompt = first_prompt
+        self.turn_tokens = turn_tokens
+        self.gen = gen
+        self.think_secs = think_secs
+
+
+class WorkloadGen:
+    def __init__(self, seed, vocab):
+        self.rng = Rng(seed)
+        self.seed = seed
+        self.vocab = vocab
+        self.zipf_s = 1.1
+        self.next_id = 0
+
+    def _prompt_with(self, rng, length):
+        return [zipf(rng, self.vocab, self.zipf_s) for _ in range(length)]
+
+    def prompt(self, length):
+        return self._prompt_with(self.rng, length)
+
+    @staticmethod
+    def _exp_gap_with(rng, rate):
+        return -math.log(1.0 - rng.f64()) / rate
+
+    def _exp_gap(self, rate):
+        return self._exp_gap_with(self.rng, rate)
+
+    def poisson(self, n, rate, prompt_lo, prompt_hi, gen):
+        assert rate > 0.0
+        out = []
+        t = 0.0
+        for _ in range(n):
+            t += self._exp_gap(rate)
+            rid = self.next_id
+            self.next_id += 1
+            length = self.rng.range(prompt_lo, prompt_hi)
+            out.append(TimedRequest(t, Request(rid, self.prompt(length), gen)))
+        return out
+
+    def multi_tenant_split(self, tenants, horizon_secs, envelope):
+        assert horizon_secs > 0.0
+        split = []
+        for ten in tenants:
+            assert ten.rate > 0.0
+            rng = Rng(self.seed ^ fnv1a(ten.name))
+            out = []
+            t = 0.0
+            while True:
+                t += self._exp_gap_with(rng, ten.rate)
+                if t >= horizon_secs:
+                    break
+                # Thinning draw is ALWAYS consumed (envelope-independent
+                # stream position per candidate arrival).
+                if rng.f64() > env_multiplier(envelope, t):
+                    continue
+                length = rng.range(ten.prompt[0], ten.prompt[1])
+                prompt = self._prompt_with(rng, length)
+                rid = self.next_id
+                self.next_id += 1
+                out.append(TimedRequest(t, Request(rid, prompt, ten.gen)))
+            split.append(out)
+        return split
+
+    def multi_tenant(self, tenants, horizon_secs, envelope):
+        merged = [tr for part in self.multi_tenant_split(tenants, horizon_secs, envelope) for tr in part]
+        merged.sort(key=lambda tr: tr.arrival)  # stable, like sort_by(total_cmp)
+        return merged
+
+    def session_trace(self, mix):
+        assert mix.session_rate > 0.0 and mix.think_secs > 0.0 and mix.gen >= 1
+        turns = []
+        start = 0.0
+        for s in range(mix.sessions):
+            start += self._exp_gap(mix.session_rate)
+            nturns = self.rng.range(mix.turns[0], mix.turns[1])
+            t = start
+            history = []
+            for turn in range(nturns):
+                if turn == 0:
+                    tlen = self.rng.range(mix.first_prompt[0], mix.first_prompt[1])
+                else:
+                    t += self._exp_gap(1.0 / mix.think_secs)
+                    tlen = self.rng.range(mix.turn_tokens[0], mix.turn_tokens[1])
+                new_tokens = self.prompt(tlen)
+                history_len = len(history)
+                full = history + new_tokens
+                turns.append((t, s, history_len, full, mix.gen))
+                history = full + [1] * mix.gen
+            # (resize(len+gen, 1) in Rust: reply placeholders, token id 1)
+        turns.sort(key=lambda x: x[0])  # stable
+        out = []
+        for arrival, session, history_len, prompt, gen in turns:
+            rid = self.next_id
+            self.next_id += 1
+            out.append(SessionRequest(arrival, session, history_len, Request(rid, prompt, gen)))
+        return out
+
+
+# ----------------------------------------------------- engine + scheduler
+
+
+class MirrorError(RuntimeError):
+    pass
+
+
+class Completion:
+    __slots__ = ("id", "prompt_len", "generated", "ttft", "token_times")
+
+    def __init__(self, id, prompt_len, generated, ttft, token_times):
+        self.id = id
+        self.prompt_len = prompt_len
+        self.generated = generated
+        self.ttft = ttft
+        self.token_times = token_times
+
+    def latency(self):
+        return self.token_times[-1] if self.token_times else 0.0
+
+
+def _next_kind(ratio, act, kv):
+    at, kt = ratio.act, ratio.kv
+    if at == 0 and kt == 0:
+        return KV
+    if kt == 0:
+        return ACT
+    if at == 0:
+        return KV
+    # allocate ACT iff act/(act+kv) < at/(at+kt), cross-multiplied
+    return ACT if act * (at + kt) < at * (act + kv + 1) else KV
+
+
+class _ReqState:
+    __slots__ = (
+        "prompt_len",
+        "max_new",
+        "generated",
+        "done",
+        "paused",
+        "demoted",
+        "prefilled",
+        "reported",
+        "token_times",
+    )
+
+    def __init__(self, prompt_len, max_new):
+        self.prompt_len = prompt_len
+        self.max_new = max_new
+        self.generated = 0
+        self.done = False
+        self.paused = False
+        self.demoted = False
+        self.prefilled = False
+        self.reported = False
+        self.token_times = []
+
+
+class Engine:
+    """sched::AnalyticEngine at tp = pp = 1 (the only grids the fleet
+    tests instantiate). Heterogeneous memory enters through the sys
+    mem_overrides -> MemoryPlan residency (stream_frac, act capacity)."""
+
+    def __init__(self, model, sys, host_cache_bytes):
+        assert sys.tp == 1 and sys.pp == 1, "fleet mirror models single-device replicas"
+        self.model = model
+        self.sys = sys
+        self.cost = SimCost(model, sys)
+        self.plan = self.cost.plan
+        self.cm = analytic_cost_model(model, sys)
+        self.sizes = BlockSizes(model, sys.block_tokens)
+        # weight_stream_passes == inflight_chunks (1 under layer-major)
+        bubble = self.plan.schedule_bubble(self.plan.weight_stream_passes())
+        a, k = hybrid_cache_allocation(
+            self.cm, self.cost.gpu_act_block_capacity(), host_cache_bytes, self.sizes, bubble
+        )
+        self.ratio = BlockRatio(max(a, 1), k)
+        self.host_capacity = host_cache_bytes
+        self.host_used = 0
+        self.tl = Timeline(1)
+        self.states = {}
+        self.order = []
+        self.tables = {}
+        self.last_exit = [0.0]
+
+    # ---- internals
+
+    def _block_bytes(self, kind):
+        return self.sizes.act_bytes if kind == ACT else self.sizes.kv_bytes
+
+    def _append_block(self, rid, kind, filled):
+        self.host_used += self._block_bytes(kind)
+        if self.host_used > self.host_capacity:
+            raise MirrorError("host pool exhausted — ample-pool assumption violated")
+        self.tables[rid].append([kind, filled])
+
+    def _alloc_token_slot(self, rid):
+        blocks = self.tables[rid]
+        bt = self.sizes.block_tokens
+        if blocks and blocks[-1][1] < bt:
+            blocks[-1][1] += 1
+            return
+        if self.states[rid].demoted:
+            kind = ACT
+        else:
+            act = sum(1 for b in blocks if b[0] == ACT)
+            kv = len(blocks) - act
+            kind = _next_kind(self.ratio, act, kv)
+        self._append_block(rid, kind, 1)
+
+    def _pass_chunks(self, n):
+        return min(self.plan.weight_stream_passes(), max(n, 1))
+
+    def _schedule_pass(self, gpu_base, cache_base, entries):
+        # One stage, one device, unit gpu/link scales (memory-only
+        # overrides keep the reference GPU and link specs).
+        layers = float(self.plan.stages[0].layer_count())
+        frac = 1.0 / len(entries)
+        w_dev = self.cost.device_weight_stream_time(0)
+        exits = []
+        for entry in entries:
+            handoff = entry
+            t_pcie = layers * (w_dev + cache_base * frac)
+            t_gpu = layers * gpu_base * frac
+            load = self.tl.schedule_on(0, PCIE, 0.0, t_pcie)
+            span = self.tl.schedule_on(0, GPU, max(load[1], handoff), t_gpu)
+            exits.append(span[1])
+        end = 0.0
+        for e in exits:
+            end = max(end, e)
+        self.last_exit = exits
+        return end
+
+    def _feedback_entries(self, chunks):
+        fallback = self.last_exit[-1] if self.last_exit else 0.0
+        return [self.last_exit[c] if c < len(self.last_exit) else fallback for c in range(chunks)]
+
+    # ---- StepEngine surface
+
+    def now(self):
+        return self.tl.makespan()
+
+    def advance_to(self, t):
+        self.tl.advance_to(t)
+
+    def validate(self, req):
+        assert req.prompt, f"request {req.id} has empty prompt"
+        assert len(req.prompt) + req.max_new <= self.model.max_context
+        need = self.projected_host_bytes(len(req.prompt), req.max_new)
+        assert need <= self.host_capacity, f"request {req.id} can never fit the pool"
+
+    def admit(self, req):
+        assert req.id not in self.states, f"duplicate {req.id}"
+        self.tables[req.id] = []
+        self.states[req.id] = _ReqState(len(req.prompt), req.max_new)
+        self.order.append(req.id)
+
+    def step(self):
+        bt = self.sizes.block_tokens
+        # ---- prefill wave
+        wave = []
+        for rid in self.order:
+            st = self.states[rid]
+            if not st.prefilled and not st.paused and not st.done:
+                wave.append(rid)
+        if wave:
+            batch = len(wave)
+            max_prompt = max(self.states[rid].prompt_len for rid in wave)
+            for rid in wave:
+                plen = self.states[rid].prompt_len
+                nblocks = div_ceil(plen, bt)
+                act = kv = 0
+                for i in range(nblocks):
+                    filled = plen - i * bt if i + 1 == nblocks else bt
+                    kind = _next_kind(self.ratio, act, kv)
+                    if kind == ACT:
+                        act += 1
+                    else:
+                        kv += 1
+                    self._append_block(rid, kind, filled)
+            gpu_base = self.cost.layer_prefill_time(batch, max_prompt)
+            entries = [0.0] * self._pass_chunks(batch)
+            end = self._schedule_pass(gpu_base, 0.0, entries)
+            for rid in wave:
+                st = self.states[rid]
+                st.prefilled = True
+                st.generated = 1
+                st.token_times.append(end)
+            for rid in wave:
+                self._alloc_token_slot(rid)
+                st = self.states[rid]
+                if st.generated >= st.max_new:
+                    st.done = True
+
+        # ---- one decode round
+        runnable = []
+        for rid in self.order:
+            st = self.states[rid]
+            if st.prefilled and not st.done and not st.paused:
+                runnable.append(rid)
+        if runnable:
+            n = len(runnable)
+            act_blocks = kv_blocks = 0
+            ctx_sum = 0
+            for rid in runnable:
+                blocks = self.tables[rid]
+                a = sum(1 for b in blocks if b[0] == ACT)
+                act_blocks += a
+                kv_blocks += len(blocks) - a
+                st = self.states[rid]
+                ctx_sum += st.prompt_len + st.generated
+            mean_ctx = ctx_sum // n
+            gpu_base = self.cost.kv_gen_time(act_blocks * bt) + self.cost.layer_forward_time(n, 1, mean_ctx)
+            cache_base = self.cost.kv_load_time(kv_blocks * bt) + self.cost.act_load_time(act_blocks * bt)
+            entries = self._feedback_entries(self._pass_chunks(n))
+            end = self._schedule_pass(gpu_base, cache_base, entries)
+            for rid in runnable:
+                st = self.states[rid]
+                st.generated += 1
+                st.token_times.append(end)
+                self._alloc_token_slot(rid)
+                st = self.states[rid]
+                if st.generated >= st.max_new:
+                    st.done = True
+
+        # ---- fresh completions (sorted by id, like the Rust engine)
+        fresh = []
+        for rid, st in self.states.items():
+            if st.done and not st.reported:
+                st.reported = True
+                fresh.append(
+                    Completion(rid, st.prompt_len, st.generated, st.token_times[0] if st.token_times else 0.0, list(st.token_times))
+                )
+        fresh.sort(key=lambda c: c.id)
+        return fresh
+
+    def release(self, rid):
+        del self.states[rid]
+        for kind, _ in self.tables.pop(rid):
+            self.host_used -= self._block_bytes(kind)
+        self.order = [x for x in self.order if x != rid]
+
+    def projected_host_bytes(self, prompt_len, max_new):
+        n = div_ceil(prompt_len + max_new, self.sizes.block_tokens)
+        act, kv = self.ratio.split(n)
+        return act * self.sizes.act_bytes + (kv + 1) * self.sizes.kv_bytes
+
+
+class SchedConfig:
+    def __init__(self, max_running=32, preemption=True, slo=None):
+        self.max_running = max_running
+        self.preemption = preemption
+        self.slo = slo if slo is not None else SloSpec()
+
+
+class _Waiting:
+    __slots__ = ("arrival", "req")
+
+    def __init__(self, arrival, req):
+        self.arrival = arrival
+        self.req = req
+
+
+class Scheduler:
+    """sched::Scheduler over the single-device ledger (for which
+    ShardLedger::for_plan degenerates to the flat byte check; layer-major
+    has zero staging carve-out). The preemption path raises — the
+    committed fleet scenarios never pressure their ample pools."""
+
+    def __init__(self, eng, cfg):
+        self.eng = eng
+        self.cfg = cfg
+        self.waiting = []
+        self.running = []
+        self.preempted = []
+        self.admitted = {}
+        self.reserved_total = 0
+        self.capacity = eng.host_capacity
+        self.timings = []
+        self.depth_samples = []
+        self.preemptions = 0
+        self.submitted = 0
+
+    def submit(self, req, arrival):
+        assert math.isfinite(arrival) and arrival >= 0.0
+        self.eng.validate(req)
+        assert req.id not in self.admitted and all(w.req.id != req.id for w in self.waiting)
+        pos = len(self.waiting)
+        for i, w in enumerate(self.waiting):
+            if not (w.arrival <= arrival):
+                pos = i
+                break
+        self.waiting.insert(pos, _Waiting(arrival, req))
+        self.submitted += 1
+
+    def tick(self):
+        if not self.running and not self.preempted:
+            if not self.waiting:
+                return []
+            if self.waiting[0].arrival > self.eng.now():
+                self.eng.advance_to(self.waiting[0].arrival)
+        now = self.eng.now()
+
+        if self.preempted:
+            raise MirrorError("preempted set non-empty — mirror has no preemption path")
+
+        # FIFO admission, gated on concurrency + reserved bytes.
+        while self.waiting and self.waiting[0].arrival <= now and len(self.running) < self.cfg.max_running:
+            w = self.waiting[0]
+            need = self.eng.projected_host_bytes(len(w.req.prompt), w.req.max_new)
+            if self.reserved_total + need > self.capacity:
+                raise MirrorError("admission pressure — ample-pool assumption violated")
+            self.waiting.pop(0)
+            self.eng.admit(w.req)
+            self.admitted[w.req.id] = (w.arrival, now, need)
+            self.reserved_total += need
+            self.running.append(w.req.id)
+
+        if not self.running:
+            if self.waiting and self.waiting[0].arrival > now:
+                self.eng.advance_to(self.waiting[0].arrival)
+            return []
+
+        self.depth_samples.append(sum(1 for w in self.waiting if w.arrival <= now))
+
+        done = self.eng.step()
+        out = []
+        for c in done:
+            self.running = [x for x in self.running if x != c.id]
+            arrival, admitted, reserved = self.admitted.pop(c.id)
+            self.reserved_total -= reserved
+            self.timings.append(RequestTiming(arrival, admitted, c.ttft, c.latency(), c.generated))
+            self.eng.release(c.id)
+            out.append(c)
+        return out
+
+    def run_to_completion(self):
+        all_done = []
+        stalled = 0
+        while not self.is_idle():
+            before = (len(self.waiting), len(self.running), len(self.preempted), len(self.timings))
+            now_before = self.eng.now()
+            all_done.extend(self.tick())
+            after = (len(self.waiting), len(self.running), len(self.preempted), len(self.timings))
+            if after == before and self.eng.now() <= now_before:
+                stalled += 1
+                if stalled >= 3:
+                    raise MirrorError(f"scheduler stalled at t={self.eng.now()}")
+            else:
+                stalled = 0
+        return all_done
+
+    def run_trace(self, trace):
+        for tr in trace:
+            self.submit(tr.req, tr.arrival)
+        return self.run_to_completion()
+
+    def is_idle(self):
+        return not self.waiting and not self.running and not self.preempted
+
+    def now(self):
+        return self.eng.now()
+
+    def queue_depth(self):
+        return len(self.waiting)
+
+    def running_count(self):
+        return len(self.running)
+
+    def preempted_count(self):
+        return len(self.preempted)
+
+    def report(self):
+        return SloReport.from_timings(
+            self.submitted, self.timings, self.cfg.slo, self.eng.now(), self.preemptions, self.depth_samples
+        )
+
+
+# ------------------------------------------------------------------ fleet
+
+
+ROUND_ROBIN = "round-robin"
+LEAST_QUEUE = "least-queue"
+CACHE_AFFINITY = "cache-affinity"
+
+
+class Route:
+    __slots__ = ("replica", "cached_prefix")
+
+    def __init__(self, replica, cached_prefix):
+        self.replica = replica
+        self.cached_prefix = cached_prefix
+
+
+class Router:
+    def __init__(self, policy, seed):
+        self.policy = policy
+        self.rng = Rng(seed)
+        self.rr_next = 0
+        self.sessions = {}  # session -> (replica, cached_tokens)
+        self.hits = 0
+        self.misses = 0
+
+    def _least_loaded(self, loads):
+        lo = min(loads)
+        ties = [i for i, l in enumerate(loads) if l == lo]
+        if len(ties) == 1:
+            return ties[0]
+        return ties[self.rng.range(0, len(ties))]
+
+    def route(self, session, history_len, loads):
+        n = len(loads)
+        assert n > 0
+        entry = self.sessions.get(session)
+        owner = entry if entry is not None and entry[0] < n else None
+        if self.policy == ROUND_ROBIN:
+            replica = self.rr_next % n
+            self.rr_next = (self.rr_next + 1) % n
+        elif self.policy == LEAST_QUEUE:
+            replica = self._least_loaded(loads)
+        else:
+            replica = owner[0] if owner is not None else self._least_loaded(loads)
+        cached = min(owner[1], history_len) if owner is not None and owner[0] == replica else 0
+        if history_len > 0:
+            if cached > 0:
+                self.hits += 1
+            else:
+                self.misses += 1
+        return Route(replica, cached)
+
+    def record(self, session, replica, cached_tokens):
+        self.sessions[session] = (replica, cached_tokens)
+
+    def evict_replica(self, replica):
+        self.sessions = {s: e for s, e in self.sessions.items() if e[0] != replica}
+
+
+class Replica:
+    def __init__(self, rid, model, sys, host_cache_bytes, cfg):
+        self.id = rid
+        self.hourly = 0.0
+        self.sys = sys
+        self.sched = Scheduler(Engine(model, sys, host_cache_bytes), cfg)
+
+    def load(self):
+        return self.sched.queue_depth() + self.sched.running_count() + self.sched.preempted_count()
+
+    def submit(self, req, arrival):
+        self.sched.submit(req, arrival)
+
+    def pump(self, t):
+        done = 0
+        stalled = 0
+        while not self.sched.is_idle() and self.sched.now() < t:
+            before = self.sched.now()
+            n = len(self.sched.tick())
+            done += n
+            if n == 0 and self.sched.now() <= before:
+                stalled += 1
+                if stalled >= 3:
+                    raise MirrorError(f"replica {self.id} stalled pumping to t={t}")
+            else:
+                stalled = 0
+        return done
+
+    def drain(self):
+        return len(self.sched.run_to_completion())
+
+    def report(self):
+        return self.sched.report()
+
+
+def single_gpu_config(memory_bytes):
+    return SystemConfig(1, 1, LAYER_MAJOR, {0: memory_bytes})
+
+
+class Fleet:
+    def __init__(self, model, systems, host_cache_bytes, cfg, policy, seed, prices):
+        assert systems
+        self.replicas = []
+        for rid, sys_ in enumerate(systems):
+            r = Replica(rid, model, sys_, host_cache_bytes, cfg)
+            r.hourly = prices.replica_hourly(sys_)
+            self.replicas.append(r)
+        self.router = Router(policy, seed)
+        self.slo = cfg.slo
+        self.cost_per_hour = sum(r.hourly for r in self.replicas)
+
+    def dispatch(self, sr):
+        for r in self.replicas:
+            r.pump(sr.arrival)
+        loads = [r.load() for r in self.replicas]
+        route = self.router.route(sr.session, sr.history_len, loads)
+        assert sr.history_len < len(sr.req.prompt), "a turn adds new tokens"
+        req = Request(sr.req.id, sr.req.prompt[route.cached_prefix:], sr.req.max_new)
+        self.replicas[route.replica].submit(req, sr.arrival)
+        self.router.record(sr.session, route.replica, len(sr.req.prompt) + sr.req.max_new)
+        return route
+
+    def serve(self, trace):
+        for sr in trace:
+            self.dispatch(sr)
+        for r in self.replicas:
+            r.drain()
+        return self.report()
+
+    def report(self):
+        per = [r.report() for r in self.replicas]
+        return FleetReport(per, self.slo, self.cost_per_hour, self.router.hits, self.router.misses)
+
+
+class PriceTable:
+    def __init__(self, tiers):
+        assert tiers
+        self.tiers = sorted(tiers, key=lambda t: t[0])  # (mem_gb, $/h)
+
+    @staticmethod
+    def cloud_2025():
+        return PriceTable([(24, 0.44), (48, 1.10), (80, 2.49)])
+
+    def gpu_hourly(self, memory_bytes):
+        for gb, price in self.tiers:
+            if gb * GIB >= memory_bytes:
+                return price
+        gb, price = self.tiers[-1]
+        return price * (memory_bytes / (gb * GIB))
+
+    def replica_hourly(self, sys):
+        return sum(self.gpu_hourly(sys.device_memory(d)) for d in range(sys.tp * sys.pp))
+
+
+class CandidateScore:
+    def __init__(self, label, sys, tokens_per_sec, hourly, cost_per_token):
+        self.label = label
+        self.sys = sys
+        self.tokens_per_sec = tokens_per_sec
+        self.hourly = hourly
+        self.cost_per_token = cost_per_token
+
+
+class Autoscaler:
+    def __init__(self, model, candidates, prices, probe):
+        assert candidates
+        self.scores = []
+        for label, sys_ in candidates:
+            r = simulate(model, sys_, HYBRID, probe)
+            hourly = prices.replica_hourly(sys_)
+            cpt = hourly / 3600.0 / r.throughput if r.throughput > 0.0 else float("inf")
+            self.scores.append(CandidateScore(label, sys_, r.throughput, hourly, cpt))
+        best = 0
+        for i, s in enumerate(self.scores):
+            if s.cost_per_token < self.scores[best].cost_per_token:
+                best = i
+        self.best_idx = best
+        self.target_utilization = 0.7
+
+    def best(self):
+        return self.scores[self.best_idx]
+
+    def replicas_for(self, offered):
+        cap = self.best().tokens_per_sec * self.target_utilization
+        if not (offered > 0.0) or cap <= 0.0:
+            return 1
+        return max(int(math.ceil(offered / cap)), 1)
+
+    def plan(self, curve):
+        return [self.replicas_for(x) for x in curve]
+
+    def fleet_systems(self, n):
+        return [self.best().sys for _ in range(n)]
+
+
+# ------------------------------------------------------- dry-run drivers
+
+
+def cfg():
+    return SchedConfig(max_running=32, preemption=True, slo=SloSpec())
+
+
+def host_pool(model):
+    return 4096 * BlockSizes(model, 16).kv_bytes
+
+
+def small_trace(seed):
+    return WorkloadGen(seed, 2048).session_trace(
+        SessionMix(6, 0.5, (2, 4), (16, 48), (8, 24), 8, 4.0)
+    )
+
+
+def session_heavy_trace():
+    return WorkloadGen(17, 2048).session_trace(
+        SessionMix(16, 0.8, (3, 6), (32, 96), (16, 48), 16, 3.0)
+    )
+
+
+def run_router_units():
+    r = Router(ROUND_ROBIN, 0)
+    picks = [r.route(s, 0, [0, 0, 0]).replica for s in range(7)]
+    assert picks == [0, 1, 2, 0, 1, 2, 0], picks
+
+    r = Router(LEAST_QUEUE, 1)
+    assert r.route(0, 0, [3, 0, 2]).replica == 1
+    assert r.route(1, 0, [5, 4, 1]).replica == 2
+
+    def tie_picks(seed):
+        rr = Router(LEAST_QUEUE, seed)
+        return [rr.route(s, 0, [1, 1, 1, 1]).replica for s in range(16)]
+
+    assert tie_picks(7) == tie_picks(7)
+    assert tie_picks(7) != tie_picks(8), "seed 8 must reshuffle ties vs seed 7"
+    a = Router(LEAST_QUEUE, 3)
+    b = Router(LEAST_QUEUE, 3)
+    assert a.route(0, 0, [2, 0, 1]).replica == 1
+    assert a.route(1, 0, [1, 1, 3]).replica == b.route(1, 0, [1, 1, 3]).replica
+
+    r = Router(CACHE_AFFINITY, 0)
+    first = r.route(42, 0, [0, 0, 0])
+    assert first.cached_prefix == 0
+    r.record(42, first.replica, 100)
+    second = r.route(42, 80, [9, 9, 9])
+    assert second.replica == first.replica and second.cached_prefix == 80
+    assert r.hits == 1 and r.misses == 0
+    r.record(42, first.replica, 50)
+    assert r.route(42, 80, [0, 0, 0]).cached_prefix == 50
+
+    r = Router(ROUND_ROBIN, 0)
+    assert r.route(7, 0, [0, 0]).replica == 0
+    r.record(7, 0, 64)
+    second = r.route(7, 32, [0, 0])
+    assert second.replica == 1 and second.cached_prefix == 0 and r.misses == 1
+    r.record(7, 1, 96)
+    third = r.route(7, 64, [0, 0])
+    assert third.replica == 0 and third.cached_prefix == 0
+    print("PASS router unit mirrors")
+
+
+def run_price_units():
+    p = PriceTable.cloud_2025()
+    assert p.gpu_hourly(24 * GIB) == 0.44
+    assert p.gpu_hourly(16 * GIB) == 0.44
+    assert p.gpu_hourly(48 * GIB) == 1.10
+    assert p.gpu_hourly(49 * GIB) == 2.49
+    assert abs(p.gpu_hourly(160 * GIB) - 4.98) < 1e-12
+    assert p.replica_hourly(SystemConfig()) == 0.44
+    assert abs(p.replica_hourly(SystemConfig(2, 2)) - 4.0 * 0.44) < 1e-12
+    print("PASS price table mirrors")
+
+
+def run_autoscaler_units():
+    m = opt_6_7b()
+    probe = Workload(8, 64, 8)
+    auto = Autoscaler(m, [("4090", SystemConfig())], PriceTable.cloud_2025(), probe)
+    assert auto.best().tokens_per_sec > 0.0 and auto.best().cost_per_token > 0.0
+    assert auto.replicas_for(0.0) == 1
+    cap = auto.best().tokens_per_sec * auto.target_utilization
+    assert auto.replicas_for(cap * 3.5) == 4, auto.replicas_for(cap * 3.5)
+    assert auto.replicas_for(auto.best().tokens_per_sec * 0.5) >= 1
+    plan = auto.plan([0.0, cap, cap * 2.0, cap * 2.0 + 1e-9])
+    assert plan == [1, 1, 2, 3], plan
+    assert len(auto.fleet_systems(3)) == 3
+    print(f"PASS autoscaler mirrors (paper testbed {auto.best().tokens_per_sec:.1f} tok/s)")
+    return auto
+
+
+def run_workload_lln():
+    # poisson seed 11: mean inter-arrival within 0.35/rate of 1/rate
+    g = WorkloadGen(11, 2048)
+    trace = g.poisson(400, 5.0, 16, 64, 4)
+    assert len(trace) == 400
+    assert all(trace[i].arrival <= trace[i + 1].arrival for i in range(len(trace) - 1))
+    assert all(16 <= len(t.req.prompt) < 64 for t in trace)
+    span = trace[-1].arrival - trace[0].arrival
+    mean_gap = span / (len(trace) - 1)
+    assert abs(mean_gap - 0.2) < 0.35 / 5.0, mean_gap
+
+    # multi_tenant seed 9: total count in the test's LLN band
+    def tenant(name, rate):
+        return TenantSpec(name, rate, (16, 64), 4)
+
+    g = WorkloadGen(9, 2048)
+    trace = g.multi_tenant([tenant("heavy", 10.0), tenant("light", 1.0)], 60.0, FLAT)
+    n = len(trace)
+    assert 400 <= n <= 800, n
+    assert all(t.arrival < 60.0 for t in trace)
+    assert len({t.req.id for t in trace}) == n
+
+    # diurnal seed 7: peak window dominates the trough, flat is larger
+    env = diurnal(100.0, 0.2)
+    assert abs(env_multiplier(env, 0.0) - 0.2) < 1e-12
+    assert abs(env_multiplier(env, 50.0) - 1.0) < 1e-12
+    g = WorkloadGen(7, 2048)
+    trace = g.multi_tenant([tenant("t", 20.0)], 100.0, env)
+    trough = sum(1 for t in trace if t.arrival < 25.0 or t.arrival >= 75.0)
+    peak = len(trace) - trough
+    assert peak > 2 * trough, (peak, trough)
+    flat = WorkloadGen(7, 2048).multi_tenant([tenant("t", 20.0)], 100.0, FLAT)
+    assert len(flat) > len(trace)
+
+    # session seed 13: structural invariants
+    g = WorkloadGen(13, 2048)
+    trace = g.session_trace(SessionMix(10, 0.5, (2, 5), (16, 48), (8, 24), 8, 4.0))
+    assert len(trace) >= 20
+    for i in range(len(trace) - 1):
+        assert trace[i].arrival <= trace[i + 1].arrival
+        assert trace[i].req.id + 1 == trace[i + 1].req.id
+    by_session = {}
+    for sr in trace:
+        by_session.setdefault(sr.session, []).append(sr)
+    assert len(by_session) == 10
+    for turns in by_session.values():
+        assert 2 <= len(turns) < 5
+        assert turns[0].history_len == 0
+        for prev, nxt in zip(turns, turns[1:]):
+            assert nxt.history_len == len(prev.req.prompt) + prev.req.max_new
+            assert len(nxt.req.prompt) > nxt.history_len
+            assert nxt.arrival > prev.arrival
+            assert nxt.req.prompt[: len(prev.req.prompt)] == prev.req.prompt
+
+    # tenant streams survive adding a tenant (seed 42)
+    def t2(name, rate):
+        return TenantSpec(name, rate, (16, 64), 4)
+
+    ab = WorkloadGen(42, 2048).multi_tenant_split([t2("a", 3.0), t2("b", 1.0)], 30.0, FLAT)
+    abc = WorkloadGen(42, 2048).multi_tenant_split(
+        [t2("a", 3.0), t2("c", 5.0), t2("b", 1.0)], 30.0, FLAT
+    )
+    for i, j in [(0, 0), (1, 2)]:
+        assert len(ab[i]) == len(abc[j])
+        for x, y in zip(ab[i], abc[j]):
+            assert x.arrival == y.arrival and x.req.prompt == y.req.prompt
+    assert ab[0] and ab[1]
+    print("PASS workload generators (LLN bounds + structure)")
+
+
+def run_property_suites(auto):
+    def affinity_home(rng):
+        nrep = rng.range(2, 9)
+        router = Router(CACHE_AFFINITY, rng.next_u64())
+        steps = rng.range(20, 61)
+        owner = {}
+        ctx = {}
+        for _ in range(steps):
+            session = rng.range(0, 10)
+            loads = [rng.range(0, 8) for _ in range(nrep)]
+            history = ctx.get(session, 0)
+            route = router.route(session, history, loads)
+            assert route.replica < nrep
+            if session in owner:
+                assert route.replica == owner[session]
+                assert route.cached_prefix == history
+            else:
+                assert route.cached_prefix == 0
+            grown = history + rng.range(1, 33)
+            router.record(session, route.replica, grown)
+            owner[session] = route.replica
+            ctx[session] = grown
+        assert router.misses == 0
+
+    check("fleet-affinity-home", 100, affinity_home)
+
+    def rr_balance(rng):
+        nrep = rng.range(1, 9)
+        router = Router(ROUND_ROBIN, rng.next_u64())
+        k = rng.range(1, 200)
+        counts = [0] * nrep
+        for s in range(k):
+            loads = [rng.range(0, 100) for _ in range(nrep)]
+            counts[router.route(s, 0, loads).replica] += 1
+        assert max(counts) - min(counts) <= 1, counts
+        assert sum(counts) == k
+
+    check("fleet-rr-balance", 100, rr_balance)
+
+    def autoscaler_monotone(rng):
+        a = rng.f64() * 5000.0
+        b = rng.f64() * 5000.0
+        lo, hi = (a, b) if a <= b else (b, a)
+        n_lo = auto.replicas_for(lo)
+        n_hi = auto.replicas_for(hi)
+        assert n_lo >= 1
+        assert n_lo <= n_hi, (lo, n_lo, hi, n_hi)
+        assert auto.plan([lo, hi]) == [n_lo, n_hi]
+        assert len(auto.fleet_systems(n_hi)) == n_hi
+
+    check("fleet-autoscaler-monotone", 100, autoscaler_monotone)
+
+    def merge_partition(rng):
+        n = rng.range(1, 40)
+        timings = []
+        for _ in range(n):
+            arrival = rng.f64() * 10.0
+            queue = rng.f64()
+            ttft = rng.f64() * 2.0
+            generated = rng.range(1, 20)
+            tpot = rng.f64() * 0.5
+            first_token = arrival + queue + ttft
+            timings.append(
+                RequestTiming(arrival, arrival + queue, first_token, first_token + tpot * generated, generated)
+            )
+        k = rng.range(1, 6)
+        parts = [[] for _ in range(k)]
+        for t in timings:
+            parts[rng.range(0, k)].append(t)
+        slo = SloSpec()
+        direct = SloReport.from_timings(n, timings, slo, 20.0, 0, [])
+        reports = [SloReport.from_timings(len(p), p, slo, 20.0, 0, []) for p in parts]
+        merged = SloReport.merge(reports, slo)
+        assert merged.submitted == direct.submitted
+        assert merged.completed == direct.completed
+        assert merged.generated_tokens == direct.generated_tokens
+        assert merged.makespan_secs == direct.makespan_secs
+        assert merged.throughput == direct.throughput
+        assert merged.goodput == direct.goodput
+        assert merged.slo_attainment == direct.slo_attainment
+        assert merged.ttft_p50 == direct.ttft_p50
+        assert merged.ttft_p99 == direct.ttft_p99
+        assert merged.tpot_p95 == direct.tpot_p95
+        assert merged.latency_p99 == direct.latency_p99
+        assert merged.queue_p99 == direct.queue_p99
+        assert merged.queue_max == direct.queue_max
+        assert abs(merged.queue_mean - direct.queue_mean) <= 1e-9
+
+    check("fleet-merge-partition", 100, merge_partition)
+
+    def tenant_streams(rng):
+        seed = rng.next_u64()
+        rate_a = 0.5 + rng.f64() * 4.0
+        rate_b = 0.5 + rng.f64() * 4.0
+        rate_c = 0.5 + rng.f64() * 4.0
+        horizon = 10.0 + rng.f64() * 20.0
+        envelope = diurnal(horizon, 0.3) if rng.range(0, 2) == 1 else FLAT
+
+        def spec(name, rate):
+            return TenantSpec(name, rate, (16, 64), 8)
+
+        two = WorkloadGen(seed, 512).multi_tenant_split(
+            [spec("alpha", rate_a), spec("beta", rate_b)], horizon, envelope
+        )
+        three = WorkloadGen(seed, 512).multi_tenant_split(
+            [spec("alpha", rate_a), spec("gamma", rate_c), spec("beta", rate_b)], horizon, envelope
+        )
+        for was, now in [(0, 0), (1, 2)]:
+            assert len(two[was]) == len(three[now])
+            for x, y in zip(two[was], three[now]):
+                assert x.arrival == y.arrival
+                assert x.req.prompt == y.req.prompt
+                assert x.req.max_new == y.req.max_new
+
+    check("fleet-tenant-streams", 100, tenant_streams)
+    print("PASS 5 property suites x100 cases")
+
+
+def run_fleet_module_mirrors():
+    m = opt_6_7b()
+    pool = host_pool(m)
+    prices = PriceTable.cloud_2025()
+
+    # heterogeneous fleet under cache-affinity: all hits, no misses
+    systems = [single_gpu_config(24 << 30), single_gpu_config(48 << 30), single_gpu_config(80 << 30)]
+    fleet = Fleet(m, systems, pool, cfg(), CACHE_AFFINITY, 7, prices)
+    assert abs(fleet.cost_per_hour - (0.44 + 1.10 + 2.49)) < 1e-12
+    trace = small_trace(11)
+    fr = fleet.serve(trace)
+    assert fr.replicas == 3
+    assert fr.fleet.submitted == len(trace) and fr.fleet.completed == len(trace)
+    assert fr.fleet.goodput > 0.0 and fr.cost_per_token > 0.0
+    assert fr.session_hits > 0, "trace 11 must have returning turns"
+    assert fr.session_misses == 0
+
+    # affinity prefill discount covers the full history on every turn
+    fleet = Fleet(m, [single_gpu_config(24 << 30)] * 2, pool, cfg(), CACHE_AFFINITY, 0, prices)
+    for sr in small_trace(3):
+        route = fleet.dispatch(sr)
+        assert route.cached_prefix == sr.history_len, (route.cached_prefix, sr.history_len)
+
+    # round-robin spreads within 1 and misses returning turns
+    fleet = Fleet(m, [single_gpu_config(24 << 30)] * 3, pool, cfg(), ROUND_ROBIN, 0, prices)
+    fr = fleet.serve(small_trace(11))
+    assert fr.session_misses > 0, "3-replica cycle must re-prefill some turns"
+    counts = [r.submitted for r in fr.per_replica]
+    assert max(counts) - min(counts) <= 1, counts
+    print("PASS fleet module mirrors (het trace-11, discount trace-3, rr trace-11)")
+
+
+def run_single_replica_equivalence():
+    m = opt_6_7b()
+    pool = host_pool(m)
+    trace = WorkloadGen(5, 2048).poisson(30, 2.0, 16, 64, 8)
+
+    direct = Scheduler(Engine(m, SystemConfig(), pool), cfg())
+    direct.run_trace(trace)
+    dr = direct.report()
+
+    fleet = Fleet(m, [SystemConfig()], pool, cfg(), ROUND_ROBIN, 0, PriceTable.cloud_2025())
+    fr = fleet.serve([SessionRequest.from_timed(tr) for tr in trace])
+    assert fr.replicas == 1
+    fl = fr.per_replica[0]
+
+    assert fl.submitted == dr.submitted and fl.completed == dr.completed
+    assert fl.generated_tokens == dr.generated_tokens
+    assert fl.preemptions == dr.preemptions
+    for field in (
+        "makespan_secs",
+        "throughput",
+        "goodput",
+        "ttft_p50",
+        "ttft_p99",
+        "tpot_p99",
+        "latency_p99",
+        "queue_mean",
+    ):
+        a, b = getattr(fl, field), getattr(dr, field)
+        assert a == b, (field, a, b)
+    assert len(fl.samples) == len(dr.samples)
+    for x, y in zip(fl.samples, dr.samples):
+        assert x.arrival == y.arrival and x.admitted == y.admitted
+        assert x.first_token == y.first_token and x.finished == y.finished
+        assert x.generated == y.generated
+    assert fl.depth_samples == dr.depth_samples
+    print(f"PASS single-replica fleet == direct scheduler bit-for-bit ({dr.completed} reqs, makespan {dr.makespan_secs:.3f}s)")
+
+
+def serve_policy(policy):
+    m = opt_6_7b()
+    fleet = Fleet(
+        m, [single_gpu_config(24 << 30)] * 3, host_pool(m), cfg(), policy, 7, PriceTable.cloud_2025()
+    )
+    return fleet.serve(session_heavy_trace())
+
+
+def run_affinity_duel():
+    affinity = serve_policy(CACHE_AFFINITY)
+    rr = serve_policy(ROUND_ROBIN)
+    assert affinity.cost_per_hour == rr.cost_per_hour
+    assert affinity.fleet.completed == rr.fleet.completed
+    assert affinity.session_misses == 0
+    assert rr.session_misses > 0, "3-replica cycle must miss"
+    assert affinity.fleet.goodput > rr.fleet.goodput, (affinity.fleet.goodput, rr.fleet.goodput)
+    assert affinity.cost_per_token < rr.cost_per_token
+    print(
+        f"PASS affinity duel: goodput {affinity.fleet.goodput:.2f} > {rr.fleet.goodput:.2f} tok/s, "
+        f"$/Mtok {affinity.cost_per_token * 1e6:.3f} < {rr.cost_per_token * 1e6:.3f} "
+        f"(rr misses {rr.session_misses})"
+    )
+    return affinity, rr
+
+
+# ----------------------------------------------------------------- golden
+
+
+def mix_from(j):
+    return j["seed"], SessionMix(
+        j["sessions"],
+        j["session_rate"],
+        tuple(j["turns"]),
+        tuple(j["first_prompt"]),
+        tuple(j["turn_tokens"]),
+        j["gen"],
+        j["think_secs"],
+    )
+
+
+def serve_cell(model, cell, policy):
+    systems = [single_gpu_config(gb << 30) for gb in cell["memories_gb"]]
+    fleet = Fleet(model, systems, host_pool(model), cfg(), policy, cell["seed"], PriceTable.cloud_2025())
+    mix_seed, mix = mix_from(cell["mix"])
+    trace = WorkloadGen(mix_seed, 2048).session_trace(mix)
+    return fleet.serve(trace)
+
+
+def measured(golden):
+    assert golden["model"] == "opt-6.7b", golden["model"]
+    m = opt_6_7b()
+    out = []
+
+    tr = golden["single"]["trace"]
+    trace = WorkloadGen(tr["seed"], 2048).poisson(
+        tr["n"], tr["rate"], tr["prompt_lo"], tr["prompt_hi"], tr["gen"]
+    )
+    sched = Scheduler(Engine(m, SystemConfig(), host_pool(m)), cfg())
+    sched.run_trace(trace)
+    rep = sched.report()
+    for key, value in [("throughput", rep.throughput), ("goodput", rep.goodput), ("ttft_p99", rep.ttft_p99)]:
+        out.append((f"single.{key}", value, golden["single"][key]))
+
+    het = golden["het_cell"]
+    fr = serve_cell(m, het, het["policy"])
+    for key, value in [
+        ("goodput", fr.fleet.goodput),
+        ("ttft_p99", fr.fleet.ttft_p99),
+        ("cost_per_token", fr.cost_per_token),
+    ]:
+        out.append((f"het_cell.{key}", value, het[key]))
+
+    duel = golden["policy_duel"]
+    for policy in (CACHE_AFFINITY, ROUND_ROBIN):
+        fr = serve_cell(m, duel, policy)
+        out.append((f"policy_duel.goodput.{policy}", fr.fleet.goodput, duel["goodput"][policy]))
+    return out
+
+
+def run_golden(update):
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    triples = measured(golden)
+    if update:
+        values = {name: v for name, v, _ in triples}
+        for key in ("throughput", "goodput", "ttft_p99"):
+            golden["single"][key] = values[f"single.{key}"]
+        for key in ("goodput", "ttft_p99", "cost_per_token"):
+            golden["het_cell"][key] = values[f"het_cell.{key}"]
+        golden["policy_duel"]["goodput"] = {
+            CACHE_AFFINITY: values[f"policy_duel.goodput.{CACHE_AFFINITY}"],
+            ROUND_ROBIN: values[f"policy_duel.goodput.{ROUND_ROBIN}"],
+        }
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(golden, f, indent=2)
+            f.write("\n")
+        print(f"golden rewritten: {os.path.normpath(GOLDEN_PATH)}")
+        for name, v, _ in triples:
+            print(f"  {name} = {v!r}")
+        return
+    tol = golden["tolerance"]
+    worst = 0.0
+    for name, value, pinned in triples:
+        rel = abs((value - pinned) / pinned) if pinned != 0.0 else abs(value)
+        worst = max(worst, rel)
+        assert rel <= tol, f"{name}: measured {value} vs golden {pinned} (rel {rel:.6f} > {tol})"
+    aff = golden["policy_duel"]["goodput"][CACHE_AFFINITY]
+    rr = golden["policy_duel"]["goodput"][ROUND_ROBIN]
+    assert aff > rr, "pinned duel must keep cache-affinity ahead"
+    print(f"PASS golden fleet cells within {tol} (worst rel err {worst:.2e})")
+
+
+def main():
+    update = "--update-golden" in sys.argv
+    run_router_units()
+    run_price_units()
+    auto = run_autoscaler_units()
+    run_workload_lln()
+    run_property_suites(auto)
+    run_fleet_module_mirrors()
+    run_single_replica_equivalence()
+    run_affinity_duel()
+    # heterogeneous autoscaler (the fleet_sweep example + the monotone
+    # property's fixture): best grid must score on all three memory tiers
+    het_auto = Autoscaler(
+        opt_6_7b(),
+        [
+            ("24g", single_gpu_config(24 << 30)),
+            ("48g", single_gpu_config(48 << 30)),
+            ("80g", single_gpu_config(80 << 30)),
+        ],
+        PriceTable.cloud_2025(),
+        Workload(8, 64, 8),
+    )
+    for s in het_auto.scores:
+        assert s.tokens_per_sec > 0.0, s.label
+    print(
+        "PASS het autoscaler: "
+        + ", ".join(f"{s.label} {s.tokens_per_sec:.1f} tok/s ${s.cost_per_token * 1e6:.3f}/Mtok" for s in het_auto.scores)
+        + f" -> best {het_auto.best().label}"
+    )
+    run_golden(update)
+    print("fleet mirror: ALL CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -621,6 +621,12 @@ class Timeline:
     def makespan(self):
         return self._makespan
 
+    def advance_to(self, t):
+        """Mirror of pcie::Timeline::advance_to: fast-forward every lane's
+        free time to `t` (idle gap, busy untouched)."""
+        self.lane_free = [max(lf, t) for lf in self.lane_free]
+        self._makespan = max(self._makespan, t)
+
     def busy_on(self, d, lane):
         return self.busy[d * 2 + lane]
 
