@@ -1,0 +1,80 @@
+//! Joint-autotuner sweep — tuned plan vs the single-axis heuristics
+//! (baseline, schedule-only `Auto`, split-only memory-weighted) across
+//! uniform and skewed TP×PP grids, with the tuner's pick per cell.
+//!
+//! The margin column is simulated throughput of the tuned plan over the
+//! best single-axis heuristic: 0% where the joint search agrees with a
+//! point heuristic, positive where only the joint space reaches the
+//! winner (the golden OPT-66B skewed 2×4 cell wins on the chunk-count
+//! axis).
+
+use hybridserve::config::{AutotuneConfig, LayerSplit, SchedulePolicy, SystemConfig};
+use hybridserve::harness::FigureTable;
+use hybridserve::plan::autotune::tune;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::ModelConfig;
+
+fn main() {
+    let mut table = FigureTable::new(
+        "autotune_sweep",
+        &[
+            "model", "grid", "skew", "baseline", "sched_only", "split_only", "autotuned",
+            "margin", "pick",
+        ],
+    );
+    let wl = Workload {
+        batch: 256,
+        prompt: 256,
+        gen: 128,
+    };
+    let at = AutotuneConfig {
+        batch: wl.batch,
+        prompt: wl.prompt,
+        gen: wl.gen,
+    };
+    for m in [ModelConfig::opt_30b(), ModelConfig::opt_66b()] {
+        for (tp, pp) in [(2usize, 2usize), (2, 4)] {
+            for skewed in [false, true] {
+                let base_sys = SystemConfig::paper_testbed_grid(tp, pp);
+                let sys = if skewed {
+                    SystemConfig::with_topology(
+                        base_sys.topology.with_stage_memory(pp - 1, 80 << 30),
+                    )
+                } else {
+                    base_sys
+                };
+                let t = |s: SystemConfig| {
+                    simulate(&m, &s, System::HybridServe(PolicyConfig::full()), wl).throughput
+                };
+                let base = t(sys.clone());
+                let sched = t(sys.clone().with_schedule(SchedulePolicy::Auto));
+                let split = t(sys.clone().with_layer_split(LayerSplit::MemoryWeighted));
+                let tuned = t(sys.clone().with_autotune(at));
+                let best_single = base.max(sched).max(split);
+                let rep = tune(&m, &sys, at);
+                table.row(vec![
+                    m.name.clone(),
+                    format!("{tp}x{pp}"),
+                    if skewed {
+                        format!("stage{} 80G", pp - 1)
+                    } else {
+                        "uniform".into()
+                    },
+                    format!("{base:.1}"),
+                    format!("{sched:.1}"),
+                    format!("{split:.1}"),
+                    format!("{tuned:.1}"),
+                    format!("{:+.2}%", (tuned / best_single - 1.0) * 100.0),
+                    format!(
+                        "{}/{}/c{}",
+                        rep.winner.layer_split.name(),
+                        rep.winner.schedule.name(),
+                        rep.winner.chunks
+                    ),
+                ]);
+            }
+        }
+    }
+    table.emit();
+}

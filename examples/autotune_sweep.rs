@@ -1,0 +1,91 @@
+//! Joint plan autotuner sweep (ISSUE 7): enumerate the tuner's full
+//! candidate table on the golden OPT-66B skewed 24/80 GB grid, then
+//! compare the winner against every single-axis heuristic in the
+//! event-driven simulator across a few workloads.
+//!
+//! Two views:
+//!  * candidates — every (split rule, schedule, chunk count) point with
+//!    its analytic score at the golden workload, winner marked;
+//!  * margins — simulated throughput of the baseline plan, the
+//!    schedule-only and split-only heuristics, and the autotuned plan,
+//!    per workload, with the autotuned margin over the best single-axis
+//!    pick. At the golden point the win is the chunk-count axis
+//!    (chunks = 3, which schedule-only Auto never tries).
+//!
+//! Run with `cargo run --release --example autotune_sweep`.
+
+use hybridserve::config::{AutotuneConfig, LayerSplit, ModelConfig, SchedulePolicy, SystemConfig};
+use hybridserve::harness::FigureTable;
+use hybridserve::plan::autotune::tune;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+
+fn hybrid() -> System {
+    System::HybridServe(PolicyConfig::full())
+}
+
+fn main() {
+    let m = ModelConfig::opt_66b();
+    // the golden grid: tp=2, pp=4, stage 3 on 80 GB cards, rest 24 GB
+    let sys = SystemConfig::with_topology(
+        SystemConfig::paper_testbed_grid(2, 4)
+            .topology
+            .with_stage_memory(3, 80 << 30),
+    );
+
+    // --- the tuner's candidate table at the golden workload
+    let at = AutotuneConfig {
+        batch: 256,
+        prompt: 256,
+        gen: 128,
+    };
+    let rep = tune(&m, &sys, at);
+    let mut table = FigureTable::new(
+        "autotune_candidates",
+        &["split", "schedule", "chunks", "score", "winner"],
+    );
+    for c in &rep.candidates {
+        table.row(vec![
+            c.layer_split.name().into(),
+            c.schedule.name().into(),
+            format!("{}", c.chunks),
+            format!("{:.2}", c.score),
+            if *c == rep.winner { "<--".into() } else { String::new() },
+        ]);
+    }
+    table.emit();
+
+    // --- simulated margins over the single-axis heuristics
+    let mut margins = FigureTable::new(
+        "autotune_margins",
+        &["workload", "baseline", "sched_only", "split_only", "autotuned", "margin"],
+    );
+    for (batch, prompt, gen) in [(256, 256, 128), (64, 512, 32), (128, 512, 128)] {
+        let wl = Workload { batch, prompt, gen };
+        let at = AutotuneConfig { batch, prompt, gen };
+        let t = |s: SystemConfig| simulate(&m, &s, hybrid(), wl).throughput;
+        let base = t(sys.clone());
+        let sched = t(sys.clone().with_schedule(SchedulePolicy::Auto));
+        let split = t(sys.clone().with_layer_split(LayerSplit::MemoryWeighted));
+        let tuned = t(sys.clone().with_autotune(at));
+        let best_single = base.max(sched).max(split);
+        margins.row(vec![
+            format!("B={batch} p={prompt} g={gen}"),
+            format!("{base:.1}"),
+            format!("{sched:.1}"),
+            format!("{split:.1}"),
+            format!("{tuned:.1}"),
+            format!("{:+.2}%", (tuned / best_single - 1.0) * 100.0),
+        ]);
+    }
+    margins.emit();
+
+    let w = rep.winner;
+    println!(
+        "winner on the skewed grid: {} / {} with {} in-flight chunks (score {:.2})",
+        w.layer_split.name(),
+        w.schedule.name(),
+        w.chunks,
+        w.score,
+    );
+}

@@ -12,5 +12,8 @@ mod system;
 mod topology;
 
 pub use model::{Dtype, ModelConfig};
-pub use system::{GpuSpec, HostSpec, InterconnectSpec, SchedulePolicy, ShardSpec, SystemConfig};
+pub use system::{
+    AutotuneConfig, GpuSpec, HostSpec, InterconnectSpec, LayerSplit, SchedulePolicy, ShardSpec,
+    SystemConfig,
+};
 pub use topology::{CollectiveSpec, DeviceSlot, StageLinkSpec, Topology};

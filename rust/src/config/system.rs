@@ -203,6 +203,46 @@ pub enum SchedulePolicy {
     Auto,
 }
 
+/// How the planner splits decoder layers across pipeline stages.
+///
+/// `CountBalanced` is the historical ceil-balance (layer counts as equal
+/// as possible, remainder front-loaded). `MemoryWeighted` apportions
+/// layers proportionally to each stage's weight-residency budget (min
+/// over the stage's devices), so on a mixed 24/80 GB grid the big-memory
+/// stage absorbs more layers and the starved stage stops pacing the
+/// weight stream. On memory-uniform grids the two are identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSplit {
+    /// Historical count-balanced ceil split (the default).
+    CountBalanced,
+    /// Layers proportional to per-stage weight-residency budgets.
+    MemoryWeighted,
+}
+
+impl LayerSplit {
+    /// Stable lowercase name for reports and golden files.
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerSplit::CountBalanced => "count_balanced",
+            LayerSplit::MemoryWeighted => "memory_weighted",
+        }
+    }
+}
+
+/// Workload the joint plan autotuner scores candidates at
+/// ([`crate::plan::autotune`]). Unlike `choose_schedule`'s fixed golden
+/// probe, this is the *actual* workload the caller will run, so the
+/// tuner's pick is specific to it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutotuneConfig {
+    /// Concurrent requests per pipeline pass.
+    pub batch: usize,
+    /// Prompt tokens per request.
+    pub prompt: usize,
+    /// Generated tokens per request.
+    pub gen: usize,
+}
+
 /// Full system configuration used by the engine and the simulator.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -231,6 +271,15 @@ pub struct SystemConfig {
     /// Requested pipeline micro-batch schedule (`pp > 1` only; see
     /// [`SchedulePolicy`]). Defaults to the historical `LayerMajor`.
     pub schedule: SchedulePolicy,
+    /// How the planner splits layers across stages (see [`LayerSplit`]).
+    /// Defaults to the historical count-balanced split.
+    pub layer_split: LayerSplit,
+    /// When set, `PlanBuilder` runs the joint plan autotuner
+    /// ([`crate::plan::autotune`]) at this workload and lowers the
+    /// winning (schedule, layer split, chunk count) instead of the point
+    /// heuristics. `None` (the default) keeps every historical plan
+    /// bit-for-bit.
+    pub autotune: Option<AutotuneConfig>,
 }
 
 impl SystemConfig {
@@ -246,6 +295,8 @@ impl SystemConfig {
             gpu_weight_fraction: 0.5,
             gpu_buffer_fraction: 0.25,
             schedule: SchedulePolicy::LayerMajor,
+            layer_split: LayerSplit::CountBalanced,
+            autotune: None,
         }
     }
 
@@ -317,6 +368,8 @@ impl SystemConfig {
             gpu_weight_fraction: 0.5,
             gpu_buffer_fraction: 0.25,
             schedule: SchedulePolicy::LayerMajor,
+            layer_split: LayerSplit::CountBalanced,
+            autotune: None,
         }
     }
 
@@ -324,6 +377,22 @@ impl SystemConfig {
     /// (builder style — `paper_testbed_grid(2, 4).with_schedule(...)`).
     pub fn with_schedule(mut self, schedule: SchedulePolicy) -> Self {
         self.schedule = schedule;
+        self
+    }
+
+    /// This config with a different layer-split rule (builder style).
+    pub fn with_layer_split(mut self, layer_split: LayerSplit) -> Self {
+        self.layer_split = layer_split;
+        self
+    }
+
+    /// This config with the joint plan autotuner enabled at `workload`
+    /// (builder style). Plan lowering then searches schedule × layer
+    /// split × chunk count jointly through the analytic sampler at this
+    /// workload instead of applying the point heuristics; `schedule` and
+    /// `layer_split` requests are ignored in favor of the search.
+    pub fn with_autotune(mut self, workload: AutotuneConfig) -> Self {
+        self.autotune = Some(workload);
         self
     }
 
@@ -468,6 +537,30 @@ mod tests {
             s.with_schedule(SchedulePolicy::LayerMajor),
             SystemConfig::paper_testbed_grid(2, 4)
         );
+    }
+
+    #[test]
+    fn autotune_and_layer_split_default_off_and_build() {
+        // Pre-autotuner configs are value-identical: both knobs default
+        // to the historical behavior in every constructor.
+        let base = SystemConfig::paper_testbed_grid(2, 2);
+        assert_eq!(base.layer_split, LayerSplit::CountBalanced);
+        assert_eq!(base.autotune, None);
+        assert_eq!(SystemConfig::tiny_testbed().autotune, None);
+        let wl = AutotuneConfig {
+            batch: 64,
+            prompt: 512,
+            gen: 32,
+        };
+        let tuned = SystemConfig::paper_testbed_grid(2, 2).with_autotune(wl);
+        assert_eq!(tuned.autotune, Some(wl));
+        let split = SystemConfig::paper_testbed_grid(2, 2).with_layer_split(LayerSplit::MemoryWeighted);
+        assert_eq!(split.layer_split, LayerSplit::MemoryWeighted);
+        // the builders only touch their own field
+        let mut undo = tuned.clone();
+        undo.autotune = None;
+        assert_eq!(undo, base);
+        assert_eq!(split.with_layer_split(LayerSplit::CountBalanced), base);
     }
 
     #[test]

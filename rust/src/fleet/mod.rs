@@ -111,23 +111,38 @@ impl Fleet {
     }
 
     /// Route one arrival: pump every replica up to the arrival instant
-    /// (so loads and clocks are current), ask the router for a placement,
-    /// strip the cached prefix on a session hit, submit, and record the
-    /// new residency.
+    /// (so loads and clocks are current), ask the router for a placement
+    /// with the owner replica's LIVE session census (the router's own
+    /// `cached_tokens` hint may be stale — the owner may have aged the
+    /// residency out of its pool since), strip the cached prefix on a
+    /// session hit, submit, and record the new residency on both sides.
     pub fn dispatch(&mut self, sr: &SessionRequest) -> Result<Route> {
         for r in &mut self.replicas {
             r.pump(sr.arrival)?;
         }
         let loads: Vec<usize> = self.replicas.iter().map(|r| r.load()).collect();
-        let route = self.router.route(sr.session, sr.history_len, &loads);
+        let census = self
+            .router
+            .sessions()
+            .owner(sr.session)
+            .filter(|e| e.replica < self.replicas.len())
+            .map(|e| {
+                self.replicas[e.replica]
+                    .session_cached_tokens(sr.session)
+                    .unwrap_or(0)
+            });
+        let route = self
+            .router
+            .route_with_census(sr.session, sr.history_len, &loads, census);
         debug_assert!(sr.history_len < sr.req.prompt.len(), "a turn adds new tokens");
         let prompt = sr.req.prompt[route.cached_prefix..].to_vec();
         let req = Request::new(sr.req.id, prompt, sr.req.max_new);
         self.replicas[route.replica].submit(req, sr.arrival)?;
         // After serving, the replica holds this turn's full context plus
         // its reply — the prefix the session's NEXT turn can reuse.
-        self.router
-            .record(sr.session, route.replica, sr.req.prompt.len() + sr.req.max_new);
+        let retained = sr.req.prompt.len() + sr.req.max_new;
+        self.replicas[route.replica].note_session(sr.session, retained);
+        self.router.record(sr.session, route.replica, retained);
         Ok(route)
     }
 

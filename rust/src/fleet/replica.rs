@@ -2,8 +2,11 @@
 //! [`AnalyticEngine`], carrying its own grid ([`SystemConfig`] /
 //! `Topology` / `MemoryPlan`) so a fleet can mix 24/48/80 GB devices.
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
+use crate::cache::BlockSizes;
 use crate::config::{ModelConfig, SystemConfig};
 use crate::engine::Request;
 use crate::metrics::SloReport;
@@ -22,6 +25,15 @@ pub struct Replica {
     pub hourly: f64,
     sys: SystemConfig,
     sched: Scheduler<AnalyticEngine>,
+    /// Live per-session retained-context census: (tokens, last-served
+    /// stamp). Bounded by what the host pool can actually hold — the
+    /// router consults this instead of trusting its own stale hints.
+    sessions: HashMap<u64, (usize, u64)>,
+    session_clock: u64,
+    retained_tokens: usize,
+    /// Context tokens the replica's host pool can retain (worst-case
+    /// all-KV blocks).
+    token_capacity: usize,
 }
 
 impl Replica {
@@ -33,11 +45,17 @@ impl Replica {
         cfg: SchedConfig,
     ) -> Self {
         let eng = AnalyticEngine::new(model, &sys, host_cache_bytes);
+        let sizes = BlockSizes::new(model, sys.block_tokens);
+        let token_capacity = host_cache_bytes / sizes.kv_bytes.max(1) * sizes.block_tokens;
         Self {
             id,
             hourly: 0.0,
             sys,
             sched: Scheduler::new(eng, cfg),
+            sessions: HashMap::new(),
+            session_clock: 0,
+            retained_tokens: 0,
+            token_capacity,
         }
     }
 
@@ -101,5 +119,66 @@ impl Replica {
     /// The underlying scheduler (equivalence tests and introspection).
     pub fn scheduler(&self) -> &Scheduler<AnalyticEngine> {
         &self.sched
+    }
+
+    /// Record that this replica now retains `tokens` of context for
+    /// `session` (called by the fleet after dispatching a turn here).
+    /// The census is bounded by the host pool's token capacity: once the
+    /// retained total overflows, the least-recently-served sessions age
+    /// out first — the residency a real cache would reclaim first. The
+    /// turn just served is never the one aged out.
+    pub fn note_session(&mut self, session: u64, tokens: usize) {
+        let touch = self.session_clock;
+        self.session_clock += 1;
+        let old = self.sessions.insert(session, (tokens, touch));
+        self.retained_tokens = self.retained_tokens - old.map_or(0, |(t, _)| t) + tokens;
+        while self.retained_tokens > self.token_capacity && self.sessions.len() > 1 {
+            let oldest = self
+                .sessions
+                .iter()
+                .min_by_key(|(_, &(_, touch))| touch)
+                .map(|(&k, _)| k)
+                .expect("non-empty census");
+            if let Some((t, _)) = self.sessions.remove(&oldest) {
+                self.retained_tokens -= t;
+            }
+        }
+    }
+
+    /// Live cached-context token count this replica still holds for
+    /// `session` (`None` once the residency aged out of the pool).
+    pub fn session_cached_tokens(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).map(|&(t, _)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::single_gpu_config;
+    use crate::metrics::SloSpec;
+
+    #[test]
+    fn census_ages_out_lru_when_the_pool_overflows() {
+        let m = ModelConfig::opt_6_7b();
+        let sizes = BlockSizes::new(&m, 16);
+        let pool = 4 * sizes.kv_bytes; // room for 4 blocks = 64 tokens
+        let cfg = SchedConfig {
+            max_running: 4,
+            preemption: true,
+            slo: SloSpec::default(),
+        };
+        let mut r = Replica::new(0, &m, single_gpu_config(24 << 30), pool, cfg);
+        r.note_session(1, 40);
+        r.note_session(2, 40); // 80 > 64: session 1 ages out
+        assert_eq!(r.session_cached_tokens(1), None);
+        assert_eq!(r.session_cached_tokens(2), Some(40));
+        // re-noting replaces, never double-counts
+        r.note_session(2, 50);
+        assert_eq!(r.session_cached_tokens(2), Some(50));
+        // an oversized single session is kept: it is being served here
+        r.note_session(3, 1000);
+        r.note_session(3, 1000);
+        assert_eq!(r.session_cached_tokens(3), Some(1000));
     }
 }

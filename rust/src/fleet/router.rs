@@ -39,35 +39,91 @@ pub struct SessionEntry {
     pub cached_tokens: usize,
 }
 
+/// A table slot: the entry plus its last-recorded stamp (the eviction
+/// order — unique per record, so eviction is deterministic).
+#[derive(Debug, Clone, Copy)]
+struct SessionSlot {
+    entry: SessionEntry,
+    touch: u64,
+}
+
 /// Session → owning-replica map. One conversation has exactly one owner:
 /// routing a turn elsewhere moves ownership (the old residency is dead
 /// weight that ages out; the model here keeps only the latest placement,
 /// which is what the affinity policy needs).
-#[derive(Debug, Clone, Default)]
+///
+/// The map is CAPACITY-BOUNDED: a million-user trace used to grow it
+/// without limit (it only ever shrank on [`SessionTable::evict_replica`]).
+/// Recording a session beyond capacity now evicts the
+/// least-recently-recorded one first — the session least likely to still
+/// hold live residency anywhere. Losing an entry only costs a re-prefill
+/// on that session's next turn; it never affects correctness.
+#[derive(Debug, Clone)]
 pub struct SessionTable {
-    map: HashMap<u64, SessionEntry>,
+    map: HashMap<u64, SessionSlot>,
+    capacity: usize,
+    clock: u64,
+}
+
+impl Default for SessionTable {
+    fn default() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
 }
 
 impl SessionTable {
-    pub fn owner(&self, session: u64) -> Option<SessionEntry> {
-        self.map.get(&session).copied()
+    /// Default session bound: comfortably above any live conversation set
+    /// a single router serves, small enough that a long trace cannot grow
+    /// the table without bound.
+    pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity >= 1, "session table needs room for one session");
+        Self {
+            map: HashMap::new(),
+            capacity,
+            clock: 0,
+        }
     }
 
-    /// Record that `session`'s context now lives on `replica`.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn owner(&self, session: u64) -> Option<SessionEntry> {
+        self.map.get(&session).map(|s| s.entry)
+    }
+
+    /// Record that `session`'s context now lives on `replica`, evicting
+    /// the least-recently-recorded session if the table is full.
     pub fn record(&mut self, session: u64, replica: usize, cached_tokens: usize) {
+        let touch = self.clock;
+        self.clock += 1;
         self.map.insert(
             session,
-            SessionEntry {
-                replica,
-                cached_tokens,
+            SessionSlot {
+                entry: SessionEntry {
+                    replica,
+                    cached_tokens,
+                },
+                touch,
             },
         );
+        while self.map.len() > self.capacity {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.touch)
+                .map(|(&k, _)| k)
+                .expect("non-empty over-capacity map");
+            self.map.remove(&oldest);
+        }
     }
 
     /// Drop every session owned by `replica` (scale-down: its cache is
     /// gone, so returning turns must re-prefill elsewhere).
     pub fn evict_replica(&mut self, replica: usize) {
-        self.map.retain(|_, e| e.replica != replica);
+        self.map.retain(|_, s| s.entry.replica != replica);
     }
 
     pub fn len(&self) -> usize {
@@ -155,6 +211,27 @@ impl Router {
     /// [`RoutePolicy::CacheAffinity`] steers returning turns to the
     /// owner, which is why it wins on session-heavy traces.
     pub fn route(&mut self, session: u64, history_len: usize, loads: &[usize]) -> Route {
+        self.route_with_census(session, history_len, loads, None)
+    }
+
+    /// [`Router::route`] with the owner replica's LIVE cache census for
+    /// this session: `owner_census` is how many context tokens the owner
+    /// actually still holds (`Some(0)` when it demoted or evicted them),
+    /// or `None` when the caller has no census and the table entry is
+    /// trusted as-is. The table's `cached_tokens` is a routing hint
+    /// recorded at dispatch time — the owner may have long since demoted
+    /// the blocks, and discounting the prompt by a stale hint would skip
+    /// prefill work nobody saved. The discount is therefore the minimum
+    /// of hint, census and history. Tie-break rng draws are identical to
+    /// [`Router::route`], so mixing the two entry points never perturbs
+    /// seeded routing streams.
+    pub fn route_with_census(
+        &mut self,
+        session: u64,
+        history_len: usize,
+        loads: &[usize],
+        owner_census: Option<usize>,
+    ) -> Route {
         let n = loads.len();
         assert!(n > 0, "routing into an empty fleet");
         let owner = self.sessions.owner(session).filter(|e| e.replica < n);
@@ -171,7 +248,10 @@ impl Router {
             },
         };
         let cached_prefix = match owner {
-            Some(e) if e.replica == replica => e.cached_tokens.min(history_len),
+            Some(e) if e.replica == replica => {
+                let live = owner_census.unwrap_or(e.cached_tokens);
+                e.cached_tokens.min(live).min(history_len)
+            }
             _ => 0,
         };
         if history_len > 0 {
@@ -262,6 +342,53 @@ mod tests {
         let third = r.route(7, 64, &[0, 0]);
         assert_eq!(third.replica, 0);
         assert_eq!(third.cached_prefix, 0, "owner is 1, pick was 0");
+    }
+
+    #[test]
+    fn session_table_is_capacity_bounded() {
+        // Regression: the map only ever shrank on evict_replica, so a
+        // long many-user trace grew it without bound.
+        let mut t = SessionTable::with_capacity(4);
+        for s in 0..100u64 {
+            t.record(s, 0, 10);
+            assert!(t.len() <= 4, "len {} at session {s}", t.len());
+        }
+        // least-recently-recorded evicted first: the last 4 survive
+        for s in 96..100u64 {
+            assert!(t.owner(s).is_some(), "session {s} must survive");
+        }
+        assert!(t.owner(0).is_none());
+        // re-recording refreshes recency
+        let mut t = SessionTable::with_capacity(2);
+        t.record(1, 0, 10);
+        t.record(2, 0, 10);
+        t.record(1, 0, 11); // touch 1 again
+        t.record(3, 0, 10); // evicts 2, the stalest
+        assert!(t.owner(1).is_some());
+        assert!(t.owner(2).is_none());
+        assert!(t.owner(3).is_some());
+        // the default table is bounded too
+        assert_eq!(SessionTable::default().capacity(), SessionTable::DEFAULT_CAPACITY);
+    }
+
+    #[test]
+    fn census_caps_a_stale_prefix_discount() {
+        let mut r = Router::new(RoutePolicy::CacheAffinity, 0);
+        let first = r.route(9, 0, &[0, 0]);
+        r.record(9, first.replica, 100);
+        // the owner demoted down to 40 live context tokens: the table's
+        // 100-token hint must not discount more than the census
+        let route = r.route_with_census(9, 80, &[0, 0], Some(40));
+        assert_eq!(route.replica, first.replica);
+        assert_eq!(route.cached_prefix, 40);
+        assert_eq!(r.session_hits(), 1);
+        // a fully evicted owner means a full re-prefill — a miss
+        let route = r.route_with_census(9, 80, &[0, 0], Some(0));
+        assert_eq!(route.cached_prefix, 0);
+        assert_eq!(r.session_misses(), 1);
+        // None census trusts the table (the historical behavior)
+        let route = r.route_with_census(9, 80, &[0, 0], None);
+        assert_eq!(route.cached_prefix, 80);
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! Joint plan autotuner: schedule × layer split × chunk count × per-stage
+//! cache mix, searched together through the analytic sampler (ROADMAP
+//! item "joint plan autotuner"; in the spirit of the analytical framework
+//! in *Understanding Bottlenecks for Serving LLM Inference With KV
+//! Offloading*, PAPERS.md).
+//!
+//! Before this module every plan axis was a point heuristic decided in
+//! isolation:
+//!
+//! * the schedule came from [`super::choose_schedule`]'s probe at a FIXED
+//!   golden workload (B=64 / prompt 512 / gen 32) regardless of what the
+//!   caller actually runs;
+//! * the layer split was ceil-balanced by COUNT, so a mixed 24/80 GB grid
+//!   paces its weight stream at the starved small-memory stage while the
+//!   big stage idles fully resident;
+//! * the chunk-major lowering always kept `pp` chunks in flight, paying
+//!   `pp` duplicated weight streams even when fewer chunks close most of
+//!   the bubble;
+//! * the ACT:KV mix was solved per stage by Algorithm 1, but against
+//!   whatever plan the other three heuristics produced.
+//!
+//! [`tune`] enumerates the joint space — layer split
+//! ([`LayerSplit::CountBalanced`] vs [`memory_weighted_split`]) ×
+//! schedule (layer-major, or chunk-major with an in-flight chunk count
+//! scanned from 2 to `pp`) — lowers each candidate through the same
+//! back half of `PlanBuilder::build`, and scores it with
+//! [`score_plan`]: an analytic decode-step model built from the
+//! per-stage fitted cost lines ([`CostModel::analytic_for_stage`]) and
+//! the per-stage Algorithm 1 mixes ([`stage_cache_allocations`]) at the
+//! *caller's* workload ([`AutotuneConfig`]), not the golden probe. The
+//! winner's plan is what `PlanBuilder` returns when
+//! `SystemConfig::with_autotune` is set; ties keep the first enumerated
+//! candidate, which is the historical (count-balanced, layer-major)
+//! plan, so the opt-in can only ever deviate when the score strictly
+//! improves.
+//!
+//! The scoring model is deliberately cheap — per candidate it runs the
+//! linear-fit sampler once per stage and evaluates a handful of closed
+//! forms, never the event-driven simulator — so searching the full space
+//! costs less than one `sim::simulate` call. Candidates are lowered with
+//! [`super::lower`] directly (never `ExecutionPlan::for_system`), so the
+//! search cannot recurse into itself through plan lowering.
+
+use crate::config::{AutotuneConfig, LayerSplit, ModelConfig, SystemConfig};
+use crate::policy::{stage_cache_allocations, BlockRatio, CostModel, PolicyConfig};
+
+use super::{count_balanced_split, lower, ExecutionPlan, PipelineSchedule};
+
+/// Same clamp as Algorithm 1's bubble guard: a bubble of exactly 1 would
+/// divide the GPU lane by zero.
+const MAX_BUBBLE: f64 = 1.0 - 1e-9;
+
+/// One scored point of the joint search space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    /// The candidate's pipeline schedule.
+    pub schedule: PipelineSchedule,
+    /// The candidate's layer-split rule.
+    pub layer_split: LayerSplit,
+    /// In-flight chunk count the candidate runs (1 under layer-major).
+    pub chunks: usize,
+    /// Analytic decode throughput in tokens/s ([`score_plan`]).
+    pub score: f64,
+}
+
+/// The tuner's full result: the winning lowered plan plus every scored
+/// candidate (for sweeps, tests and reports).
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// The winning candidate's lowered plan — what `PlanBuilder` returns.
+    pub plan: ExecutionPlan,
+    /// The winning point of the search space.
+    pub winner: Candidate,
+    /// Every candidate in enumeration order (historical plan first).
+    pub candidates: Vec<Candidate>,
+}
+
+/// Memory-weighted layer split: layers apportioned proportionally to each
+/// stage's weight-residency budget — the pacing (smallest) device budget
+/// of the stage's TP group — by largest remainder, remainder ties going
+/// to the earlier stage. On a memory-uniform grid every budget is equal,
+/// the quotas all share one fractional part, and the result is exactly
+/// the historical count-balanced split (remainder front-loaded); on a
+/// skewed grid the big-memory stage absorbs layers until both stages
+/// stream comparable fractions instead of the small stage pacing the rig.
+///
+/// Every stage keeps at least one layer (a zero-quota stage borrows from
+/// the largest), and an all-zero budget grid falls back to the count
+/// split.
+pub fn memory_weighted_split(model: &ModelConfig, sys: &SystemConfig) -> Vec<usize> {
+    let (tp, pp) = (sys.topology.tp, sys.topology.pp);
+    let nl = model.num_layers;
+    if pp <= 1 {
+        return vec![nl];
+    }
+    let budget: Vec<usize> = (0..pp)
+        .map(|s| {
+            (s * tp..(s + 1) * tp)
+                .map(|d| {
+                    (sys.topology.slot(d).gpu.memory_bytes as f64 * sys.gpu_weight_fraction)
+                        as usize
+                })
+                .min()
+                .unwrap_or(0)
+        })
+        .collect();
+    let total: usize = budget.iter().sum();
+    if total == 0 {
+        return count_balanced_split(nl, pp);
+    }
+    let quota: Vec<f64> = budget
+        .iter()
+        .map(|&b| nl as f64 * b as f64 / total as f64)
+        .collect();
+    let mut counts: Vec<usize> = quota.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut order: Vec<usize> = (0..pp).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quota[a] - quota[a].floor();
+        let fb = quota[b] - quota[b].floor();
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    for &s in order.iter().take(nl - assigned) {
+        counts[s] += 1;
+    }
+    // No stage may lower empty (the plan asserts nl >= pp, so the
+    // largest stage always has a layer to spare).
+    while let Some(zero) = counts.iter().position(|&c| c == 0) {
+        let largest = (0..pp).max_by_key(|&s| counts[s]).expect("pp >= 1");
+        counts[largest] -= 1;
+        counts[zero] += 1;
+    }
+    counts
+}
+
+/// The split a [`LayerSplit`] rule produces for this (model, system).
+pub fn split_counts(model: &ModelConfig, sys: &SystemConfig, rule: LayerSplit) -> Vec<usize> {
+    match rule {
+        LayerSplit::CountBalanced => count_balanced_split(model.num_layers, sys.topology.pp),
+        LayerSplit::MemoryWeighted => memory_weighted_split(model, sys),
+    }
+}
+
+/// Analytic decode throughput (tokens/s) of `plan` at `workload` — the
+/// tuner's objective.
+///
+/// Per decode step every request generates one token. The ACT:KV mix is
+/// searched jointly with the plan: every stage proposes the allocation
+/// Algorithm 1 chooses for its own cost model and residency
+/// ([`stage_cache_allocations`] with [`AllocationInputs::for_stage`]
+/// inputs), but a block's designation is GLOBAL — one ratio serves the
+/// whole pipeline — so each proposal is priced applied to every stage
+/// and the best-scoring designation wins. (Pricing each stage at its own
+/// private mix would credit the plan with a cache the runtime cannot
+/// express — a big-memory stage's all-KV proposal then drowns every
+/// other axis in fictional KV traffic.)
+///
+/// Per stage `s`, under a candidate designation, the model prices two
+/// lanes over the stage's layers:
+///
+/// * **GPU lane** — recomputing the step's ACT blocks
+///   (`kv_gen` line of [`CostModel::analytic_for_stage`]) plus the decode
+///   GEMV's weight-panel read from device memory, re-issued once per
+///   in-flight chunk; the whole lane is stretched by `1/(1−bubble)`
+///   because the stage only computes while the pipeline feeds it;
+/// * **PCIe lane** — the (schedule-duplicated) per-layer weight window
+///   `load_w`, the step's KV-block loads, and the ACT spill the stage's
+///   resident census cannot hold; streaming continues through pipeline
+///   waits, so this lane does NOT pay the bubble.
+///
+/// The step is paced by the slowest stage's slowest lane; the score is
+/// `batch / t_step` under the best designation. All terms are linear
+/// fits or closed forms — no event-driven simulation.
+///
+/// [`AllocationInputs::for_stage`]: crate::policy::AllocationInputs::for_stage
+pub fn score_plan(
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    plan: &ExecutionPlan,
+    workload: AutotuneConfig,
+) -> f64 {
+    let chunks = plan.inflight_chunks();
+    let bubble = plan.schedule_bubble(chunks);
+    let host_cache = sys
+        .host
+        .memory_bytes
+        .saturating_sub(model.total_weight_bytes());
+    let allocs = stage_cache_allocations(
+        &PolicyConfig::full(),
+        model,
+        sys,
+        plan,
+        host_cache,
+        bubble,
+    );
+    let blocks_per_req = (workload.prompt + workload.gen)
+        .div_ceil(sys.block_tokens)
+        .max(1);
+    let batch = workload.batch.max(1);
+    let weight_read = model.layer_weight_bytes() as f64 / plan.tp as f64 / sys.gpu.mem_bw;
+    let cms: Vec<CostModel> = (0..plan.pp)
+        .map(|s| CostModel::analytic_for_stage(model, sys, plan, s))
+        .collect();
+    // Each stage's proposed designation, deduplicated in stage order.
+    let mut mixes: Vec<(usize, usize)> = Vec::with_capacity(plan.pp);
+    for a in &allocs {
+        let key = (a.act_blocks.max(1), a.kv_blocks);
+        if !mixes.contains(&key) {
+            mixes.push(key);
+        }
+    }
+    let mut t_step = f64::INFINITY;
+    for (act, kv) in mixes {
+        let ratio = BlockRatio::new(act, kv);
+        let (act_per_req, kv_per_req) = ratio.split(blocks_per_req);
+        let act_blocks = act_per_req * batch;
+        let kv_blocks = kv_per_req * batch;
+        let mut gpu_max: f64 = 0.0;
+        let mut pcie_max: f64 = 0.0;
+        for s in 0..plan.pp {
+            let cm = &cms[s];
+            let layers = plan.stages[s].layer_count() as f64;
+            let gpu = layers * (cm.kv_gen.eval(act_blocks as f64) + chunks as f64 * weight_read);
+            let spill = act_blocks.saturating_sub(plan.memory().stage_act_capacity(s));
+            let pcie = layers
+                * (cm.load_w + cm.load_kv.eval(kv_blocks as f64) + cm.load_act.eval(spill as f64));
+            gpu_max = gpu_max.max(gpu);
+            pcie_max = pcie_max.max(pcie);
+        }
+        let t = (gpu_max / (1.0 - bubble.min(MAX_BUBBLE))).max(pcie_max);
+        t_step = t_step.min(t);
+    }
+    batch as f64 / t_step
+}
+
+/// Enumerate and score the joint space, returning the winning plan.
+///
+/// Enumeration order is layer split (count-balanced first) × schedule
+/// (layer-major first, then chunk-major at 2..=pp in-flight chunks — one
+/// chunk of chunk-major is layer-major physics and is not enumerated).
+/// A candidate replaces the incumbent only on a strictly better score,
+/// so the historical (count-balanced, layer-major) plan wins all ties
+/// and `pp = 1` grids always reproduce the untuned plan exactly.
+pub fn tune(model: &ModelConfig, sys: &SystemConfig, workload: AutotuneConfig) -> TuneReport {
+    let pp = sys.topology.pp;
+    let nl = model.num_layers;
+    assert!(
+        nl >= pp,
+        "model has {nl} layers but the topology has {pp} stages"
+    );
+    let mut candidates = Vec::new();
+    let mut best: Option<(Candidate, ExecutionPlan)> = None;
+    for rule in [LayerSplit::CountBalanced, LayerSplit::MemoryWeighted] {
+        let counts = split_counts(model, sys, rule);
+        let mut axes: Vec<(PipelineSchedule, Option<usize>)> =
+            vec![(PipelineSchedule::LayerMajor, None)];
+        for c in 2..=pp {
+            axes.push((PipelineSchedule::OneFOneB, Some(c)));
+        }
+        for (schedule, tuned_chunks) in axes {
+            let plan = lower(model, sys, &counts, schedule, tuned_chunks);
+            let score = score_plan(model, sys, &plan, workload);
+            let cand = Candidate {
+                schedule,
+                layer_split: rule,
+                chunks: plan.inflight_chunks(),
+                score,
+            };
+            if best.as_ref().map_or(true, |(b, _)| score > b.score) {
+                best = Some((cand, plan));
+            }
+            candidates.push(cand);
+        }
+    }
+    let (winner, plan) = best.expect("search space is never empty");
+    TuneReport {
+        plan,
+        winner,
+        candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulePolicy;
+
+    #[test]
+    fn memory_weighted_split_matches_count_split_on_uniform_grids() {
+        for (m, tp, pp) in [
+            (ModelConfig::opt_30b(), 2usize, 4usize),
+            (ModelConfig::opt_66b(), 1, 3),
+            (ModelConfig::opt_tiny(), 1, 3),
+            (ModelConfig::opt_175b(), 2, 4),
+        ] {
+            let sys = SystemConfig::paper_testbed_grid(tp, pp);
+            assert_eq!(
+                memory_weighted_split(&m, &sys),
+                count_balanced_split(m.num_layers, pp),
+                "{} {tp}x{pp}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn memory_weighted_split_moves_layers_to_the_big_stage() {
+        // OPT-66B on 2x2 with stage 1 on 80 GB cards: residency budgets
+        // are 12 vs 40 GiB, so stage 1 absorbs most of the 64 layers and
+        // the starved stage stops pacing.
+        let m = ModelConfig::opt_66b();
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(2, 2)
+                .topology
+                .with_stage_memory(1, 80 << 30),
+        );
+        let counts = memory_weighted_split(&m, &sys);
+        assert_eq!(counts.iter().sum::<usize>(), m.num_layers);
+        assert!(counts[1] > 3 * counts[0], "{counts:?}");
+        assert!(counts[0] >= 1);
+        // the split actually balances the streamed fractions: both
+        // stages stream strictly less than the count split's pacing one
+        let tuned = lower(&m, &sys, &counts, PipelineSchedule::LayerMajor, None);
+        let historical = ExecutionPlan::for_system(&m, &sys);
+        let pace = |p: &ExecutionPlan| {
+            p.stages
+                .iter()
+                .map(|s| s.stream_frac)
+                .fold(0.0, f64::max)
+        };
+        assert!(pace(&tuned) < pace(&historical), "{} !< {}", pace(&tuned), pace(&historical));
+    }
+
+    #[test]
+    fn memory_weighted_split_never_lowers_an_empty_stage() {
+        // A stage whose budget rounds to zero layers must still get one.
+        let m = ModelConfig::opt_tiny(); // 4 layers
+        let sys = SystemConfig::with_topology(
+            SystemConfig::paper_testbed_grid(1, 3)
+                .topology
+                .with_stage_memory(1, 512 << 30),
+        );
+        let counts = memory_weighted_split(&m, &sys);
+        assert_eq!(counts.len(), 3);
+        assert_eq!(counts.iter().sum::<usize>(), 4);
+        assert!(counts.iter().all(|&c| c >= 1), "{counts:?}");
+    }
+
+    #[test]
+    fn tuner_ties_keep_the_historical_plan_and_pp1_is_untuned() {
+        let wl = AutotuneConfig {
+            batch: 64,
+            prompt: 512,
+            gen: 32,
+        };
+        // pp = 1: both split rules collapse to the same single-stage
+        // layer-major lowering, identical to the untuned plan.
+        let m = ModelConfig::opt_30b();
+        let sys = SystemConfig::paper_testbed_tp(2);
+        let report = tune(&m, &sys, wl);
+        assert_eq!(report.candidates.len(), 2);
+        assert_eq!(report.candidates[0].score, report.candidates[1].score);
+        assert_eq!(report.plan, ExecutionPlan::for_system(&m, &sys));
+        assert_eq!(report.winner.chunks, 1);
+        // winner holds the max score with first-wins ties
+        let sys4 = SystemConfig::paper_testbed_grid(2, 4);
+        let r4 = tune(&m, &sys4, wl);
+        assert_eq!(r4.candidates.len(), 8); // 2 splits x (LM + chunks 2..=4)
+        for c in &r4.candidates {
+            assert!(r4.winner.score >= c.score, "{c:?}");
+        }
+        assert_eq!(
+            r4.winner.score,
+            r4.candidates
+                .iter()
+                .map(|c| c.score)
+                .fold(f64::NEG_INFINITY, f64::max)
+        );
+    }
+
+    #[test]
+    fn tuner_prefers_chunk_major_on_resident_grids_and_layer_major_when_streaming() {
+        // Mirrors choose_schedule's regimes, now from the joint search:
+        // OPT-30B 2x4 is fully resident (bubble is the only cost — chunk
+        // overlap wins); OPT-175B 2x4 streams ~70% of every slice
+        // (duplicated streams drown the overlap — layer-major wins).
+        let wl = AutotuneConfig {
+            batch: 64,
+            prompt: 512,
+            gen: 32,
+        };
+        let resident = tune(
+            &ModelConfig::opt_30b(),
+            &SystemConfig::paper_testbed_grid(2, 4),
+            wl,
+        );
+        assert_eq!(resident.winner.schedule, PipelineSchedule::OneFOneB);
+        assert!(resident.winner.chunks >= 2);
+        assert_eq!(resident.plan.inflight_chunks(), resident.winner.chunks);
+        let streaming = tune(
+            &ModelConfig::opt_175b(),
+            &SystemConfig::paper_testbed_grid(2, 4),
+            wl,
+        );
+        assert_eq!(streaming.winner.schedule, PipelineSchedule::LayerMajor);
+        assert_eq!(streaming.plan.tuned_chunks(), None);
+    }
+
+    #[test]
+    fn with_autotune_wires_the_winner_through_plan_builder() {
+        let wl = AutotuneConfig {
+            batch: 64,
+            prompt: 512,
+            gen: 32,
+        };
+        let m = ModelConfig::opt_30b();
+        let sys = SystemConfig::paper_testbed_grid(2, 4).with_autotune(wl);
+        let built = ExecutionPlan::for_system(&m, &sys);
+        let report = tune(&m, &SystemConfig::paper_testbed_grid(2, 4), wl);
+        assert_eq!(built, report.plan);
+        // the tuned chunk count threads through the single accessor every
+        // duplicated-stream consumer reads
+        assert_eq!(built.inflight_chunks(), report.winner.chunks);
+        assert_eq!(built.weight_stream_passes(), report.winner.chunks);
+        // a forced schedule request is ignored under autotune: the search
+        // owns the axis
+        let forced = SystemConfig::paper_testbed_grid(2, 4)
+            .with_schedule(SchedulePolicy::OneFOneB)
+            .with_autotune(wl);
+        assert_eq!(ExecutionPlan::for_system(&m, &forced), report.plan);
+    }
+}

@@ -35,11 +35,12 @@
 //! builder accept grids whose slots differ in `memory_bytes` (uniform
 //! grids degenerate to the historical scalar arithmetic exactly).
 
+pub mod autotune;
 mod memory;
 
 pub use memory::{DeviceBudget, MemoryPlan};
 
-use crate::config::{ModelConfig, SchedulePolicy, SystemConfig, Topology};
+use crate::config::{LayerSplit, ModelConfig, SchedulePolicy, SystemConfig, Topology};
 
 /// How mini-batch chunks traverse the pipeline stages — the schedule the
 /// plan lowers to (requested via [`SchedulePolicy`] on the system config).
@@ -129,6 +130,10 @@ pub struct ExecutionPlan {
     /// with `Auto` settled by probe simulation and `pp = 1` collapsed to
     /// `LayerMajor`).
     pub schedule: PipelineSchedule,
+    /// Chunk count the joint autotuner ([`autotune`]) picked for the
+    /// chunk-major lowering, `None` for untuned plans (which keep the
+    /// historical one-chunk-per-stage steady state, `pp`).
+    tuned_chunks: Option<usize>,
     /// Per-device residency/budget authority (see [`MemoryPlan`]).
     memory: MemoryPlan,
 }
@@ -190,13 +195,25 @@ impl ExecutionPlan {
     }
 
     /// Mini-batch chunks concurrently in flight under the schedule: 1 for
-    /// the lock-step layer-major order, up to `pp` for chunk-major (one
-    /// chunk per stage in the steady state).
+    /// the lock-step layer-major order; for chunk-major the autotuned
+    /// count when the plan carries one, else the historical
+    /// one-chunk-per-stage steady state (`pp`). Every consumer that
+    /// prices the duplicated weight stream (`ShardLedger::for_plan`
+    /// staging carve-out, `AnalyticSampler::weight_load_time`,
+    /// `sim::simulate`'s chunk cap) threads the tuned count through this
+    /// single accessor.
     pub fn inflight_chunks(&self) -> usize {
         match self.schedule {
             PipelineSchedule::LayerMajor => 1,
-            PipelineSchedule::OneFOneB => self.pp,
+            PipelineSchedule::OneFOneB => self.tuned_chunks.unwrap_or(self.pp),
         }
+    }
+
+    /// The autotuner's chunk-count pick, if this plan was tuned
+    /// (`None` on every untuned plan — including tuned layer-major
+    /// winners, which always run one chunk).
+    pub fn tuned_chunks(&self) -> Option<usize> {
+        self.tuned_chunks
     }
 
     /// Nominal duplication of each stage's per-layer weight stream per
@@ -287,43 +304,22 @@ impl<'a> PlanBuilder<'a> {
              topology; set parallelism via Topology — e.g. \
              SystemConfig::paper_testbed_grid(tp, pp) or with_topology(...)"
         );
-        let (tp, pp) = (topo.tp, topo.pp);
+        let pp = topo.pp;
         let nl = self.model.num_layers;
         assert!(
             nl >= pp,
             "model has {nl} layers but the topology has {pp} stages"
         );
-        let base = nl / pp;
-        let rem = nl % pp;
-        let mut stages = Vec::with_capacity(pp);
-        let mut start = 0usize;
-        for s in 0..pp {
-            let n = base + usize::from(s < rem);
-            let layers = start..start + n;
-            start += n;
-            let mut weight_bytes = n * self.model.layer_weight_bytes();
-            if s == pp - 1 {
-                // Embedding + tied LM head live where logits are computed.
-                weight_bytes += self.model.embedding_bytes();
-            }
-            stages.push(StagePlan {
-                stage: s,
-                layers,
-                devices: s * tp..(s + 1) * tp,
-                weight_bytes,
-                // Filled from the MemoryPlan below (the stage's pacing
-                // device); per-device values live there.
-                stream_frac: 0.0,
-            });
+        // Joint autotune opt-in: the searched winner replaces every
+        // point heuristic below (schedule resolution, layer split and
+        // the chunk-major steady-state chunk count).
+        if let Some(workload) = self.sys.autotune {
+            return autotune::tune(self.model, self.sys, workload).plan;
         }
-        // Per-device residency authority; each device prices its own
-        // slice against its own memory (the SAME f64 expression the
-        // pre-topology SimCost used, so uniform grids are bit-for-bit
-        // identical). The stage-level field mirrors the pacing device.
-        let memory = MemoryPlan::lower(self.model, self.sys, &stages, tp);
-        for s in &mut stages {
-            s.stream_frac = memory.stage_max_stream_frac(s.stage);
-        }
+        let counts = match self.sys.layer_split {
+            LayerSplit::CountBalanced => count_balanced_split(nl, pp),
+            LayerSplit::MemoryWeighted => autotune::memory_weighted_split(self.model, self.sys),
+        };
         // Resolve the schedule axis: one stage always lowers layer-major
         // (chunk-major has nothing to overlap and would only forfeit the
         // zig-zag weight share); `Auto` is settled by probe simulation.
@@ -336,15 +332,74 @@ impl<'a> PlanBuilder<'a> {
                 SchedulePolicy::Auto => choose_schedule(self.model, self.sys),
             }
         };
-        ExecutionPlan {
-            tp,
-            pp,
-            num_layers: nl,
-            stages,
-            collectives_per_layer: 2,
-            schedule,
-            memory,
+        lower(self.model, self.sys, &counts, schedule, None)
+    }
+}
+
+/// The historical ceil-balanced layer split: counts as equal as possible
+/// with the remainder front-loaded onto the earliest stages.
+fn count_balanced_split(num_layers: usize, pp: usize) -> Vec<usize> {
+    let base = num_layers / pp;
+    let rem = num_layers % pp;
+    (0..pp).map(|s| base + usize::from(s < rem)).collect()
+}
+
+/// Lower an [`ExecutionPlan`] from an explicit per-stage layer split and
+/// a resolved schedule — the shared back half of [`PlanBuilder::build`]
+/// that the [`autotune`] search also drives per candidate. `counts` must
+/// partition the model's layers over exactly `pp` stages (the builder's
+/// split rules and the tuner both guarantee it).
+fn lower(
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    counts: &[usize],
+    schedule: PipelineSchedule,
+    tuned_chunks: Option<usize>,
+) -> ExecutionPlan {
+    let (tp, pp) = (sys.topology.tp, sys.topology.pp);
+    debug_assert_eq!(counts.len(), pp, "split must cover every stage");
+    debug_assert_eq!(
+        counts.iter().sum::<usize>(),
+        model.num_layers,
+        "split must partition the layers"
+    );
+    let mut stages = Vec::with_capacity(pp);
+    let mut start = 0usize;
+    for (s, &n) in counts.iter().enumerate() {
+        let layers = start..start + n;
+        start += n;
+        let mut weight_bytes = n * model.layer_weight_bytes();
+        if s == pp - 1 {
+            // Embedding + tied LM head live where logits are computed.
+            weight_bytes += model.embedding_bytes();
         }
+        stages.push(StagePlan {
+            stage: s,
+            layers,
+            devices: s * tp..(s + 1) * tp,
+            weight_bytes,
+            // Filled from the MemoryPlan below (the stage's pacing
+            // device); per-device values live there.
+            stream_frac: 0.0,
+        });
+    }
+    // Per-device residency authority; each device prices its own
+    // slice against its own memory (the SAME f64 expression the
+    // pre-topology SimCost used, so uniform grids are bit-for-bit
+    // identical). The stage-level field mirrors the pacing device.
+    let memory = MemoryPlan::lower(model, sys, &stages, tp);
+    for s in &mut stages {
+        s.stream_frac = memory.stage_max_stream_frac(s.stage);
+    }
+    ExecutionPlan {
+        tp,
+        pp,
+        num_layers: model.num_layers,
+        stages,
+        collectives_per_layer: 2,
+        schedule,
+        tuned_chunks,
+        memory,
     }
 }
 

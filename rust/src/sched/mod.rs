@@ -150,7 +150,7 @@ impl StepEngine for Engine {
     fn validate(&self, req: &Request) -> Result<()> {
         anyhow::ensure!(!req.prompt.is_empty(), "request {} has empty prompt", req.id);
         anyhow::ensure!(
-            req.prompt.len() + req.max_new <= self.model().max_context,
+            req.prompt.len().saturating_add(req.max_new) <= self.model().max_context,
             "request {} exceeds max context {}",
             req.id,
             self.model().max_context

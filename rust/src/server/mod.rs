@@ -154,8 +154,14 @@ fn connection_loop(stream: TcpStream, tx: Sender<Pending>, id_base: u64) -> Resu
                 }
             }
             Err(e) => {
-                let err = Json::obj(vec![("error", Json::str(&format!("{e:#}")))]);
-                let _ = resp_tx.send(err.to_string());
+                // Structured reject: carry the client's id when the line
+                // was at least JSON, so the client can correlate it.
+                let mut fields = Vec::new();
+                if let Some(id) = Json::parse(&line).ok().and_then(|j| j.get("id").as_i64()) {
+                    fields.push(("id", Json::num(id as f64)));
+                }
+                fields.push(("error", Json::str(&format!("{e:#}"))));
+                let _ = resp_tx.send(Json::obj(fields).to_string());
             }
         }
     }
@@ -163,6 +169,17 @@ fn connection_loop(stream: TcpStream, tx: Sender<Pending>, id_base: u64) -> Resu
     let _ = w.join();
     Ok(())
 }
+
+/// Protocol ceiling on `max_new`. The authoritative clamp is the
+/// engine's `validate` (exact model context and host-cache capacity,
+/// answered per request through [`enqueue`]'s structured error), but that
+/// check runs `prompt.len() + max_new` arithmetic — a hostile
+/// `{"max_new": 18446744073709551615}` would wrap it in release builds
+/// and sail through to book a bogus admission reservation. No model
+/// served here has a context window anywhere near this bound, so larger
+/// values are rejected at parse time, before they reach the admission
+/// path at all.
+const MAX_NEW_CEILING: usize = 1 << 20;
 
 fn parse_request(line: &str, internal_id: u64) -> Result<(Request, i64)> {
     let j = Json::parse(line).context("bad json")?;
@@ -177,6 +194,11 @@ fn parse_request(line: &str, internal_id: u64) -> Result<(Request, i64)> {
         .context("prompt must be integers")?;
     let max_new = j.get("max_new").as_usize().unwrap_or(16);
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    anyhow::ensure!(max_new >= 1, "max_new must be at least 1");
+    anyhow::ensure!(
+        max_new <= MAX_NEW_CEILING,
+        "max_new {max_new} exceeds the protocol limit {MAX_NEW_CEILING}"
+    );
     Ok((Request::new(internal_id, prompt, max_new), client_id))
 }
 
@@ -308,5 +330,20 @@ mod tests {
         assert!(parse_request(r#"{"prompt": []}"#, 1).is_err());
         assert!(parse_request(r#"{"prompt": "x"}"#, 1).is_err());
         assert!(parse_request("not json", 1).is_err());
+    }
+
+    #[test]
+    fn parse_request_bounds_max_new() {
+        // Regression: any value used to be accepted, so a single
+        // {"max_new": 100000000} booked a worst-case admission
+        // reservation (and usize::MAX wrapped the context check).
+        assert!(parse_request(r#"{"prompt": [1], "max_new": 0}"#, 1).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": 100000000}"#, 1).is_err());
+        let huge = format!(r#"{{"prompt": [1], "max_new": {}}}"#, u64::MAX);
+        assert!(parse_request(&huge, 1).is_err());
+        let (req, _) =
+            parse_request(&format!(r#"{{"prompt": [1], "max_new": {MAX_NEW_CEILING}}}"#), 1)
+                .unwrap();
+        assert_eq!(req.max_new, MAX_NEW_CEILING);
     }
 }

@@ -55,7 +55,7 @@ mod cost;
 pub use cost::SimCost;
 
 use crate::cache::BlockSizes;
-use crate::config::{ModelConfig, SchedulePolicy, SystemConfig};
+use crate::config::{AutotuneConfig, ModelConfig, SchedulePolicy, SystemConfig};
 use crate::pcie::{Dir, Interconnect, Lane, Timeline, TrafficClass};
 use crate::plan::{ExecutionPlan, PipelineSchedule};
 use crate::policy::{AllocationInputs, BlockRatio, CostModel, PolicyConfig};
@@ -151,7 +151,9 @@ pub fn auto_prefers_chunk_major(layer_major: &SimResult, one_f_one_b: &SimResult
 /// the planner's pick ([`auto_prefers_chunk_major`]), settled on real
 /// evidence, never worse than the historical layer-major order.
 pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Workload) -> SimResult {
-    if sys.pp() > 1 && sys.schedule == SchedulePolicy::Auto {
+    // Autotuned plans own the schedule axis — the joint search already
+    // scored both lowerings, so the Auto double-run would be redundant.
+    if sys.pp() > 1 && sys.schedule == SchedulePolicy::Auto && sys.autotune.is_none() {
         let run = |policy: SchedulePolicy| {
             let mut fixed = sys.clone();
             fixed.schedule = policy;
@@ -161,6 +163,22 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         let ofob = run(SchedulePolicy::OneFOneB);
         return if auto_prefers_chunk_major(&lm, &ofob) { ofob } else { lm };
     }
+
+    // Autotuned runs re-target the joint search at THIS workload — the
+    // tuner's whole point is scoring at the actual shape, not the fixed
+    // golden probe; the shape stored by `with_autotune` is only the
+    // default for plan consumers that never see a `Workload`.
+    let retuned;
+    let sys = if sys.autotune.is_some() {
+        retuned = sys.clone().with_autotune(AutotuneConfig {
+            batch: wl.batch,
+            prompt: wl.prompt,
+            gen: wl.gen,
+        });
+        &retuned
+    } else {
+        sys
+    };
 
     let cost = SimCost::new(model, sys);
     let plan: &ExecutionPlan = &cost.plan;
@@ -253,12 +271,13 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                 if act_per_req > 0 {
                     mb = mb.min(caps.act_max / act_per_req.max(1));
                 }
-                // Chunk-major micro-batching: 1F1B needs at least ~pp
-                // chunks in flight to overlap stages — cap the chunk size
-                // so the batch splits into >= pp micro-batches
-                // (GPipe-style). No-op for layer-major / pp = 1.
+                // Chunk-major micro-batching: cap the chunk size so the
+                // batch splits into at least the plan's in-flight chunk
+                // count — `pp` for untuned plans (GPipe-style overlap),
+                // the tuned count when the autotuner picked one. No-op
+                // for layer-major / pp = 1.
                 if chunk_major {
-                    mb = mb.min(wl.batch.div_ceil(pp));
+                    mb = mb.min(wl.batch.div_ceil(plan.inflight_chunks()));
                 }
                 mb.max(1)
             }

@@ -30,12 +30,17 @@ pub fn spread(xs: &[f64]) -> f64 {
 }
 
 /// Percentile with linear interpolation; `p` in [0, 100].
+///
+/// Total over all inputs: NaN samples sort to the high end (IEEE 754
+/// total order) instead of panicking the comparator — `SloReport::merge`
+/// pools samples from every replica, so a single poisoned sample must
+/// not kill a whole fleet report.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -133,5 +138,19 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn mismatched_lengths_panic() {
         linear_fit(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: `partial_cmp(..).unwrap()` panicked here. NaN now
+        // sorts above every finite sample, so low/mid percentiles of a
+        // mostly-sane pool stay finite and sane.
+        let xs = [3.0, f64::NAN, 1.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 50.0).is_nan());
     }
 }

@@ -1,0 +1,92 @@
+//! Joint plan autotuner property suite (ISSUE 7).
+//!
+//! Seeded 100-case sweep over (model, grid, skew, workload) checking the
+//! structural guarantees the tuner makes regardless of which candidate
+//! wins:
+//!
+//! 1. **Enumeration shape** — 2 split rules × (layer-major + one
+//!    chunk-major lowering per chunk count `2..=pp`), so the baseline,
+//!    schedule-only and split-only heuristics are all in the candidate
+//!    set and the winner's score dominates every one of them.
+//! 2. **Splits partition** — both split rules cover every layer with
+//!    every stage populated, and on memory-uniform grids the
+//!    memory-weighted split reproduces the historical count-balanced
+//!    split exactly.
+//! 3. **Builder honors the winner** — `with_autotune` plans carry the
+//!    winning schedule and chunk count; `pp = 1` collapses to the
+//!    untuned single-stage layer-major lowering.
+//!
+//! The Python dry-run of this suite (same xoshiro256** seed stream)
+//! lives in `tools/pysim/props.py` (`autotune-joint`).
+
+use hybridserve::config::{AutotuneConfig, LayerSplit, ModelConfig, SystemConfig};
+use hybridserve::plan::autotune::{split_counts, tune};
+use hybridserve::plan::{ExecutionPlan, PipelineSchedule};
+use hybridserve::util::prop;
+
+#[test]
+fn property_joint_autotuner_invariants() {
+    prop::check("autotune-joint", 100, |rng| {
+        let m = rng
+            .choose(&[ModelConfig::opt_30b(), ModelConfig::opt_66b()])
+            .clone();
+        let tp = *rng.choose(&[1usize, 2]);
+        let pp = *rng.choose(&[1usize, 2, 4]);
+        let mut sys = SystemConfig::paper_testbed_grid(tp, pp);
+        if pp > 1 && rng.range(0, 2) == 1 {
+            let stage = rng.range(0, pp);
+            let bump = *rng.choose(&[48usize, 80]) << 30;
+            sys = SystemConfig::with_topology(sys.topology.with_stage_memory(stage, bump));
+        }
+        let wl = AutotuneConfig {
+            batch: rng.range(1, 257),
+            prompt: rng.range(64, 1025),
+            gen: rng.range(16, 257),
+        };
+        let rep = tune(&m, &sys, wl);
+
+        // enumeration shape: the single-axis heuristics are candidates,
+        // and the winner dominates all of them
+        assert_eq!(
+            rep.candidates.len(),
+            2 * pp,
+            "{} candidates at pp={pp}",
+            rep.candidates.len()
+        );
+        for c in &rep.candidates {
+            assert!(
+                rep.winner.score >= c.score,
+                "winner {:?} lost to candidate {c:?}",
+                rep.winner
+            );
+            assert!(c.score > 0.0 && c.score.is_finite(), "degenerate score {c:?}");
+        }
+
+        // splits always partition the layers with every stage populated
+        for rule in [LayerSplit::CountBalanced, LayerSplit::MemoryWeighted] {
+            let counts = split_counts(&m, &sys, rule);
+            assert_eq!(counts.len(), pp);
+            assert_eq!(counts.iter().sum::<usize>(), m.num_layers);
+            assert!(counts.iter().all(|&c| c >= 1), "empty stage in {counts:?}");
+        }
+
+        // uniform grids reproduce the historical count-balanced split
+        let usys = SystemConfig::paper_testbed_grid(tp, pp);
+        assert_eq!(
+            split_counts(&m, &usys, LayerSplit::MemoryWeighted),
+            split_counts(&m, &usys, LayerSplit::CountBalanced),
+        );
+
+        // the builder honors the winner
+        let built = ExecutionPlan::for_system(&m, &sys.clone().with_autotune(wl));
+        assert_eq!(built.schedule, rep.winner.schedule);
+        assert_eq!(built.inflight_chunks(), rep.winner.chunks);
+
+        // pp = 1 is untuned: one stage spans every layer, layer-major
+        if pp == 1 {
+            assert_eq!(built.schedule, PipelineSchedule::LayerMajor);
+            assert_eq!(built.inflight_chunks(), 1);
+            assert_eq!(built.stages[0].layer_count(), m.num_layers);
+        }
+    });
+}

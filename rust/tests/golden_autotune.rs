@@ -1,0 +1,185 @@
+//! Golden regression test for the joint plan autotuner (ISSUE 7): pins
+//! the OPT-66B skewed 24/80 GB grid (tp=2, pp=4, stage 3 on 80 GB) at
+//! B=256 prompt=256 gen=128 to `rust/tests/golden/autotune_hetmem.json`,
+//! within ±0.1%:
+//!
+//! * the tuner's winning point (schedule, split rule, chunk count),
+//! * simulated throughput of the baseline plan, the schedule-only
+//!   heuristic (`SchedulePolicy::Auto`), the split-only heuristic
+//!   (`LayerSplit::MemoryWeighted`) and the autotuned plan,
+//! * the autotuned margin over the best single-axis heuristic — which
+//!   must stay strictly positive: the pinned win is the chunk-count
+//!   axis (`chunks = 3 ≠ pp`), unreachable by either single-axis knob.
+//!
+//! Re-pin after a deliberate model change with `UPDATE_GOLDEN=1` and
+//! justify it in the same commit (goldens regenerate through
+//! `tools/pysim/gen_golden.py` when no cargo toolchain is available).
+
+use hybridserve::config::{AutotuneConfig, LayerSplit, SchedulePolicy, SystemConfig};
+use hybridserve::plan::autotune::tune;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::util::json::Json;
+use hybridserve::ModelConfig;
+
+const GOLDEN: &str = include_str!("golden/autotune_hetmem.json");
+const GOLDEN_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/golden/autotune_hetmem.json"
+);
+
+struct Pinpoint {
+    model: ModelConfig,
+    sys: SystemConfig,
+    wl: Workload,
+    at: AutotuneConfig,
+}
+
+fn pinpoint() -> Pinpoint {
+    let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+    let w = golden.get("workload");
+    let wl = Workload {
+        batch: w.get("batch").as_usize().unwrap(),
+        prompt: w.get("prompt").as_usize().unwrap(),
+        gen: w.get("gen").as_usize().unwrap(),
+    };
+    let topo = golden.get("topology");
+    let sys = SystemConfig::with_topology(
+        SystemConfig::paper_testbed_grid(
+            topo.get("tp").as_usize().unwrap(),
+            topo.get("pp").as_usize().unwrap(),
+        )
+        .topology
+        .with_stage_memory(
+            topo.get("skewed_stage").as_usize().unwrap(),
+            topo.get("skewed_memory_gb").as_usize().unwrap() << 30,
+        ),
+    );
+    Pinpoint {
+        model: ModelConfig::by_name(golden.get("model").as_str().unwrap()).unwrap(),
+        sys,
+        wl,
+        at: AutotuneConfig {
+            batch: wl.batch,
+            prompt: wl.prompt,
+            gen: wl.gen,
+        },
+    }
+}
+
+/// The four plans the pin compares, with their golden keys.
+fn variant_throughputs(p: &Pinpoint) -> Vec<(&'static str, f64)> {
+    let variants: [(&'static str, SystemConfig); 4] = [
+        ("baseline", p.sys.clone()),
+        (
+            "schedule_only",
+            p.sys.clone().with_schedule(SchedulePolicy::Auto),
+        ),
+        (
+            "split_only",
+            p.sys.clone().with_layer_split(LayerSplit::MemoryWeighted),
+        ),
+        ("autotuned", p.sys.clone().with_autotune(p.at)),
+    ];
+    variants
+        .into_iter()
+        .map(|(key, sys)| {
+            let r = simulate(&p.model, &sys, System::HybridServe(PolicyConfig::full()), p.wl);
+            (key, r.throughput)
+        })
+        .collect()
+}
+
+fn margin(tps: &[(&'static str, f64)]) -> f64 {
+    let get = |k: &str| tps.iter().find(|(key, _)| *key == k).unwrap().1;
+    let best_single = get("baseline").max(get("schedule_only")).max(get("split_only"));
+    get("autotuned") / best_single - 1.0
+}
+
+#[test]
+fn golden_autotune_hetmem_beats_single_axis_within_tolerance() {
+    let p = pinpoint();
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+        let rep = tune(&p.model, &p.sys, p.at);
+        let tps = variant_throughputs(&p);
+        let rewritten = Json::obj(vec![
+            ("comment", golden.get("comment").clone()),
+            ("model", golden.get("model").clone()),
+            ("topology", golden.get("topology").clone()),
+            ("workload", golden.get("workload").clone()),
+            ("tolerance", golden.get("tolerance").clone()),
+            (
+                "winner",
+                Json::obj(vec![
+                    ("schedule", Json::str(rep.winner.schedule.name())),
+                    ("layer_split", Json::str(rep.winner.layer_split.name())),
+                    ("chunks", Json::num(rep.winner.chunks as f64)),
+                ]),
+            ),
+            (
+                "throughput",
+                Json::obj(tps.iter().map(|&(k, t)| (k, Json::num(t))).collect()),
+            ),
+            ("margin", Json::num(margin(&tps))),
+        ]);
+        std::fs::write(GOLDEN_PATH, rewritten.to_string()).expect("rewrite golden file");
+        println!("rewrote {GOLDEN_PATH}");
+        return;
+    }
+
+    let golden = Json::parse(GOLDEN).expect("golden file is valid JSON");
+    let tolerance = golden.get("tolerance").as_f64().unwrap();
+    assert!(tolerance <= 0.001, "golden tolerance must stay at ±0.1%");
+
+    // the tuner's pick is pinned exactly, not within a tolerance
+    let rep = tune(&p.model, &p.sys, p.at);
+    let w = golden.get("winner");
+    assert_eq!(rep.winner.schedule.name(), w.get("schedule").as_str().unwrap());
+    assert_eq!(
+        rep.winner.layer_split.name(),
+        w.get("layer_split").as_str().unwrap()
+    );
+    assert_eq!(rep.winner.chunks, w.get("chunks").as_usize().unwrap());
+
+    let pinned = golden.get("throughput");
+    let tps = variant_throughputs(&p);
+    for &(key, measured) in &tps {
+        let expected = pinned.get(key).as_f64().unwrap_or_else(|| {
+            panic!("golden file has no throughput entry for '{key}'");
+        });
+        let rel = (measured - expected).abs() / expected;
+        assert!(
+            rel <= tolerance,
+            "{key}: simulated throughput {measured:.6} drifted {:.4}% from the \
+             pinned {expected:.6} (tolerance ±{:.2}%); if this shift is \
+             intentional, re-pin with UPDATE_GOLDEN=1 and justify it in the \
+             same commit",
+            rel * 100.0,
+            tolerance * 100.0,
+        );
+    }
+
+    // the acceptance margin: autotuned strictly beats the best
+    // single-axis heuristic, and by the pinned amount
+    let m = margin(&tps);
+    assert!(m > 0.0, "autotuned no longer beats single-axis: {m:+.4}");
+    let pinned_margin = golden.get("margin").as_f64().unwrap();
+    assert!(
+        (m - pinned_margin).abs() <= 1e-3,
+        "margin {m:.6} drifted from pinned {pinned_margin:.6}"
+    );
+}
+
+#[test]
+fn autotune_golden_is_deterministic_and_win_is_the_chunk_axis() {
+    let p = pinpoint();
+    let a = variant_throughputs(&p);
+    let b = variant_throughputs(&p);
+    assert_eq!(a, b, "two runs must agree bit-for-bit");
+    // the pinned win is the chunk-count axis: the tuned chunk count
+    // differs from pp (the only chunk count schedule-only Auto can try)
+    let rep = tune(&p.model, &p.sys, p.at);
+    assert_eq!(rep.winner.chunks, 3);
+    assert_ne!(rep.winner.chunks, p.sys.pp());
+}

@@ -804,12 +804,43 @@ class Route:
         self.cached_prefix = cached_prefix
 
 
+class SessionTable:
+    """Mirror of fleet::router::SessionTable: capacity-bounded session ->
+    (replica, cached_tokens) map, least-recently-recorded evicted first."""
+
+    DEFAULT_CAPACITY = 1 << 16
+
+    def __init__(self, capacity=DEFAULT_CAPACITY):
+        assert capacity >= 1, "session table needs room for one session"
+        self.map = {}  # session -> (replica, cached_tokens, touch)
+        self.capacity = capacity
+        self.clock = 0
+
+    def owner(self, session):
+        slot = self.map.get(session)
+        return None if slot is None else (slot[0], slot[1])
+
+    def record(self, session, replica, cached_tokens):
+        touch = self.clock
+        self.clock += 1
+        self.map[session] = (replica, cached_tokens, touch)
+        while len(self.map) > self.capacity:
+            oldest = min(self.map, key=lambda s: self.map[s][2])
+            del self.map[oldest]
+
+    def evict_replica(self, replica):
+        self.map = {s: e for s, e in self.map.items() if e[0] != replica}
+
+    def __len__(self):
+        return len(self.map)
+
+
 class Router:
     def __init__(self, policy, seed):
         self.policy = policy
         self.rng = Rng(seed)
         self.rr_next = 0
-        self.sessions = {}  # session -> (replica, cached_tokens)
+        self.sessions = SessionTable()
         self.hits = 0
         self.misses = 0
 
@@ -821,9 +852,12 @@ class Router:
         return ties[self.rng.range(0, len(ties))]
 
     def route(self, session, history_len, loads):
+        return self.route_with_census(session, history_len, loads, None)
+
+    def route_with_census(self, session, history_len, loads, owner_census):
         n = len(loads)
         assert n > 0
-        entry = self.sessions.get(session)
+        entry = self.sessions.owner(session)
         owner = entry if entry is not None and entry[0] < n else None
         if self.policy == ROUND_ROBIN:
             replica = self.rr_next % n
@@ -832,7 +866,11 @@ class Router:
             replica = self._least_loaded(loads)
         else:
             replica = owner[0] if owner is not None else self._least_loaded(loads)
-        cached = min(owner[1], history_len) if owner is not None and owner[0] == replica else 0
+        if owner is not None and owner[0] == replica:
+            live = owner[1] if owner_census is None else owner_census
+            cached = min(owner[1], live, history_len)
+        else:
+            cached = 0
         if history_len > 0:
             if cached > 0:
                 self.hits += 1
@@ -841,10 +879,10 @@ class Router:
         return Route(replica, cached)
 
     def record(self, session, replica, cached_tokens):
-        self.sessions[session] = (replica, cached_tokens)
+        self.sessions.record(session, replica, cached_tokens)
 
     def evict_replica(self, replica):
-        self.sessions = {s: e for s, e in self.sessions.items() if e[0] != replica}
+        self.sessions.evict_replica(replica)
 
 
 class Replica:
@@ -853,9 +891,30 @@ class Replica:
         self.hourly = 0.0
         self.sys = sys
         self.sched = Scheduler(Engine(model, sys, host_cache_bytes), cfg)
+        sizes = BlockSizes(model, sys.block_tokens)
+        self.sessions = {}  # session -> (tokens, touch)
+        self.session_clock = 0
+        self.retained_tokens = 0
+        self.token_capacity = host_cache_bytes // max(sizes.kv_bytes, 1) * sizes.block_tokens
 
     def load(self):
         return self.sched.queue_depth() + self.sched.running_count() + self.sched.preempted_count()
+
+    def note_session(self, session, tokens):
+        """Mirror of Replica::note_session: bounded LRU census of retained
+        per-session context, aged out once the host pool overflows."""
+        touch = self.session_clock
+        self.session_clock += 1
+        old = self.sessions.get(session)
+        self.sessions[session] = (tokens, touch)
+        self.retained_tokens += tokens - (0 if old is None else old[0])
+        while self.retained_tokens > self.token_capacity and len(self.sessions) > 1:
+            oldest = min(self.sessions, key=lambda s: self.sessions[s][1])
+            self.retained_tokens -= self.sessions.pop(oldest)[0]
+
+    def session_cached_tokens(self, session):
+        slot = self.sessions.get(session)
+        return None if slot is None else slot[0]
 
     def submit(self, req, arrival):
         self.sched.submit(req, arrival)
@@ -902,11 +961,18 @@ class Fleet:
         for r in self.replicas:
             r.pump(sr.arrival)
         loads = [r.load() for r in self.replicas]
-        route = self.router.route(sr.session, sr.history_len, loads)
+        census = None
+        entry = self.router.sessions.owner(sr.session)
+        if entry is not None and entry[0] < len(self.replicas):
+            live = self.replicas[entry[0]].session_cached_tokens(sr.session)
+            census = 0 if live is None else live
+        route = self.router.route_with_census(sr.session, sr.history_len, loads, census)
         assert sr.history_len < len(sr.req.prompt), "a turn adds new tokens"
         req = Request(sr.req.id, sr.req.prompt[route.cached_prefix:], sr.req.max_new)
         self.replicas[route.replica].submit(req, sr.arrival)
-        self.router.record(sr.session, route.replica, len(sr.req.prompt) + sr.req.max_new)
+        retained = len(sr.req.prompt) + sr.req.max_new
+        self.replicas[route.replica].note_session(sr.session, retained)
+        self.router.record(sr.session, route.replica, retained)
         return route
 
     def serve(self, trace):

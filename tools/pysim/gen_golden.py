@@ -35,6 +35,31 @@ def main():
     print("sim_opt66b_hetmem.json throughput:")
     print(json.dumps(hetg, indent=2))
 
+    # rust/tests/golden/autotune_hetmem.json (ISSUE-7 joint-autotuner pin:
+    # OPT-66B on a skewed 24/80 GB 2x4 grid; the tuned plan must beat the
+    # best single-axis heuristic)
+    atsys = SystemConfig(2, 4).with_stage_memory(3, 80 << 30)
+    atwl = Workload(256, 256, 128)
+    at = AutotuneConfig(atwl.batch, atwl.prompt, atwl.gen)
+    rep = tune(m66, atsys, at)
+    tps = {
+        "baseline": simulate(m66, atsys, HYBRID, atwl).throughput,
+        "schedule_only": simulate(m66, atsys.with_schedule(AUTO), HYBRID, atwl).throughput,
+        "split_only": simulate(m66, atsys.with_layer_split(MEMORY_WEIGHTED), HYBRID, atwl).throughput,
+        "autotuned": simulate(m66, atsys.with_autotune(at), HYBRID, atwl).throughput,
+    }
+    best_single = max(tps["baseline"], tps["schedule_only"], tps["split_only"])
+    print("autotune_hetmem.json:")
+    print(json.dumps({
+        "winner": {
+            "schedule": rep.winner.schedule,
+            "layer_split": rep.winner.layer_split,
+            "chunks": rep.winner.chunks,
+        },
+        "throughput": tps,
+        "margin": tps["autotuned"] / best_single - 1.0,
+    }, indent=2))
+
 
 if __name__ == "__main__":
     main()

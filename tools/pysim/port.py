@@ -133,9 +133,24 @@ LAYER_MAJOR = "layer_major"
 ONE_F_ONE_B = "one_f_one_b"
 AUTO = "auto"
 
+# Layer-split rules (mirror of config::LayerSplit)
+COUNT_BALANCED = "count_balanced"
+MEMORY_WEIGHTED = "memory_weighted"
+
+
+class AutotuneConfig:
+    """Mirror of config::AutotuneConfig — the workload shape the joint
+    plan autotuner scores candidates at."""
+
+    def __init__(self, batch, prompt, gen):
+        self.batch = batch
+        self.prompt = prompt
+        self.gen = gen
+
 
 class SystemConfig:
-    def __init__(self, tp=1, pp=1, schedule=LAYER_MAJOR, mem_overrides=None):
+    def __init__(self, tp=1, pp=1, schedule=LAYER_MAJOR, mem_overrides=None,
+                 layer_split=COUNT_BALANCED, autotune=None):
         self.gpu = GpuSpec()
         self.interconnect = InterconnectSpec()
         self.host_memory = 882 * (1 << 30)
@@ -145,19 +160,34 @@ class SystemConfig:
         self.gpu_weight_fraction = 0.5
         self.gpu_buffer_fraction = 0.25
         self.schedule = schedule
+        self.layer_split = layer_split
+        self.autotune = autotune  # AutotuneConfig or None
         # device id -> memory_bytes (mirror of Topology::with_memory /
         # with_stage_memory); absent devices keep the reference 24 GB.
         self.mem_overrides = dict(mem_overrides or {})
 
+    def _clone(self, **kw):
+        args = dict(tp=self.tp, pp=self.pp, schedule=self.schedule,
+                    mem_overrides=self.mem_overrides,
+                    layer_split=self.layer_split, autotune=self.autotune)
+        args.update(kw)
+        return SystemConfig(**args)
+
     def with_schedule(self, schedule):
-        return SystemConfig(self.tp, self.pp, schedule, self.mem_overrides)
+        return self._clone(schedule=schedule)
+
+    def with_layer_split(self, layer_split):
+        return self._clone(layer_split=layer_split)
+
+    def with_autotune(self, workload):
+        return self._clone(autotune=workload)
 
     def with_stage_memory(self, stage, memory_bytes):
         assert 0 <= stage < self.pp, "stage out of range"  # mirror the Rust builder
         ov = dict(self.mem_overrides)
         for d in range(stage * self.tp, (stage + 1) * self.tp):
             ov[d] = memory_bytes
-        return SystemConfig(self.tp, self.pp, self.schedule, ov)
+        return self._clone(mem_overrides=ov)
 
     def device_memory(self, d):
         return self.mem_overrides.get(d, self.gpu.memory_bytes)
@@ -251,18 +281,81 @@ class MemoryPlan:
     def min_cache_plus_staging_bytes(self):
         return min(b.cache_bytes + b.pinned_staging_bytes for b in self.devices)
 
+    def stage_act_capacity(self, stage):
+        """Mirror of MemoryPlan::stage_act_capacity: the tightest device
+        of one stage's TP group."""
+        return min(b.act_capacity_blocks for b in self.devices if b.stage == stage)
+
+
+def count_balanced_split(nl, pp):
+    """Mirror of plan::count_balanced_split (historical ceil balance)."""
+    base, rem = nl // pp, nl % pp
+    return [base + (1 if s < rem else 0) for s in range(pp)]
+
+
+def memory_weighted_split(model, sys):
+    """Mirror of plan::autotune::memory_weighted_split: apportion layers
+    proportionally to each stage's weight-residency budget (largest
+    remainder), so skewed grids stop pacing at the starved device."""
+    tp, pp = sys.tp, sys.pp
+    nl = model.num_layers
+    if pp <= 1:
+        return [nl]
+    budget = []
+    for s in range(pp):
+        budget.append(min(
+            f64_trunc(sys.device_memory(d) * sys.gpu_weight_fraction)
+            for d in range(s * tp, (s + 1) * tp)
+        ))
+    total = sum(budget)
+    if total == 0:
+        return count_balanced_split(nl, pp)
+    quota = [float(nl) * float(b) / float(total) for b in budget]
+    counts = [f64_trunc(math.floor(q)) for q in quota]
+    assigned = sum(counts)
+    order = sorted(range(pp), key=lambda s: (-(quota[s] - math.floor(quota[s])), s))
+    for s in order[: nl - assigned]:
+        counts[s] += 1
+    while True:
+        zero = next((i for i, c in enumerate(counts) if c == 0), None)
+        if zero is None:
+            break
+        largest = 0
+        for s in range(pp):
+            # Rust max_by_key keeps the LAST maximum on ties
+            if counts[s] >= counts[largest]:
+                largest = s
+        counts[largest] -= 1
+        counts[zero] += 1
+    return counts
+
+
+def split_counts(model, sys, rule):
+    if rule == MEMORY_WEIGHTED:
+        return memory_weighted_split(model, sys)
+    return count_balanced_split(model.num_layers, sys.pp)
+
 
 class ExecutionPlan:
-    def __init__(self, model, sys, schedule=None):
+    def __init__(self, model, sys, schedule=None, counts=None, tuned_chunks=None):
         tp, pp = sys.tp, sys.pp
         nl = model.num_layers
         assert nl >= pp
-        base, rem = nl // pp, nl % pp
+        if counts is None:
+            # Mirror of PlanBuilder::build: an autotuned system hands the
+            # whole lowering to the joint search (schedule arg ignored,
+            # exactly like the Rust builder).
+            if sys.autotune is not None:
+                rep = tune(model, sys, sys.autotune)
+                self.__dict__.update(rep.plan.__dict__)
+                return
+            counts = split_counts(model, sys, sys.layer_split)
         self.tp, self.pp, self.num_layers = tp, pp, nl
+        self.tuned_chunks = tuned_chunks
         self.stages = []
         start = 0
         for s in range(pp):
-            n = base + (1 if s < rem else 0)
+            n = counts[s]
             wb = n * model.layer_weight_bytes()
             if s == pp - 1:
                 wb += model.embedding_bytes()
@@ -306,9 +399,16 @@ class ExecutionPlan:
     def stage_transfer_bytes(self, model, tokens):
         return tokens * model.hidden * model.dtype
 
+    def inflight_chunks(self):
+        """Chunks in flight per step: the tuned count when the autotuner
+        picked one, else pp for chunk-major, 1 for layer-major."""
+        if self.schedule == ONE_F_ONE_B:
+            return self.tuned_chunks if self.tuned_chunks is not None else self.pp
+        return 1
+
     def weight_stream_passes(self):
         """Nominal weight-stream duplication per stage per step."""
-        return self.pp if self.schedule == ONE_F_ONE_B else 1
+        return self.inflight_chunks()
 
     def schedule_bubble(self, chunks):
         """Analytic per-stage pipeline-bubble estimate for the schedule."""
@@ -435,7 +535,15 @@ class CostModel:
         self.load_w = load_w
 
 
-def analytic_cost_model(model, sys, schedule=None):
+def analytic_cost_model(model, sys, schedule=None, plan=None, stage=None):
+    """Mirror of CostModel::analytic / analytic_for_plan / analytic_for_stage.
+
+    With `plan` the given plan's memory/pass-count drive the weight window
+    (no rebuild); with `stage` the window is that stage's own devices —
+    the per-stage cost model the autotuner and Algorithm 1 score against.
+    """
+    if stage is not None:
+        assert plan is not None and 0 <= stage < plan.pp
     tp = float(sys.tp)
 
     def sample_kv_gen(blocks):
@@ -450,7 +558,7 @@ def analytic_cost_model(model, sys, schedule=None):
         return sys.interconnect.h2d_time(b)
 
     def weight_load_time():
-        plan = ExecutionPlan(model, sys, schedule)
+        p = plan if plan is not None else ExecutionPlan(model, sys, schedule)
         # Per-device window from the MemoryPlan: each device's own
         # streamed fraction over its own link; the slowest stream paces
         # the pipeline (max over devices — on uniform grids bit-for-bit
@@ -458,10 +566,12 @@ def analytic_cost_model(model, sys, schedule=None):
         # re-streams once per in-flight chunk per step, so the window
         # Algorithm 1 balances against multiplies by the pass count.
         window = 0.0
-        for b in plan.memory.devices:
+        for b in p.memory.devices:
+            if stage is not None and b.stage != stage:
+                continue
             layer_bytes = model.layer_weight_bytes() / tp * b.stream_frac
             window = max(window, sys.interconnect.h2d_time(f64_trunc(layer_bytes)))
-        passes = plan.weight_stream_passes()
+        passes = p.weight_stream_passes()
         return passes * window
 
     ns = [float(n) for n in SAMPLE_POINTS]
@@ -582,6 +692,111 @@ class BinCaps:
         per_buffer = bytes_ // 4
         self.act_max = max(per_buffer // act_block_bytes, 1)
         self.kv_max = max(per_buffer // kv_block_bytes, 1)
+
+
+# ---------------------------------------------------------------- autotune
+# Mirror of rust/src/plan/autotune.rs: the joint plan search over
+# (layer split × schedule × chunk count), scored with the per-stage
+# ACT:KV mix from Algorithm 1 at the ACTUAL workload.
+
+
+def stage_cache_allocations(model, sys, plan, host_cache_bytes, bubble):
+    """Mirror of policy::stage_cache_allocations with PolicyConfig::full():
+    each stage runs Algorithm 1 against its own cost model, ACT capacity,
+    and an even share of the host pool. Returns [(act, kv)] per stage."""
+    sizes = BlockSizes(model, sys.block_tokens)
+    share = host_cache_bytes // max(plan.pp, 1)
+    allocs = []
+    for s in range(plan.pp):
+        cm = analytic_cost_model(model, sys, plan=plan, stage=s)
+        allocs.append(hybrid_cache_allocation(
+            cm, plan.memory.stage_act_capacity(s), share, sizes, bubble))
+    return allocs
+
+
+class Candidate:
+    """Mirror of plan::autotune::Candidate."""
+
+    def __init__(self, schedule, layer_split, chunks, score):
+        self.schedule = schedule
+        self.layer_split = layer_split
+        self.chunks = chunks
+        self.score = score
+
+    def __repr__(self):
+        return "Candidate(%s, %s, chunks=%d, score=%r)" % (
+            self.schedule, self.layer_split, self.chunks, self.score)
+
+
+class TuneReport:
+    """Mirror of plan::autotune::TuneReport."""
+
+    def __init__(self, plan, winner, candidates):
+        self.plan = plan
+        self.winner = winner
+        self.candidates = candidates
+
+
+def score_plan(model, sys, plan, wl):
+    """Mirror of plan::autotune::score_plan: analytic steady-state decode
+    throughput (tokens/s proxy) of one candidate plan at workload `wl`.
+    Every stage proposes an ACT:KV mix (Algorithm 1 at its own residency)
+    but a block's designation is global, so each proposal is priced
+    applied to every stage and the best designation wins."""
+    chunks = plan.inflight_chunks()
+    bubble = plan.schedule_bubble(chunks)
+    host_cache = max(0, sys.host_memory - model.total_weight_bytes())
+    allocs = stage_cache_allocations(model, sys, plan, host_cache, bubble)
+    blocks_per_req = max(div_ceil(wl.prompt + wl.gen, sys.block_tokens), 1)
+    batch = max(wl.batch, 1)
+    weight_read = model.layer_weight_bytes() / plan.tp / sys.gpu.mem_bw
+    cms = [analytic_cost_model(model, sys, plan=plan, stage=s) for s in range(plan.pp)]
+    mixes = []
+    for a, k in allocs:
+        key = (max(a, 1), k)
+        if key not in mixes:
+            mixes.append(key)
+    t_step = float("inf")
+    for act, kv in mixes:
+        ratio = BlockRatio(act, kv)
+        act_per_req, kv_per_req = ratio.split(blocks_per_req)
+        act_blocks = act_per_req * batch
+        kv_blocks = kv_per_req * batch
+        gpu_max = 0.0
+        pcie_max = 0.0
+        for s in range(plan.pp):
+            cm = cms[s]
+            layers = float(plan.stages[s].layer_count())
+            gpu = layers * (cm.kv_gen.eval(float(act_blocks)) + chunks * weight_read)
+            spill = max(act_blocks - plan.memory.stage_act_capacity(s), 0)
+            pcie = layers * (cm.load_w + cm.load_kv.eval(float(kv_blocks)) + cm.load_act.eval(float(spill)))
+            gpu_max = max(gpu_max, gpu)
+            pcie_max = max(pcie_max, pcie)
+        t = max(gpu_max / (1.0 - min(bubble, MAX_BUBBLE)), pcie_max)
+        t_step = min(t_step, t)
+    return batch / t_step
+
+
+def tune(model, sys, wl):
+    """Mirror of plan::autotune::tune: enumerate the joint space and keep
+    the best-scoring plan; ties keep the FIRST candidate, which is the
+    historical count-balanced layer-major lowering."""
+    pp = sys.pp
+    nl = model.num_layers
+    assert nl >= pp, "model has %d layers but the topology has %d stages" % (nl, pp)
+    best = None  # (Candidate, ExecutionPlan)
+    candidates = []
+    for rule in (COUNT_BALANCED, MEMORY_WEIGHTED):
+        counts = split_counts(model, sys, rule)
+        axes = [(LAYER_MAJOR, None)] + [(ONE_F_ONE_B, c) for c in range(2, pp + 1)]
+        for schedule, tc in axes:
+            plan = ExecutionPlan(model, sys, schedule=schedule, counts=counts, tuned_chunks=tc)
+            score = score_plan(model, sys, plan, wl)
+            cand = Candidate(plan.schedule, rule, plan.inflight_chunks(), score)
+            if best is None or score > best[0].score:
+                best = (cand, plan)
+            candidates.append(cand)
+    return TuneReport(best[1], best[0], candidates)
 
 
 # ---------------------------------------------------------------- timeline
@@ -713,13 +928,23 @@ def simulate(model, sys, system, wl, bubble_aware=True):
     comparing against the committed goldens).
     """
     sched = resolve_schedule(sys)
-    if sched == AUTO:
+    # Autotuned plans own the schedule axis — the joint search already
+    # scored both lowerings, so the Auto double-run would be redundant.
+    if sched == AUTO and sys.autotune is None:
         lm = simulate(model, sys.with_schedule(LAYER_MAJOR), system, wl, bubble_aware)
         ofob = simulate(model, sys.with_schedule(ONE_F_ONE_B), system, wl, bubble_aware)
         return lm if lm.throughput >= ofob.throughput else ofob
 
+    # Autotuned runs re-target the joint search at THIS workload — the
+    # tuner's whole point is scoring at the actual shape, not the fixed
+    # golden probe; the shape stored by with_autotune is only the default
+    # for plan consumers that never see a Workload.
+    if sys.autotune is not None:
+        sys = sys.with_autotune(AutotuneConfig(wl.batch, wl.prompt, wl.gen))
+
     cost = SimCost(model, sys, sched)
     plan = cost.plan
+    sched = plan.schedule  # the plan's resolved lowering (tuner may override)
     sizes = BlockSizes(model, sys.block_tokens)
     nl = model.num_layers
     bt = sys.block_tokens
@@ -731,7 +956,7 @@ def simulate(model, sys, system, wl, bubble_aware=True):
     host_cache = max(0, sys.host_memory - model.total_weight_bytes())
 
     def hybrid_ratio(bubble):
-        cm = analytic_cost_model(model, sys, sched)
+        cm = analytic_cost_model(model, sys, sched, plan=plan)
         a, k = hybrid_cache_allocation(cm, cost.gpu_act_block_capacity(), host_cache, sizes, bubble)
         return BlockRatio(max(a, 1), k)
 
@@ -752,11 +977,12 @@ def simulate(model, sys, system, wl, bubble_aware=True):
             mb = min(mb, caps.kv_max // max(kv_per_req_, 1))
         if act_per_req_ > 0:
             mb = min(mb, caps.act_max // max(act_per_req_, 1))
-        # Chunk-major micro-batching: the 1F1B schedule needs at least pp
-        # chunks in flight to overlap stages — cap the chunk size so the
-        # batch splits into >= pp micro-batches (GPipe-style).
+        # Chunk-major micro-batching: cap the chunk size so the batch
+        # splits into at least the plan's in-flight chunk count — pp for
+        # untuned plans (GPipe-style overlap), the tuned count when the
+        # autotuner picked one. No-op for layer-major / pp = 1.
         if sched == ONE_F_ONE_B and pp > 1:
-            mb = min(mb, div_ceil(wl.batch, pp))
+            mb = min(mb, div_ceil(wl.batch, plan.inflight_chunks()))
         return max(mb, 1)
 
     # ---- resolve the ACT:KV designation ratio -------------------------

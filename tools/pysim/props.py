@@ -114,6 +114,45 @@ def schedule_property(rng):
         assert ob.makespan <= lm.makespan * (1.0 + 1e-12), "resident chunk-major lost"
 
 
+# ---- property: joint plan autotuner (rust/tests/autotune.rs)
+
+
+def autotune_property(rng):
+    m = rng.choose([opt_30b(), opt_66b()])
+    tp = rng.choose([1, 2])
+    pp = rng.choose([1, 2, 4])
+    sys_ = SystemConfig(tp, pp)
+    if pp > 1 and rng.range(0, 2) == 1:
+        stage = rng.range(0, pp)
+        bump = rng.choose([48, 80]) << 30
+        sys_ = sys_.with_stage_memory(stage, bump)
+    wl = AutotuneConfig(rng.range(1, 257), rng.range(64, 1025), rng.range(16, 257))
+    rep = tune(m, sys_, wl)
+    # enumeration shape: 2 split rules x (layer-major + one chunk-major
+    # lowering per chunk count 2..=pp); the single-axis heuristics
+    # (schedule-only, split-only, baseline) are all in the candidate set
+    assert len(rep.candidates) == 2 * pp, f"{len(rep.candidates)} candidates at pp={pp}"
+    for c in rep.candidates:
+        assert rep.winner.score >= c.score, "winner must dominate every candidate"
+        assert c.score > 0.0 and c.score == c.score, f"degenerate score {c.score}"
+    # splits always partition the layers with every stage populated
+    for rule in (COUNT_BALANCED, MEMORY_WEIGHTED):
+        counts = split_counts(m, sys_, rule)
+        assert len(counts) == pp and sum(counts) == m.num_layers
+        assert all(c >= 1 for c in counts), f"empty stage in {counts}"
+    # uniform grids reproduce the historical count-balanced split
+    usys = SystemConfig(tp, pp)
+    assert split_counts(m, usys, MEMORY_WEIGHTED) == split_counts(m, usys, COUNT_BALANCED)
+    # the builder honors the winner
+    built = ExecutionPlan(m, sys_.with_autotune(wl))
+    assert built.schedule == rep.winner.schedule
+    assert built.inflight_chunks() == rep.winner.chunks
+    # pp = 1 is untuned: the single stage spans every layer, layer-major
+    if pp == 1:
+        assert built.schedule == LAYER_MAJOR and built.inflight_chunks() == 1
+        assert built.stages[0].layer_count() == m.num_layers
+
+
 # ---- property 2: bubble-aware Algorithm 1 (policy/allocation.rs)
 
 
@@ -254,6 +293,9 @@ if __name__ == "__main__":
     check("memory-plan-invariants", 100, memory_plan_invariants_property)
     check("memory-plan-monotone", 100, memory_plan_monotone_property)
     print(f"memory-plan suites: 3x100 cases OK ({time.time()-t0:.1f}s)")
+    t0 = time.time()
+    check("autotune-joint", 100, autotune_property)
+    print(f"autotune-joint: 100 cases OK ({time.time()-t0:.1f}s)")
     t0 = time.time()
     check("schedule-axis", 100, schedule_property)
     print(f"schedule-axis: 100 cases OK ({time.time()-t0:.1f}s)")

@@ -62,6 +62,41 @@ def main():
         r = simulate(m, s, system, wl)
         ok &= check(key, r.throughput, g["throughput"][key])
 
+    g = json.load(open("/root/repo/rust/tests/golden/autotune_hetmem.json"))
+    wl = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+    at = AutotuneConfig(wl.batch, wl.prompt, wl.gen)
+    t = g["topology"]
+    s = SystemConfig(t["tp"], t["pp"]).with_stage_memory(
+        t["skewed_stage"], t["skewed_memory_gb"] << 30
+    )
+    print("golden autotune_hetmem (joint tuner vs single-axis heuristics):")
+    rep = tune(opt_66b(), s, at)
+    w = g["winner"]
+    for name, got, want in [
+        ("winner.schedule", rep.winner.schedule, w["schedule"]),
+        ("winner.layer_split", rep.winner.layer_split, w["layer_split"]),
+        ("winner.chunks", rep.winner.chunks, w["chunks"]),
+    ]:
+        match = got == want
+        ok &= match
+        print(f"  {'OK ' if match else 'FAIL'} {name}: got {got!r} want {want!r}")
+    variants = [
+        ("baseline", s),
+        ("schedule_only", s.with_schedule(AUTO)),
+        ("split_only", s.with_layer_split(MEMORY_WEIGHTED)),
+        ("autotuned", s.with_autotune(at)),
+    ]
+    tps = {}
+    for key, sv in variants:
+        tps[key] = simulate(opt_66b(), sv, HYBRID, wl).throughput
+        ok &= check(key, tps[key], g["throughput"][key])
+    best_single = max(tps["baseline"], tps["schedule_only"], tps["split_only"])
+    margin = tps["autotuned"] / best_single - 1.0
+    ok &= check("margin", margin, g["margin"], tol=1e-3)
+    beats = margin > 0.0
+    ok &= beats
+    print(f"  {'OK ' if beats else 'FAIL'} autotuned beats best single-axis by {margin:+.2%}")
+
     print("ALL OK" if ok else "MISMATCH")
     return 0 if ok else 1
 
