@@ -30,7 +30,7 @@ pub use autoscaler::{Autoscaler, CandidateScore, GpuPrice, PriceTable};
 pub use replica::Replica;
 pub use router::{Route, RoutePolicy, Router, SessionEntry, SessionTable};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{ModelConfig, SystemConfig};
 use crate::engine::Request;
@@ -71,6 +71,7 @@ impl Fleet {
         seed: u64,
         prices: &PriceTable,
     ) -> Self {
+        // lint: allow(panicfree:panic) fleet-construction invariant, not reachable from request data
         assert!(!systems.is_empty(), "a fleet needs at least one replica");
         let replicas: Vec<Replica> = systems
             .iter()
@@ -127,21 +128,41 @@ impl Fleet {
             .owner(sr.session)
             .filter(|e| e.replica < self.replicas.len())
             .map(|e| {
-                self.replicas[e.replica]
-                    .session_cached_tokens(sr.session)
+                self.replicas
+                    .get(e.replica)
+                    .and_then(|r| r.session_cached_tokens(sr.session))
                     .unwrap_or(0)
             });
         let route = self
             .router
             .route_with_census(sr.session, sr.history_len, &loads, census);
         debug_assert!(sr.history_len < sr.req.prompt.len(), "a turn adds new tokens");
-        let prompt = sr.req.prompt[route.cached_prefix..].to_vec();
+        // The router guarantees `cached_prefix <= history_len <
+        // prompt.len()` and `replica < len`; a violated guarantee drops
+        // this one request with an error instead of panicking the fleet.
+        let prompt = sr
+            .req
+            .prompt
+            .get(route.cached_prefix..)
+            .map(<[i32]>::to_vec)
+            .ok_or_else(|| {
+                anyhow!(
+                    "cached prefix {} exceeds the {}-token prompt of request {}",
+                    route.cached_prefix,
+                    sr.req.prompt.len(),
+                    sr.req.id
+                )
+            })?;
         let req = Request::new(sr.req.id, prompt, sr.req.max_new);
-        self.replicas[route.replica].submit(req, sr.arrival)?;
+        let replica = self
+            .replicas
+            .get_mut(route.replica)
+            .ok_or_else(|| anyhow!("router picked out-of-range replica {}", route.replica))?;
+        replica.submit(req, sr.arrival)?;
         // After serving, the replica holds this turn's full context plus
         // its reply — the prefix the session's NEXT turn can reuse.
-        let retained = sr.req.prompt.len() + sr.req.max_new;
-        self.replicas[route.replica].note_session(sr.session, retained);
+        let retained = sr.req.prompt.len().saturating_add(sr.req.max_new);
+        replica.note_session(sr.session, retained);
         self.router.record(sr.session, route.replica, retained);
         Ok(route)
     }

@@ -135,6 +135,7 @@ impl Replica {
         while self.retained_tokens > self.token_capacity && self.sessions.len() > 1 {
             let oldest = self
                 .sessions
+                // lint: allow(determinism:map-iteration) min over unique touch stamps — order-independent
                 .iter()
                 .min_by_key(|(_, &(_, touch))| touch)
                 .map(|(&k, _)| k)

@@ -78,6 +78,7 @@ impl SessionTable {
     pub const DEFAULT_CAPACITY: usize = 1 << 16;
 
     pub fn with_capacity(capacity: usize) -> Self {
+        // lint: allow(panicfree:panic) fleet-construction invariant, not reachable from a request
         assert!(capacity >= 1, "session table needs room for one session");
         Self {
             map: HashMap::new(),
@@ -98,6 +99,7 @@ impl SessionTable {
     /// the least-recently-recorded session if the table is full.
     pub fn record(&mut self, session: u64, replica: usize, cached_tokens: usize) {
         let touch = self.clock;
+        // lint: allow(panicfree:arith) u64 stamp: one increment per recorded turn cannot overflow
         self.clock += 1;
         self.map.insert(
             session,
@@ -110,13 +112,14 @@ impl SessionTable {
             },
         );
         while self.map.len() > self.capacity {
-            let oldest = self
-                .map
-                .iter()
-                .min_by_key(|(_, s)| s.touch)
-                .map(|(&k, _)| k)
-                .expect("non-empty over-capacity map");
-            self.map.remove(&oldest);
+            // lint: allow(determinism:map-iteration) min over unique touch stamps — order-independent
+            let oldest = self.map.iter().min_by_key(|(_, s)| s.touch).map(|(&k, _)| k);
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                }
+                None => break, // unreachable: len > capacity >= 1
+            }
         }
     }
 
@@ -194,12 +197,18 @@ impl Router {
     /// Least-in-flight replica; ties broken by one seeded draw over the
     /// tied ids (in id order), so the choice is stable per seed.
     fn least_loaded(&mut self, loads: &[usize]) -> usize {
-        let min = *loads.iter().min().expect("empty fleet");
-        let ties: Vec<usize> = (0..loads.len()).filter(|&i| loads[i] == min).collect();
+        // An empty census can only reach here through a caller bug
+        // ([`Router::route_with_census`] rejects empty fleets up front);
+        // answer replica 0 instead of panicking mid-route.
+        let min = loads.iter().copied().min().unwrap_or(0);
+        let ties: Vec<usize> = (0..loads.len())
+            .filter(|&i| loads.get(i).copied() == Some(min))
+            .collect();
         if ties.len() == 1 {
-            ties[0]
+            ties.first().copied().unwrap_or(0)
         } else {
-            ties[self.rng.range(0, ties.len())]
+            let pick = self.rng.range(0, ties.len().max(1));
+            ties.get(pick).copied().unwrap_or(0)
         }
     }
 
@@ -233,12 +242,13 @@ impl Router {
         owner_census: Option<usize>,
     ) -> Route {
         let n = loads.len();
+        // lint: allow(panicfree:panic) fleet-shape invariant (Fleet::new rejects empty fleets), not request data
         assert!(n > 0, "routing into an empty fleet");
         let owner = self.sessions.owner(session).filter(|e| e.replica < n);
         let replica = match self.policy {
             RoutePolicy::RoundRobin => {
                 let c = self.rr_next % n;
-                self.rr_next = (self.rr_next + 1) % n;
+                self.rr_next = (self.rr_next % n).wrapping_add(1) % n;
                 c
             }
             RoutePolicy::LeastQueueDepth => self.least_loaded(loads),
@@ -256,9 +266,9 @@ impl Router {
         };
         if history_len > 0 {
             if cached_prefix > 0 {
-                self.hits += 1;
+                self.hits = self.hits.saturating_add(1);
             } else {
-                self.misses += 1;
+                self.misses = self.misses.saturating_add(1);
             }
         }
         Route {

@@ -40,6 +40,9 @@ impl Measurement {
 }
 
 /// Time `f` with `warmup` discarded runs and `reps` measured runs.
+// The harness exists to measure wall-clock time; `Instant::now` is
+// legitimate here (see clippy.toml disallowed-methods).
+#[allow(clippy::disallowed_methods)]
 pub fn time<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
     for _ in 0..warmup {
         f();

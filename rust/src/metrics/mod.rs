@@ -70,7 +70,7 @@ impl ServeReport {
     /// Generation-only throughput (tokens/s over the makespan).
     pub fn gen_throughput(&self) -> f64 {
         if self.makespan_secs > 0.0 {
-            self.generated_tokens as f64 / self.makespan_secs
+            crate::util::units::tokens_f64(self.generated_tokens) / self.makespan_secs
         } else {
             0.0
         }
@@ -407,6 +407,18 @@ impl SloReport {
             preemptions += r.preemptions;
             makespan = makespan.max(r.makespan_secs);
         }
+        // Canonicalize the pooled order: percentiles re-sort anyway, but
+        // the f64 mean accumulates in pooled order, so without this the
+        // merged report would drift by ulps under a replica permutation.
+        // total_cmp keys make the sort itself deterministic (no NaN trap).
+        samples.sort_by(|a, b| {
+            a.arrival
+                .total_cmp(&b.arrival)
+                .then(a.admitted.total_cmp(&b.admitted))
+                .then(a.first_token.total_cmp(&b.first_token))
+                .then(a.finished.total_cmp(&b.finished))
+                .then(a.generated.cmp(&b.generated))
+        });
         SloReport::from_timings(submitted, &samples, slo, makespan, preemptions, &depths)
     }
 
@@ -488,7 +500,8 @@ impl FleetReport {
     ) -> Self {
         let fleet = SloReport::merge(&per_replica, slo);
         let cost_per_token = if fleet.generated_tokens > 0 {
-            cost_per_hour * (fleet.makespan_secs / 3600.0) / fleet.generated_tokens as f64
+            cost_per_hour * (fleet.makespan_secs / 3600.0)
+                / crate::util::units::tokens_f64(fleet.generated_tokens)
         } else {
             0.0
         };

@@ -61,6 +61,9 @@ impl PjrtRuntime {
     /// Ensure `entry` is compiled; returns nothing (hot path uses
     /// [`Self::execute`]). Useful for warm-up so first-token latency does
     /// not include compilation.
+    // Genuine wall-clock measurement of real compilation: the one place
+    // `Instant::now` is allowed (see clippy.toml disallowed-methods).
+    #[allow(clippy::disallowed_methods)]
     pub fn warm(&mut self, entry_name: &str) -> Result<()> {
         if !self.exes.contains_key(entry_name) {
             let entry = self
@@ -86,6 +89,8 @@ impl PjrtRuntime {
 
     /// Execute `entry` with `args`; returns the tuple elements as host
     /// tensors plus the measured wall-clock seconds of the execution.
+    // Genuine wall-clock measurement of real PJRT execution.
+    #[allow(clippy::disallowed_methods)]
     pub fn execute(&mut self, entry: &Entry, args: &[Literal]) -> Result<(Vec<Tensor>, f64)> {
         anyhow::ensure!(
             args.len() == entry.inputs.len(),
@@ -125,6 +130,8 @@ impl PjrtRuntime {
 
     /// Execute with borrowed literals (hot path: weight literals are
     /// cached by the engine and only per-call data is marshalled).
+    // Genuine wall-clock measurement of real PJRT execution.
+    #[allow(clippy::disallowed_methods)]
     pub fn execute_refs(
         &mut self,
         entry: &Entry,
@@ -174,7 +181,9 @@ impl PjrtRuntime {
     /// Per-entry execution statistics (name → stats), sorted by time.
     pub fn stats(&self) -> Vec<(String, ExecStats)> {
         let mut v: Vec<_> = self.stats.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
-        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        // total_cmp + name tiebreak: the map iteration order above is
+        // arbitrary, so equal times must not leak it into the report.
+        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs).then_with(|| a.0.cmp(&b.0)));
         v
     }
 

@@ -390,6 +390,7 @@ impl StepEngine for AnalyticEngine {
 
         // ---- collect fresh completions ------------------------------
         let mut fresh = Vec::new();
+        // lint: allow(determinism:map-iteration) every done state is visited exactly once and `fresh` is sorted by id below
         for (&id, st) in self.states.iter_mut() {
             if st.done && !st.reported {
                 st.reported = true;

@@ -333,7 +333,7 @@ impl<E: StepEngine> Scheduler<E> {
         // Keep the queue sorted by arrival (stable for equal stamps).
         let pos = self.waiting.partition_point(|w| w.arrival <= arrival);
         self.waiting.insert(pos, Waiting { arrival, req });
-        self.submitted += 1;
+        self.submitted = self.submitted.saturating_add(1);
         Ok(())
     }
 
@@ -404,7 +404,12 @@ impl<E: StepEngine> Scheduler<E> {
                     break;
                 }
             }
-            let w = self.waiting.pop_front().unwrap();
+            // The loop head just saw a front entry; a vanished queue is
+            // an internal inconsistency, answered as an error rather
+            // than a panic mid-serve.
+            let Some(w) = self.waiting.pop_front() else {
+                anyhow::bail!("admission queue emptied out from under the scheduler");
+            };
             self.eng.admit(&w.req)?;
             let booking = self.ledger.reserve(need);
             self.admitted.insert(
@@ -416,7 +421,7 @@ impl<E: StepEngine> Scheduler<E> {
                     booking,
                 },
             );
-            self.reserved_total += need;
+            self.reserved_total = self.reserved_total.saturating_add(need);
             self.running.push(id);
         }
 
@@ -443,11 +448,13 @@ impl<E: StepEngine> Scheduler<E> {
         for c in done {
             self.running.retain(|&x| x != c.id);
             self.preempted.retain(|&x| x != c.id);
-            let rec = self
-                .admitted
-                .remove(&c.id)
-                .expect("completion for a request the scheduler never admitted");
-            self.reserved_total -= rec.reserved;
+            let Some(rec) = self.admitted.remove(&c.id) else {
+                anyhow::bail!(
+                    "engine reported a completion for request {} the scheduler never admitted",
+                    c.id
+                );
+            };
+            self.reserved_total = self.reserved_total.saturating_sub(rec.reserved);
             self.ledger.release(&rec.booking);
             self.timings.push(RequestTiming {
                 arrival: rec.arrival,
@@ -474,7 +481,10 @@ impl<E: StepEngine> Scheduler<E> {
     fn preempt_until(&mut self, need: usize) -> Result<bool> {
         let cost = self.eng.cost_model();
         let sizes = self.eng.block_sizes();
-        let discount = sizes.kv_bytes - sizes.act_bytes;
+        // KV blocks are never smaller than ACT blocks (they carry both
+        // K and V); saturate anyway so a degenerate sizing can only cost
+        // a zero discount, not a panic.
+        let discount = sizes.kv_bytes.saturating_sub(sizes.act_bytes);
         let pressure = self.eng.pressure_at(self.ledger.pressed_device(need));
         while !self.ledger.fits(need) {
             let mut candidates = Vec::with_capacity(self.running.len());
@@ -494,17 +504,19 @@ impl<E: StepEngine> Scheduler<E> {
             // blocks are striped over. The per-device discounts round DOWN
             // (ledger stripe ratios) so the remaining stripes still cover
             // the remaining worst-case footprint.
-            let rec = self.admitted.get_mut(&v.id).expect("victim not admitted");
-            let freed = (receipt.blocks() * discount).min(rec.reserved);
+            let Some(rec) = self.admitted.get_mut(&v.id) else {
+                anyhow::bail!("victim {} was never admitted", v.id);
+            };
+            let freed = receipt.blocks().saturating_mul(discount).min(rec.reserved);
             let freed_booking = self.ledger.discount(freed).clamped_to(&rec.booking);
-            rec.reserved -= freed;
+            rec.reserved = rec.reserved.saturating_sub(freed);
             rec.booking.shrink(&freed_booking);
-            self.reserved_total -= freed;
+            self.reserved_total = self.reserved_total.saturating_sub(freed);
             self.ledger.release(&freed_booking);
             self.eng.pause(v.id)?;
             self.running.retain(|&x| x != v.id);
             self.preempted.push(v.id);
-            self.preemptions += 1;
+            self.preemptions = self.preemptions.saturating_add(1);
         }
         Ok(true)
     }

@@ -21,8 +21,6 @@
 //! memory-heterogeneous grids. [`StagePressure::uniform`] (scales 1,
 //! window 0) reproduces the rig-wide scoring bit-for-bit.
 
-use std::cmp::Ordering;
-
 use crate::cache::BlockSizes;
 use crate::policy::CostModel;
 
@@ -148,9 +146,12 @@ pub fn select_victim_pressed(
         .copied()
         .filter(|v| v.kv_blocks > 0)
         .max_by(|a, b| {
+            // total_cmp, not partial_cmp: a NaN score (poisoned cost
+            // model) must still order deterministically instead of
+            // collapsing every comparison to Equal and letting the
+            // iterator's internal order pick the victim.
             demotion_score_pressed(a, cost, sizes, pressure)
-                .partial_cmp(&demotion_score_pressed(b, cost, sizes, pressure))
-                .unwrap_or(Ordering::Equal)
+                .total_cmp(&demotion_score_pressed(b, cost, sizes, pressure))
         })
 }
 

@@ -104,7 +104,10 @@ fn accept_loop(listener: TcpListener, tx: Sender<Pending>, stop: Arc<AtomicBool>
             Ok((stream, _)) => {
                 let tx = tx.clone();
                 let base = next_internal;
-                next_internal += 1 << 20; // id space per connection
+                // Id space per connection; wrapping on (astronomically
+                // many) connections only risks an id collision, which the
+                // scheduler rejects as a duplicate.
+                next_internal = next_internal.wrapping_add(1 << 20);
                 std::thread::spawn(move || {
                     let _ = connection_loop(stream, tx, base);
                 });
@@ -139,9 +142,9 @@ fn connection_loop(stream: TcpStream, tx: Sender<Pending>, id_base: u64) -> Resu
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line, id_base + n) {
+        match parse_request(&line, id_base.wrapping_add(n)) {
             Ok((req, client_id)) => {
-                n += 1;
+                n = n.wrapping_add(1);
                 if tx
                     .send(Pending {
                         req,
@@ -181,18 +184,30 @@ fn connection_loop(stream: TcpStream, tx: Sender<Pending>, id_base: u64) -> Resu
 /// path at all.
 const MAX_NEW_CEILING: usize = 1 << 20;
 
+/// Tokens generated when a request omits `max_new`.
+const DEFAULT_MAX_NEW: usize = 16;
+
 fn parse_request(line: &str, internal_id: u64) -> Result<(Request, i64)> {
     let j = Json::parse(line).context("bad json")?;
-    let client_id = j.get("id").as_i64().unwrap_or(internal_id as i64);
+    // A present-but-malformed field is a structured reject, not a silent
+    // fallback: `{"id": "seven"}` or `{"max_new": 2.5}` used to be
+    // served under defaulted values the client never asked for.
+    let client_id = match j.get("id") {
+        Json::Null => internal_id as i64,
+        v => v.as_i64().context("id must be an integer")?,
+    };
     let prompt: Vec<i32> = j
         .get("prompt")
         .as_arr()
         .context("prompt must be an array")?
         .iter()
-        .map(|v| v.as_i64().map(|x| x as i32))
+        .map(|v| v.as_i64().and_then(|x| i32::try_from(x).ok()))
         .collect::<Option<_>>()
-        .context("prompt must be integers")?;
-    let max_new = j.get("max_new").as_usize().unwrap_or(16);
+        .context("prompt must be an array of i32 token ids")?;
+    let max_new = match j.get("max_new") {
+        Json::Null => DEFAULT_MAX_NEW,
+        v => v.as_usize().context("max_new must be a non-negative integer")?,
+    };
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
     anyhow::ensure!(max_new >= 1, "max_new must be at least 1");
     anyhow::ensure!(
@@ -326,10 +341,30 @@ mod tests {
     #[test]
     fn parse_request_defaults_and_errors() {
         let (req, _) = parse_request(r#"{"prompt": [5]}"#, 1).unwrap();
-        assert_eq!(req.max_new, 16);
+        assert_eq!(req.max_new, DEFAULT_MAX_NEW);
         assert!(parse_request(r#"{"prompt": []}"#, 1).is_err());
         assert!(parse_request(r#"{"prompt": "x"}"#, 1).is_err());
         assert!(parse_request("not json", 1).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_malformed_fields_instead_of_defaulting() {
+        // Present-but-wrong-type fields are structured rejects: the old
+        // parser silently served {"max_new": "lots"} with the default,
+        // and truncated out-of-range token ids into valid-looking ones.
+        assert!(parse_request(r#"{"id": "seven", "prompt": [1]}"#, 1).is_err());
+        assert!(parse_request(r#"{"id": 1.5, "prompt": [1]}"#, 1).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": "lots"}"#, 1).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": 2.5}"#, 1).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": -3}"#, 1).is_err());
+        // token ids must fit i32 — 2^40 used to wrap to a bogus token
+        let big = format!(r#"{{"prompt": [{}], "max_new": 1}}"#, 1u64 << 40);
+        assert!(parse_request(&big, 1).is_err());
+        assert!(parse_request(r#"{"prompt": [1, -2147483649]}"#, 1).is_err());
+        // a deeply nested hostile line is a parse error, not a stack
+        // overflow on the connection thread
+        let hostile = format!(r#"{{"prompt": {}1{}}}"#, "[".repeat(4096), "]".repeat(4096));
+        assert!(parse_request(&hostile, 1).is_err());
     }
 
     #[test]

@@ -28,6 +28,13 @@ pub struct JsonError {
     pub msg: String,
 }
 
+/// Maximum container nesting the parser accepts. Without a bound, a
+/// hostile `[[[[…` request line recurses once per bracket and overflows
+/// the serving thread's stack — an abort, not even a catchable panic.
+/// Every artifact/golden/wire document this crate produces nests a
+/// handful of levels deep.
+pub const MAX_DEPTH: usize = 128;
+
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
@@ -133,7 +140,11 @@ impl Json {
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let bytes = text.as_bytes();
-        let mut p = Parser { bytes, pos: 0 };
+        let mut p = Parser {
+            bytes,
+            pos: 0,
+            depth: 0,
+        };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -213,6 +224,7 @@ impl fmt::Display for Json {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -221,6 +233,15 @@ impl<'a> Parser<'a> {
             offset: self.pos,
             msg: msg.to_string(),
         }
+    }
+
+    /// Guard one level of container recursion (see [`MAX_DEPTH`]).
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1; // lint: allow(panicfree:arith) bounded by the MAX_DEPTH check below
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("exceeds maximum nesting depth"));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -296,7 +317,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -375,6 +397,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let r = self.array_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn array_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -397,6 +426,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let r = self.object_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn object_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -469,6 +505,23 @@ mod tests {
         for bad in ["", "{", "[1,", "{\"a\":}", "tru", "1 2", "\"\\x\""] {
             assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
         }
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // A hostile deeply-nested line must come back as a parse error,
+        // not blow the serving thread's stack.
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{}", err.msg);
+        let hostile = "{\"a\":".repeat(100_000) + "1" + &"}".repeat(100_000);
+        assert!(Json::parse(&hostile).is_err());
+        // ... while documents at or under the bound still parse, and the
+        // depth budget resets between sibling containers.
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        let wide = format!("[{}]", vec!["[[[]]]"; 64].join(","));
+        assert!(Json::parse(&wide).is_ok());
     }
 
     #[test]

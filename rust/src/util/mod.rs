@@ -9,6 +9,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod units;
 
 pub use json::Json;
 pub use rng::Rng;

@@ -1,0 +1,56 @@
+//! Named unit-cast helpers.
+//!
+//! The unit-discipline lint (`tools/lint`, pass `units`) requires
+//! unit-suffixed values (`*_bytes`, `*_blocks`, `*_tokens`, `*_secs`,
+//! `*_frac`) to cross numeric domains through a named helper, so the
+//! unit survives in the code instead of vanishing into a bare `as`
+//! cast. Each helper is an `#[inline]` identity-cost wrapper — the
+//! generated code is exactly the cast it replaces.
+//!
+//! This file is the helper definition site and is exempt from the pass
+//! (see `tools/lint/pass_units.py`).
+
+/// Byte count into f64 arithmetic (bandwidth/roofline math).
+#[inline]
+pub fn bytes_f64(n_bytes: usize) -> f64 {
+    n_bytes as f64
+}
+
+/// Block count into f64 arithmetic (Algorithm 1 ratio math).
+#[inline]
+pub fn blocks_f64(n_blocks: usize) -> f64 {
+    n_blocks as f64
+}
+
+/// Token count into f64 arithmetic (throughput/goodput math).
+#[inline]
+pub fn tokens_f64(n_tokens: usize) -> f64 {
+    n_tokens as f64
+}
+
+/// Seconds into f64 from an integer tick count.
+#[inline]
+pub fn secs_f64(n_secs: usize) -> f64 {
+    n_secs as f64
+}
+
+/// A [0, 1] fraction of a byte budget, truncated to whole bytes.
+#[inline]
+pub fn frac_of_bytes(frac: f64, n_bytes: usize) -> usize {
+    (n_bytes as f64 * frac) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn helpers_are_the_cast_they_replace() {
+        assert_eq!(bytes_f64(1 << 30).to_bits(), ((1usize << 30) as f64).to_bits());
+        assert_eq!(blocks_f64(7).to_bits(), 7.0f64.to_bits());
+        assert_eq!(tokens_f64(0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(secs_f64(3).to_bits(), 3.0f64.to_bits());
+        assert_eq!(frac_of_bytes(0.5, 1024), 512);
+        assert_eq!(frac_of_bytes(0.0, 1024), 0);
+    }
+}

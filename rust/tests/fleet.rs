@@ -192,6 +192,106 @@ fn property_merge_is_partition_invariant() {
     });
 }
 
+/// A [`FleetReport`] is invariant to the ORDER replicas are listed in:
+/// merge canonicalizes the pooled samples before deriving means, so
+/// rotating and swapping the per-replica reports changes nothing —
+/// every merged scalar bit-for-bit, including the order-sensitive f64
+/// means (`queue_mean`, `mean_queue_depth`, `cost_per_token`,
+/// `load_imbalance`).
+#[test]
+fn property_fleet_report_invariant_to_replica_order() {
+    prop::check("fleet-report-replica-order", 100, |rng| {
+        let k = rng.range(2, 6);
+        let slo = SloSpec::default();
+        let reports: Vec<SloReport> = (0..k)
+            .map(|_| {
+                let n = rng.range(0, 12);
+                let timings: Vec<RequestTiming> = (0..n)
+                    .map(|_| {
+                        let arrival = rng.f64() * 10.0;
+                        let queue = rng.f64();
+                        let ttft = rng.f64() * 2.0;
+                        let generated = rng.range(1, 20);
+                        let tpot = rng.f64() * 0.5;
+                        let first_token = arrival + queue + ttft;
+                        RequestTiming {
+                            arrival,
+                            admitted: arrival + queue,
+                            first_token,
+                            finished: first_token + tpot * generated as f64,
+                            generated,
+                        }
+                    })
+                    .collect();
+                let d = rng.range(0, 5);
+                let depths: Vec<usize> = (0..d).map(|_| rng.range(0, 9)).collect();
+                let extra = rng.range(0, 3);
+                let makespan = rng.f64() * 30.0;
+                let preempt = rng.range(0, 4);
+                SloReport::from_timings(n + extra, &timings, &slo, makespan, preempt, &depths)
+            })
+            .collect();
+
+        // rotate then swap: together these generate any permutation class
+        // we care about while keeping the pysim mirror's draw order flat
+        let mut permuted = reports.clone();
+        let rot = rng.range(0, k);
+        permuted.rotate_left(rot);
+        let (i, j) = (rng.range(0, k), rng.range(0, k));
+        permuted.swap(i, j);
+
+        let a = hybridserve::metrics::FleetReport::new(reports, &slo, 2.49, 3, 1);
+        let b = hybridserve::metrics::FleetReport::new(permuted, &slo, 2.49, 3, 1);
+
+        assert_eq!(a.replicas, b.replicas);
+        assert_eq!(a.fleet.submitted, b.fleet.submitted);
+        assert_eq!(a.fleet.completed, b.fleet.completed);
+        assert_eq!(a.fleet.generated_tokens, b.fleet.generated_tokens);
+        assert_eq!(a.fleet.preemptions, b.fleet.preemptions);
+        assert_eq!(a.fleet.max_queue_depth, b.fleet.max_queue_depth);
+        for (x, y) in [
+            (a.fleet.makespan_secs, b.fleet.makespan_secs),
+            (a.fleet.queue_mean, b.fleet.queue_mean),
+            (a.fleet.queue_p50, b.fleet.queue_p50),
+            (a.fleet.queue_p95, b.fleet.queue_p95),
+            (a.fleet.queue_p99, b.fleet.queue_p99),
+            (a.fleet.queue_max, b.fleet.queue_max),
+            (a.fleet.ttft_p50, b.fleet.ttft_p50),
+            (a.fleet.ttft_p95, b.fleet.ttft_p95),
+            (a.fleet.ttft_p99, b.fleet.ttft_p99),
+            (a.fleet.tpot_p50, b.fleet.tpot_p50),
+            (a.fleet.tpot_p95, b.fleet.tpot_p95),
+            (a.fleet.tpot_p99, b.fleet.tpot_p99),
+            (a.fleet.latency_p50, b.fleet.latency_p50),
+            (a.fleet.latency_p95, b.fleet.latency_p95),
+            (a.fleet.latency_p99, b.fleet.latency_p99),
+            (a.fleet.mean_queue_depth, b.fleet.mean_queue_depth),
+            (a.fleet.throughput, b.fleet.throughput),
+            (a.fleet.goodput, b.fleet.goodput),
+            (a.fleet.slo_attainment, b.fleet.slo_attainment),
+            (a.cost_per_token, b.cost_per_token),
+            (a.load_imbalance, b.load_imbalance),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "field drifted under replica permutation");
+        }
+        // pooled samples are canonically ordered, so they match pairwise
+        assert_eq!(a.fleet.samples.len(), b.fleet.samples.len());
+        for (x, y) in a.fleet.samples.iter().zip(&b.fleet.samples) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.admitted.to_bits(), y.admitted.to_bits());
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits());
+            assert_eq!(x.finished.to_bits(), y.finished.to_bits());
+            assert_eq!(x.generated, y.generated);
+        }
+        // depth samples pool in replica order; only the multiset is stable
+        let mut da = a.fleet.depth_samples.clone();
+        let mut db = b.fleet.depth_samples.clone();
+        da.sort_unstable();
+        db.sort_unstable();
+        assert_eq!(da, db);
+    });
+}
+
 // ------------------------------------------------------- tenant streams
 
 /// Each tenant's arrival stream is seeded independently (seed ^ FNV-1a

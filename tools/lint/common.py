@@ -1,0 +1,294 @@
+"""Shared infrastructure for pallas-lint passes.
+
+Everything here is deliberately toolchain-free: the passes analyse Rust
+source *text* (the container has no cargo), so this module provides a
+light lexical model of a Rust file — comment/string stripping that
+preserves line numbers, `#[cfg(test)] mod` elision, function-span
+extraction by brace matching — plus the `Finding` record, the
+`// lint: allow(...)` annotation grammar, and baseline fingerprinting.
+
+The model is heuristic by design. Passes err toward flagging and rely on
+two pressure valves: in-source allow annotations (for sites a human has
+judged) and the findings baseline (for accepted pre-existing debt).
+"""
+
+import json
+import os
+import re
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+# `// lint: allow(pass)` or `// lint: allow(pass:rule)` followed by a
+# mandatory free-text reason. The annotation suppresses matching findings
+# on its own line and on the line immediately below it.
+ALLOW_RE = re.compile(r"//\s*lint:\s*allow\((?P<pass>[a-z]+)(?::(?P<rule>[a-z-]+))?\)\s*(?P<reason>\S.*)?$")
+
+_LINE_COMMENT_RE = re.compile(r"//.*$")
+_CHAR_LIT_RE = re.compile(r"'(\\.|[^'\\])'")
+
+
+class Finding:
+    """One lint hit: where, which rule, and the offending text."""
+
+    def __init__(self, pass_name, rule, path, line, message, snippet):
+        self.pass_name = pass_name
+        self.rule = rule
+        self.path = path  # repo-relative
+        self.line = line  # 1-based
+        self.message = message
+        self.snippet = snippet.strip()
+
+    def fingerprint(self):
+        """Line-number-free identity used by the baseline, so findings
+        survive unrelated edits above them in the file."""
+        snip = re.sub(r"\s+", " ", self.snippet)
+        return f"{self.pass_name}|{self.rule}|{self.path}|{snip}"
+
+    def to_dict(self):
+        return {
+            "pass": self.pass_name,
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "snippet": self.snippet,
+        }
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.pass_name}:{self.rule}] {self.message}\n    {self.snippet}"
+
+
+class RustFile:
+    """Lexical view of one Rust source file.
+
+    `lines` is the raw text; `code` is the same line count with comment
+    bodies, string/char-literal contents, and `#[cfg(test)]` modules
+    blanked out, so passes can regex without tripping on prose.
+    """
+
+    def __init__(self, path, text=None):
+        self.path = path
+        if text is None:
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+        self.lines = text.split("\n")
+        self.code = _strip_code(self.lines)
+        self.allows = _collect_allows(self.lines)
+        self._blank_test_mods()
+
+    def _blank_test_mods(self):
+        i = 0
+        n = len(self.code)
+        while i < n:
+            if "#[cfg(test)]" in self.code[i]:
+                # find the `{` of the mod/fn/impl that follows the attribute
+                j = i
+                depth = 0
+                opened = False
+                while j < n:
+                    for ch in self.code[j]:
+                        if ch == "{":
+                            depth += 1
+                            opened = True
+                        elif ch == "}":
+                            depth -= 1
+                    if opened and depth <= 0:
+                        break
+                    j += 1
+                for k in range(i, min(j + 1, n)):
+                    self.code[k] = ""
+                i = j + 1
+            else:
+                i += 1
+
+    def functions(self):
+        """Return [(name, start_line, end_line)] (1-based, inclusive) for
+        every `fn` in the stripped text, matched by brace counting."""
+        fn_re = re.compile(r"\bfn\s+(\w+)")
+        out = []
+        n = len(self.code)
+        i = 0
+        while i < n:
+            m = fn_re.search(self.code[i])
+            if not m:
+                i += 1
+                continue
+            name = m.group(1)
+            # advance to the opening brace (skip `;`-terminated trait sigs)
+            j = i
+            depth = 0
+            opened = False
+            sig_done = False
+            while j < n and not sig_done:
+                seg = self.code[j][m.end():] if j == i else self.code[j]
+                for ch in seg:
+                    if ch == "{":
+                        depth += 1
+                        opened = True
+                    elif ch == "}":
+                        depth -= 1
+                        if opened and depth == 0:
+                            sig_done = True
+                            break
+                    elif ch == ";" and not opened:
+                        sig_done = True  # declaration without a body
+                        break
+                if sig_done:
+                    break
+                j += 1
+            if opened:
+                out.append((name, i + 1, j + 1))
+            i += 1
+        return out
+
+    def allowed(self, finding):
+        """Does an in-source annotation cover this finding?"""
+        for line in (finding.line, finding.line - 1):
+            for pass_name, rule in self.allows.get(line, []):
+                if pass_name == finding.pass_name and (rule is None or rule == finding.rule):
+                    return True
+        return False
+
+
+def _strip_code(lines):
+    """Blank comments and string/char literals, preserving line count and
+    column positions of the surviving code. Handles nested `/* */` and
+    raw strings `r"..."` / `r#"..."#`."""
+    out = []
+    in_block = 0  # nesting depth of /* */
+    in_raw = None  # closing delimiter of an open raw string, e.g. '"#'
+    for raw_line in lines:
+        buf = []
+        i = 0
+        n = len(raw_line)
+        while i < n:
+            if in_raw is not None:
+                end = raw_line.find(in_raw, i)
+                if end == -1:
+                    buf.append(" " * (n - i))
+                    i = n
+                else:
+                    buf.append(" " * (end - i) + " " * len(in_raw))
+                    i = end + len(in_raw)
+                    in_raw = None
+                continue
+            if in_block:
+                if raw_line.startswith("*/", i):
+                    in_block -= 1
+                    buf.append("  ")
+                    i += 2
+                elif raw_line.startswith("/*", i):
+                    in_block += 1
+                    buf.append("  ")
+                    i += 2
+                else:
+                    buf.append(" ")
+                    i += 1
+                continue
+            ch = raw_line[i]
+            if raw_line.startswith("//", i):
+                buf.append(" " * (n - i))
+                i = n
+            elif raw_line.startswith("/*", i):
+                in_block = 1
+                buf.append("  ")
+                i += 2
+            elif ch == '"':
+                j = i + 1
+                while j < n:
+                    if raw_line[j] == "\\":
+                        j += 2
+                    elif raw_line[j] == '"':
+                        break
+                    else:
+                        j += 1
+                buf.append('"' + " " * (min(j, n) - i - 1))
+                if j < n:
+                    buf.append('"')
+                    i = j + 1
+                else:
+                    i = n  # unterminated on this line; treat as ending
+            elif ch == "r" and i + 1 < n and raw_line[i + 1] in '#"':
+                m = re.match(r'r(#*)"', raw_line[i:])
+                if m:
+                    in_raw = '"' + m.group(1)
+                    buf.append(" " * len(m.group(0)))
+                    i += len(m.group(0))
+                else:
+                    buf.append(ch)
+                    i += 1
+            else:
+                buf.append(ch)
+                i += 1
+        line = "".join(buf)
+        line = _CHAR_LIT_RE.sub(lambda m: "' '" if len(m.group(0)) == 3 else "'  '" + " " * (len(m.group(0)) - 4), line)
+        out.append(line)
+    return out
+
+
+def _collect_allows(lines):
+    allows = {}
+    for idx, line in enumerate(lines, start=1):
+        m = ALLOW_RE.search(line)
+        if m:
+            # registered at the annotation's own line; Finding-side
+            # lookup at (line, line-1) gives trailing and line-above
+            # placement without widening the window further.
+            allows.setdefault(idx, []).append((m.group("pass"), m.group("rule")))
+    return allows
+
+
+def rel(path):
+    p = os.path.abspath(path)
+    if p.startswith(REPO_ROOT + os.sep):
+        return os.path.relpath(p, REPO_ROOT)
+    return path
+
+
+def iter_rust_files(roots, exclude=()):
+    """Yield absolute paths of .rs files under repo-relative `roots`,
+    skipping repo-relative paths in `exclude`."""
+    excl = {os.path.normpath(e) for e in exclude}
+    for root in roots:
+        abs_root = os.path.join(REPO_ROOT, root)
+        if os.path.isfile(abs_root):
+            if os.path.normpath(root) not in excl:
+                yield abs_root
+            continue
+        for dirpath, _, names in os.walk(abs_root):
+            for name in sorted(names):
+                if not name.endswith(".rs"):
+                    continue
+                p = os.path.join(dirpath, name)
+                if os.path.normpath(rel(p)) in excl:
+                    continue
+                yield p
+
+
+def load_baseline(path):
+    if not os.path.exists(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        return json.load(f).get("findings", {})
+
+
+def apply_baseline(findings, baseline):
+    """Return findings NOT absorbed by the baseline: for each fingerprint
+    the first `baseline[fp]` occurrences are accepted debt, the rest are
+    new."""
+    budget = dict(baseline)
+    fresh = []
+    for f in findings:
+        fp = f.fingerprint()
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+        else:
+            fresh.append(f)
+    return fresh
+
+
+def baseline_counts(findings):
+    counts = {}
+    for f in findings:
+        counts[f.fingerprint()] = counts.get(f.fingerprint(), 0) + 1
+    return dict(sorted(counts.items()))

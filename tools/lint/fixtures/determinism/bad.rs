@@ -1,0 +1,44 @@
+//! Known-bad fixture: every determinism rule must fire on this file.
+use std::collections::HashMap;
+use std::time::Instant;
+
+struct Tally {
+    counts: HashMap<u64, usize>,
+}
+
+impl Tally {
+    fn emit(&self) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        // rule: map-iteration (result order follows the hash seed)
+        for (k, v) in self.counts.iter() {
+            out.push((*k, *v));
+        }
+        out
+    }
+
+    fn emit_for(&self) -> usize {
+        let mut n = 0;
+        for k in &self.counts {
+            n += *k.1;
+        }
+        n
+    }
+
+    fn stamp(&self) -> f64 {
+        // rule: wall-clock
+        let t0 = Instant::now();
+        t0.elapsed().as_secs_f64()
+    }
+
+    fn shuffle_seed(&self) -> u64 {
+        // rule: unseeded-rng
+        let mut r = rand::thread_rng();
+        r.next_u64()
+    }
+
+    fn sorted(&self, mut xs: Vec<f64>) -> Vec<f64> {
+        // rule: float-sort
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs
+    }
+}

@@ -1,0 +1,40 @@
+//! Known-good fixture: determinism-clean equivalents of bad.rs.
+use std::collections::HashMap;
+
+struct Tally {
+    counts: HashMap<u64, usize>,
+}
+
+impl Tally {
+    fn emit(&self) -> Vec<(u64, usize)> {
+        let mut out: Vec<(u64, usize)> = Vec::new();
+        // lint: allow(determinism:map-iteration) sorted by key below, order-independent
+        for (k, v) in self.counts.iter() {
+            out.push((*k, *v));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn stamp(&self, virtual_now: f64) -> f64 {
+        virtual_now
+    }
+
+    fn sorted(&self, mut xs: Vec<f64>) -> Vec<f64> {
+        xs.sort_by(f64::total_cmp);
+        xs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_mods_are_exempt() {
+        // even a partial_cmp sort in a test module is out of scope
+        let mut xs = vec![2.0f64, 1.0];
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(xs[0], 1.0);
+    }
+}

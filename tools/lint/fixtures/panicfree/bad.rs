@@ -1,0 +1,16 @@
+//! Known-bad fixture: every panic-free rule must fire.
+pub fn handle(line: &str, ids: &[u64], slots: &mut Vec<usize>) -> u64 {
+    // rule: unwrap
+    let parsed: u64 = line.parse().unwrap();
+    // rule: index
+    let first = ids[0];
+    // rule: arith (unchecked add can overflow-panic in debug builds)
+    let next = first + parsed;
+    // rule: panic
+    assert!(next > 0, "must be positive");
+    if slots.is_empty() {
+        // rule: panic
+        panic!("no slots");
+    }
+    next
+}

@@ -1,0 +1,13 @@
+//! Known-good fixture: panic-free equivalents of bad.rs.
+use anyhow::{Context, Result};
+
+pub fn handle(line: &str, ids: &[u64]) -> Result<u64> {
+    let parsed: u64 = line.parse().context("id must be an integer")?;
+    let first = ids.first().copied().context("empty id batch")?;
+    let next = first.saturating_add(parsed);
+    // float arithmetic cannot panic and is exempt
+    let score = 0.5 * parsed as f64 + 1.0;
+    debug_assert!(score >= 0.0);
+    anyhow::ensure!(next > 0, "must be positive");
+    Ok(next)
+}

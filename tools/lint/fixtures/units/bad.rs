@@ -1,0 +1,14 @@
+//! Known-bad fixture: both unit-discipline rules must fire.
+pub fn mixes(kv_bytes: usize, block_tokens: usize, wait_secs: f64) -> f64 {
+    // rule: unit-mix (bytes + tokens is meaningless)
+    let nonsense = kv_bytes + block_tokens;
+    // rule: unit-mix (secs - frac)
+    let also_nonsense = wait_secs - load_frac();
+    // rule: unit-cast (bare `as` erases the unit)
+    let hidden = kv_bytes as f64;
+    hidden + also_nonsense + nonsense as f64
+}
+
+fn load_frac() -> f64 {
+    0.5
+}

@@ -1,0 +1,10 @@
+//! Known-good fixture: unit-clean equivalents of bad.rs.
+pub fn clean(kv_bytes: usize, block_tokens: usize, wait_secs: f64, bw: f64) -> f64 {
+    // same-unit arithmetic is fine
+    let total_bytes = kv_bytes + kv_bytes;
+    // multiply/divide legitimately change units (bytes / (bytes/sec) = sec)
+    let xfer_secs = crate::util::units::bytes_f64(total_bytes) / bw;
+    // tokens stay tokens
+    let budget_tokens = block_tokens * 2;
+    xfer_secs + wait_secs + crate::util::units::tokens_f64(budget_tokens)
+}

@@ -1,0 +1,149 @@
+"""Determinism pass: the simulator's contract is bit-reproducibility
+(goldens, pysim mirrors, seeded property suites), so anything that can
+inject platform- or hash-order-dependence into a result is a finding.
+
+Rules
+  map-iteration  iterating a HashMap/HashSet (order is hash-seeded) in a
+                 way that can feed ordered output. Sites proven
+                 order-independent (min/max over unique keys, visiting a
+                 set exactly once before sorting) carry an allow.
+  wall-clock     SystemTime / Instant::now in deterministic code — all
+                 time must come off the virtual timeline.
+  unseeded-rng   randomness not drawn from util::rng's seeded xoshiro
+                 streams (thread_rng, from_entropy, RandomState::new,
+                 any rand:: path).
+  float-sort     sort_by(partial_cmp): NaN-unstable comparator; use
+                 f64::total_cmp (utility sorts in util::stats are the
+                 audited exception).
+"""
+
+import re
+
+from common import Finding, RustFile, iter_rust_files, rel
+
+PASS = "determinism"
+
+# Modules whose results must be bit-reproducible.
+SCOPE = [
+    "rust/src/sim",
+    "rust/src/plan",
+    "rust/src/sched",
+    "rust/src/fleet",
+    "rust/src/workload",
+]
+
+# float-sort is repo-wide: a NaN-panicking comparator is wrong anywhere.
+# (benches/ and examples/ live at the repo top level, not under rust/.)
+FLOAT_SORT_SCOPE = ["rust/src", "benches", "examples"]
+FLOAT_SORT_EXCLUDE = ["rust/src/util/stats.rs"]
+
+_DECL_RE = re.compile(r"\b(\w+)\s*:\s*(?:&\s*(?:mut\s+)?)?Hash(?:Map|Set)\s*<")
+_BIND_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*(?::[^=]*)?=\s*Hash(?:Map|Set)\s*::")
+_ITER_METHODS = r"(?:iter|iter_mut|keys|values|values_mut|drain|into_iter)"
+_WALL_RE = re.compile(r"\bSystemTime\b|\bInstant::now\b")
+_RAND_RE = re.compile(r"\bthread_rng\b|\bfrom_entropy\b|\bRandomState::new\b|\brand::")
+_FLOAT_SORT_RE = re.compile(r"\bsort(?:_unstable)?_by\b[^;]*partial_cmp")
+
+
+def _map_names(rf):
+    """Identifiers in this file declared as HashMap/HashSet (fields,
+    params, or let-bindings)."""
+    names = set()
+    for line in rf.code:
+        for m in _DECL_RE.finditer(line):
+            names.add(m.group(1))
+        for m in _BIND_RE.finditer(line):
+            names.add(m.group(1))
+    names.discard("self")
+    return names
+
+
+def _scan_file(rf, findings, float_sort_only=False):
+    path = rel(rf.path)
+    if not float_sort_only:
+        names = _map_names(rf)
+        iter_res = [
+            re.compile(r"\b(?:self\s*\.\s*)?(%s)\s*\.\s*%s\s*\(" % ("|".join(map(re.escape, sorted(names))), _ITER_METHODS))
+        ] if names else []
+        for_re = (
+            re.compile(r"\bfor\b[^;{]*\bin\s+&?(?:mut\s+)?(?:self\s*\.\s*)?(%s)\b\s*[{.]?" % "|".join(map(re.escape, sorted(names))))
+            if names
+            else None
+        )
+        cont_re = re.compile(r"^\s*\.\s*%s\s*\(" % _ITER_METHODS)
+        tail_re = (
+            re.compile(r"(?:^|[\s.(])(%s)\s*$" % "|".join(map(re.escape, sorted(names))))
+            if names
+            else None
+        )
+        for idx, line in enumerate(rf.code, start=1):
+            for rx in iter_res:
+                m = rx.search(line)
+                if m:
+                    findings.append(
+                        Finding(PASS, "map-iteration", path, idx,
+                                f"iteration over hash-ordered `{m.group(1)}` can leak nondeterministic order into results",
+                                rf.lines[idx - 1])
+                    )
+                    break
+            else:
+                # split method chains: a line that is just `.iter()` whose
+                # receiver (previous non-blank stripped line) ends with a
+                # map name
+                if tail_re and cont_re.match(line):
+                    j = idx - 2
+                    while j >= 0 and not rf.code[j].strip():
+                        j -= 1
+                    m = tail_re.search(rf.code[j].rstrip()) if j >= 0 else None
+                    if m:
+                        findings.append(
+                            Finding(PASS, "map-iteration", path, idx,
+                                    f"iteration over hash-ordered `{m.group(1)}` can leak nondeterministic order into results",
+                                    rf.lines[idx - 1])
+                        )
+                elif for_re:
+                    m = for_re.search(line)
+                    if m:
+                        findings.append(
+                            Finding(PASS, "map-iteration", path, idx,
+                                    f"`for` over hash-ordered `{m.group(1)}` can leak nondeterministic order into results",
+                                    rf.lines[idx - 1])
+                        )
+            if _WALL_RE.search(line):
+                findings.append(
+                    Finding(PASS, "wall-clock", path, idx,
+                            "wall-clock time in deterministic code; use the virtual timeline",
+                            rf.lines[idx - 1])
+                )
+            if _RAND_RE.search(line):
+                findings.append(
+                    Finding(PASS, "unseeded-rng", path, idx,
+                            "unseeded randomness; draw from util::rng's seeded xoshiro streams",
+                            rf.lines[idx - 1])
+                )
+    for idx, line in enumerate(rf.code, start=1):
+        if _FLOAT_SORT_RE.search(line):
+            findings.append(
+                Finding(PASS, "float-sort", path, idx,
+                        "sort_by(partial_cmp) is NaN-unstable; use f64::total_cmp",
+                        rf.lines[idx - 1])
+            )
+
+
+def run(files=None):
+    """Return unsuppressed findings. `files` restricts to those paths
+    (used by --files and the fixture self-test) and disables scoping."""
+    findings = []
+    if files:
+        for p in files:
+            rf = RustFile(p)
+            _scan_file(rf, raw := [])
+            findings.extend(f for f in raw if not rf.allowed(f))
+        return findings
+    scoped = set(iter_rust_files(SCOPE))
+    for p in sorted(set(iter_rust_files(FLOAT_SORT_SCOPE, exclude=FLOAT_SORT_EXCLUDE)) | scoped):
+        rf = RustFile(p)
+        raw = []
+        _scan_file(rf, raw, float_sort_only=p not in scoped)
+        findings.extend(f for f in raw if not rf.allowed(f))
+    return findings

@@ -1,0 +1,458 @@
+"""Mirror-drift pass: `tools/pysim/{port,fleet}.py` is a line-by-line
+Python port of the Rust simulator, and the goldens are only as good as
+the two staying in lock-step. This pass extracts constants, enum
+variants, struct fields, and literal value sequences from BOTH sides and
+fails when one side changed without the other.
+
+The mirror map below is explicit and append-only: when you add a
+mirrored constant/enum/struct, add its row here. A zero-indent `const`
+in the mirrored Rust modules that is neither mapped nor in IGNORED_CONSTS
+is itself a finding (`unmapped-const`) — that is the tripwire that keeps
+the map honest.
+
+Rules
+  const-value     mapped const values differ (or one side vanished)
+  enum-variants   Rust enum variants vs the map vs Python name constants
+  struct-fields   Rust pub fields vs Python attrs/params/__slots__
+  fn-values       numeric literal sequence of mirrored constructors
+  field-default   a Rust field's default literal vs a Python constant
+  unmapped-const  a zero-indent const in mirrored modules with no map row
+"""
+
+import ast
+import os
+import re
+
+from common import Finding, RustFile, REPO_ROOT
+
+PASS = "drift"
+
+PYSIM_DEFAULT = os.path.join(REPO_ROOT, "tools", "pysim")
+
+# ---------------------------------------------------------------- the map
+
+# (rust file, const name, py file, locator)
+# locator: ("module", NAME) or ("class", ClassName, NAME)
+CONSTS = [
+    ("rust/src/fleet/router.rs", "DEFAULT_CAPACITY", "fleet.py", ("class", "SessionTable", "DEFAULT_CAPACITY")),
+    ("rust/src/policy/allocation.rs", "MAX_BUBBLE", "port.py", ("module", "MAX_BUBBLE")),
+    ("rust/src/plan/autotune.rs", "MAX_BUBBLE", "port.py", ("module", "MAX_BUBBLE")),
+    ("rust/src/policy/regression.rs", "SAMPLE_POINTS", "port.py", ("module", "SAMPLE_POINTS")),
+]
+
+# (rust file, enum name, py file, {RustVariant: PY_NAME_CONSTANT})
+ENUMS = [
+    ("rust/src/config/system.rs", "SchedulePolicy", "port.py",
+     {"LayerMajor": "LAYER_MAJOR", "OneFOneB": "ONE_F_ONE_B", "Auto": "AUTO"}),
+    ("rust/src/config/system.rs", "LayerSplit", "port.py",
+     {"CountBalanced": "COUNT_BALANCED", "MemoryWeighted": "MEMORY_WEIGHTED"}),
+    ("rust/src/sim/mod.rs", "System", "port.py",
+     {"HybridServe": "HYBRID", "FlexGen": "FLEXGEN", "DeepSpeedInference": "DEEPSPEED",
+      "ActOnly": "ACT_ONLY", "PowerInfer": "POWERINFER", "TokenRecompute": "token_recompute"}),
+    ("rust/src/fleet/router.rs", "RoutePolicy", "fleet.py",
+     {"RoundRobin": "ROUND_ROBIN", "LeastQueueDepth": "LEAST_QUEUE", "CacheAffinity": "CACHE_AFFINITY"}),
+]
+
+# (rust file, struct, py file, py class, mode)
+# "exact": field sets equal; "py-subset": every Python attr must exist in
+# Rust (the Rust side may carry extra fields the mirror doesn't model).
+STRUCTS = [
+    ("rust/src/config/model.rs", "ModelConfig", "port.py", "ModelConfig", "exact"),
+    ("rust/src/metrics/mod.rs", "RequestTiming", "fleet.py", "RequestTiming", "exact"),
+    ("rust/src/metrics/mod.rs", "SloReport", "fleet.py", "SloReport", "py-subset"),
+]
+
+# (rust file, fn name, py file, py fn name) — numeric literal sequences
+# must match element-for-element.
+FN_VALUES = [
+    ("rust/src/config/model.rs", "opt_6_7b", "port.py", "opt_6_7b"),
+    ("rust/src/config/model.rs", "opt_13b", "port.py", "opt_13b"),
+    ("rust/src/config/model.rs", "opt_30b", "port.py", "opt_30b"),
+    ("rust/src/config/model.rs", "opt_66b", "port.py", "opt_66b"),
+    ("rust/src/config/model.rs", "opt_175b", "port.py", "opt_175b"),
+    ("rust/src/config/model.rs", "llama2_70b", "port.py", "llama2_70b"),
+    ("rust/src/fleet/autoscaler.rs", "cloud_2025", "fleet.py", "cloud_2025"),
+]
+
+# (rust file, field name, py file, locator) — first literal initialiser
+# of the field in the Rust file vs a Python constant/attr default.
+FIELD_DEFAULTS = [
+    ("rust/src/config/system.rs", "collective_bw", "port.py", ("module", "COLLECTIVE_BW")),
+    ("rust/src/config/system.rs", "collective_latency_s", "port.py", ("module", "COLLECTIVE_LAT")),
+    ("rust/src/config/system.rs", "peak_flops", "port.py", ("attr", "GpuSpec", "peak_flops")),
+    ("rust/src/config/system.rs", "mem_bw", "port.py", ("attr", "GpuSpec", "mem_bw")),
+    ("rust/src/config/system.rs", "gemm_efficiency", "port.py", ("attr", "GpuSpec", "gemm_efficiency")),
+    ("rust/src/config/system.rs", "attn_efficiency", "port.py", ("attr", "GpuSpec", "attn_efficiency")),
+    ("rust/src/config/system.rs", "kvgen_efficiency", "port.py", ("attr", "GpuSpec", "kvgen_efficiency")),
+]
+
+# Modules whose zero-indent consts must be mapped or ignored.
+CONST_SCAN_SCOPE = ["config", "plan", "policy", "sim", "pcie", "fleet"]
+
+# (rust file, const name): reason it deliberately has no Python mirror.
+IGNORED_CONSTS = {}
+
+# ------------------------------------------------------- rust extraction
+
+_NUM_RE = re.compile(r"(?<![\w.])(\d[\d_]*\.?[\d_]*(?:[eE][+-]?\d+)?)")
+_VALUE_OK_RE = re.compile(r"^[\d\s.eE+\-*/(),\[\]<>_]+$")
+
+
+def _parse_value(text):
+    """Evaluate a Rust literal expression (`1 << 16`, `1.0 - 1e-9`,
+    `[32, 64]`) as a Python value; None if it isn't a literal."""
+    text = text.strip().rstrip(";,").strip()
+    if not text or not _VALUE_OK_RE.match(text):
+        return None
+    text = re.sub(r"(?<=\d)_(?=\d)", "", text)
+    # `<`/`>` may only appear as shift operators, never comparisons
+    if "<" in text.replace("<<", "") or ">" in text.replace(">>", ""):
+        return None
+    try:
+        return eval(text, {"__builtins__": {}})  # noqa: S307 — literal-only by regex gate
+    except Exception:
+        return None
+
+
+def _joined_stmt(rf, start_idx):
+    """Join stripped lines from `start_idx` until a `;` (const decls can
+    wrap)."""
+    buf = []
+    for i in range(start_idx, min(start_idx + 8, len(rf.code))):
+        buf.append(rf.code[i])
+        if ";" in rf.code[i]:
+            break
+    return " ".join(buf)
+
+
+def rust_const(rf, name):
+    rx = re.compile(r"\bconst\s+%s\s*:\s*[^=]+=\s*" % re.escape(name))
+    for i, line in enumerate(rf.code):
+        m = rx.search(line)
+        if m:
+            stmt = _joined_stmt(rf, i)
+            m2 = rx.search(stmt)
+            return _parse_value(stmt[m2.end():].split(";")[0]), i + 1
+    return None, None
+
+
+def rust_enum_variants(rf, name):
+    rx = re.compile(r"\benum\s+%s\b" % re.escape(name))
+    for i, line in enumerate(rf.code):
+        if rx.search(line):
+            depth = 0
+            variants = []
+            for j in range(i, len(rf.code)):
+                text = rf.code[j]
+                if depth == 1:
+                    m = re.match(r"\s*([A-Z]\w*)\s*(?:\(|,|$|\{)", text)
+                    if m and "#" not in text.split(m.group(1))[0]:
+                        variants.append(m.group(1))
+                depth += text.count("{") - text.count("}")
+                if depth <= 0 and j > i and "{" in "".join(rf.code[i:j + 1]):
+                    return variants, i + 1
+            return variants, i + 1
+    return None, None
+
+
+def rust_struct_fields(rf, name):
+    rx = re.compile(r"\bstruct\s+%s\b" % re.escape(name))
+    for i, line in enumerate(rf.code):
+        if rx.search(line):
+            depth = 0
+            fields = []
+            for j in range(i, len(rf.code)):
+                text = rf.code[j]
+                if depth == 1:
+                    m = re.match(r"\s*pub\s+(\w+)\s*:", text)
+                    if m:
+                        fields.append(m.group(1))
+                depth += text.count("{") - text.count("}")
+                if depth <= 0 and j > i and "{" in "".join(rf.code[i:j + 1]):
+                    return fields, i + 1
+            return fields, i + 1
+    return None, None
+
+
+def rust_fn_literals(rf, name):
+    for fn_name, lo, hi in rf.functions():
+        if fn_name == name:
+            nums = []
+            for idx in range(lo - 1, hi):
+                for m in _NUM_RE.finditer(rf.code[idx]):
+                    nums.append(_parse_value(m.group(1)))
+            return nums, lo
+    return None, None
+
+
+def rust_field_default(rf, field):
+    rx = re.compile(r"\b%s\s*:\s*([^,;{}]+)" % re.escape(field))
+    for i, line in enumerate(rf.code):
+        m = rx.search(line)
+        if m:
+            v = _parse_value(m.group(1))
+            if v is not None:
+                return v, i + 1
+    return None, None
+
+
+def rust_zero_indent_consts(rf):
+    out = []
+    for i, line in enumerate(rf.code):
+        m = re.match(r"(?:pub(?:\([^)]*\))?\s+)?const\s+([A-Z][A-Z0-9_]*)\s*:", line)
+        if m:
+            out.append((m.group(1), i + 1))
+    return out
+
+
+# ----------------------------------------------------- python extraction
+
+class _PyFile:
+    def __init__(self, path):
+        self.path = path
+        with open(path, encoding="utf-8") as f:
+            self.tree = ast.parse(f.read())
+
+    def _eval(self, node):
+        if isinstance(node, ast.Constant):
+            return node.value
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = self._eval(node.operand)
+            return None if v is None else -v
+        if isinstance(node, (ast.List, ast.Tuple)):
+            vals = [self._eval(e) for e in node.elts]
+            return None if any(v is None for v in vals) else vals
+        if isinstance(node, ast.BinOp):
+            l, r = self._eval(node.left), self._eval(node.right)
+            if l is None or r is None:
+                return None
+            ops = {ast.Add: lambda: l + r, ast.Sub: lambda: l - r, ast.Mult: lambda: l * r,
+                   ast.Div: lambda: l / r, ast.LShift: lambda: l << r, ast.RShift: lambda: l >> r,
+                   ast.Pow: lambda: l ** r}
+            fn = ops.get(type(node.op))
+            return fn() if fn else None
+        return None
+
+    def module_value(self, name):
+        for node in self.tree.body:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == name:
+                        return self._eval(node.value)
+        return None
+
+    def _class(self, cls):
+        for node in self.tree.body:
+            if isinstance(node, ast.ClassDef) and node.name == cls:
+                return node
+        return None
+
+    def class_value(self, cls, name):
+        c = self._class(cls)
+        if c is None:
+            return None
+        for node in c.body:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == name:
+                        return self._eval(node.value)
+        return None
+
+    def attr_default(self, cls, attr):
+        """Value of `self.<attr> = <literal>` in the class's __init__."""
+        c = self._class(cls)
+        if c is None:
+            return None
+        for node in c.body:
+            if isinstance(node, ast.FunctionDef) and node.name == "__init__":
+                for stmt in ast.walk(node):
+                    if isinstance(stmt, ast.Assign):
+                        for t in stmt.targets:
+                            if (isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name)
+                                    and t.value.id == "self" and t.attr == attr):
+                                return self._eval(stmt.value)
+        return None
+
+    def class_attrs(self, cls):
+        """Attribute names the mirror class carries: __slots__ entries,
+        __init__ params (minus self), and every `X.attr = ...` target in
+        the class body (covers `r.field = ...` factory style)."""
+        c = self._class(cls)
+        if c is None:
+            return None
+        attrs = set()
+        for node in c.body:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == "__slots__":
+                        v = self._eval(node.value)
+                        if v:
+                            attrs.update(v)
+        for node in ast.walk(c):
+            if isinstance(node, ast.FunctionDef) and node.name == "__init__":
+                attrs.update(a.arg for a in node.args.args if a.arg != "self")
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name):
+                        attrs.add(t.attr)
+        attrs.discard("__slots__")
+        return attrs
+
+    def fn_literals(self, name):
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.nums = []
+
+            def visit_Constant(self, node):
+                if isinstance(node.value, (int, float)) and not isinstance(node.value, bool):
+                    self.nums.append(node.value)
+
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.FunctionDef) and node.name == name:
+                v = V()
+                for stmt in node.body:
+                    v.visit(stmt)
+                return v.nums
+        return None
+
+    def has_module_name(self, name):
+        """A module-level constant OR function of this name (parametric
+        enum variants mirror as constructor functions)."""
+        for node in self.tree.body:
+            if isinstance(node, ast.FunctionDef) and node.name == name:
+                return True
+            if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == name for t in node.targets
+            ):
+                return True
+        return False
+
+
+# --------------------------------------------------------------- the pass
+
+def _values_equal(a, b):
+    if isinstance(a, list) and isinstance(b, list):
+        return len(a) == len(b) and all(_values_equal(x, y) for x, y in zip(a, b))
+    if isinstance(a, (int, float)) and isinstance(b, (int, float)):
+        return float(a) == float(b)
+    return a == b
+
+
+def run(files=None, pysim_root=None):
+    if files:
+        return []  # drift is a whole-repo cross-check, not per-file
+    pysim_root = pysim_root or PYSIM_DEFAULT
+    findings = []
+    rust_cache = {}
+    py_cache = {}
+
+    def rust(path):
+        if path not in rust_cache:
+            rust_cache[path] = RustFile(os.path.join(REPO_ROOT, path))
+        return rust_cache[path]
+
+    def py(name):
+        p = os.path.join(pysim_root, name)
+        if p not in py_cache:
+            py_cache[p] = _PyFile(p)
+        return py_cache[p]
+
+    def py_locate(pf, locator):
+        if locator[0] == "module":
+            return pf.module_value(locator[1])
+        if locator[0] == "class":
+            return pf.class_value(locator[1], locator[2])
+        if locator[0] == "attr":
+            return pf.attr_default(locator[1], locator[2])
+        return None
+
+    for rust_path, const, py_name, locator in CONSTS:
+        rv, line = rust_const(rust(rust_path), const)
+        pv = py_locate(py(py_name), locator)
+        if rv is None or pv is None:
+            findings.append(Finding(PASS, "const-value", rust_path, line or 1,
+                                    f"const {const}: could not extract both sides (rust={rv!r}, pysim={pv!r}) — mirror or map is stale",
+                                    const))
+        elif not _values_equal(rv, pv):
+            findings.append(Finding(PASS, "const-value", rust_path, line,
+                                    f"const {const} = {rv!r} but tools/pysim/{py_name} has {pv!r}",
+                                    const))
+
+    for rust_path, enum, py_name, variant_map in ENUMS:
+        variants, line = rust_enum_variants(rust(rust_path), enum)
+        pf = py(py_name)
+        if variants is None:
+            findings.append(Finding(PASS, "enum-variants", rust_path, 1,
+                                    f"enum {enum} not found — mirror map is stale", enum))
+            continue
+        if set(variants) != set(variant_map):
+            findings.append(Finding(PASS, "enum-variants", rust_path, line,
+                                    f"enum {enum} variants {sorted(variants)} != mapped {sorted(variant_map)} — update tools/pysim/{py_name} and the map",
+                                    enum))
+        for variant, py_const in variant_map.items():
+            if not pf.has_module_name(py_const):
+                findings.append(Finding(PASS, "enum-variants", rust_path, line,
+                                        f"enum {enum}::{variant} maps to {py_const}, missing from tools/pysim/{py_name}",
+                                        f"{enum}::{variant}"))
+
+    for rust_path, struct, py_name, py_cls, mode in STRUCTS:
+        fields, line = rust_struct_fields(rust(rust_path), struct)
+        attrs = py(py_name).class_attrs(py_cls)
+        if fields is None or attrs is None:
+            findings.append(Finding(PASS, "struct-fields", rust_path, line or 1,
+                                    f"struct {struct} / class {py_cls}: could not extract both sides", struct))
+            continue
+        fields = set(fields)
+        if mode == "exact":
+            if fields != attrs:
+                findings.append(Finding(PASS, "struct-fields", rust_path, line,
+                                        f"struct {struct} fields {sorted(fields)} != {py_cls} attrs {sorted(attrs)} in tools/pysim/{py_name}",
+                                        struct))
+        else:  # py-subset
+            extra = attrs - fields
+            if extra:
+                findings.append(Finding(PASS, "struct-fields", rust_path, line,
+                                        f"{py_cls} in tools/pysim/{py_name} has attrs {sorted(extra)} with no {struct} field",
+                                        struct))
+
+    for rust_path, fn, py_name, py_fn in FN_VALUES:
+        rv, line = rust_fn_literals(rust(rust_path), fn)
+        pv = py(py_name).fn_literals(py_fn)
+        if rv is None or pv is None:
+            findings.append(Finding(PASS, "fn-values", rust_path, line or 1,
+                                    f"fn {fn} / def {py_fn}: could not extract both sides", fn))
+        elif not _values_equal(rv, pv):
+            findings.append(Finding(PASS, "fn-values", rust_path, line,
+                                    f"fn {fn} literals {rv} != def {py_fn} literals {pv} in tools/pysim/{py_name}",
+                                    fn))
+
+    for rust_path, field, py_name, locator in FIELD_DEFAULTS:
+        rv, line = rust_field_default(rust(rust_path), field)
+        pv = py_locate(py(py_name), locator)
+        if rv is None or pv is None:
+            findings.append(Finding(PASS, "field-default", rust_path, line or 1,
+                                    f"field {field}: could not extract both sides (rust={rv!r}, pysim={pv!r})", field))
+        elif not _values_equal(rv, pv):
+            findings.append(Finding(PASS, "field-default", rust_path, line,
+                                    f"field {field} defaults to {rv!r} but tools/pysim/{py_name} has {pv!r}",
+                                    field))
+
+    mapped = {(r, c) for r, c, _, _ in CONSTS} | set(IGNORED_CONSTS)
+    for mod in CONST_SCAN_SCOPE:
+        root = os.path.join(REPO_ROOT, "rust", "src", mod)
+        if not os.path.isdir(root):
+            if os.path.isfile(root + ".rs"):
+                roots = [root + ".rs"]
+            else:
+                continue
+        else:
+            roots = [os.path.join(dp, n) for dp, _, ns in os.walk(root) for n in sorted(ns) if n.endswith(".rs")]
+        for p in sorted(roots):
+            rel_p = os.path.relpath(p, REPO_ROOT)
+            rf = RustFile(p)
+            for name, line in rust_zero_indent_consts(rf):
+                if (rel_p, name) not in mapped:
+                    findings.append(Finding(PASS, "unmapped-const", rel_p, line,
+                                            f"const {name} has no row in pass_drift's mirror map (add a mapping or an IGNORED_CONSTS entry with a reason)",
+                                            name))
+    return findings

@@ -1,0 +1,95 @@
+"""Panic-free serving path: a malformed request or a ledger glitch must
+surface as an error the caller can handle (4xx, routed retry), never as
+a panic that takes the whole server down. This pass denies panic-capable
+constructs on the serving hot path.
+
+Scope is deliberately surgical: the socket server and fleet router whole,
+plus the scheduler's admission/tick/preemption functions and the fleet
+dispatch/serve path. Everything else (planners, offline figure code,
+tests) may panic freely.
+
+Rules
+  unwrap  .unwrap() / .expect(...)
+  panic   panic! / unreachable! / todo! / unimplemented! / assert!*
+          (debug_assert!* stays allowed: compiled out of release serving)
+  index   direct slice/array indexing `x[i]` — use .get()/.get_mut()
+  arith   unchecked integer + - * — use checked_/saturating_/wrapping_
+          (float arithmetic cannot panic or wrap and is exempt)
+
+Triage order: fix > annotate `// lint: allow(panicfree:<rule>) reason`
+> move the code off the hot path.
+"""
+
+import os
+import re
+
+from common import Finding, RustFile, rel, REPO_ROOT
+
+PASS = "panicfree"
+
+# path -> list of function names, or None for the whole file
+SCOPE = {
+    "rust/src/server/mod.rs": None,
+    "rust/src/fleet/router.rs": None,
+    "rust/src/fleet/mod.rs": ["new", "dispatch", "serve"],
+    "rust/src/sched/mod.rs": ["submit", "submit_timed", "tick", "preempt_until"],
+}
+
+_UNWRAP_RE = re.compile(r"\.\s*(unwrap|expect)\s*\(")
+_PANIC_RE = re.compile(r"(?<!debug_)\b(panic|unreachable|todo|unimplemented|assert|assert_eq|assert_ne)!\s*[(\[{]")
+# word char or closing bracket/paren directly before `[` = an index
+# expression (attributes `#[...]`, slices `&[...]`, macros `vec![...]`
+# all have a non-word char before the bracket).
+_INDEX_RE = re.compile(r"[\w)\]]\[")
+_SAFE_ARITH = ("checked_", "saturating_", "wrapping_", "overflowing_")
+# int-looking binary arithmetic: ident/call/paren OP ident/literal.
+_ARITH_RE = re.compile(r"[\w)\]]\s*(\+|\*|\s-\s|\+=|-=|\*=)\s*[\w(]")
+_FLOATISH_RE = re.compile(r"\d\.\d|\bf64\b|\bf32\b|_secs\b|_frac\b|\bf64::|\.0\b")
+
+
+def _scan_lines(rf, path, line_range, findings):
+    lo, hi = line_range
+    for idx in range(lo, hi + 1):
+        line = rf.code[idx - 1]
+        raw = rf.lines[idx - 1]
+        if _UNWRAP_RE.search(line):
+            findings.append(Finding(PASS, "unwrap", path, idx,
+                                    "unwrap/expect on the serving path; propagate the error instead", raw))
+        m = _PANIC_RE.search(line)
+        if m:
+            findings.append(Finding(PASS, "panic", path, idx,
+                                    f"{m.group(1)}! can take the server down; return an error", raw))
+        if "debug_assert" in line:
+            continue  # compiled out of release serving builds
+        if _INDEX_RE.search(line) and "#[" not in line:
+            findings.append(Finding(PASS, "index", path, idx,
+                                    "direct indexing can panic; use .get()/.get_mut()", raw))
+        m = _ARITH_RE.search(line)
+        if m and not _FLOATISH_RE.search(line) and not any(s in line for s in _SAFE_ARITH):
+            findings.append(Finding(PASS, "arith", path, idx,
+                                    "unchecked integer arithmetic on the serving path; use checked_/saturating_/wrapping_", raw))
+
+
+def run(files=None):
+    findings = []
+    if files:
+        for p in files:
+            rf = RustFile(p)
+            raw = []
+            _scan_lines(rf, rel(p), (1, len(rf.lines)), raw)
+            findings.extend(f for f in raw if not rf.allowed(f))
+        return findings
+    for path, fns in SCOPE.items():
+        abs_path = os.path.join(REPO_ROOT, path)
+        if not os.path.exists(abs_path):
+            continue
+        rf = RustFile(abs_path)
+        raw = []
+        if fns is None:
+            _scan_lines(rf, path, (1, len(rf.lines)), raw)
+        else:
+            spans = [(name, lo, hi) for name, lo, hi in rf.functions() if name in fns]
+            for _, lo, hi in spans:
+                _scan_lines(rf, path, (lo, hi), raw)
+        findings.extend(f for f in raw if not rf.allowed(f))
+    return findings

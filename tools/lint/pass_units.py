@@ -1,0 +1,73 @@
+"""Unit-discipline pass: identifiers carry their unit as a suffix
+(`_bytes`, `_blocks`, `_tokens`, `_secs`, `_frac`) and the suffix is a
+type the compiler can't see — so this pass enforces it lexically.
+
+Rules
+  unit-mix   two identifiers with DIFFERENT unit suffixes combined with
+             `+`, `-` or `%`. Addition of bytes to seconds is always a
+             bug; `*`/`/` legitimately change units (bytes / secs =
+             bandwidth) and are allowed.
+  unit-cast  a unit-suffixed identifier cast with bare `as`. The unit
+             vanishes at the cast; route it through the named helpers in
+             util::units (bytes_f64 and friends) so the crossing is
+             visible and greppable.
+
+`rust/src/util/units.rs` is the helper definition site and is exempt.
+Test modules are already stripped by the lexical model.
+"""
+
+import re
+
+from common import Finding, RustFile, iter_rust_files, rel
+
+PASS = "units"
+SCOPE = ["rust/src"]
+EXCLUDE = ["rust/src/util/units.rs"]
+
+SUFFIXES = ("bytes", "blocks", "tokens", "secs", "frac")
+_UNIT = r"[A-Za-z_][\w.]*?_(?:%s)\b" % "|".join(SUFFIXES)
+# ident (possibly a field path like sizes.kv_bytes) OP ident — spaces
+# required around `-` so ranges/arrows/negatives don't trip it.
+_MIX_RE = re.compile(r"(%s)(?:\(\))?\s*(?:[+%%]|\s-\s)\s*(%s)" % (_UNIT, _UNIT))
+_CAST_RE = re.compile(r"(%s)(?:\(\))?\s+as\s+(f64|f32|usize|u64|u32|i64|i32)\b" % _UNIT)
+
+
+def _suffix(ident):
+    return ident.rsplit("_", 1)[-1]
+
+
+def _scan_file(rf, findings):
+    path = rel(rf.path)
+    for idx, line in enumerate(rf.code, start=1):
+        for m in _MIX_RE.finditer(line):
+            a, b = m.group(1), m.group(2)
+            # adjacent `*`/`/` means an operand is a product/ratio whose
+            # unit already changed (blocks * bytes + blocks * bytes is
+            # bytes + bytes); precedence is invisible lexically, so skip.
+            before = line[:m.start()].rstrip()
+            after = line[m.end():].lstrip()
+            if before.endswith(("*", "/")) or after.startswith(("*", "/")):
+                continue
+            if _suffix(a) != _suffix(b):
+                findings.append(
+                    Finding(PASS, "unit-mix", path, idx,
+                            f"`{a}` ({_suffix(a)}) and `{b}` ({_suffix(b)}) combined without a unit conversion",
+                            rf.lines[idx - 1])
+                )
+        for m in _CAST_RE.finditer(line):
+            findings.append(
+                Finding(PASS, "unit-cast", path, idx,
+                        f"bare `as {m.group(2)}` on `{m.group(1)}` erases its unit; use a util::units helper",
+                        rf.lines[idx - 1])
+            )
+
+
+def run(files=None):
+    findings = []
+    paths = files if files else sorted(iter_rust_files(SCOPE, exclude=EXCLUDE))
+    for p in paths:
+        rf = RustFile(p)
+        raw = []
+        _scan_file(rf, raw)
+        findings.extend(f for f in raw if not rf.allowed(f))
+    return findings

@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""pallas-lint driver.
+
+    python tools/lint/run.py --all                 # every pass, baseline applied
+    python tools/lint/run.py --pass determinism    # one pass
+    python tools/lint/run.py --all --json          # machine-readable findings
+    python tools/lint/run.py --all --no-baseline   # raw findings, no debt absorbed
+    python tools/lint/run.py --all --update-baseline
+    python tools/lint/run.py --self-test           # fixtures + perturbed-mirror drill
+    python tools/lint/run.py --pass units --files tools/lint/fixtures/units/bad.rs --no-baseline
+
+Exit status: 0 when no NEW findings (after baseline), 1 otherwise.
+
+The baseline (`tools/lint/baseline.json`) is a ratchet: it holds counts
+of accepted pre-existing findings keyed by a line-number-free
+fingerprint. New code cannot add findings; paying down old ones and
+re-running --update-baseline shrinks it monotonically.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import common  # noqa: E402
+import pass_determinism  # noqa: E402
+import pass_drift  # noqa: E402
+import pass_panicfree  # noqa: E402
+import pass_units  # noqa: E402
+
+PASSES = {
+    "determinism": pass_determinism.run,
+    "units": pass_units.run,
+    "panicfree": pass_panicfree.run,
+    "drift": pass_drift.run,
+}
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "baseline.json")
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)), "fixtures")
+
+
+def collect(pass_names, files=None):
+    findings = []
+    for name in pass_names:
+        findings.extend(PASSES[name](files=files))
+    return findings
+
+
+def self_test():
+    """Prove the suite can still catch what it claims to catch:
+    1. every known-bad fixture trips its pass, known-good stays clean;
+    2. a deliberately perturbed pysim constant trips the drift pass."""
+    failures = []
+
+    for name in ("determinism", "units", "panicfree"):
+        bad = os.path.join(FIXTURES, name, "bad.rs")
+        good = os.path.join(FIXTURES, name, "good.rs")
+        got_bad = PASSES[name](files=[bad])
+        got_good = PASSES[name](files=[good])
+        rules = {f.rule for f in got_bad}
+        print(f"self-test {name}: bad.rs -> {len(got_bad)} findings ({', '.join(sorted(rules))}), good.rs -> {len(got_good)}")
+        if not got_bad:
+            failures.append(f"{name}: known-bad fixture produced no findings")
+        if got_good:
+            failures.append(f"{name}: known-good fixture produced findings: " + "; ".join(map(str, got_good)))
+
+    # the drift drill: copy the real pysim mirror, bend one mapped
+    # constant, and demand the pass notices.
+    clean = pass_drift.run()
+    with tempfile.TemporaryDirectory(prefix="pallas-lint-drift-") as tmp:
+        root = os.path.join(tmp, "pysim")
+        shutil.copytree(pass_drift.PYSIM_DEFAULT, root)
+        port = os.path.join(root, "port.py")
+        with open(port, encoding="utf-8") as f:
+            text = f.read()
+        perturbed = text.replace("COLLECTIVE_BW = 20.0e9", "COLLECTIVE_BW = 21.0e9", 1)
+        if perturbed == text:
+            failures.append("drift: could not perturb COLLECTIVE_BW in the pysim copy")
+        with open(port, "w", encoding="utf-8") as f:
+            f.write(perturbed)
+        drifted = pass_drift.run(pysim_root=root)
+        new = [f for f in drifted if f.fingerprint() not in {c.fingerprint() for c in clean}]
+        print(f"self-test drift: perturbed COLLECTIVE_BW -> {len(new)} new finding(s)")
+        if not any(f.rule == "field-default" and "collective_bw" in f.message for f in new):
+            failures.append("drift: perturbed pysim constant was NOT detected")
+
+    if failures:
+        for f in failures:
+            print("SELF-TEST FAIL:", f, file=sys.stderr)
+        return 1
+    print("self-test: all passes catch their known-bads, drift drill detected")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="pallas-lint: repo-invariant static analysis")
+    ap.add_argument("--all", action="store_true", help="run every pass")
+    ap.add_argument("--pass", dest="passes", action="append", choices=sorted(PASSES),
+                    help="run one pass (repeatable)")
+    ap.add_argument("--files", nargs="+", help="restrict to these files (disables default scopes)")
+    ap.add_argument("--json", action="store_true", help="emit machine-readable findings")
+    ap.add_argument("--no-baseline", action="store_true", help="report all findings, not just new ones")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current findings as the new accepted baseline")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run fixture checks and the perturbed-mirror drift drill")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+
+    pass_names = sorted(PASSES) if args.all or not args.passes else args.passes
+    findings = collect(pass_names, files=args.files)
+
+    if args.update_baseline:
+        with open(BASELINE_PATH, "w", encoding="utf-8") as f:
+            json.dump({"findings": common.baseline_counts(findings)}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {len(findings)} finding(s) across {len(pass_names)} pass(es)")
+        return 0
+
+    baseline = {} if args.no_baseline else common.load_baseline(BASELINE_PATH)
+    fresh = common.apply_baseline(findings, baseline)
+
+    if args.json:
+        print(json.dumps({
+            "passes": pass_names,
+            "total": len(findings),
+            "baselined": len(findings) - len(fresh),
+            "new": [f.to_dict() for f in fresh],
+        }, indent=1))
+    else:
+        for f in fresh:
+            print(f)
+        label = "finding(s)" if args.no_baseline else "NEW finding(s)"
+        print(f"pallas-lint: {len(fresh)} {label}, {len(findings) - len(fresh)} baselined, passes: {', '.join(pass_names)}")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

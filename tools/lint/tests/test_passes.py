@@ -1,0 +1,273 @@
+"""Fixture-driven tests for every pallas-lint pass plus the shared
+lexical model and the baseline ratchet.
+
+Run with:  python3 -m unittest discover -s tools/lint/tests -v
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, ".."))
+
+import common  # noqa: E402
+import pass_determinism  # noqa: E402
+import pass_drift  # noqa: E402
+import pass_panicfree  # noqa: E402
+import pass_units  # noqa: E402
+import run as lint_run  # noqa: E402
+
+FIX = os.path.join(HERE, "..", "fixtures")
+
+
+def fixture(*parts):
+    return os.path.abspath(os.path.join(FIX, *parts))
+
+
+class TestCommon(unittest.TestCase):
+    def rf(self, text):
+        return common.RustFile("<mem>.rs", text=text)
+
+    def test_strip_blanks_comments_and_strings_preserving_columns(self):
+        rf = self.rf('let x = 1; // HashMap\nlet s = "Instant::now";\n/* partial_cmp */ let y = 2;')
+        self.assertNotIn("HashMap", rf.code[0])
+        self.assertNotIn("Instant", rf.code[1])
+        self.assertNotIn("partial_cmp", rf.code[2])
+        self.assertEqual(rf.code[0].index("let"), 0)
+        self.assertIn("let y = 2;", rf.code[2])
+        # column positions survive stripping
+        self.assertEqual(len(rf.code[1]), len(rf.lines[1]))
+
+    def test_strip_handles_nested_block_comments_and_raw_strings(self):
+        rf = self.rf('/* outer /* inner */ still comment */ let a = 1;\nlet r = r#"panic!("x")"#; let b = 2;')
+        self.assertIn("let a = 1;", rf.code[0])
+        self.assertNotIn("still", rf.code[0])
+        self.assertNotIn("panic", rf.code[1])
+        self.assertIn("let b = 2;", rf.code[1])
+
+    def test_char_literals_blanked_but_lifetimes_survive(self):
+        rf = self.rf("fn f<'a>(x: &'a str) { let c = '\\n'; let d = 'z'; }")
+        self.assertIn("'a", rf.code[0])
+        self.assertNotIn("'z'", rf.code[0])
+
+    def test_test_mod_is_blanked(self):
+        rf = self.rf("fn live() {}\n#[cfg(test)]\nmod tests {\n    fn dead() { x.unwrap(); }\n}")
+        self.assertNotIn("unwrap", "".join(rf.code))
+        self.assertIn("fn live", rf.code[0])
+
+    def test_function_spans(self):
+        rf = self.rf("impl T {\n    fn alpha(&self) -> usize {\n        1\n    }\n    fn beta(&self) {\n    }\n}")
+        fns = {name: (lo, hi) for name, lo, hi in rf.functions()}
+        self.assertEqual(fns["alpha"], (2, 4))
+        self.assertEqual(fns["beta"], (5, 6))
+
+    def test_allow_annotation_covers_own_and_next_line(self):
+        text = "x.unwrap(); // lint: allow(panicfree:unwrap) trusted input\n// lint: allow(panicfree) whole pass\ny.unwrap();\nz.unwrap();"
+        rf = self.rf(text)
+        mk = lambda line: common.Finding("panicfree", "unwrap", "<mem>.rs", line, "m", "s")
+        self.assertTrue(rf.allowed(mk(1)))
+        self.assertTrue(rf.allowed(mk(3)))
+        self.assertFalse(rf.allowed(mk(4)))
+        # rule-specific allow does not cover other rules
+        other = common.Finding("panicfree", "index", "<mem>.rs", 1, "m", "s")
+        self.assertFalse(rf.allowed(other))
+
+    def test_baseline_ratchet(self):
+        mk = lambda: common.Finding("units", "unit-cast", "a.rs", 7, "m", "x as f64")
+        baseline = common.baseline_counts([mk(), mk()])
+        self.assertEqual(common.apply_baseline([mk(), mk()], baseline), [])
+        fresh = common.apply_baseline([mk(), mk(), mk()], baseline)
+        self.assertEqual(len(fresh), 1)
+
+
+class TestDeterminism(unittest.TestCase):
+    def test_bad_fixture_trips_every_rule(self):
+        findings = pass_determinism.run(files=[fixture("determinism", "bad.rs")])
+        rules = {f.rule for f in findings}
+        self.assertEqual(rules, {"map-iteration", "wall-clock", "unseeded-rng", "float-sort"})
+        # both the method-call and the for-loop iteration forms
+        self.assertGreaterEqual(sum(1 for f in findings if f.rule == "map-iteration"), 2)
+
+    def test_good_fixture_is_clean(self):
+        self.assertEqual(pass_determinism.run(files=[fixture("determinism", "good.rs")]), [])
+
+    def test_repo_scope_has_no_new_findings(self):
+        # annotated/triaged tree must be clean without any baseline help
+        self.assertEqual([str(f) for f in pass_determinism.run()], [])
+
+
+class TestUnits(unittest.TestCase):
+    def test_bad_fixture_trips_both_rules(self):
+        findings = pass_units.run(files=[fixture("units", "bad.rs")])
+        rules = {f.rule for f in findings}
+        self.assertEqual(rules, {"unit-mix", "unit-cast"})
+        mixes = [f for f in findings if f.rule == "unit-mix"]
+        self.assertEqual(len(mixes), 2)
+
+    def test_good_fixture_is_clean(self):
+        self.assertEqual(pass_units.run(files=[fixture("units", "good.rs")]), [])
+
+    def test_same_suffix_and_mul_div_are_legal(self):
+        rf_text = "fn f(a_bytes: usize, b_bytes: usize, t_secs: f64) -> f64 { (a_bytes + b_bytes) as u8; a_bytes as f64 / t_secs }"
+        with tempfile.NamedTemporaryFile("w", suffix=".rs", delete=False) as f:
+            f.write(rf_text)
+            path = f.name
+        try:
+            findings = pass_units.run(files=[path])
+            # the two casts are findings; the same-suffix add and the
+            # unit-changing divide are not
+            self.assertEqual({f.rule for f in findings}, {"unit-cast"})
+        finally:
+            os.unlink(path)
+
+
+class TestPanicfree(unittest.TestCase):
+    def test_bad_fixture_trips_every_rule(self):
+        findings = pass_panicfree.run(files=[fixture("panicfree", "bad.rs")])
+        rules = {f.rule for f in findings}
+        self.assertEqual(rules, {"unwrap", "panic", "index", "arith"})
+
+    def test_good_fixture_is_clean(self):
+        self.assertEqual(pass_panicfree.run(files=[fixture("panicfree", "good.rs")]), [])
+
+    def test_repo_hot_path_has_no_new_findings(self):
+        self.assertEqual([str(f) for f in pass_panicfree.run()], [])
+
+    def test_function_scoping_limits_the_blast_radius(self):
+        text = (
+            "impl S {\n"
+            "    fn hot(&self) { self.xs[0]; }\n"
+            "    fn cold(&self) { self.xs[1].unwrap(); }\n"
+            "}\n"
+        )
+        rf = common.RustFile("<mem>.rs", text=text)
+        spans = {name: (lo, hi) for name, lo, hi in rf.functions()}
+        raw = []
+        pass_panicfree._scan_lines(rf, "<mem>.rs", spans["hot"], raw)
+        self.assertTrue(all(f.line == 2 for f in raw))
+        self.assertTrue(any(f.rule == "index" for f in raw))
+        self.assertFalse(any(f.rule == "unwrap" for f in raw))
+
+
+class TestDrift(unittest.TestCase):
+    def test_rust_extractors(self):
+        text = (
+            "pub const LIMIT: usize = 1 << 8;\n"
+            "const RATIO: f64 = 1.0 - 1e-9;\n"
+            "pub enum Mode {\n"
+            "    Fast,\n"
+            "    Careful(usize),\n"
+            "}\n"
+            "pub struct Cfg {\n"
+            "    pub size_bytes: usize,\n"
+            "    pub rate: f64,\n"
+            "    hidden: usize,\n"
+            "}\n"
+            "impl Cfg {\n"
+            "    pub fn demo() -> Self {\n"
+            "        Self { size_bytes: 4096, rate: 0.5, hidden: 3 }\n"
+            "    }\n"
+            "}\n"
+        )
+        rf = common.RustFile("<mem>.rs", text=text)
+        self.assertEqual(pass_drift.rust_const(rf, "LIMIT")[0], 256)
+        self.assertEqual(pass_drift.rust_const(rf, "RATIO")[0], 1.0 - 1e-9)
+        self.assertEqual(pass_drift.rust_enum_variants(rf, "Mode")[0], ["Fast", "Careful"])
+        self.assertEqual(pass_drift.rust_struct_fields(rf, "Cfg")[0], ["size_bytes", "rate"])
+        self.assertEqual(pass_drift.rust_fn_literals(rf, "demo")[0], [4096, 0.5, 3])
+        self.assertEqual(pass_drift.rust_field_default(rf, "size_bytes")[0], 4096)
+        self.assertEqual(
+            [name for name, _ in pass_drift.rust_zero_indent_consts(rf)],
+            ["LIMIT", "RATIO"],
+        )
+
+    def test_python_extractors(self):
+        src = (
+            "LIMIT = 1 << 8\n"
+            "FAST = 'fast'\n"
+            "class Cfg:\n"
+            "    DEFAULT = 7\n"
+            "    def __init__(self, size_bytes, rate):\n"
+            "        self.size_bytes = size_bytes\n"
+            "        self.rate = rate\n"
+            "        self.scale = 330.3e12\n"
+            "def demo():\n"
+            "    return Cfg(4096, 0.5)\n"
+        )
+        with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+            f.write(src)
+            path = f.name
+        try:
+            pf = pass_drift._PyFile(path)
+            self.assertEqual(pf.module_value("LIMIT"), 256)
+            self.assertEqual(pf.class_value("Cfg", "DEFAULT"), 7)
+            self.assertEqual(pf.attr_default("Cfg", "scale"), 330.3e12)
+            self.assertEqual(pf.class_attrs("Cfg"), {"size_bytes", "rate", "scale"})
+            self.assertEqual(pf.fn_literals("demo"), [4096, 0.5])
+            self.assertTrue(pf.has_module_name("FAST"))
+            self.assertFalse(pf.has_module_name("SLOW"))
+        finally:
+            os.unlink(path)
+
+    def test_real_tree_is_drift_free(self):
+        self.assertEqual([str(f) for f in pass_drift.run()], [])
+
+    def test_perturbed_mirror_is_detected(self):
+        import shutil
+
+        with tempfile.TemporaryDirectory() as tmp:
+            root = os.path.join(tmp, "pysim")
+            shutil.copytree(pass_drift.PYSIM_DEFAULT, root)
+            port = os.path.join(root, "port.py")
+            with open(port, encoding="utf-8") as f:
+                text = f.read()
+            self.assertIn("SAMPLE_POINTS = [32, 64, 128, 256, 512]", text)
+            text = text.replace(
+                "SAMPLE_POINTS = [32, 64, 128, 256, 512]",
+                "SAMPLE_POINTS = [32, 64, 128, 256, 1024]",
+            )
+            with open(port, "w", encoding="utf-8") as f:
+                f.write(text)
+            findings = pass_drift.run(pysim_root=root)
+            self.assertTrue(
+                any(f.rule == "const-value" and "SAMPLE_POINTS" in f.message for f in findings),
+                [str(f) for f in findings],
+            )
+
+
+class TestRunner(unittest.TestCase):
+    def test_known_bad_fixture_exits_nonzero(self):
+        for name in ("determinism", "units", "panicfree"):
+            code = lint_run.main(["--pass", name, "--files", fixture(name, "bad.rs"), "--no-baseline"])
+            self.assertEqual(code, 1, f"{name} bad fixture must fail the run")
+
+    def test_known_good_fixture_exits_zero(self):
+        for name in ("determinism", "units", "panicfree"):
+            code = lint_run.main(["--pass", name, "--files", fixture(name, "good.rs"), "--no-baseline"])
+            self.assertEqual(code, 0, f"{name} good fixture must pass the run")
+
+    def test_all_passes_clean_on_repo_with_baseline(self):
+        self.assertEqual(lint_run.main(["--all"]), 0)
+
+    def test_json_output_shape(self):
+        import contextlib
+        import io
+
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            code = lint_run.main(["--pass", "panicfree", "--files", fixture("panicfree", "bad.rs"),
+                                  "--no-baseline", "--json"])
+        self.assertEqual(code, 1)
+        payload = json.loads(buf.getvalue())
+        self.assertEqual(payload["passes"], ["panicfree"])
+        self.assertGreater(len(payload["new"]), 0)
+        first = payload["new"][0]
+        for key in ("pass", "rule", "path", "line", "message", "snippet"):
+            self.assertIn(key, first)
+
+
+if __name__ == "__main__":
+    unittest.main()

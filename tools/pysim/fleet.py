@@ -192,6 +192,14 @@ class SloReport:
             submitted += rep.submitted
             preemptions += rep.preemptions
             makespan = max(makespan, rep.makespan_secs)
+        # Mirror of the Rust merge's canonical sort (total_cmp chain):
+        # the pooled f64 mean accumulates in sample order, so without
+        # this the merged report drifts by ulps under replica
+        # permutation. Python tuple-compare equals total_cmp for the
+        # finite, non-negative-zero values these fields hold.
+        samples.sort(
+            key=lambda t: (t.arrival, t.admitted, t.first_token, t.finished, t.generated)
+        )
         return SloReport.from_timings(submitted, samples, slo, makespan, preemptions, depths)
 
 
@@ -1300,6 +1308,80 @@ def run_property_suites(auto):
 
     check("fleet-merge-partition", 100, merge_partition)
 
+    def report_replica_order(rng):
+        # draw-for-draw mirror of property_fleet_report_invariant_to_replica_order
+        k = rng.range(2, 6)
+        slo = SloSpec()
+        reports = []
+        for _ in range(k):
+            n = rng.range(0, 12)
+            timings = []
+            for _ in range(n):
+                arrival = rng.f64() * 10.0
+                queue = rng.f64()
+                ttft = rng.f64() * 2.0
+                generated = rng.range(1, 20)
+                tpot = rng.f64() * 0.5
+                first_token = arrival + queue + ttft
+                timings.append(
+                    RequestTiming(arrival, arrival + queue, first_token, first_token + tpot * generated, generated)
+                )
+            d = rng.range(0, 5)
+            depths = [rng.range(0, 9) for _ in range(d)]
+            extra = rng.range(0, 3)
+            makespan = rng.f64() * 30.0
+            preempt = rng.range(0, 4)
+            reports.append(SloReport.from_timings(n + extra, timings, slo, makespan, preempt, depths))
+
+        rot = rng.range(0, k)
+        permuted = reports[rot:] + reports[:rot]
+        i, j = rng.range(0, k), rng.range(0, k)
+        permuted[i], permuted[j] = permuted[j], permuted[i]
+
+        a = FleetReport(reports, slo, 2.49, 3, 1)
+        b = FleetReport(permuted, slo, 2.49, 3, 1)
+
+        assert a.replicas == b.replicas
+        assert a.fleet.submitted == b.fleet.submitted
+        assert a.fleet.completed == b.fleet.completed
+        assert a.fleet.generated_tokens == b.fleet.generated_tokens
+        assert a.fleet.preemptions == b.fleet.preemptions
+        assert a.fleet.max_queue_depth == b.fleet.max_queue_depth
+        for fa, fb in [
+            (a.fleet.makespan_secs, b.fleet.makespan_secs),
+            (a.fleet.queue_mean, b.fleet.queue_mean),
+            (a.fleet.queue_p50, b.fleet.queue_p50),
+            (a.fleet.queue_p95, b.fleet.queue_p95),
+            (a.fleet.queue_p99, b.fleet.queue_p99),
+            (a.fleet.queue_max, b.fleet.queue_max),
+            (a.fleet.ttft_p50, b.fleet.ttft_p50),
+            (a.fleet.ttft_p95, b.fleet.ttft_p95),
+            (a.fleet.ttft_p99, b.fleet.ttft_p99),
+            (a.fleet.tpot_p50, b.fleet.tpot_p50),
+            (a.fleet.tpot_p95, b.fleet.tpot_p95),
+            (a.fleet.tpot_p99, b.fleet.tpot_p99),
+            (a.fleet.latency_p50, b.fleet.latency_p50),
+            (a.fleet.latency_p95, b.fleet.latency_p95),
+            (a.fleet.latency_p99, b.fleet.latency_p99),
+            (a.fleet.mean_queue_depth, b.fleet.mean_queue_depth),
+            (a.fleet.throughput, b.fleet.throughput),
+            (a.fleet.goodput, b.fleet.goodput),
+            (a.fleet.slo_attainment, b.fleet.slo_attainment),
+            (a.cost_per_token, b.cost_per_token),
+            (a.load_imbalance, b.load_imbalance),
+        ]:
+            assert fa == fb, "field drifted under replica permutation"
+        assert len(a.fleet.samples) == len(b.fleet.samples)
+        for x, y in zip(a.fleet.samples, b.fleet.samples):
+            assert x.arrival == y.arrival
+            assert x.admitted == y.admitted
+            assert x.first_token == y.first_token
+            assert x.finished == y.finished
+            assert x.generated == y.generated
+        assert sorted(a.fleet.depth_samples) == sorted(b.fleet.depth_samples)
+
+    check("fleet-report-replica-order", 100, report_replica_order)
+
     def tenant_streams(rng):
         seed = rng.next_u64()
         rate_a = 0.5 + rng.f64() * 4.0
@@ -1325,7 +1407,7 @@ def run_property_suites(auto):
                 assert x.req.max_new == y.req.max_new
 
     check("fleet-tenant-streams", 100, tenant_streams)
-    print("PASS 5 property suites x100 cases")
+    print("PASS 6 property suites x100 cases")
 
 
 def run_fleet_module_mirrors():
