@@ -110,19 +110,40 @@ impl InterconnectSpec {
     }
 }
 
-/// Host memory specification.
+/// Host memory + CPU specification. The compute fields feed the CPU-tier
+/// GEMV roofline ([`crate::sim::SimCost::cpu_attend_time`], DESIGN.md
+/// §CPU tier): decode attention on the CPU is memory-bound, so the
+/// sustained DRAM bandwidth is the line that matters; the FLOP line only
+/// binds tiny-context corner cases.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostSpec {
     /// Usable host DRAM in bytes.
     pub memory_bytes: usize,
+    /// Sustained host DRAM bandwidth in bytes/s (all channels, what a
+    /// streaming GEMV actually sees — not the per-DIMM peak).
+    pub mem_bw: f64,
+    /// Physical cores available to the CPU attention workers.
+    pub cores: usize,
+    /// Effective FLOP/s per core for fp32 GEMV (AVX-512 FMA at sustained
+    /// clocks, discounted for the memory-bound regime).
+    pub flops_per_core: f64,
 }
 
 impl HostSpec {
-    /// Paper testbed: 882 GB DDR4.
+    /// Paper testbed: dual-socket Xeon Gold 6326 (2×16 cores), 882 GB
+    /// DDR4-3200 over 16 channels — ~340 GB/s sustained stream.
     pub fn xeon_882gb() -> Self {
         Self {
             memory_bytes: 882 * (1usize << 30),
+            mem_bw: 340.0e9,
+            cores: 32,
+            flops_per_core: 80.0e9,
         }
+    }
+
+    /// Aggregate effective CPU GEMV throughput in FLOP/s.
+    pub fn effective_cpu_flops(&self) -> f64 {
+        self.cores as f64 * self.flops_per_core
     }
 }
 
@@ -280,6 +301,13 @@ pub struct SystemConfig {
     /// heuristics. `None` (the default) keeps every historical plan
     /// bit-for-bit.
     pub autotune: Option<AutotuneConfig>,
+    /// Enable the CPU compute tier (DESIGN.md §CPU tier): host-resident
+    /// KV may be attended on the host's CPU lane instead of streaming
+    /// over PCIe, the autotuner searches the on/off axis, and
+    /// `PriceTable` bills the host cores. `false` (the default) keeps
+    /// every historical result bit-for-bit — the off-switch the
+    /// `cpu_tier` golden/property suites pin.
+    pub cpu_tier: bool,
 }
 
 impl SystemConfig {
@@ -297,6 +325,7 @@ impl SystemConfig {
             schedule: SchedulePolicy::LayerMajor,
             layer_split: LayerSplit::CountBalanced,
             autotune: None,
+            cpu_tier: false,
         }
     }
 
@@ -362,6 +391,9 @@ impl SystemConfig {
             interconnect,
             host: HostSpec {
                 memory_bytes: 4 << 30,
+                mem_bw: 20.0e9,
+                cores: 4,
+                flops_per_core: 10.0e9,
             },
             shard: ShardSpec::single(),
             block_tokens: 16,
@@ -370,6 +402,7 @@ impl SystemConfig {
             schedule: SchedulePolicy::LayerMajor,
             layer_split: LayerSplit::CountBalanced,
             autotune: None,
+            cpu_tier: false,
         }
     }
 
@@ -393,6 +426,13 @@ impl SystemConfig {
     /// `layer_split` requests are ignored in favor of the search.
     pub fn with_autotune(mut self, workload: AutotuneConfig) -> Self {
         self.autotune = Some(workload);
+        self
+    }
+
+    /// This config with the CPU compute tier switched on or off (builder
+    /// style). Off is the historical behavior, bit-for-bit.
+    pub fn with_cpu_tier(mut self, cpu_tier: bool) -> Self {
+        self.cpu_tier = cpu_tier;
         self
     }
 
@@ -561,6 +601,24 @@ mod tests {
         undo.autotune = None;
         assert_eq!(undo, base);
         assert_eq!(split.with_layer_split(LayerSplit::CountBalanced), base);
+    }
+
+    #[test]
+    fn cpu_tier_defaults_off_and_builds() {
+        // Pre-CPU-tier configs must stay value-identical: the switch
+        // defaults off in every constructor and the builder touches only
+        // its own field.
+        assert!(!SystemConfig::paper_testbed().cpu_tier);
+        assert!(!SystemConfig::paper_testbed_grid(2, 4).cpu_tier);
+        assert!(!SystemConfig::tiny_testbed().cpu_tier);
+        let on = SystemConfig::paper_testbed_grid(2, 2).with_cpu_tier(true);
+        assert!(on.cpu_tier);
+        assert_eq!(on.with_cpu_tier(false), SystemConfig::paper_testbed_grid(2, 2));
+        // the host roofline inputs are sane: memory-bound decode GEMV
+        // means mem_bw is the binding line at paper scale
+        let h = HostSpec::xeon_882gb();
+        assert!(h.mem_bw > 0.0 && h.effective_cpu_flops() > 0.0);
+        assert_eq!(h.effective_cpu_flops(), h.cores as f64 * h.flops_per_core);
     }
 
     #[test]

@@ -21,17 +21,34 @@ pub struct GpuPrice {
 #[derive(Debug, Clone)]
 pub struct PriceTable {
     tiers: Vec<GpuPrice>,
+    /// $/hour premium per replica for reserving the host CPU cores +
+    /// DRAM bandwidth as a compute tier (DESIGN.md §CPU tier). Charged
+    /// only when a replica's `SystemConfig::cpu_tier` is on, so
+    /// tier-off fleets price exactly as before.
+    cpu_tier_hourly: f64,
 }
 
 impl PriceTable {
     pub fn new(mut tiers: Vec<GpuPrice>) -> Self {
         assert!(!tiers.is_empty(), "empty price table");
         tiers.sort_by_key(|t| t.mem_gb);
-        Self { tiers }
+        Self {
+            tiers,
+            cpu_tier_hourly: 0.0,
+        }
+    }
+
+    /// Set the per-replica CPU-tier reservation price ($/hour).
+    pub fn with_cpu_tier_hourly(mut self, dollars_per_hour: f64) -> Self {
+        assert!(dollars_per_hour >= 0.0, "negative CPU-tier price");
+        self.cpu_tier_hourly = dollars_per_hour;
+        self
     }
 
     /// On-demand cloud prices (2025-ish): 24 GB consumer tier, 48 GB
-    /// workstation tier, 80 GB datacenter tier.
+    /// workstation tier, 80 GB datacenter tier; a dedicated-host-CPU
+    /// reservation (32 cores + DRAM bandwidth) prices at $0.08/h, billed
+    /// only to CPU-tier replicas.
     pub fn cloud_2025() -> Self {
         Self::new(vec![
             GpuPrice {
@@ -47,6 +64,7 @@ impl PriceTable {
                 dollars_per_hour: 2.49,
             },
         ])
+        .with_cpu_tier_hourly(0.08)
     }
 
     /// $/hour of one device with `memory_bytes` of HBM.
@@ -62,11 +80,18 @@ impl PriceTable {
     }
 
     /// $/hour of a whole replica: the sum over its grid's device slots
-    /// (mixed-memory grids price per device).
+    /// (mixed-memory grids price per device), plus the CPU-tier
+    /// reservation when the replica runs the tier (`+ 0.0` otherwise —
+    /// tier-off replicas price bit-for-bit as before).
     pub fn replica_hourly(&self, sys: &SystemConfig) -> f64 {
-        (0..sys.topology.device_count())
+        let gpus: f64 = (0..sys.topology.device_count())
             .map(|d| self.gpu_hourly(sys.topology.slot(d).gpu.memory_bytes))
-            .sum()
+            .sum();
+        if sys.cpu_tier {
+            gpus + self.cpu_tier_hourly
+        } else {
+            gpus
+        }
     }
 }
 
@@ -192,6 +217,21 @@ mod tests {
         assert_eq!(p.replica_hourly(&sys), 0.44);
         let grid = SystemConfig::paper_testbed_grid(2, 2);
         assert!((p.replica_hourly(&grid) - 4.0 * 0.44).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpu_tier_reservation_bills_only_tier_on_replicas() {
+        let p = PriceTable::cloud_2025();
+        let off = SystemConfig::paper_testbed();
+        let on = SystemConfig::paper_testbed().with_cpu_tier(true);
+        assert_eq!(p.replica_hourly(&off), 0.44);
+        assert!((p.replica_hourly(&on) - 0.52).abs() < 1e-12);
+        // a table built without the reservation never charges it
+        let free = PriceTable::new(vec![GpuPrice {
+            mem_gb: 24,
+            dollars_per_hour: 0.44,
+        }]);
+        assert_eq!(free.replica_hourly(&on), 0.44);
     }
 
     #[test]

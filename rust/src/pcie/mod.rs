@@ -13,7 +13,9 @@
 //! measures with Nsight (§5.1).
 //!
 //! Under a parallel [`crate::config::Topology`] the timeline carries
-//! `2×N` lanes — one PCIe + one GPU lane per grid device — and
+//! `3×N` lanes — one PCIe + one GPU + one host-CPU lane per grid device
+//! (the CPU lane idle unless the CPU tier is on, DESIGN.md §CPU tier) —
+//! and
 //! [`Timeline::barrier_group`] models the all-gather synchronization
 //! points of one stage's TP group (after attention and the FFN). A
 //! single-device timeline is bit-for-bit the historical two-lane one
@@ -24,7 +26,7 @@
 mod timeline;
 mod traffic;
 
-pub use timeline::{Lane, Span, Timeline};
+pub use timeline::{Lane, Span, Timeline, LANES_PER_DEVICE};
 pub use traffic::{TrafficClass, TrafficCounter};
 
 use crate::config::InterconnectSpec;

@@ -1,6 +1,9 @@
-//! Discrete-event timeline over `2×N` lanes (one PCIe + one GPU lane per
-//! device of the execution plan's TP×PP grid), the accounting core of the
-//! Fig. 8 pipeline.
+//! Discrete-event timeline over `3×N` lanes (one PCIe + one GPU + one
+//! host-CPU lane per device of the execution plan's TP×PP grid), the
+//! accounting core of the Fig. 8 pipeline. The CPU lane (DESIGN.md §CPU
+//! tier) carries host-side attention over host-resident KV; it exists on
+//! every device but stays empty unless the CPU tier schedules onto it,
+//! so legacy two-lane accounting is unchanged.
 //!
 //! `Timeline::new()` is the paper's single-GPU two-lane timeline;
 //! [`Timeline::sharded`] generalizes it to N devices and
@@ -18,18 +21,26 @@
 //! every caller addresses its device explicitly.
 
 /// A pipeline lane within one device. The paper's timeline diagrams have
-/// exactly these two per GPU.
+/// the first two per GPU; `Cpu` is the host compute lane of the CPU tier
+/// (host-side attention over host-resident KV, overlapped with the GPU
+/// weight stream).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Lane {
     PCIe,
     Gpu,
+    Cpu,
 }
+
+/// Lanes per device. Existing PCIe/GPU indices are unchanged; the CPU
+/// lane appends at index 2.
+pub const LANES_PER_DEVICE: usize = 3;
 
 impl Lane {
     fn idx(self) -> usize {
         match self {
             Lane::PCIe => 0,
             Lane::Gpu => 1,
+            Lane::Cpu => 2,
         }
     }
 }
@@ -52,7 +63,7 @@ impl Span {
     }
 }
 
-/// Discrete-event schedule over `2×N` lanes.
+/// Discrete-event schedule over `3×N` lanes.
 ///
 /// Each lane executes operations serially in scheduling order; an
 /// operation starts at `max(lane_free, ready_at)` where `ready_at`
@@ -64,7 +75,7 @@ impl Span {
 #[derive(Debug, Clone)]
 pub struct Timeline {
     devices: usize,
-    /// Indexed `device * 2 + lane.idx()`.
+    /// Indexed `device * LANES_PER_DEVICE + lane.idx()`.
     lane_free: Vec<f64>,
     busy: Vec<f64>,
     makespan: f64,
@@ -83,20 +94,20 @@ impl Timeline {
         Self::sharded(1)
     }
 
-    /// Timeline over `devices` devices (2 lanes each).
+    /// Timeline over `devices` devices ([`LANES_PER_DEVICE`] lanes each).
     pub fn sharded(devices: usize) -> Self {
         assert!(devices >= 1, "need at least one device");
         Self {
             devices,
-            lane_free: vec![0.0; 2 * devices],
-            busy: vec![0.0; 2 * devices],
+            lane_free: vec![0.0; LANES_PER_DEVICE * devices],
+            busy: vec![0.0; LANES_PER_DEVICE * devices],
             makespan: 0.0,
-            ops: vec![0; 2 * devices],
+            ops: vec![0; LANES_PER_DEVICE * devices],
         }
     }
 
-    /// Timeline sized for an execution plan (one PCIe + one GPU lane per
-    /// grid device, plan-indexed).
+    /// Timeline sized for an execution plan (one PCIe + one GPU + one
+    /// CPU lane per grid device, plan-indexed).
     pub fn for_plan(plan: &crate::plan::ExecutionPlan) -> Self {
         Self::sharded(plan.device_count())
     }
@@ -117,7 +128,7 @@ impl Timeline {
             "device {device} out of range ({} devices)",
             self.devices
         );
-        device * 2 + lane.idx()
+        device * LANES_PER_DEVICE + lane.idx()
     }
 
     /// Schedule an operation of `duration` seconds on `device`'s `lane`,
@@ -363,6 +374,32 @@ mod tests {
     }
 
     #[test]
+    fn cpu_lane_is_independent_and_empty_by_default() {
+        // The CPU tier's lane: overlaps both classic lanes, contributes
+        // nothing unless scheduled onto — so legacy callers see the
+        // historical two-lane pipeline exactly.
+        let mut t = Timeline::new();
+        let load = t.schedule_on(0, Lane::PCIe, 0.0, 2.0);
+        let comp = t.schedule_on(0, Lane::Gpu, load.end, 1.5);
+        assert_eq!(t.busy_on(0, Lane::Cpu), 0.0);
+        assert_eq!(t.op_count_on(0, Lane::Cpu), 0);
+        assert_eq!(t.utilization_on(0, Lane::Cpu), 0.0);
+        // a CPU attention span overlaps the other lanes fully
+        let attend = t.schedule_on(0, Lane::Cpu, 0.0, 3.0);
+        assert_eq!(attend.start, 0.0);
+        assert_eq!(t.makespan(), comp.end.max(attend.end));
+        // and serializes against other CPU work on the same device
+        let attend2 = t.schedule_on(0, Lane::Cpu, 0.0, 1.0);
+        assert_eq!(attend2.start, attend.end);
+        // GPU barriers leave the CPU lane alone
+        let mut g = Timeline::sharded(2);
+        g.schedule_on(0, Lane::Cpu, 0.0, 4.0);
+        g.barrier(0.0, 0.5);
+        assert_eq!(g.lane_free_on(0, Lane::Cpu), 4.0);
+        assert_eq!(g.op_count_on(0, Lane::Cpu), 1);
+    }
+
+    #[test]
     fn property_busy_never_exceeds_makespan() {
         crate::util::prop::check("timeline-busy", 200, |rng| {
             let mut t = Timeline::new();
@@ -395,7 +432,7 @@ mod tests {
             let devices = tp * pp;
             let mut t = Timeline::sharded(devices);
             // External per-lane span log, indexed like the timeline.
-            let mut spans: Vec<Vec<Span>> = vec![Vec::new(); 2 * devices];
+            let mut spans: Vec<Vec<Span>> = vec![Vec::new(); LANES_PER_DEVICE * devices];
             let mut max_end = 0.0f64;
             let mut last_end = 0.0f64;
             for _ in 0..60 {
@@ -407,14 +444,14 @@ mod tests {
                     let group = stage * tp..(stage + 1) * tp;
                     let span = t.barrier_group(group.clone(), dep, dur);
                     for d in group {
-                        spans[d * 2 + Lane::Gpu.idx()].push(span);
+                        spans[d * LANES_PER_DEVICE + Lane::Gpu.idx()].push(span);
                     }
                     span
                 } else {
                     let d = rng.range(0, devices);
-                    let lane = if rng.f64() < 0.5 { Lane::PCIe } else { Lane::Gpu };
+                    let lane = *rng.choose(&[Lane::PCIe, Lane::Gpu, Lane::Cpu]);
                     let span = t.schedule_on(d, lane, dep, dur);
-                    spans[d * 2 + lane.idx()].push(span);
+                    spans[d * LANES_PER_DEVICE + lane.idx()].push(span);
                     span
                 };
                 // (b) dependencies are respected
@@ -438,7 +475,7 @@ mod tests {
             // (c) + (d)
             assert_eq!(t.makespan(), max_end, "makespan != max span end");
             for d in 0..devices {
-                for lane in [Lane::PCIe, Lane::Gpu] {
+                for lane in [Lane::PCIe, Lane::Gpu, Lane::Cpu] {
                     let u = t.utilization_on(d, lane);
                     assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
                     assert!(t.busy_on(d, lane) <= t.makespan() + 1e-9);

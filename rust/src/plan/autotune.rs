@@ -43,6 +43,7 @@
 
 use crate::config::{AutotuneConfig, LayerSplit, ModelConfig, SystemConfig};
 use crate::policy::{stage_cache_allocations, BlockRatio, CostModel, PolicyConfig};
+use crate::util::units::blocks_f64;
 
 use super::{count_balanced_split, lower, ExecutionPlan, PipelineSchedule};
 
@@ -59,6 +60,10 @@ pub struct Candidate {
     pub layer_split: LayerSplit,
     /// In-flight chunk count the candidate runs (1 under layer-major).
     pub chunks: usize,
+    /// Whether the candidate runs with the CPU compute tier on (searched
+    /// only when `SystemConfig::cpu_tier` enables the tier; always
+    /// `false` otherwise, keeping the historical candidate set).
+    pub cpu_tier: bool,
     /// Analytic decode throughput in tokens/s ([`score_plan`]).
     pub score: f64,
 }
@@ -172,6 +177,15 @@ pub fn split_counts(model: &ModelConfig, sys: &SystemConfig, rule: LayerSplit) -
 /// `batch / t_step` under the best designation. All terms are linear
 /// fits or closed forms — no event-driven simulation.
 ///
+/// When the candidate runs the CPU tier (`plan.cpu_tier`) a third lane
+/// joins the race: per stage the step's KV blocks split between the PCIe
+/// stream and host-side CPU attention
+/// ([`crate::sim::SimCost::cpu_attend_secs_per_block_for`]). The split is
+/// the closed-form balance point of the two decreasing/increasing lane
+/// lines, `c* = p(0) / (s_kv + s_cpu)` clamped to `[0, kv]` — both lanes
+/// overlap the GPU, so the step pays only the slower of the two. With the
+/// tier off the expression is the historical two-lane one bit-for-bit.
+///
 /// [`AllocationInputs::for_stage`]: crate::policy::AllocationInputs::for_stage
 pub fn score_plan(
     model: &ModelConfig,
@@ -209,6 +223,11 @@ pub fn score_plan(
             mixes.push(key);
         }
     }
+    let cpu_block = if plan.cpu_tier {
+        crate::sim::SimCost::cpu_attend_secs_per_block_for(model, sys, plan.tp)
+    } else {
+        0.0
+    };
     let mut t_step = f64::INFINITY;
     for (act, kv) in mixes {
         let ratio = BlockRatio::new(act, kv);
@@ -217,17 +236,40 @@ pub fn score_plan(
         let kv_blocks = kv_per_req * batch;
         let mut gpu_max: f64 = 0.0;
         let mut pcie_max: f64 = 0.0;
+        let mut cpu_max: f64 = 0.0;
         for s in 0..plan.pp {
             let cm = &cms[s];
             let layers = plan.stages[s].layer_count() as f64;
             let gpu = layers * (cm.kv_gen.eval(act_blocks as f64) + chunks as f64 * weight_read);
             let spill = act_blocks.saturating_sub(plan.memory().stage_act_capacity(s));
-            let pcie = layers
-                * (cm.load_w + cm.load_kv.eval(kv_blocks as f64) + cm.load_act.eval(spill as f64));
+            if plan.cpu_tier && cpu_block > 0.0 {
+                // Three-lane: route c* of the stage's KV blocks to the CPU
+                // lane, balancing the shrinking PCIe line against the
+                // growing CPU line (both overlap the GPU lane).
+                let p0 = cm.load_w
+                    + cm.load_kv.eval(blocks_f64(kv_blocks))
+                    + cm.load_act.eval(spill as f64);
+                let c = (p0 / (cm.load_kv.slope.max(0.0) + cpu_block))
+                    .clamp(0.0, blocks_f64(kv_blocks));
+                let pcie = layers
+                    * (cm.load_w
+                        + cm.load_kv.eval(blocks_f64(kv_blocks) - c)
+                        + cm.load_act.eval(spill as f64));
+                let cpu = layers * cpu_block * c;
+                pcie_max = pcie_max.max(pcie);
+                cpu_max = cpu_max.max(cpu);
+            } else {
+                let pcie = layers
+                    * (cm.load_w
+                        + cm.load_kv.eval(blocks_f64(kv_blocks))
+                        + cm.load_act.eval(spill as f64));
+                pcie_max = pcie_max.max(pcie);
+            }
             gpu_max = gpu_max.max(gpu);
-            pcie_max = pcie_max.max(pcie);
         }
-        let t = (gpu_max / (1.0 - bubble.min(MAX_BUBBLE))).max(pcie_max);
+        let t = (gpu_max / (1.0 - bubble.min(MAX_BUBBLE)))
+            .max(pcie_max)
+            .max(cpu_max);
         t_step = t_step.min(t);
     }
     batch as f64 / t_step
@@ -257,19 +299,30 @@ pub fn tune(model: &ModelConfig, sys: &SystemConfig, workload: AutotuneConfig) -
         for c in 2..=pp {
             axes.push((PipelineSchedule::OneFOneB, Some(c)));
         }
+        // The CPU tier is a searched axis only when the system enables
+        // it; `false` enumerates first so ties keep the historical
+        // (tier-off) plan.
+        let cpu_axis: &[bool] = if sys.cpu_tier {
+            &[false, true]
+        } else {
+            &[false]
+        };
         for (schedule, tuned_chunks) in axes {
-            let plan = lower(model, sys, &counts, schedule, tuned_chunks);
-            let score = score_plan(model, sys, &plan, workload);
-            let cand = Candidate {
-                schedule,
-                layer_split: rule,
-                chunks: plan.inflight_chunks(),
-                score,
-            };
-            if best.as_ref().map_or(true, |(b, _)| score > b.score) {
-                best = Some((cand, plan));
+            for &cpu in cpu_axis {
+                let plan = lower(model, sys, &counts, schedule, tuned_chunks, cpu);
+                let score = score_plan(model, sys, &plan, workload);
+                let cand = Candidate {
+                    schedule,
+                    layer_split: rule,
+                    chunks: plan.inflight_chunks(),
+                    cpu_tier: cpu,
+                    score,
+                };
+                if best.as_ref().map_or(true, |(b, _)| score > b.score) {
+                    best = Some((cand, plan));
+                }
+                candidates.push(cand);
             }
-            candidates.push(cand);
         }
     }
     let (winner, plan) = best.expect("search space is never empty");
@@ -320,7 +373,7 @@ mod tests {
         assert!(counts[0] >= 1);
         // the split actually balances the streamed fractions: both
         // stages stream strictly less than the count split's pacing one
-        let tuned = lower(&m, &sys, &counts, PipelineSchedule::LayerMajor, None);
+        let tuned = lower(&m, &sys, &counts, PipelineSchedule::LayerMajor, None, false);
         let historical = ExecutionPlan::for_system(&m, &sys);
         let pace = |p: &ExecutionPlan| {
             p.stages
@@ -404,6 +457,42 @@ mod tests {
         );
         assert_eq!(streaming.winner.schedule, PipelineSchedule::LayerMajor);
         assert_eq!(streaming.plan.tuned_chunks(), None);
+    }
+
+    #[test]
+    fn cpu_axis_doubles_the_search_only_when_the_tier_is_on() {
+        let wl = AutotuneConfig {
+            batch: 64,
+            prompt: 512,
+            gen: 32,
+        };
+        let m = ModelConfig::opt_66b();
+        // Tier off: the historical candidate set, every point tier-off.
+        let off = tune(&m, &SystemConfig::paper_testbed_grid(2, 4), wl);
+        assert_eq!(off.candidates.len(), 8);
+        assert!(off.candidates.iter().all(|c| !c.cpu_tier));
+        assert!(!off.winner.cpu_tier);
+        // Tier on: every (split, schedule) point gains a tier-on twin,
+        // enumerated after its tier-off sibling so ties stay historical.
+        let on = tune(
+            &m,
+            &SystemConfig::paper_testbed_grid(2, 4).with_cpu_tier(true),
+            wl,
+        );
+        assert_eq!(on.candidates.len(), 16);
+        for pair in on.candidates.chunks(2) {
+            assert!(!pair[0].cpu_tier && pair[1].cpu_tier, "{pair:?}");
+            assert_eq!(pair[0].schedule, pair[1].schedule);
+            assert_eq!(pair[0].layer_split, pair[1].layer_split);
+        }
+        // The tier-off half of the on-search is the off-search verbatim,
+        // so enabling the axis can never lose to leaving it off.
+        for (a, b) in off.candidates.iter().zip(on.candidates.iter().step_by(2)) {
+            assert_eq!(a.score, b.score, "{a:?} vs {b:?}");
+        }
+        assert!(on.winner.score >= off.winner.score);
+        // The winning plan records the searched tier setting.
+        assert_eq!(on.plan.cpu_tier, on.winner.cpu_tier);
     }
 
     #[test]

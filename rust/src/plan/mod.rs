@@ -134,6 +134,11 @@ pub struct ExecutionPlan {
     /// chunk-major lowering, `None` for untuned plans (which keep the
     /// historical one-chunk-per-stage steady state, `pp`).
     tuned_chunks: Option<usize>,
+    /// Whether the CPU compute tier is on for this plan (DESIGN.md §CPU
+    /// tier): requested via `SystemConfig::cpu_tier`, or searched as an
+    /// axis by the autotuner when the system enables the tier. `false`
+    /// lowers every historical plan bit-for-bit.
+    pub cpu_tier: bool,
     /// Per-device residency/budget authority (see [`MemoryPlan`]).
     memory: MemoryPlan,
 }
@@ -332,7 +337,7 @@ impl<'a> PlanBuilder<'a> {
                 SchedulePolicy::Auto => choose_schedule(self.model, self.sys),
             }
         };
-        lower(self.model, self.sys, &counts, schedule, None)
+        lower(self.model, self.sys, &counts, schedule, None, self.sys.cpu_tier)
     }
 }
 
@@ -355,6 +360,7 @@ fn lower(
     counts: &[usize],
     schedule: PipelineSchedule,
     tuned_chunks: Option<usize>,
+    cpu_tier: bool,
 ) -> ExecutionPlan {
     let (tp, pp) = (sys.topology.tp, sys.topology.pp);
     debug_assert_eq!(counts.len(), pp, "split must cover every stage");
@@ -399,6 +405,7 @@ fn lower(
         collectives_per_layer: 2,
         schedule,
         tuned_chunks,
+        cpu_tier,
         memory,
     }
 }

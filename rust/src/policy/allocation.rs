@@ -39,6 +39,34 @@ pub struct AllocationInputs {
     /// 0 (the single-stage / pre-schedule-axis value) reproduces the
     /// historical allocation bit-for-bit.
     pub bubble: f64,
+    /// KV blocks per decode step whose attention the CPU tier computes
+    /// host-side (DESIGN.md §CPU tier). These blocks never transit PCIe,
+    /// so Algorithm 1's link line starts `load_kv.slope · cpu_kv_blocks`
+    /// seconds in credit and the balance affords that many extra KV
+    /// blocks for the same host bytes. 0 — always the case when
+    /// [`crate::config::SystemConfig::cpu_tier`] is off — reproduces the
+    /// historical allocation bit-for-bit.
+    pub cpu_kv_blocks: usize,
+}
+
+/// Per-step KV blocks the CPU tier can attend host-side within the plan's
+/// per-layer weight window (`load_w`): the CPU lane runs concurrently with
+/// the weight stream, so any block it finishes inside the window costs the
+/// step nothing. Zero when the plan runs without the tier.
+fn cpu_kv_capacity(
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    plan: &ExecutionPlan,
+    load_w: f64,
+) -> usize {
+    if !plan.cpu_tier {
+        return 0;
+    }
+    let per_block = crate::sim::SimCost::cpu_attend_secs_per_block_for(model, sys, plan.tp);
+    if per_block <= 0.0 || load_w <= 0.0 {
+        return 0;
+    }
+    (load_w / per_block).floor() as usize
 }
 
 impl AllocationInputs {
@@ -55,12 +83,14 @@ impl AllocationInputs {
         host_cache_bytes: usize,
         bubble: f64,
     ) -> Self {
+        let cost = CostModel::analytic_for_plan(model, sys, plan);
         Self {
-            cost: CostModel::analytic_for_plan(model, sys, plan),
+            cost,
             act_gpu_blocks: plan.memory().act_capacity_blocks(),
             host_cache_bytes,
             sizes: BlockSizes::new(model, sys.block_tokens),
             bubble,
+            cpu_kv_blocks: cpu_kv_capacity(model, sys, plan, cost.load_w),
         }
     }
 
@@ -80,12 +110,14 @@ impl AllocationInputs {
         host_cache_bytes: usize,
         bubble: f64,
     ) -> Self {
+        let cost = CostModel::analytic_for_stage(model, sys, plan, stage);
         Self {
-            cost: CostModel::analytic_for_stage(model, sys, plan, stage),
+            cost,
             act_gpu_blocks: plan.memory().stage_act_capacity(stage),
             host_cache_bytes,
             sizes: BlockSizes::new(model, sys.block_tokens),
             bubble,
+            cpu_kv_blocks: cpu_kv_capacity(model, sys, plan, cost.load_w),
         }
     }
 
@@ -163,7 +195,9 @@ pub fn initial_cache_allocation(inp: &AllocationInputs) -> (usize, usize) {
         (act, 0)
     } else {
         // PCIe would idle while the GPU recomputes: schedule KV loads.
-        let kv = inp.cost.load_kv.inverse(-t_budget).floor() as usize;
+        // CPU-attended blocks ride on top for free — they never touch
+        // the link (`+ 0` with the tier off, exact).
+        let kv = inp.cost.load_kv.inverse(-t_budget).floor() as usize + inp.cpu_kv_blocks;
         (0, kv)
     }
 }
@@ -193,7 +227,10 @@ pub fn alloc_remaining(inp: &AllocationInputs, act_init: usize, kv_init: usize) 
         // load: ACT strictly dominates — fill everything with ACT.
         return ((remaining / s_act).floor() as usize, 0);
     }
-    let d = l.intercept + la.intercept - g.intercept;
+    // CPU-attended KV blocks never transit the link: the KV line starts
+    // `l_s·cpu_kv` seconds in credit (`− 0.0` with the tier off, exact).
+    let d = l.intercept + la.intercept - g.intercept
+        - l.slope * crate::util::units::blocks_f64(inp.cpu_kv_blocks);
     // a = (l_s·k + d) / net ; substitute into the byte constraint.
     let denom = s_act * l.slope / net + s_kv;
     let k = (remaining - s_act * d / net) / denom;
@@ -297,6 +334,7 @@ mod tests {
             host_cache_bytes: host_gb << 30,
             sizes: BlockSizes::new(model, sys.block_tokens),
             bubble: 0.0,
+            cpu_kv_blocks: 0,
         }
     }
 
@@ -402,6 +440,7 @@ mod tests {
                 host_cache_bytes: rng.range(1 << 28, 400usize << 30),
                 sizes: BlockSizes::new(&m, sys.block_tokens),
                 bubble: 0.0,
+                cpu_kv_blocks: 0,
             };
             for alloc in [
                 hybrid_cache_allocation(&inp),
@@ -429,6 +468,7 @@ mod tests {
             host_cache_bytes: 200usize << 30,
             sizes: BlockSizes::new(&m, sys.block_tokens),
             bubble: 0.0,
+            cpu_kv_blocks: 0,
         };
         assert_eq!(auto.act_gpu_blocks, manual.act_gpu_blocks);
         assert_eq!(auto.cost.load_w, manual.cost.load_w);
@@ -481,6 +521,48 @@ mod tests {
         }
     }
 
+    // ---- CPU-tier inputs (ISSUE 9) ------------------------------------
+
+    #[test]
+    fn cpu_attended_blocks_shift_the_mix_toward_kv() {
+        let m = ModelConfig::opt_30b();
+        let base = inputs(&m, 200);
+        let zero = hybrid_cache_allocation(&base);
+        let with_cpu = hybrid_cache_allocation(&AllocationInputs {
+            cpu_kv_blocks: 5_000,
+            ..base
+        });
+        // blocks the CPU attends never transit the link, so the balance
+        // affords more KV for the same host bytes
+        assert!(with_cpu.kv_blocks > zero.kv_blocks);
+        assert!(act_fraction(&with_cpu) < act_fraction(&zero));
+        assert!(with_cpu.total_bytes(&base.sizes) <= base.host_cache_bytes);
+        // explicit zero reproduces the historical allocation bit-for-bit
+        let explicit = hybrid_cache_allocation(&AllocationInputs {
+            cpu_kv_blocks: 0,
+            ..base
+        });
+        assert_eq!(explicit, zero);
+    }
+
+    #[test]
+    fn for_plan_counts_cpu_attended_blocks_only_with_the_tier() {
+        use crate::plan::ExecutionPlan;
+        let m = ModelConfig::opt_66b();
+        let off_sys = SystemConfig::paper_testbed();
+        let off_plan = ExecutionPlan::for_system(&m, &off_sys);
+        let off = AllocationInputs::for_plan(&m, &off_sys, &off_plan, 200usize << 30, 0.0);
+        assert_eq!(off.cpu_kv_blocks, 0);
+        let on_sys = SystemConfig::paper_testbed().with_cpu_tier(true);
+        let on_plan = ExecutionPlan::for_system(&m, &on_sys);
+        assert!(on_plan.cpu_tier);
+        let on = AllocationInputs::for_plan(&m, &on_sys, &on_plan, 200usize << 30, 0.0);
+        assert!(on.cpu_kv_blocks > 0, "{}", on.cpu_kv_blocks);
+        // everything else about the inputs is tier-independent
+        assert_eq!(off.cost.load_w, on.cost.load_w);
+        assert_eq!(off.act_gpu_blocks, on.act_gpu_blocks);
+    }
+
     // ---- bubble-aware Algorithm 1 (ISSUE 4) ---------------------------
 
     fn act_fraction(alloc: &HostAllocation) -> f64 {
@@ -519,6 +601,7 @@ mod tests {
                 host_cache_bytes: rng.range(1 << 28, 400usize << 30),
                 sizes: BlockSizes::new(&m, sys.block_tokens),
                 bubble: 0.0,
+                cpu_kv_blocks: 0,
             };
             let zero = hybrid_cache_allocation(&base);
             let explicit = hybrid_cache_allocation(&AllocationInputs { bubble: 0.0, ..base });

@@ -31,7 +31,9 @@ use crate::plan::ExecutionPlan;
 use crate::policy::{AllocationInputs, BlockRatio, CostModel};
 use crate::sim::SimCost;
 
-use super::{StagePressure, StepEngine, VictimInfo};
+use super::{
+    select_victim_action_pressed, StagePressure, StepEngine, VictimAction, VictimInfo,
+};
 
 struct ReqState {
     prompt_len: usize,
@@ -40,6 +42,10 @@ struct ReqState {
     done: bool,
     paused: bool,
     demoted: bool,
+    /// Sticky CPU-tier mark: this request's host-resident KV is attended
+    /// on the CPU lane and never transits PCIe again (the third victim
+    /// action; only ever set when the plan runs the tier).
+    cpu_attended: bool,
     prefilled: bool,
     reported: bool,
     token_times: Vec<f64>,
@@ -85,12 +91,26 @@ impl AnalyticEngine {
         // bubble the plan's schedule leaves at its steady-state chunk
         // count (0 at pp = 1 — the historical allocation, bit-for-bit).
         let bubble = plan.schedule_bubble(plan.inflight_chunks());
+        // CPU tier on: blocks the host CPU can attend inside the weight
+        // window never transit the link, and Algorithm 1's balance
+        // affords that many extra KV blocks (0 with the tier off).
+        let cpu_kv_blocks = if plan.cpu_tier {
+            let per_block = cost.cpu_attend_secs_per_block();
+            if per_block > 0.0 && cm.load_w > 0.0 {
+                (cm.load_w / per_block).floor() as usize
+            } else {
+                0
+            }
+        } else {
+            0
+        };
         let alloc = crate::policy::hybrid_cache_allocation(&AllocationInputs {
             cost: cm,
             act_gpu_blocks: cost.gpu_act_block_capacity(),
             host_cache_bytes,
             sizes,
             bubble,
+            cpu_kv_blocks,
         });
         let ratio = BlockRatio::new(alloc.act_blocks.max(1), alloc.kv_blocks);
         let tl = Timeline::for_plan(&plan);
@@ -166,10 +186,17 @@ impl AnalyticEngine {
     /// `c` runs on stage `s + 1`'s lanes, which is where the 1F1B
     /// overlap comes from. Records — and returns the max of — the
     /// per-chunk last-stage exits in `last_exit`.
+    /// `cpu_secs_base` is the per-layer CPU-lane attention time of the
+    /// round's CPU-attended KV blocks (0 with the tier off — the CPU
+    /// lane then stays untouched and the pass is bit-for-bit the
+    /// historical two-lane one). The GPU span gates on the CPU span's
+    /// end like it gates on the loads: the layer's forward needs the
+    /// host-computed attention output.
     fn schedule_pass(
         &mut self,
         gpu_secs_base: f64,
         cache_pcie_base: f64,
+        cpu_secs_base: f64,
         hop_tokens: usize,
         entries: &[f64],
     ) -> f64 {
@@ -197,7 +224,13 @@ impl AnalyticEngine {
                     let t_pcie = layers * (w_dev + cache_pcie_base * frac * link_scale);
                     let t_gpu = layers * gpu_secs_base * frac * gpu_scale;
                     let load = self.tl.schedule_on(d, Lane::PCIe, 0.0, t_pcie);
-                    let span = self.tl.schedule_on(d, Lane::Gpu, load.end.max(handoff), t_gpu);
+                    let mut gate = load.end.max(handoff);
+                    if cpu_secs_base > 0.0 {
+                        let t_cpu = layers * cpu_secs_base * frac;
+                        let attend = self.tl.schedule_on(d, Lane::Cpu, 0.0, t_cpu);
+                        gate = gate.max(attend.end);
+                    }
+                    let span = self.tl.schedule_on(d, Lane::Gpu, gate, t_gpu);
                     stage_end = stage_end.max(span.end);
                 }
                 if self.plan.tp > 1 {
@@ -278,6 +311,7 @@ impl StepEngine for AnalyticEngine {
                 done: false,
                 paused: false,
                 demoted: false,
+                cpu_attended: false,
                 prefilled: false,
                 reported: false,
                 token_times: Vec::new(),
@@ -324,7 +358,7 @@ impl StepEngine for AnalyticEngine {
             // A fresh prompt depends on no earlier tokens: no feedback
             // gate (lane serialization still orders it after prior work).
             let entries = vec![0.0; self.pass_chunks(batch)];
-            let end = self.schedule_pass(gpu_base, 0.0, batch * max_prompt, &entries);
+            let end = self.schedule_pass(gpu_base, 0.0, 0.0, batch * max_prompt, &entries);
             for &id in &wave {
                 let st = self.states.get_mut(&id).unwrap();
                 st.prefilled = true;
@@ -366,14 +400,68 @@ impl StepEngine for AnalyticEngine {
             let mean_ctx = ctx_sum / n;
             let gpu_base = self.cost.kv_gen_time(act_blocks * bt)
                 + self.cost.layer_forward_time(n, 1, mean_ctx);
-            let cache_base = self.cost.kv_load_time(kv_blocks * bt)
+            // ---- CPU tier: shed link pressure onto the host lane -----
+            // While the pressed device's PCIe lane (weight stream + cache
+            // loads) paces the round, move whole requests' KV attention
+            // to the CPU via the three-way victim decision. The mark is
+            // sticky: an attended request's KV never transits PCIe again.
+            // Demotion stays the scheduler's byte-pressure tool — a
+            // DemoteToAct verdict here just stops the shedding.
+            if self.plan.cpu_tier {
+                let pressed = (0..self.sys.topology.devices())
+                    .max_by(|&a, &b| {
+                        self.cost
+                            .device_weight_stream_time(a)
+                            .total_cmp(&self.cost.device_weight_stream_time(b))
+                    })
+                    .unwrap_or(0);
+                let pressure = self.pressure_at(pressed);
+                loop {
+                    let mut link_kv = 0usize;
+                    for &id in &runnable {
+                        if !self.states[&id].cpu_attended {
+                            link_kv += self.blocks.table(id)?.count_kind(BlockKind::Kv);
+                        }
+                    }
+                    let cache = self.cost.kv_load_time(link_kv * bt)
+                        + self.cost.act_load_time(act_blocks * bt);
+                    if link_kv == 0 || pressure.free_window_secs + cache <= gpu_base {
+                        break;
+                    }
+                    let candidates: Vec<VictimInfo> = runnable
+                        .iter()
+                        .copied()
+                        .filter(|id| !self.states[id].cpu_attended)
+                        .filter_map(|id| self.victim_info(id).ok())
+                        .filter(|v| v.kv_blocks > 0)
+                        .collect();
+                    match select_victim_action_pressed(&candidates, &self.cm, &pressure) {
+                        Some((v, VictimAction::CpuAttend)) => {
+                            self.states.get_mut(&v.id).unwrap().cpu_attended = true;
+                        }
+                        _ => break,
+                    }
+                }
+            }
+            let mut cpu_kv = 0usize;
+            for &id in &runnable {
+                if self.states[&id].cpu_attended {
+                    cpu_kv += self.blocks.table(id)?.count_kind(BlockKind::Kv);
+                }
+            }
+            let cache_base = self.cost.kv_load_time((kv_blocks - cpu_kv) * bt)
                 + self.cost.act_load_time(act_blocks * bt);
+            let cpu_base = if cpu_kv > 0 {
+                self.cost.cpu_attend_secs_per_block() * cpu_kv as f64
+            } else {
+                0.0
+            };
             // Decode consumes the tokens the previous pass produced: each
             // chunk waits for its own prior last-stage exit — the
             // pipeline feedback that creates bubbles at pp > 1 (and that
             // the chunk-major schedule overlaps across chunks).
             let entries = self.feedback_entries(self.pass_chunks(n));
-            let end = self.schedule_pass(gpu_base, cache_base, n, &entries);
+            let end = self.schedule_pass(gpu_base, cache_base, cpu_base, n, &entries);
             for &id in &runnable {
                 {
                     let st = self.states.get_mut(&id).unwrap();
@@ -497,6 +585,13 @@ impl StepEngine for AnalyticEngine {
             // the pressed device's own per-layer weight stream is free
             // recompute time for demotion scoring
             free_window_secs: self.cost.device_weight_stream_time(device),
+            // the CPU lane only exists for victim scoring when the plan
+            // runs the tier (0.0 = CpuAttend ineligible)
+            cpu_attend_secs_per_block: if self.plan.cpu_tier {
+                self.cost.cpu_attend_secs_per_block()
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -710,6 +805,53 @@ mod tests {
         let r = s.report();
         assert!(r.preemptions >= 1, "expected ACT demotion under pressure");
         assert_eq!(s.ledger().reserved_per_shard(), 0);
+    }
+
+    #[test]
+    fn cpu_tier_routes_attention_to_the_host_lane() {
+        // OPT-30B on the paper testbed streams ~2/3 of its weights, so
+        // decode rounds are PCIe-bound: with the tier on, the engine's
+        // three-way victim decision moves whole requests' KV attention
+        // onto the CPU lane and the same trace finishes no later. With
+        // the tier off the CPU lane must stay untouched.
+        let m = ModelConfig::opt_30b();
+        let run = |cpu: bool| {
+            let sys = SystemConfig::paper_testbed_tp(2).with_cpu_tier(cpu);
+            let sizes = BlockSizes::new(&m, sys.block_tokens);
+            let eng = AnalyticEngine::new(&m, &sys, 4096 * sizes.kv_bytes);
+            let mut s = Scheduler::new(eng, SchedConfig::default());
+            for i in 0..6u64 {
+                s.submit(Request::new(i + 1, vec![7; 256], 32), 0.0).unwrap();
+            }
+            let done = s.run_to_completion().unwrap();
+            assert_eq!(done.len(), 6);
+            let tl = s.engine().timeline();
+            let cpu_busy: f64 = (0..tl.devices()).map(|d| tl.busy_on(d, Lane::Cpu)).sum();
+            (s.report().makespan_secs, cpu_busy)
+        };
+        let (t_off, busy_off) = run(false);
+        let (t_on, busy_on) = run(true);
+        assert_eq!(busy_off, 0.0, "tier off must leave the CPU lane empty");
+        assert!(busy_on > 0.0, "tier on never engaged the CPU lane");
+        assert!(
+            t_on <= t_off + 1e-12,
+            "CPU tier slowed serving: {t_on} !<= {t_off}"
+        );
+    }
+
+    #[test]
+    fn cpu_tier_pressure_is_only_advertised_with_the_tier() {
+        let m = ModelConfig::opt_30b();
+        let sys = SystemConfig::paper_testbed_tp(2);
+        let sizes = BlockSizes::new(&m, sys.block_tokens);
+        let off = AnalyticEngine::new(&m, &sys, 4096 * sizes.kv_bytes);
+        assert_eq!(off.pressure_at(0).cpu_attend_secs_per_block, 0.0);
+        let on = AnalyticEngine::new(
+            &m,
+            &sys.clone().with_cpu_tier(true),
+            4096 * sizes.kv_bytes,
+        );
+        assert!(on.pressure_at(0).cpu_attend_secs_per_block > 0.0);
     }
 
     #[test]

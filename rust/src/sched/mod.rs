@@ -64,8 +64,9 @@ use crate::workload::TimedRequest;
 pub use analytic::AnalyticEngine;
 pub use shard::{Booking, ShardLedger};
 pub use victim::{
-    demotion_score, demotion_score_pressed, select_victim, select_victim_pressed, StagePressure,
-    VictimInfo,
+    cpu_attend_step_penalty_pressed, demotion_score, demotion_score_pressed,
+    demotion_step_penalty_pressed, preferred_action_pressed, select_victim,
+    select_victim_action_pressed, select_victim_pressed, StagePressure, VictimAction, VictimInfo,
 };
 
 /// The engine surface the scheduler drives. [`Engine`] implements it; the

@@ -23,6 +23,26 @@
 
 use crate::cache::BlockSizes;
 use crate::policy::CostModel;
+use crate::util::units::{blocks_f64, tokens_f64};
+
+/// How a selected victim's host-resident context is served afterwards.
+///
+/// `DemoteToAct` is the paper's primitive: KV blocks collapse to ACT
+/// checkpoints (freeing host bytes) and recompute on the GPU each step.
+/// `CpuAttend` is the CPU-tier alternative (DESIGN.md §CPU tier): the KV
+/// blocks stay host-resident at full size and attention over them runs
+/// on the host's CPU lane, overlapped with the GPU weight stream — it
+/// frees *link* seconds, not host bytes, so it is only ever picked by
+/// link-pressure callers ([`select_victim_action_pressed`]); the
+/// byte-pressure path ([`super::Scheduler::preempt_until`]) always
+/// demotes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimAction {
+    /// Collapse KV blocks to ACT checkpoints; recompute on the GPU.
+    DemoteToAct,
+    /// Keep KV host-resident; attend over it on the CPU lane.
+    CpuAttend,
+}
 
 /// What the scheduler knows about a preemption candidate.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,6 +78,13 @@ pub struct StagePressure {
     /// under its own weight stream anyway (0 for a fully resident
     /// device).
     pub free_window_secs: f64,
+    /// Per-layer CPU-lane attention seconds per host-resident KV block
+    /// on the pressed stage's host ([`crate::sim::SimCost::
+    /// cpu_attend_time`] divided by the block's tokens). `0.0` means the
+    /// CPU tier is absent or disabled — [`VictimAction::CpuAttend`] is
+    /// then ineligible (never "free"), keeping legacy scoring
+    /// bit-for-bit.
+    pub cpu_attend_secs_per_block: f64,
 }
 
 impl StagePressure {
@@ -70,6 +97,7 @@ impl StagePressure {
             gpu_scale: 1.0,
             link_scale: 1.0,
             free_window_secs: 0.0,
+            cpu_attend_secs_per_block: 0.0,
         }
     }
 }
@@ -86,21 +114,52 @@ pub fn bytes_freed(v: &VictimInfo, sizes: BlockSizes) -> usize {
 }
 
 /// Added per-layer pipeline seconds per remaining decode step if `v` is
-/// demoted, as the PRESSED device pays them: KV-Gen time over the
-/// enlarged ACT set (at the pressed clock) minus the larger of the
-/// replaced pipeline time (previous KV-Gen at the pressed clock + the KV
-/// load the demotion removes, at the pressed link) and the device's free
-/// weight-stream window. Clamped at zero — recomputation that hides
-/// under the weight stream costs nothing.
+/// demoted, as the PRESSED device pays them. The free weight-stream
+/// window discounts GPU time on BOTH sides of the trade — what the GPU
+/// pays after the demotion and what it already paid before — and the KV
+/// load the demotion removes (at the pressed link) is credited in full
+/// on top. Clamped at zero — recomputation that hides under the weight
+/// stream costs nothing.
+///
+/// Regression note: the old form `t_after − max(t_before, W)` maxed the
+/// window into the *before*-cost, so a big-KV victim (whose before-cost
+/// is mostly link time) had its link credit swallowed whenever its GPU
+/// before-cost sat under the window — making small, nearly-done victims
+/// look relatively cheap on exactly the streaming devices where the big
+/// holder's demotion is free. At `W = 0` (the uniform pressure) the two
+/// forms are identical bit-for-bit.
 pub fn demotion_step_penalty_pressed(
     v: &VictimInfo,
     cost: &CostModel,
     pressure: &StagePressure,
 ) -> f64 {
     let t_after = cost.kv_gen.eval((v.act_blocks + v.kv_blocks) as f64) * pressure.gpu_scale;
-    let t_before = cost.kv_gen.eval(v.act_blocks as f64) * pressure.gpu_scale
-        + cost.load_kv.eval(v.kv_blocks as f64) * pressure.link_scale;
-    (t_after - t_before.max(pressure.free_window_secs)).max(0.0)
+    let gpu_before = cost.kv_gen.eval(blocks_f64(v.act_blocks)) * pressure.gpu_scale;
+    let link_before = cost.load_kv.eval(blocks_f64(v.kv_blocks)) * pressure.link_scale;
+    let paid_after = (t_after - pressure.free_window_secs).max(0.0);
+    let paid_before = (gpu_before - pressure.free_window_secs).max(0.0) + link_before;
+    (paid_after - paid_before).max(0.0)
+}
+
+/// Added per-layer pipeline seconds per remaining decode step if `v`'s
+/// KV stays host-resident and is attended on the pressed stage's CPU
+/// lane instead of streaming over the link. The CPU span overlaps the
+/// GPU weight stream, so the device's free window discounts it; the
+/// removed KV load (at the pressed link) is credited in full. Returns
+/// `+inf` when the pressure reports no CPU lane
+/// (`cpu_attend_secs_per_block <= 0`) — the action is ineligible, never
+/// free.
+pub fn cpu_attend_step_penalty_pressed(
+    v: &VictimInfo,
+    cost: &CostModel,
+    pressure: &StagePressure,
+) -> f64 {
+    if pressure.cpu_attend_secs_per_block <= 0.0 {
+        return f64::INFINITY;
+    }
+    let cpu_after = pressure.cpu_attend_secs_per_block * blocks_f64(v.kv_blocks);
+    let link_before = cost.load_kv.eval(blocks_f64(v.kv_blocks)) * pressure.link_scale;
+    ((cpu_after - pressure.free_window_secs).max(0.0) - link_before).max(0.0)
 }
 
 /// [`demotion_step_penalty_pressed`] at [`StagePressure::uniform`] — the
@@ -152,6 +211,53 @@ pub fn select_victim_pressed(
             // iterator's internal order pick the victim.
             demotion_score_pressed(a, cost, sizes, pressure)
                 .total_cmp(&demotion_score_pressed(b, cost, sizes, pressure))
+        })
+}
+
+/// Per-candidate action choice for LINK pressure: the action with the
+/// smaller per-step penalty serves the request's host context from now
+/// on; ties keep the historical demotion. With no CPU lane
+/// (`cpu_attend_secs_per_block <= 0`) the attend penalty is `+inf` and
+/// this is always `DemoteToAct`.
+pub fn preferred_action_pressed(
+    v: &VictimInfo,
+    cost: &CostModel,
+    pressure: &StagePressure,
+) -> (VictimAction, f64) {
+    let demote = demotion_step_penalty_pressed(v, cost, pressure);
+    let attend = cpu_attend_step_penalty_pressed(v, cost, pressure);
+    if attend < demote {
+        (VictimAction::CpuAttend, attend)
+    } else {
+        (VictimAction::DemoteToAct, demote)
+    }
+}
+
+/// Pick the victim (and how to serve it afterwards) that frees the most
+/// pressed-LINK seconds per second of added pipeline time over its
+/// remaining generation. This is the three-way decision the
+/// [`super::AnalyticEngine`] takes when the PCIe lane paces a decode
+/// step: stream back (no victim), demote to ACT, or keep the KV
+/// host-resident and attend on the CPU lane. Byte-pressure callers keep
+/// [`select_victim_pressed`] — `CpuAttend` frees no host bytes.
+pub fn select_victim_action_pressed(
+    candidates: &[VictimInfo],
+    cost: &CostModel,
+    pressure: &StagePressure,
+) -> Option<(VictimInfo, VictimAction)> {
+    let score = |v: &VictimInfo| -> f64 {
+        let relief = cost.load_kv.eval(blocks_f64(v.kv_blocks)) * pressure.link_scale;
+        let (_, penalty) = preferred_action_pressed(v, cost, pressure);
+        relief / (1e-9 + penalty * tokens_f64(v.remaining_tokens))
+    };
+    candidates
+        .iter()
+        .copied()
+        .filter(|v| v.kv_blocks > 0)
+        .max_by(|a, b| score(a).total_cmp(&score(b)))
+        .map(|v| {
+            let (action, _) = preferred_action_pressed(&v, cost, pressure);
+            (v, action)
         })
 }
 
@@ -294,6 +400,7 @@ mod tests {
             gpu_scale: 1.0,
             link_scale: 1.0,
             free_window_secs: 10e-3,
+            cpu_attend_secs_per_block: 0.0,
         };
         let picked = select_victim_pressed(&[a, b], &c, sizes(), &memory_pressed).unwrap();
         assert_eq!(picked.id, 1, "a streaming pressed device frees the most bytes");
@@ -313,6 +420,99 @@ mod tests {
             ..StagePressure::uniform()
         };
         assert!(demotion_score_pressed(&a, &c, sizes(), &slow_link) > s_uniform);
+    }
+
+    #[test]
+    fn free_window_credit_direction_flips_the_pick() {
+        // The ISSUE-9 satellite regression: the old penalty,
+        // `t_after - max(t_before, W)`, maxed the free window W into the
+        // BEFORE-cost, swallowing the link credit of big-KV victims
+        // whenever their GPU before-cost sat under the window.
+        //
+        // Candidate A: 20 KV blocks, no ACT, 10 tokens left. Its
+        // before-cost is pure link time (2e-3 s/step) — exactly W — so
+        // the old max erased the credit entirely:
+        //   old penalty_A = 8e-3 - max(2e-3, 2e-3) = 6e-3  → ×10 = 0.06
+        // Candidate B: 2 KV blocks atop 10 ACT, 8 tokens left. Its GPU
+        // before-cost (4e-3) already exceeds W, so the old form kept its
+        // full credit:
+        //   old penalty_B = 4.8e-3 - max(4.2e-3, 2e-3) = 0.6e-3 → ×8 = 4.8e-3
+        // Old scores: A = 20·ΔS/0.06 ≈ 333·ΔS, B = 2·ΔS/4.8e-3 ≈ 417·ΔS
+        // — the OLD code picked the small, nearly-done B.
+        //
+        // Correct accounting windows both GPU sides and credits the link
+        // in full: penalty_A = ((8e-3 - 2e-3) - (0 + 2e-3)) = 4e-3
+        // → ×10 = 0.04 → score 500·ΔS; B is unchanged (417·ΔS). A wins.
+        let c = gpu_bound_cost();
+        let a = v(1, 20, 0, 10);
+        let b = v(2, 2, 10, 8);
+        let windowed = StagePressure {
+            free_window_secs: 2e-3,
+            ..StagePressure::uniform()
+        };
+        assert!((demotion_step_penalty_pressed(&a, &c, &windowed) - 4e-3).abs() < 1e-12);
+        assert!((demotion_step_penalty_pressed(&b, &c, &windowed) - 0.6e-3).abs() < 1e-12);
+        let picked = select_victim_pressed(&[a, b], &c, sizes(), &windowed).unwrap();
+        assert_eq!(
+            picked.id, 1,
+            "the window must credit A's removed KV loads, not swallow them"
+        );
+        // Sanity: with no window the same pair still prefers B — the fix
+        // only changes windowed scoring.
+        let picked = select_victim_pressed(&[a, b], &c, sizes(), &StagePressure::uniform()).unwrap();
+        assert_eq!(picked.id, 2);
+    }
+
+    #[test]
+    fn cpu_attend_ineligible_without_a_cpu_lane() {
+        // cpu_attend_secs_per_block = 0 (every legacy pressure) prices
+        // the action at +inf: the three-way selector degenerates to the
+        // historical demotion on every candidate.
+        let c = gpu_bound_cost();
+        let p = StagePressure::uniform();
+        let a = v(1, 12, 0, 200);
+        assert_eq!(cpu_attend_step_penalty_pressed(&a, &c, &p), f64::INFINITY);
+        assert_eq!(preferred_action_pressed(&a, &c, &p).0, VictimAction::DemoteToAct);
+        let (picked, action) = select_victim_action_pressed(&[a, v(2, 3, 0, 2)], &c, &p).unwrap();
+        assert_eq!(action, VictimAction::DemoteToAct);
+        // same relief-per-penalty currency as demotion under uniform
+        // pressure: the nearly-done request is the cheap victim
+        assert_eq!(picked.id, 2);
+    }
+
+    #[test]
+    fn fast_cpu_lane_wins_the_three_way_decision() {
+        // A CPU lane that attends a block cheaper than the GPU can
+        // recompute it (net of the link credit) flips the action: the
+        // long request keeps full-fidelity KV on the host and the link
+        // relief is free.
+        let c = gpu_bound_cost();
+        // 2e-4 s/block CPU attention over a 1.5e-3 s weight window: the
+        // CPU span beyond the window is smaller than the link relief.
+        let cpu = StagePressure {
+            cpu_attend_secs_per_block: 2e-4,
+            free_window_secs: 1.5e-3,
+            ..StagePressure::uniform()
+        };
+        let a = v(1, 12, 0, 200);
+        // attend: (2.4e-3 - 1.5e-3) - 1.2e-3 → clamps to 0 (free)
+        assert_eq!(cpu_attend_step_penalty_pressed(&a, &c, &cpu), 0.0);
+        // demote: (4.8e-3 - 1.5e-3) - (0 + 1.2e-3) = 2.1e-3 — not free
+        assert!(demotion_step_penalty_pressed(&a, &c, &cpu) > 0.0);
+        let (picked, action) =
+            select_victim_action_pressed(&[a, v(2, 3, 0, 2)], &c, &cpu).unwrap();
+        assert_eq!(action, VictimAction::CpuAttend);
+        assert_eq!(picked.id, 1, "free CPU attention makes the big holder the pick");
+        // A slow CPU lane (pricier than recompute) falls back to the
+        // demotion action for the same candidates.
+        let slow_cpu = StagePressure {
+            cpu_attend_secs_per_block: 1e-2,
+            ..StagePressure::uniform()
+        };
+        assert_eq!(
+            preferred_action_pressed(&a, &c, &slow_cpu).0,
+            VictimAction::DemoteToAct
+        );
     }
 
     #[test]

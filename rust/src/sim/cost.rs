@@ -106,6 +106,58 @@ impl SimCost {
             .h2d_time(self.shard_bytes(self.model.kv_bytes_per_layer(tokens)))
     }
 
+    /// CPU-lane time for host-side attention over one layer's per-device
+    /// share of host-resident KV for `tokens` tokens (DESIGN.md §CPU
+    /// tier). A decode-time GEMV roofline against the HOST: the CPU
+    /// streams the KV panel once from DRAM (`kv_bytes / mem_bw`) and
+    /// spends `4·tokens·hidden` FLOPs per query token on the score +
+    /// weighted-sum GEMVs — at paper scale the DRAM line binds, exactly
+    /// why the lane only wins where PCIe (25 GB/s) is the bottleneck and
+    /// host DRAM (~340 GB/s) is not. One host serves each pipeline
+    /// stage, so the per-device share divides by `tp` like every other
+    /// per-device cost; the fixed constant covers dispatch + NUMA
+    /// hand-off.
+    pub fn cpu_attend_time(&self, tokens: usize) -> f64 {
+        Self::cpu_attend_time_for(&self.model, &self.sys, self.tp, tokens)
+    }
+
+    /// [`Self::cpu_attend_time`] without a lowered plan — the autotuner
+    /// scores CPU-tier candidates mid-lowering, where constructing a
+    /// `SimCost` would recurse into plan building. Single source of the
+    /// roofline; the method delegates here.
+    pub fn cpu_attend_time_for(
+        model: &ModelConfig,
+        sys: &SystemConfig,
+        tp: usize,
+        tokens: usize,
+    ) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let host = &sys.host;
+        let kv_bytes = model.kv_bytes_per_layer(tokens).div_ceil(tp) as f64;
+        let mem = kv_bytes / host.mem_bw;
+        let flops = 4.0 * tokens as f64 * model.hidden as f64 / tp as f64;
+        let compute = flops / host.effective_cpu_flops();
+        mem.max(compute) + 20e-6
+    }
+
+    /// [`Self::cpu_attend_time`] per cache block of `block_tokens`
+    /// tokens, amortizing the fixed dispatch constant over a typical
+    /// host-resident context (16 blocks): the per-block slope victim
+    /// scoring and the engine's CPU-lane accounting price marginal blocks
+    /// with ([`crate::sched::StagePressure::cpu_attend_secs_per_block`]).
+    pub fn cpu_attend_secs_per_block(&self) -> f64 {
+        Self::cpu_attend_secs_per_block_for(&self.model, &self.sys, self.tp)
+    }
+
+    /// [`Self::cpu_attend_secs_per_block`] without a lowered plan (see
+    /// [`Self::cpu_attend_time_for`]).
+    pub fn cpu_attend_secs_per_block_for(model: &ModelConfig, sys: &SystemConfig, tp: usize) -> f64 {
+        let bt = sys.block_tokens;
+        Self::cpu_attend_time_for(model, sys, tp, 16 * bt) / 16.0
+    }
+
     /// PCIe time to load one layer's per-device share of ACT checkpoints.
     pub fn act_load_time(&self, tokens: usize) -> f64 {
         if tokens == 0 {
@@ -406,6 +458,37 @@ mod tests {
             het.memory().stage_act_capacity(0)
         );
         assert!(het.gpu_act_block_capacity() >= uni.gpu_act_block_capacity());
+    }
+
+    #[test]
+    fn cpu_attend_roofline_is_dram_bound_and_beats_the_link() {
+        let c = cost();
+        assert_eq!(c.cpu_attend_time(0), 0.0);
+        assert!(c.cpu_attend_time(2000) > c.cpu_attend_time(1000));
+        // At paper scale the DRAM line binds: attention reads the KV
+        // panel once at ~340 GB/s while the FLOP line has ~100x slack.
+        let tokens = 4096;
+        let kv_bytes = c.model.kv_bytes_per_layer(tokens) as f64;
+        let dram = kv_bytes / c.sys.host.mem_bw + 20e-6;
+        assert!((c.cpu_attend_time(tokens) - dram).abs() < 1e-9);
+        // ... which is the whole point of the tier: attending in place
+        // is an order cheaper than streaming the same panel over PCIe.
+        assert!(c.cpu_attend_time(tokens) < 0.2 * c.kv_load_time(tokens));
+        // per-block slope is consistent with the amortized full call
+        let bt = c.sys.block_tokens;
+        assert!((c.cpu_attend_secs_per_block() * 16.0 - c.cpu_attend_time(16 * bt)).abs() < 1e-12);
+        assert!(c.cpu_attend_secs_per_block() > 0.0);
+    }
+
+    #[test]
+    fn cpu_attend_divides_by_tp_like_every_per_device_cost() {
+        let c1 = cost_tp(1);
+        let c4 = cost_tp(4);
+        // per-device KV share shrinks 4x; the fixed constant does not
+        assert!(c4.cpu_attend_time(4096) < c1.cpu_attend_time(4096));
+        let var1 = c1.cpu_attend_time(4096) - 20e-6;
+        let var4 = c4.cpu_attend_time(4096) - 20e-6;
+        assert!((var1 / var4 - 4.0).abs() < 0.05, "ratio {}", var1 / var4);
     }
 
     #[test]

@@ -210,12 +210,26 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
             .host
             .memory_bytes
             .saturating_sub(model.total_weight_bytes());
+        // CPU tier on: blocks the host CPU can attend inside the weight
+        // window never transit the link — Algorithm 1 affords that many
+        // extra KV blocks (0 with the tier off, the historical inputs).
+        let cpu_kv_blocks = if plan.cpu_tier {
+            let per_block = cost.cpu_attend_secs_per_block();
+            if per_block > 0.0 && cm.load_w > 0.0 {
+                (cm.load_w / per_block).floor() as usize
+            } else {
+                0
+            }
+        } else {
+            0
+        };
         let alloc = policy.allocate(&AllocationInputs {
             cost: cm,
             act_gpu_blocks: cost.gpu_act_block_capacity(),
             host_cache_bytes: host_cache,
             sizes,
             bubble,
+            cpu_kv_blocks,
         });
         BlockRatio::new(alloc.act_blocks.max(1), alloc.kv_blocks)
     };
@@ -369,6 +383,27 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         .collect();
     let cpu_attn_penalty = if system == System::PowerInfer { 2.0 } else { 1.0 };
 
+    // CPU tier: the fraction of each decode step's KV tokens attended
+    // host-side, the closed-form balance point of the per-token link and
+    // CPU-lane slopes (both lanes overlap the GPU; the step pays only the
+    // slower one). Exactly 0.0 with the tier off, so every token stays on
+    // the link and the schedule below is bit-for-bit the historical one.
+    let cpu_frac = if plan.cpu_tier {
+        let probe = 16 * bt;
+        let s_link = ic.peek_time(
+            Dir::HostToDevice,
+            cost.shard_bytes(model.kv_bytes_per_layer(probe)),
+        ) / probe as f64;
+        let s_cpu = cost.cpu_attend_time(probe) / probe as f64;
+        if s_cpu > 0.0 {
+            s_link / (s_link + s_cpu)
+        } else {
+            0.0
+        }
+    } else {
+        0.0
+    };
+
     let nchunks = chunk_sizes.len();
 
     // ---- schedule-shared operation bodies ------------------------------
@@ -473,6 +508,7 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                         c: usize,
                         mb: usize,
                         kv_toks_req: usize,
+                        cpu_toks_req: usize,
                         act_toks_req: usize,
                         recompute_toks_req: usize,
                         ctx: usize| {
@@ -525,7 +561,15 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                 cost.shard_bytes(act_bytes),
             );
             let load_span = tl.schedule_on(d, Lane::PCIe, 0.0, t_kv + t_act);
-            let ready = load_span.end.max(weight_ready[d]).max(ready_extra);
+            let mut ready = load_span.end.max(weight_ready[d]).max(ready_extra);
+            if cpu_toks_req > 0 {
+                // CPU tier: this chunk's CPU-attended KV share runs on
+                // the host lane, overlapped with the weight stream; the
+                // forward gates on the host-computed attention output.
+                let t_cpu = cost.cpu_attend_time(cpu_toks_req * mb);
+                let attend = tl.schedule_on(d, Lane::Cpu, 0.0, t_cpu);
+                ready = ready.max(attend.end);
+            }
             last_end = tl
                 .schedule_on(d, Lane::Gpu, ready, t_gen + t_recompute + t_fwd)
                 .end;
@@ -629,7 +673,12 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
         let (act_b_req, kv_b_req) = ratio.split(ctx_blocks);
         // token recomputation: a slice of the KV context is re-prefilled
         let recompute_toks_req = (ctx as f64 * recompute_frac) as usize;
-        let kv_toks_req = (kv_b_req * bt).min(ctx).saturating_sub(recompute_toks_req);
+        let kv_toks_full = (kv_b_req * bt).min(ctx).saturating_sub(recompute_toks_req);
+        // CPU tier: the balanced share attends host-side and never
+        // transits the link (`cpu_frac` is exactly 0.0 with the tier
+        // off, leaving every token on the link — integer-exact).
+        let cpu_toks_req = (kv_toks_full as f64 * cpu_frac) as usize;
+        let kv_toks_req = kv_toks_full - cpu_toks_req;
         let act_toks_req = (act_b_req * bt).min(ctx);
 
         if !chunk_major {
@@ -651,6 +700,7 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                         c,
                         mb,
                         kv_toks_req,
+                        cpu_toks_req,
                         act_toks_req,
                         recompute_toks_req,
                         ctx,
@@ -678,6 +728,7 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
                         c,
                         mb,
                         kv_toks_req,
+                        cpu_toks_req,
                         act_toks_req,
                         recompute_toks_req,
                         ctx,
@@ -1399,5 +1450,35 @@ mod tests {
             // optimum is ACT-dominant; the 2×4 bubble pays for loading)
             assert!(hy.act_block_share < 0.85, "{policy:?}: {}", hy.act_block_share);
         }
+    }
+
+    #[test]
+    fn cpu_tier_relieves_the_link_and_is_inert_when_off() {
+        // The ISSUE-9 headline on the golden grid: OPT-66B on the 24 GB
+        // testbed streams most of its weights, so decode is PCIe-bound;
+        // attending the balanced KV share host-side on the CPU lane
+        // relieves the link and decode throughput rises. An explicit
+        // tier-off run must be bit-for-bit the historical result.
+        let m = ModelConfig::opt_66b();
+        let w = wl(64, 512);
+        let sysoff = testbed().with_cpu_tier(false);
+        let off = simulate(&m, &testbed(), System::HybridServe(PolicyConfig::full()), w);
+        let off2 = simulate(&m, &sysoff, System::HybridServe(PolicyConfig::full()), w);
+        assert_eq!(off.makespan, off2.makespan);
+        assert_eq!(off.throughput, off2.throughput);
+        assert_eq!(off.act_block_share, off2.act_block_share);
+        let syson = testbed().with_cpu_tier(true);
+        let on = simulate(&m, &syson, System::HybridServe(PolicyConfig::full()), w);
+        assert!(
+            on.gen_throughput > off.gen_throughput,
+            "CPU tier lost on a link-bound grid: {} !> {}",
+            on.gen_throughput,
+            off.gen_throughput
+        );
+        // the relieved link shows up as KV traffic that never happened
+        assert!(
+            on.traffic.bytes(TrafficClass::KvLoad) < off.traffic.bytes(TrafficClass::KvLoad),
+            "tier on moved no KV traffic off the link"
+        );
     }
 }

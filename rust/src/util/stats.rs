@@ -29,18 +29,22 @@ pub fn spread(xs: &[f64]) -> f64 {
     max - min
 }
 
-/// Percentile with linear interpolation; `p` in [0, 100].
+/// Percentile with linear interpolation; `p` is clamped to [0, 100]
+/// (`p < 0` reads the minimum, `p > 100` the maximum — out-of-range
+/// requests used to index past the end and panic).
 ///
 /// Total over all inputs: NaN samples sort to the high end (IEEE 754
 /// total order) instead of panicking the comparator — `SloReport::merge`
 /// pools samples from every replica, so a single poisoned sample must
-/// not kill a whole fleet report.
+/// not kill a whole fleet report. A NaN `p` clamps to 0 (the minimum)
+/// rather than poisoning the rank arithmetic.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.total_cmp(b));
+    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -138,6 +142,25 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn mismatched_lengths_panic() {
         linear_fit(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        // Regression: p > 100 made `rank.ceil() as usize` index one past
+        // the end and panic; p < 0 silently truncated the negative rank
+        // to 0. Both now clamp explicitly to the [min, max] endpoints.
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 101.0), 4.0);
+        assert_eq!(percentile(&xs, 1e9), 4.0);
+        assert_eq!(percentile(&xs, f64::INFINITY), 4.0);
+        assert_eq!(percentile(&xs, -1.0), 1.0);
+        assert_eq!(percentile(&xs, f64::NEG_INFINITY), 1.0);
+        assert_eq!(percentile(&xs, f64::NAN), 1.0);
+        // single-sample pools hit the lo == hi fast path at any p
+        assert_eq!(percentile(&[7.0], 250.0), 7.0);
+        assert_eq!(percentile(&[7.0], -250.0), 7.0);
+        // in-range requests are untouched by the clamp
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
     }
 
     #[test]

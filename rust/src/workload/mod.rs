@@ -75,15 +75,24 @@ pub enum RateEnvelope {
 }
 
 impl RateEnvelope {
-    /// Rate multiplier at virtual time `t` (always in `(0, 1]` for
-    /// `trough` in `(0, 1]`).
+    /// Rate multiplier at virtual time `t`, always in `[0, 1]`.
+    ///
+    /// A `Diurnal` trough outside `[0, 1]` used to leak straight into the
+    /// thinning draw as an acceptance "probability" above 1 (never thins)
+    /// or below 0 (rejects everything, or worse, inverts the curve), so
+    /// the draw clamps: the trough is clamped to `[0, 1]` before the
+    /// cosine blend, which keeps every valid envelope bit-for-bit and
+    /// makes the invalid ones saturate instead of corrupting the trace.
     pub fn multiplier(&self, t: f64) -> f64 {
         match *self {
             RateEnvelope::Flat => 1.0,
             RateEnvelope::Diurnal {
                 period_secs,
                 trough,
-            } => trough + (1.0 - trough) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * t / period_secs).cos()),
+            } => {
+                let trough = trough.clamp(0.0, 1.0);
+                trough + (1.0 - trough) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * t / period_secs).cos())
+            }
         }
     }
 }
@@ -612,6 +621,43 @@ mod tests {
         // flat trace at the same seed is a superset in count
         let flat = WorkloadGen::new(7, 2048).multi_tenant(&[tenant("t", 20.0)], 100.0, RateEnvelope::Flat);
         assert!(flat.len() > trace.len());
+    }
+
+    #[test]
+    fn diurnal_trough_out_of_range_clamps_the_draw() {
+        // Regression: trough = 1.5 made multiplier(0) = 1.5 — an
+        // acceptance "probability" above 1 that silently never thinned —
+        // and trough = -0.5 pushed the trough multiplier negative. Both
+        // now saturate at the valid envelope endpoints.
+        let hot = RateEnvelope::Diurnal {
+            period_secs: 100.0,
+            trough: 1.5,
+        };
+        // clamps to trough = 1, i.e. the Flat envelope
+        for t in [0.0, 13.0, 50.0, 99.0] {
+            assert!((hot.multiplier(t) - 1.0).abs() < 1e-12, "t={t}");
+        }
+        let cold = RateEnvelope::Diurnal {
+            period_secs: 100.0,
+            trough: -0.5,
+        };
+        assert_eq!(cold.multiplier(0.0), 0.0);
+        assert!((cold.multiplier(50.0) - 1.0).abs() < 1e-12);
+        for t in 0..200 {
+            let m = cold.multiplier(t as f64);
+            assert!((0.0..=1.0).contains(&m), "multiplier {m} at t={t}");
+        }
+        // a clamped-to-flat envelope draws the exact Flat trace, and the
+        // whole trace machinery stays sound under the saturated envelope
+        let flat = WorkloadGen::new(11, 2048).multi_tenant(&[tenant("t", 20.0)], 50.0, RateEnvelope::Flat);
+        let hot_trace = WorkloadGen::new(11, 2048).multi_tenant(&[tenant("t", 20.0)], 50.0, hot);
+        assert_eq!(flat.len(), hot_trace.len());
+        // valid envelopes are untouched by the clamp
+        let env = RateEnvelope::Diurnal {
+            period_secs: 100.0,
+            trough: 0.2,
+        };
+        assert!((env.multiplier(0.0) - 0.2).abs() < 1e-12);
     }
 
     fn mix() -> SessionMix {

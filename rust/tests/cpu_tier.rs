@@ -1,0 +1,285 @@
+//! CPU compute tier off-switch and property suite (ISSUE 9).
+//!
+//! The tier is opt-in (`SystemConfig::cpu_tier`, default off) and every
+//! touch point was built so that "off" is arithmetic-identity exact:
+//! `+ 0` block credits, `− slope·0.0` link credits, `cpu_frac = 0.0`
+//! token splits, and a CPU lane that never receives a span. This suite
+//! enforces that contract from the outside:
+//!
+//! 1. **Golden off-switch** — every pre-existing golden scenario
+//!    reproduces bit-for-bit (exact `f64` equality against the default
+//!    run, and within the committed tolerance of the pinned JSON) with
+//!    the tier explicitly disabled.
+//! 2. **Seeded off-switch property** — across random grids, workloads
+//!    and systems, `with_cpu_tier(false)` is indistinguishable from the
+//!    default, and tier-on never ADDS KV bytes to the link.
+//! 3. **Seeded autotune property** — the tier axis exactly doubles the
+//!    candidate set, interleaved off-first with pairwise-identical
+//!    (schedule, split, chunks); tier-off candidates inside an on-search
+//!    score identically to a pure off-search; and the three-lane closed
+//!    form never loses to the two-lane one.
+//!
+//! The Python dry-run of this suite (same xoshiro256** seed stream)
+//! lives in `tools/pysim/props.py` (`cpu-tier-*`).
+
+use hybridserve::config::{AutotuneConfig, SystemConfig};
+use hybridserve::pcie::TrafficClass;
+use hybridserve::plan::autotune::tune;
+use hybridserve::policy::PolicyConfig;
+use hybridserve::sim::{simulate, System, Workload};
+use hybridserve::util::json::Json;
+use hybridserve::util::prop;
+use hybridserve::ModelConfig;
+
+/// The four systems the paper's §5 compares, with their golden keys.
+fn systems() -> [(&'static str, System); 4] {
+    [
+        ("hybrid", System::HybridServe(PolicyConfig::full())),
+        ("flexgen", System::FlexGen),
+        ("deepspeed", System::DeepSpeedInference),
+        ("act_only", System::ActOnly),
+    ]
+}
+
+fn workload_of(golden: &Json) -> Workload {
+    let w = golden.get("workload");
+    Workload {
+        batch: w.get("batch").as_usize().unwrap(),
+        prompt: w.get("prompt").as_usize().unwrap(),
+        gen: w.get("gen").as_usize().unwrap(),
+    }
+}
+
+/// Assert one golden scenario reproduces with the tier explicitly off:
+/// exact equality against the default run, pinned value within the
+/// golden's own tolerance.
+fn assert_off_switch_scenario(
+    label: &str,
+    model: &ModelConfig,
+    sys: &SystemConfig,
+    wl: Workload,
+    pinned: &Json,
+    tolerance: f64,
+) {
+    let off_sys = sys.clone().with_cpu_tier(false);
+    for (key, system) in systems() {
+        let default = simulate(model, sys, system, wl);
+        let off = simulate(model, &off_sys, system, wl);
+        assert_eq!(
+            default.throughput, off.throughput,
+            "{label}/{key}: explicit tier-off drifted from the default run"
+        );
+        assert_eq!(default.makespan, off.makespan, "{label}/{key}: makespan");
+        for class in TrafficClass::ALL {
+            assert_eq!(
+                default.traffic.bytes(class),
+                off.traffic.bytes(class),
+                "{label}/{key}: {} traffic",
+                class.name()
+            );
+        }
+        let expected = pinned.get(key).as_f64().unwrap_or_else(|| {
+            panic!("{label}: golden has no throughput entry for '{key}'");
+        });
+        let rel = (off.throughput - expected).abs() / expected;
+        assert!(
+            rel <= tolerance,
+            "{label}/{key}: tier-off throughput {} drifted {:.4}% from the pin {expected}",
+            off.throughput,
+            rel * 100.0,
+        );
+    }
+}
+
+#[test]
+fn every_prior_golden_reproduces_with_the_tier_disabled() {
+    // sim_opt6_7b: the paper testbed, single 24 GB device
+    let g = Json::parse(include_str!("golden/sim_opt6_7b.json")).unwrap();
+    assert_off_switch_scenario(
+        "sim_opt6_7b",
+        &ModelConfig::by_name(g.get("model").as_str().unwrap()).unwrap(),
+        &SystemConfig::paper_testbed(),
+        workload_of(&g),
+        g.get("throughput"),
+        g.get("tolerance").as_f64().unwrap(),
+    );
+
+    // sim_opt175b_tp2pp4: the memory-uniform 2x4 grid
+    let g = Json::parse(include_str!("golden/sim_opt175b_tp2pp4.json")).unwrap();
+    assert_off_switch_scenario(
+        "sim_opt175b_tp2pp4",
+        &ModelConfig::by_name(g.get("model").as_str().unwrap()).unwrap(),
+        &SystemConfig::paper_testbed_grid(2, 4),
+        workload_of(&g),
+        g.get("throughput"),
+        g.get("tolerance").as_f64().unwrap(),
+    );
+
+    // sim_opt66b_hetmem: the mixed-memory grid (stage 1 on 48 GB)
+    let g = Json::parse(include_str!("golden/sim_opt66b_hetmem.json")).unwrap();
+    let topo = g.get("topology");
+    let sys = SystemConfig::with_topology(
+        SystemConfig::paper_testbed_grid(
+            topo.get("tp").as_usize().unwrap(),
+            topo.get("pp").as_usize().unwrap(),
+        )
+        .topology
+        .with_stage_memory(
+            topo.get("skewed_stage").as_usize().unwrap(),
+            topo.get("skewed_memory_gb").as_usize().unwrap() << 30,
+        ),
+    );
+    assert_off_switch_scenario(
+        "sim_opt66b_hetmem",
+        &ModelConfig::by_name(g.get("model").as_str().unwrap()).unwrap(),
+        &sys,
+        workload_of(&g),
+        g.get("throughput"),
+        g.get("tolerance").as_f64().unwrap(),
+    );
+}
+
+#[test]
+fn schedules_and_autotune_goldens_reproduce_with_the_tier_disabled() {
+    use hybridserve::config::SchedulePolicy;
+
+    let g = Json::parse(include_str!("golden/sim_opt175b_tp2pp4_schedules.json")).unwrap();
+    let wl = workload_of(&g);
+    let m = ModelConfig::by_name(g.get("model").as_str().unwrap()).unwrap();
+    let tolerance = g.get("tolerance").as_f64().unwrap();
+    for (name, sched) in [
+        ("layer_major", SchedulePolicy::LayerMajor),
+        ("one_f_one_b", SchedulePolicy::OneFOneB),
+    ] {
+        let sys = SystemConfig::paper_testbed_grid(2, 4).with_schedule(sched);
+        assert_off_switch_scenario(
+            &format!("schedules/{name}"),
+            &m,
+            &sys,
+            wl,
+            g.get("throughput").get(name),
+            tolerance,
+        );
+    }
+
+    // autotune_hetmem: the joint-tuner pin — an off-switched system must
+    // search the identical candidate space and land the identical plan
+    let g = Json::parse(include_str!("golden/autotune_hetmem.json")).unwrap();
+    let wl = workload_of(&g);
+    let at = AutotuneConfig {
+        batch: wl.batch,
+        prompt: wl.prompt,
+        gen: wl.gen,
+    };
+    let topo = g.get("topology");
+    let pp = topo.get("pp").as_usize().unwrap();
+    let sys = SystemConfig::with_topology(
+        SystemConfig::paper_testbed_grid(topo.get("tp").as_usize().unwrap(), pp)
+            .topology
+            .with_stage_memory(
+                topo.get("skewed_stage").as_usize().unwrap(),
+                topo.get("skewed_memory_gb").as_usize().unwrap() << 30,
+            ),
+    )
+    .with_cpu_tier(false);
+    let m = ModelConfig::by_name(g.get("model").as_str().unwrap()).unwrap();
+    let rep = tune(&m, &sys, at);
+    let w = g.get("winner");
+    assert_eq!(rep.winner.schedule.name(), w.get("schedule").as_str().unwrap());
+    assert_eq!(rep.winner.chunks, w.get("chunks").as_usize().unwrap());
+    assert!(!rep.winner.cpu_tier, "off-switched tuner picked the tier");
+    assert_eq!(rep.candidates.len(), 2 * pp, "tier-off candidate set grew");
+    let tuned = simulate(
+        &m,
+        &sys.with_autotune(at),
+        System::HybridServe(PolicyConfig::full()),
+        wl,
+    );
+    let expected = g.get("throughput").get("autotuned").as_f64().unwrap();
+    let rel = (tuned.throughput - expected).abs() / expected;
+    assert!(
+        rel <= g.get("tolerance").as_f64().unwrap(),
+        "autotuned tier-off drifted: {} vs {expected}",
+        tuned.throughput
+    );
+}
+
+#[test]
+fn property_cpu_tier_off_switch_is_exact() {
+    let four = systems();
+    prop::check("cpu-tier-off-switch", 60, |rng| {
+        let m = rng
+            .choose(&[ModelConfig::opt_30b(), ModelConfig::opt_66b()])
+            .clone();
+        let tp = *rng.choose(&[1usize, 2]);
+        let pp = *rng.choose(&[1usize, 2, 4]);
+        let w = Workload {
+            batch: rng.range(1, 129),
+            prompt: rng.range(64, 1025),
+            gen: rng.range(1, 17),
+        };
+        let system = four[rng.range(0, 4)].1;
+        let base = SystemConfig::paper_testbed_grid(tp, pp);
+        // explicit tier-off is bit-for-bit the default
+        let off = simulate(&m, &base, system, w);
+        let off2 = simulate(&m, &base.clone().with_cpu_tier(false), system, w);
+        assert_eq!(off.makespan, off2.makespan);
+        assert_eq!(off.throughput, off2.throughput);
+        assert_eq!(off.minibatch, off2.minibatch);
+        assert_eq!(off.act_block_share, off2.act_block_share);
+        for class in TrafficClass::ALL {
+            assert_eq!(off.traffic.bytes(class), off2.traffic.bytes(class));
+        }
+        // tier on: the CPU-attended share never ADDS link traffic
+        let on = simulate(&m, &base.with_cpu_tier(true), system, w);
+        assert!(
+            on.traffic.bytes(TrafficClass::KvLoad) <= off.traffic.bytes(TrafficClass::KvLoad),
+            "tier on grew KV link traffic: {} > {}",
+            on.traffic.bytes(TrafficClass::KvLoad),
+            off.traffic.bytes(TrafficClass::KvLoad)
+        );
+    });
+}
+
+#[test]
+fn property_cpu_tier_autotune_axis() {
+    prop::check("cpu-tier-autotune", 60, |rng| {
+        let m = rng
+            .choose(&[ModelConfig::opt_30b(), ModelConfig::opt_66b()])
+            .clone();
+        let tp = *rng.choose(&[1usize, 2]);
+        let pp = *rng.choose(&[1usize, 2, 4]);
+        let wl = AutotuneConfig {
+            batch: rng.range(1, 257),
+            prompt: rng.range(64, 1025),
+            gen: rng.range(16, 257),
+        };
+        let off = tune(&m, &SystemConfig::paper_testbed_grid(tp, pp), wl);
+        let on = tune(
+            &m,
+            &SystemConfig::paper_testbed_grid(tp, pp).with_cpu_tier(true),
+            wl,
+        );
+        // the tier axis exactly doubles the search, interleaved off-first
+        assert_eq!(on.candidates.len(), 2 * off.candidates.len());
+        for (j, base) in off.candidates.iter().enumerate() {
+            let a = &on.candidates[2 * j];
+            let b = &on.candidates[2 * j + 1];
+            assert!(!a.cpu_tier && b.cpu_tier, "axis order flipped at {j}");
+            assert_eq!(
+                (a.schedule, a.layer_split, a.chunks),
+                (b.schedule, b.layer_split, b.chunks),
+                "pair {j} diverged off the tier axis"
+            );
+            // tier-off candidates inside an on-search score identically
+            assert_eq!(a.score, base.score, "pair {j} off-score drifted");
+        }
+        // the three-lane closed form never loses to the two-lane one
+        assert!(
+            on.winner.score >= off.winner.score,
+            "tier-on winner lost: {} < {}",
+            on.winner.score,
+            off.winner.score
+        );
+    });
+}

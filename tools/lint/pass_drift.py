@@ -38,6 +38,7 @@ CONSTS = [
     ("rust/src/policy/allocation.rs", "MAX_BUBBLE", "port.py", ("module", "MAX_BUBBLE")),
     ("rust/src/plan/autotune.rs", "MAX_BUBBLE", "port.py", ("module", "MAX_BUBBLE")),
     ("rust/src/policy/regression.rs", "SAMPLE_POINTS", "port.py", ("module", "SAMPLE_POINTS")),
+    ("rust/src/pcie/timeline.rs", "LANES_PER_DEVICE", "port.py", ("module", "LANES_PER_DEVICE")),
 ]
 
 # (rust file, enum name, py file, {RustVariant: PY_NAME_CONSTANT})
@@ -72,6 +73,14 @@ FN_VALUES = [
     ("rust/src/config/model.rs", "opt_175b", "port.py", "opt_175b"),
     ("rust/src/config/model.rs", "llama2_70b", "port.py", "llama2_70b"),
     ("rust/src/fleet/autoscaler.rs", "cloud_2025", "fleet.py", "cloud_2025"),
+    # ISSUE-9 CPU compute tier: the host roofline spec and both attention
+    # cost formulas must agree literal-for-literal with the pysim mirror.
+    # (HostSpec fields can't ride FIELD_DEFAULTS — GpuSpec declares
+    # same-named fields earlier in the file and the extractor takes the
+    # first literal initialiser — so the factory fns carry the pin.)
+    ("rust/src/config/system.rs", "xeon_882gb", "port.py", "host_xeon_882gb"),
+    ("rust/src/sim/cost.rs", "cpu_attend_time_for", "port.py", "cpu_attend_time_for"),
+    ("rust/src/sim/cost.rs", "cpu_attend_secs_per_block_for", "port.py", "cpu_attend_secs_per_block_for"),
 ]
 
 # (rust file, field name, py file, locator) — first literal initialiser

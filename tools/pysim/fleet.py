@@ -996,13 +996,14 @@ class Fleet:
 
 
 class PriceTable:
-    def __init__(self, tiers):
+    def __init__(self, tiers, cpu_tier_hourly=0.0):
         assert tiers
         self.tiers = sorted(tiers, key=lambda t: t[0])  # (mem_gb, $/h)
+        self.cpu_tier_hourly = cpu_tier_hourly
 
     @staticmethod
     def cloud_2025():
-        return PriceTable([(24, 0.44), (48, 1.10), (80, 2.49)])
+        return PriceTable([(24, 0.44), (48, 1.10), (80, 2.49)], cpu_tier_hourly=0.08)
 
     def gpu_hourly(self, memory_bytes):
         for gb, price in self.tiers:
@@ -1012,7 +1013,8 @@ class PriceTable:
         return price * (memory_bytes / (gb * GIB))
 
     def replica_hourly(self, sys):
-        return sum(self.gpu_hourly(sys.device_memory(d)) for d in range(sys.tp * sys.pp))
+        gpus = sum(self.gpu_hourly(sys.device_memory(d)) for d in range(sys.tp * sys.pp))
+        return gpus + self.cpu_tier_hourly if sys.cpu_tier else gpus
 
 
 class CandidateScore:
@@ -1129,6 +1131,11 @@ def run_price_units():
     assert abs(p.gpu_hourly(160 * GIB) - 4.98) < 1e-12
     assert p.replica_hourly(SystemConfig()) == 0.44
     assert abs(p.replica_hourly(SystemConfig(2, 2)) - 4.0 * 0.44) < 1e-12
+    # CPU-tier reservation bills only tier-on replicas (mirror of
+    # fleet::cpu_tier_reservation_bills_only_tier_on_replicas)
+    assert abs(p.replica_hourly(SystemConfig().with_cpu_tier(True)) - 0.52) < 1e-12
+    free = PriceTable([(24, 0.44)])
+    assert free.replica_hourly(SystemConfig().with_cpu_tier(True)) == 0.44
     print("PASS price table mirrors")
 
 

@@ -60,6 +60,31 @@ def main():
         "margin": tps["autotuned"] / best_single - 1.0,
     }, indent=2))
 
+    # rust/tests/golden/sim_cpu_tier.json (ISSUE-9 CPU-tier pin: OPT-66B
+    # on a constrained all-24-GB 2x2 grid streams most of its weights, so
+    # decode is link-bound; attending the balanced KV share host-side on
+    # the CPU lane must win by a pinned margin, and the joint tuner must
+    # pick the tier with a pinned candidate count)
+    csys = SystemConfig(2, 2)
+    coff = simulate(m66, csys, HYBRID, wl).throughput
+    con = simulate(m66, csys.with_cpu_tier(True), HYBRID, wl).throughput
+    crep = tune(m66, csys.with_cpu_tier(True), AutotuneConfig(wl.batch, wl.prompt, wl.gen))
+    crep_off = tune(m66, csys, AutotuneConfig(wl.batch, wl.prompt, wl.gen))
+    best_no_cpu = max(c.score for c in crep.candidates if not c.cpu_tier)
+    print("sim_cpu_tier.json:")
+    print(json.dumps({
+        "throughput": {"tier_off": coff, "tier_on": con},
+        "margin": con / coff - 1.0,
+        "winner": {
+            "schedule": crep.winner.schedule,
+            "layer_split": crep.winner.layer_split,
+            "chunks": crep.winner.chunks,
+            "cpu_tier": crep.winner.cpu_tier,
+        },
+        "candidates": {"tier_off": len(crep_off.candidates), "tier_on": len(crep.candidates)},
+        "score_margin": crep.winner.score / best_no_cpu - 1.0,
+    }, indent=2))
+
 
 if __name__ == "__main__":
     main()

@@ -123,6 +123,26 @@ class InterconnectSpec:
         return self.latency_s + b / self.d2h_bw
 
 
+class HostSpec:
+    """Mirror of config::HostSpec — host DRAM + the CPU-tier GEMV
+    roofline inputs (DESIGN.md §CPU tier)."""
+
+    def __init__(self, memory_bytes, mem_bw, cores, flops_per_core):
+        self.memory_bytes = memory_bytes
+        self.mem_bw = mem_bw
+        self.cores = cores
+        self.flops_per_core = flops_per_core
+
+    def effective_cpu_flops(self):
+        return self.cores * self.flops_per_core
+
+
+def host_xeon_882gb():
+    """Mirror of HostSpec::xeon_882gb (paper host: dual Xeon Gold 6326,
+    882 GB DDR4, ~340 GB/s sustained stream)."""
+    return HostSpec(882 * (1 << 30), 340.0e9, 32, 80.0e9)
+
+
 COLLECTIVE_BW = 20.0e9
 COLLECTIVE_LAT = 20e-6
 STAGE_LINK_BW = 20.0e9
@@ -150,10 +170,12 @@ class AutotuneConfig:
 
 class SystemConfig:
     def __init__(self, tp=1, pp=1, schedule=LAYER_MAJOR, mem_overrides=None,
-                 layer_split=COUNT_BALANCED, autotune=None):
+                 layer_split=COUNT_BALANCED, autotune=None, cpu_tier=False):
         self.gpu = GpuSpec()
         self.interconnect = InterconnectSpec()
-        self.host_memory = 882 * (1 << 30)
+        self.host = host_xeon_882gb()
+        self.host_memory = self.host.memory_bytes
+        self.cpu_tier = cpu_tier
         self.tp = tp
         self.pp = pp
         self.block_tokens = 16
@@ -169,7 +191,8 @@ class SystemConfig:
     def _clone(self, **kw):
         args = dict(tp=self.tp, pp=self.pp, schedule=self.schedule,
                     mem_overrides=self.mem_overrides,
-                    layer_split=self.layer_split, autotune=self.autotune)
+                    layer_split=self.layer_split, autotune=self.autotune,
+                    cpu_tier=self.cpu_tier)
         args.update(kw)
         return SystemConfig(**args)
 
@@ -181,6 +204,9 @@ class SystemConfig:
 
     def with_autotune(self, workload):
         return self._clone(autotune=workload)
+
+    def with_cpu_tier(self, cpu_tier):
+        return self._clone(cpu_tier=cpu_tier)
 
     def with_stage_memory(self, stage, memory_bytes):
         assert 0 <= stage < self.pp, "stage out of range"  # mirror the Rust builder
@@ -337,7 +363,8 @@ def split_counts(model, sys, rule):
 
 
 class ExecutionPlan:
-    def __init__(self, model, sys, schedule=None, counts=None, tuned_chunks=None):
+    def __init__(self, model, sys, schedule=None, counts=None, tuned_chunks=None,
+                 cpu_tier=None):
         tp, pp = sys.tp, sys.pp
         nl = model.num_layers
         assert nl >= pp
@@ -352,6 +379,9 @@ class ExecutionPlan:
             counts = split_counts(model, sys, sys.layer_split)
         self.tp, self.pp, self.num_layers = tp, pp, nl
         self.tuned_chunks = tuned_chunks
+        # Mirror of lower(.., cpu_tier): the untuned builder lowers the
+        # system's switch; the tuner passes its searched axis explicitly.
+        self.cpu_tier = sys.cpu_tier if cpu_tier is None else cpu_tier
         self.stages = []
         start = 0
         for s in range(pp):
@@ -424,6 +454,27 @@ class ExecutionPlan:
 # ---------------------------------------------------------------- cost
 
 
+def cpu_attend_time_for(model, sys, tp, tokens):
+    """Mirror of SimCost::cpu_attend_time_for — host GEMV roofline for
+    attention over `tokens` of host-resident KV (one layer, one device's
+    TP shard): DRAM-stream term vs FLOP term, plus a fixed dispatch
+    latency."""
+    if tokens == 0:
+        return 0.0
+    kv_bytes = float(div_ceil(model.kv_bytes_per_layer(tokens), tp))
+    mem = kv_bytes / sys.host.mem_bw
+    flops = 4.0 * tokens * model.hidden / tp
+    compute = flops / sys.host.effective_cpu_flops()
+    return max(mem, compute) + 20e-6
+
+
+def cpu_attend_secs_per_block_for(model, sys, tp):
+    """Mirror of SimCost::cpu_attend_secs_per_block_for — amortised
+    seconds per KV block, probed at 16 blocks to wash out the latency."""
+    bt = sys.block_tokens
+    return cpu_attend_time_for(model, sys, tp, 16 * bt) / 16.0
+
+
 class SimCost:
     def __init__(self, model, sys, schedule=None):
         self.model = model
@@ -483,6 +534,12 @@ class SimCost:
 
     def layer_prefill_time(self, batch, tokens):
         return self.layer_forward_time(batch, tokens, tokens // 2)
+
+    def cpu_attend_time(self, tokens):
+        return cpu_attend_time_for(self.model, self.sys, self.tp, tokens)
+
+    def cpu_attend_secs_per_block(self):
+        return cpu_attend_secs_per_block_for(self.model, self.sys, self.tp)
 
     def gpu_act_block_capacity(self):
         return self.plan.memory.act_capacity_blocks()
@@ -609,7 +666,20 @@ def effective_kv_gen(g, bubble):
     return LinearCost(g.slope * c, g.intercept * c, g.r_squared)
 
 
-def initial_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble=0.0):
+def cpu_kv_capacity(model, sys, plan, load_w):
+    """Mirror of policy::allocation::cpu_kv_capacity: per-step KV blocks
+    the CPU tier can attend host-side inside the plan's per-layer weight
+    window. Zero when the plan runs without the tier."""
+    if not plan.cpu_tier:
+        return 0
+    per_block = cpu_attend_secs_per_block_for(model, sys, plan.tp)
+    if per_block <= 0.0 or load_w <= 0.0:
+        return 0
+    return f64_trunc(math.floor(load_w / per_block))
+
+
+def initial_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble=0.0,
+                             cpu_kv_blocks=0):
     g = effective_kv_gen(cost.kv_gen, bubble)
     t_budget = cost.load_w - g.eval(float(act_gpu_blocks))
     if t_budget >= 0.0:
@@ -621,11 +691,13 @@ def initial_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubb
             act = f64_trunc(math.floor(max((t_budget - (g.intercept - la.intercept)) / net_slope, 0.0)))
         return (act, 0)
     else:
-        kv = f64_trunc(math.floor(cost.load_kv.inverse(-t_budget)))
+        # CPU-attended blocks ride on top for free (`+ 0` tier-off, exact).
+        kv = f64_trunc(math.floor(cost.load_kv.inverse(-t_budget))) + cpu_kv_blocks
         return (0, kv)
 
 
-def alloc_remaining(cost, act_init, kv_init, host_cache_bytes, sizes, bubble=0.0):
+def alloc_remaining(cost, act_init, kv_init, host_cache_bytes, sizes, bubble=0.0,
+                    cpu_kv_blocks=0):
     s_act = float(sizes.act_bytes)
     s_kv = float(sizes.kv_bytes)
     occupied = s_act * act_init + s_kv * kv_init
@@ -638,7 +710,9 @@ def alloc_remaining(cost, act_init, kv_init, host_cache_bytes, sizes, bubble=0.0
     net = g.slope - la.slope
     if net <= 0.0:
         return (f64_trunc(math.floor(remaining / s_act)), 0)
-    d = l.intercept + la.intercept - g.intercept
+    # CPU-attended KV never transits the link: the KV line starts
+    # `l_s·cpu_kv` seconds in credit (`− 0.0` tier-off, exact).
+    d = l.intercept + la.intercept - g.intercept - l.slope * cpu_kv_blocks
     denom = s_act * l.slope / net + s_kv
     k = (remaining - s_act * d / net) / denom
     k = clamp(k, 0.0, remaining / s_kv)
@@ -655,10 +729,12 @@ def clamp_to_budget(act, kv, host_cache_bytes, sizes):
     return (0, host_cache_bytes // sizes.kv_bytes)
 
 
-def hybrid_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble=0.0):
-    a0, k0 = initial_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble)
+def hybrid_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble=0.0,
+                            cpu_kv_blocks=0):
+    a0, k0 = initial_cache_allocation(cost, act_gpu_blocks, host_cache_bytes, sizes, bubble,
+                                      cpu_kv_blocks)
     a0, k0 = clamp_to_budget(a0, k0, host_cache_bytes, sizes)
-    ar, kr = alloc_remaining(cost, a0, k0, host_cache_bytes, sizes, bubble)
+    ar, kr = alloc_remaining(cost, a0, k0, host_cache_bytes, sizes, bubble, cpu_kv_blocks)
     return (a0 + ar, k0 + kr)
 
 
@@ -709,23 +785,25 @@ def stage_cache_allocations(model, sys, plan, host_cache_bytes, bubble):
     allocs = []
     for s in range(plan.pp):
         cm = analytic_cost_model(model, sys, plan=plan, stage=s)
+        ckv = cpu_kv_capacity(model, sys, plan, cm.load_w)
         allocs.append(hybrid_cache_allocation(
-            cm, plan.memory.stage_act_capacity(s), share, sizes, bubble))
+            cm, plan.memory.stage_act_capacity(s), share, sizes, bubble, ckv))
     return allocs
 
 
 class Candidate:
     """Mirror of plan::autotune::Candidate."""
 
-    def __init__(self, schedule, layer_split, chunks, score):
+    def __init__(self, schedule, layer_split, chunks, cpu_tier, score):
         self.schedule = schedule
         self.layer_split = layer_split
         self.chunks = chunks
+        self.cpu_tier = cpu_tier
         self.score = score
 
     def __repr__(self):
-        return "Candidate(%s, %s, chunks=%d, score=%r)" % (
-            self.schedule, self.layer_split, self.chunks, self.score)
+        return "Candidate(%s, %s, chunks=%d, cpu=%s, score=%r)" % (
+            self.schedule, self.layer_split, self.chunks, self.cpu_tier, self.score)
 
 
 class TuneReport:
@@ -756,6 +834,8 @@ def score_plan(model, sys, plan, wl):
         key = (max(a, 1), k)
         if key not in mixes:
             mixes.append(key)
+    cpu_block = (cpu_attend_secs_per_block_for(model, sys, plan.tp)
+                 if plan.cpu_tier else 0.0)
     t_step = float("inf")
     for act, kv in mixes:
         ratio = BlockRatio(act, kv)
@@ -764,15 +844,27 @@ def score_plan(model, sys, plan, wl):
         kv_blocks = kv_per_req * batch
         gpu_max = 0.0
         pcie_max = 0.0
+        cpu_max = 0.0
         for s in range(plan.pp):
             cm = cms[s]
             layers = float(plan.stages[s].layer_count())
             gpu = layers * (cm.kv_gen.eval(float(act_blocks)) + chunks * weight_read)
             spill = max(act_blocks - plan.memory.stage_act_capacity(s), 0)
-            pcie = layers * (cm.load_w + cm.load_kv.eval(float(kv_blocks)) + cm.load_act.eval(float(spill)))
+            if plan.cpu_tier and cpu_block > 0.0:
+                # Three-lane: route c* of the stage's KV blocks to the CPU
+                # lane, balancing the shrinking PCIe line against the
+                # growing CPU line (both overlap the GPU lane).
+                p0 = cm.load_w + cm.load_kv.eval(float(kv_blocks)) + cm.load_act.eval(float(spill))
+                c = clamp(p0 / (max(cm.load_kv.slope, 0.0) + cpu_block), 0.0, float(kv_blocks))
+                pcie = layers * (cm.load_w + cm.load_kv.eval(kv_blocks - c) + cm.load_act.eval(float(spill)))
+                cpu = layers * cpu_block * c
+                pcie_max = max(pcie_max, pcie)
+                cpu_max = max(cpu_max, cpu)
+            else:
+                pcie = layers * (cm.load_w + cm.load_kv.eval(float(kv_blocks)) + cm.load_act.eval(float(spill)))
+                pcie_max = max(pcie_max, pcie)
             gpu_max = max(gpu_max, gpu)
-            pcie_max = max(pcie_max, pcie)
-        t = max(gpu_max / (1.0 - min(bubble, MAX_BUBBLE)), pcie_max)
+        t = max(gpu_max / (1.0 - min(bubble, MAX_BUBBLE)), pcie_max, cpu_max)
         t_step = min(t_step, t)
     return batch / t_step
 
@@ -786,34 +878,40 @@ def tune(model, sys, wl):
     assert nl >= pp, "model has %d layers but the topology has %d stages" % (nl, pp)
     best = None  # (Candidate, ExecutionPlan)
     candidates = []
+    # The CPU tier is a searched axis only when the system enables it;
+    # False enumerates first so ties keep the historical (tier-off) plan.
+    cpu_axis = (False, True) if sys.cpu_tier else (False,)
     for rule in (COUNT_BALANCED, MEMORY_WEIGHTED):
         counts = split_counts(model, sys, rule)
         axes = [(LAYER_MAJOR, None)] + [(ONE_F_ONE_B, c) for c in range(2, pp + 1)]
         for schedule, tc in axes:
-            plan = ExecutionPlan(model, sys, schedule=schedule, counts=counts, tuned_chunks=tc)
-            score = score_plan(model, sys, plan, wl)
-            cand = Candidate(plan.schedule, rule, plan.inflight_chunks(), score)
-            if best is None or score > best[0].score:
-                best = (cand, plan)
-            candidates.append(cand)
+            for cpu in cpu_axis:
+                plan = ExecutionPlan(model, sys, schedule=schedule, counts=counts,
+                                     tuned_chunks=tc, cpu_tier=cpu)
+                score = score_plan(model, sys, plan, wl)
+                cand = Candidate(plan.schedule, rule, plan.inflight_chunks(), cpu, score)
+                if best is None or score > best[0].score:
+                    best = (cand, plan)
+                candidates.append(cand)
     return TuneReport(best[1], best[0], candidates)
 
 
 # ---------------------------------------------------------------- timeline
 
 
-PCIE, GPU = 0, 1
+PCIE, GPU, CPU = 0, 1, 2
+LANES_PER_DEVICE = 3
 
 
 class Timeline:
     def __init__(self, devices):
         self.devices = devices
-        self.lane_free = [0.0] * (2 * devices)
-        self.busy = [0.0] * (2 * devices)
+        self.lane_free = [0.0] * (LANES_PER_DEVICE * devices)
+        self.busy = [0.0] * (LANES_PER_DEVICE * devices)
         self._makespan = 0.0
 
     def schedule_on(self, d, lane, ready_at, duration):
-        i = d * 2 + lane
+        i = d * LANES_PER_DEVICE + lane
         start = max(self.lane_free[i], ready_at)
         end = start + duration
         self.lane_free[i] = end
@@ -824,10 +922,10 @@ class Timeline:
     def barrier_group(self, dev_start, dev_end, ready_at, duration):
         start = ready_at
         for d in range(dev_start, dev_end):
-            start = max(start, self.lane_free[d * 2 + GPU])
+            start = max(start, self.lane_free[d * LANES_PER_DEVICE + GPU])
         end = start + duration
         for d in range(dev_start, dev_end):
-            i = d * 2 + GPU
+            i = d * LANES_PER_DEVICE + GPU
             self.lane_free[i] = end
             self.busy[i] += duration
         self._makespan = max(self._makespan, end)
@@ -843,7 +941,7 @@ class Timeline:
         self._makespan = max(self._makespan, t)
 
     def busy_on(self, d, lane):
-        return self.busy[d * 2 + lane]
+        return self.busy[d * LANES_PER_DEVICE + lane]
 
     def utilization_on(self, d, lane):
         return 0.0 if self._makespan == 0.0 else self.busy_on(d, lane) / self._makespan
@@ -957,7 +1055,16 @@ def simulate(model, sys, system, wl, bubble_aware=True):
 
     def hybrid_ratio(bubble):
         cm = analytic_cost_model(model, sys, sched, plan=plan)
-        a, k = hybrid_cache_allocation(cm, cost.gpu_act_block_capacity(), host_cache, sizes, bubble)
+        # CPU tier on: blocks the host CPU can attend inside the weight
+        # window never transit the link — Algorithm 1 affords that many
+        # extra KV blocks (0 with the tier off, the historical inputs).
+        cpu_kv = 0
+        if plan.cpu_tier:
+            per_block = cost.cpu_attend_secs_per_block()
+            if per_block > 0.0 and cm.load_w > 0.0:
+                cpu_kv = f64_trunc(math.floor(cm.load_w / per_block))
+        a, k = hybrid_cache_allocation(cm, cost.gpu_act_block_capacity(), host_cache, sizes,
+                                       bubble, cpu_kv)
         return BlockRatio(max(a, 1), k)
 
     def minibatch_for(ratio_, act_per_req_, kv_per_req_):
@@ -1050,6 +1157,17 @@ def simulate(model, sys, system, wl, bubble_aware=True):
             weight_scale.append(1.0)
     cpu_attn_penalty = 2.0 if system.kind == "powerinfer" else 1.0
 
+    # CPU tier: the fraction of each decode step's KV tokens attended
+    # host-side, the closed-form balance point of the per-token link and
+    # CPU-lane slopes. Exactly 0.0 with the tier off.
+    cpu_frac = 0.0
+    if plan.cpu_tier:
+        probe = 16 * bt
+        s_link = sys.interconnect.h2d_time(cost.shard_bytes(model.kv_bytes_per_layer(probe))) / probe
+        s_cpu = cost.cpu_attend_time(probe) / probe
+        if s_cpu > 0.0:
+            cpu_frac = s_link / (s_link + s_cpu)
+
     nchunks = len(chunk_sizes)
     chunk_major = sched == ONE_F_ONE_B and pp > 1
 
@@ -1131,7 +1249,8 @@ def simulate(model, sys, system, wl, bubble_aware=True):
     gpu_busy_prefill = [tl.busy_on(d, GPU) for d in range(devices)]
 
     # ==== generation phase =============================================
-    def decode_layer_chunk(l, stage, devs, boundary, c, mb, kv_toks_req, act_toks_req, recompute_toks_req, ctx):
+    def decode_layer_chunk(l, stage, devs, boundary, c, mb, kv_toks_req, cpu_toks_req,
+                           act_toks_req, recompute_toks_req, ctx):
         nonlocal stage_transfer_bytes
         if kv_on_gpu:
             kv_bytes = 0
@@ -1157,6 +1276,13 @@ def simulate(model, sys, system, wl, bubble_aware=True):
             t_act = ic.transfer_time_via(sys.interconnect, "h2d", "act_load", cost.shard_bytes(act_bytes))
             (_, load_end) = tl.schedule_on(d, PCIE, 0.0, t_kv + t_act)
             ready = max(load_end, weight_ready[d], ready_extra)
+            if cpu_toks_req > 0:
+                # CPU tier: this chunk's CPU-attended KV share runs on
+                # the host lane, overlapped with the weight stream; the
+                # forward gates on the host-computed attention output.
+                t_cpu = cost.cpu_attend_time(cpu_toks_req * mb)
+                (_, attend_end) = tl.schedule_on(d, CPU, 0.0, t_cpu)
+                ready = max(ready, attend_end)
             (_, end) = tl.schedule_on(d, GPU, ready, t_gen + t_recompute + t_fwd)
             last_end = end
         if tp > 1:
@@ -1184,7 +1310,12 @@ def simulate(model, sys, system, wl, bubble_aware=True):
         ctx_blocks = div_ceil(ctx, bt)
         act_b_req, kv_b_req = ratio.split(ctx_blocks)
         recompute_toks_req = f64_trunc(ctx * recompute_frac)
-        kv_toks_req = max(min(kv_b_req * bt, ctx) - recompute_toks_req, 0)
+        kv_toks_full = max(min(kv_b_req * bt, ctx) - recompute_toks_req, 0)
+        # CPU tier: the balanced share attends host-side and never
+        # transits the link (`cpu_frac` is exactly 0.0 with the tier
+        # off, leaving every token on the link — integer-exact).
+        cpu_toks_req = f64_trunc(kv_toks_full * cpu_frac)
+        kv_toks_req = kv_toks_full - cpu_toks_req
         act_toks_req = min(act_b_req * bt, ctx)
 
         if not chunk_major:
@@ -1196,7 +1327,8 @@ def simulate(model, sys, system, wl, bubble_aware=True):
                 stream_weights(stage, devs, w_end)
                 for c, mb in enumerate(chunk_sizes):
                     decode_layer_chunk(
-                        l, stage, devs, boundary, c, mb, kv_toks_req, act_toks_req, recompute_toks_req, ctx
+                        l, stage, devs, boundary, c, mb, kv_toks_req, cpu_toks_req,
+                        act_toks_req, recompute_toks_req, ctx
                     )
                 weight_ready = w_end
         else:
@@ -1208,7 +1340,8 @@ def simulate(model, sys, system, wl, bubble_aware=True):
                     w_end = list(weight_ready)
                     stream_weights(stage, devs, w_end)
                     decode_layer_chunk(
-                        l, stage, devs, boundary, c, mb, kv_toks_req, act_toks_req, recompute_toks_req, ctx
+                        l, stage, devs, boundary, c, mb, kv_toks_req, cpu_toks_req,
+                        act_toks_req, recompute_toks_req, ctx
                     )
                     weight_ready = w_end
 

@@ -282,6 +282,96 @@ def memory_plan_monotone_property(rng):
         mem += rng.range(1 << 30, 16 << 30)
 
 
+# ---- property 4: CPU compute tier (rust/tests/cpu_tier.rs, ISSUE 9) ---
+# Mirrors the Rust suite's draw ORDER exactly (same xoshiro stream).
+
+
+def cpu_tier_off_switch_property(rng):
+    m = rng.choose([opt_30b(), opt_66b()])
+    tp = rng.choose([1, 2])
+    pp = rng.choose([1, 2, 4])
+    batch = rng.range(1, 129)
+    prompt = rng.range(64, 1025)
+    gen = rng.range(1, 17)
+    w = Workload(batch, prompt, gen)
+    system = SYSTEMS[rng.range(0, 4)]
+    base = SystemConfig(tp, pp)
+    # explicit tier-off is bit-for-bit the default
+    off = simulate(m, base, system, w)
+    off2 = simulate(m, base.with_cpu_tier(False), system, w)
+    assert off.makespan == off2.makespan, f"{off.makespan!r} != {off2.makespan!r}"
+    assert off.throughput == off2.throughput
+    assert off.traffic == off2.traffic
+    assert off.minibatch == off2.minibatch
+    assert off.act_block_share == off2.act_block_share
+    # tier on: the CPU-attended share never ADDS link traffic
+    on = simulate(m, base.with_cpu_tier(True), system, w)
+    assert on.traffic["kv_load"] <= off.traffic["kv_load"], (
+        f"tier on grew KV link traffic: {on.traffic['kv_load']} > {off.traffic['kv_load']}")
+
+
+def cpu_tier_autotune_property(rng):
+    m = rng.choose([opt_30b(), opt_66b()])
+    tp = rng.choose([1, 2])
+    pp = rng.choose([1, 2, 4])
+    wl = AutotuneConfig(rng.range(1, 257), rng.range(64, 1025), rng.range(16, 257))
+    off = tune(m, SystemConfig(tp, pp), wl)
+    on = tune(m, SystemConfig(tp, pp, cpu_tier=True), wl)
+    # the tier axis exactly doubles the search, interleaved off-first
+    assert len(on.candidates) == 2 * len(off.candidates)
+    for j, base in enumerate(off.candidates):
+        a, b = on.candidates[2 * j], on.candidates[2 * j + 1]
+        assert not a.cpu_tier and b.cpu_tier
+        assert (a.schedule, a.layer_split, a.chunks) == (b.schedule, b.layer_split, b.chunks)
+        # tier-off candidates inside an on-search score identically
+        assert a.score == base.score, f"{a.score!r} != {base.score!r}"
+    # the three-lane closed form never loses to the two-lane one
+    assert on.winner.score >= off.winner.score, (
+        f"tier-on winner lost: {on.winner.score} < {off.winner.score}")
+
+
+def cpu_tier_golden_off_switch():
+    """Every pre-existing golden reproduces bit-for-bit (0.00e+00 rel
+    err) with the CPU tier explicitly disabled."""
+    import json
+
+    gdir = "/root/repo/rust/tests/golden/"
+    four = [("hybrid", HYBRID), ("flexgen", FLEXGEN), ("deepspeed", DEEPSPEED), ("act_only", ACT_ONLY)]
+    sim_goldens = [
+        ("sim_opt6_7b.json", opt_6_7b, lambda g: SystemConfig(1, 1), False),
+        ("sim_opt175b_tp2pp4.json", opt_175b, lambda g: SystemConfig(2, 4), True),
+        ("sim_opt66b_hetmem.json", opt_66b,
+         lambda g: SystemConfig(g["topology"]["tp"], g["topology"]["pp"]).with_stage_memory(
+             g["topology"]["skewed_stage"], g["topology"]["skewed_memory_gb"] << 30), True),
+    ]
+    for fname, mk_model, mk_sys, aware in sim_goldens:
+        g = json.load(open(gdir + fname))
+        w = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+        s = mk_sys(g).with_cpu_tier(False)
+        for key, system in four:
+            got = simulate(mk_model(), s, system, w, bubble_aware=aware).throughput
+            assert got == g["throughput"][key], f"{fname}/{key}: {got!r} != {g['throughput'][key]!r}"
+    g = json.load(open(gdir + "sim_opt175b_tp2pp4_schedules.json"))
+    w = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+    for sched in (LAYER_MAJOR, ONE_F_ONE_B):
+        s = SystemConfig(2, 4, sched).with_cpu_tier(False)
+        for key, system in four:
+            got = simulate(opt_175b(), s, system, w).throughput
+            assert got == g["throughput"][sched][key], f"schedules/{sched}/{key}"
+    g = json.load(open(gdir + "autotune_hetmem.json"))
+    w = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+    at = AutotuneConfig(w.batch, w.prompt, w.gen)
+    s = SystemConfig(g["topology"]["tp"], g["topology"]["pp"]).with_stage_memory(
+        g["topology"]["skewed_stage"], g["topology"]["skewed_memory_gb"] << 30
+    ).with_cpu_tier(False)
+    rep = tune(opt_66b(), s, at)
+    assert rep.winner.schedule == g["winner"]["schedule"]
+    assert rep.winner.chunks == g["winner"]["chunks"]
+    assert len(rep.candidates) == 2 * g["topology"]["pp"]
+    got = simulate(opt_66b(), s.with_autotune(at), HYBRID, w).throughput
+    assert got == g["throughput"]["autotuned"], f"autotuned: {got!r}"
+
+
 if __name__ == "__main__":
     import time
 
@@ -296,6 +386,13 @@ if __name__ == "__main__":
     t0 = time.time()
     check("autotune-joint", 100, autotune_property)
     print(f"autotune-joint: 100 cases OK ({time.time()-t0:.1f}s)")
+    t0 = time.time()
+    cpu_tier_golden_off_switch()
+    print(f"cpu-tier golden off-switch: all goldens bit-for-bit OK ({time.time()-t0:.1f}s)")
+    t0 = time.time()
+    check("cpu-tier-off-switch", 60, cpu_tier_off_switch_property)
+    check("cpu-tier-autotune", 60, cpu_tier_autotune_property)
+    print(f"cpu-tier suites: 2x60 cases OK ({time.time()-t0:.1f}s)")
     t0 = time.time()
     check("schedule-axis", 100, schedule_property)
     print(f"schedule-axis: 100 cases OK ({time.time()-t0:.1f}s)")

@@ -97,6 +97,38 @@ def main():
     ok &= beats
     print(f"  {'OK ' if beats else 'FAIL'} autotuned beats best single-axis by {margin:+.2%}")
 
+    g = json.load(open("/root/repo/rust/tests/golden/sim_cpu_tier.json"))
+    wl = Workload(g["workload"]["batch"], g["workload"]["prompt"], g["workload"]["gen"])
+    t = g["topology"]
+    s = SystemConfig(t["tp"], t["pp"])
+    print("golden sim_cpu_tier (OPT-66B on all-24-GB 2x2, tier off vs on):")
+    off = simulate(opt_66b(), s, HYBRID, wl).throughput
+    on = simulate(opt_66b(), s.with_cpu_tier(True), HYBRID, wl).throughput
+    ok &= check("tier_off", off, g["throughput"]["tier_off"])
+    ok &= check("tier_on", on, g["throughput"]["tier_on"])
+    margin = on / off - 1.0
+    ok &= check("margin", margin, g["margin"], tol=1e-3)
+    beats = margin > 0.0
+    ok &= beats
+    print(f"  {'OK ' if beats else 'FAIL'} CPU tier wins the link-bound grid by {margin:+.2%}")
+    at = AutotuneConfig(wl.batch, wl.prompt, wl.gen)
+    rep = tune(opt_66b(), s.with_cpu_tier(True), at)
+    rep_off = tune(opt_66b(), s, at)
+    w = g["winner"]
+    for name, got, want in [
+        ("winner.schedule", rep.winner.schedule, w["schedule"]),
+        ("winner.layer_split", rep.winner.layer_split, w["layer_split"]),
+        ("winner.chunks", rep.winner.chunks, w["chunks"]),
+        ("winner.cpu_tier", rep.winner.cpu_tier, w["cpu_tier"]),
+        ("candidates.tier_off", len(rep_off.candidates), g["candidates"]["tier_off"]),
+        ("candidates.tier_on", len(rep.candidates), g["candidates"]["tier_on"]),
+    ]:
+        match = got == want
+        ok &= match
+        print(f"  {'OK ' if match else 'FAIL'} {name}: got {got!r} want {want!r}")
+    best_no_cpu = max(c.score for c in rep.candidates if not c.cpu_tier)
+    ok &= check("score_margin", rep.winner.score / best_no_cpu - 1.0, g["score_margin"], tol=1e-3)
+
     print("ALL OK" if ok else "MISMATCH")
     return 0 if ok else 1
 
