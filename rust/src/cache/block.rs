@@ -56,8 +56,8 @@ pub struct BlockSizes {
 
 impl BlockSizes {
     pub fn new(model: &ModelConfig, block_tokens: usize) -> Self {
-        let kv_bytes = model.num_layers * model.kv_bytes_per_layer(block_tokens);
-        let act_bytes = model.num_layers * model.act_bytes_per_layer(block_tokens);
+        let kv_bytes = model.num_layers.saturating_mul(model.kv_bytes_per_layer(block_tokens));
+        let act_bytes = model.num_layers.saturating_mul(model.act_bytes_per_layer(block_tokens));
         debug_assert_eq!(kv_bytes, 2 * act_bytes, "S_ACT must be half of S_KV");
         Self {
             block_tokens,

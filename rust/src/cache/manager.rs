@@ -187,6 +187,7 @@ impl BlockManager {
         location: Location,
         filled: usize,
     ) -> Result<PhysBlockId, CacheError> {
+        // lint: allow(reach-panic:panic) overfilled block is a caller bug; abort beats silently corrupting the table
         assert!(
             filled <= self.sizes.block_tokens,
             "filled {} exceeds block size {}",
@@ -199,8 +200,14 @@ impl BlockManager {
         let bytes = self.sizes.bytes(kind);
         self.pool_mut(location).alloc(bytes)?;
         let phys = PhysBlockId(self.next_id);
-        self.next_id += 1;
-        self.tables.get_mut(&req).unwrap().push(LogicalBlock {
+        self.next_id = self.next_id.saturating_add(1);
+        let Some(table) = self.tables.get_mut(&req) else {
+            // Re-checked for panic freedom: hand the bytes back and fail
+            // cleanly instead of leaking the allocation.
+            let _ = self.pool_mut(location).release(bytes);
+            return Err(CacheError::UnknownRequest(req));
+        };
+        table.push(LogicalBlock {
             kind,
             location,
             phys,
@@ -220,9 +227,9 @@ impl BlockManager {
             .ok_or(CacheError::UnknownRequest(req))?;
         match table.last_mut() {
             Some(last) => {
-                let space = block_tokens - last.filled;
+                let space = block_tokens.saturating_sub(last.filled);
                 let take = space.min(tokens);
-                last.filled += take;
+                last.filled = last.filled.saturating_add(take);
                 Ok(take)
             }
             None => Ok(0),
@@ -282,18 +289,25 @@ impl BlockManager {
             Location::Host => {
                 // An ACT block is strictly smaller than the KV block being
                 // released, so release-then-alloc cannot fail.
+                // lint: allow(reach-panic:unwrap) a failed release means the pool ledger is corrupt; abort loudly over serving on bad accounting
                 self.host.release(kv_b).expect("accounting");
                 self.host
                     .alloc(act_b)
+                    // lint: allow(reach-panic:unwrap) ACT blocks are strictly smaller than the KV block just released; failure is ledger corruption
                     .expect("ACT block fits in the KV block just released");
             }
             Location::Gpu => {
                 // Host must take the ACT copy; fail atomically if it is full.
                 self.host.alloc(act_b)?;
+                // lint: allow(reach-panic:unwrap) a failed release means the pool ledger is corrupt; abort loudly over serving on bad accounting
                 self.gpu.release(kv_b).expect("accounting");
             }
         }
-        let b = self.tables.get_mut(&req).unwrap().get_mut(idx).unwrap();
+        let b = self
+            .tables
+            .get_mut(&req)
+            .and_then(|t| t.get_mut(idx))
+            .ok_or(CacheError::BadLogicalIndex { req, idx })?;
         b.kind = BlockKind::Act;
         b.location = Location::Host;
         self.bump_stats(BlockKind::Kv, old_loc, -1, -(kv_b as isize));
@@ -324,10 +338,12 @@ impl BlockManager {
             self.demote_block(req, idx)?;
             receipt.demoted.push((idx, loc));
             match loc {
-                Location::Host => receipt.host_delta += kv_b - act_b,
+                Location::Host => {
+                    receipt.host_delta = receipt.host_delta.saturating_add(kv_b - act_b)
+                }
                 Location::Gpu => {
-                    receipt.gpu_freed += kv_b as usize;
-                    receipt.host_delta -= act_b;
+                    receipt.gpu_freed = receipt.gpu_freed.saturating_add(kv_b as usize);
+                    receipt.host_delta = receipt.host_delta.saturating_sub(act_b);
                 }
             }
         }
@@ -410,6 +426,7 @@ impl BlockManager {
             .ok_or(CacheError::UnknownRequest(req))?;
         for b in table.drain() {
             let bytes = self.sizes.bytes(b.kind);
+            // lint: allow(reach-panic:unwrap) a failed release means the pool ledger is corrupt; abort loudly over serving on bad accounting
             self.pool_mut(b.location).release(bytes).expect("accounting");
             self.bump_stats(b.kind, b.location, -1, -(bytes as isize));
         }
@@ -430,12 +447,12 @@ impl BlockManager {
             (BlockKind::Act, Location::Host) => &mut self.stats.act_blocks_host,
             (BlockKind::Act, Location::Gpu) => &mut self.stats.act_blocks_gpu,
         };
-        *c = (*c as isize + dcount) as usize;
+        *c = (*c as isize).saturating_add(dcount).max(0) as usize;
         let b = match loc {
             Location::Gpu => &mut self.stats.gpu_bytes,
             Location::Host => &mut self.stats.host_bytes,
         };
-        *b = (*b as isize + dbytes) as usize;
+        *b = (*b as isize).saturating_add(dbytes).max(0) as usize;
     }
 }
 

@@ -438,12 +438,12 @@ impl SystemConfig {
 
     /// GPU bytes available for resident weights.
     pub fn gpu_weight_budget(&self) -> usize {
-        (self.gpu.memory_bytes as f64 * self.gpu_weight_fraction) as usize
+        crate::util::units::frac_of_bytes(self.gpu_weight_fraction, self.gpu.memory_bytes)
     }
 
     /// GPU bytes available for the KV/ACT staging buffers.
     pub fn gpu_buffer_budget(&self) -> usize {
-        (self.gpu.memory_bytes as f64 * self.gpu_buffer_fraction) as usize
+        crate::util::units::frac_of_bytes(self.gpu_buffer_fraction, self.gpu.memory_bytes)
     }
 
     /// GPU bytes left for resident ACT blocks after weights + buffers.

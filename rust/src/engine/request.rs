@@ -36,7 +36,7 @@ pub struct Completion {
 
 impl Completion {
     pub fn generated(&self) -> &[i32] {
-        &self.tokens[self.prompt_len..]
+        self.tokens.get(self.prompt_len..).unwrap_or_default()
     }
 
     /// Mean Time-Between-Tokens over the generation (0 for single-token
@@ -111,7 +111,7 @@ impl ReqState {
     }
 
     pub fn generated(&self) -> usize {
-        self.tokens.len() - self.prompt_len
+        self.tokens.len().saturating_sub(self.prompt_len)
     }
 
     pub fn completion(&self, id: u64) -> Completion {

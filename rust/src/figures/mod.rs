@@ -305,7 +305,7 @@ pub fn tab_sharding() -> FigureTable {
                 f2(hy.throughput),
                 f3(hy.act_block_share),
                 f2(hy.throughput / base),
-                f2(hy.collective_bytes as f64 / 1e9),
+                f2(crate::util::units::bytes_f64(hy.collective_bytes) / 1e9),
             ]);
         }
     }
@@ -379,7 +379,7 @@ pub fn tab_pipeline() -> FigureTable {
                 f2(hy.throughput),
                 f3(hy.act_block_share),
                 f3(hy.mean_stage_bubble()),
-                f2(hy.stage_transfer_bytes as f64 / 1e9),
+                f2(crate::util::units::bytes_f64(hy.stage_transfer_bytes) / 1e9),
                 f2(fg_ob.throughput),
                 f2(hy_ob.throughput),
                 f3(hy_ob.mean_stage_bubble()),

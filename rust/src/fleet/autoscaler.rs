@@ -71,12 +71,16 @@ impl PriceTable {
     pub fn gpu_hourly(&self, memory_bytes: usize) -> f64 {
         let gib = 1usize << 30;
         for t in &self.tiers {
-            if t.mem_gb * gib >= memory_bytes {
+            if t.mem_gb.saturating_mul(gib) >= memory_bytes {
                 return t.dollars_per_hour;
             }
         }
-        let last = self.tiers.last().unwrap();
-        last.dollars_per_hour * (memory_bytes as f64 / (last.mem_gb * gib) as f64)
+        let Some(last) = self.tiers.last() else {
+            return 0.0;
+        };
+        last.dollars_per_hour
+            * (crate::util::units::bytes_f64(memory_bytes)
+                / last.mem_gb.saturating_mul(gib) as f64)
     }
 
     /// $/hour of a whole replica: the sum over its grid's device slots

@@ -46,7 +46,8 @@ impl Replica {
     ) -> Self {
         let eng = AnalyticEngine::new(model, &sys, host_cache_bytes);
         let sizes = BlockSizes::new(model, sys.block_tokens);
-        let token_capacity = host_cache_bytes / sizes.kv_bytes.max(1) * sizes.block_tokens;
+        let token_capacity =
+            (host_cache_bytes / sizes.kv_bytes.max(1)).saturating_mul(sizes.block_tokens);
         Self {
             id,
             hourly: 0.0,
@@ -91,9 +92,9 @@ impl Replica {
         while !self.sched.is_idle() && self.sched.now() < t {
             let before = self.sched.now();
             let n = self.sched.tick()?.len();
-            done += n;
+            done = done.saturating_add(n);
             if n == 0 && self.sched.now() <= before {
-                stalled += 1;
+                stalled = stalled.saturating_add(1);
                 anyhow::ensure!(
                     stalled < 3,
                     "replica {} stalled pumping to t={t} at now={}",
@@ -129,9 +130,12 @@ impl Replica {
     /// turn just served is never the one aged out.
     pub fn note_session(&mut self, session: u64, tokens: usize) {
         let touch = self.session_clock;
-        self.session_clock += 1;
+        self.session_clock = self.session_clock.saturating_add(1);
         let old = self.sessions.insert(session, (tokens, touch));
-        self.retained_tokens = self.retained_tokens - old.map_or(0, |(t, _)| t) + tokens;
+        self.retained_tokens = self
+            .retained_tokens
+            .saturating_sub(old.map_or(0, |(t, _)| t))
+            .saturating_add(tokens);
         while self.retained_tokens > self.token_capacity && self.sessions.len() > 1 {
             let oldest = self
                 .sessions
@@ -139,9 +143,10 @@ impl Replica {
                 .iter()
                 .min_by_key(|(_, &(_, touch))| touch)
                 .map(|(&k, _)| k)
+                // lint: allow(reach-panic:unwrap) the loop guard holds sessions.len() > 1, so the census is non-empty
                 .expect("non-empty census");
             if let Some((t, _)) = self.sessions.remove(&oldest) {
-                self.retained_tokens -= t;
+                self.retained_tokens = self.retained_tokens.saturating_sub(t);
             }
         }
     }

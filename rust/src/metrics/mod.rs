@@ -403,8 +403,8 @@ impl SloReport {
         for r in reports {
             samples.extend_from_slice(&r.samples);
             depths.extend_from_slice(&r.depth_samples);
-            submitted += r.submitted;
-            preemptions += r.preemptions;
+            submitted = submitted.saturating_add(r.submitted);
+            preemptions = preemptions.saturating_add(r.preemptions);
             makespan = makespan.max(r.makespan_secs);
         }
         // Canonicalize the pooled order: percentiles re-sort anyway, but
@@ -549,7 +549,7 @@ impl FleetReport {
             self.cost_per_token * 1e6,
             self.load_imbalance,
             self.session_hits,
-            self.session_hits + self.session_misses,
+            self.session_hits.saturating_add(self.session_misses),
         )
     }
 }

@@ -102,8 +102,10 @@ pub fn memory_weighted_split(model: &ModelConfig, sys: &SystemConfig) -> Vec<usi
         .map(|s| {
             (s * tp..(s + 1) * tp)
                 .map(|d| {
-                    (sys.topology.slot(d).gpu.memory_bytes as f64 * sys.gpu_weight_fraction)
-                        as usize
+                    crate::util::units::frac_of_bytes(
+                        sys.gpu_weight_fraction,
+                        sys.topology.slot(d).gpu.memory_bytes,
+                    )
                 })
                 .min()
                 .unwrap_or(0)
@@ -211,7 +213,9 @@ pub fn score_plan(
         .div_ceil(sys.block_tokens)
         .max(1);
     let batch = workload.batch.max(1);
-    let weight_read = model.layer_weight_bytes() as f64 / plan.tp as f64 / sys.gpu.mem_bw;
+    let weight_read = crate::util::units::bytes_f64(model.layer_weight_bytes())
+        / plan.tp as f64
+        / sys.gpu.mem_bw;
     let cms: Vec<CostModel> = (0..plan.pp)
         .map(|s| CostModel::analytic_for_stage(model, sys, plan, s))
         .collect();
@@ -240,7 +244,8 @@ pub fn score_plan(
         for s in 0..plan.pp {
             let cm = &cms[s];
             let layers = plan.stages[s].layer_count() as f64;
-            let gpu = layers * (cm.kv_gen.eval(act_blocks as f64) + chunks as f64 * weight_read);
+            let gpu =
+                layers * (cm.kv_gen.eval(blocks_f64(act_blocks)) + chunks as f64 * weight_read);
             let spill = act_blocks.saturating_sub(plan.memory().stage_act_capacity(s));
             if plan.cpu_tier && cpu_block > 0.0 {
                 // Three-lane: route c* of the stage's KV blocks to the CPU

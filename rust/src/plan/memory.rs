@@ -79,16 +79,18 @@ impl MemoryPlan {
             // Per-device slice of the stage's weights — the SAME f64
             // expression the scalar PlanBuilder used, against this
             // device's own residency budget.
-            let shard_total = s.weight_bytes as f64 / tp as f64;
+            let shard_total = crate::util::units::bytes_f64(s.weight_bytes) / tp as f64;
             for d in s.devices.clone() {
                 let memory_bytes = sys.topology.slot(d).gpu.memory_bytes;
                 let weight_resident_bytes =
-                    (memory_bytes as f64 * sys.gpu_weight_fraction) as usize;
+                    crate::util::units::frac_of_bytes(sys.gpu_weight_fraction, memory_bytes);
                 let pinned_staging_bytes =
-                    (memory_bytes as f64 * sys.gpu_buffer_fraction) as usize;
+                    crate::util::units::frac_of_bytes(sys.gpu_buffer_fraction, memory_bytes);
                 let cache_bytes =
                     memory_bytes.saturating_sub(weight_resident_bytes + pinned_staging_bytes);
-                let stream_frac = ((shard_total - weight_resident_bytes as f64) / shard_total)
+                let stream_frac = ((shard_total
+                    - crate::util::units::bytes_f64(weight_resident_bytes))
+                    / shard_total)
                     .clamp(0.0, 1.0);
                 // Block census of this device's stage slice (per-device
                 // stripe of every layer the stage owns): same expression

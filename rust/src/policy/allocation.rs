@@ -154,7 +154,8 @@ impl HostAllocation {
         if self.kv_blocks == 0 {
             f64::INFINITY
         } else {
-            self.act_blocks as f64 / self.kv_blocks as f64
+            crate::util::units::blocks_f64(self.act_blocks)
+                / crate::util::units::blocks_f64(self.kv_blocks)
         }
     }
 
@@ -180,7 +181,7 @@ impl HostAllocation {
 /// historical Algorithm 1, bit-for-bit.
 pub fn initial_cache_allocation(inp: &AllocationInputs) -> (usize, usize) {
     let g = inp.effective_kv_gen();
-    let t_budget = inp.cost.load_w - g.eval(inp.act_gpu_blocks as f64);
+    let t_budget = inp.cost.load_w - g.eval(crate::util::units::blocks_f64(inp.act_gpu_blocks));
     if t_budget >= 0.0 {
         // GPU would idle while weights stream: give it host ACT blocks to
         // chew on.
@@ -207,10 +208,10 @@ pub fn initial_cache_allocation(inp: &AllocationInputs) -> (usize, usize) {
 ///   S_ACT·a + S_KV·k = M_remaining
 ///   g_s·a + g_i       = l_s·k + l_i
 pub fn alloc_remaining(inp: &AllocationInputs, act_init: usize, kv_init: usize) -> (usize, usize) {
-    let s_act = inp.sizes.act_bytes as f64;
-    let s_kv = inp.sizes.kv_bytes as f64;
+    let s_act = crate::util::units::bytes_f64(inp.sizes.act_bytes);
+    let s_kv = crate::util::units::bytes_f64(inp.sizes.kv_bytes);
     let occupied = s_act * act_init as f64 + s_kv * kv_init as f64;
-    let remaining = inp.host_cache_bytes as f64 - occupied;
+    let remaining = crate::util::units::bytes_f64(inp.host_cache_bytes) - occupied;
     if remaining <= 0.0 {
         return (0, 0);
     }

@@ -56,8 +56,8 @@ impl BinCaps {
 /// `balance` of Eq. 12 (∞-safe: empty side counts as its intercept-free 0
 /// and the ratio saturates).
 pub fn balance(cost: &CostModel, act_blocks: usize, kv_blocks: usize) -> f64 {
-    let t_gen = cost.kv_gen.eval(act_blocks as f64);
-    let t_load = cost.load_kv.eval(kv_blocks as f64);
+    let t_gen = cost.kv_gen.eval(crate::util::units::blocks_f64(act_blocks));
+    let t_load = cost.load_kv.eval(crate::util::units::blocks_f64(kv_blocks));
     if t_load == 0.0 {
         if t_gen == 0.0 {
             1.0

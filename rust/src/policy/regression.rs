@@ -191,13 +191,14 @@ impl<'a> CostSampler for AnalyticSampler<'a> {
             .iter()
             .filter(|b| self.stage.map_or(true, |s| b.stage == s))
             .map(|b| {
-                let layer_bytes =
-                    self.model.layer_weight_bytes() as f64 / self.tp() * b.stream_frac;
+                let layer_bytes = crate::util::units::bytes_f64(self.model.layer_weight_bytes())
+                    / self.tp()
+                    * b.stream_frac;
                 self.sys
                     .topology
                     .slot(b.device)
                     .link
-                    .h2d_time(layer_bytes as usize)
+                    .h2d_time(crate::util::units::f64_bytes(layer_bytes))
             })
             .fold(0.0, f64::max);
         plan.weight_stream_passes() as f64 * window
@@ -277,13 +278,13 @@ impl CostModel {
     /// `T_Computation` for a mini-batch with `act_blocks` ACT blocks
     /// (Eq. 10).
     pub fn t_computation(&self, act_blocks: usize) -> f64 {
-        self.kv_gen.eval(act_blocks as f64)
+        self.kv_gen.eval(crate::util::units::blocks_f64(act_blocks))
     }
 
     /// `T_PCIe` for a mini-batch loading `kv_blocks` KV blocks plus the
     /// layer weights (Eq. 9).
     pub fn t_pcie(&self, kv_blocks: usize) -> f64 {
-        self.load_w + self.load_kv.eval(kv_blocks as f64)
+        self.load_w + self.load_kv.eval(crate::util::units::blocks_f64(kv_blocks))
     }
 }
 

@@ -73,6 +73,7 @@ impl PjrtRuntime {
                 .find(|e| e.name == entry_name)
                 .with_context(|| format!("unknown entry {entry_name}"))?
                 .clone();
+            // lint: allow(nondet-taint) genuine compile-time measurement; never golden-pinned
             let t0 = Instant::now();
             let proto = xla::HloModuleProto::from_text_file(&entry.file)
                 .with_context(|| format!("loading {:?}", entry.file))?;
@@ -102,6 +103,7 @@ impl PjrtRuntime {
         self.warm(&entry.name)?;
         let exe = self.exes.get(&entry.name).unwrap();
 
+        // lint: allow(nondet-taint) genuine PJRT wall-clock; never golden-pinned
         let t0 = Instant::now();
         let result = exe
             .execute::<Literal>(args)
@@ -147,6 +149,7 @@ impl PjrtRuntime {
         self.warm(&entry.name)?;
         let exe = self.exes.get(&entry.name).unwrap();
 
+        // lint: allow(nondet-taint) genuine PJRT wall-clock; never golden-pinned
         let t0 = Instant::now();
         let result = exe
             .execute::<&Literal>(args)

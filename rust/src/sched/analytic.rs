@@ -153,7 +153,12 @@ impl AnalyticEngine {
     fn alloc_token_slot(&mut self, id: u64) -> Result<()> {
         let took = self.blocks.fill_last(id, 1)?;
         if took == 0 {
-            let kind = if self.states[&id].demoted {
+            let demoted = self
+                .states
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("unknown {id}"))?
+                .demoted;
+            let kind = if demoted {
                 BlockKind::Act
             } else {
                 let t = self.blocks.table(id)?;
@@ -204,7 +209,7 @@ impl AnalyticEngine {
         let frac = 1.0 / chunks as f64;
         let chunk_hop = hop_tokens.div_ceil(chunks);
         let topo = &self.sys.topology;
-        let last = self.plan.stages.len() - 1;
+        let last = self.plan.stages.len().saturating_sub(1);
         let mut exits = Vec::with_capacity(chunks);
         for &entry in entries {
             let mut handoff = entry;
@@ -284,7 +289,7 @@ impl StepEngine for AnalyticEngine {
     fn validate(&self, req: &Request) -> Result<()> {
         anyhow::ensure!(!req.prompt.is_empty(), "request {} has empty prompt", req.id);
         anyhow::ensure!(
-            req.prompt.len() + req.max_new <= self.model.max_context,
+            req.prompt.len().saturating_add(req.max_new) <= self.model.max_context,
             "request {} exceeds max context {}",
             req.id,
             self.model.max_context
@@ -328,8 +333,9 @@ impl StepEngine for AnalyticEngine {
             .iter()
             .copied()
             .filter(|id| {
-                let st = &self.states[id];
-                !st.prefilled && !st.paused && !st.done
+                self.states
+                    .get(id)
+                    .map_or(false, |st| !st.prefilled && !st.paused && !st.done)
             })
             .collect();
         if !wave.is_empty() {
@@ -337,19 +343,23 @@ impl StepEngine for AnalyticEngine {
             let batch: usize = wave.len();
             let max_prompt = wave
                 .iter()
-                .map(|id| self.states[id].prompt_len)
+                .filter_map(|id| self.states.get(id).map(|st| st.prompt_len))
                 .max()
                 .unwrap_or(0);
             for &id in &wave {
-                let plen = self.states[&id].prompt_len;
+                let plen = self
+                    .states
+                    .get(&id)
+                    .ok_or_else(|| anyhow::anyhow!("unknown {id}"))?
+                    .prompt_len;
                 let nblocks = plen.div_ceil(bt);
                 let (mut act, mut kv) = (0usize, 0usize);
                 for i in 0..nblocks {
-                    let filled = if i + 1 == nblocks { plen - i * bt } else { bt };
+                    let filled = if i + 1 == nblocks { plen.saturating_sub(i * bt) } else { bt };
                     let kind = self.ratio.next_kind(act, kv);
                     match kind {
-                        BlockKind::Act => act += 1,
-                        BlockKind::Kv => kv += 1,
+                        BlockKind::Act => act = act.saturating_add(1),
+                        BlockKind::Kv => kv = kv.saturating_add(1),
                     }
                     self.blocks.append_block(id, kind, Location::Host, filled)?;
                 }
@@ -360,14 +370,14 @@ impl StepEngine for AnalyticEngine {
             let entries = vec![0.0; self.pass_chunks(batch)];
             let end = self.schedule_pass(gpu_base, 0.0, 0.0, batch * max_prompt, &entries);
             for &id in &wave {
-                let st = self.states.get_mut(&id).unwrap();
+                let Some(st) = self.states.get_mut(&id) else { continue };
                 st.prefilled = true;
                 st.generated = 1;
                 st.token_times.push(end);
             }
             for &id in &wave {
                 self.alloc_token_slot(id)?;
-                let st = self.states.get_mut(&id).unwrap();
+                let Some(st) = self.states.get_mut(&id) else { continue };
                 if st.generated >= st.max_new {
                     st.done = true;
                 }
@@ -380,8 +390,9 @@ impl StepEngine for AnalyticEngine {
             .iter()
             .copied()
             .filter(|id| {
-                let st = &self.states[id];
-                st.prefilled && !st.done && !st.paused
+                self.states
+                    .get(id)
+                    .map_or(false, |st| st.prefilled && !st.done && !st.paused)
             })
             .collect();
         if !runnable.is_empty() {
@@ -392,13 +403,16 @@ impl StepEngine for AnalyticEngine {
             let mut ctx_sum = 0usize;
             for &id in &runnable {
                 let t = self.blocks.table(id)?;
-                act_blocks += t.count_kind(BlockKind::Act);
-                kv_blocks += t.count_kind(BlockKind::Kv);
-                let st = &self.states[&id];
-                ctx_sum += st.prompt_len + st.generated;
+                act_blocks = act_blocks.saturating_add(t.count_kind(BlockKind::Act));
+                kv_blocks = kv_blocks.saturating_add(t.count_kind(BlockKind::Kv));
+                let st = self
+                    .states
+                    .get(&id)
+                    .ok_or_else(|| anyhow::anyhow!("unknown {id}"))?;
+                ctx_sum = ctx_sum.saturating_add(st.prompt_len.saturating_add(st.generated));
             }
             let mean_ctx = ctx_sum / n;
-            let gpu_base = self.cost.kv_gen_time(act_blocks * bt)
+            let gpu_base = self.cost.kv_gen_time(act_blocks.saturating_mul(bt))
                 + self.cost.layer_forward_time(n, 1, mean_ctx);
             // ---- CPU tier: shed link pressure onto the host lane -----
             // While the pressed device's PCIe lane (weight stream + cache
@@ -419,25 +433,27 @@ impl StepEngine for AnalyticEngine {
                 loop {
                     let mut link_kv = 0usize;
                     for &id in &runnable {
-                        if !self.states[&id].cpu_attended {
-                            link_kv += self.blocks.table(id)?.count_kind(BlockKind::Kv);
+                        if !self.states.get(&id).map_or(false, |st| st.cpu_attended) {
+                            link_kv = link_kv
+                                .saturating_add(self.blocks.table(id)?.count_kind(BlockKind::Kv));
                         }
                     }
-                    let cache = self.cost.kv_load_time(link_kv * bt)
-                        + self.cost.act_load_time(act_blocks * bt);
+                    let cache = self.cost.kv_load_time(link_kv.saturating_mul(bt))
+                        + self.cost.act_load_time(act_blocks.saturating_mul(bt));
                     if link_kv == 0 || pressure.free_window_secs + cache <= gpu_base {
                         break;
                     }
                     let candidates: Vec<VictimInfo> = runnable
                         .iter()
                         .copied()
-                        .filter(|id| !self.states[id].cpu_attended)
+                        .filter(|id| !self.states.get(id).map_or(false, |st| st.cpu_attended))
                         .filter_map(|id| self.victim_info(id).ok())
                         .filter(|v| v.kv_blocks > 0)
                         .collect();
                     match select_victim_action_pressed(&candidates, &self.cm, &pressure) {
                         Some((v, VictimAction::CpuAttend)) => {
-                            self.states.get_mut(&v.id).unwrap().cpu_attended = true;
+                            let Some(st) = self.states.get_mut(&v.id) else { break };
+                            st.cpu_attended = true;
                         }
                         _ => break,
                     }
@@ -445,12 +461,12 @@ impl StepEngine for AnalyticEngine {
             }
             let mut cpu_kv = 0usize;
             for &id in &runnable {
-                if self.states[&id].cpu_attended {
-                    cpu_kv += self.blocks.table(id)?.count_kind(BlockKind::Kv);
+                if self.states.get(&id).map_or(false, |st| st.cpu_attended) {
+                    cpu_kv = cpu_kv.saturating_add(self.blocks.table(id)?.count_kind(BlockKind::Kv));
                 }
             }
-            let cache_base = self.cost.kv_load_time((kv_blocks - cpu_kv) * bt)
-                + self.cost.act_load_time(act_blocks * bt);
+            let cache_base = self.cost.kv_load_time(kv_blocks.saturating_sub(cpu_kv).saturating_mul(bt))
+                + self.cost.act_load_time(act_blocks.saturating_mul(bt));
             let cpu_base = if cpu_kv > 0 {
                 self.cost.cpu_attend_secs_per_block() * cpu_kv as f64
             } else {
@@ -463,13 +479,12 @@ impl StepEngine for AnalyticEngine {
             let entries = self.feedback_entries(self.pass_chunks(n));
             let end = self.schedule_pass(gpu_base, cache_base, cpu_base, n, &entries);
             for &id in &runnable {
-                {
-                    let st = self.states.get_mut(&id).unwrap();
-                    st.generated += 1;
+                if let Some(st) = self.states.get_mut(&id) {
+                    st.generated = st.generated.saturating_add(1);
                     st.token_times.push(end);
                 }
                 self.alloc_token_slot(id)?;
-                let st = self.states.get_mut(&id).unwrap();
+                let Some(st) = self.states.get_mut(&id) else { continue };
                 if st.generated >= st.max_new {
                     st.done = true;
                 }
@@ -484,7 +499,7 @@ impl StepEngine for AnalyticEngine {
                 st.reported = true;
                 fresh.push(Completion {
                     id,
-                    tokens: vec![0; st.prompt_len + st.generated],
+                    tokens: vec![0; st.prompt_len.saturating_add(st.generated)],
                     prompt_len: st.prompt_len,
                     ttft: st.token_times.first().copied().unwrap_or(0.0),
                     token_times: st.token_times.clone(),
@@ -536,9 +551,10 @@ impl StepEngine for AnalyticEngine {
 
     fn projected_host_bytes(&self, prompt_len: usize, max_new: usize) -> usize {
         let sizes = self.blocks.sizes();
-        let n = (prompt_len + max_new).div_ceil(sizes.block_tokens);
+        let n = prompt_len.saturating_add(max_new).div_ceil(sizes.block_tokens);
         let (act, kv) = self.ratio.split(n);
-        act * sizes.act_bytes + (kv + 1) * sizes.kv_bytes
+        act.saturating_mul(sizes.act_bytes)
+            .saturating_add(kv.saturating_add(1).saturating_mul(sizes.kv_bytes))
     }
 
     fn victim_info(&self, id: u64) -> Result<VictimInfo> {

@@ -59,6 +59,7 @@ impl Booking {
     /// demotion discount can never return more than the request still
     /// has booked).
     pub fn clamped_to(&self, cap: &Booking) -> Booking {
+        // lint: allow(reach-panic:panic) a foreign booking is a caller bug; aborting beats corrupting the ledger
         assert_eq!(self.per_device.len(), cap.per_device.len(), "foreign booking");
         Booking {
             per_device: self
@@ -73,10 +74,12 @@ impl Booking {
     /// Subtract `other` from this booking (panics on underflow — the
     /// caller must clamp first).
     pub fn shrink(&mut self, other: &Booking) {
+        // lint: allow(reach-panic:panic) a foreign booking is a caller bug; aborting beats corrupting the ledger
         assert_eq!(self.per_device.len(), other.per_device.len(), "foreign booking");
         for (b, &o) in self.per_device.iter_mut().zip(&other.per_device) {
             *b = b
                 .checked_sub(o)
+                // lint: allow(reach-panic:unwrap) documented contract: the caller clamps first; an underflow is corrupt accounting
                 .expect("booking shrink exceeds booked amount");
         }
     }
@@ -110,6 +113,7 @@ impl ShardLedger {
     /// rounding here would spuriously reject a pool-filling request on a
     /// capacity not divisible by the shard count.
     pub fn new(total_capacity: usize, shards: usize) -> Self {
+        // lint: allow(reach-panic:panic) construction-time invariant: a shardless ledger is a config bug, caught before serving
         assert!(shards >= 1, "need at least one shard");
         Self::with_stripes(total_capacity, vec![1; shards], shards, vec![0; shards])
     }
@@ -129,21 +133,24 @@ impl ShardLedger {
     /// streaming plan with a tiny pool); the scheduler surfaces that as a
     /// clean admission error rather than waiting forever.
     pub fn for_plan(plan: &crate::plan::ExecutionPlan, total_capacity: usize) -> Self {
-        let extra = plan.inflight_chunks() - 1;
+        let extra = plan.inflight_chunks().saturating_sub(1);
         let mut nums = Vec::with_capacity(plan.device_count());
         let mut overheads = Vec::with_capacity(plan.device_count());
         for b in plan.memory().devices() {
+            // lint: allow(reach-panic:index) MemoryPlan emits one budget per plan stage; b.stage is always in range
             let s = &plan.stages[b.stage];
             nums.push(s.layer_count());
             // This device's streamed bytes of ONE layer — the staging
             // unit a duplicated stream pins on it.
-            let layer_stream = ((s.weight_bytes as f64
-                / s.layer_count() as f64
-                / plan.tp as f64)
-                * b.stream_frac) as usize;
-            overheads.push(extra * layer_stream);
+            let layer_stream = crate::util::units::f64_bytes(
+                (crate::util::units::bytes_f64(s.weight_bytes)
+                    / s.layer_count() as f64
+                    / plan.tp as f64)
+                    * b.stream_frac,
+            );
+            overheads.push(extra.saturating_mul(layer_stream));
         }
-        Self::with_stripes(total_capacity, nums, plan.num_layers * plan.tp, overheads)
+        Self::with_stripes(total_capacity, nums, plan.num_layers.saturating_mul(plan.tp), overheads)
     }
 
     fn with_stripes(
@@ -152,8 +159,11 @@ impl ShardLedger {
         den: usize,
         overheads: Vec<usize>,
     ) -> Self {
+        // lint: allow(reach-panic:panic) construction-time invariant: degenerate stripes are a config bug, caught before serving
         assert!(!nums.is_empty(), "need at least one device");
+        // lint: allow(reach-panic:panic) construction-time invariant: degenerate stripes are a config bug, caught before serving
         assert!(den >= 1 && nums.iter().all(|&n| n >= 1), "degenerate stripe");
+        // lint: allow(reach-panic:panic) construction-time invariant: degenerate stripes are a config bug, caught before serving
         assert_eq!(nums.len(), overheads.len());
         let mut l = Self {
             caps: Vec::new(),
@@ -181,7 +191,9 @@ impl ShardLedger {
     /// striped block occupies its full stripe on every device of its
     /// stage).
     pub fn stripe_on(&self, d: usize, total: usize) -> usize {
-        (total * self.nums[d]).div_ceil(self.den)
+        total
+            .saturating_mul(self.nums.get(d).copied().unwrap_or(0))
+            .div_ceil(self.den)
     }
 
     /// Binding (largest) per-device slice of a `total`-byte reservation —
@@ -208,7 +220,14 @@ impl ShardLedger {
     /// on top of each device's schedule staging carve-out?
     pub fn fits(&self, total: usize) -> bool {
         (0..self.shards()).all(|d| {
-            self.reserved[d] + self.stripe_on(d, total) + self.overheads[d] <= self.caps[d]
+            let want = self
+                .reserved
+                .get(d)
+                .copied()
+                .unwrap_or(0)
+                .saturating_add(self.stripe_on(d, total))
+                .saturating_add(self.overheads.get(d).copied().unwrap_or(0));
+            want <= self.caps.get(d).copied().unwrap_or(0)
         })
     }
 
@@ -219,7 +238,7 @@ impl ShardLedger {
         let per_device: Vec<usize> =
             (0..self.shards()).map(|d| self.stripe_on(d, total)).collect();
         for (r, &b) in self.reserved.iter_mut().zip(&per_device) {
-            *r += b;
+            *r = r.saturating_add(b);
         }
         Booking { per_device }
     }
@@ -227,10 +246,12 @@ impl ShardLedger {
     /// Release a previously booked receipt (possibly shrunk by demotion
     /// discounts) on every device.
     pub fn release(&mut self, booking: &Booking) {
+        // lint: allow(reach-panic:panic) a foreign booking is a caller bug; aborting beats corrupting the ledger
         assert_eq!(booking.per_device.len(), self.shards(), "foreign booking");
         for (r, &b) in self.reserved.iter_mut().zip(&booking.per_device) {
             *r = r
                 .checked_sub(b)
+                // lint: allow(reach-panic:unwrap) a failed release means the ledger is corrupt; abort loudly over serving on bad accounting
                 .expect("ledger release exceeds reservation");
         }
     }
@@ -241,7 +262,7 @@ impl ShardLedger {
     pub fn discount(&self, total: usize) -> Booking {
         Booking {
             per_device: (0..self.shards())
-                .map(|d| (total * self.nums[d]) / self.den)
+                .map(|d| total.saturating_mul(self.nums.get(d).copied().unwrap_or(0)) / self.den)
                 .collect(),
         }
     }
@@ -255,8 +276,15 @@ impl ShardLedger {
         let mut best = 0usize;
         let mut best_deficit = isize::MIN;
         for d in 0..self.shards() {
-            let want = self.reserved[d] + self.stripe_on(d, need) + self.overheads[d];
-            let deficit = want as isize - self.caps[d] as isize;
+            let want = self
+                .reserved
+                .get(d)
+                .copied()
+                .unwrap_or(0)
+                .saturating_add(self.stripe_on(d, need))
+                .saturating_add(self.overheads.get(d).copied().unwrap_or(0));
+            let deficit =
+                (want as isize).saturating_sub(self.caps.get(d).copied().unwrap_or(0) as isize);
             if deficit > best_deficit {
                 best_deficit = deficit;
                 best = d;

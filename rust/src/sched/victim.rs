@@ -110,7 +110,7 @@ impl Default for StagePressure {
 
 /// Host bytes a full KV→ACT demotion of `v` frees.
 pub fn bytes_freed(v: &VictimInfo, sizes: BlockSizes) -> usize {
-    v.kv_blocks * (sizes.kv_bytes - sizes.act_bytes)
+    v.kv_blocks.saturating_mul(sizes.kv_bytes.saturating_sub(sizes.act_bytes))
 }
 
 /// Added per-layer pipeline seconds per remaining decode step if `v` is
@@ -182,7 +182,7 @@ pub fn demotion_score_pressed(
         return f64::NEG_INFINITY;
     }
     let freed = bytes_freed(v, sizes) as f64;
-    let penalty = demotion_step_penalty_pressed(v, cost, pressure) * v.remaining_tokens as f64;
+    let penalty = demotion_step_penalty_pressed(v, cost, pressure) * tokens_f64(v.remaining_tokens);
     freed / (1e-9 + penalty)
 }
 

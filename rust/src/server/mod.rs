@@ -175,7 +175,7 @@ fn connection_loop(stream: TcpStream, tx: Sender<Pending>, id_base: u64) -> Resu
 
 /// Protocol ceiling on `max_new`. The authoritative clamp is the
 /// engine's `validate` (exact model context and host-cache capacity,
-/// answered per request through [`enqueue`]'s structured error), but that
+/// answered per request through [`handle`]'s structured error), but that
 /// check runs `prompt.len() + max_new` arithmetic — a hostile
 /// `{"max_new": 18446744073709551615}` would wrap it in release builds
 /// and sail through to book a bogus admission reservation. No model
@@ -217,9 +217,11 @@ fn parse_request(line: &str, internal_id: u64) -> Result<(Request, i64)> {
     Ok((Request::new(internal_id, prompt, max_new), client_id))
 }
 
-/// Route a newly arrived request into the scheduler, or answer with an
-/// error line immediately when submission is rejected.
-fn enqueue(
+/// Handle one newly arrived request: route it into the scheduler, or
+/// answer with an error line immediately when submission is rejected.
+/// This is the per-request serving entrypoint the reach-panic lint
+/// roots its call-graph traversal at.
+fn handle(
     sched: &mut Scheduler<Engine>,
     waiters: &mut HashMap<u64, (i64, Sender<String>)>,
     p: Pending,
@@ -250,14 +252,14 @@ fn serve_loop(engine: Engine, rx: Receiver<Pending>, stop: Arc<AtomicBool>) {
         // Idle: block briefly for the next request instead of spinning.
         if sched.is_idle() {
             match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(p) => enqueue(&mut sched, &mut waiters, p),
+                Ok(p) => handle(&mut sched, &mut waiters, p),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(_) => break,
             }
         }
         // Drain everything that arrived while the last step ran.
         while let Ok(p) = rx.try_recv() {
-            enqueue(&mut sched, &mut waiters, p);
+            handle(&mut sched, &mut waiters, p);
         }
 
         match sched.tick() {
@@ -279,7 +281,13 @@ fn serve_loop(engine: Engine, rx: Receiver<Pending>, stop: Arc<AtomicBool>) {
                 // A scheduler/engine failure is fatal for every request in
                 // flight: answer them all and stop serving.
                 log::error!("scheduler error: {e:#}");
-                for (_, (client_id, resp)) in waiters.drain() {
+                // Drain in internal-id order: HashMap iteration order is
+                // hash-seeded, and the abort fan-out should hit the wire
+                // (and any capture of it) identically run to run.
+                // lint: allow(nondet-taint) drained order is normalized by the sort below
+                let mut aborted: Vec<_> = waiters.drain().collect();
+                aborted.sort_unstable_by_key(|&(id, _)| id);
+                for (_, (client_id, resp)) in aborted {
                     let msg = Json::obj(vec![
                         ("id", Json::num(client_id as f64)),
                         ("error", Json::str(&format!("{e:#}"))),

@@ -79,8 +79,10 @@ impl SimCost {
     /// of its weight shard over ITS OWN host link (0 when the slice is
     /// fully resident on that device).
     pub fn device_weight_stream_time(&self, d: usize) -> f64 {
-        let bytes =
-            (self.shard_layer_weight_bytes() as f64 * self.device_stream_frac(d)) as usize;
+        let bytes = crate::util::units::frac_of_bytes(
+            self.device_stream_frac(d),
+            self.shard_layer_weight_bytes(),
+        );
         if bytes == 0 {
             0.0
         } else {
@@ -218,7 +220,8 @@ impl SimCost {
         let attn = attn_flops / gpu.effective_attn_flops();
         // Device-memory term: each weight-slice matrix read once per
         // mini-batch.
-        let wread = self.model.layer_weight_bytes() as f64 / self.tp_f() / gpu.mem_bw;
+        let wread =
+            crate::util::units::bytes_f64(self.model.layer_weight_bytes()) / self.tp_f() / gpu.mem_bw;
         gemm + attn + wread + 10e-6
     }
 

@@ -342,7 +342,9 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     let gpu_act_frac = if total_act_blocks == 0 {
         0.0
     } else {
-        (cost.gpu_act_block_capacity() as f64 / total_act_blocks as f64).min(1.0)
+        (crate::util::units::blocks_f64(cost.gpu_act_block_capacity())
+            / crate::util::units::blocks_f64(total_act_blocks))
+        .min(1.0)
     };
 
     let mut tl = Timeline::for_plan(plan);
@@ -421,9 +423,11 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     let stream_weights =
         |tl: &mut Timeline, ic: &mut Interconnect, stage: usize, w_end: &mut [f64]| {
             for d in plan.stage_devices(stage) {
-                let wbytes = (cost.shard_layer_weight_bytes() as f64
-                    * cost.device_stream_frac(d)
-                    * weight_scale[d]) as usize;
+                let wbytes = crate::util::units::f64_bytes(
+                    crate::util::units::bytes_f64(cost.shard_layer_weight_bytes())
+                        * cost.device_stream_frac(d)
+                        * weight_scale[d],
+                );
                 let t_w = ic.transfer_time_via(
                     &topo.slot(d).link,
                     Dir::HostToDevice,
@@ -774,8 +778,9 @@ pub fn simulate(model: &ModelConfig, sys: &SystemConfig, system: System, wl: Wor
     let total_tokens = (wl.prompt + wl.gen) * wl.batch;
     let gen_tokens = wl.gen * wl.batch;
     SimResult {
-        throughput: total_tokens as f64 / makespan,
-        gen_throughput: gen_tokens as f64 / (makespan - prefill_secs).max(1e-9),
+        throughput: crate::util::units::tokens_f64(total_tokens) / makespan,
+        gen_throughput: crate::util::units::tokens_f64(gen_tokens)
+            / (makespan - prefill_secs).max(1e-9),
         makespan,
         prefill_secs,
         gpu_utilization: gpu_util_gen,

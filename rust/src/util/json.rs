@@ -251,14 +251,14 @@ impl<'a> Parser<'a> {
     fn bump(&mut self) -> Option<u8> {
         let b = self.peek();
         if b.is_some() {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
         }
         b
     }
 
     fn skip_ws(&mut self) {
         while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
         }
     }
 
@@ -286,8 +286,9 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
-        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
-            self.pos += word.len();
+        let rest = self.bytes.get(self.pos..).unwrap_or_default();
+        if rest.starts_with(word.as_bytes()) {
+            self.pos = self.pos.saturating_add(word.len());
             Ok(v)
         } else {
             Err(self.err(&format!("expected '{word}'")))
@@ -297,27 +298,27 @@ impl<'a> Parser<'a> {
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
         }
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
         }
         if self.peek() == Some(b'.') {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
+                self.pos = self.pos.saturating_add(1);
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
             if matches!(self.peek(), Some(b'+' | b'-')) {
-                self.pos += 1;
+                self.pos = self.pos.saturating_add(1);
             }
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
+                self.pos = self.pos.saturating_add(1);
             }
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+        let s = std::str::from_utf8(self.bytes.get(start..self.pos).unwrap_or_default())
             .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>()
             .map(Json::Num)
@@ -344,7 +345,7 @@ impl<'a> Parser<'a> {
                         let mut code = 0u32;
                         for _ in 0..4 {
                             let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
-                            code = code * 16
+                            code = (code << 4)
                                 + (c as char)
                                     .to_digit(16)
                                     .ok_or_else(|| self.err("bad hex in \\u"))?;
@@ -357,11 +358,15 @@ impl<'a> Parser<'a> {
                             let mut low = 0u32;
                             for _ in 0..4 {
                                 let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
-                                low = low * 16
+                                low = (low << 4)
                                     + (c as char)
                                         .to_digit(16)
                                         .ok_or_else(|| self.err("bad hex in \\u"))?;
                             }
+                            if !(0xDC00..0xE000).contains(&low) {
+                                return Err(self.err("bad low surrogate"));
+                            }
+                            // lint: allow(reach-panic:arith) both surrogates range-checked above; the maximum is 0x10FFFF
                             0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00)
                         } else {
                             code
@@ -384,11 +389,11 @@ impl<'a> Parser<'a> {
                     } else {
                         return Err(self.err("bad utf8"));
                     };
-                    let start = self.pos - 1;
+                    let start = self.pos.saturating_sub(1);
                     for _ in 1..len {
                         self.bump().ok_or_else(|| self.err("truncated utf8"))?;
                     }
-                    let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                    let s = std::str::from_utf8(self.bytes.get(start..self.pos).unwrap_or_default())
                         .map_err(|_| self.err("bad utf8"))?;
                     out.push_str(s);
                 }
@@ -399,7 +404,7 @@ impl<'a> Parser<'a> {
     fn array(&mut self) -> Result<Json, JsonError> {
         self.enter()?;
         let r = self.array_inner();
-        self.depth -= 1;
+        self.depth = self.depth.saturating_sub(1);
         r
     }
 
@@ -408,7 +413,7 @@ impl<'a> Parser<'a> {
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
             return Ok(Json::Arr(items));
         }
         loop {
@@ -428,7 +433,7 @@ impl<'a> Parser<'a> {
     fn object(&mut self) -> Result<Json, JsonError> {
         self.enter()?;
         let r = self.object_inner();
-        self.depth -= 1;
+        self.depth = self.depth.saturating_sub(1);
         r
     }
 
@@ -437,7 +442,7 @@ impl<'a> Parser<'a> {
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
-            self.pos += 1;
+            self.pos = self.pos.saturating_add(1);
             return Ok(Json::Obj(map));
         }
         loop {

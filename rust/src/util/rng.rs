@@ -53,7 +53,9 @@ impl Rng {
 
     /// Uniform integer in [lo, hi) — `hi > lo`.
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        // lint: allow(reach-panic:panic) an empty range is a caller bug in a seeded utility; abort loudly
         assert!(hi > lo, "empty range");
+        // lint: allow(reach-panic:arith) hi > lo asserted above, so lo + (r % (hi - lo)) < hi cannot overflow
         lo + (self.next_u64() % (hi - lo) as u64) as usize
     }
 

@@ -49,8 +49,10 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
+        // lint: allow(reach-panic:index) rank is clamped to [0, len - 1]; floor/ceil stay in range
         v[lo]
     } else {
+        // lint: allow(reach-panic:index) rank is clamped to [0, len - 1]; floor/ceil stay in range
         v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
     }
 }

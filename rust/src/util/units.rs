@@ -40,6 +40,12 @@ pub fn frac_of_bytes(frac: f64, n_bytes: usize) -> usize {
     (n_bytes as f64 * frac) as usize
 }
 
+/// f64 byte arithmetic back into a whole-byte count (truncating).
+#[inline]
+pub fn f64_bytes(n_bytes: f64) -> usize {
+    n_bytes as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -52,5 +58,6 @@ mod tests {
         assert_eq!(secs_f64(3).to_bits(), 3.0f64.to_bits());
         assert_eq!(frac_of_bytes(0.5, 1024), 512);
         assert_eq!(frac_of_bytes(0.0, 1024), 0);
+        assert_eq!(f64_bytes(1536.9), 1536);
     }
 }

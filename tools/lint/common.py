@@ -21,7 +21,7 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
 # `// lint: allow(pass)` or `// lint: allow(pass:rule)` followed by a
 # mandatory free-text reason. The annotation suppresses matching findings
 # on its own line and on the line immediately below it.
-ALLOW_RE = re.compile(r"//\s*lint:\s*allow\((?P<pass>[a-z]+)(?::(?P<rule>[a-z-]+))?\)\s*(?P<reason>\S.*)?$")
+ALLOW_RE = re.compile(r"//\s*lint:\s*allow\((?P<pass>[a-z][a-z-]*)(?::(?P<rule>[a-z-]+))?\)\s*(?P<reason>\S.*)?$")
 
 _LINE_COMMENT_RE = re.compile(r"//.*$")
 _CHAR_LIT_RE = re.compile(r"'(\\.|[^'\\])'")

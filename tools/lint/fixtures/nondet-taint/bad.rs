@@ -1,0 +1,49 @@
+//! Known-bad fixture for the nondet-taint pass: one violation per rule.
+//! `SimResult` literals mark the sinks; HashMap iteration order and the
+//! wall clock are the nondeterminism sources.
+
+use std::collections::HashMap;
+
+pub struct SimResult {
+    pub throughput: f64,
+    pub makespan: f64,
+}
+
+pub struct Tracker {
+    counts: HashMap<u64, usize>,
+    total: usize,
+}
+
+impl Tracker {
+    // state-coupling: a sibling method iterates the HashMap field and
+    // folds the order-dependent walk into state that report() exports.
+    pub fn tick(&mut self) {
+        for (_, v) in self.counts.iter() {
+            self.total += v;
+        }
+    }
+
+    pub fn report(&self) -> SimResult {
+        SimResult {
+            throughput: self.total as f64,
+            makespan: 0.0,
+        }
+    }
+}
+
+// tainted-call: wall-clock value flowing into a sink via a callee.
+fn jitter() -> f64 {
+    std::time::Instant::now().elapsed().as_secs_f64()
+}
+
+// source-in-sink: the sink fn itself iterates a HashMap param.
+pub fn build(counts: &HashMap<u64, usize>) -> SimResult {
+    let mut total = 0usize;
+    for (_, v) in counts.iter() {
+        total += v;
+    }
+    SimResult {
+        throughput: total as f64,
+        makespan: jitter(),
+    }
+}

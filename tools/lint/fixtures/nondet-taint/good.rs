@@ -1,0 +1,36 @@
+//! Known-good fixture for the nondet-taint pass: ordered iteration
+//! (BTreeMap) feeds the result, a HashMap field exists but is never
+//! iterated (declared-but-unwalked maps are clean), and the helper on
+//! the sink path is pure.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub struct SimResult {
+    pub throughput: f64,
+    pub makespan: f64,
+}
+
+pub struct Tracker {
+    counts: BTreeMap<u64, usize>,
+    scratch: HashMap<u64, usize>,
+    total: usize,
+}
+
+impl Tracker {
+    pub fn tick(&mut self) {
+        for (_, v) in self.counts.iter() {
+            self.total += v;
+        }
+    }
+
+    pub fn report(&self) -> SimResult {
+        SimResult {
+            throughput: self.total as f64,
+            makespan: offset(),
+        }
+    }
+}
+
+fn offset() -> f64 {
+    0.0
+}

@@ -1,0 +1,30 @@
+//! Known-bad fixture for the reach-panic pass. In `--files` mode the
+//! pass roots its traversal at fns named `entry*`; every helper below
+//! carries exactly one rule violation reachable from the entrypoint.
+
+pub fn entry_serve(xs: &[u64], n: usize) -> u64 {
+    let a = unwrap_helper(xs);
+    let b = panic_helper(n);
+    let c = index_helper(xs);
+    let d = arith_helper(n);
+    a.max(b).max(c).max(d)
+}
+
+fn unwrap_helper(xs: &[u64]) -> u64 {
+    xs.first().copied().unwrap()
+}
+
+fn panic_helper(n: usize) -> u64 {
+    if n == 0 {
+        panic!("no work");
+    }
+    n as u64
+}
+
+fn index_helper(xs: &[u64]) -> u64 {
+    xs[0]
+}
+
+fn arith_helper(n: usize) -> u64 {
+    (n + 1) as u64
+}

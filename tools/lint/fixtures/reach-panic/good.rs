@@ -1,0 +1,29 @@
+//! Known-good fixture for the reach-panic pass: every helper on the
+//! entry path propagates errors or uses checked arithmetic, and the one
+//! panicky fn is unreachable from any `entry*` root — the call-graph
+//! scope must leave it alone.
+
+pub fn entry_serve(xs: &[u64], n: usize) -> u64 {
+    let a = first_or_zero(xs);
+    let b = bump(n);
+    let c = head(xs);
+    a.max(b).max(c)
+}
+
+fn first_or_zero(xs: &[u64]) -> u64 {
+    xs.first().copied().unwrap_or(0)
+}
+
+fn bump(n: usize) -> u64 {
+    n.saturating_add(1) as u64
+}
+
+fn head(xs: &[u64]) -> u64 {
+    xs.first().copied().unwrap_or_default()
+}
+
+/// Unreachable from any entrypoint: reach-panic must stay silent here
+/// even though the body indexes and adds unchecked.
+pub fn offline_report(xs: &[u64]) -> u64 {
+    xs[0] + xs[1]
+}

@@ -1,0 +1,24 @@
+//! Known-bad fixture for the unit-flow pass: one violation per rule.
+//! Units travel in names (`_bytes/_blocks/...`); every hand-off below
+//! promises one dimension and delivers another.
+
+pub struct Pool {
+    cap_bytes: usize,
+}
+
+fn consume(n_bytes: usize) -> usize {
+    n_bytes
+}
+
+fn width_bytes(w_blocks: usize) -> usize {
+    w_blocks
+}
+
+pub fn demo(free_bytes: usize, kv_blocks: usize) -> Pool {
+    let total_blocks = free_bytes;
+    let used = consume(kv_blocks);
+    let _ = width_bytes(used).min(total_blocks);
+    Pool {
+        cap_bytes: kv_blocks,
+    }
+}

@@ -1,0 +1,25 @@
+//! Known-good fixture for the unit-flow pass: units line up at every
+//! hand-off, and a `*` between operands legitimately changes dimension
+//! (the product has unknown unit, which never flags).
+
+pub struct Pool {
+    cap_bytes: usize,
+}
+
+fn consume(n_bytes: usize) -> usize {
+    n_bytes
+}
+
+fn width_bytes(w_bytes: usize) -> usize {
+    w_bytes
+}
+
+pub fn demo(free_bytes: usize, kv_blocks: usize, sizes_bytes: usize) -> Pool {
+    let total_bytes = free_bytes;
+    let used = consume(free_bytes);
+    let blocks_as_bytes = kv_blocks * sizes_bytes;
+    let _ = width_bytes(total_bytes).min(used).min(blocks_as_bytes);
+    Pool {
+        cap_bytes: total_bytes,
+    }
+}

@@ -1,0 +1,741 @@
+"""pallas-flow: symbol table + module-resolved call graph over the
+`common.RustFile` stripped view.
+
+pallas-lint's PR-8 passes are purely lexical: each looks at one line (or
+one file) at a time, so scope is a hand-maintained module list and
+anything *called from* the serving path is invisible. This module builds
+the missing interprocedural substrate, still stdlib-only and still on
+the same heuristic lexical model:
+
+  - a **symbol table** per file: `fn` items with parsed signatures
+    (params, return type), `struct` fields, `trait` declarations,
+    `impl`/`impl Trait for` blocks (method -> owning type), and `use`
+    aliases (so `Scheduler` resolves to `sched::Scheduler`);
+  - a **call graph**: every call site in a function body resolved to the
+    repo functions it can invoke, with a documented best-effort fallback
+    for trait dispatch (below);
+  - **reachability** and **taint closure** helpers the three flow passes
+    (`reach-panic`, `unit-flow`, `nondet-taint`) are built on.
+
+## Resolution model (best-effort, over-approximating)
+
+Calls are resolved in decreasing order of confidence:
+
+ 1. `path::to::item(..)` — expanded through the file's `use` aliases and
+    `mod` declarations, then matched against the symbol table
+    (`Type::method` and `module::fn` forms). Names imported from std /
+    vendored crates resolve to *external* (no edge, no fallback).
+ 2. `self.method(..)` — methods of the enclosing `impl` type, across
+    all of that type's impl blocks.
+ 3. `self.field.method(..)` / `ident.method(..)` — the receiver's type
+    is inferred from struct fields, fn params, and `let` bindings
+    (explicit `: Type` annotations and `Type::constructor(..)` RHS).
+ 4. **Trait-dispatch fallback**: a receiver typed as a generic with a
+    trait bound (`E: StepEngine`) or as `dyn Trait` / `impl Trait`
+    resolves the method against EVERY `impl Trait for T` in the repo,
+    plus the trait's own default-bodied method. This over-approximates
+    dynamic dispatch soundly: the analysis may traverse impls that are
+    never instantiated together, but it cannot miss one that is.
+ 5. **Name fallback**: a method on an unresolvable receiver (chained
+    temporaries, closures, std containers of repo types) resolves to
+    every repo method of that name — EXCEPT names in `STD_METHODS`,
+    the ubiquitous std/iterator vocabulary (`iter`, `push`, `get`, ...)
+    that would otherwise wire every file to every other. This is the
+    one deliberate under-approximation: a repo method that shadows a
+    std name on an untyped receiver is missed. Give such receivers a
+    `let x: Type = ..` annotation (or avoid std-colliding names on
+    serving types) to get the edge back.
+
+The model errs toward flagging (extra edges mean extra scanned
+functions, never missed ones) with two pressure valves shared with the
+rest of the suite: `// lint: allow(...)` annotations and the baseline.
+"""
+
+import os
+import re
+from bisect import bisect_right
+
+from common import RustFile, REPO_ROOT, rel
+
+RUST_SRC = os.path.join(REPO_ROOT, "rust", "src")
+
+# Keywords that look like calls lexically but are not.
+_NOT_CALLS = {
+    "if", "for", "while", "loop", "match", "return", "fn", "let", "else",
+    "move", "in", "as", "where", "impl", "dyn", "pub", "use", "mod",
+    "struct", "enum", "trait", "const", "static", "type", "unsafe", "ref",
+    "break", "continue", "crate", "super", "self", "Self", "mut", "box",
+    "assert", "assert_eq", "assert_ne", "debug_assert", "debug_assert_eq",
+    "debug_assert_ne", "panic", "unreachable", "todo", "unimplemented",
+    "vec", "format", "write", "writeln", "print", "println", "eprintln",
+    "matches", "ensure", "bail", "anyhow", "log",
+}
+
+# Ubiquitous std / iterator / collection vocabulary: NOT eligible for the
+# name fallback (rule 5 in the module docs). A method with one of these
+# names still resolves normally when its receiver's type is known.
+STD_METHODS = {
+    "iter", "iter_mut", "into_iter", "drain", "keys", "values", "values_mut",
+    "len", "is_empty", "push", "pop", "insert", "remove", "get", "get_mut",
+    "first", "last", "contains", "contains_key", "entry", "retain", "clear",
+    "extend", "append", "truncate", "resize", "split_off", "windows",
+    "chunks", "map", "filter", "filter_map", "flat_map", "fold", "sum",
+    "product", "min", "max", "min_by", "max_by", "min_by_key", "max_by_key",
+    "sort", "sort_by", "sort_by_key", "sort_unstable", "sort_unstable_by",
+    "rev", "zip", "chain", "enumerate", "take", "skip", "any", "all",
+    "find", "position", "count", "collect", "cloned", "copied", "clone",
+    "to_vec", "to_string", "to_owned", "as_str", "as_slice", "as_bytes",
+    "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "expect",
+    "ok", "err", "ok_or", "ok_or_else", "and_then", "or_else", "map_err",
+    "is_some", "is_none", "is_ok", "is_err", "unwrap_err",
+    "abs", "sqrt", "powi", "powf", "exp", "ln", "log2", "floor", "ceil",
+    "round", "min_element", "max_element", "clamp", "signum", "to_bits",
+    "is_finite", "is_nan", "is_infinite",
+    "saturating_add", "saturating_sub", "saturating_mul", "checked_add",
+    "checked_sub", "checked_mul", "checked_div", "wrapping_add",
+    "wrapping_sub", "wrapping_mul", "div_ceil", "pow", "total_cmp",
+    "partial_cmp", "cmp", "eq", "ne", "lt", "gt", "le", "ge", "then",
+    "send", "recv", "try_recv", "recv_timeout", "join", "spawn", "lock",
+    "store", "load", "swap", "fetch_add", "flush", "write_all", "read_line",
+    "lines", "trim", "split", "starts_with", "ends_with", "replace",
+    "parse", "chars", "bytes", "repeat", "join_paths", "display",
+    "front", "back", "push_back", "push_front", "pop_front", "pop_back",
+    "partition_point", "binary_search", "fill", "swap_remove", "dedup",
+    "next", "peek", "nth", "step_by", "take_while", "skip_while",
+    "splitn", "rsplit", "find_map", "reduce", "scan", "flatten", "inspect",
+    "or", "and", "xor", "not", "default", "from", "into", "try_from",
+    "try_into", "as_ref", "as_mut", "borrow", "borrow_mut", "deref",
+    "with_capacity", "new",
+}
+
+_USE_RE = re.compile(r"^\s*(?:pub\s+)?use\s+(.*?);\s*$")
+_MOD_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?mod\s+(\w+)\s*;")
+_IMPL_RE = re.compile(
+    r"^\s*impl\s*(?:<(?P<gens>[^>]*)>)?\s*(?:(?P<trait>[\w:]+)\s*(?:<[^>]*>)?\s+for\s+)?(?P<type>[\w:]+)"
+)
+_TRAIT_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?trait\s+(\w+)")
+_STRUCT_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?struct\s+(\w+)")
+_FN_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?(?:const\s+)?(?:async\s+)?(?:unsafe\s+)?fn\s+(\w+)")
+_FIELD_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?(\w+)\s*:\s*(.+?),?\s*$")
+_LET_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*(?::\s*([^=;]+?))?\s*=\s*")
+
+
+def _split_top(text, sep=","):
+    """Split `text` on `sep` at bracket depth 0 ((), [], <>, {})."""
+    out, depth, angle, buf = [], 0, 0, []
+    i = 0
+    while i < len(text):
+        ch = text[i]
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "<" and depth >= 0:
+            # `<` is generic-open unless it follows a space-padded
+            # operator position; signatures never contain comparisons.
+            angle += 1
+        elif ch == ">" and angle > 0:
+            if i > 0 and text[i - 1] == "-":
+                pass  # `->` arrow, not a generic close
+            else:
+                angle -= 1
+        if ch == sep and depth == 0 and angle == 0:
+            out.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+        i += 1
+    out.append("".join(buf))
+    return [s.strip() for s in out if s.strip()]
+
+
+def base_type(type_text):
+    """`&mut Scheduler<E>` -> `Scheduler`; `Option<Vec<u64>>` -> `Option`;
+    `[f64; 4]`/`&[usize]` -> None (no nominal base)."""
+    t = (type_text or "").strip()
+    t = re.sub(r"^(?:&\s*)?(?:'\w+\s+)?(?:mut\s+)?", "", t).strip()
+    t = re.sub(r"^(?:dyn|impl)\s+", "", t).strip()
+    m = re.match(r"([\w:]+)", t)
+    if not m:
+        return None
+    return m.group(1).split("::")[-1]
+
+
+class FnInfo:
+    """One `fn` item: identity, signature, span, and (later) call sites."""
+
+    def __init__(self, name, module, self_type, trait_name, params, ret,
+                 path, lo, hi, generics):
+        self.name = name
+        self.module = module            # e.g. "sched" or "fleet::router"
+        self.self_type = self_type      # impl type name or None (free fn)
+        self.trait_name = trait_name    # trait being implemented, or the
+        #                                 trait itself for default methods
+        self.params = params            # [(name, type_text)]
+        self.ret = ret                  # return type text or None
+        self.path = path                # absolute file path
+        self.lo = lo                    # 1-based inclusive span
+        self.hi = hi
+        self.generics = generics        # {generic_name: [trait bounds]}
+        self.calls = []                 # [CallSite], filled by link()
+
+    @property
+    def qual(self):
+        owner = f"{self.self_type}::" if self.self_type else ""
+        prefix = f"{self.module}::" if self.module else ""
+        return f"{prefix}{owner}{self.name}"
+
+    def __repr__(self):
+        return f"<fn {self.qual} {rel(self.path)}:{self.lo}-{self.hi}>"
+
+
+class CallSite:
+    """One resolved call: where it is and which FnInfos it may invoke."""
+
+    def __init__(self, line, callee_text, targets, args, via):
+        self.line = line                # 1-based line of the call
+        self.callee_text = callee_text  # as written, e.g. "self.eng.step"
+        self.targets = targets          # [FnInfo] (possibly empty)
+        self.args = args                # [arg expression text]
+        self.via = via                  # "path"|"self"|"typed"|"trait"|"name"|"external"
+
+
+class StructInfo:
+    def __init__(self, name, module, fields, path, line):
+        self.name = name
+        self.module = module
+        self.fields = fields            # [(name, type_text)]
+        self.path = path
+        self.line = line
+
+
+class Crate:
+    """The whole-repo symbol table + call graph. Build with
+    `Crate.load()` (cached per file set)."""
+
+    def __init__(self, files):
+        self.files = {}                 # abs path -> RustFile
+        self.modules = {}               # abs path -> module path str
+        self.fns = {}                   # qual -> FnInfo (first wins)
+        self.fns_by_name = {}           # bare name -> [FnInfo]
+        self.methods = {}               # (type, method) -> [FnInfo]
+        self.type_methods = {}          # type -> {method: [FnInfo]}
+        self.structs = {}               # name -> StructInfo (first wins)
+        self.traits = {}                # trait -> {method names}
+        self.trait_impls = {}           # trait -> [type names]
+        self.uses = {}                  # abs path -> {alias: full path str}
+        self._offsets = {}              # per-fn joined-body line maps
+        for p in files:
+            self._index_file(p)
+        self._link_all()
+
+    # -------------------------------------------------------- indexing
+
+    @staticmethod
+    def module_of(path):
+        p = os.path.relpath(os.path.abspath(path), RUST_SRC)
+        parts = p.replace("\\", "/").split("/")
+        if parts[-1].endswith(".rs"):
+            parts[-1] = parts[-1][:-3]
+        if parts[-1] == "mod":
+            parts = parts[:-1]
+        if parts == ["lib"] or parts == ["main"]:
+            return ""
+        if parts and parts[0] == "..":
+            # outside rust/src (fixtures, temp files): module = stem
+            return os.path.splitext(os.path.basename(path))[0]
+        return "::".join(parts)
+
+    def _index_file(self, path):
+        rf = RustFile(path)
+        self.files[path] = rf
+        module = self.module_of(path)
+        self.modules[path] = module
+        uses = {}
+        # `mod child;` makes `child::x` resolvable below this module.
+        for line in rf.code:
+            m = _MOD_RE.match(line)
+            if m:
+                child = m.group(1)
+                uses[child] = f"{module}::{child}" if module else child
+            m = _USE_RE.match(line)
+            if m:
+                self._parse_use(m.group(1), uses)
+        self.uses[path] = uses
+
+        impl_spans = self._impl_spans(rf)   # [(lo, hi, type, trait, gens)]
+        trait_spans = self._trait_spans(rf)
+
+        for name, lo, hi in rf.functions():
+            self_type, trait_name, gens = None, None, {}
+            for s_lo, s_hi, ty, tr, g in impl_spans:
+                if s_lo <= lo and hi <= s_hi:
+                    self_type, trait_name, gens = ty, tr, dict(g)
+            for t_lo, t_hi, tr in trait_spans:
+                if t_lo <= lo and hi <= t_hi:
+                    self_type, trait_name = tr, tr  # default-bodied method
+            sig = self._signature(rf, lo)
+            params, ret, fn_gens = self._parse_signature(sig)
+            gens.update(fn_gens)
+            fi = FnInfo(name, module, self_type, trait_name, params, ret,
+                        path, lo, hi, gens)
+            self.fns.setdefault(fi.qual, fi)
+            self.fns_by_name.setdefault(name, []).append(fi)
+            if self_type:
+                self.methods.setdefault((self_type, name), []).append(fi)
+                self.type_methods.setdefault(self_type, {}).setdefault(name, []).append(fi)
+
+        self._index_structs(rf, module, path)
+        self._index_traits(rf, trait_spans)
+
+    def _parse_use(self, body, uses):
+        body = body.strip()
+        m = re.match(r"^(.*?)::\{(.*)\}$", body)
+        leaves = []
+        if m:
+            prefix = m.group(1)
+            for leaf in _split_top(m.group(2)):
+                leaves.append((prefix, leaf))
+        else:
+            if "::" in body:
+                prefix, leaf = body.rsplit("::", 1)
+            else:
+                prefix, leaf = "", body
+            leaves.append((prefix, leaf))
+        for prefix, leaf in leaves:
+            leaf = leaf.strip()
+            alias = None
+            am = re.match(r"^(.*?)\s+as\s+(\w+)$", leaf)
+            if am:
+                leaf, alias = am.group(1).strip(), am.group(2)
+            if leaf == "*" or not leaf:
+                continue
+            full = f"{prefix}::{leaf}" if prefix else leaf
+            root = full.split("::", 1)[0]
+            if root == "crate":
+                full = full.split("::", 1)[1] if "::" in full else ""
+            elif root in ("std", "core", "alloc", "anyhow", "log", "xla"):
+                full = "<external>"
+            elif root in ("self", "super"):
+                # relative imports: best-effort — keep the tail, the
+                # tail-match resolver handles the rest.
+                full = full.split("::", 1)[1] if "::" in full else ""
+            uses[alias or leaf.split("::")[-1]] = full
+
+    def _impl_spans(self, rf):
+        spans = []
+        n = len(rf.code)
+        for i, line in enumerate(rf.code):
+            m = _IMPL_RE.match(line)
+            if not m:
+                continue
+            gens = {}
+            for part in _split_top(m.group("gens") or ""):
+                bm = re.match(r"(\w+)\s*:\s*(.+)$", part)
+                if bm:
+                    gens[bm.group(1)] = [base_type(b) for b in _split_top(bm.group(2), "+")]
+                elif re.match(r"^\w+$", part):
+                    gens[part] = []
+            ty = base_type(m.group("type"))
+            tr = base_type(m.group("trait")) if m.group("trait") else None
+            depth, opened, j = 0, False, i
+            while j < n:
+                for ch in rf.code[j]:
+                    if ch == "{":
+                        depth += 1
+                        opened = True
+                    elif ch == "}":
+                        depth -= 1
+                if opened and depth <= 0:
+                    break
+                j += 1
+            spans.append((i + 1, j + 1, ty, tr, gens))
+            if tr and ty:
+                self.trait_impls.setdefault(tr, []).append(ty)
+        return spans
+
+    def _trait_spans(self, rf):
+        spans = []
+        n = len(rf.code)
+        for i, line in enumerate(rf.code):
+            m = _TRAIT_RE.match(line)
+            if not m:
+                continue
+            depth, opened, j = 0, False, i
+            while j < n:
+                for ch in rf.code[j]:
+                    if ch == "{":
+                        depth += 1
+                        opened = True
+                    elif ch == "}":
+                        depth -= 1
+                if opened and depth <= 0:
+                    break
+                j += 1
+            spans.append((i + 1, j + 1, m.group(1)))
+        return spans
+
+    def _index_traits(self, rf, trait_spans):
+        for lo, hi, name in trait_spans:
+            sigs = set()
+            for idx in range(lo - 1, hi):
+                fm = _FN_RE.match(rf.code[idx])
+                if fm:
+                    sigs.add(fm.group(1))
+            self.traits.setdefault(name, set()).update(sigs)
+
+    def _index_structs(self, rf, module, path):
+        n = len(rf.code)
+        for i, line in enumerate(rf.code):
+            m = _STRUCT_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1)
+            fields = []
+            if "{" not in line and ";" in line:
+                pass  # unit/tuple struct on one line
+            else:
+                depth = 0
+                for j in range(i, n):
+                    text = rf.code[j]
+                    if depth == 1 and j > i:
+                        fm = _FIELD_RE.match(text)
+                        if fm and not text.lstrip().startswith("#"):
+                            fields.append((fm.group(1), fm.group(2)))
+                    depth += text.count("{") - text.count("}")
+                    if depth <= 0 and j > i and "{" in "".join(rf.code[i:j + 1]):
+                        break
+            self.structs.setdefault(name, StructInfo(name, module, fields, path, i + 1))
+
+    def _signature(self, rf, lo):
+        """Join lines from the `fn` line until its opening `{` or `;`."""
+        buf = []
+        for j in range(lo - 1, min(lo + 11, len(rf.code))):
+            text = rf.code[j]
+            brace = text.find("{")
+            if brace != -1:
+                buf.append(text[:brace])
+                break
+            semi = text.find(";")
+            if semi != -1:
+                buf.append(text[:semi])
+                break
+            buf.append(text)
+        return " ".join(buf)
+
+    def _parse_signature(self, sig):
+        gens = {}
+        gm = re.search(r"fn\s+\w+\s*<([^>]*)>", sig)
+        if gm:
+            for part in _split_top(gm.group(1)):
+                bm = re.match(r"(\w+)\s*:\s*(.+)$", part)
+                if bm:
+                    gens[bm.group(1)] = [base_type(b) for b in _split_top(bm.group(2), "+")]
+        o = sig.find("(")
+        if o == -1:
+            return [], None, gens
+        depth, c = 0, o
+        for c in range(o, len(sig)):
+            if sig[c] == "(":
+                depth += 1
+            elif sig[c] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        params = []
+        for part in _split_top(sig[o + 1:c]):
+            if part in ("&self", "&mut self", "self", "mut self") or part.startswith("self:"):
+                continue
+            pm = re.match(r"(?:mut\s+)?(\w+)\s*:\s*(.+)$", part)
+            if pm:
+                params.append((pm.group(1), pm.group(2).strip()))
+        ret = None
+        rm = re.search(r"->\s*(.+)$", sig[c + 1:])
+        if rm:
+            ret = rm.group(1).strip()
+        return params, ret, gens
+
+    # --------------------------------------------------------- linking
+
+    def body_text(self, fi):
+        """The fn body as one string (stripped view), plus an offset->line
+        mapping for accurate finding attribution."""
+        key = (fi.path, fi.lo, fi.hi)
+        if key in self._offsets:
+            return self._offsets[key]
+        rf = self.files[fi.path]
+        lines = rf.code[fi.lo - 1:fi.hi]
+        text = "\n".join(lines)
+        starts = [0]
+        for ln in lines[:-1]:
+            starts.append(starts[-1] + len(ln) + 1)
+        self._offsets[key] = (text, starts)
+        return self._offsets[key]
+
+    def line_of(self, fi, offset):
+        _, starts = self.body_text(fi)
+        return fi.lo + bisect_right(starts, offset) - 1
+
+    def _local_types(self, fi):
+        """name -> base type for params and `let` bindings of `fi`."""
+        types = {}
+        for pname, ptype in fi.params:
+            types[pname] = base_type(ptype)
+        text, _ = self.body_text(fi)
+        for m in _LET_RE.finditer(text):
+            name, ann = m.group(1), m.group(2)
+            if ann:
+                types[name] = base_type(ann)
+                continue
+            rest = text[m.end():m.end() + 120]
+            cm = re.match(r"([A-Za-z_][\w:]*)\s*(?:::\s*<[^>]*>\s*)?(?:\(|\{)", rest)
+            if cm:
+                seg = cm.group(1)
+                if "::" in seg:
+                    head = seg.rsplit("::", 1)[0]
+                    t = base_type(self._expand(fi, head) or head)
+                else:
+                    t = base_type(seg)
+                if t and (t in self.structs or t in self.type_methods):
+                    types[name] = t
+        return types
+
+    def _expand(self, fi, path_text):
+        """Expand the head of a `::` path through the file's use map."""
+        head = path_text.split("::", 1)[0]
+        tail = path_text.split("::", 1)[1] if "::" in path_text else ""
+        full = self.uses.get(fi.path, {}).get(head)
+        if full == "<external>":
+            return "<external>"
+        if full is not None:
+            return f"{full}::{tail}" if tail else full
+        if head == "crate":
+            return tail
+        if head in ("self", "Self"):
+            return path_text
+        if head in ("std", "core", "alloc", "anyhow", "log", "xla", "u64",
+                    "u32", "usize", "i64", "i32", "f64", "f32", "u8", "str",
+                    "String", "Vec", "HashMap", "HashSet", "VecDeque",
+                    "Option", "Some", "None", "Ok", "Err", "Result", "Box",
+                    "Arc", "Duration", "Ordering", "Instant", "SystemTime"):
+            return "<external>"
+        return path_text
+
+    def _resolve_path_call(self, fi, path_text):
+        """Resolve `a::b::c` (as written) to FnInfos."""
+        full = self._expand(fi, path_text)
+        if full == "<external>":
+            return [], "external"
+        segs = full.split("::")
+        name = segs[-1]
+        # Type::method / Trait::method
+        if len(segs) >= 2:
+            owner = segs[-2]
+            if owner == "Self" and fi.self_type:
+                owner = fi.self_type
+            hits = self.methods.get((owner, name))
+            if hits:
+                return list(hits), "path"
+            if owner in self.trait_impls:
+                out = []
+                for ty in self.trait_impls[owner]:
+                    out.extend(self.methods.get((ty, name), []))
+                out.extend(self.methods.get((owner, name), []))
+                if out:
+                    return out, "trait"
+            # module::fn
+            mod = "::".join(segs[:-1])
+            fqn = f"{mod}::{name}"
+            if fqn in self.fns:
+                return [self.fns[fqn]], "path"
+            # tail match: the expanded prefix may be partial (super::)
+            tails = [f for f in self.fns_by_name.get(name, [])
+                     if f.qual.endswith(fqn) or (f.self_type == owner)]
+            if tails:
+                return tails, "path"
+        else:
+            # bare fn call: same module first, then unique repo-wide
+            fqn = f"{fi.module}::{name}" if fi.module else name
+            if fqn in self.fns and self.fns[fqn].self_type is None:
+                return [self.fns[fqn]], "path"
+            frees = [f for f in self.fns_by_name.get(name, []) if f.self_type is None]
+            if len(frees) == 1:
+                return frees, "path"
+            if frees:
+                return frees, "name"
+        return [], "unresolved"
+
+    def _resolve_method(self, fi, recv_type, method, locals_):
+        """Resolve `recv.method(..)` given the receiver's base type (may be
+        None = unknown, a generic, a trait, or a concrete repo type)."""
+        if recv_type:
+            hits = self.methods.get((recv_type, method))
+            if hits:
+                return list(hits), "typed"
+            # generic with trait bounds -> all impls of those traits
+            bounds = fi.generics.get(recv_type, [])
+            if recv_type in self.traits:
+                bounds = bounds + [recv_type]
+            out = []
+            for tr in bounds:
+                if not tr:
+                    continue
+                for ty in self.trait_impls.get(tr, []):
+                    out.extend(self.methods.get((ty, method), []))
+                out.extend(self.methods.get((tr, method), []))
+            if out:
+                return out, "trait"
+            if recv_type in self.structs or recv_type in self.type_methods:
+                # known repo type without this method: std/derive method
+                return [], "external"
+        if method in STD_METHODS:
+            return [], "external"
+        hits = [f for ms in self.methods for f in self.methods[ms] if ms[1] == method]
+        if hits:
+            return hits, "name"
+        return [], "unresolved"
+
+    def _receiver_type(self, fi, recv_text, locals_):
+        """Best-effort base type of a receiver chain like `self.eng` or
+        `sched` or `self.sessions`."""
+        segs = [s.strip() for s in recv_text.split(".") if s.strip()]
+        if not segs:
+            return None
+        if segs[0] == "self":
+            cur = fi.self_type
+            segs = segs[1:]
+        else:
+            cur = locals_.get(segs[0])
+            segs = segs[1:]
+        for seg in segs:
+            if cur is None:
+                return None
+            st = self.structs.get(cur)
+            nxt = None
+            if st:
+                for fname, ftype in st.fields:
+                    if fname == seg:
+                        nxt = base_type(ftype)
+                        break
+            if nxt is None:
+                # maybe a getter call chain handled elsewhere; give up
+                return None
+            cur = nxt
+        return cur
+
+    # Three call shapes, longest-match first: `recv.chain.method(`,
+    # `<expr>.method(` chained off a temporary (closing bracket / `?`),
+    # and a plain path call `a::b::c(` (lookbehind keeps it from firing
+    # mid-identifier or on a method name).
+    _CALL_RE = re.compile(
+        r"(?:(?P<recv>(?:[A-Za-z_]\w*|self)(?:\s*\.\s*[A-Za-z_]\w*)*)\s*\.\s*(?P<meth>[A-Za-z_]\w*)"
+        r"|(?<=[)\]?])\s*\.\s*(?P<chain>[A-Za-z_]\w*)"
+        r"|(?<![\w.])(?P<path>(?:[A-Za-z_]\w*::)*[A-Za-z_]\w*))"
+        r"\s*\(")
+
+    def _extract_args(self, text, open_paren):
+        depth = 0
+        for j in range(open_paren, len(text)):
+            if text[j] == "(":
+                depth += 1
+            elif text[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    return _split_top(text[open_paren + 1:j]), j
+        return [], len(text)
+
+    def _link_all(self):
+        for fi in list(self.fns.values()):
+            self._link_fn(fi)
+
+    def _link_fn(self, fi):
+        text, _ = self.body_text(fi)
+        locals_ = self._local_types(fi)
+        for m in self._CALL_RE.finditer(text):
+            meth, path_text, recv = m.group("meth"), m.group("path"), m.group("recv")
+            chain = m.group("chain")
+            open_paren = m.end() - 1
+            line = self.line_of(fi, m.start())
+            args, _ = self._extract_args(text, open_paren)
+            if meth or chain:
+                recv_type = self._receiver_type(fi, recv, locals_) if recv else None
+                targets, via = self._resolve_method(fi, recv_type, meth or chain, locals_)
+                callee = f"{recv}.{meth}" if recv else f"<expr>.{chain}"
+                fi.calls.append(CallSite(line, callee, targets, args, via))
+            else:
+                name = path_text.split("::")[-1]
+                if path_text in _NOT_CALLS or name in _NOT_CALLS:
+                    continue
+                if re.search(r"\bfn\s*$", text[:m.start()]):
+                    continue  # this fn's own signature, not a call
+                if name and name[0].isupper() and (name in self.structs or "::" not in path_text):
+                    # `Type(..)` tuple-struct init or enum variant
+                    continue
+                targets, via = self._resolve_path_call(fi, path_text)
+                fi.calls.append(CallSite(line, path_text, targets, args, via))
+
+    # ---------------------------------------------------- graph queries
+
+    def reachable(self, roots, stop=None):
+        """Transitive closure of `roots` (FnInfos) over resolved calls.
+        `stop(fn_info) -> bool` prunes traversal INTO a node: the node is
+        included in the returned set (the edge is real) but its own calls
+        are not followed."""
+        seen, stack = set(), []
+        out = {}
+        for r in roots:
+            if r.qual not in out:
+                out[r.qual] = r
+                stack.append(r)
+        while stack:
+            cur = stack.pop()
+            if stop is not None and stop(cur) and cur.qual not in {r.qual for r in roots}:
+                continue
+            for cs in cur.calls:
+                for t in cs.targets:
+                    if t.qual not in out:
+                        out[t.qual] = t
+                        stack.append(t)
+        return out
+
+    def callees_with_chains(self, root, stop=None):
+        """Like `reachable([root])` but records one witness call chain
+        (list of quals) per reached fn."""
+        chains = {root.qual: [root.qual]}
+        stack = [root]
+        while stack:
+            cur = stack.pop()
+            if stop is not None and stop(cur) and cur.qual != root.qual:
+                continue
+            for cs in cur.calls:
+                for t in cs.targets:
+                    if t.qual not in chains:
+                        chains[t.qual] = chains[cur.qual] + [t.qual]
+                        stack.append(t)
+        return chains
+
+
+_CRATE_CACHE = {}
+
+
+def load_crate(files=None):
+    """Build (and cache) the Crate over `files`, defaulting to all of
+    rust/src. Fixture/self-test runs pass explicit file lists and get
+    their own cache slots."""
+    if files is None:
+        paths = []
+        for dirpath, _, names in os.walk(RUST_SRC):
+            for name in sorted(names):
+                if name.endswith(".rs"):
+                    paths.append(os.path.join(dirpath, name))
+        key = ("<repo>",)
+    else:
+        paths = [os.path.abspath(p) for p in files]
+        key = tuple(sorted(paths))
+    if key not in _CRATE_CACHE:
+        _CRATE_CACHE[key] = Crate(sorted(paths))
+    return _CRATE_CACHE[key]
+
+
+def clear_cache():
+    _CRATE_CACHE.clear()

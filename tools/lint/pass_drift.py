@@ -17,6 +17,10 @@ Rules
   fn-values       numeric literal sequence of mirrored constructors
   field-default   a Rust field's default literal vs a Python constant
   unmapped-const  a zero-indent const in mirrored modules with no map row
+  analyzer-map    a name hard-coded in the flow-based passes (reach-panic
+                  entrypoints/root files, nondet-taint sink fns/fields)
+                  no longer exists in the Rust source — a rename silently
+                  shrank analysis coverage
 """
 
 import ast
@@ -24,6 +28,9 @@ import os
 import re
 
 from common import Finding, RustFile, REPO_ROOT
+import flow
+import pass_nondet
+import pass_reach
 
 PASS = "drift"
 
@@ -464,4 +471,48 @@ def run(files=None, pysim_root=None):
                     findings.append(Finding(PASS, "unmapped-const", rel_p, line,
                                             f"const {name} has no row in pass_drift's mirror map (add a mapping or an IGNORED_CONSTS entry with a reason)",
                                             name))
+
+    findings.extend(_analyzer_map_findings())
+    return findings
+
+
+def _analyzer_map_findings():
+    """Guard the names the flow-based passes hard-code: every reach-panic
+    entrypoint/root file and every nondet-taint sink fn / (type, field)
+    pair must still exist in the Rust source. Without this, renaming
+    `Scheduler::tick` or a `SimResult` field would silently drop it from
+    the serving-path scan instead of failing CI."""
+    findings = []
+    crate = flow.load_crate()
+    for q in pass_reach.ENTRYPOINTS:
+        if q not in crate.fns:
+            findings.append(Finding(PASS, "analyzer-map", "tools/lint/pass_reach.py", 1,
+                                    f"ENTRYPOINTS names `{q}` but no such fn exists in rust/src — "
+                                    "update the entrypoint list to match the rename",
+                                    q))
+    for p in pass_reach.ROOT_FILES:
+        if not os.path.isfile(os.path.join(REPO_ROOT, p)):
+            findings.append(Finding(PASS, "analyzer-map", "tools/lint/pass_reach.py", 1,
+                                    f"ROOT_FILES names `{p}` which does not exist — "
+                                    "update the root-file list to match the move",
+                                    p))
+    for q in pass_nondet.SINK_FNS:
+        if q not in crate.fns:
+            findings.append(Finding(PASS, "analyzer-map", "tools/lint/pass_nondet.py", 1,
+                                    f"SINK_FNS names `{q}` but no such fn exists in rust/src — "
+                                    "update the sink list to match the rename",
+                                    q))
+    for ty, fields in pass_nondet.SINK_FIELDS.items():
+        st = crate.structs.get(ty)
+        if st is None:
+            findings.append(Finding(PASS, "analyzer-map", "tools/lint/pass_nondet.py", 1,
+                                    f"SINK_FIELDS names struct `{ty}` but it does not exist in rust/src",
+                                    ty))
+            continue
+        have = {f for f, _ in st.fields}
+        for field in fields:
+            if field not in have:
+                findings.append(Finding(PASS, "analyzer-map", "tools/lint/pass_nondet.py", 1,
+                                        f"SINK_FIELDS names `{ty}.{field}` but struct `{ty}` has no such field",
+                                        f"{ty}.{field}"))
     return findings

@@ -1,0 +1,144 @@
+"""nondet-taint: no nondeterministic source upstream of a pinned output.
+
+The determinism pass flags nondet constructs inside a fixed module list;
+it cannot say whether one actually *feeds* a golden-pinned result. This
+pass anchors on the pinned outputs themselves — `SimResult`,
+`SloReport`, `FleetReport` construction sites plus the explicit
+reporter functions in `SINK_FNS` — and walks the call graph
+(`flow.Crate`) looking for order/time/randomness sources anywhere that
+can feed them.
+
+Sources (same vocabulary as the determinism pass, whose
+`// lint: allow(determinism:...)` judgments are honored here too):
+  - HashMap/HashSet iteration (hash-seeded order),
+  - wall-clock reads (Instant::now / SystemTime),
+  - unseeded randomness (thread_rng / from_entropy / RandomState).
+
+Rules (findings are reported AT the source site — that is where you fix
+or justify):
+  source-in-sink   the source sits in the body of a sink function.
+  tainted-call     the source sits in a function the sink transitively
+                   calls — the values being pinned are computed there.
+  state-coupling   the sink is a method of type T and the source sits in
+                   another method of T (or that method's callees): state
+                   accumulated nondeterministically on `self` is read at
+                   report time. This is the fn-level approximation of
+                   "tracked through assignments" — a field written under
+                   hash-order iteration in `tick` taints `report`.
+
+The model is direction-insensitive within a function (a source *after*
+the sink call still flags); sites a human has proven order-independent
+carry `// lint: allow(nondet-taint:<rule>) reason` (or the equivalent
+determinism allow at the source line).
+"""
+
+import re
+
+from common import Finding, rel
+import flow
+import pass_determinism
+
+PASS = "nondet-taint"
+
+# Pinned output types and the fields the analyzer watches. The drift
+# pass asserts every (type, field) still exists in the Rust structs, so
+# renaming a pinned field without updating the analyzer fails CI.
+SINK_FIELDS = {
+    "SimResult": ["throughput", "gen_throughput", "makespan", "act_block_share",
+                  "minibatch", "shard_gpu_utilization", "straggler_gap", "collective_bytes"],
+    "SloReport": ["submitted", "completed", "generated_tokens", "makespan_secs",
+                  "ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95", "latency_p50"],
+    "FleetReport": ["fleet", "per_replica", "replicas", "cost_per_hour",
+                    "cost_per_token", "load_imbalance", "session_hits", "session_misses"],
+}
+
+# Reporter fns that assemble pinned outputs without a struct literal of
+# their own (they delegate to metrics constructors). Also drift-checked.
+SINK_FNS = [
+    "sched::Scheduler::report",
+    "fleet::Fleet::report",
+]
+
+_SINK_LIT_RE = re.compile(r"\b(%s)\s*\{" % "|".join(SINK_FIELDS))
+
+_SOURCE_PASSES = (PASS, pass_determinism.PASS)
+
+
+def _sources(crate, fi):
+    """[(line, kind, raw)] of unallowed nondet sources in `fi`'s span."""
+    rf = crate.files[fi.path]
+    out = []
+    names = pass_determinism._map_names(rf)
+    iter_re = (
+        re.compile(r"\b(?:self\s*\.\s*)?(%s)\s*\.\s*%s\s*\("
+                   % ("|".join(map(re.escape, sorted(names))), pass_determinism._ITER_METHODS))
+        if names else None
+    )
+    for_re = (
+        re.compile(r"\bfor\b[^;{]*\bin\s+&?(?:mut\s+)?(?:self\s*\.\s*)?(%s)\b\s*[{.]?"
+                   % "|".join(map(re.escape, sorted(names))))
+        if names else None
+    )
+    for idx in range(fi.lo, fi.hi + 1):
+        line = rf.code[idx - 1]
+        kind = None
+        if iter_re and (iter_re.search(line) or (for_re and for_re.search(line))):
+            kind = "map-iteration"
+        elif pass_determinism._WALL_RE.search(line):
+            kind = "wall-clock"
+        elif pass_determinism._RAND_RE.search(line):
+            kind = "unseeded-rng"
+        if kind is None:
+            continue
+        allowed = False
+        for ln in (idx, idx - 1):
+            for pass_name, _rule in rf.allows.get(ln, []):
+                if pass_name in _SOURCE_PASSES:
+                    allowed = True
+        if not allowed:
+            out.append((idx, kind, rf.lines[idx - 1]))
+    return out
+
+
+def _sink_fns(crate):
+    sinks = []
+    for q in sorted(crate.fns):
+        fi = crate.fns[q]
+        text, _ = crate.body_text(fi)
+        if _SINK_LIT_RE.search(text):
+            sinks.append(fi)
+    for q in SINK_FNS:
+        fi = crate.fns.get(q)
+        if fi is not None and fi not in sinks:
+            sinks.append(fi)
+    return sinks
+
+
+def run(files=None):
+    crate = flow.load_crate(files)
+    findings = []
+    seen = set()  # (path, line): one finding per source site
+    for sink in _sink_fns(crate):
+        # closure: the sink itself, everything it calls, and (state
+        # coupling) every sibling method of its type plus their callees
+        closure = {sink.qual: (sink, "source-in-sink")}
+        for q, fi in crate.reachable([sink]).items():
+            closure.setdefault(q, (fi, "tainted-call"))
+        if sink.self_type:
+            siblings = [f for ms, fns in crate.methods.items()
+                        for f in fns if ms[0] == sink.self_type and f.qual != sink.qual]
+            for q, fi in crate.reachable(siblings).items():
+                closure.setdefault(q, (fi, "state-coupling"))
+        for q in sorted(closure):
+            fi, rule = closure[q]
+            for line, kind, raw in _sources(crate, fi):
+                key = (fi.path, line)
+                if key in seen:
+                    continue
+                seen.add(key)
+                findings.append(Finding(
+                    PASS, rule, rel(fi.path), line,
+                    f"{kind} in `{fi.qual}` can feed pinned output `{sink.qual}`; "
+                    "make it order-independent or justify with an allow",
+                    raw))
+    return findings

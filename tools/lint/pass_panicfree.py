@@ -44,7 +44,7 @@ _INDEX_RE = re.compile(r"[\w)\]]\[")
 _SAFE_ARITH = ("checked_", "saturating_", "wrapping_", "overflowing_")
 # int-looking binary arithmetic: ident/call/paren OP ident/literal.
 _ARITH_RE = re.compile(r"[\w)\]]\s*(\+|\*|\s-\s|\+=|-=|\*=)\s*[\w(]")
-_FLOATISH_RE = re.compile(r"\d\.\d|\bf64\b|\bf32\b|_secs\b|_frac\b|\bf64::|\.0\b")
+_FLOATISH_RE = re.compile(r"\d\.\d|\bf64\b|\bf32\b|_secs\b|_frac\b|\bf64::|\.0\b|\d[eE][-+]?\d|_f64\b|_f32\b")
 
 
 def _scan_lines(rf, path, line_range, findings):

@@ -1,0 +1,296 @@
+"""reach-panic: interprocedural panic-freedom for the serving path.
+
+PR-8's `panicfree` pass guards a hand-maintained module list; anything it
+*calls* is invisible, so a helper three frames below `sched::tick` can
+still `unwrap()` a request away. This pass replaces the list with the
+call graph (`flow.Crate`): every panic/unwrap/index/unchecked-arith site
+in any function **transitively reachable** from the serving entrypoints
+is a finding.
+
+Roots
+  - the entrypoint functions in `ENTRYPOINTS` (the drift pass asserts
+    these names still exist in the Rust source), and
+  - every function in `ROOT_FILES`: the TCP front door and the fleet
+    router are thread-entry surfaces — accept/connection loops, the
+    response pump, and the routing policy all run on serving threads
+    regardless of who calls whom. This also makes the scanned set a
+    strict superset of the old `panicfree` scope by construction
+    (asserted by a unittest).
+
+Trusted boundary
+  Traversal stops at `TRUSTED` prefixes (the edge is recorded, the body
+  is not scanned and its callees are not followed). Two principled cuts,
+  each with its reason next to the entry:
+  - the artifact-gated PJRT executor: it only runs when a real compiled
+    artifact is supplied, and an invariant violation there must abort
+    the artifact run loudly rather than serve corrupt tensors;
+  - plan/sim/config-time code: deterministic, golden-pinned, exercised
+    at build/plan time — a panic there is reproducible and caught by CI,
+    not an outage. The live request path (sched, analytic engine, cache
+    accounting, fleet, metrics, json, server) stays fully scanned.
+
+Rule set and triage are `panicfree`'s (unwrap/panic/index/arith), and
+this pass honors existing `// lint: allow(panicfree:...)` annotations as
+well as its own `allow(reach-panic:...)` — it subsumes the old scope,
+so the old judgments carry over. Three symbol-table refinements remove
+lexical false positives the line-based pass cannot see:
+  - `.expect(..)` that resolves to a *repo* method returning Result
+    (e.g. `Parser::expect`) is not `Option::expect`;
+  - an integer-literal index into a field of fixed-size array type
+    `[T; N]` with literal < N cannot panic;
+  - `*` immediately after `if`/`match`/`return`/`in`/`else` is a deref,
+    not a multiplication;
+  - arith on a *float local* is exempt: f32/f64 params, `: f64`
+    annotations and `as f64` casts seed a per-fn float set that
+    propagates through let-bindings to a fixpoint, so `layers * frac`
+    is recognized as float math even when the line itself carries no
+    lexical float marker. (Over-approximate by line: a float name
+    anywhere on the line exempts it.)
+"""
+
+import os
+import re
+
+from common import Finding, rel, REPO_ROOT
+import flow
+import pass_panicfree
+
+PASS = "reach-panic"
+
+# Serving entrypoints (qualified as module::Type::fn / module::fn).
+# Mirrored into the drift pass: renaming one of these without updating
+# the analyzer fails CI loudly.
+ENTRYPOINTS = [
+    "server::handle",
+    "sched::Scheduler::submit",
+    "sched::Scheduler::submit_timed",
+    "sched::Scheduler::tick",
+    "sched::Scheduler::preempt_until",
+    "fleet::Fleet::new",
+    "fleet::Fleet::dispatch",
+    "fleet::Fleet::serve",
+    "fleet::router::Router::route",
+]
+
+# Whole files whose every fn is a root: thread-entry surfaces.
+ROOT_FILES = [
+    "rust/src/server/mod.rs",
+    "rust/src/fleet/router.rs",
+]
+
+# qual/module prefix -> reason traversal stops there. Kept in one place
+# so the boundary is reviewable; the unittest asserts no entry overlaps
+# the old panicfree scope (a trusted entry can never shrink coverage
+# below PR-8).
+TRUSTED = {
+    "engine::Engine::": "artifact-gated PJRT executor: runs only with a real compiled artifact; invariant violations must abort the artifact run loudly",
+    "engine::PjrtCostSampler::": "artifact-gated PJRT cost sampler (same boundary as engine::Engine)",
+    "runtime::": "PJRT runtime/manifest/weights loading: artifact-gated, fail-loud by design",
+    "sim::": "deterministic simulator: golden-pinned and CI-reproducible; a panic is a caught regression, not an outage",
+    "pcie::": "simulated timelines/traffic counters: deterministic sim state",
+    "plan::": "plan-time (topology split / autotune): runs when a system is built, not per request",
+    "policy::": "Algorithm-1 planners: plan-time, golden-pinned",
+    "config::": "configuration construction: build-time; invalid configs must fail loudly before serving starts",
+    "memsim::": "memory-pool simulator: deterministic sim state",
+    "harness::": "offline figure/report harness",
+    "figures::": "offline figure generation",
+    "workload::": "trace generation: build-time, seeded",
+}
+
+_LIT_INDEX_RE = re.compile(r"(self\s*\.\s*\w+|\b\w+)\s*\[\s*(\d+)\s*\]")
+_LET_BIND_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*(?::\s*([^=;]+?))?\s*=\s*([^;]*)")
+_FLOAT_TY_RE = re.compile(r"^\s*&?\s*f(?:32|64)\b")
+_AS_FLOAT_RE = re.compile(r"\bas\s+f(?:32|64)\b")
+_FIXED_ARR_RE = re.compile(r"^\[\s*\w+\s*;\s*(\d+)\s*\]$")
+_DEREF_KEYWORDS = {"if", "match", "return", "in", "else", "while"}
+
+
+def _is_trusted(fi):
+    for prefix in TRUSTED:
+        if fi.qual.startswith(prefix) or (fi.module + "::").startswith(prefix):
+            return True
+    return False
+
+
+def _fixed_array_len(crate, fi, recv_text):
+    """Raw declared type of `self.field` / `param`, if it is `[T; N]`."""
+    recv_text = recv_text.replace(" ", "")
+    raw = None
+    if recv_text.startswith("self.") and fi.self_type:
+        st = crate.structs.get(fi.self_type)
+        field = recv_text[5:]
+        if st:
+            for fname, ftype in st.fields:
+                if fname == field:
+                    raw = ftype
+    else:
+        for pname, ptype in fi.params:
+            if pname == recv_text:
+                raw = ptype
+    if raw:
+        m = _FIXED_ARR_RE.match(raw.strip())
+        if m:
+            return int(m.group(1))
+    return None
+
+
+def _index_is_safe(crate, fi, line, bracket_pos):
+    """Is the `[` at `bracket_pos` a literal index into a fixed array?"""
+    for m in _LIT_INDEX_RE.finditer(line):
+        open_b = line.index("[", m.start())
+        if open_b != bracket_pos:
+            continue
+        n = _fixed_array_len(crate, fi, m.group(1))
+        if n is not None and int(m.group(2)) < n:
+            return True
+    return False
+
+
+def _float_locals(crate, fi):
+    """Names of f32/f64-typed locals in this fn: typed params, `: f64`
+    annotations, `as f64` casts and lexically-float initializers, then
+    let-binding propagation to a fixpoint (`let y = x * 2.0` makes `y`
+    float; `let z = y / n` then makes `z` float too)."""
+    rf = crate.files[fi.path]
+    floats = {p for p, t in fi.params if t and _FLOAT_TY_RE.match(t)}
+    body = [rf.code[i - 1] for i in range(fi.lo, min(fi.hi, len(rf.code)) + 1)]
+    for _ in range(4):
+        grew = False
+        for line in body:
+            for m in _LET_BIND_RE.finditer(line):
+                name, ty, rhs = m.group(1), m.group(2), m.group(3)
+                if name in floats:
+                    continue
+                if ty:
+                    is_float = bool(_FLOAT_TY_RE.match(ty))
+                else:
+                    is_float = bool(
+                        _AS_FLOAT_RE.search(rhs)
+                        or pass_panicfree._FLOATISH_RE.search(rhs)
+                        or any(re.search(r"\b%s\b" % re.escape(f), rhs) for f in floats)
+                    )
+                if is_float:
+                    floats.add(name)
+                    grew = True
+        if not grew:
+            break
+    return floats
+
+
+def _left_word(line, pos):
+    """The identifier/keyword ending at `pos` (inclusive)."""
+    j = pos
+    while j >= 0 and (line[j].isalnum() or line[j] == "_"):
+        j -= 1
+    return line[j + 1:pos + 1]
+
+
+def _scan_fn(crate, fi, chain, findings):
+    """panicfree's four rules over one fn span, with the symbol-table
+    refinements; findings carry the witness chain in their message."""
+    rf = crate.files[fi.path]
+    path = rel(fi.path)
+    via = " -> ".join(chain)
+    repo_expect_lines = {
+        cs.line for cs in fi.calls
+        if cs.targets and cs.callee_text.endswith(".expect")
+    }
+    float_locals = _float_locals(crate, fi)
+    for idx in range(fi.lo, fi.hi + 1):
+        line = rf.code[idx - 1]
+        raw = rf.lines[idx - 1]
+        m = pass_panicfree._UNWRAP_RE.search(line)
+        if m and not (m.group(1) == "expect" and idx in repo_expect_lines):
+            findings.append(Finding(PASS, "unwrap", path, idx,
+                                    f"unwrap/expect reachable from serving entrypoint ({via}); propagate the error",
+                                    raw))
+        m = pass_panicfree._PANIC_RE.search(line)
+        if m:
+            findings.append(Finding(PASS, "panic", path, idx,
+                                    f"{m.group(1)}! reachable from serving entrypoint ({via}); return an error",
+                                    raw))
+        if "debug_assert" in line:
+            continue
+        if "#[" not in line:
+            for im in pass_panicfree._INDEX_RE.finditer(line):
+                bracket = im.end() - 1
+                if not _index_is_safe(crate, fi, line, bracket):
+                    findings.append(Finding(PASS, "index", path, idx,
+                                            f"direct indexing reachable from serving entrypoint ({via}); use .get()",
+                                            raw))
+                    break
+        if any(s in line for s in pass_panicfree._SAFE_ARITH):
+            continue
+        if pass_panicfree._FLOATISH_RE.search(line):
+            continue
+        if float_locals and any(
+            re.search(r"\b%s\b" % re.escape(f), line) for f in float_locals
+        ):
+            continue
+        for am in pass_panicfree._ARITH_RE.finditer(line):
+            if am.group(1).strip() == "*" and _left_word(line, am.start()) in _DEREF_KEYWORDS:
+                continue
+            findings.append(Finding(PASS, "arith", path, idx,
+                                    f"unchecked integer arithmetic reachable from serving entrypoint ({via}); use checked_/saturating_",
+                                    raw))
+            break
+
+
+def _allowed(rf, finding):
+    """Honor both reach-panic and legacy panicfree annotations."""
+    for line in (finding.line, finding.line - 1):
+        for pass_name, rule in rf.allows.get(line, []):
+            if pass_name in (PASS, pass_panicfree.PASS) and (rule is None or rule == finding.rule):
+                return True
+    return False
+
+
+def _roots(crate, files_mode):
+    roots = []
+    if files_mode:
+        # fixture/self-test convention: fns named `entry*` are roots
+        for fi in crate.fns.values():
+            if fi.name.startswith("entry"):
+                roots.append(fi)
+        return roots
+    for q in ENTRYPOINTS:
+        fi = crate.fns.get(q)
+        if fi is not None:
+            roots.append(fi)
+    root_files = {os.path.join(REPO_ROOT, p) for p in ROOT_FILES}
+    for fi in crate.fns.values():
+        if fi.path in root_files:
+            roots.append(fi)
+    return roots
+
+
+def scanned_set(crate=None):
+    """The set of fn quals this pass scans (reachable minus trusted).
+    Exposed for the superset unittest."""
+    crate = crate or flow.load_crate()
+    roots = _roots(crate, files_mode=False)
+    reach = crate.reachable(roots, stop=_is_trusted)
+    return {q for q, fi in reach.items() if not _is_trusted(fi)}
+
+
+def run(files=None):
+    crate = flow.load_crate(files)
+    roots = _roots(crate, files_mode=files is not None)
+    if not roots:
+        return []
+    # shortest witness chain per reached fn, for actionable messages
+    chains = {}
+    for r in roots:
+        for q, ch in crate.callees_with_chains(r, stop=_is_trusted).items():
+            if q not in chains or len(ch) < len(chains[q]):
+                chains[q] = ch
+    findings = []
+    for q in sorted(chains):
+        fi = crate.fns[q]
+        if _is_trusted(fi):
+            continue
+        raw = []
+        _scan_fn(crate, fi, chains[q], raw)
+        rf = crate.files[fi.path]
+        findings.extend(f for f in raw if not _allowed(rf, f))
+    return findings

@@ -1,0 +1,277 @@
+"""unit-flow: unit inference propagated across bindings and calls.
+
+The `units` pass (PR 8) sees one expression at a time: `kv_bytes +
+t_secs` trips it, but `let n_blocks = free_bytes;` or passing a bytes
+value into a `_blocks` parameter does not. This pass infers a unit for
+expressions from the same `_bytes/_blocks/_tokens/_secs/_frac` suffix
+vocabulary and checks it at the four places a value changes hands:
+
+Rules
+  let-unit    `let x_blocks = <expr of unit bytes>;` (also `x.f_blocks =
+              <expr>` assignments) — the binding's suffix promises one
+              dimension, the value carries another.
+  arg-unit    a call argument whose unit differs from the suffix of the
+              callee's parameter name (callee resolved via flow.Crate;
+              applies to repo functions whose resolution is unambiguous).
+  ret-unit    a function whose NAME carries a unit suffix returns an
+              expression of a different unit (checked on `return e;`
+              statements and single-expression tails).
+  field-unit  a struct-literal field `kv_bytes: <expr of other unit>`
+              inside a function body (definitions carry types, not
+              value expressions, so they never match).
+
+Inference is deliberately conservative: `*` and `/` legitimately change
+units, so any expression containing a top-level `*`//`/` has unknown
+unit; unknown never mismatches. The blessed `util::units` helpers are
+the only named cast points (`bytes_f64(x)` has unit bytes, and its
+parameter is checked like any other). Sites a human has judged carry
+`// lint: allow(unit-flow:<rule>) reason`.
+"""
+
+import re
+
+from common import Finding, rel
+import flow
+
+PASS = "unit-flow"
+SUFFIXES = ("bytes", "blocks", "tokens", "secs", "frac")
+EXCLUDE = ["rust/src/util/units.rs"]
+
+# util::units helpers: name -> unit of the value they return.
+HELPER_UNITS = {
+    "bytes_f64": "bytes",
+    "blocks_f64": "blocks",
+    "tokens_f64": "tokens",
+    "secs_f64": "secs",
+    "frac_of_bytes": "bytes",
+    "f64_bytes": "bytes",
+}
+
+# Methods that return a value of their receiver's unit.
+_PRESERVING = (
+    "min", "max", "clamp", "saturating_add", "saturating_sub",
+    "checked_add", "checked_sub", "wrapping_add", "wrapping_sub",
+    "unwrap", "unwrap_or", "unwrap_or_default", "unwrap_or_else", "expect",
+    "abs", "floor", "ceil", "round", "clone", "pow", "next_multiple_of",
+)
+
+_IDENT_TAIL_RE = re.compile(r"([A-Za-z_]\w*)$")
+_ASSIGN_RE = re.compile(r"(?:^|[({;]\s*|\s)((?:[A-Za-z_]\w*\.)*[A-Za-z_]\w*_(?:%s))\s*=\s*([^=].*)$" % "|".join(SUFFIXES))
+_FIELD_LIT_RE = re.compile(r"^\s*([A-Za-z_]\w*_(?:%s))\s*:\s*(.+?),?\s*$" % "|".join(SUFFIXES))
+_RETURN_RE = re.compile(r"\breturn\s+([^;]+);")
+
+
+def unit_of_name(name):
+    """Unit carried by an identifier or function name, if any."""
+    name = name.split("::")[-1].split(".")[-1]
+    if name in HELPER_UNITS:
+        return HELPER_UNITS[name]
+    tail = name.rsplit("_", 1)[-1]
+    if tail in SUFFIXES and "_" in name:
+        return tail
+    if name in SUFFIXES:
+        return name
+    return None
+
+
+def _strip_outer(e):
+    e = e.strip()
+    while True:
+        prev = e
+        e = re.sub(r"^(?:&\s*)?(?:mut\s+)?", "", e).strip()
+        if e.startswith("(") and e.endswith(")"):
+            depth = 0
+            for i, ch in enumerate(e):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0 and i < len(e) - 1:
+                        break
+            else:
+                e = e[1:-1].strip()
+        # `x as f64` keeps x's unit (the cast erases the *type*, which
+        # the `units` pass polices; the dimension is unchanged)
+        e = re.sub(r"\s+as\s+\w+\s*$", "", e).strip()
+        if e == prev:
+            return e
+
+
+def _split_arith(e):
+    """Split on top-level + - % (not inside brackets; `-` only when
+    space-padded so ranges/negatives/arrows survive)."""
+    parts, depth, buf = [], 0, []
+    i = 0
+    while i < len(e):
+        ch = e[i]
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if depth == 0 and (ch == "+" or ch == "%" or (ch == "-" and i > 0 and e[i - 1] == " " and i + 1 < len(e) and e[i + 1] == " ")):
+            if ch == "-" and e[i - 1:i + 2] != " - ":
+                buf.append(ch)
+            else:
+                parts.append("".join(buf))
+                buf = []
+        else:
+            buf.append(ch)
+        i += 1
+    parts.append("".join(buf))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _has_top_muldiv(e):
+    depth = 0
+    for i, ch in enumerate(e):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif depth == 0 and ch == "/":
+            return True
+        elif depth == 0 and ch == "*" and i > 0 and (e[i - 1].isalnum() or e[i - 1] in "_)] "):
+            # leading `*` is a deref; between operands it's a product
+            if i > 0 and e[:i].rstrip() and e[:i].rstrip()[-1] not in "(,=<>+-*/%&|{":
+                return True
+    return False
+
+
+def expr_unit(e):
+    """Best-effort unit of an expression; None = unknown (never flags)."""
+    e = _strip_outer(e)
+    if not e:
+        return None
+    parts = _split_arith(e)
+    if len(parts) > 1:
+        units = {expr_unit(p) for p in parts}
+        units.discard(None)
+        return units.pop() if len(units) == 1 else None
+    if _has_top_muldiv(e):
+        return None
+    # method chain: walk from the head while calls preserve the unit
+    # (the head may be `::`-qualified: `crate::util::units::blocks_f64`)
+    m = re.match(r"((?:[A-Za-z_]\w*(?:::|\.))*[A-Za-z_]\w*)\s*(?:::<[^>]*>)?\s*(\(|\.|$)", e)
+    if not m:
+        return None
+    head, nxt = m.group(1), m.group(2)
+    if nxt == "(":
+        base, _, meth = head.rpartition(".")
+        if base and meth in _PRESERVING:
+            # `x_bytes.min(..)` keeps the receiver's unit — but only when
+            # the call is the whole expression; a longer chain (e.g. a
+            # trailing `.saturating_mul(..)`) may change dimension, so it
+            # stays unknown.
+            depth = 0
+            for j in range(m.end() - 1, len(e)):
+                if e[j] == "(":
+                    depth += 1
+                elif e[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            if not e[j + 1:].strip():
+                return expr_unit(base)
+            return None
+        # call: unit comes from the callee's name
+        return unit_of_name(head)
+    if nxt == ".":
+        rest = e[m.end() - 1:]
+        cm = re.match(r"\.\s*([A-Za-z_]\w*)\s*\(", rest)
+        if cm and cm.group(1) in _PRESERVING:
+            return expr_unit(head)
+        if cm:
+            return unit_of_name(cm.group(1))
+        return None
+    if re.match(r"^\d", head):
+        return None
+    return unit_of_name(head)
+
+
+def _check(expected, expr, path, line, rule, what, raw, findings):
+    actual = expr_unit(expr)
+    if expected and actual and expected != actual:
+        findings.append(Finding(PASS, rule, path, line,
+                                f"{what} expects {expected} but the value flows {actual}",
+                                raw))
+
+
+def _scan_fn(crate, fi, findings):
+    rf = crate.files[fi.path]
+    path = rel(fi.path)
+    text, _ = crate.body_text(fi)
+
+    # let-unit / assignments: statement-level, joined across lines
+    for m in flow._LET_RE.finditer(text):
+        name = m.group(1)
+        expected = unit_of_name(name)
+        if not expected:
+            continue
+        end = text.find(";", m.end())
+        if end == -1:
+            continue
+        line = crate.line_of(fi, m.start())
+        _check(expected, text[m.end():end], path, line, "let-unit",
+               f"`let {name}`", rf.lines[line - 1], findings)
+    for idx in range(fi.lo + 1, fi.hi + 1):
+        line = rf.code[idx - 1]
+        m = _ASSIGN_RE.search(line)
+        if m and "==" not in line and "let " not in line and ";" in line:
+            expected = unit_of_name(m.group(1))
+            _check(expected, m.group(2).split(";")[0], path, idx, "let-unit",
+                   f"`{m.group(1)} = ..`", rf.lines[idx - 1], findings)
+        # field-unit: struct-literal fields inside fn bodies only
+        fm = _FIELD_LIT_RE.match(line)
+        if fm and not line.lstrip().startswith("pub "):
+            _check(unit_of_name(fm.group(1)), fm.group(2), path, idx, "field-unit",
+                   f"field `{fm.group(1)}`", rf.lines[idx - 1], findings)
+
+    # arg-unit: resolved calls with unambiguous parameter lists
+    for cs in fi.calls:
+        if not cs.targets or not cs.args:
+            continue
+        sigs = {tuple(p for p, _ in t.params) for t in cs.targets}
+        if len(sigs) != 1:
+            continue
+        params = cs.targets[0].params
+        if len(cs.args) != len(params):
+            continue
+        for (pname, _), arg in zip(params, cs.args):
+            expected = unit_of_name(pname)
+            if not expected:
+                continue
+            _check(expected, arg, path, cs.line, "arg-unit",
+                   f"parameter `{pname}` of `{cs.callee_text}`",
+                   rf.lines[cs.line - 1], findings)
+
+    # ret-unit: the fn's own name promises a unit
+    expected = unit_of_name(fi.name)
+    if expected:
+        for m in _RETURN_RE.finditer(text):
+            line = crate.line_of(fi, m.start())
+            _check(expected, m.group(1), path, line, "ret-unit",
+                   f"return of `{fi.name}`", rf.lines[line - 1], findings)
+        # single-expression tail: last non-brace line without `;`
+        for idx in range(fi.hi - 1, fi.lo, -1):
+            tail = rf.code[idx - 1].strip()
+            if not tail or tail == "}":
+                continue
+            if re.match(r"^[\w.:&()\[\]]+\??$", tail) and not tail.endswith(";"):
+                _check(expected, tail.rstrip("?"), path, idx, "ret-unit",
+                       f"tail expression of `{fi.name}`", rf.lines[idx - 1], findings)
+            break
+
+
+def run(files=None):
+    crate = flow.load_crate(files)
+    findings = []
+    excluded = set(EXCLUDE)
+    for q in sorted(crate.fns):
+        fi = crate.fns[q]
+        if rel(fi.path) in excluded:
+            continue
+        raw = []
+        _scan_fn(crate, fi, raw)
+        rf = crate.files[fi.path]
+        findings.extend(f for f in raw if not rf.allowed(f))
+    return findings

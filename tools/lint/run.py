@@ -29,18 +29,74 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import common  # noqa: E402
 import pass_determinism  # noqa: E402
 import pass_drift  # noqa: E402
+import pass_nondet  # noqa: E402
 import pass_panicfree  # noqa: E402
+import pass_reach  # noqa: E402
 import pass_units  # noqa: E402
+import pass_unitflow  # noqa: E402
 
 PASSES = {
     "determinism": pass_determinism.run,
     "units": pass_units.run,
     "panicfree": pass_panicfree.run,
     "drift": pass_drift.run,
+    "reach-panic": pass_reach.run,
+    "unit-flow": pass_unitflow.run,
+    "nondet-taint": pass_nondet.run,
 }
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "baseline.json")
 FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)), "fixtures")
+
+# The flow-based passes must trip EVERY rule on their known-bad fixture
+# and on a per-rule perturbation of the known-good one — a regression in
+# any single rule (not just "some finding") fails the self-test.
+NEW_PASS_RULES = {
+    "reach-panic": ("unwrap", "panic", "index", "arith"),
+    "unit-flow": ("let-unit", "arg-unit", "ret-unit", "field-unit"),
+    "nondet-taint": ("source-in-sink", "tainted-call", "state-coupling"),
+}
+
+# rule -> (needle in good.rs, replacement that must trip exactly that
+# rule). Each perturbed copy is written to a fresh temp path so the
+# flow.Crate cache (keyed by absolute paths) never serves stale results.
+PERTURBATIONS = {
+    "reach-panic": {
+        "unwrap": ("xs.first().copied().unwrap_or(0)",
+                   "xs.first().copied().unwrap()"),
+        "panic": ("    n.saturating_add(1) as u64\n}",
+                  "    if n == 0 {\n        panic!(\"empty\");\n    }\n    n as u64\n}"),
+        "index": ("    xs.first().copied().unwrap_or_default()\n}",
+                  "    xs[0]\n}"),
+        "arith": ("    n.saturating_add(1) as u64\n}",
+                  "    (n + 1) as u64\n}"),
+    },
+    "unit-flow": {
+        "let-unit": ("let total_bytes = free_bytes;",
+                     "let total_bytes = kv_blocks;"),
+        "arg-unit": ("consume(free_bytes)",
+                     "consume(kv_blocks)"),
+        "ret-unit": ("    w_bytes\n}",
+                     "    w_blocks\n}"),
+        "field-unit": ("cap_bytes: total_bytes,",
+                       "cap_bytes: kv_blocks,"),
+    },
+    "nondet-taint": {
+        "source-in-sink": (
+            "    pub fn report(&self) -> SimResult {\n        SimResult {",
+            "    pub fn report(&self) -> SimResult {\n"
+            "        let mut acc = 0usize;\n"
+            "        for (_, v) in self.scratch.iter() {\n"
+            "            acc += v;\n"
+            "        }\n"
+            "        let _ = acc;\n"
+            "        SimResult {"),
+        "tainted-call": ("    0.0\n}",
+                         "    std::time::Instant::now().elapsed().as_secs_f64()\n}"),
+        "state-coupling": ("for (_, v) in self.counts.iter() {",
+                           "for (_, v) in self.scratch.iter() {"),
+    },
+}
 
 
 def collect(pass_names, files=None):
@@ -53,7 +109,9 @@ def collect(pass_names, files=None):
 def self_test():
     """Prove the suite can still catch what it claims to catch:
     1. every known-bad fixture trips its pass, known-good stays clean;
-    2. a deliberately perturbed pysim constant trips the drift pass."""
+    2. every RULE of the flow-based passes trips on its known-bad
+       fixture AND on a one-edit perturbation of the known-good one;
+    3. a deliberately perturbed pysim constant trips the drift pass."""
     failures = []
 
     for name in ("determinism", "units", "panicfree"):
@@ -67,6 +125,37 @@ def self_test():
             failures.append(f"{name}: known-bad fixture produced no findings")
         if got_good:
             failures.append(f"{name}: known-good fixture produced findings: " + "; ".join(map(str, got_good)))
+
+    # the flow-based passes: per-rule coverage on bad.rs, then the
+    # perturbation drill — each single edit to good.rs must trip its rule.
+    for name, rules in NEW_PASS_RULES.items():
+        bad = os.path.join(FIXTURES, name, "bad.rs")
+        good = os.path.join(FIXTURES, name, "good.rs")
+        got_bad = PASSES[name](files=[bad])
+        got_good = PASSES[name](files=[good])
+        bad_rules = {f.rule for f in got_bad}
+        print(f"self-test {name}: bad.rs -> {len(got_bad)} findings ({', '.join(sorted(bad_rules))}), good.rs -> {len(got_good)}")
+        for rule in rules:
+            if rule not in bad_rules:
+                failures.append(f"{name}: known-bad fixture did not trip rule `{rule}`")
+        if got_good:
+            failures.append(f"{name}: known-good fixture produced findings: " + "; ".join(map(str, got_good)))
+        with open(good, encoding="utf-8") as fh:
+            good_text = fh.read()
+        with tempfile.TemporaryDirectory(prefix=f"pallas-lint-{name}-") as tmp:
+            for rule in rules:
+                old, new = PERTURBATIONS[name][rule]
+                perturbed = good_text.replace(old, new, 1)
+                if perturbed == good_text:
+                    failures.append(f"{name}: perturbation needle for `{rule}` not found in good.rs")
+                    continue
+                path = os.path.join(tmp, f"good_{rule.replace('-', '_')}.rs")
+                with open(path, "w", encoding="utf-8") as fh:
+                    fh.write(perturbed)
+                tripped = {f.rule for f in PASSES[name](files=[path])}
+                print(f"self-test {name}: perturb `{rule}` -> trips {', '.join(sorted(tripped)) or 'nothing'}")
+                if rule not in tripped:
+                    failures.append(f"{name}: perturbed good.rs did NOT trip rule `{rule}`")
 
     # the drift drill: copy the real pysim mirror, bend one mapped
     # constant, and demand the pass notices.

@@ -1,0 +1,351 @@
+"""Tests for the pallas-flow substrate (symbol table, call resolution,
+reachability) and the three flow-based passes built on it.
+
+Run with:  python3 -m unittest discover -s tools/lint/tests -v
+"""
+
+import os
+import sys
+import tempfile
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, ".."))
+
+import common  # noqa: E402
+import flow  # noqa: E402
+import pass_drift  # noqa: E402
+import pass_nondet  # noqa: E402
+import pass_panicfree  # noqa: E402
+import pass_reach  # noqa: E402
+import pass_unitflow  # noqa: E402
+
+FIX = os.path.join(HERE, "..", "fixtures")
+
+
+def fixture(*parts):
+    return os.path.abspath(os.path.join(FIX, *parts))
+
+
+class CrateFromText(unittest.TestCase):
+    """Base: write source to a temp .rs file and load a Crate over it.
+    Temp paths are unique, so the flow cache never serves stale results;
+    outside rust/src the module name is the file stem."""
+
+    def crate(self, text):
+        fd, path = tempfile.mkstemp(suffix=".rs", prefix="pallas_flow_test_")
+        with os.fdopen(fd, "w", encoding="utf-8") as f:
+            f.write(text)
+        self.addCleanup(os.unlink, path)
+        crate = flow.load_crate([path])
+        self.mod = os.path.splitext(os.path.basename(path))[0]
+        return crate
+
+    def fn(self, crate, tail):
+        """Look up a fn by module-stripped qual tail, e.g. `Sched::tick`."""
+        fi = crate.fns.get(f"{self.mod}::{tail}")
+        self.assertIsNotNone(fi, f"{tail} not in {sorted(crate.fns)}")
+        return fi
+
+
+class TestSymbolTable(CrateFromText):
+    def test_fn_signatures_spans_and_quals(self):
+        crate = self.crate(
+            "pub struct Sched {\n"
+            "    pub queue_blocks: usize,\n"
+            "}\n"
+            "impl Sched {\n"
+            "    pub fn tick(&mut self, budget_bytes: usize) -> Result<usize, String> {\n"
+            "        Ok(budget_bytes)\n"
+            "    }\n"
+            "}\n"
+            "fn helper(n_tokens: u64) -> u64 {\n"
+            "    n_tokens\n"
+            "}\n"
+        )
+        tick = self.fn(crate, "Sched::tick")
+        self.assertEqual(tick.self_type, "Sched")
+        self.assertEqual(tick.params, [("budget_bytes", "usize")])
+        self.assertEqual(tick.ret, "Result<usize, String>")
+        self.assertEqual((tick.lo, tick.hi), (5, 7))
+        helper = self.fn(crate, "helper")
+        self.assertIsNone(helper.self_type)
+        self.assertEqual(helper.params, [("n_tokens", "u64")])
+
+    def test_struct_fields_and_multiline_signature(self):
+        crate = self.crate(
+            "pub struct Plan {\n"
+            "    pub stages: Vec<usize>,\n"
+            "    pub kv_bytes: usize,\n"
+            "    private_frac: f64,\n"
+            "}\n"
+            "fn widest(\n"
+            "    plan: &Plan,\n"
+            "    floor_bytes: usize,\n"
+            ") -> usize {\n"
+            "    floor_bytes\n"
+            "}\n"
+        )
+        st = crate.structs["Plan"]
+        self.assertEqual([f for f, _ in st.fields],
+                         ["stages", "kv_bytes", "private_frac"])
+        self.assertEqual(dict(st.fields)["kv_bytes"], "usize")
+        widest = self.fn(crate, "widest")
+        self.assertEqual(widest.params,
+                         [("plan", "&Plan"), ("floor_bytes", "usize")])
+
+    def test_base_type_strips_refs_generics_and_paths(self):
+        self.assertEqual(flow.base_type("&mut Scheduler<E>"), "Scheduler")
+        self.assertEqual(flow.base_type("crate::sched::Scheduler"), "Scheduler")
+        self.assertEqual(flow.base_type("Option<Vec<u64>>"), "Option")
+        self.assertIsNone(flow.base_type("[f64; 4]"))
+
+
+class TestResolution(CrateFromText):
+    def test_self_and_typed_receiver_resolution(self):
+        crate = self.crate(
+            "pub struct Pool { cap: usize }\n"
+            "impl Pool {\n"
+            "    pub fn grab(&mut self) -> usize { self.cap }\n"
+            "}\n"
+            "pub struct Sched { pool: Pool }\n"
+            "impl Sched {\n"
+            "    fn inner(&self) -> usize { 1 }\n"
+            "    pub fn tick(&mut self) -> usize {\n"
+            "        let p: Pool = Pool { cap: 1 };\n"
+            "        self.inner() + self.pool.grab() + p.cap\n"
+            "    }\n"
+            "}\n"
+        )
+        tick = self.fn(crate, "Sched::tick")
+        resolved = {cs.callee_text: [t.qual for t in cs.targets] for cs in tick.calls}
+        self.assertEqual(resolved["self.inner"], [f"{self.mod}::Sched::inner"])
+        # field receiver: `self.pool` typed through the struct table
+        self.assertEqual(resolved["self.pool.grab"], [f"{self.mod}::Pool::grab"])
+
+    def test_trait_dispatch_fallback_covers_every_impl(self):
+        crate = self.crate(
+            "pub trait StepEngine {\n"
+            "    fn step(&mut self) -> usize;\n"
+            "    fn name(&self) -> usize { 0 }\n"
+            "}\n"
+            "pub struct Analytic;\n"
+            "impl StepEngine for Analytic {\n"
+            "    fn step(&mut self) -> usize { 1 }\n"
+            "}\n"
+            "pub struct Pjrt;\n"
+            "impl StepEngine for Pjrt {\n"
+            "    fn step(&mut self) -> usize { 2 }\n"
+            "}\n"
+            "pub fn drive<E: StepEngine>(eng: &mut E) -> usize {\n"
+            "    eng.name() + eng.step()\n"
+            "}\n"
+        )
+        drive = self.fn(crate, "drive")
+        by_callee = {cs.callee_text: cs for cs in drive.calls}
+        step = by_callee["eng.step"]
+        self.assertEqual(step.via, "trait")
+        self.assertEqual(sorted(t.qual for t in step.targets),
+                         [f"{self.mod}::Analytic::step", f"{self.mod}::Pjrt::step"])
+        # a default-bodied trait method resolves to the trait's own fn
+        name = by_callee["eng.name"]
+        self.assertIn(f"{self.mod}::StepEngine::name",
+                      [t.qual for t in name.targets])
+
+    def test_std_vocabulary_is_not_name_fallback(self):
+        crate = self.crate(
+            "pub struct Ledger;\n"
+            "impl Ledger {\n"
+            "    pub fn drain(&mut self) -> usize { 0 }\n"
+            "}\n"
+            "pub fn go(xs: Vec<usize>) -> usize {\n"
+            "    let n = xs.iter().count();\n"
+            "    n + mystery_thing.drain()\n"
+            "}\n"
+        )
+        go = self.fn(crate, "go")
+        for cs in go.calls:
+            if cs.callee_text in ("xs.iter", "mystery_thing.drain"):
+                # `iter`/`drain` are STD_METHODS: no name-fallback edge to
+                # the repo's Ledger::drain from an untyped receiver
+                self.assertEqual(cs.targets, [], cs.callee_text)
+
+    def test_use_alias_and_module_fn_resolution(self):
+        crate = self.crate(
+            "pub fn entry_main(n: usize) -> usize {\n"
+            "    local_helper(n)\n"
+            "}\n"
+            "fn local_helper(n: usize) -> usize {\n"
+            "    n\n"
+            "}\n"
+        )
+        entry = self.fn(crate, "entry_main")
+        hits = [cs for cs in entry.calls if cs.callee_text == "local_helper"]
+        self.assertEqual(len(hits), 1)
+        self.assertEqual([t.qual for t in hits[0].targets],
+                         [f"{self.mod}::local_helper"])
+
+
+class TestReachability(CrateFromText):
+    SRC = (
+        "pub fn entry_a(n: usize) -> usize { mid(n) }\n"
+        "fn mid(n: usize) -> usize { deep(n) }\n"
+        "fn deep(n: usize) -> usize { n }\n"
+        "fn island(n: usize) -> usize { n }\n"
+    )
+
+    def test_transitive_closure_excludes_islands(self):
+        crate = self.crate(self.SRC)
+        roots = [self.fn(crate, "entry_a")]
+        reach = crate.reachable(roots)
+        self.assertEqual(sorted(reach),
+                         [f"{self.mod}::deep", f"{self.mod}::entry_a", f"{self.mod}::mid"])
+
+    def test_stop_prunes_into_but_keeps_the_node(self):
+        crate = self.crate(self.SRC)
+        roots = [self.fn(crate, "entry_a")]
+        reach = crate.reachable(roots, stop=lambda fi: fi.name == "mid")
+        self.assertIn(f"{self.mod}::mid", reach)
+        self.assertNotIn(f"{self.mod}::deep", reach)
+
+    def test_witness_chains(self):
+        crate = self.crate(self.SRC)
+        chains = crate.callees_with_chains(self.fn(crate, "entry_a"))
+        self.assertEqual(chains[f"{self.mod}::deep"],
+                         [f"{self.mod}::entry_a", f"{self.mod}::mid", f"{self.mod}::deep"])
+
+
+class TestReachPanic(unittest.TestCase):
+    def test_bad_fixture_trips_every_rule(self):
+        findings = pass_reach.run(files=[fixture("reach-panic", "bad.rs")])
+        self.assertEqual({f.rule for f in findings},
+                         {"unwrap", "panic", "index", "arith"})
+
+    def test_good_fixture_is_clean_including_unreachable_panics(self):
+        # good.rs deliberately carries a panicky `offline_report` that no
+        # entrypoint reaches: zero findings proves the scope is the call
+        # graph, not the file.
+        self.assertEqual(pass_reach.run(files=[fixture("reach-panic", "good.rs")]), [])
+
+    def test_repo_serving_path_is_clean(self):
+        self.assertEqual([str(f) for f in pass_reach.run()], [])
+
+    def _panicfree_scope_quals(self, crate):
+        """Fn quals the old lexical pass scanned, from its SCOPE map."""
+        quals = set()
+        for path, fns in pass_panicfree.SCOPE.items():
+            abs_path = os.path.join(common.REPO_ROOT, path)
+            for fi in crate.fns.values():
+                if fi.path != abs_path:
+                    continue
+                if fns is None or fi.name in fns:
+                    quals.add(fi.qual)
+        return quals
+
+    def test_scanned_set_is_strict_superset_of_panicfree_scope(self):
+        crate = flow.load_crate()
+        old = self._panicfree_scope_quals(crate)
+        new = pass_reach.scanned_set(crate)
+        self.assertTrue(old, "panicfree SCOPE resolved to no functions")
+        missing = old - new
+        self.assertFalse(missing, f"reach-panic lost old coverage: {sorted(missing)}")
+        self.assertTrue(new - old, "reach-panic should scan strictly more than the module list")
+
+    def test_trusted_boundary_never_overlaps_panicfree_scope(self):
+        crate = flow.load_crate()
+        for q in self._panicfree_scope_quals(crate):
+            self.assertFalse(pass_reach._is_trusted(crate.fns[q]),
+                             f"{q} is in panicfree SCOPE but marked TRUSTED")
+
+    def test_entrypoints_resolve(self):
+        crate = flow.load_crate()
+        for q in pass_reach.ENTRYPOINTS:
+            self.assertIn(q, crate.fns)
+
+
+class TestUnitFlow(unittest.TestCase):
+    def test_bad_fixture_trips_every_rule(self):
+        findings = pass_unitflow.run(files=[fixture("unit-flow", "bad.rs")])
+        self.assertEqual({f.rule for f in findings},
+                         {"let-unit", "arg-unit", "ret-unit", "field-unit"})
+
+    def test_good_fixture_is_clean(self):
+        self.assertEqual(pass_unitflow.run(files=[fixture("unit-flow", "good.rs")]), [])
+
+    def test_repo_is_clean(self):
+        self.assertEqual([str(f) for f in pass_unitflow.run()], [])
+
+    def test_expr_unit_inference(self):
+        eu = pass_unitflow.expr_unit
+        self.assertEqual(eu("free_bytes"), "bytes")
+        self.assertEqual(eu("free_bytes as f64"), "bytes")
+        self.assertEqual(eu("(a_bytes + b_bytes)"), "bytes")
+        self.assertEqual(eu("a_bytes.min(b_bytes)"), "bytes")
+        self.assertEqual(eu("crate::util::units::blocks_f64(n)"), "blocks")
+        # products/quotients legitimately change dimension -> unknown
+        self.assertIsNone(eu("kv_blocks * sizes_bytes"))
+        self.assertIsNone(eu("a_bytes / t_secs"))
+        # mixed addition is indeterminate here (the `units` pass owns it)
+        self.assertIsNone(eu("a_bytes + n_blocks"))
+
+
+class TestNondetTaint(unittest.TestCase):
+    def test_bad_fixture_trips_every_rule(self):
+        findings = pass_nondet.run(files=[fixture("nondet-taint", "bad.rs")])
+        self.assertEqual({f.rule for f in findings},
+                         {"source-in-sink", "tainted-call", "state-coupling"})
+
+    def test_good_fixture_is_clean(self):
+        # good.rs declares (but never iterates) a HashMap field: declared
+        # maps are not sources, only order-dependent walks are.
+        self.assertEqual(pass_nondet.run(files=[fixture("nondet-taint", "good.rs")]), [])
+
+    def test_repo_is_clean(self):
+        self.assertEqual([str(f) for f in pass_nondet.run()], [])
+
+    def test_taint_is_reported_at_the_source_site(self):
+        findings = pass_nondet.run(files=[fixture("nondet-taint", "bad.rs")])
+        tc = [f for f in findings if f.rule == "tainted-call"]
+        self.assertEqual(len(tc), 1)
+        # the wall-clock read lives in jitter(); the sink named in the
+        # message is the pinned output it can feed
+        self.assertIn("jitter", tc[0].message)
+        self.assertIn("build", tc[0].message)
+        self.assertIn("Instant::now", tc[0].snippet)
+
+    def test_sink_fields_match_rust_structs(self):
+        crate = flow.load_crate()
+        for ty, fields in pass_nondet.SINK_FIELDS.items():
+            st = crate.structs.get(ty)
+            self.assertIsNotNone(st, ty)
+            have = {f for f, _ in st.fields}
+            for field in fields:
+                self.assertIn(field, have, f"{ty}.{field}")
+
+
+class TestAnalyzerMapGuard(unittest.TestCase):
+    def test_live_tree_is_guard_clean(self):
+        self.assertEqual(
+            [str(f) for f in pass_drift._analyzer_map_findings()], [])
+
+    def test_renamed_entrypoint_trips_the_guard(self):
+        pass_reach.ENTRYPOINTS.append("sched::Scheduler::renamed_tick")
+        try:
+            findings = pass_drift._analyzer_map_findings()
+        finally:
+            pass_reach.ENTRYPOINTS.pop()
+        self.assertTrue(any(f.rule == "analyzer-map"
+                            and "renamed_tick" in f.message for f in findings))
+
+    def test_renamed_sink_field_trips_the_guard(self):
+        pass_nondet.SINK_FIELDS["SimResult"].append("renamed_field")
+        try:
+            findings = pass_drift._analyzer_map_findings()
+        finally:
+            pass_nondet.SINK_FIELDS["SimResult"].pop()
+        self.assertTrue(any(f.rule == "analyzer-map"
+                            and "renamed_field" in f.message for f in findings))
+
+
+if __name__ == "__main__":
+    unittest.main()
